@@ -1,0 +1,145 @@
+//! Attention-logit preservation under KV compression (§9.6 items 1–2):
+//! for every variant × bit width, compress K/V with stage-1 (optionally
+//! plus QJL stage-2 inner-product correction) and measure
+//!   * attention logit MSE and max error,
+//!   * attention output relative L2 / cosine,
+//!   * top-1 attention-target agreement,
+//! against exact attention.  Also cross-checks the native attention
+//! implementation against the AOT `attention_scorer` HLO when artifacts
+//! are present.
+//!
+//! Run: `cargo run --release --example attention_fidelity`
+
+use isoquant::attention;
+use isoquant::metrics;
+use isoquant::quant::residual::TwoStage;
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::runtime::{HostTensor, Runtime};
+use isoquant::util::bench::Table;
+use isoquant::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (h, t, dh) = (4usize, 128usize, 64usize);
+    let mut rng = Rng::new(3);
+    let q = rng.gaussian_vec_f32(h * dh);
+    let k = rng.gaussian_vec_f32(h * t * dh);
+    let v = rng.gaussian_vec_f32(h * t * dh);
+
+    println!("attention fidelity: H={h}, T={t}, d_head={dh} (exact vs compressed K/V)\n");
+    let mut table = Table::new(&[
+        "variant",
+        "bits",
+        "logit MSE",
+        "max|Δlogit|",
+        "out rel L2",
+        "out cosine",
+        "top1 agree",
+    ]);
+    for variant in [
+        Variant::Rotor3D,
+        Variant::IsoFull,
+        Variant::IsoFast,
+        Variant::Planar2D,
+        Variant::Grouped8D,
+    ] {
+        for bits in [2u8, 3, 4] {
+            let s = Stage1::new(Stage1Config::new(variant, dh, bits));
+            let mut k_hat = vec![0.0f32; k.len()];
+            let mut v_hat = vec![0.0f32; v.len()];
+            s.roundtrip_batch(&k, &mut k_hat, h * t);
+            s.roundtrip_batch(&v, &mut v_hat, h * t);
+            let rep = attention::fidelity(&q, &k, &v, &k_hat, &v_hat, h, t, dh);
+            table.row(vec![
+                variant.name().to_string(),
+                bits.to_string(),
+                format!("{:.5}", rep.logit_mse),
+                format!("{:.4}", rep.logit_max_err),
+                format!("{:.4}", rep.out_rel_l2),
+                format!("{:.4}", rep.out_cosine),
+                format!("{:.2}", rep.top1_attention),
+            ]);
+        }
+    }
+    table.print();
+
+    // stage-2 residual correction on the *logits* (inner products):
+    // ⟨q, k⟩ ≈ ⟨q, k̂⟩ + QJL(q, k - k̂)  (paper §8)
+    println!("\nQJL residual correction of attention logits (IsoQuant-Full, m=256):\n");
+    let mut table = Table::new(&["bits", "logit MSE (stage-1)", "logit MSE (+stage-2)"]);
+    for bits in [2u8, 3, 4] {
+        let s = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, bits));
+        let two = TwoStage::new(s.clone(), 256, 0xFEED);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let (mut e1, mut e2) = (0.0f64, 0.0f64);
+        let mut count = 0usize;
+        for hh in 0..h {
+            let qh = &q[hh * dh..(hh + 1) * dh];
+            for tt in 0..t {
+                let kv = &k[hh * t * dh + tt * dh..][..dh];
+                let truth: f32 = qh.iter().zip(kv).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+                let code = two.encode(kv);
+                let mut k_hat = vec![0.0f32; dh];
+                two.stage1.decode(&code.stage1_bytes, &mut k_hat);
+                let base: f32 =
+                    qh.iter().zip(&k_hat).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+                let corrected = two.inner_product(qh, &code) * scale;
+                e1 += ((base - truth) as f64).powi(2);
+                e2 += ((corrected - truth) as f64).powi(2);
+                count += 1;
+            }
+        }
+        table.row(vec![
+            bits.to_string(),
+            format!("{:.6}", e1 / count as f64),
+            format!("{:.6}", e2 / count as f64),
+        ]);
+    }
+    table.print();
+
+    // cross-check native attention vs the AOT scorer HLO, if built
+    let dir = isoquant::runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::load(&dir)?;
+        let spec = rt.manifest.artifact("attention_scorer")?.clone();
+        let b = spec.inputs[0].shape[0];
+        let t_a = spec.inputs[1].shape[2];
+        let h_a = spec.inputs[0].shape[1];
+        let dh_a = spec.inputs[0].shape[2];
+        let mut rng = Rng::new(9);
+        let qb = rng.gaussian_vec_f32(b * h_a * dh_a);
+        let kb = rng.gaussian_vec_f32(b * h_a * t_a * dh_a);
+        let vb = rng.gaussian_vec_f32(b * h_a * t_a * dh_a);
+        let outs = rt.run_f32(
+            "attention_scorer",
+            &[
+                HostTensor::F32(qb.clone(), vec![b, h_a, dh_a]),
+                HostTensor::F32(kb.clone(), vec![b, h_a, t_a, dh_a]),
+                HostTensor::F32(vb.clone(), vec![b, h_a, t_a, dh_a]),
+            ],
+        )?;
+        // native, batched by slicing
+        let mut worst = 0.0f64;
+        for bb in 0..b {
+            let (out, logits) = attention::attend(
+                &qb[bb * h_a * dh_a..(bb + 1) * h_a * dh_a],
+                &kb[bb * h_a * t_a * dh_a..(bb + 1) * h_a * t_a * dh_a],
+                &vb[bb * h_a * t_a * dh_a..(bb + 1) * h_a * t_a * dh_a],
+                h_a,
+                t_a,
+                dh_a,
+            );
+            for (i, &x) in out.iter().enumerate() {
+                worst = worst.max((x as f64 - outs[0][bb * h_a * dh_a + i] as f64).abs());
+            }
+            for (i, &x) in logits.iter().enumerate() {
+                worst = worst.max((x as f64 - outs[1][bb * h_a * t_a + i] as f64).abs());
+            }
+        }
+        println!("\nnative attention vs AOT attention_scorer HLO: max|Δ| = {worst:.2e}");
+        assert!(worst < 1e-4, "native and HLO attention disagree");
+        let _ = metrics::cosine(&qb, &qb); // keep metrics linked in this example
+    } else {
+        println!("\n(artifacts not built — skipping native-vs-HLO attention cross-check)");
+    }
+    Ok(())
+}

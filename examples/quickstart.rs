@@ -1,0 +1,74 @@
+//! Quickstart: compress and reconstruct a batch of vectors with every
+//! IsoQuant operating point, printing MSE, compression ratio, and the
+//! latency of the fused stage-1 path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use isoquant::quant::{mse, Stage1, Stage1Config, Variant};
+use isoquant::util::bench::{Bencher, Table};
+use isoquant::util::prng::Rng;
+
+fn main() {
+    let d = 128; // a common LLM head dimension (paper's primary setting)
+    let n = 8192; // the paper's benchmark batch size
+    let bits = 4;
+
+    // synthetic vectors, as in the paper's §9 protocol
+    let mut rng = Rng::new(42);
+    let x = rng.gaussian_vec_f32(n * d);
+    let power = x.iter().map(|&v| (v * v) as f64).sum::<f64>() / x.len() as f64;
+
+    println!("IsoQuant quickstart: d={d}, batch={n}, bits={bits}, f32\n");
+    let mut table = Table::new(&[
+        "variant",
+        "MSE",
+        "rel MSE",
+        "bytes/vec",
+        "us/batch",
+        "speedup vs rotor",
+    ]);
+
+    let bencher = Bencher::quick();
+    let mut rotor_us = f64::NAN;
+    for variant in [
+        Variant::Rotor3D, // the RotorQuant baseline first, as reference
+        Variant::IsoFull,
+        Variant::IsoFast,
+        Variant::Planar2D,
+    ] {
+        let stage = Stage1::new(Stage1Config::new(variant, d, bits));
+        let mut out = vec![0.0f32; n * d];
+        let r = bencher.run(variant.name(), || {
+            stage.roundtrip_batch(&x, &mut out, n);
+        });
+        stage.roundtrip_batch(&x, &mut out, n);
+        let e = mse(&x, &out);
+        if variant == Variant::Rotor3D {
+            rotor_us = r.median_us();
+        }
+        table.row(vec![
+            variant.name().to_string(),
+            format!("{e:.6}"),
+            format!("{:.2}%", 100.0 * e / power),
+            format!("{}", stage.encoded_len()),
+            format!("{:.1}", r.median_us()),
+            format!("{:.2}x", rotor_us / r.median_us()),
+        ]);
+    }
+    table.print();
+
+    // encode/decode roundtrip — what the KV cache actually stores
+    let stage = Stage1::new(Stage1Config::new(Variant::IsoFull, d, bits));
+    let one = &x[..d];
+    let mut encoded = Vec::new();
+    stage.encode(one, &mut encoded);
+    let mut decoded = vec![0.0f32; d];
+    stage.decode(&encoded, &mut decoded);
+    println!(
+        "\nsingle vector: {} B -> {} B ({}x compression), rel L2 err {:.3}",
+        d * 4,
+        encoded.len(),
+        d * 4 / encoded.len(),
+        isoquant::metrics::rel_l2(one, &decoded)
+    );
+}

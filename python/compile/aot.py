@@ -1,0 +1,210 @@
+"""AOT compile path: lower every L2 graph to HLO text + write the manifest.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).  Python runs
+ONLY here; the Rust binary is self-contained once ``artifacts/`` exists.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: the
+runtime links xla_extension 0.5.1, which rejects the 64-bit instruction
+ids jax ≥ 0.5 emits in protos (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  *.hlo.txt        — one per graph
+  manifest.json    — graph inventory: inputs/outputs (name, shape, dtype),
+                     model config, weight specs
+  weights.bin      — deterministic model weights (tensorfile format, see
+                     rust/src/util/tensorfile.rs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import params as kparams
+
+DTYPE_NAMES = {jnp.float32: "f32", jnp.float16: "f16", jnp.int32: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_dict(name, s):
+    dt = {np.dtype(np.float32): "f32", np.dtype(np.float16): "f16",
+          np.dtype(np.int32): "i32"}[np.dtype(s.dtype)]
+    return {"name": name, "shape": list(s.shape), "dtype": dt}
+
+
+def lower_graph(fn, example_args, arg_names):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    inputs = [_spec_dict(n, s) for n, s in zip(arg_names, example_args)]
+    return text, inputs
+
+
+# --------------------------------------------------------------------------
+# tensorfile: the weights.bin format shared with rust/src/util/tensorfile.rs
+#   magic "ISOQTNSR" | u32 version | u32 count
+#   per tensor: u32 name_len | name utf8 | u32 ndim | u64 dims[] |
+#               u32 dtype(0=f32,1=f16,2=i32) | u64 byte_len | raw bytes
+# --------------------------------------------------------------------------
+
+def write_tensorfile(path: str, tensors: list[tuple[str, np.ndarray]]):
+    with open(path, "wb") as f:
+        f.write(b"ISOQTNSR")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            code = {np.dtype(np.float32): 0, np.dtype(np.float16): 1,
+                    np.dtype(np.int32): 2}[arr.dtype]
+            raw = np.ascontiguousarray(arr).tobytes()
+            f.write(struct.pack("<IQ", code, len(raw)))
+            f.write(raw)
+
+
+# --------------------------------------------------------------------------
+# Artifact inventory
+# --------------------------------------------------------------------------
+
+# Stage-1 parity graphs: fixed batch, f32, lloyd quantizer.  These anchor
+# the Rust native pipeline to the Pallas/HLO semantics.
+PARITY_BATCH = 64
+PARITY_CONFIGS = [
+    ("full", 128, 2), ("full", 128, 4), ("full", 64, 3),
+    ("fast", 128, 2), ("fast", 128, 4),
+    ("2d", 128, 2), ("2d", 128, 4),
+    ("rotor", 128, 2), ("rotor", 128, 4),
+    ("dense", 128, 4),
+]
+
+STAGE1_ARG_NAMES = {
+    "full": ["x", "q_l", "q_r"],
+    "fast": ["x", "q_l"],
+    "2d": ["x", "theta"],
+    "rotor": ["x", "q", "tail_theta"],
+    "dense": ["x", "m"],
+}
+
+SERVE_BATCH = 4
+ATT_T = 128
+
+
+def build_all(out_dir: str, serve_batch: int = SERVE_BATCH) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.ModelConfig()
+    manifest = {
+        "version": 1,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "n_layers": cfg.n_layers, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq, "prefill_chunk": cfg.prefill_chunk,
+            "n_params": cfg.n_params(), "serve_batch": serve_batch,
+        },
+        "weights": "weights.bin",
+        "weight_specs": [
+            {"name": n, "shape": list(s)} for n, s in cfg.weight_specs
+        ],
+        "artifacts": [],
+    }
+
+    def emit(name, fn, example_args, arg_names, meta=None):
+        text, inputs = lower_graph(fn, example_args, arg_names)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": inputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if meta:
+            entry["meta"] = meta
+        manifest["artifacts"].append(entry)
+        print(f"  {fname}: {len(text)} chars, {len(inputs)} inputs")
+
+    # 1. stage-1 parity graphs
+    for variant, d, bits in PARITY_CONFIGS:
+        fn = M.stage1_graph(variant, bits)
+        args = M.stage1_example_args(variant, PARITY_BATCH, d)
+        emit(
+            f"stage1_{variant}_d{d}_b{bits}",
+            fn, args, STAGE1_ARG_NAMES[variant],
+            meta={"kind": "stage1", "variant": variant, "d": d, "bits": bits,
+                  "batch": PARITY_BATCH, "quantizer": "lloyd"},
+        )
+
+    # 2. serving graphs
+    wnames = [n for n, _ in cfg.weight_specs]
+    emit(
+        "decode_step",
+        M.decode_step(cfg),
+        M.decode_example_args(cfg, serve_batch),
+        ["tok", "pos", "k_cache", "v_cache"] + wnames,
+        meta={"kind": "decode", "batch": serve_batch},
+    )
+    emit(
+        "prefill_chunk",
+        M.prefill_chunk(cfg),
+        M.prefill_example_args(cfg, serve_batch),
+        ["tok", "pos0", "k_cache", "v_cache"] + wnames,
+        meta={"kind": "prefill", "batch": serve_batch, "chunk": cfg.prefill_chunk},
+    )
+
+    # 3. attention scorer for fidelity experiments
+    emit(
+        "attention_scorer",
+        M.attention_scorer(cfg.d_head),
+        M.attention_example_args(serve_batch, cfg.n_heads, ATT_T, cfg.d_head),
+        ["q", "k", "v"],
+        meta={"kind": "attention", "batch": serve_batch, "t": ATT_T},
+    )
+
+    # weights
+    weights = M.init_weights(cfg, seed=0)
+    write_tensorfile(
+        os.path.join(out_dir, "weights.bin"),
+        list(zip(wnames, weights)),
+    )
+    print(f"  weights.bin: {cfg.n_params()} params")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="(legacy) single-file mode ignored")
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+        "artifacts"))
+    ap.add_argument("--serve-batch", type=int, default=SERVE_BATCH)
+    args = ap.parse_args()
+    print(f"lowering artifacts into {args.out_dir}")
+    build_all(args.out_dir, args.serve_batch)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

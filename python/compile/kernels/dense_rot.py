@@ -1,0 +1,47 @@
+"""Fused Pallas kernel for the TurboQuant-style dense rotation baseline.
+
+The dense orthogonal transform is the conceptual upper bound in the
+paper's Table 1 (16,384 FMAs at d=128 vs 1,024 for IsoQuant-Full).  On
+TPU this is the one variant where the MXU actually wins: the rotation is
+a (TILE_B, d) × (d, d) matmul feeding the systolic array, while the
+blockwise variants are VPU lane recombinations.  We therefore express the
+rotation with ``jnp.dot`` inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .isoquant import _norm_split, _quant, _tile_b
+
+
+def _dense_kernel(x_ref, m_ref, o_ref, *, d, bits, quantizer):
+    x = x_ref[...]
+    rho, xbar = _norm_split(x)
+    m = m_ref[...]
+    y = jnp.dot(xbar, m.T)
+    yq = _quant(y, d, 4, bits, quantizer)
+    rec = jnp.dot(yq, m)
+    o_ref[...] = rho * rec
+
+
+def dense_rotation(x, mat, bits: int, quantizer: str = "lloyd"):
+    """Fused dense-rotation stage-1 over x (B, d), mat (d, d) orthogonal."""
+    b, d = x.shape
+    tb = _tile_b(b)
+    kern = functools.partial(_dense_kernel, d=d, bits=bits, quantizer=quantizer)
+    return pl.pallas_call(
+        kern,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, mat.astype(x.dtype))

@@ -1,0 +1,193 @@
+"""Fused Pallas kernels for the IsoQuant stage-1 pipeline (L1).
+
+One kernel per operating point (Full / Fast / 2D).  Each kernel fuses the
+entire stage-1 path of paper Alg. 1 — norm split, blockwise rotation,
+sqrt(d)-scaled scalar quantize→dequantize, inverse rotation, norm restore
+— over a (TILE_B, d) tile of vectors resident in VMEM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA prototype
+tiles threadblocks over (batch × blocks) with each 4-float block in
+registers; here a grid step owns a (TILE_B, d) VMEM tile and the 4-wide
+quaternion blocks are fixed linear recombinations of adjacent lanes
+(reshape to (TILE_B, g, 4) is a no-op relayout in VMEM).  ``d`` being a
+multiple of 4 means no masking anywhere — the paper's alignment argument.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same program runs
+under the Rust runtime.  Real-TPU performance is estimated analytically
+(DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import quaternion as quat
+from .quantizer import lloyd_max_codebook, quant_dequant_uniform, uniform_clip
+
+_EPS = 1e-12
+
+
+def _tile_b(batch: int) -> int:
+    """Largest power-of-two batch tile ≤ 128 dividing ``batch``."""
+    t = 128
+    while t > 1 and batch % t != 0:
+        t //= 2
+    return t
+
+
+def _norm_split(x):
+    rho = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    return rho, x / jnp.maximum(rho, jnp.asarray(_EPS, x.dtype))
+
+
+def _qdq(ys, codebook):
+    """Branch-free codebook quantize→dequantize on VMEM values.
+
+    ``codebook`` enters as python floats, so the boundary comparisons
+    unroll into 2^b - 1 lane-wise compare+selects — exactly the fused
+    form the paper's CUDA kernel uses.  Scalar constants only: Pallas
+    kernels may not capture array constants."""
+    cb = [float(c) for c in codebook]
+    out = jnp.full(ys.shape, cb[0], dtype=ys.dtype)
+    for j in range(len(cb) - 1):
+        bound = 0.5 * (cb[j] + cb[j + 1])
+        out = jnp.where(ys > bound, jnp.asarray(cb[j + 1], ys.dtype), out)
+    return out
+
+
+def _quant(y, d, k, bits, quantizer):
+    s = jnp.asarray(np.sqrt(d), dtype=y.dtype)
+    ys = y * s
+    if quantizer == "lloyd":
+        yq = _qdq(ys, np.asarray(lloyd_max_codebook(k, bits)))
+    else:
+        yq = quant_dequant_uniform(ys, bits, uniform_clip(bits, k))
+    return yq / s
+
+
+# --------------------------------------------------------------------------
+# IsoQuant-Full
+# --------------------------------------------------------------------------
+
+def _full_kernel(x_ref, ql_ref, qr_ref, o_ref, *, d, bits, quantizer):
+    x = x_ref[...]
+    tb = x.shape[0]
+    g = ql_ref.shape[0]
+    rho, xbar = _norm_split(x)
+    v = xbar.reshape(tb, g, 4)
+    ql = ql_ref[...][None]
+    qr = qr_ref[...][None]
+    y = quat.sandwich(ql, v, qr)
+    yq = _quant(y, d, 4, bits, quantizer)
+    rec = quat.sandwich_inv(ql, yq, qr)
+    o_ref[...] = rho * rec.reshape(tb, d)
+
+
+def isoquant_full(x, q_l, q_r, bits: int, quantizer: str = "lloyd"):
+    """Fused stage-1 IsoQuant-Full over x (B, d); d must be divisible by 4
+    (power-of-two head dims always are — the paper's alignment claim)."""
+    b, d = x.shape
+    assert d % 4 == 0, "IsoQuant 4D kernels require d % 4 == 0"
+    tb = _tile_b(b)
+    g = d // 4
+    kern = functools.partial(_full_kernel, d=d, bits=bits, quantizer=quantizer)
+    return pl.pallas_call(
+        kern,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((g, 4), lambda i: (0, 0)),
+            pl.BlockSpec((g, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, q_l.astype(x.dtype), q_r.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# IsoQuant-Fast
+# --------------------------------------------------------------------------
+
+def _fast_kernel(x_ref, ql_ref, o_ref, *, d, bits, quantizer):
+    x = x_ref[...]
+    tb = x.shape[0]
+    g = ql_ref.shape[0]
+    rho, xbar = _norm_split(x)
+    v = xbar.reshape(tb, g, 4)
+    ql = ql_ref[...][None]
+    y = quat.left_mul(ql, v)
+    yq = _quant(y, d, 4, bits, quantizer)
+    rec = quat.left_mul_inv(ql, yq)
+    o_ref[...] = rho * rec.reshape(tb, d)
+
+
+def isoquant_fast(x, q_l, bits: int, quantizer: str = "lloyd"):
+    """Fused stage-1 IsoQuant-Fast (single isoclinic factor)."""
+    b, d = x.shape
+    assert d % 4 == 0
+    tb = _tile_b(b)
+    g = d // 4
+    kern = functools.partial(_fast_kernel, d=d, bits=bits, quantizer=quantizer)
+    return pl.pallas_call(
+        kern,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((g, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, q_l.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# IsoQuant-2D (planar special case)
+# --------------------------------------------------------------------------
+
+def _planar_kernel(x_ref, cs_ref, o_ref, *, d, bits, quantizer):
+    x = x_ref[...]
+    tb = x.shape[0]
+    g = cs_ref.shape[0]
+    rho, xbar = _norm_split(x)
+    u = xbar.reshape(tb, g, 2)
+    c = cs_ref[...][None, :, 0]
+    s = cs_ref[...][None, :, 1]
+    u0, u1 = u[..., 0], u[..., 1]
+    y = jnp.stack([c * u0 - s * u1, s * u0 + c * u1], axis=-1)
+    yq = _quant(y, d, 2, bits, quantizer)
+    y0, y1 = yq[..., 0], yq[..., 1]
+    rec = jnp.stack([c * y0 + s * y1, -s * y0 + c * y1], axis=-1)
+    o_ref[...] = rho * rec.reshape(tb, d)
+
+
+def isoquant_2d(x, theta, bits: int, quantizer: str = "lloyd"):
+    """Fused stage-1 planar special case; d must be even.
+
+    cos/sin are precomputed once outside the kernel (they are parameters,
+    not activations) and passed as a (g, 2) bank — mirroring the CUDA
+    prototype, which stores the rotation as (cos θ, sin θ) pairs."""
+    b, d = x.shape
+    assert d % 2 == 0
+    tb = _tile_b(b)
+    g = d // 2
+    cs = jnp.stack([jnp.cos(theta), jnp.sin(theta)], axis=-1).astype(x.dtype)
+    kern = functools.partial(_planar_kernel, d=d, bits=bits, quantizer=quantizer)
+    return pl.pallas_call(
+        kern,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((g, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, cs)

@@ -1,0 +1,78 @@
+"""Rotation parameter banks (random, Haar-distributed) for every variant.
+
+The paper's lightweight instantiation samples the unconstrained vectors
+``u`` from a Gaussian and normalizes (§5.5) — Gaussian-normalize sampling
+is exactly Haar on S^3, and uniform angles are Haar on SO(2).  The same
+seeds/derivations are mirrored in ``rust/src/quant/params.rs``; parity
+between the two is established by exporting the banks into the AOT
+manifest rather than re-deriving them (PRNGs differ across languages).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def g4(d: int) -> int:
+    """Number of 4D blocks, ceil(d/4) (paper eq. 14/19)."""
+    return (d + 3) // 4
+
+
+def g2(d: int) -> int:
+    """Number of 2D blocks for the planar special case."""
+    return (d + 1) // 2
+
+
+def g3(d: int) -> tuple[int, int]:
+    """RotorQuant partition: (full 3D blocks, tail width in {0,1,2})."""
+    return d // 3, d % 3
+
+
+def haar_s3(rng: np.random.Generator, n: int) -> np.ndarray:
+    """n Haar-uniform unit quaternions, shape (n, 4)."""
+    u = rng.standard_normal((n, 4))
+    return u / np.linalg.norm(u, axis=-1, keepdims=True)
+
+
+def quaternion_pairs(d: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """(qL, qR) banks for IsoQuant-Full, each (g4, 4)."""
+    rng = np.random.default_rng(seed)
+    g = g4(d)
+    return haar_s3(rng, g), haar_s3(rng, g)
+
+
+def quaternion_single(d: int, seed: int) -> np.ndarray:
+    """qL bank for IsoQuant-Fast, (g4, 4)."""
+    rng = np.random.default_rng(seed)
+    return haar_s3(rng, g4(d))
+
+
+def planar_angles(d: int, seed: int) -> np.ndarray:
+    """theta bank for the 2D special case, (g2,), Haar = Unif[0, 2pi)."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 2.0 * np.pi, size=g2(d))
+
+
+def rotor3_params(d: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """RotorQuant baseline parameters.
+
+    Returns (q, tail_theta): ``q`` is a (g3, 4) bank of unit quaternions —
+    each encodes a Cl(3,0) rotor R = cos(a/2) + sin(a/2) B acting on a 3D
+    block — plus a single planar angle for the 2-wide tail (d mod 3 == 2,
+    e.g. d = 128 → 42 blocks + 2D tail, §1).  A 1-wide tail (d mod 3 == 1)
+    has no rotational freedom and passes through.
+    """
+    rng = np.random.default_rng(seed)
+    nfull, tail = g3(d)
+    q = haar_s3(rng, nfull)
+    theta = rng.uniform(0.0, 2.0 * np.pi, size=1 if tail == 2 else 0)
+    return q, theta
+
+
+def dense_orthogonal(d: int, seed: int) -> np.ndarray:
+    """Haar-distributed dense d x d orthogonal matrix (TurboQuant
+    reference): QR of a Gaussian with sign-fixed R diagonal."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((d, d))
+    q, r = np.linalg.qr(a)
+    return q * np.sign(np.diag(r))

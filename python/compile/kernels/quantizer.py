@@ -1,0 +1,156 @@
+"""Scalar quantizers shared by every rotation variant.
+
+The paper's stage-1 pipeline quantizes each coordinate of the *rotated,
+normalized* vector with a per-coordinate scalar quantizer (Lloyd–Max in
+the prototype, §7.2).  Two quantizers are provided:
+
+* ``uniform`` — symmetric mid-rise uniform quantizer on ``[-c, c]``.
+* ``lloyd_max`` — codebook quantizer whose levels are trained offline by
+  Lloyd iteration on the analytic marginal of a rotated coordinate
+  (paper eq. 36): for block size ``k`` the normalized coordinate has
+  density ``f_k(z) ∝ (1 - z^2)^((k-3)/2)`` scaled by the block radius.
+
+Codebooks are expressed as plain Python floats so that they embed as
+compile-time constants into both the Pallas kernels and the lowered HLO,
+and so that the Rust native path (rust/src/quant/scalar.rs) can ship the
+byte-identical tables (cross-checked by the parity tests).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Offline Lloyd–Max training on the analytic marginal f_k
+# --------------------------------------------------------------------------
+
+def marginal_samples(k: int, n: int = 200_001) -> np.ndarray:
+    """Deterministic quantile samples of the rotated-coordinate marginal.
+
+    For a coordinate of a Haar-rotated k-dim block with unit radius the
+    marginal density is f_k(z) ∝ (1 - z^2)^((k-3)/2) on [-1, 1]
+    (paper eq. 36; k=2 arcsine, k=4 semicircle-like).  We sample by
+    inverse-CDF on a dense grid, which keeps training deterministic.
+
+    In the pipeline each *block* has radius r_b ≈ sqrt(k/d) for a
+    normalized d-vector, so coordinates live at scale ~1/sqrt(d); the
+    quantizer is applied to sqrt(d)-scaled coordinates (see
+    ``QuantSpec``) which makes one codebook serve every d.
+    """
+    u = np.linspace(0.0, 1.0, n + 2)[1:-1]
+    if k == 2:
+        # arcsine law: F(z) = 1/2 + arcsin(z)/π → z = sin(π(u - 1/2));
+        # analytic inversion avoids the grid bias at the singular edges
+        z = np.sin(np.pi * (u - 0.5))
+    elif k == 3:
+        # f_3 is uniform on [-1, 1]
+        z = 2.0 * u - 1.0
+    else:
+        grid = np.linspace(-1.0, 1.0, 400_000)
+        pdf = np.maximum(1.0 - grid**2, 0.0) ** ((k - 3) / 2.0)
+        cdf = np.cumsum(pdf)
+        cdf = cdf / cdf[-1]
+        z = np.interp(u, cdf, grid)
+    # scale: coordinate of a k-block with radius sqrt(k) (so that the
+    # sqrt(d)-scaled coordinate of a normalized d-vector matches:
+    # sqrt(d) * r_b / sqrt(k) * z with r_b ≈ sqrt(k/d) → sqrt(k) * z / sqrt(k)
+    # ... the block radius itself fluctuates; sqrt(k)*z has unit variance-ish)
+    return np.sqrt(k) * z
+
+
+def lloyd_max_train(samples: np.ndarray, levels: int, iters: int = 200) -> np.ndarray:
+    """Classic Lloyd iteration: alternate nearest-level partition and
+    centroid update until convergence.  Returns sorted level array."""
+    samples = np.sort(samples.astype(np.float64))
+    lo, hi = samples[0], samples[-1]
+    codebook = np.linspace(lo, hi, levels + 2)[1:-1]
+    for _ in range(iters):
+        bounds = (codebook[1:] + codebook[:-1]) / 2.0
+        idx = np.searchsorted(bounds, samples)
+        new = codebook.copy()
+        for j in range(levels):
+            sel = samples[idx == j]
+            if sel.size:
+                new[j] = sel.mean()
+        if np.max(np.abs(new - codebook)) < 1e-10:
+            codebook = new
+            break
+        codebook = new
+    return codebook
+
+
+_CODEBOOK_CACHE: dict[tuple[int, int], np.ndarray] = {}
+
+
+def lloyd_max_codebook(k: int, bits: int) -> np.ndarray:
+    """Trained codebook for (block size k, bit width b), cached."""
+    key = (k, bits)
+    if key not in _CODEBOOK_CACHE:
+        _CODEBOOK_CACHE[key] = lloyd_max_train(marginal_samples(k), 2**bits)
+    return _CODEBOOK_CACHE[key]
+
+
+# --------------------------------------------------------------------------
+# Gaussian codebooks (classic Lloyd–Max for N(0,1)) — used when the input
+# is not normalized per-vector (ablation axis) and by the rust parity path.
+# --------------------------------------------------------------------------
+
+def gaussian_codebook(bits: int) -> np.ndarray:
+    rng = np.random.default_rng(0)
+    return lloyd_max_train(rng.standard_normal(400_000), 2**bits)
+
+
+# --------------------------------------------------------------------------
+# jnp quantize/dequantize (used inside kernels and by ref.py)
+# --------------------------------------------------------------------------
+
+def quantize_codebook(x, codebook):
+    """Nearest-codeword index via boundary search (monotone codebook)."""
+    cb = jnp.asarray(codebook, dtype=x.dtype)
+    bounds = (cb[1:] + cb[:-1]) * jnp.asarray(0.5, dtype=x.dtype)
+    # sum of (x > bound) over bounds — branch-free, Pallas-friendly.
+    idx = jnp.sum(
+        (x[..., None] > bounds).astype(jnp.int32), axis=-1, dtype=jnp.int32
+    )
+    return idx
+
+
+def dequantize_codebook(idx, codebook, dtype):
+    cb = jnp.asarray(codebook, dtype=dtype)
+    return jnp.take(cb, idx, axis=0)
+
+
+def quant_dequant_codebook(x, codebook):
+    """Fused quantize→dequantize (the stage-1 Q of paper Alg. 1)."""
+    return dequantize_codebook(quantize_codebook(x, codebook), codebook, x.dtype)
+
+
+def uniform_clip(bits: int, k: int) -> float:
+    """Clip range for the uniform quantizer: the support of the scaled
+    marginal is [-sqrt(k), sqrt(k)]."""
+    return math.sqrt(k)
+
+
+def quant_dequant_uniform(x, bits: int, clip: float):
+    """Symmetric mid-rise uniform quantizer on [-clip, clip]."""
+    n = 2**bits
+    step = 2.0 * clip / n
+    xc = jnp.clip(x, -clip, clip - 1e-7 * clip)
+    idx = jnp.floor((xc + clip) / step)
+    idx = jnp.clip(idx, 0, n - 1)
+    return (idx + 0.5) * step - clip
+
+
+# --------------------------------------------------------------------------
+# Norm / direction split (paper eq. 3)
+# --------------------------------------------------------------------------
+
+def norm_split(x, eps=1e-12):
+    """x = rho * xbar with rho stored separately (paper eq. 3)."""
+    rho = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    xbar = x / jnp.maximum(rho, eps)
+    return rho, xbar

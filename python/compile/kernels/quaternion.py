@@ -1,0 +1,89 @@
+"""Quaternion algebra helpers (build-time, jnp).
+
+Quaternions are stored as arrays whose last axis has size 4, ordered
+``(w, x, y, z)`` = ``w + x i + y j + z k``.  All functions broadcast over
+leading axes, so a bank of per-block quaternions ``(g, 4)`` applied to a
+batch of blocks ``(B, g, 4)`` works without reshaping.
+
+These helpers are the shared algebra layer used by
+
+* the pure-jnp reference oracle (``ref.py``), and
+* the fused Pallas kernels (``isoquant.py``), which call them on values
+  already resident in the kernel's VMEM refs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hamilton(a, b):
+    """Hamilton product ``a * b`` of quaternion arrays ``(..., 4)``.
+
+    16 multiplies / 12 adds per product — the unit the paper counts as
+    ~16 FMAs (§6).
+    """
+    aw, ax, ay, az = a[..., 0], a[..., 1], a[..., 2], a[..., 3]
+    bw, bx, by, bz = b[..., 0], b[..., 1], b[..., 2], b[..., 3]
+    return jnp.stack(
+        [
+            aw * bw - ax * bx - ay * by - az * bz,
+            aw * bx + ax * bw + ay * bz - az * by,
+            aw * by - ax * bz + ay * bw + az * bx,
+            aw * bz + ax * by - ay * bx + az * bw,
+        ],
+        axis=-1,
+    )
+
+
+def conjugate(q):
+    """Quaternion conjugate ``w - xi - yj - zk``.
+
+    Written as a stack of negations (not a multiply by a constant sign
+    vector) so it stays Pallas-legal: kernels may not capture array
+    constants, only scalars."""
+    return jnp.stack(
+        [q[..., 0], -q[..., 1], -q[..., 2], -q[..., 3]], axis=-1
+    )
+
+
+def normalize(u, eps=1e-12):
+    """Project onto the unit sphere S^3 (paper eq. 33)."""
+    n = jnp.sqrt(jnp.sum(u * u, axis=-1, keepdims=True))
+    return u / jnp.maximum(n, eps)
+
+
+def sandwich(q_l, v, q_r):
+    """Double-sided isoclinic action ``T(v) = q_l · v · conj(q_r)``
+    (paper eq. 11): the general element of SO(4)."""
+    return hamilton(hamilton(q_l, v), conjugate(q_r))
+
+
+def sandwich_inv(q_l, v, q_r):
+    """Inverse action ``conj(q_l) · v · q_r`` (paper eq. 12)."""
+    return hamilton(hamilton(conjugate(q_l), v), q_r)
+
+
+def left_mul(q_l, v):
+    """Single left-isoclinic factor (IsoQuant-Fast forward, eq. 25)."""
+    return hamilton(q_l, v)
+
+
+def left_mul_inv(q_l, v):
+    """IsoQuant-Fast inverse (eq. 27)."""
+    return hamilton(conjugate(q_l), v)
+
+
+def so4_matrix(q_l, q_r):
+    """Materialize the 4x4 rotation matrix of ``v -> q_l v conj(q_r)``.
+
+    Only used by tests to verify orthogonality / determinant; the
+    kernels never build this matrix (that is the point of the paper).
+    """
+    cols = []
+    eye = jnp.eye(4, dtype=q_l.dtype)
+    for i in range(4):
+        cols.append(sandwich(q_l, eye[i], q_r))
+    # stack(..., axis=-1)[j, i] = T(e_i)_j: column i is the image of e_i,
+    # so out = M @ v.
+    return jnp.stack(cols, axis=-1)

@@ -1,0 +1,196 @@
+"""Pure-jnp oracle for every stage-1 pipeline (the correctness ground truth).
+
+Each function maps a batch ``x (B, d)`` plus rotation parameters to the
+stage-1 reconstruction ``xhat (B, d)`` following paper Alg. 1:
+
+    1.  rho, xbar = norm_split(x)                       (eq. 3)
+    2.  y  = blockwise_rotate(xbar)                     (eq. 22/25/29)
+    3.  yq = Q(sqrt(d) * y) / sqrt(d)                   (scalar quantizer)
+    4.  xrec_bar = blockwise_rotate_inverse(yq)         (eq. 24/27/31)
+    5.  xhat = rho * xrec_bar
+
+The sqrt(d) pre-scale makes one trained codebook serve every d: a
+normalized d-vector has coordinates at scale ~1/sqrt(d), and the
+Lloyd–Max codebooks in ``quantizer.py`` are trained on the sqrt(d)-scaled
+marginal (unit block radius × sqrt(k)).
+
+The Pallas kernels in ``isoquant.py`` / ``rotor3d.py`` / ``dense_rot.py``
+must match these functions to float tolerance — that is what
+``python/tests/test_kernels_vs_ref.py`` asserts — and the Rust native
+path (rust/src/quant/pipeline.rs) must match the AOT-lowered HLO of
+these same graphs (cross-language parity test).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quaternion as quat
+from .quantizer import (
+    lloyd_max_codebook,
+    norm_split,
+    quant_dequant_codebook,
+    quant_dequant_uniform,
+    uniform_clip,
+)
+
+
+def _pad_to(x, width: int):
+    """Zero-pad the trailing feature axis to ``width`` (paper §5.1)."""
+    d = x.shape[-1]
+    if d == width:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, width - d)]
+    return jnp.pad(x, pad)
+
+
+def _quant(y, d: int, k: int, bits: int, quantizer: str):
+    """sqrt(d)-scaled scalar quantize→dequantize."""
+    s = jnp.asarray(np.sqrt(d), dtype=y.dtype)
+    ys = y * s
+    if quantizer == "lloyd":
+        yq = quant_dequant_codebook(ys, lloyd_max_codebook(k, bits))
+    elif quantizer == "uniform":
+        yq = quant_dequant_uniform(ys, bits, uniform_clip(bits, k))
+    else:
+        raise ValueError(f"unknown quantizer {quantizer!r}")
+    return yq / s
+
+
+# --------------------------------------------------------------------------
+# IsoQuant-Full (paper §5.2): v -> qL v conj(qR), full SO(4)
+# --------------------------------------------------------------------------
+
+def isoquant_full(x, q_l, q_r, bits: int, quantizer: str = "lloyd"):
+    b, d = x.shape
+    g = q_l.shape[0]
+    rho, xbar = norm_split(x)
+    v = _pad_to(xbar, 4 * g).reshape(b, g, 4)
+    ql = q_l.astype(x.dtype)[None]          # (1, g, 4), broadcast over batch
+    qr = q_r.astype(x.dtype)[None]
+    y = quat.sandwich(ql, v, qr)            # eq. 22
+    yq = _quant(y, d, 4, bits, quantizer)   # eq. 23
+    rec = quat.sandwich_inv(ql, yq, qr)     # eq. 24
+    return rho * rec.reshape(b, 4 * g)[:, :d]
+
+
+# --------------------------------------------------------------------------
+# IsoQuant-Fast (paper §5.3): v -> qL v, single isoclinic factor
+# --------------------------------------------------------------------------
+
+def isoquant_fast(x, q_l, bits: int, quantizer: str = "lloyd"):
+    b, d = x.shape
+    g = q_l.shape[0]
+    rho, xbar = norm_split(x)
+    v = _pad_to(xbar, 4 * g).reshape(b, g, 4)
+    ql = q_l.astype(x.dtype)[None]
+    y = quat.left_mul(ql, v)                # eq. 25
+    yq = _quant(y, d, 4, bits, quantizer)
+    rec = quat.left_mul_inv(ql, yq)         # eq. 27
+    return rho * rec.reshape(b, 4 * g)[:, :d]
+
+
+# --------------------------------------------------------------------------
+# IsoQuant-2D (paper §5.4): planar Givens rotations on coordinate pairs
+# --------------------------------------------------------------------------
+
+def isoquant_2d(x, theta, bits: int, quantizer: str = "lloyd"):
+    b, d = x.shape
+    g = theta.shape[0]
+    rho, xbar = norm_split(x)
+    u = _pad_to(xbar, 2 * g).reshape(b, g, 2)
+    c = jnp.cos(theta).astype(x.dtype)[None]    # (1, g)
+    s = jnp.sin(theta).astype(x.dtype)[None]
+    u0, u1 = u[..., 0], u[..., 1]
+    y = jnp.stack([c * u0 - s * u1, s * u0 + c * u1], axis=-1)  # eq. 29
+    yq = _quant(y, d, 2, bits, quantizer)
+    y0, y1 = yq[..., 0], yq[..., 1]
+    rec = jnp.stack([c * y0 + s * y1, -s * y0 + c * y1], axis=-1)  # eq. 31
+    return rho * rec.reshape(b, 2 * g)[:, :d]
+
+
+# --------------------------------------------------------------------------
+# RotorQuant baseline (paper [2]): 3D Clifford rotor blocks + 2D tail
+# --------------------------------------------------------------------------
+
+def _rotate3(q, v3):
+    """Rotate 3-vectors by the rotor encoded in unit quaternion q:
+    v -> q v conj(q) restricted to the pure part.  This is the
+    odd-intermediate form of the Cl(3,0) sandwich R v R~."""
+    v = jnp.concatenate([jnp.zeros_like(v3[..., :1]), v3], axis=-1)
+    out = quat.hamilton(quat.hamilton(q, v), quat.conjugate(q))
+    return out[..., 1:]
+
+
+def _rotate3_inv(q, v3):
+    v = jnp.concatenate([jnp.zeros_like(v3[..., :1]), v3], axis=-1)
+    out = quat.hamilton(quat.hamilton(quat.conjugate(q), v), q)
+    return out[..., 1:]
+
+
+def rotorquant(x, q, tail_theta, bits: int, quantizer: str = "lloyd"):
+    """RotorQuant stage-1: floor(d/3) rotor blocks plus a planar tail.
+
+    At d = 128: 42 full 3D blocks + one 2D tail (§1).  The quantizer uses
+    the k=3 marginal codebook for the blocks and k=2 for the tail, both
+    at the same bit width — matching the blockwise structure."""
+    b, d = x.shape
+    nfull = q.shape[0]
+    rho, xbar = norm_split(x)
+    body = xbar[:, : 3 * nfull].reshape(b, nfull, 3)
+    qb = q.astype(x.dtype)[None]
+    y = _rotate3(qb, body)
+    yq = _quant(y, d, 3, bits, quantizer)
+    rec = _rotate3_inv(qb, yq).reshape(b, 3 * nfull)
+
+    tail = xbar[:, 3 * nfull :]
+    tw = tail.shape[-1]
+    if tw == 2:
+        c = jnp.cos(tail_theta).astype(x.dtype)
+        s = jnp.sin(tail_theta).astype(x.dtype)
+        t0, t1 = tail[..., 0], tail[..., 1]
+        ty = jnp.stack([c * t0 - s * t1, s * t0 + c * t1], axis=-1)
+        tyq = _quant(ty, d, 2, bits, quantizer)
+        ty0, ty1 = tyq[..., 0], tyq[..., 1]
+        tail_rec = jnp.stack([c * ty0 + s * ty1, -s * ty0 + c * ty1], axis=-1)
+    elif tw == 1:
+        tail_rec = _quant(tail, d, 2, bits, quantizer)
+    else:
+        tail_rec = tail
+    return rho * jnp.concatenate([rec, tail_rec], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# TurboQuant-style dense rotation baseline (paper [1], Table 1 row 1)
+# --------------------------------------------------------------------------
+
+def dense_rotation(x, mat, bits: int, quantizer: str = "lloyd"):
+    """Dense d x d orthogonal rotation + scalar quantization.  Used as the
+    conceptual dense reference in the complexity analysis (§9.1)."""
+    b, d = x.shape
+    rho, xbar = norm_split(x)
+    m = mat.astype(x.dtype)
+    y = xbar @ m.T
+    # a dense Haar rotation mixes globally; the per-coordinate marginal is
+    # that of a d-sphere coordinate — approximately Gaussian for large d —
+    # the k=4 codebook (semicircle-like, near-Gaussian) is the best match
+    # among the trained tables at the same sqrt(d) scale.
+    yq = _quant(y, d, 4, bits, quantizer)
+    rec = yq @ m
+    return rho * rec
+
+
+# --------------------------------------------------------------------------
+# Identity baseline (no rotation) — isolates the value of decorrelation
+# --------------------------------------------------------------------------
+
+def identity(x, bits: int, quantizer: str = "lloyd"):
+    b, d = x.shape
+    rho, xbar = norm_split(x)
+    yq = _quant(xbar, d, 4, bits, quantizer)
+    return rho * yq
+
+
+def mse(x, xhat):
+    return jnp.mean((x - xhat) ** 2)

@@ -1,0 +1,340 @@
+"""L2: JAX compute graphs that get AOT-lowered into the Rust runtime.
+
+Three families of graphs:
+
+1. **Stage-1 parity graphs** — the fused quantize→dequantize pipelines
+   from ``kernels/`` wrapped at fixed shapes.  The Rust native pipeline
+   (rust/src/quant/pipeline.rs) is cross-checked against the lowered HLO
+   of these graphs at runtime (``isoquant selfcheck``) and in the
+   integration tests — the cross-language correctness anchor.
+
+2. **Transformer serving graphs** — a small decoder-only transformer
+   (the E2E serving model): a chunked prefill step and a single-token
+   decode step.  KV caches are *inputs*: at serve time the Rust
+   coordinator stores them compressed (IsoQuant pages) and reconstructs
+   the dense tensors it feeds the step — the paper's deployment story
+   (compressed KV cache + cheap stage-1 transform on the critical path).
+
+3. **Attention scorer** — isolated attention-logit computation used by
+   the fidelity experiments (§9.6 directions).
+
+Weights are runtime *inputs* (not baked constants) so artifacts stay
+small and the Rust side can own weight initialization; the exact shapes
+are recorded in the manifest.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dense_rot, isoquant, params as kparams, rotor3d
+
+
+# --------------------------------------------------------------------------
+# 1. Stage-1 parity graphs
+# --------------------------------------------------------------------------
+
+def stage1_graph(variant: str, bits: int, quantizer: str = "lloyd"):
+    """Returns f(x, *params) -> (xhat,) for the given variant."""
+    if variant == "full":
+        def f(x, ql, qr):
+            return (isoquant.isoquant_full(x, ql, qr, bits, quantizer),)
+    elif variant == "fast":
+        def f(x, ql):
+            return (isoquant.isoquant_fast(x, ql, bits, quantizer),)
+    elif variant == "2d":
+        def f(x, theta):
+            return (isoquant.isoquant_2d(x, theta, bits, quantizer),)
+    elif variant == "rotor":
+        def f(x, q, tail):
+            return (rotor3d.rotorquant(x, q, tail, bits, quantizer),)
+    elif variant == "dense":
+        def f(x, m):
+            return (dense_rot.dense_rotation(x, m, bits, quantizer),)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return f
+
+
+def stage1_example_args(variant: str, batch: int, d: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering + the parameter bank shapes."""
+    x = jax.ShapeDtypeStruct((batch, d), dtype)
+    if variant == "full":
+        g = kparams.g4(d)
+        return [x, jax.ShapeDtypeStruct((g, 4), dtype), jax.ShapeDtypeStruct((g, 4), dtype)]
+    if variant == "fast":
+        g = kparams.g4(d)
+        return [x, jax.ShapeDtypeStruct((g, 4), dtype)]
+    if variant == "2d":
+        g = kparams.g2(d)
+        return [x, jax.ShapeDtypeStruct((g,), dtype)]
+    if variant == "rotor":
+        nfull, tail = kparams.g3(d)
+        return [
+            x,
+            jax.ShapeDtypeStruct((nfull, 4), dtype),
+            jax.ShapeDtypeStruct((1 if tail == 2 else 0,), dtype),
+        ]
+    if variant == "dense":
+        return [x, jax.ShapeDtypeStruct((d, d), dtype)]
+    raise ValueError(variant)
+
+
+# --------------------------------------------------------------------------
+# 2. Transformer serving graphs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Small decoder-only transformer used by the E2E serving example."""
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 4
+    d_head: int = 64          # == paper's primary head width
+    n_layers: int = 2
+    d_ff: int = 512
+    max_seq: int = 256
+    prefill_chunk: int = 32
+
+    @property
+    def weight_specs(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Flat, ordered weight list — the manifest/rust contract."""
+        specs: list[tuple[str, tuple[int, ...]]] = [
+            ("embed", (self.vocab, self.d_model)),
+        ]
+        for l in range(self.n_layers):
+            p = f"layer{l}."
+            specs += [
+                (p + "ln1_g", (self.d_model,)),
+                (p + "wq", (self.d_model, self.d_model)),
+                (p + "wk", (self.d_model, self.d_model)),
+                (p + "wv", (self.d_model, self.d_model)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "ln2_g", (self.d_model,)),
+                (p + "w1", (self.d_model, self.d_ff)),
+                (p + "w2", (self.d_ff, self.d_model)),
+            ]
+        specs += [("ln_f_g", (self.d_model,)), ("unembed", (self.d_model, self.vocab))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.weight_specs)
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> list[np.ndarray]:
+    """Deterministic Gaussian init, scaled 1/sqrt(fan_in); layernorm gains 1.
+    Mirrored in rust/src/runtime/weights.rs via the weights.bin file."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in cfg.weight_specs:
+        if name.endswith("_g"):
+            out.append(np.ones(shape, dtype=np.float32))
+        else:
+            fan_in = shape[0]
+            out.append(
+                (rng.standard_normal(shape) / math.sqrt(fan_in)).astype(np.float32)
+            )
+    return out
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    w = {}
+    for (name, _), arr in zip(cfg.weight_specs, flat):
+        w[name] = arr
+    return w
+
+
+def _rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _split_heads(x, cfg: ModelConfig):
+    b = x.shape[0]
+    return x.reshape(b, -1, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _rope(x, pos):
+    """Rotary position embedding over the head dim (pairs of lanes).
+
+    ``pos`` broadcasts over (B, H, T): pass an (T,) or scalar array."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None] * freqs  # (..., half)
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(x.dtype)
+
+
+def decode_step(cfg: ModelConfig):
+    """Single-token decode step with per-lane positions (continuous
+    batching: every batch lane may be at a different sequence position).
+
+    Inputs:
+      tok      (B,)  int32           — current token ids
+      pos      (B,)  int32           — per-lane position (0-based)
+      k_cache  (L, B, H, T, dh) f32  — reconstructed (decompressed) K cache
+      v_cache  (L, B, H, T, dh) f32
+      *weights                        — cfg.weight_specs order
+    Outputs:
+      logits   (B, vocab)
+      k_new    (L, B, H, dh)          — this token's K per layer (rust
+      v_new    (L, B, H, dh)            compresses and appends them)
+    """
+    L, H, T, DH = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+
+    def f(tok, pos, k_cache, v_cache, *flat_w):
+        w = _unflatten(cfg, flat_w)
+        x = jnp.take(w["embed"], tok, axis=0)  # (B, dm)
+        b = x.shape[0]
+        k_news, v_news = [], []
+        posf = pos.astype(jnp.float32)[:, None]  # (B, 1) broadcasting over H
+        # causal validity mask over cache slots: lane b's slot t valid iff
+        # t < pos[b]
+        slot = jnp.arange(T)
+        neg = jnp.asarray(-1e9, jnp.float32)
+        mask = jnp.where(slot[None, :] < pos[:, None], 0.0, neg)[:, None, :]
+        for l in range(cfg.n_layers):
+            p = f"layer{l}."
+            h = _rmsnorm(x, w[p + "ln1_g"])
+            q = _split_heads(h @ w[p + "wq"], cfg)[:, :, 0, :]  # (B,H,dh)
+            k = _split_heads(h @ w[p + "wk"], cfg)[:, :, 0, :]
+            v = _split_heads(h @ w[p + "wv"], cfg)[:, :, 0, :]
+            q = _rope(q, posf)
+            k = _rope(k, posf)
+            # attend over [cached 0..pos-1] ∪ [self]
+            kc, vc = k_cache[l], v_cache[l]           # (B,H,T,dh)
+            logits_c = jnp.einsum("bhd,bhtd->bht", q, kc) / math.sqrt(DH)
+            logits_c = logits_c + mask
+            logit_self = jnp.einsum("bhd,bhd->bh", q, k)[..., None] / math.sqrt(DH)
+            all_logits = jnp.concatenate([logits_c, logit_self], axis=-1)
+            att = jax.nn.softmax(all_logits, axis=-1)
+            ctx = jnp.einsum("bht,bhtd->bhd", att[..., :T], vc) + att[..., T:] * v
+            ctx = ctx.reshape(b, H * DH)
+            x = x + ctx @ w[p + "wo"]
+            h2 = _rmsnorm(x, w[p + "ln2_g"])
+            x = x + (jax.nn.silu(h2 @ w[p + "w1"]) @ w[p + "w2"])
+            k_news.append(k)
+            v_news.append(v)
+        x = _rmsnorm(x, w["ln_f_g"])
+        logits = x @ w["unembed"]
+        return (logits, jnp.stack(k_news), jnp.stack(v_news))
+
+    return f
+
+
+def decode_example_args(cfg: ModelConfig, batch: int):
+    L, H, T, DH = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+    args = [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((L, batch, H, T, DH), jnp.float32),
+        jax.ShapeDtypeStruct((L, batch, H, T, DH), jnp.float32),
+    ]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.weight_specs]
+    return args
+
+
+def prefill_chunk(cfg: ModelConfig):
+    """Chunked prefill over P = cfg.prefill_chunk tokens with per-lane
+    start positions (lanes may prefill different sequences / chunks).
+
+    Inputs:
+      tok      (B, P) int32
+      pos0     (B,)   int32          — per-lane chunk start position
+      k_cache / v_cache (L,B,H,T,dh) — previously prefilled (reconstructed)
+      *weights
+    Outputs:
+      logits  (B, P, vocab)          — logits at every chunk position (the
+                                       coordinator picks the last real one)
+      k_chunk (L,B,H,P,dh), v_chunk  — this chunk's K/V (rust compresses)
+    """
+    P, L, H, T, DH = cfg.prefill_chunk, cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+
+    def f(tok, pos0, k_cache, v_cache, *flat_w):
+        w = _unflatten(cfg, flat_w)
+        x = jnp.take(w["embed"], tok, axis=0)  # (B, P, dm)
+        b = x.shape[0]
+        # (B, P) absolute positions
+        pos = pos0.astype(jnp.float32)[:, None] + jnp.arange(P, dtype=jnp.float32)[None, :]
+        slot = jnp.arange(T)
+        neg = jnp.asarray(-1e9, jnp.float32)
+        # cache validity per lane: slot < pos0[b]  → (B, 1, 1, T)
+        cache_mask = jnp.where(slot[None, :] < pos0[:, None], 0.0, neg)[:, None, None, :]
+        k_chunks, v_chunks = [], []
+        for l in range(cfg.n_layers):
+            p = f"layer{l}."
+            h = _rmsnorm(x, w[p + "ln1_g"])
+            q = _split_heads(h @ w[p + "wq"], cfg)  # (B,H,P,dh)
+            k = _split_heads(h @ w[p + "wk"], cfg)
+            v = _split_heads(h @ w[p + "wv"], cfg)
+            q = _rope(q, pos[:, None, :])
+            k = _rope(k, pos[:, None, :])
+            kc, vc = k_cache[l], v_cache[l]
+            # scores vs cache (valid slots < pos0) and vs in-chunk (causal)
+            sc = jnp.einsum("bhpd,bhtd->bhpt", q, kc) / math.sqrt(DH)
+            sc = sc + cache_mask
+            ss = jnp.einsum("bhpd,bhsd->bhps", q, k) / math.sqrt(DH)
+            causal = jnp.where(
+                jnp.arange(P)[:, None] >= jnp.arange(P)[None, :], 0.0, neg
+            )
+            ss = ss + causal[None, None]
+            att = jax.nn.softmax(jnp.concatenate([sc, ss], axis=-1), axis=-1)
+            ctx = jnp.einsum("bhpt,bhtd->bhpd", att[..., :T], vc) + jnp.einsum(
+                "bhps,bhsd->bhpd", att[..., T:], v
+            )
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b, P, H * DH)
+            x = x + ctx @ w[p + "wo"]
+            h2 = _rmsnorm(x, w[p + "ln2_g"])
+            x = x + (jax.nn.silu(h2 @ w[p + "w1"]) @ w[p + "w2"])
+            k_chunks.append(k)
+            v_chunks.append(v)
+        x = _rmsnorm(x, w["ln_f_g"])
+        logits = x @ w["unembed"]  # (B, P, vocab)
+        return (logits, jnp.stack(k_chunks), jnp.stack(v_chunks))
+
+    return f
+
+
+def prefill_example_args(cfg: ModelConfig, batch: int):
+    P, L, H, T, DH = cfg.prefill_chunk, cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+    args = [
+        jax.ShapeDtypeStruct((batch, P), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((L, batch, H, T, DH), jnp.float32),
+        jax.ShapeDtypeStruct((L, batch, H, T, DH), jnp.float32),
+    ]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.weight_specs]
+    return args
+
+
+# --------------------------------------------------------------------------
+# 3. Attention scorer (fidelity experiments)
+# --------------------------------------------------------------------------
+
+def attention_scorer(d_head: int):
+    """f(q, k, v) -> (out, logits): single-query attention over a T-slot
+    cache.  Used to measure attention-logit preservation under KV
+    compression (§9.6 item 2)."""
+
+    def f(q, k, v):
+        logits = jnp.einsum("bhd,bhtd->bht", q, k) / math.sqrt(d_head)
+        att = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bht,bhtd->bhd", att, v)
+        return (out, logits)
+
+    return f
+
+
+def attention_example_args(batch: int, heads: int, t: int, d_head: int):
+    return [
+        jax.ShapeDtypeStruct((batch, heads, d_head), jnp.float32),
+        jax.ShapeDtypeStruct((batch, heads, t, d_head), jnp.float32),
+        jax.ShapeDtypeStruct((batch, heads, t, d_head), jnp.float32),
+    ]

@@ -1,0 +1,12 @@
+"""Test configuration: enable x64 (the algebra property tests check
+identities at double precision) and make ``compile.*`` importable when
+pytest is invoked from the repository root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

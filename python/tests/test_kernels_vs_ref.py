@@ -1,0 +1,216 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, bit widths, and quantizer families for
+every kernel; each draw asserts allclose against ``ref.py``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_rot, isoquant, params, ref, rotor3d
+
+# Batch sizes exercise tile selection (B < tile, B == tile, B = multiple
+# of tile, odd multiples); dims cover the paper's sweep plus small cases.
+BATCHES = [1, 2, 8, 64, 96, 256]
+DIMS_4D = [8, 64, 128, 256, 512]
+DIMS_2D = [2, 64, 128, 256, 512]
+DIMS_ANY = [64, 128, 256]
+
+dtype_st = st.sampled_from([jnp.float32, jnp.float16])
+bits_st = st.integers(2, 4)
+quant_st = st.sampled_from(["lloyd", "uniform"])
+
+
+def _tol(dtype):
+    return dict(atol=2e-3, rtol=2e-2) if dtype == jnp.float16 else dict(atol=1e-5, rtol=1e-4)
+
+
+def _assert_matches(got, want, dtype):
+    """f32: strict allclose.  f16: interpret-mode Pallas may evaluate at a
+    slightly different intermediate precision than pure jnp, so inputs
+    sitting exactly on a codebook boundary can flip to the adjacent level
+    — allow ≤1% of elements to differ by up to one quantization step,
+    with everything else tightly matched."""
+    got = np.asarray(got, dtype=np.float64)
+    want = np.asarray(want, dtype=np.float64)
+    if dtype == jnp.float16:
+        err = np.abs(got - want)
+        tol = 2e-3 + 2e-2 * np.abs(want)
+        n_bad = int(np.sum(err > tol))
+        # one flipped code fans out to all block_k coords through the
+        # inverse rotation, and tiny tensors make percentages meaningless
+        allowed = max(8, int(0.02 * err.size))
+        assert n_bad <= allowed, f"{n_bad}/{err.size} elements off (max {err.max()})"
+        # boundary flips are bounded: per-element error is at most one
+        # codebook gap scaled by ρ/√d, so the *aggregate* energy of the
+        # mismatch must stay a small fraction of the signal energy
+        power = float(np.mean(want**2)) + 1e-12
+        assert float(np.mean(err**2)) < 0.02 * power, (
+            f"flip energy {np.mean(err**2)} vs power {power}"
+        )
+    else:
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+def _input(rng, b, d, dtype):
+    x = rng.standard_normal((b, d)) * rng.uniform(0.3, 3.0)
+    return jnp.asarray(x, dtype=dtype)
+
+
+class TestIsoQuantFull:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.sampled_from(BATCHES),
+        d=st.sampled_from(DIMS_4D),
+        bits=bits_st,
+        dtype=dtype_st,
+        quant=quant_st,
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, bits, dtype, quant, seed):
+        rng = np.random.default_rng(seed)
+        x = _input(rng, b, d, dtype)
+        ql, qr = params.quaternion_pairs(d, seed)
+        want = ref.isoquant_full(x, jnp.asarray(ql), jnp.asarray(qr), bits, quant)
+        got = isoquant.isoquant_full(x, jnp.asarray(ql), jnp.asarray(qr), bits, quant)
+        _assert_matches(got, want, dtype)
+
+
+class TestIsoQuantFast:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.sampled_from(BATCHES),
+        d=st.sampled_from(DIMS_4D),
+        bits=bits_st,
+        dtype=dtype_st,
+        quant=quant_st,
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, bits, dtype, quant, seed):
+        rng = np.random.default_rng(seed)
+        x = _input(rng, b, d, dtype)
+        ql = params.quaternion_single(d, seed)
+        want = ref.isoquant_fast(x, jnp.asarray(ql), bits, quant)
+        got = isoquant.isoquant_fast(x, jnp.asarray(ql), bits, quant)
+        _assert_matches(got, want, dtype)
+
+
+class TestIsoQuant2D:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.sampled_from(BATCHES),
+        d=st.sampled_from(DIMS_2D),
+        bits=bits_st,
+        dtype=dtype_st,
+        quant=quant_st,
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, bits, dtype, quant, seed):
+        rng = np.random.default_rng(seed)
+        x = _input(rng, b, d, dtype)
+        th = params.planar_angles(d, seed)
+        want = ref.isoquant_2d(x, jnp.asarray(th), bits, quant)
+        got = isoquant.isoquant_2d(x, jnp.asarray(th), bits, quant)
+        _assert_matches(got, want, dtype)
+
+
+class TestRotorQuant:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        b=st.sampled_from(BATCHES),
+        d=st.sampled_from([63, 64, 65, 128, 256]),  # tails 0, 1, 2
+        bits=bits_st,
+        dtype=dtype_st,
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, bits, dtype, seed):
+        rng = np.random.default_rng(seed)
+        x = _input(rng, b, d, dtype)
+        q3, tt = params.rotor3_params(d, seed)
+        want = ref.rotorquant(x, jnp.asarray(q3), jnp.asarray(tt), bits)
+        got = rotor3d.rotorquant(x, jnp.asarray(q3), jnp.asarray(tt), bits)
+        _assert_matches(got, want, dtype)
+
+    def test_d128_partition_is_42_blocks_plus_2d_tail(self):
+        """The paper's motivating example (§1)."""
+        nfull, tail = params.g3(128)
+        assert (nfull, tail) == (42, 2)
+
+
+class TestDenseRotation:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([8, 64]),
+        d=st.sampled_from(DIMS_ANY),
+        bits=bits_st,
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, d, bits, seed):
+        rng = np.random.default_rng(seed)
+        x = _input(rng, b, d, jnp.float32)
+        m = params.dense_orthogonal(d, seed)
+        want = ref.dense_rotation(x, jnp.asarray(m), bits)
+        got = dense_rot.dense_rotation(x, jnp.asarray(m), bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+class TestPipelineInvariants:
+    """Stage-1 invariants that hold for every variant (paper Alg. 1)."""
+
+    @pytest.mark.parametrize("bits", [2, 3, 4])
+    def test_reconstruction_norm_bounded(self, bits):
+        """The reconstruction of a normalized vector has norm ≤ ~1 + quant
+        error: rotations are isometries, so only Q can change the norm."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((128, 128)), dtype=jnp.float32)
+        ql, qr = params.quaternion_pairs(128, 7)
+        xhat = isoquant.isoquant_full(x, jnp.asarray(ql), jnp.asarray(qr), bits)
+        rho = np.linalg.norm(np.asarray(x), axis=-1)
+        rho_hat = np.linalg.norm(np.asarray(xhat), axis=-1)
+        # quantization perturbs the unit direction by bounded error
+        assert np.all(rho_hat <= rho * 1.6 + 1e-6)
+
+    def test_full_mse_improves_with_bits(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((512, 128)), dtype=jnp.float32)
+        ql, qr = params.quaternion_pairs(128, 3)
+        mses = [
+            float(ref.mse(x, isoquant.isoquant_full(x, jnp.asarray(ql), jnp.asarray(qr), b)))
+            for b in (2, 3, 4)
+        ]
+        assert mses[0] > mses[1] > mses[2]
+
+    def test_scaling_equivariance(self):
+        """xhat(c·x) = c·xhat(x): the norm split makes stage-1 scale-
+        equivariant (paper eq. 3)."""
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((16, 64)), dtype=jnp.float32)
+        ql, qr = params.quaternion_pairs(64, 5)
+        a = isoquant.isoquant_full(3.0 * x, jnp.asarray(ql), jnp.asarray(qr), 4)
+        b = 3.0 * isoquant.isoquant_full(x, jnp.asarray(ql), jnp.asarray(qr), 4)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+    def test_identity_rotation_reduces_to_plain_quant(self):
+        """With qL = qR = 1 the Full pipeline is plain scalar quantization."""
+        rng = np.random.default_rng(3)
+        d = 64
+        x = jnp.asarray(rng.standard_normal((8, d)), dtype=jnp.float32)
+        e = np.zeros((d // 4, 4))
+        e[:, 0] = 1.0
+        got = isoquant.isoquant_full(x, jnp.asarray(e), jnp.asarray(e), 4)
+        want = ref.identity(x, 4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+    def test_full_with_qr_identity_equals_fast(self):
+        """Fast is Full restricted to qR = 1 (paper §5.3)."""
+        rng = np.random.default_rng(4)
+        d = 128
+        x = jnp.asarray(rng.standard_normal((8, d)), dtype=jnp.float32)
+        ql = params.quaternion_single(d, 11)
+        e = np.zeros((d // 4, 4))
+        e[:, 0] = 1.0
+        a = isoquant.isoquant_full(x, jnp.asarray(ql), jnp.asarray(e), 3)
+        b = isoquant.isoquant_fast(x, jnp.asarray(ql), 3)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -1,0 +1,221 @@
+"""L2 model correctness: decode/prefill consistency, attention masking,
+rope properties, weight-spec contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # small config keeps these tests fast; the AOT config is larger
+    return M.ModelConfig(
+        vocab=64, d_model=32, n_heads=2, d_head=16, n_layers=2, d_ff=64,
+        max_seq=32, prefill_chunk=8,
+    )
+
+
+@pytest.fixture(scope="module")
+def weights(cfg):
+    return [jnp.asarray(w) for w in M.init_weights(cfg, seed=1)]
+
+
+def zero_caches(cfg, b):
+    shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    return jnp.zeros(shape), jnp.zeros(shape)
+
+
+class TestWeights:
+    def test_spec_order_and_count(self, cfg):
+        specs = cfg.weight_specs
+        assert specs[0][0] == "embed"
+        assert specs[-1][0] == "unembed"
+        assert len(specs) == 3 + 8 * cfg.n_layers
+
+    def test_param_count(self, cfg):
+        assert cfg.n_params() == sum(
+            int(np.prod(s)) for _, s in cfg.weight_specs
+        )
+
+    def test_deterministic_init(self, cfg):
+        a = M.init_weights(cfg, seed=0)
+        b = M.init_weights(cfg, seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_layernorm_gains_ones(self, cfg):
+        for (name, _), w in zip(cfg.weight_specs, M.init_weights(cfg)):
+            if name.endswith("_g"):
+                np.testing.assert_array_equal(w, np.ones_like(w))
+
+
+class TestDecodeStep:
+    def test_shapes(self, cfg, weights):
+        b = 3
+        f = M.decode_step(cfg)
+        k, v = zero_caches(cfg, b)
+        tok = jnp.zeros((b,), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        logits, k_new, v_new = f(tok, pos, k, v, *weights)
+        assert logits.shape == (b, cfg.vocab)
+        assert k_new.shape == (cfg.n_layers, b, cfg.n_heads, cfg.d_head)
+        assert v_new.shape == k_new.shape
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_lanes_independent(self, cfg, weights):
+        """Changing lane 1's token must not change lane 0's logits —
+        the continuous-batching isolation property."""
+        b = 2
+        f = jax.jit(M.decode_step(cfg))
+        k, v = zero_caches(cfg, b)
+        pos = jnp.asarray([3, 7], jnp.int32)
+        la, _, _ = f(jnp.asarray([5, 9], jnp.int32), pos, k, v, *weights)
+        lb, _, _ = f(jnp.asarray([5, 33], jnp.int32), pos, k, v, *weights)
+        np.testing.assert_allclose(la[0], lb[0], atol=1e-6)
+        assert not np.allclose(la[1], lb[1])
+
+    def test_cache_masking(self, cfg, weights):
+        """Slots at or beyond a lane's pos must not influence its output."""
+        b = 2
+        f = jax.jit(M.decode_step(cfg))
+        k, v = zero_caches(cfg, b)
+        rng = np.random.default_rng(0)
+        # poison slots >= pos with huge values
+        k = k.at[:, :, :, 5:, :].set(1e3)
+        v = v.at[:, :, :, 5:, :].set(1e3)
+        pos = jnp.asarray([5, 5], jnp.int32)
+        tok = jnp.asarray([1, 2], jnp.int32)
+        la, _, _ = f(tok, pos, k, v, *weights)
+        kc, vc = zero_caches(cfg, b)
+        lb, _, _ = f(tok, pos, kc, vc, *weights)
+        np.testing.assert_allclose(la, lb, atol=1e-5)
+        del rng
+
+    def test_position_changes_output(self, cfg, weights):
+        """RoPE: same token at different positions gives different K."""
+        b = 1
+        f = jax.jit(M.decode_step(cfg))
+        k, v = zero_caches(cfg, b)
+        tok = jnp.asarray([7], jnp.int32)
+        _, k0, _ = f(tok, jnp.asarray([0], jnp.int32), k, v, *weights)
+        _, k5, _ = f(tok, jnp.asarray([5], jnp.int32), k, v, *weights)
+        assert not np.allclose(k0, k5)
+        # layer 0's K depends on pos only through RoPE (a rotation), so
+        # its norm is preserved; deeper layers legitimately differ
+        # because pos changes how many (zero) cache slots are attended.
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(k0)[0].ravel()),
+            np.linalg.norm(np.asarray(k5)[0].ravel()),
+            rtol=1e-5,
+        )
+
+
+class TestPrefillDecodeConsistency:
+    def test_prefill_matches_stepwise_decode(self, cfg, weights):
+        """The chunked prefill graph and repeated decode steps must agree
+        on next-token logits — the invariant the engine relies on."""
+        b = 2
+        rng = np.random.default_rng(3)
+        plen = 5
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+
+        # path A: prefill
+        fp = jax.jit(M.prefill_chunk(cfg))
+        k, v = zero_caches(cfg, b)
+        toks = np.zeros((b, cfg.prefill_chunk), np.int32)
+        toks[0, :plen] = prompt
+        logits_a, k_chunk, v_chunk = fp(
+            jnp.asarray(toks), jnp.zeros((b,), jnp.int32), k, v, *weights
+        )
+        la = np.asarray(logits_a)[0, plen - 1]
+
+        # path B: stepwise decode with exact cache writes
+        fd = jax.jit(M.decode_step(cfg))
+        k_cache, v_cache = zero_caches(cfg, b)
+        lb = None
+        for step, t in enumerate(prompt):
+            tok = jnp.asarray([t, 0], jnp.int32)
+            pos = jnp.asarray([step, 0], jnp.int32)
+            logits, k_new, v_new = fd(tok, pos, k_cache, v_cache, *weights)
+            k_cache = k_cache.at[:, 0, :, step, :].set(k_new[:, 0])
+            v_cache = v_cache.at[:, 0, :, step, :].set(v_new[:, 0])
+            lb = np.asarray(logits)[0]
+        np.testing.assert_allclose(la, lb, atol=1e-4, rtol=1e-4)
+
+    def test_prefill_kv_matches_decode_kv(self, cfg, weights):
+        """The K/V the prefill graph returns for each prompt position must
+        equal what decode_step computes at that position."""
+        b = 1
+        cfg1 = M.ModelConfig(
+            vocab=cfg.vocab, d_model=cfg.d_model, n_heads=cfg.n_heads,
+            d_head=cfg.d_head, n_layers=cfg.n_layers, d_ff=cfg.d_ff,
+            max_seq=cfg.max_seq, prefill_chunk=cfg.prefill_chunk,
+        )
+        fp = jax.jit(M.prefill_chunk(cfg1))
+        fd = jax.jit(M.decode_step(cfg1))
+        prompt = np.asarray([3, 9, 11], np.int32)
+        plen = len(prompt)
+        k, v = zero_caches(cfg1, b)
+        toks = np.zeros((b, cfg1.prefill_chunk), np.int32)
+        toks[0, :plen] = prompt
+        _, k_chunk, v_chunk = fp(
+            jnp.asarray(toks), jnp.zeros((b,), jnp.int32), k, v, *weights
+        )
+        # decode position 0 must produce the same k as chunk position 0
+        k_cache, v_cache = zero_caches(cfg1, b)
+        _, k_new, _ = fd(
+            jnp.asarray([prompt[0]], jnp.int32),
+            jnp.asarray([0], jnp.int32),
+            k_cache, v_cache, *weights,
+        )
+        np.testing.assert_allclose(
+            np.asarray(k_chunk)[:, 0, :, 0, :], np.asarray(k_new)[:, 0], atol=1e-5
+        )
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((2, 3, 16)), jnp.float32)
+        pos = jnp.asarray(rng.uniform(0, 100, (2, 1, 3)), jnp.float32)
+        # _rope broadcasts pos[..., None] over the half-dim axis
+        y = M._rope(x, pos[..., 0])
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_zero_position_identity(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        y = M._rope(x, jnp.zeros((4,), jnp.float32))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+    def test_rope_relative_property(self):
+        """⟨rope(q, p1), rope(k, p2)⟩ depends only on p1 - p2."""
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.standard_normal(16), jnp.float32)
+        k = jnp.asarray(rng.standard_normal(16), jnp.float32)
+        def dot(p1, p2):
+            a = M._rope(q, jnp.asarray(float(p1)))
+            b = M._rope(k, jnp.asarray(float(p2)))
+            return float(jnp.dot(a, b))
+        assert abs(dot(3, 1) - dot(10, 8)) < 1e-4
+        assert abs(dot(0, 0) - dot(7, 7)) < 1e-4
+
+
+class TestStage1Graphs:
+    def test_graph_builders_all_variants(self):
+        for variant in ["full", "fast", "2d", "rotor", "dense"]:
+            f = M.stage1_graph(variant, 3)
+            args = M.stage1_example_args(variant, 8, 64)
+            lowered = jax.jit(f).lower(*args)
+            assert lowered is not None
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            M.stage1_graph("nope", 4)

@@ -1,0 +1,168 @@
+"""Scalar quantizer correctness: Lloyd–Max training, codebook quantize,
+uniform quantizer, norm/direction split (paper §3, §5.6)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quantizer import (
+    dequantize_codebook,
+    gaussian_codebook,
+    lloyd_max_codebook,
+    lloyd_max_train,
+    marginal_samples,
+    norm_split,
+    quant_dequant_codebook,
+    quant_dequant_uniform,
+    quantize_codebook,
+    uniform_clip,
+)
+
+
+class TestLloydMax:
+    @pytest.mark.parametrize("k", [2, 3, 4])
+    @pytest.mark.parametrize("bits", [2, 3, 4])
+    def test_codebook_sorted_and_sized(self, k, bits):
+        cb = lloyd_max_codebook(k, bits)
+        assert cb.shape == (2**bits,)
+        assert np.all(np.diff(cb) > 0)
+
+    @pytest.mark.parametrize("k", [2, 4])
+    def test_codebook_symmetric(self, k):
+        """The marginal f_k is symmetric, so Lloyd–Max levels should be
+        (numerically) symmetric about zero."""
+        cb = lloyd_max_codebook(k, 4)
+        np.testing.assert_allclose(cb, -cb[::-1], atol=5e-3)
+
+    def test_lloyd_beats_uniform_on_gaussian(self):
+        """Sanity: trained codebook has lower distortion than a uniform
+        grid with the same number of levels."""
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal(50_000)
+        cb = gaussian_codebook(3)
+        xq = np.asarray(quant_dequant_codebook(jnp.asarray(x), cb))
+        d_lloyd = np.mean((x - xq) ** 2)
+        xu = np.asarray(quant_dequant_uniform(jnp.asarray(x), 3, 3.0))
+        d_unif = np.mean((x - xu) ** 2)
+        assert d_lloyd < d_unif
+
+    def test_lloyd_distortion_decreases_with_bits(self):
+        x = marginal_samples(4, n=20_001)
+        prev = np.inf
+        for bits in (2, 3, 4):
+            cb = lloyd_max_codebook(4, bits)
+            xq = np.asarray(quant_dequant_codebook(jnp.asarray(x), cb))
+            d = np.mean((x - xq) ** 2)
+            assert d < prev
+            prev = d
+
+    def test_training_deterministic(self):
+        a = lloyd_max_train(marginal_samples(4, n=10_001), 8)
+        b = lloyd_max_train(marginal_samples(4, n=10_001), 8)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestMarginalSamples:
+    def test_k2_is_arcsine_shaped(self):
+        """k=2 marginal (paper eq. 37) has more mass near the extremes
+        than k=4 (eq. 38)."""
+        z2 = marginal_samples(2, n=50_001) / np.sqrt(2)
+        z4 = marginal_samples(4, n=50_001) / np.sqrt(4)
+        # P(|z| > 0.9): arcsine ≈ 0.287, semicircle-like ≈ 0.048
+        p2 = np.mean(np.abs(z2) > 0.9)
+        p4 = np.mean(np.abs(z4) > 0.9)
+        assert p2 > 0.2 and p4 < 0.1
+
+    @pytest.mark.parametrize("k", [2, 3, 4])
+    def test_unit_variance_scaling(self, k):
+        """sqrt(k)-scaled marginal has unit second moment: E[z^2] = 1/k
+        on the unit sphere coordinate (paper eq. 35)."""
+        s = marginal_samples(k, n=100_001)
+        np.testing.assert_allclose(np.mean(s**2), 1.0, rtol=2e-2)
+
+
+class TestCodebookQuant:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.lists(
+            st.floats(-5, 5, allow_nan=False, allow_infinity=False, width=32),
+            min_size=1,
+            max_size=64,
+        ),
+        st.integers(2, 4),
+    )
+    def test_idempotent(self, xs, bits):
+        """Q(Q(x)) = Q(x): quantization is a projection."""
+        cb = lloyd_max_codebook(4, bits)
+        x = jnp.asarray(xs, dtype=jnp.float32)
+        once = quant_dequant_codebook(x, cb)
+        twice = quant_dequant_codebook(once, cb)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+    def test_output_in_codebook(self):
+        cb = lloyd_max_codebook(4, 2)
+        x = jnp.asarray(np.linspace(-3, 3, 101), dtype=jnp.float32)
+        out = np.asarray(quant_dequant_codebook(x, cb))
+        cbf = np.asarray(cb, dtype=np.float32)
+        assert np.all(np.isin(out, cbf))
+
+    def test_nearest_neighbor(self):
+        """Boundary-search quantization equals brute-force nearest level."""
+        cb = lloyd_max_codebook(4, 3)
+        x = np.linspace(-4, 4, 1001)
+        idx = np.asarray(quantize_codebook(jnp.asarray(x), cb))
+        brute = np.argmin(np.abs(x[:, None] - np.asarray(cb)[None]), axis=1)
+        np.testing.assert_array_equal(idx, brute)
+
+    def test_index_range(self):
+        cb = lloyd_max_codebook(2, 4)
+        x = jnp.asarray(np.linspace(-10, 10, 999))
+        idx = np.asarray(quantize_codebook(x, cb))
+        assert idx.min() >= 0 and idx.max() <= 15
+
+    def test_dequantize_roundtrip(self):
+        cb = lloyd_max_codebook(4, 3)
+        idx = jnp.asarray(np.arange(8), dtype=jnp.int32)
+        out = np.asarray(dequantize_codebook(idx, cb, jnp.float32))
+        np.testing.assert_allclose(out, np.asarray(cb, np.float32))
+
+
+class TestUniformQuant:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 4))
+    def test_levels_count(self, bits):
+        clip = 2.0
+        x = jnp.asarray(np.linspace(-3, 3, 4001), dtype=jnp.float32)
+        out = np.asarray(quant_dequant_uniform(x, bits, clip))
+        assert len(np.unique(out)) <= 2**bits
+
+    def test_outputs_within_clip(self):
+        x = jnp.asarray(np.linspace(-100, 100, 101), dtype=jnp.float32)
+        out = np.asarray(quant_dequant_uniform(x, 4, 1.5))
+        assert np.all(np.abs(out) <= 1.5)
+
+    def test_clip_scale(self):
+        assert uniform_clip(4, 4) == pytest.approx(2.0)
+        assert uniform_clip(2, 2) == pytest.approx(np.sqrt(2.0))
+
+
+class TestNormSplit:
+    def test_reconstruction(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((32, 16)))
+        rho, xbar = norm_split(x)
+        np.testing.assert_allclose(np.asarray(rho * xbar), np.asarray(x), atol=1e-12)
+
+    def test_unit_directions(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((32, 16)))
+        _, xbar = norm_split(x)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(xbar), axis=-1), 1.0, rtol=1e-7
+        )
+
+    def test_zero_vector_safe(self):
+        rho, xbar = norm_split(jnp.zeros((2, 8)))
+        assert np.all(np.isfinite(np.asarray(xbar)))
+        np.testing.assert_allclose(np.asarray(rho), 0.0)

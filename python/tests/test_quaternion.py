@@ -1,0 +1,147 @@
+"""Algebraic properties of the quaternion layer (paper §4, Prop. 1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quaternion as quat
+
+
+def _rand_quat(rng, n=1):
+    q = rng.standard_normal((n, 4))
+    return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+
+finite_quat = st.lists(
+    st.floats(-10, 10, allow_nan=False, allow_infinity=False, width=32),
+    min_size=4, max_size=4,
+)
+
+
+class TestHamilton:
+    def test_identity_element(self):
+        e = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+        q = jnp.asarray([0.3, -0.5, 0.7, 0.1])
+        np.testing.assert_allclose(quat.hamilton(e, q), q, atol=1e-7)
+        np.testing.assert_allclose(quat.hamilton(q, e), q, atol=1e-7)
+
+    def test_ijk_relations(self):
+        """i^2 = j^2 = k^2 = ijk = -1 (paper eq. 4)."""
+        i = jnp.asarray([0.0, 1.0, 0.0, 0.0])
+        j = jnp.asarray([0.0, 0.0, 1.0, 0.0])
+        k = jnp.asarray([0.0, 0.0, 0.0, 1.0])
+        minus1 = jnp.asarray([-1.0, 0.0, 0.0, 0.0])
+        for u in (i, j, k):
+            np.testing.assert_allclose(quat.hamilton(u, u), minus1, atol=1e-7)
+        np.testing.assert_allclose(
+            quat.hamilton(quat.hamilton(i, j), k), minus1, atol=1e-7
+        )
+
+    def test_noncommutative(self):
+        i = jnp.asarray([0.0, 1.0, 0.0, 0.0])
+        j = jnp.asarray([0.0, 0.0, 1.0, 0.0])
+        ij = quat.hamilton(i, j)
+        ji = quat.hamilton(j, i)
+        np.testing.assert_allclose(ij, -ji, atol=1e-7)
+        assert not np.allclose(ij, ji)
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite_quat, finite_quat, finite_quat)
+    def test_associativity(self, a, b, c):
+        a, b, c = (jnp.asarray(v, dtype=jnp.float64) for v in (a, b, c))
+        lhs = quat.hamilton(quat.hamilton(a, b), c)
+        rhs = quat.hamilton(a, quat.hamilton(b, c))
+        np.testing.assert_allclose(lhs, rhs, atol=1e-9, rtol=1e-9)
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite_quat, finite_quat)
+    def test_norm_multiplicative(self, a, b):
+        a, b = jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64)
+        prod = quat.hamilton(a, b)
+        na, nb = np.linalg.norm(a), np.linalg.norm(b)
+        np.testing.assert_allclose(np.linalg.norm(prod), na * nb, rtol=1e-9)
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite_quat, finite_quat)
+    def test_conjugate_antihomomorphism(self, a, b):
+        """conj(ab) = conj(b) conj(a)."""
+        a, b = jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64)
+        lhs = quat.conjugate(quat.hamilton(a, b))
+        rhs = quat.hamilton(quat.conjugate(b), quat.conjugate(a))
+        np.testing.assert_allclose(lhs, rhs, atol=1e-9)
+
+
+class TestSandwich:
+    """Prop. 1: T(v) = qL v conj(qR) is orthogonal with the stated inverse."""
+
+    def test_norm_preserving(self):
+        rng = np.random.default_rng(0)
+        ql = jnp.asarray(_rand_quat(rng, 32))
+        qr = jnp.asarray(_rand_quat(rng, 32))
+        v = jnp.asarray(rng.standard_normal((32, 4)))
+        out = quat.sandwich(ql, v, qr)
+        np.testing.assert_allclose(
+            np.linalg.norm(out, axis=-1), np.linalg.norm(v, axis=-1), rtol=1e-10
+        )
+
+    def test_inverse_roundtrip(self):
+        rng = np.random.default_rng(1)
+        ql = jnp.asarray(_rand_quat(rng, 16))
+        qr = jnp.asarray(_rand_quat(rng, 16))
+        v = jnp.asarray(rng.standard_normal((16, 4)))
+        rt = quat.sandwich_inv(ql, quat.sandwich(ql, v, qr), qr)
+        np.testing.assert_allclose(rt, v, atol=1e-10)
+
+    def test_double_cover(self):
+        """(qL, qR) and (-qL, -qR) induce the same SO(4) element (eq. 13)."""
+        rng = np.random.default_rng(2)
+        ql = jnp.asarray(_rand_quat(rng, 8))
+        qr = jnp.asarray(_rand_quat(rng, 8))
+        v = jnp.asarray(rng.standard_normal((8, 4)))
+        np.testing.assert_allclose(
+            quat.sandwich(ql, v, qr), quat.sandwich(-ql, v, -qr), atol=1e-12
+        )
+
+    def test_so4_matrix_orthogonal_det_one(self):
+        rng = np.random.default_rng(3)
+        for _ in range(10):
+            ql = jnp.asarray(_rand_quat(rng)[0])
+            qr = jnp.asarray(_rand_quat(rng)[0])
+            m = np.asarray(quat.so4_matrix(ql, qr), dtype=np.float64)
+            np.testing.assert_allclose(m @ m.T, np.eye(4), atol=1e-7)
+            np.testing.assert_allclose(np.linalg.det(m), 1.0, rtol=1e-6)
+
+    def test_matrix_matches_sandwich(self):
+        rng = np.random.default_rng(4)
+        ql = jnp.asarray(_rand_quat(rng)[0])
+        qr = jnp.asarray(_rand_quat(rng)[0])
+        m = np.asarray(quat.so4_matrix(ql, qr))
+        v = rng.standard_normal(4)
+        np.testing.assert_allclose(
+            m @ v, np.asarray(quat.sandwich(ql, jnp.asarray(v), qr)), atol=1e-6
+        )
+
+    def test_left_isoclinic_is_so3_subgroup(self):
+        """Fast mode: left multiplication preserves the quaternion norm and
+        roundtrips (paper §5.3)."""
+        rng = np.random.default_rng(5)
+        ql = jnp.asarray(_rand_quat(rng, 16))
+        v = jnp.asarray(rng.standard_normal((16, 4)))
+        y = quat.left_mul(ql, v)
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(v, axis=-1), rtol=1e-10
+        )
+        np.testing.assert_allclose(quat.left_mul_inv(ql, y), v, atol=1e-10)
+
+
+class TestNormalize:
+    def test_unit_norm(self):
+        rng = np.random.default_rng(6)
+        u = jnp.asarray(rng.standard_normal((100, 4)))
+        q = quat.normalize(u)
+        np.testing.assert_allclose(np.linalg.norm(q, axis=-1), 1.0, rtol=1e-7)
+
+    def test_eps_guard(self):
+        q = quat.normalize(jnp.zeros((1, 4)))
+        assert np.all(np.isfinite(q))

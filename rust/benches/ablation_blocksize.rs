@@ -1,0 +1,100 @@
+//! **Table 3 ablation — block size** (2D / 3D / 4D / 8D grouped):
+//! latency + reconstruction MSE on (a) isotropic vectors (the paper's
+//! protocol) and (b) block-correlated vectors (where mixing capacity
+//! shows up), plus the §5.7 marginal-distribution statistics that
+//! explain the MSE ordering.
+//!
+//! Run: `cargo bench --bench ablation_blocksize`
+
+use isoquant::quant::{mse, Stage1, Stage1Config, Variant};
+use isoquant::util::bench::{Bencher, Table};
+use isoquant::util::prng::Rng;
+
+fn correlated(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+    // energy concentrated on one coordinate per 4-block
+    let mut x = vec![0.0f32; n * d];
+    for r in 0..n {
+        for b in 0..d / 4 {
+            let base = rng.gaussian() as f32;
+            x[r * d + b * 4] = base;
+            x[r * d + b * 4 + 1] = 0.1 * base + 0.02 * rng.gaussian() as f32;
+            x[r * d + b * 4 + 2] = 0.05 * base + 0.02 * rng.gaussian() as f32;
+            x[r * d + b * 4 + 3] = 0.02 * base + 0.02 * rng.gaussian() as f32;
+        }
+    }
+    x
+}
+
+fn main() {
+    let d = 128;
+    let batch = 8192;
+    let bench = Bencher::default();
+    let mut rng = Rng::new(21);
+    let iso = rng.gaussian_vec_f32(batch * d);
+    let corr = correlated(&mut rng, batch, d);
+
+    println!("== block-size ablation @ d={d}, batch={batch}, f32 ==\n");
+    for bits in [2u8, 4] {
+        let mut t = Table::new(&[
+            "block",
+            "variant",
+            "us/batch",
+            "MSE (isotropic)",
+            "MSE (correlated)",
+        ]);
+        for (label, v) in [
+            ("2D", Variant::Planar2D),
+            ("3D", Variant::Rotor3D),
+            ("4D", Variant::IsoFull),
+            ("4D-fast", Variant::IsoFast),
+            ("8D", Variant::Grouped8D),
+        ] {
+            let s = Stage1::new(Stage1Config::new(v, d, bits));
+            let mut out = vec![0.0f32; batch * d];
+            let r = bench.run(label, || s.roundtrip_batch(&iso, &mut out, batch));
+            s.roundtrip_batch(&iso, &mut out, batch);
+            let m_iso = mse(&iso, &out);
+            s.roundtrip_batch(&corr, &mut out, batch);
+            let m_corr = mse(&corr, &out);
+            t.row(vec![
+                label.to_string(),
+                v.name().to_string(),
+                format!("{:.1}", r.median_us()),
+                format!("{m_iso:.5}"),
+                format!("{m_corr:.5}"),
+            ]);
+        }
+        println!("bits = {bits}:");
+        t.print();
+        println!();
+    }
+
+    // §5.7 marginal statistics: P(|z| > 0.9) for rotated coordinates
+    println!("== §5.7 marginal extremity of a rotated unit block coordinate ==\n");
+    let mut t = Table::new(&["k", "P(|z| > 0.9)", "P(|z| > 0.99)", "law"]);
+    let n = 200_000;
+    let mut rng = Rng::new(3);
+    // k=2: cos(theta); k=4: first coordinate of a Haar quaternion
+    let z2: Vec<f64> = (0..n).map(|_| rng.haar_angle().cos() as f64).collect();
+    let z4: Vec<f64> = (0..n).map(|_| rng.haar_quaternion()[0] as f64).collect();
+    for (k, z, law) in [
+        (2usize, &z2, "arcsine (eq. 37) — extreme-heavy"),
+        (4, &z4, "(2/pi)sqrt(1-z^2) (eq. 38) — center-heavy"),
+    ] {
+        let p90 = z.iter().filter(|v| v.abs() > 0.9).count() as f64 / n as f64;
+        let p99 = z.iter().filter(|v| v.abs() > 0.99).count() as f64 / n as f64;
+        t.row(vec![
+            k.to_string(),
+            format!("{p90:.4}"),
+            format!("{p99:.4}"),
+            law.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nreading: 4D blocks put less mass at the quantizer's extremes (§5.7), which is\n\
+         why 4D MSE ≤ 3D MSE ≤ 2D MSE at equal bits on isotropic data, while the 8D\n\
+         grouped variant buys extra cross-block mixing on correlated data at ~2x the\n\
+         rotation cost."
+    );
+}

@@ -1,0 +1,76 @@
+//! End-to-end serving benchmark: tokens/s and step-latency breakdown of
+//! the full stack (PJRT decode + compressed KV cache + scheduler) across
+//! stage-1 variants and bit widths — the deployment-level counterpart of
+//! Table 2 (what the kernel speedups buy in a real decode loop).
+//!
+//! Requires `make artifacts`.  Skips (exit 0) when artifacts are absent
+//! so `cargo bench` stays green in a fresh checkout.
+//!
+//! Run: `cargo bench --bench e2e_serving`
+
+use isoquant::config::EngineConfig;
+use isoquant::coordinator::{Engine, Request};
+use isoquant::metrics::Counters;
+use isoquant::quant::Variant;
+use isoquant::runtime::ServingModel;
+use isoquant::util::bench::Table;
+use isoquant::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = isoquant::runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("e2e_serving: artifacts not built (run `make artifacts`) — skipping");
+        return Ok(());
+    }
+
+    println!("== end-to-end serving: variant x bits (8 requests, 16 new tokens) ==\n");
+    let mut t = Table::new(&[
+        "variant",
+        "bits",
+        "gen tok/s",
+        "decode p50 us",
+        "gather p50 us",
+        "append p50 us",
+        "kv ratio",
+    ]);
+    for variant in [Variant::Rotor3D, Variant::IsoFull, Variant::IsoFast, Variant::Planar2D] {
+        for bits in [2u8, 4] {
+            let model = ServingModel::load(&dir)?;
+            let vocab = model.meta.vocab;
+            let mut cfg = EngineConfig::default();
+            cfg.variant = variant;
+            cfg.bits = bits;
+            let mut engine = Engine::new(model, cfg)?;
+            let mut rng = Rng::new(77);
+            for i in 0..8 {
+                let plen = 8 + rng.below(24);
+                engine.submit(Request {
+                    id: i,
+                    prompt: (0..plen).map(|_| rng.below(vocab) as i32).collect(),
+                    max_new_tokens: 16,
+                });
+            }
+            let t0 = std::time::Instant::now();
+            engine.run_to_completion()?;
+            let wall = t0.elapsed().as_secs_f64();
+            let decoded = Counters::get(&engine.stats.counters.tokens_decoded);
+            t.row(vec![
+                variant.name().to_string(),
+                bits.to_string(),
+                format!("{:.1}", decoded as f64 / wall),
+                format!("{:.0}", engine.stats.decode_step.percentile(50.0)),
+                format!("{:.0}", engine.stats.gather.percentile(50.0)),
+                format!("{:.0}", engine.stats.append.percentile(50.0)),
+                format!("{:.1}x", engine.stats.counters.compression_ratio()),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nreading: the decode step (XLA executable) dominates on this CPU testbed; the\n\
+         stage-1 variant shows up in the gather/append columns — the fraction the paper's\n\
+         kernel-level speedups act on.  On an accelerator the model step shrinks and the\n\
+         gather fraction (and hence the IsoQuant advantage) grows."
+    );
+    Ok(())
+}

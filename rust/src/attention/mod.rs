@@ -1,0 +1,216 @@
+//! Native attention over (reconstructed) KV tensors plus the fidelity
+//! measures of §9.6: attention-logit preservation and inner-product error
+//! under KV compression.  The serving path runs attention inside the XLA
+//! executable; this native version exists for the fidelity experiments
+//! and as an independent cross-check of the HLO scorer.
+
+use crate::metrics;
+
+/// Single-query multi-head attention:
+///   q (H, dh), k (H, T, dh), v (H, T, dh) → (out (H, dh), logits (H, T))
+/// logits are scaled by 1/√dh, matching `model.attention_scorer`.
+pub fn attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    t: usize,
+    dh: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(q.len(), h * dh);
+    assert_eq!(k.len(), h * t * dh);
+    assert_eq!(v.len(), h * t * dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; h * dh];
+    let mut logits = vec![0.0f32; h * t];
+    let mut weights = vec![0.0f32; t];
+    for hh in 0..h {
+        let qh = &q[hh * dh..(hh + 1) * dh];
+        // logits
+        for tt in 0..t {
+            let kv = &k[hh * t * dh + tt * dh..][..dh];
+            let mut dot = 0.0f32;
+            for i in 0..dh {
+                dot += qh[i] * kv[i];
+            }
+            logits[hh * t + tt] = dot * scale;
+        }
+        // softmax
+        softmax_into(&logits[hh * t..(hh + 1) * t], &mut weights);
+        // weighted value sum
+        let oh = &mut out[hh * dh..(hh + 1) * dh];
+        for tt in 0..t {
+            let w = weights[tt];
+            if w == 0.0 {
+                continue;
+            }
+            let vv = &v[hh * t * dh + tt * dh..][..dh];
+            for i in 0..dh {
+                oh[i] += w * vv[i];
+            }
+        }
+    }
+    (out, logits)
+}
+
+/// Numerically stable softmax into a preallocated buffer.
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let mut m = f32::NEG_INFINITY;
+    for &l in logits {
+        m = m.max(l);
+    }
+    let mut sum = 0.0f32;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = (l - m).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Fidelity report comparing attention with exact vs compressed K/V
+/// (§9.6 items 2–3 made concrete).
+#[derive(Debug, Clone)]
+pub struct FidelityReport {
+    /// MSE of attention logits q·k/√dh
+    pub logit_mse: f64,
+    /// max |Δlogit|
+    pub logit_max_err: f64,
+    /// relative L2 error of the attention output
+    pub out_rel_l2: f64,
+    /// top-1 agreement of per-head attention argmax (which token gets
+    /// the most attention)
+    pub top1_attention: f64,
+    /// mean cosine similarity of attention outputs per head
+    pub out_cosine: f64,
+}
+
+/// Compare attention computed over exact (k, v) vs compressed (k̂, v̂).
+pub fn fidelity(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    k_hat: &[f32],
+    v_hat: &[f32],
+    h: usize,
+    t: usize,
+    dh: usize,
+) -> FidelityReport {
+    let (out_a, log_a) = attend(q, k, v, h, t, dh);
+    let (out_b, log_b) = attend(q, k_hat, v_hat, h, t, dh);
+    let mut max_err = 0.0f64;
+    for (&a, &b) in log_a.iter().zip(&log_b) {
+        max_err = max_err.max(((a - b) as f64).abs());
+    }
+    let mut cos = 0.0f64;
+    for hh in 0..h {
+        cos += metrics::cosine(
+            &out_a[hh * dh..(hh + 1) * dh],
+            &out_b[hh * dh..(hh + 1) * dh],
+        );
+    }
+    FidelityReport {
+        logit_mse: metrics::mse(&log_a, &log_b),
+        logit_max_err: max_err,
+        out_rel_l2: metrics::rel_l2(&out_a, &out_b),
+        top1_attention: metrics::top1_agreement(&log_a, &log_b, t),
+        out_cosine: cos / h as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Stage1, Stage1Config, Variant};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut out = vec![0.0f32; 5];
+        softmax_into(&[1.0, 2.0, 3.0, -1.0, 0.0], &mut out);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(out.iter().all(|&w| w > 0.0));
+        // monotone in logits
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut out = vec![0.0f32; 3];
+        softmax_into(&[1e4, 1e4 - 1.0, -1e4], &mut out);
+        assert!(out.iter().all(|w| w.is_finite()));
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn attend_uniform_when_logits_equal() {
+        // identical keys → uniform attention → output = mean of values
+        let (h, t, dh) = (1usize, 4usize, 2usize);
+        let q = vec![1.0f32, 0.0];
+        let k = vec![0.0f32; h * t * dh]; // all-zero keys → equal logits
+        let mut v = vec![0.0f32; h * t * dh];
+        for tt in 0..t {
+            v[tt * dh] = tt as f32;
+        }
+        let (out, logits) = attend(&q, &k, &v, h, t, dh);
+        assert!(logits.iter().all(|&l| l == 0.0));
+        assert!((out[0] - 1.5).abs() < 1e-6); // mean of 0,1,2,3
+        assert!(out[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn attend_selects_matching_key() {
+        // one key aligned with q and large → attention ≈ that value
+        let (h, t, dh) = (1usize, 3usize, 4usize);
+        let q = vec![10.0f32, 0.0, 0.0, 0.0];
+        let mut k = vec![0.0f32; t * dh];
+        k[1 * dh] = 10.0; // token 1 matches
+        let mut v = vec![0.0f32; t * dh];
+        v[1 * dh + 2] = 7.0;
+        let (out, _) = attend(&q, &k, &v, h, t, dh);
+        assert!((out[2] - 7.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn fidelity_perfect_when_uncompressed() {
+        let mut rng = Rng::new(1);
+        let (h, t, dh) = (4usize, 16usize, 64usize);
+        let q = rng.gaussian_vec_f32(h * dh);
+        let k = rng.gaussian_vec_f32(h * t * dh);
+        let v = rng.gaussian_vec_f32(h * t * dh);
+        let rep = fidelity(&q, &k, &v, &k, &v, h, t, dh);
+        assert_eq!(rep.logit_mse, 0.0);
+        assert_eq!(rep.out_rel_l2, 0.0);
+        assert_eq!(rep.top1_attention, 1.0);
+        assert!((rep.out_cosine - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fidelity_degrades_gracefully_with_bits() {
+        // compressing K/V with stage-1 at 4 bits must keep logits close;
+        // 2 bits strictly worse than 4 bits
+        let mut rng = Rng::new(2);
+        let (h, t, dh) = (4usize, 32usize, 64usize);
+        let q = rng.gaussian_vec_f32(h * dh);
+        let k = rng.gaussian_vec_f32(h * t * dh);
+        let v = rng.gaussian_vec_f32(h * t * dh);
+        let mut reports = Vec::new();
+        for bits in [2u8, 4] {
+            let s = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, bits));
+            let mut k_hat = vec![0.0f32; k.len()];
+            let mut v_hat = vec![0.0f32; v.len()];
+            s.roundtrip_batch(&k, &mut k_hat, h * t);
+            s.roundtrip_batch(&v, &mut v_hat, h * t);
+            reports.push(fidelity(&q, &k, &v, &k_hat, &v_hat, h, t, dh));
+        }
+        assert!(reports[1].logit_mse < reports[0].logit_mse);
+        assert!(reports[1].out_rel_l2 < 0.35, "{:?}", reports[1]);
+        assert!(reports[1].out_cosine > 0.9);
+    }
+}

@@ -1,0 +1,277 @@
+//! CLI subcommand implementations for the `isoquant` binary.
+
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::EngineConfig;
+use crate::coordinator::Engine;
+use crate::quant::{cost, mse, QuantKind, Stage1, Stage1Config, Variant};
+use crate::runtime::{self, HostTensor, Runtime, ServingModel};
+use crate::util::bench::Table;
+use crate::util::cli::Parser;
+use crate::util::prng::Rng;
+
+fn parse_or_usage(p: &Parser, args: &[String]) -> Result<Option<crate::util::cli::Args>> {
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", p.usage());
+        return Ok(None);
+    }
+    Ok(Some(p.parse(args)?))
+}
+
+/// `isoquant compress` — one-shot stage-1 compression demo.
+pub fn compress(args: &[String]) -> Result<()> {
+    let p = Parser::new("isoquant compress", "stage-1 compression demo on synthetic vectors")
+        .opt("variant", "iso-full", "iso-full | iso-fast | iso-2d | rotor | dense | iso-8d")
+        .opt("dim", "128", "vector dimension d")
+        .opt("bits", "4", "bit width (2-4)")
+        .opt("batch", "8192", "number of vectors")
+        .opt("seed", "0", "data seed")
+        .flag("uniform", "use the uniform quantizer instead of Lloyd-Max");
+    let Some(a) = parse_or_usage(&p, args)? else {
+        return Ok(());
+    };
+    let variant = Variant::from_name(a.get("variant").unwrap())?;
+    let d = a.get_usize("dim")?;
+    let bits = a.get_usize("bits")? as u8;
+    let n = a.get_usize("batch")?;
+    let mut cfg = Stage1Config::new(variant, d, bits);
+    if a.has_flag("uniform") {
+        cfg.quant = QuantKind::Uniform;
+    }
+    let stage = Stage1::new(cfg);
+    let mut rng = Rng::new(a.get_u64("seed")?);
+    let x = rng.gaussian_vec_f32(n * d);
+    let mut out = vec![0.0f32; n * d];
+    let t0 = std::time::Instant::now();
+    stage.roundtrip_batch(&x, &mut out, n);
+    let dt = t0.elapsed();
+    let power = x.iter().map(|&v| (v * v) as f64).sum::<f64>() / x.len() as f64;
+    let e = mse(&x, &out);
+    println!("variant         : {}", variant.name());
+    println!("d x batch       : {d} x {n}");
+    println!("bits            : {bits}");
+    println!("mse             : {e:.6}");
+    println!("relative mse    : {:.4}%", 100.0 * e / power);
+    println!("compressed      : {} B/vector (from {} B)", stage.encoded_len(), d * 4);
+    println!(
+        "fused roundtrip : {:.1} us/batch ({:.1} ns/vector)",
+        dt.as_secs_f64() * 1e6,
+        dt.as_secs_f64() * 1e9 / n as f64
+    );
+    Ok(())
+}
+
+/// `isoquant table1` — the paper's complexity model.
+pub fn table1(args: &[String]) -> Result<()> {
+    let p = Parser::new("isoquant table1", "print the paper's Table 1 complexity model")
+        .opt("dim", "128", "head dimension d");
+    let Some(a) = parse_or_usage(&p, args)? else {
+        return Ok(());
+    };
+    let d = a.get_usize("dim")?;
+    println!("Forward rotation complexity at d = {d} (paper Table 1):\n");
+    let mut t = Table::new(&["Method", "Block Structure", "Params", "FMAs"]);
+    for row in cost::table1(d) {
+        t.row(vec![
+            row.method.to_string(),
+            row.block_structure,
+            row.params.to_string(),
+            row.fmas.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// `isoquant sweep` — quick latency/MSE sweep (the full 18-setting Table 2
+/// regeneration lives in `cargo bench --bench table2_sweep`).
+pub fn sweep(args: &[String]) -> Result<()> {
+    let p = Parser::new("isoquant sweep", "quick latency/MSE sweep across variants")
+        .opt("dim", "128", "vector dimension")
+        .opt("bits", "4", "bit width")
+        .opt("batch", "8192", "batch size");
+    let Some(a) = parse_or_usage(&p, args)? else {
+        return Ok(());
+    };
+    let d = a.get_usize("dim")?;
+    let bits = a.get_usize("bits")? as u8;
+    let n = a.get_usize("batch")?;
+    let mut rng = Rng::new(1);
+    let x = rng.gaussian_vec_f32(n * d);
+    let mut out = vec![0.0f32; n * d];
+    let bench = crate::util::bench::Bencher::quick();
+    let mut t = Table::new(&["variant", "median us/batch", "MSE", "speedup vs rotor"]);
+    let mut rotor_us = 0.0;
+    let configs = [
+        ("rotorquant", Stage1Config::new(Variant::Rotor3D, d, bits)),
+        (
+            "rotor-opt",
+            Stage1Config::new(Variant::Rotor3D, d, bits)
+                .with_rotor_impl(crate::quant::pipeline::RotorImpl::OddIntermediate),
+        ),
+        ("iso-full", Stage1Config::new(Variant::IsoFull, d, bits)),
+        ("iso-fast", Stage1Config::new(Variant::IsoFast, d, bits)),
+        ("iso-2d", Stage1Config::new(Variant::Planar2D, d, bits)),
+    ];
+    for (name, cfg) in configs {
+        let s = Stage1::new(cfg);
+        let r = bench.run(name, || {
+            s.roundtrip_batch(&x, &mut out, n);
+        });
+        s.roundtrip_batch(&x, &mut out, n);
+        let e = mse(&x, &out);
+        if name == "rotorquant" {
+            rotor_us = r.median_us();
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", r.median_us()),
+            format!("{e:.6}"),
+            format!("{:.2}x", rotor_us / r.median_us()),
+        ]);
+    }
+    println!("d={d} bits={bits} batch={n} (f32, Lloyd-Max):\n");
+    t.print();
+    Ok(())
+}
+
+/// `isoquant inspect-artifacts` — print the AOT manifest.
+pub fn inspect_artifacts(args: &[String]) -> Result<()> {
+    let p = Parser::new("isoquant inspect-artifacts", "print the artifact manifest")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let Some(a) = parse_or_usage(&p, args)? else {
+        return Ok(());
+    };
+    let dir = Path::new(a.get("artifacts").unwrap());
+    let m = runtime::Manifest::load(dir)?;
+    println!(
+        "model: {} params, {} layers, {} heads x d_head {}, vocab {}, max_seq {}, serve batch {}",
+        m.model.n_params,
+        m.model.n_layers,
+        m.model.n_heads,
+        m.model.d_head,
+        m.model.vocab,
+        m.model.max_seq,
+        m.model.serve_batch
+    );
+    let mut t = Table::new(&["artifact", "file", "inputs", "kind"]);
+    for a in &m.artifacts {
+        t.row(vec![
+            a.name.clone(),
+            a.file.clone(),
+            a.inputs.len().to_string(),
+            a.meta.get("kind").cloned().unwrap_or_default(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// `isoquant selfcheck` — cross-language parity: the native Rust stage-1
+/// pipeline must match the AOT-lowered Pallas/HLO graphs run under PJRT.
+pub fn selfcheck(args: &[String]) -> Result<()> {
+    let p = Parser::new(
+        "isoquant selfcheck",
+        "native stage-1 vs AOT Pallas/HLO parity via PJRT",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .opt("tol", "2e-5", "max |Δ| tolerance");
+    let Some(a) = parse_or_usage(&p, args)? else {
+        return Ok(());
+    };
+    let dir = Path::new(a.get("artifacts").unwrap());
+    let tol: f64 = a.get_f64("tol")?;
+    let mut rt = Runtime::load(dir)?;
+    println!("platform: {}", rt.platform());
+    let specs: Vec<_> = rt.manifest.stage1_artifacts().into_iter().cloned().collect();
+    if specs.is_empty() {
+        bail!("no stage1 artifacts in manifest — run `make artifacts`");
+    }
+    let mut failures = 0;
+    for spec in specs {
+        let variant = Variant::from_name(
+            spec.meta.get("variant").context("artifact missing variant")?,
+        )?;
+        let d = spec.meta_usize("d").context("missing d")?;
+        let bits = spec.meta_usize("bits").context("missing bits")? as u8;
+        let batch = spec.meta_usize("batch").context("missing batch")?;
+        let cfg = Stage1Config::new(variant, d, bits);
+        let stage = Stage1::new(cfg);
+        // same inputs to both paths
+        let mut rng = Rng::new(0xA0A0 + d as u64 + bits as u64);
+        let x = rng.gaussian_vec_f32(batch * d);
+        let mut native = vec![0.0f32; batch * d];
+        stage.roundtrip_batch(&x, &mut native, batch);
+
+        let mut inputs = vec![HostTensor::F32(x.clone(), vec![batch, d])];
+        for t in stage.bank.to_hlo_inputs() {
+            inputs.push(HostTensor::F32(t.as_f32()?, t.shape.clone()));
+        }
+        let outs = rt.run_f32(&spec.name, &inputs)?;
+        let hlo = &outs[0];
+        let mut worst = 0.0f64;
+        for (i, (&n, &h)) in native.iter().zip(hlo).enumerate() {
+            let delta = ((n - h) as f64).abs();
+            if delta > worst {
+                worst = delta;
+            }
+            if delta > tol {
+                failures += 1;
+                if failures <= 3 {
+                    eprintln!("  {}: idx {i}: native {n} vs hlo {h}", spec.name);
+                }
+            }
+        }
+        println!(
+            "{:28} native-vs-HLO max|Δ| = {worst:.2e} {}",
+            spec.name,
+            if worst <= tol { "OK" } else { "FAIL" }
+        );
+    }
+    if failures > 0 {
+        bail!("{failures} elements exceeded tolerance {tol}");
+    }
+    println!("selfcheck OK");
+    Ok(())
+}
+
+/// `isoquant serve` — boot the serving engine on TCP.
+pub fn serve(args: &[String]) -> Result<()> {
+    let p = Parser::new("isoquant serve", "serve the AOT model with compressed KV cache")
+        .opt("config", "", "optional TOML config path")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("bind", "", "bind address (overrides config)")
+        .opt("variant", "", "stage-1 variant (overrides config)")
+        .opt("bits", "", "bit width (overrides config)");
+    let Some(a) = parse_or_usage(&p, args)? else {
+        return Ok(());
+    };
+    let mut cfg = match a.get("config") {
+        Some("") | None => EngineConfig::default(),
+        Some(path) => EngineConfig::load(Path::new(path))?,
+    };
+    cfg.artifacts_dir = a.get("artifacts").unwrap_or("artifacts").to_string();
+    if let Some(b) = a.get("bind") {
+        if !b.is_empty() {
+            cfg.bind = b.to_string();
+        }
+    }
+    if let Some(v) = a.get("variant") {
+        if !v.is_empty() {
+            cfg.variant = Variant::from_name(v)?;
+        }
+    }
+    if let Some(b) = a.get("bits") {
+        if !b.is_empty() {
+            cfg.bits = b.parse()?;
+        }
+    }
+    let model = ServingModel::load(Path::new(&cfg.artifacts_dir))?;
+    let engine = Engine::new(model, cfg.clone())?;
+    let stop = Arc::new(AtomicBool::new(false));
+    crate::server::serve(engine, &cfg.bind, stop)
+}

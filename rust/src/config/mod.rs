@@ -1,0 +1,292 @@
+//! Engine configuration: a minimal TOML-subset parser (sections,
+//! `key = value` with string/int/float/bool values, `#` comments) and the
+//! typed schema consumed by the CLI and the serving engine.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::params::Variant;
+use crate::quant::scalar::QuantKind;
+
+/// Raw parsed config: section → key → value.
+#[derive(Debug, Default, Clone)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let val = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<RawConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        RawConfig::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .map(|i| i as usize)
+                .with_context(|| format!("[{section}] {key} must be an integer")),
+        }
+    }
+
+    fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str().map(|s| s.to_string()))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_float()
+                .with_context(|| format!("[{section}] {key} must be a number")),
+        }
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(q) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(q.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare strings allowed (variant names etc.)
+    if s.chars().all(|c| c.is_alphanumeric() || "-_.".contains(c)) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+// ---------------------------------------------------------------------
+// typed engine config
+// ---------------------------------------------------------------------
+
+/// Everything the serving engine needs to boot.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// directory with manifest.json / *.hlo.txt / weights.bin
+    pub artifacts_dir: String,
+    /// stage-1 variant used for KV compression
+    pub variant: Variant,
+    pub bits: u8,
+    pub quant: QuantKind,
+    /// tokens per KV page
+    pub page_tokens: usize,
+    /// max decode batch (must divide into the compiled artifact batch)
+    pub max_batch: usize,
+    /// batching window: how long the batcher waits to fill a batch
+    pub batch_window_us: u64,
+    pub max_seq_len: usize,
+    pub max_new_tokens_default: usize,
+    /// TCP bind address for `isoquant serve`
+    pub bind: String,
+    /// stage-2 residual correction (0 = off, else projection dim)
+    pub residual_m: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".to_string(),
+            variant: Variant::IsoFull,
+            bits: 4,
+            quant: QuantKind::Lloyd,
+            page_tokens: 16,
+            max_batch: 4,
+            batch_window_us: 2_000,
+            max_seq_len: 256,
+            max_new_tokens_default: 32,
+            bind: "127.0.0.1:7439".to_string(),
+            residual_m: 0,
+            seed: 0x150_0541,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_raw(raw: &RawConfig) -> Result<EngineConfig> {
+        let d = EngineConfig::default();
+        let variant = Variant::from_name(&raw.str_or("engine", "variant", "iso-full"))?;
+        let quant = match raw.str_or("engine", "quantizer", "lloyd").as_str() {
+            "lloyd" => QuantKind::Lloyd,
+            "uniform" => QuantKind::Uniform,
+            other => bail!("unknown quantizer {other:?}"),
+        };
+        let bits = raw.usize_or("engine", "bits", d.bits as usize)? as u8;
+        if !(2..=4).contains(&bits) {
+            bail!("bits must be 2..=4, got {bits}");
+        }
+        Ok(EngineConfig {
+            artifacts_dir: raw.str_or("engine", "artifacts_dir", &d.artifacts_dir),
+            variant,
+            bits,
+            quant,
+            page_tokens: raw.usize_or("engine", "page_tokens", d.page_tokens)?,
+            max_batch: raw.usize_or("engine", "max_batch", d.max_batch)?,
+            batch_window_us: raw.usize_or("engine", "batch_window_us", d.batch_window_us as usize)?
+                as u64,
+            max_seq_len: raw.usize_or("engine", "max_seq_len", d.max_seq_len)?,
+            max_new_tokens_default: raw.usize_or(
+                "engine",
+                "max_new_tokens_default",
+                d.max_new_tokens_default,
+            )?,
+            bind: raw.str_or("server", "bind", &d.bind),
+            residual_m: raw.usize_or("engine", "residual_m", d.residual_m)?,
+            seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<EngineConfig> {
+        EngineConfig::from_raw(&RawConfig::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# engine settings
+[engine]
+variant = "iso-fast"
+bits = 2
+quantizer = lloyd
+page_tokens = 32
+max_batch = 4        # fixed by the compiled artifact
+
+[server]
+bind = "0.0.0.0:9000"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("engine", "bits").unwrap().as_int(), Some(2));
+        assert_eq!(
+            raw.get("engine", "variant").unwrap().as_str(),
+            Some("iso-fast")
+        );
+        let cfg = EngineConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.variant, Variant::IsoFast);
+        assert_eq!(cfg.bits, 2);
+        assert_eq!(cfg.page_tokens, 32);
+        assert_eq!(cfg.bind, "0.0.0.0:9000");
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.variant, Variant::IsoFull);
+        assert_eq!(cfg.bits, 4);
+        assert_eq!(cfg.page_tokens, 16);
+    }
+
+    #[test]
+    fn value_types() {
+        let raw = RawConfig::parse("[a]\nx = 1\ny = 2.5\nz = true\ns = \"hi\"").unwrap();
+        assert_eq!(raw.get("a", "x").unwrap().as_int(), Some(1));
+        assert_eq!(raw.get("a", "y").unwrap().as_float(), Some(2.5));
+        assert_eq!(raw.get("a", "z").unwrap().as_bool(), Some(true));
+        assert_eq!(raw.get("a", "s").unwrap().as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        let raw = RawConfig::parse("[engine]\nbits = 9").unwrap();
+        assert!(EngineConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_line() {
+        assert!(RawConfig::parse("[a]\nnot a kv line").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let raw = RawConfig::parse("\n# c\n[s]\n# c2\nk = 1 # inline\n\n").unwrap();
+        assert_eq!(raw.get("s", "k").unwrap().as_int(), Some(1));
+    }
+}

@@ -1,0 +1,120 @@
+//! Dynamic batcher: groups incoming requests into admission batches,
+//! trading a bounded wait (`window`) for fuller batches — the classic
+//! throughput/latency knob of serving systems.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Debug)]
+pub struct Batcher {
+    window: Duration,
+    max_batch: usize,
+    queue: VecDeque<(Request, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(window: Duration, max_batch: usize) -> Batcher {
+        assert!(max_batch > 0);
+        Batcher {
+            window,
+            max_batch,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.submit_at(req, Instant::now());
+    }
+
+    pub fn submit_at(&mut self, req: Request, now: Instant) {
+        self.queue.push_back((req, now));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Returns a batch when (a) `max_batch` requests are waiting, or
+    /// (b) the oldest request has waited ≥ `window`.  Otherwise `None`
+    /// (caller keeps decoding and polls again).
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now.duration_since(self.queue.front().unwrap().1);
+        if self.queue.len() >= self.max_batch || oldest_wait >= self.window {
+            let n = self.queue.len().min(self.max_batch);
+            Some(self.queue.drain(..n).map(|(r, _)| r).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Pull up to `n` requests immediately (used when lanes free up
+    /// mid-flight — continuous batching does not wait for the window).
+    pub fn take_up_to(&mut self, n: usize) -> Vec<Request> {
+        let n = n.min(self.queue.len());
+        self.queue.drain(..n).map(|(r, _)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let mut b = Batcher::new(Duration::from_millis(100), 2);
+        let t0 = Instant::now();
+        b.submit_at(req(1), t0);
+        assert!(b.poll(t0).is_none(), "single request waits for window");
+        b.submit_at(req(2), t0);
+        let batch = b.poll(t0).expect("full batch releases");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn window_expiry_releases_partial_batch() {
+        let mut b = Batcher::new(Duration::from_millis(10), 8);
+        let t0 = Instant::now();
+        b.submit_at(req(1), t0);
+        assert!(b.poll(t0 + Duration::from_millis(5)).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(11)).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn overflow_stays_queued() {
+        let mut b = Batcher::new(Duration::from_millis(0), 2);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.submit_at(req(i), t0);
+        }
+        assert_eq!(b.poll(t0).unwrap().len(), 2);
+        assert_eq!(b.pending(), 3);
+        assert_eq!(b.take_up_to(10).len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(Duration::from_millis(0), 4);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.submit_at(req(i), t0);
+        }
+        let ids: Vec<u64> = b.poll(t0).unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,400 @@
+//! The serving engine: Orca/vLLM-style iteration-level scheduling over a
+//! fixed-lane batch, chunked prefill, greedy decode, and a compressed KV
+//! cache on the critical path.
+//!
+//! One `step()` = one scheduler iteration:
+//!   1. admit waiting requests into free lanes (admission-controlled by
+//!      the KV page pool),
+//!   2. if any lane is mid-prefill → run one batched prefill chunk
+//!      (lanes not prefilling carry dummy tokens; their outputs are
+//!      discarded),
+//!   3. else → run one batched decode step at per-lane positions,
+//! compressing each produced token's K/V into the paged cache and
+//! reconstructing per-lane caches for the next model call.  IsoQuant
+//! stage-1 therefore runs on *every* token append and *every* cache
+//! gather — the deployment pattern the paper's kernel-latency argument
+//! targets.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::request::{Completion, FinishReason, Request, Timing};
+use crate::config::EngineConfig;
+use crate::kvcache::{CacheManager, PageConfig, SeqId};
+use crate::metrics::{argmax, Counters, LatencyRecorder};
+use crate::quant::{Stage1, Stage1Config};
+use crate::runtime::ServingModel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Prefill { consumed: usize },
+    Decode,
+}
+
+struct ActiveSeq {
+    req: Request,
+    timing: Timing,
+    seq: SeqId,
+    /// tokens whose K/V are in the cache
+    pos: usize,
+    generated: Vec<i32>,
+    phase: Phase,
+    /// token to feed at the next decode step
+    last_token: i32,
+}
+
+enum Lane {
+    Free,
+    Active(Box<ActiveSeq>),
+}
+
+/// Step-level latency breakdown.
+#[derive(Default)]
+pub struct EngineStats {
+    pub decode_step: LatencyRecorder,
+    pub prefill_step: LatencyRecorder,
+    pub gather: LatencyRecorder,
+    pub append: LatencyRecorder,
+    pub counters: Counters,
+    pub steps: u64,
+}
+
+pub struct Engine {
+    pub model: ServingModel,
+    pub cache: CacheManager,
+    pub cfg: EngineConfig,
+    lanes: Vec<Lane>,
+    waiting: VecDeque<(Request, Timing)>,
+    completions: Vec<Completion>,
+    next_seq: SeqId,
+    // reused (L, B, H, T, dh) buffers
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(model: ServingModel, cfg: EngineConfig) -> Result<Engine> {
+        let m = model.meta.clone();
+        let stage1 = Stage1::new({
+            let mut c = Stage1Config::new(cfg.variant, m.d_head, cfg.bits);
+            c.quant = cfg.quant;
+            c.seed = cfg.seed;
+            c
+        });
+        let page_cfg = PageConfig {
+            tokens_per_page: cfg.page_tokens,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            d_head: m.d_head,
+            encoded_len: stage1.encoded_len(),
+        };
+        // pool sized for all lanes at max_seq plus 25% headroom
+        let max_pages = (m.serve_batch * m.max_seq.div_ceil(cfg.page_tokens)) * 5 / 4 + 1;
+        let cache = CacheManager::new(stage1, page_cfg, max_pages);
+        let lanes = (0..m.serve_batch).map(|_| Lane::Free).collect();
+        let cache_numel = model.cache_numel();
+        Ok(Engine {
+            model,
+            cache,
+            cfg,
+            lanes,
+            waiting: VecDeque::new(),
+            completions: Vec::new(),
+            next_seq: 1,
+            k_buf: vec![0.0; cache_numel],
+            v_buf: vec![0.0; cache_numel],
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Queue a request.  Length validation happens at admission.
+    pub fn submit(&mut self, req: Request) {
+        Counters::bump(&self.stats.counters.requests, 1);
+        self.waiting.push_back((req, Timing::new()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter(|l| matches!(l, Lane::Active(_)))
+            .count()
+    }
+
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// One scheduler iteration.  Returns false when fully idle.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit()?;
+        let any_prefill = self.lanes.iter().any(
+            |l| matches!(l, Lane::Active(a) if matches!(a.phase, Phase::Prefill { .. })),
+        );
+        if any_prefill {
+            self.step_prefill()?;
+            self.stats.steps += 1;
+            return Ok(true);
+        }
+        if self.lanes.iter().any(|l| matches!(l, Lane::Active(_))) {
+            self.step_decode()?;
+            self.stats.steps += 1;
+            return Ok(true);
+        }
+        Ok(!self.waiting.is_empty())
+    }
+
+    /// Drive until all submitted work completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.step()? {}
+        Ok(self.take_completions())
+    }
+
+    // ------------------------------------------------------------------
+
+    fn admit(&mut self) -> Result<()> {
+        let max_seq = self.model.meta.max_seq;
+        while let Some(free_lane) = self.lanes.iter().position(|l| matches!(l, Lane::Free)) {
+            let Some((req, mut timing)) = self.waiting.pop_front() else {
+                break;
+            };
+            let total = req.prompt.len() + req.max_new_tokens;
+            if req.prompt.is_empty() || total > max_seq {
+                self.completions.push(Completion {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    prompt_len: req.prompt.len(),
+                    timing,
+                    finish: FinishReason::Rejected,
+                });
+                continue;
+            }
+            if !self.cache.can_admit(total) {
+                // backpressure: requeue and stop admitting
+                self.waiting.push_front((req, timing));
+                break;
+            }
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.cache.start_seq(seq)?;
+            timing.admitted = Some(Instant::now());
+            self.lanes[free_lane] = Lane::Active(Box::new(ActiveSeq {
+                last_token: *req.prompt.first().unwrap(),
+                req,
+                timing,
+                seq,
+                pos: 0,
+                generated: Vec::new(),
+                phase: Phase::Prefill { consumed: 0 },
+            }));
+        }
+        Ok(())
+    }
+
+    fn gather_lanes(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let b = self.model.batch();
+        let t_max = self.model.meta.max_seq;
+        self.k_buf.fill(0.0);
+        self.v_buf.fill(0.0);
+        for lane in 0..b {
+            if let Lane::Active(a) = &self.lanes[lane] {
+                self.cache.gather_into_batch(
+                    a.seq,
+                    lane,
+                    b,
+                    t_max,
+                    &mut self.k_buf,
+                    &mut self.v_buf,
+                )?;
+            }
+        }
+        self.stats.gather.record(t0.elapsed());
+        Ok(())
+    }
+
+    /// Append token `j` of a (L, B, H, P, dh)-shaped chunk (P = 1 for
+    /// decode outputs) for batch lane `lane` to sequence `seq`.
+    fn append_from_chunk(
+        &mut self,
+        seq: SeqId,
+        lane: usize,
+        k_chunk: &[f32],
+        v_chunk: &[f32],
+        p: usize,
+        j: usize,
+    ) -> Result<()> {
+        let m = self.model.meta.clone();
+        let (l, b, h, dh) = (m.n_layers, m.serve_batch, m.n_heads, m.d_head);
+        debug_assert_eq!(k_chunk.len(), l * b * h * p * dh);
+        let mut k_t = vec![0.0f32; l * h * dh];
+        let mut v_t = vec![0.0f32; l * h * dh];
+        for layer in 0..l {
+            for head in 0..h {
+                let src = ((((layer * b) + lane) * h + head) * p + j) * dh;
+                let dst = (layer * h + head) * dh;
+                k_t[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
+                v_t[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
+            }
+        }
+        let t0 = Instant::now();
+        self.cache.append_token(seq, &k_t, &v_t)?;
+        self.stats.append.record(t0.elapsed());
+        let (c, u) = self.cache.slot_bytes();
+        Counters::bump(&self.stats.counters.bytes_compressed, c as u64);
+        Counters::bump(&self.stats.counters.bytes_uncompressed, u as u64);
+        Ok(())
+    }
+
+    fn step_prefill(&mut self) -> Result<()> {
+        let b = self.model.batch();
+        let p = self.model.meta.prefill_chunk;
+        let vocab = self.model.meta.vocab;
+        self.gather_lanes()?;
+        let mut toks = vec![0i32; b * p];
+        let mut pos0 = vec![0i32; b];
+        let mut chunk_len = vec![0usize; b];
+        for lane in 0..b {
+            if let Lane::Active(a) = &self.lanes[lane] {
+                if let Phase::Prefill { consumed } = a.phase {
+                    let c = (a.req.prompt.len() - consumed).min(p);
+                    for j in 0..c {
+                        toks[lane * p + j] = a.req.prompt[consumed + j];
+                    }
+                    pos0[lane] = a.pos as i32;
+                    chunk_len[lane] = c;
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let out = self
+            .model
+            .prefill_chunk(&toks, &pos0, &self.k_buf, &self.v_buf)?;
+        self.stats.prefill_step.record(t0.elapsed());
+
+        for lane in 0..b {
+            let c = chunk_len[lane];
+            if c == 0 {
+                continue;
+            }
+            let (seq, consumed) = match &self.lanes[lane] {
+                Lane::Active(a) => match a.phase {
+                    Phase::Prefill { consumed } => (a.seq, consumed),
+                    _ => unreachable!(),
+                },
+                _ => unreachable!(),
+            };
+            for j in 0..c {
+                self.append_from_chunk(seq, lane, &out.k_new, &out.v_new, p, j)?;
+            }
+            Counters::bump(&self.stats.counters.tokens_prefilled, c as u64);
+            let a = match &mut self.lanes[lane] {
+                Lane::Active(a) => a,
+                _ => unreachable!(),
+            };
+            a.pos += c;
+            let done = consumed + c >= a.req.prompt.len();
+            if done {
+                // sample the first generated token from the logits at the
+                // last real prompt position of this chunk
+                let row = &out.logits[(lane * p + (c - 1)) * vocab..][..vocab];
+                let tok = argmax(row) as i32;
+                a.timing.first_token = Some(Instant::now());
+                a.generated.push(tok);
+                a.last_token = tok;
+                a.phase = Phase::Decode;
+                Counters::bump(&self.stats.counters.tokens_decoded, 1);
+                self.maybe_finish(lane);
+            } else {
+                a.phase = Phase::Prefill {
+                    consumed: consumed + c,
+                };
+            }
+        }
+        Ok(())
+    }
+
+    fn step_decode(&mut self) -> Result<()> {
+        let b = self.model.batch();
+        let vocab = self.model.meta.vocab;
+        self.gather_lanes()?;
+        let mut toks = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut active = vec![false; b];
+        for lane in 0..b {
+            if let Lane::Active(a) = &self.lanes[lane] {
+                toks[lane] = a.last_token;
+                pos[lane] = a.pos as i32;
+                active[lane] = true;
+            }
+        }
+        let t0 = Instant::now();
+        let out = self.model.decode_step(&toks, &pos, &self.k_buf, &self.v_buf)?;
+        self.stats.decode_step.record(t0.elapsed());
+
+        for lane in 0..b {
+            if !active[lane] {
+                continue;
+            }
+            let seq = match &self.lanes[lane] {
+                Lane::Active(a) => a.seq,
+                _ => unreachable!(),
+            };
+            // the processed token's K/V enters the cache
+            self.append_from_chunk(seq, lane, &out.k_new, &out.v_new, 1, 0)?;
+            let a = match &mut self.lanes[lane] {
+                Lane::Active(a) => a,
+                _ => unreachable!(),
+            };
+            a.pos += 1;
+            let row = &out.logits[lane * vocab..(lane + 1) * vocab];
+            let tok = argmax(row) as i32;
+            if a.timing.first_token.is_none() {
+                a.timing.first_token = Some(Instant::now());
+            }
+            a.generated.push(tok);
+            a.last_token = tok;
+            Counters::bump(&self.stats.counters.tokens_decoded, 1);
+            self.maybe_finish(lane);
+        }
+        Ok(())
+    }
+
+    fn maybe_finish(&mut self, lane: usize) {
+        let finish = {
+            let a = match &self.lanes[lane] {
+                Lane::Active(a) => a,
+                _ => return,
+            };
+            if a.generated.len() >= a.req.max_new_tokens {
+                Some(FinishReason::MaxTokens)
+            } else if a.pos + 1 >= self.model.meta.max_seq {
+                Some(FinishReason::ContextFull)
+            } else {
+                None
+            }
+        };
+        if let Some(reason) = finish {
+            let lane_state = std::mem::replace(&mut self.lanes[lane], Lane::Free);
+            let mut a = match lane_state {
+                Lane::Active(a) => a,
+                _ => unreachable!(),
+            };
+            a.timing.finished = Some(Instant::now());
+            self.cache.drop_seq(a.seq);
+            self.completions.push(Completion {
+                id: a.req.id,
+                tokens: a.generated,
+                prompt_len: a.req.prompt.len(),
+                timing: a.timing,
+                finish: reason,
+            });
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The serving coordinator (L3, the paper's deployment context):
+//! request types, dynamic batcher, and the iteration-level scheduling
+//! engine with compressed-KV decode.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+
+pub use batcher::Batcher;
+pub use engine::{Engine, EngineStats};
+pub use request::{Completion, FinishReason, Request, RequestId, Timing};

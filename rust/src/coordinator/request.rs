@@ -1,0 +1,87 @@
+//! Request types flowing through the serving engine.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A generation request (token ids in, token ids out — tokenization is
+//  out of scope for the reproduction; the E2E example drives the engine
+//  with synthetic token streams).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Lifecycle timestamps for latency accounting.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub submitted: Instant,
+    pub admitted: Option<Instant>,
+    pub first_token: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl Timing {
+    pub fn new() -> Timing {
+        Timing {
+            submitted: Instant::now(),
+            admitted: None,
+            first_token: None,
+            finished: None,
+        }
+    }
+
+    /// time-to-first-token in microseconds
+    pub fn ttft_us(&self) -> Option<f64> {
+        self.first_token
+            .map(|t| (t - self.submitted).as_secs_f64() * 1e6)
+    }
+
+    pub fn total_us(&self) -> Option<f64> {
+        self.finished
+            .map(|t| (t - self.submitted).as_secs_f64() * 1e6)
+    }
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Timing::new()
+    }
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub timing: Timing,
+    /// why generation stopped
+    pub finish: FinishReason,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    /// sequence hit the model's max_seq capacity
+    ContextFull,
+    /// rejected at admission (pool exhausted / prompt too long)
+    Rejected,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_fields() {
+        let mut t = Timing::new();
+        assert!(t.ttft_us().is_none());
+        t.first_token = Some(Instant::now());
+        t.finished = Some(Instant::now());
+        assert!(t.ttft_us().unwrap() >= 0.0);
+        assert!(t.total_us().unwrap() >= t.ttft_us().unwrap() * 0.5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Pooled page allocator with a hard capacity — the backpressure point
+//! of the serving engine (a full pool rejects admission rather than
+//! OOMing mid-decode).
+
+use anyhow::{bail, Result};
+
+use super::page::{Page, PageConfig};
+
+pub type PageId = u32;
+
+#[derive(Debug)]
+pub struct PageAllocator {
+    cfg: PageConfig,
+    pages: Vec<Page>,
+    free: Vec<PageId>,
+    max_pages: usize,
+}
+
+impl PageAllocator {
+    pub fn new(cfg: PageConfig, max_pages: usize) -> PageAllocator {
+        PageAllocator {
+            cfg,
+            pages: Vec::new(),
+            free: Vec::new(),
+            max_pages,
+        }
+    }
+
+    pub fn cfg(&self) -> &PageConfig {
+        &self.cfg
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.pages.len() - self.free.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_pages
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.max_pages - self.allocated()
+    }
+
+    /// Whether `n` more pages can be allocated (admission control).
+    pub fn can_alloc(&self, n: usize) -> bool {
+        self.free_count() >= n
+    }
+
+    pub fn alloc(&mut self) -> Result<PageId> {
+        if let Some(id) = self.free.pop() {
+            self.pages[id as usize].clear();
+            return Ok(id);
+        }
+        if self.pages.len() >= self.max_pages {
+            bail!(
+                "KV page pool exhausted ({} pages in use)",
+                self.pages.len()
+            );
+        }
+        self.pages.push(Page::new(&self.cfg));
+        Ok((self.pages.len() - 1) as PageId)
+    }
+
+    pub fn release(&mut self, id: PageId) {
+        debug_assert!((id as usize) < self.pages.len());
+        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        self.free.push(id);
+    }
+
+    pub fn page(&self, id: PageId) -> &Page {
+        &self.pages[id as usize]
+    }
+
+    pub fn page_mut(&mut self, id: PageId) -> &mut Page {
+        &mut self.pages[id as usize]
+    }
+
+    /// Bytes currently resident (all touched pages, free or not).
+    pub fn resident_bytes(&self) -> usize {
+        self.pages.len() * self.cfg.page_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(max: usize) -> PageAllocator {
+        PageAllocator::new(
+            PageConfig {
+                tokens_per_page: 4,
+                n_layers: 1,
+                n_heads: 1,
+                d_head: 8,
+                encoded_len: 8,
+            },
+            max,
+        )
+    }
+
+    #[test]
+    fn alloc_release_reuse() {
+        let mut a = mk(2);
+        let p0 = a.alloc().unwrap();
+        let p1 = a.alloc().unwrap();
+        assert_eq!(a.allocated(), 2);
+        assert!(a.alloc().is_err(), "pool must enforce capacity");
+        a.release(p0);
+        assert_eq!(a.allocated(), 1);
+        let p2 = a.alloc().unwrap();
+        assert_eq!(p2, p0, "freed page is reused");
+        let _ = p1;
+    }
+
+    #[test]
+    fn reused_pages_are_cleared() {
+        let mut a = mk(1);
+        let p = a.alloc().unwrap();
+        a.page_mut(p).data.fill(0xAB);
+        a.release(p);
+        let p2 = a.alloc().unwrap();
+        assert!(a.page(p2).data.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn can_alloc_accounting() {
+        let mut a = mk(3);
+        assert!(a.can_alloc(3));
+        let _p = a.alloc().unwrap();
+        assert!(a.can_alloc(2));
+        assert!(!a.can_alloc(3));
+    }
+}

@@ -1,0 +1,10 @@
+//! Paged, compressed KV cache (vLLM-style block tables over pooled pages
+//! whose contents are IsoQuant stage-1 encodings).
+
+pub mod allocator;
+pub mod manager;
+pub mod page;
+
+pub use allocator::{PageAllocator, PageId};
+pub use manager::{CacheManager, SeqId};
+pub use page::{Page, PageConfig};

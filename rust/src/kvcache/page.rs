@@ -1,0 +1,126 @@
+//! Compressed KV page: the unit of cache allocation.
+//!
+//! A page holds `tokens_per_page` token slots; each slot stores, for
+//! every (layer, head), the stage-1 encoding of the K and V head vectors
+//! (norm + packed codes, see `quant::pipeline::Stage1::encode`).  Pages
+//! are fixed-size byte arrays so the allocator can pool them.
+
+/// Geometry of the cached model + compression (fixed at engine boot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageConfig {
+    pub tokens_per_page: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    /// bytes per encoded head vector (`Stage1::encoded_len`)
+    pub encoded_len: usize,
+}
+
+impl PageConfig {
+    /// bytes per token slot: L × H × 2 (K and V) encoded vectors
+    pub fn slot_bytes(&self) -> usize {
+        self.n_layers * self.n_heads * 2 * self.encoded_len
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.tokens_per_page * self.slot_bytes()
+    }
+
+    /// byte offset of the (slot, layer, head, is_v) encoded vector
+    #[inline]
+    pub fn offset(&self, slot: usize, layer: usize, head: usize, is_v: bool) -> usize {
+        debug_assert!(slot < self.tokens_per_page);
+        debug_assert!(layer < self.n_layers);
+        debug_assert!(head < self.n_heads);
+        ((slot * self.n_layers + layer) * self.n_heads + head) * 2 * self.encoded_len
+            + if is_v { self.encoded_len } else { 0 }
+    }
+
+    /// uncompressed bytes per token slot (f32 K+V across layers/heads) —
+    /// used for the compression-ratio counter
+    pub fn slot_bytes_uncompressed(&self) -> usize {
+        self.n_layers * self.n_heads * 2 * self.d_head * 4
+    }
+}
+
+/// One fixed-size compressed page.
+#[derive(Clone, Debug)]
+pub struct Page {
+    pub data: Vec<u8>,
+}
+
+impl Page {
+    pub fn new(cfg: &PageConfig) -> Page {
+        Page {
+            data: vec![0u8; cfg.page_bytes()],
+        }
+    }
+
+    pub fn slot_mut(&mut self, cfg: &PageConfig, slot: usize, layer: usize, head: usize, is_v: bool) -> &mut [u8] {
+        let off = cfg.offset(slot, layer, head, is_v);
+        &mut self.data[off..off + cfg.encoded_len]
+    }
+
+    pub fn slot(&self, cfg: &PageConfig, slot: usize, layer: usize, head: usize, is_v: bool) -> &[u8] {
+        let off = cfg.offset(slot, layer, head, is_v);
+        &self.data[off..off + cfg.encoded_len]
+    }
+
+    /// Zero the page (reuse hygiene — stale codes must not leak between
+    /// sequences).
+    pub fn clear(&mut self) {
+        self.data.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PageConfig {
+        PageConfig {
+            tokens_per_page: 16,
+            n_layers: 2,
+            n_heads: 4,
+            d_head: 64,
+            encoded_len: 36, // e.g. 4-byte norm + 128 codes at 2 bits
+        }
+    }
+
+    #[test]
+    fn geometry() {
+        let c = cfg();
+        assert_eq!(c.slot_bytes(), 2 * 4 * 2 * 36);
+        assert_eq!(c.page_bytes(), 16 * c.slot_bytes());
+    }
+
+    #[test]
+    fn offsets_disjoint_and_in_bounds() {
+        let c = cfg();
+        let mut seen = std::collections::HashSet::new();
+        for slot in 0..c.tokens_per_page {
+            for l in 0..c.n_layers {
+                for h in 0..c.n_heads {
+                    for is_v in [false, true] {
+                        let off = c.offset(slot, l, h, is_v);
+                        assert!(off + c.encoded_len <= c.page_bytes());
+                        assert!(seen.insert(off), "offset {off} reused");
+                    }
+                }
+            }
+        }
+        // offsets tile the page exactly
+        assert_eq!(seen.len() * c.encoded_len, c.page_bytes());
+    }
+
+    #[test]
+    fn slot_roundtrip() {
+        let c = cfg();
+        let mut p = Page::new(&c);
+        p.slot_mut(&c, 3, 1, 2, true).copy_from_slice(&[7u8; 36]);
+        assert_eq!(p.slot(&c, 3, 1, 2, true), &[7u8; 36]);
+        assert_eq!(p.slot(&c, 3, 1, 2, false), &[0u8; 36]);
+        p.clear();
+        assert_eq!(p.slot(&c, 3, 1, 2, true), &[0u8; 36]);
+    }
+}

@@ -1,0 +1,29 @@
+//! # IsoQuant
+//!
+//! Full-stack reproduction of *IsoQuant: Hardware-Aligned SO(4) Isoclinic
+//! Rotations for LLM KV Cache Compression* (Ji, 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1** — fused Pallas kernels (`python/compile/kernels/`), AOT-lowered
+//!   to HLO text;
+//! * **L2** — JAX stage-1 pipelines and a small serving transformer
+//!   (`python/compile/model.py`);
+//! * **L3** — this crate: the serving coordinator, compressed KV cache,
+//!   native stage-1 hot path, and the PJRT runtime that executes the AOT
+//!   artifacts.  Python never runs on the request path.
+//!
+//! Start at [`quant::Stage1`] for the paper's core transform and at
+//! [`coordinator::Engine`] for the serving stack.
+
+pub mod math;
+pub mod quant;
+pub mod util;
+
+pub mod attention;
+pub mod cmd;
+pub mod config;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod server;

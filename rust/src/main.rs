@@ -1,0 +1,54 @@
+//! `isoquant` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   compress            one-shot stage-1 compression demo on synthetic data
+//!   sweep               Table-2 style latency/MSE sweep (see benches for
+//!                       the full 18-setting regeneration)
+//!   serve               boot the serving engine on a TCP port
+//!   selfcheck           cross-language parity: native pipeline vs the
+//!                       AOT-lowered Pallas/HLO graphs via PJRT
+//!   inspect-artifacts   print the artifact manifest
+//!   table1              print the paper's Table 1 complexity model
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "compress" => isoquant::cmd::compress(rest),
+        "sweep" => isoquant::cmd::sweep(rest),
+        "serve" => isoquant::cmd::serve(rest),
+        "selfcheck" => isoquant::cmd::selfcheck(rest),
+        "inspect-artifacts" => isoquant::cmd::inspect_artifacts(rest),
+        "table1" => isoquant::cmd::table1(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "isoquant — SO(4) isoclinic rotations for KV cache compression\n\
+         \n\
+         usage: isoquant <subcommand> [options]\n\
+         \n\
+         subcommands:\n\
+         \x20 compress            stage-1 compression demo (synthetic batch)\n\
+         \x20 sweep               latency/MSE sweep across variants\n\
+         \x20 serve               run the serving engine (TCP, JSON lines)\n\
+         \x20 selfcheck           native-vs-HLO parity via PJRT\n\
+         \x20 inspect-artifacts   print the AOT artifact manifest\n\
+         \x20 table1              print the complexity model (paper Table 1)\n\
+         \n\
+         run `isoquant <subcommand> --help` for per-command options"
+    );
+}

@@ -1,0 +1,7 @@
+//! Mathematical substrates: quaternion algebra (ℍ), Cl(3,0) rotors, the
+//! SO(4) isoclinic decomposition, and small dense linear algebra.
+
+pub mod quaternion;
+pub mod rotor3;
+pub mod smallmat;
+pub mod so4;

@@ -1,0 +1,223 @@
+//! Quaternion algebra on `[f32; 4]` = (w, x, y, z) — the closed-form
+//! parameterization of SO(4) at the heart of IsoQuant (paper §4).
+//!
+//! Scalar building blocks live here; the batched hot-path versions (which
+//! keep blocks in registers across rotate→quantize→unrotate) are in
+//! `quant::pipeline`.
+
+pub type Quat = [f32; 4];
+
+pub const IDENTITY: Quat = [1.0, 0.0, 0.0, 0.0];
+
+/// Hamilton product a·b: 16 multiplies / 12 adds (the paper's ~16 FMA
+/// costing unit, §6).
+#[inline(always)]
+pub fn hamilton(a: Quat, b: Quat) -> Quat {
+    let [aw, ax, ay, az] = a;
+    let [bw, bx, by, bz] = b;
+    [
+        aw * bw - ax * bx - ay * by - az * bz,
+        aw * bx + ax * bw + ay * bz - az * by,
+        aw * by - ax * bz + ay * bw + az * bx,
+        aw * bz + ax * by - ay * bx + az * bw,
+    ]
+}
+
+#[inline(always)]
+pub fn conjugate(q: Quat) -> Quat {
+    [q[0], -q[1], -q[2], -q[3]]
+}
+
+#[inline(always)]
+pub fn norm(q: Quat) -> f32 {
+    (q[0] * q[0] + q[1] * q[1] + q[2] * q[2] + q[3] * q[3]).sqrt()
+}
+
+/// Normalize onto S³ (paper eq. 33); identity for near-zero input.
+#[inline]
+pub fn normalize(q: Quat) -> Quat {
+    let n = norm(q);
+    if n < 1e-12 {
+        return IDENTITY;
+    }
+    [q[0] / n, q[1] / n, q[2] / n, q[3] / n]
+}
+
+/// Double-sided isoclinic action T(v) = qL · v · conj(qR) (paper eq. 11).
+#[inline(always)]
+pub fn sandwich(q_l: Quat, v: Quat, q_r: Quat) -> Quat {
+    hamilton(hamilton(q_l, v), conjugate(q_r))
+}
+
+/// Inverse action conj(qL) · v · qR (paper eq. 12).
+#[inline(always)]
+pub fn sandwich_inv(q_l: Quat, v: Quat, q_r: Quat) -> Quat {
+    hamilton(hamilton(conjugate(q_l), v), q_r)
+}
+
+/// Rotate a 3-vector by the rotation encoded in unit quaternion q
+/// (v ↦ q v q̄ on pure quaternions) — the Cl(3,0) rotor action used by
+/// the RotorQuant baseline.
+#[inline(always)]
+pub fn rotate3(q: Quat, v: [f32; 3]) -> [f32; 3] {
+    let p = [0.0, v[0], v[1], v[2]];
+    let out = hamilton(hamilton(q, p), conjugate(q));
+    [out[1], out[2], out[3]]
+}
+
+#[inline(always)]
+pub fn rotate3_inv(q: Quat, v: [f32; 3]) -> [f32; 3] {
+    let p = [0.0, v[0], v[1], v[2]];
+    let out = hamilton(hamilton(conjugate(q), p), q);
+    [out[1], out[2], out[3]]
+}
+
+/// Spherical linear interpolation on S³ — supports the paper's closing
+/// observation that quaternion pairs admit smooth interpolation on the
+/// rotation manifold (§11), used by the shared/adaptive-rotation
+/// extension in `quant::params`.
+pub fn slerp(a: Quat, b: Quat, t: f32) -> Quat {
+    let mut dot = a[0] * b[0] + a[1] * b[1] + a[2] * b[2] + a[3] * b[3];
+    // take the short arc (double cover: q and -q are the same rotation)
+    let mut b = b;
+    if dot < 0.0 {
+        b = [-b[0], -b[1], -b[2], -b[3]];
+        dot = -dot;
+    }
+    if dot > 0.9995 {
+        // nearly parallel: lerp + renormalize
+        return normalize([
+            a[0] + t * (b[0] - a[0]),
+            a[1] + t * (b[1] - a[1]),
+            a[2] + t * (b[2] - a[2]),
+            a[3] + t * (b[3] - a[3]),
+        ]);
+    }
+    let theta = dot.clamp(-1.0, 1.0).acos();
+    let s = theta.sin();
+    let wa = ((1.0 - t) * theta).sin() / s;
+    let wb = (t * theta).sin() / s;
+    [
+        wa * a[0] + wb * b[0],
+        wa * a[1] + wb * b[1],
+        wa * a[2] + wb * b[2],
+        wa * a[3] + wb * b[3],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn close(a: Quat, b: Quat, tol: f32) -> bool {
+        a.iter().zip(&b).all(|(x, y)| (x - y).abs() < tol)
+    }
+
+    #[test]
+    fn identity_element() {
+        let q = [0.3, -0.5, 0.7, 0.1];
+        assert!(close(hamilton(IDENTITY, q), q, 1e-7));
+        assert!(close(hamilton(q, IDENTITY), q, 1e-7));
+    }
+
+    #[test]
+    fn ijk_relations() {
+        let i = [0.0, 1.0, 0.0, 0.0];
+        let j = [0.0, 0.0, 1.0, 0.0];
+        let k = [0.0, 0.0, 0.0, 1.0];
+        let m1 = [-1.0, 0.0, 0.0, 0.0];
+        assert!(close(hamilton(i, i), m1, 1e-7));
+        assert!(close(hamilton(j, j), m1, 1e-7));
+        assert!(close(hamilton(k, k), m1, 1e-7));
+        assert!(close(hamilton(hamilton(i, j), k), m1, 1e-7));
+        assert!(close(hamilton(i, j), k, 1e-7)); // ij = k
+    }
+
+    #[test]
+    fn norm_multiplicative() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let a: Quat = std::array::from_fn(|_| rng.gaussian() as f32);
+            let b: Quat = std::array::from_fn(|_| rng.gaussian() as f32);
+            let n = norm(hamilton(a, b));
+            assert!((n - norm(a) * norm(b)).abs() < 1e-3 * n.max(1.0));
+        }
+    }
+
+    #[test]
+    fn sandwich_preserves_norm_and_inverts() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let ql = rng.haar_quaternion();
+            let qr = rng.haar_quaternion();
+            let v: Quat = std::array::from_fn(|_| rng.gaussian() as f32);
+            let y = sandwich(ql, v, qr);
+            assert!((norm(y) - norm(v)).abs() < 1e-5 * norm(v).max(1.0));
+            let back = sandwich_inv(ql, y, qr);
+            assert!(close(back, v, 1e-5));
+        }
+    }
+
+    #[test]
+    fn double_cover() {
+        // (qL, qR) and (-qL, -qR) give the same transform (paper eq. 13)
+        let mut rng = Rng::new(3);
+        let ql = rng.haar_quaternion();
+        let qr = rng.haar_quaternion();
+        let nl = [-ql[0], -ql[1], -ql[2], -ql[3]];
+        let nr = [-qr[0], -qr[1], -qr[2], -qr[3]];
+        let v: Quat = std::array::from_fn(|_| rng.gaussian() as f32);
+        assert!(close(sandwich(ql, v, qr), sandwich(nl, v, nr), 1e-7));
+    }
+
+    #[test]
+    fn rotate3_preserves_norm_and_inverts() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let q = rng.haar_quaternion();
+            let v = [
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+            ];
+            let y = rotate3(q, v);
+            let nv = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            let ny = (y[0] * y[0] + y[1] * y[1] + y[2] * y[2]).sqrt();
+            assert!((nv - ny).abs() < 1e-5 * nv.max(1.0));
+            let back = rotate3_inv(q, y);
+            for i in 0..3 {
+                assert!((back[i] - v[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rotate3_scalar_part_stays_zero() {
+        // q (0,v) q̄ must remain a pure quaternion
+        let mut rng = Rng::new(5);
+        let q = rng.haar_quaternion();
+        let v = [1.0, -2.0, 0.5];
+        let p = [0.0, v[0], v[1], v[2]];
+        let out = hamilton(hamilton(q, p), conjugate(q));
+        assert!(out[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn slerp_endpoints_and_midpoint_norm() {
+        let mut rng = Rng::new(6);
+        let a = rng.haar_quaternion();
+        let b = rng.haar_quaternion();
+        assert!(close(slerp(a, b, 0.0), a, 1e-6));
+        let end = slerp(a, b, 1.0);
+        // endpoint may be -b (short arc), which is the same rotation
+        assert!(close(end, b, 1e-5) || close(end, [-b[0], -b[1], -b[2], -b[3]], 1e-5));
+        let mid = slerp(a, b, 0.5);
+        assert!((norm(mid) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalize_handles_zero() {
+        assert_eq!(normalize([0.0; 4]), IDENTITY);
+    }
+}

@@ -1,0 +1,303 @@
+//! Cl(3,0) geometric algebra: even-subalgebra rotors and the full
+//! 8-component multivector product — the substrate for the RotorQuant
+//! baseline (paper [2]).
+//!
+//! Two implementations of the rotor sandwich are provided:
+//!
+//! * [`Rotor::apply`] — the *efficient* odd-intermediate form (two
+//!   quaternion-shaped products), which is what our fair fused baseline
+//!   uses;
+//! * [`Multivector`]-based [`sandwich_multivector`] — the general
+//!   8-component expansion the paper says RotorQuant's implementation
+//!   pays for ("IsoQuant avoids the expansion to an 8-component
+//!   multivector representation", §9.3).  This form appears in the
+//!   module-level (unfused) benchmark path and in tests that pin the two
+//!   forms to each other.
+//!
+//! Multivector component order: [1, e1, e2, e3, e12, e13, e23, e123].
+
+/// Even-subalgebra rotor R = s + b12·e12 + b13·e13 + b23·e23 with
+/// s² + b12² + b13² + b23² = 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rotor {
+    pub s: f32,
+    pub b12: f32,
+    pub b13: f32,
+    pub b23: f32,
+}
+
+impl Rotor {
+    /// Rotor from a unit quaternion (w, x, y, z): the standard Cl(3,0) ≅ ℍ
+    /// even-subalgebra isomorphism (e23 ↦ -i, e13 ↦ j, e12 ↦ -k up to
+    /// sign convention; we pick the one that makes `apply` match
+    /// `quaternion::rotate3`).
+    pub fn from_quaternion(q: [f32; 4]) -> Rotor {
+        Rotor {
+            s: q[0],
+            b23: -q[1],
+            b13: q[2],
+            b12: -q[3],
+        }
+    }
+
+    pub fn to_quaternion(self) -> [f32; 4] {
+        [self.s, -self.b23, self.b13, -self.b12]
+    }
+
+    /// Rotor norm (should be 1 for a proper rotor).
+    pub fn norm(self) -> f32 {
+        (self.s * self.s + self.b12 * self.b12 + self.b13 * self.b13 + self.b23 * self.b23)
+            .sqrt()
+    }
+
+    pub fn normalize(self) -> Rotor {
+        let n = self.norm();
+        Rotor {
+            s: self.s / n,
+            b12: self.b12 / n,
+            b13: self.b13 / n,
+            b23: self.b23 / n,
+        }
+    }
+
+    /// Reverse R~ (grade involution of the bivector part).
+    pub fn reverse(self) -> Rotor {
+        Rotor {
+            s: self.s,
+            b12: -self.b12,
+            b13: -self.b13,
+            b23: -self.b23,
+        }
+    }
+
+    /// Rotor sandwich R v R~ on a 3-vector in the efficient
+    /// odd-intermediate form.  Cost: the intermediate R·v is an odd
+    /// multivector (vector + trivector = 4 components, 12 mul + 8 add),
+    /// the second product back to a vector is 12 mul + 9 add — ~28 FMAs
+    /// per 3 coordinates, vs 32 FMAs per 4 coordinates for the
+    /// IsoQuant-Full sandwich (paper Table 1 counts the full fused
+    /// rotor pipeline at ≈56 FMA/block, i.e. forward + inverse).
+    #[inline(always)]
+    pub fn apply(self, v: [f32; 3]) -> [f32; 3] {
+        // odd intermediate o = R v: vector part (o1,o2,o3), trivector o123
+        let Rotor { s, b12, b13, b23 } = self;
+        let [v1, v2, v3] = v;
+        let o1 = s * v1 + b12 * v2 + b13 * v3;
+        let o2 = s * v2 - b12 * v1 + b23 * v3;
+        let o3 = s * v3 - b13 * v1 - b23 * v2;
+        let o123 = b23 * v1 - b13 * v2 + b12 * v3;
+        // r = o · R~ — vector part only (trivector part cancels)
+        let r1 = o1 * s + o2 * b12 + o3 * b13 + o123 * b23;
+        let r2 = o2 * s - o1 * b12 - o123 * b13 + o3 * b23;
+        let r3 = o3 * s + o123 * b12 - o1 * b13 - o2 * b23;
+        [r1, r2, r3]
+    }
+
+    #[inline(always)]
+    pub fn apply_inv(self, v: [f32; 3]) -> [f32; 3] {
+        self.reverse().apply(v)
+    }
+}
+
+/// General Cl(3,0) multivector: [scalar, e1, e2, e3, e12, e13, e23, e123].
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Multivector(pub [f32; 8]);
+
+impl Multivector {
+    pub fn scalar(s: f32) -> Multivector {
+        let mut m = [0.0; 8];
+        m[0] = s;
+        Multivector(m)
+    }
+
+    pub fn vector(v: [f32; 3]) -> Multivector {
+        let mut m = [0.0; 8];
+        m[1] = v[0];
+        m[2] = v[1];
+        m[3] = v[2];
+        Multivector(m)
+    }
+
+    pub fn from_rotor(r: Rotor) -> Multivector {
+        let mut m = [0.0; 8];
+        m[0] = r.s;
+        m[4] = r.b12;
+        m[5] = r.b13;
+        m[6] = r.b23;
+        Multivector(m)
+    }
+
+    pub fn vector_part(self) -> [f32; 3] {
+        [self.0[1], self.0[2], self.0[3]]
+    }
+
+    /// Full geometric product — 64 multiplies (the 8-component expansion
+    /// RotorQuant's unfused path pays; see module docs).
+    #[inline(always)]
+    pub fn geometric_product(self, rhs: Multivector) -> Multivector {
+        let a = self.0;
+        let b = rhs.0;
+        // basis: 0:1, 1:e1, 2:e2, 3:e3, 4:e12, 5:e13, 6:e23, 7:e123
+        let mut c = [0.0f32; 8];
+        c[0] = a[0] * b[0] + a[1] * b[1] + a[2] * b[2] + a[3] * b[3]
+            - a[4] * b[4] - a[5] * b[5] - a[6] * b[6] - a[7] * b[7];
+        c[1] = a[0] * b[1] + a[1] * b[0] - a[2] * b[4] - a[3] * b[5]
+            + a[4] * b[2] + a[5] * b[3] - a[6] * b[7] - a[7] * b[6];
+        c[2] = a[0] * b[2] + a[2] * b[0] + a[1] * b[4] - a[3] * b[6]
+            - a[4] * b[1] + a[5] * b[7] + a[6] * b[3] + a[7] * b[5];
+        c[3] = a[0] * b[3] + a[3] * b[0] + a[1] * b[5] + a[2] * b[6]
+            - a[4] * b[7] - a[5] * b[1] - a[6] * b[2] - a[7] * b[4];
+        c[4] = a[0] * b[4] + a[4] * b[0] + a[1] * b[2] - a[2] * b[1]
+            + a[3] * b[7] + a[7] * b[3] - a[5] * b[6] + a[6] * b[5];
+        c[5] = a[0] * b[5] + a[5] * b[0] + a[1] * b[3] - a[3] * b[1]
+            - a[2] * b[7] - a[7] * b[2] + a[4] * b[6] - a[6] * b[4];
+        c[6] = a[0] * b[6] + a[6] * b[0] + a[2] * b[3] - a[3] * b[2]
+            + a[1] * b[7] + a[7] * b[1] - a[4] * b[5] + a[5] * b[4];
+        c[7] = a[0] * b[7] + a[7] * b[0] + a[1] * b[6] - a[2] * b[5]
+            + a[3] * b[4] + a[4] * b[3] - a[5] * b[2] + a[6] * b[1];
+        Multivector(c)
+    }
+
+    #[inline(always)]
+    pub fn reverse(self) -> Multivector {
+        let a = self.0;
+        // grades 0,1 keep sign; grades 2,3 flip
+        Multivector([a[0], a[1], a[2], a[3], -a[4], -a[5], -a[6], -a[7]])
+    }
+}
+
+/// Rotor sandwich via the full multivector expansion (the unfused
+/// RotorQuant module path): R v R~ with two 64-multiply products.
+#[inline(always)]
+pub fn sandwich_multivector(r: Rotor, v: [f32; 3]) -> [f32; 3] {
+    let rm = Multivector::from_rotor(r);
+    let vm = Multivector::vector(v);
+    rm.geometric_product(vm)
+        .geometric_product(rm.reverse())
+        .vector_part()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::quaternion;
+    use crate::util::prng::Rng;
+
+    fn n3(v: [f32; 3]) -> f32 {
+        (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt()
+    }
+
+    #[test]
+    fn rotor_apply_matches_quaternion_rotate3() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let q = rng.haar_quaternion();
+            let v = [
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+            ];
+            let a = Rotor::from_quaternion(q).apply(v);
+            let b = quaternion::rotate3(q, v);
+            for i in 0..3 {
+                assert!((a[i] - b[i]).abs() < 1e-5, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotor_apply_matches_multivector_sandwich() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let r = Rotor::from_quaternion(rng.haar_quaternion());
+            let v = [
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+            ];
+            let a = r.apply(v);
+            let b = sandwich_multivector(r, v);
+            for i in 0..3 {
+                assert!((a[i] - b[i]).abs() < 1e-5, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_preserves_norm_and_inverts() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let r = Rotor::from_quaternion(rng.haar_quaternion());
+            let v = [
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+                rng.gaussian() as f32,
+            ];
+            let y = r.apply(v);
+            assert!((n3(y) - n3(v)).abs() < 1e-5 * n3(v).max(1.0));
+            let back = r.apply_inv(y);
+            for i in 0..3 {
+                assert!((back[i] - v[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn quaternion_roundtrip() {
+        let mut rng = Rng::new(4);
+        let q = rng.haar_quaternion();
+        let q2 = Rotor::from_quaternion(q).to_quaternion();
+        for i in 0..4 {
+            assert!((q[i] - q2[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn geometric_product_basis_identities() {
+        // e1·e1 = 1
+        let e1 = Multivector::vector([1.0, 0.0, 0.0]);
+        let p = e1.geometric_product(e1);
+        assert_eq!(p.0[0], 1.0);
+        assert!(p.0[1..].iter().all(|&x| x == 0.0));
+        // e1·e2 = e12
+        let e2 = Multivector::vector([0.0, 1.0, 0.0]);
+        let p = e1.geometric_product(e2);
+        assert_eq!(p.0[4], 1.0);
+        // e123·e123 = -1
+        let mut e123 = Multivector::default();
+        e123.0[7] = 1.0;
+        let p = e123.geometric_product(e123);
+        assert_eq!(p.0[0], -1.0);
+    }
+
+    #[test]
+    fn geometric_product_associative() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let a = Multivector(std::array::from_fn(|_| rng.gaussian() as f32));
+            let b = Multivector(std::array::from_fn(|_| rng.gaussian() as f32));
+            let c = Multivector(std::array::from_fn(|_| rng.gaussian() as f32));
+            let lhs = a.geometric_product(b).geometric_product(c);
+            let rhs = a.geometric_product(b.geometric_product(c));
+            for i in 0..8 {
+                assert!(
+                    (lhs.0[i] - rhs.0[i]).abs() < 2e-4 * lhs.0[i].abs().max(1.0),
+                    "component {i}: {} vs {}",
+                    lhs.0[i],
+                    rhs.0[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rotor_normalize() {
+        let r = Rotor {
+            s: 2.0,
+            b12: 0.0,
+            b13: 0.0,
+            b23: 0.0,
+        };
+        assert!((r.normalize().norm() - 1.0).abs() < 1e-7);
+    }
+}

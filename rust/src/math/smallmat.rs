@@ -1,0 +1,150 @@
+//! Dense row-major matrix helpers for the TurboQuant baseline and the
+//! attention substrate: matmul, matvec, transpose, Gram–Schmidt
+//! orthogonality checks.  Sizes here are small (≤ d×d with d ≤ 512 and
+//! attention projections), so a simple cache-blocked loop suffices; the
+//! heavy model math runs inside the XLA executable, not here.
+
+/// C(m×n) = A(m×k) · B(k×n), row-major, accumulating in f32.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// y(m) = A(m×n) · x(n).
+pub fn matvec(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut s = 0.0f32;
+        for j in 0..n {
+            s += row[j] * x[j];
+        }
+        y[i] = s;
+    }
+}
+
+/// y(n) = Aᵀ(n×m) · x(m) for row-major A(m×n) — i.e. x · A.
+pub fn matvec_t(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for i in 0..m {
+        let xv = x[i];
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &a[i * n..(i + 1) * n];
+        for j in 0..n {
+            y[j] += xv * row[j];
+        }
+    }
+}
+
+pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    let mut t = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+/// Max |MᵀM - I| entry for a d×d row-major matrix.
+pub fn orthogonality_defect(m: &[f32], d: usize) -> f32 {
+    let mut worst = 0.0f32;
+    for i in 0..d {
+        for j in 0..d {
+            let mut dot = 0.0f32;
+            for k in 0..d {
+                dot += m[k * d + i] * m[k * d + j];
+            }
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((dot - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 1.0, 1.0, 1.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (17, 33, 9);
+        let a = rng.gaussian_vec_f32(m * k);
+        let b = rng.gaussian_vec_f32(k * n);
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_and_transpose_consistent() {
+        let mut rng = Rng::new(2);
+        let (m, n) = (12, 7);
+        let a = rng.gaussian_vec_f32(m * n);
+        let x = rng.gaussian_vec_f32(n);
+        let mut y1 = vec![0.0; m];
+        matvec(&a, &x, &mut y1, m, n);
+        let at = transpose(&a, m, n);
+        let mut y2 = vec![0.0; m];
+        matvec_t(&at, &x, &mut y2, n, m);
+        for i in 0..m {
+            assert!((y1[i] - y2[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn haar_matrix_orthogonal() {
+        let mut rng = Rng::new(3);
+        let d = 32;
+        let m = rng.haar_orthogonal(d);
+        assert!(orthogonality_defect(&m, d) < 1e-4);
+    }
+}

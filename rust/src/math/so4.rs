@@ -1,0 +1,180 @@
+//! SO(4) via the isoclinic decomposition (paper §4): conversions between
+//! quaternion pairs and dense 4×4 matrices, plus diagnostics used by
+//! tests and the complexity model.  The hot path never materializes these
+//! matrices — that is the paper's point — but tests, the learned-rotation
+//! trainer, and the dense baseline need them.
+
+use crate::math::quaternion::{self as quat, Quat};
+
+/// Materialize the matrix M with M·v = qL · v · conj(qR), row-major.
+pub fn isoclinic_matrix(q_l: Quat, q_r: Quat) -> [f32; 16] {
+    let mut m = [0.0f32; 16];
+    for i in 0..4 {
+        let mut e = [0.0f32; 4];
+        e[i] = 1.0;
+        let col = quat::sandwich(q_l, e, q_r);
+        for j in 0..4 {
+            m[j * 4 + i] = col[j];
+        }
+    }
+    m
+}
+
+/// Left-isoclinic matrix (IsoQuant-Fast): M·v = qL · v.
+pub fn left_isoclinic_matrix(q_l: Quat) -> [f32; 16] {
+    let [w, x, y, z] = q_l;
+    // columns are qL·e_i under Hamilton product
+    [
+        w, -x, -y, -z, //
+        x, w, -z, y, //
+        y, z, w, -x, //
+        z, -y, x, w,
+    ]
+}
+
+/// Right-isoclinic matrix: M·v = v · conj(qR).
+pub fn right_isoclinic_matrix(q_r: Quat) -> [f32; 16] {
+    isoclinic_matrix(quat::IDENTITY, q_r)
+}
+
+/// Frobenius distance of MᵀM from I — orthogonality defect.
+pub fn orthogonality_defect(m: &[f32; 16]) -> f32 {
+    let mut sum = 0.0f32;
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut dot = 0.0f32;
+            for k in 0..4 {
+                dot += m[k * 4 + i] * m[k * 4 + j];
+            }
+            let want = if i == j { 1.0 } else { 0.0 };
+            sum += (dot - want) * (dot - want);
+        }
+    }
+    sum.sqrt()
+}
+
+/// Determinant of a 4×4 (row-major) by cofactor expansion.
+pub fn det4(m: &[f32; 16]) -> f32 {
+    let a = |r: usize, c: usize| m[r * 4 + c] as f64;
+    let det3 = |r: [usize; 3], c: [usize; 3]| -> f64 {
+        a(r[0], c[0]) * (a(r[1], c[1]) * a(r[2], c[2]) - a(r[1], c[2]) * a(r[2], c[1]))
+            - a(r[0], c[1]) * (a(r[1], c[0]) * a(r[2], c[2]) - a(r[1], c[2]) * a(r[2], c[0]))
+            + a(r[0], c[2]) * (a(r[1], c[0]) * a(r[2], c[1]) - a(r[1], c[1]) * a(r[2], c[0]))
+    };
+    let rows = [1, 2, 3];
+    let mut det = 0.0f64;
+    let cols = [0usize, 1, 2, 3];
+    for (i, &c) in cols.iter().enumerate() {
+        let rest: Vec<usize> = cols.iter().copied().filter(|&x| x != c).collect();
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        det += sign * a(0, c) * det3(rows, [rest[0], rest[1], rest[2]]);
+    }
+    det as f32
+}
+
+/// An isoclinic rotation satisfies: all four column (or row) "rotation
+/// angles" are equal.  Left-isoclinic matrices commute with right-
+/// isoclinic ones — the su(2)⊕su(2) splitting (paper eq. 7–9).  Used by
+/// tests to verify the decomposition numerically.
+pub fn matmul4(a: &[f32; 16], b: &[f32; 16]) -> [f32; 16] {
+    let mut c = [0.0f32; 16];
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut s = 0.0f32;
+            for k in 0..4 {
+                s += a[i * 4 + k] * b[k * 4 + j];
+            }
+            c[i * 4 + j] = s;
+        }
+    }
+    c
+}
+
+pub fn matvec4(m: &[f32; 16], v: Quat) -> Quat {
+    std::array::from_fn(|i| {
+        m[i * 4] * v[0] + m[i * 4 + 1] * v[1] + m[i * 4 + 2] * v[2] + m[i * 4 + 3] * v[3]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn isoclinic_matrix_is_so4() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let m = isoclinic_matrix(rng.haar_quaternion(), rng.haar_quaternion());
+            assert!(orthogonality_defect(&m) < 1e-5);
+            assert!((det4(&m) - 1.0).abs() < 1e-4, "det {}", det4(&m));
+        }
+    }
+
+    #[test]
+    fn matrix_matches_sandwich() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let ql = rng.haar_quaternion();
+            let qr = rng.haar_quaternion();
+            let m = isoclinic_matrix(ql, qr);
+            let v: Quat = std::array::from_fn(|_| rng.gaussian() as f32);
+            let a = matvec4(&m, v);
+            let b = quat::sandwich(ql, v, qr);
+            for i in 0..4 {
+                assert!((a[i] - b[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn left_and_right_factors_commute() {
+        // the su(2)_L ⊕ su(2)_R splitting: L(qL)·R(qR) = R(qR)·L(qL)
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let l = left_isoclinic_matrix(rng.haar_quaternion());
+            let r = right_isoclinic_matrix(rng.haar_quaternion());
+            let lr = matmul4(&l, &r);
+            let rl = matmul4(&r, &l);
+            for i in 0..16 {
+                assert!((lr[i] - rl[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn full_factors_into_left_times_right() {
+        // M(qL, qR) = L(qL)·R(qR) (paper eq. 9 at the group level)
+        let mut rng = Rng::new(4);
+        let ql = rng.haar_quaternion();
+        let qr = rng.haar_quaternion();
+        let m = isoclinic_matrix(ql, qr);
+        let prod = matmul4(&left_isoclinic_matrix(ql), &right_isoclinic_matrix(qr));
+        for i in 0..16 {
+            assert!((m[i] - prod[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn left_isoclinic_matrix_matches_hamilton() {
+        let mut rng = Rng::new(5);
+        let ql = rng.haar_quaternion();
+        let v: Quat = std::array::from_fn(|_| rng.gaussian() as f32);
+        let a = matvec4(&left_isoclinic_matrix(ql), v);
+        let b = quat::hamilton(ql, v);
+        for i in 0..4 {
+            assert!((a[i] - b[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn identity_matrices() {
+        let m = isoclinic_matrix(quat::IDENTITY, quat::IDENTITY);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((m[i * 4 + j] - want).abs() < 1e-7);
+            }
+        }
+    }
+}

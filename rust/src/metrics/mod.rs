@@ -1,0 +1,212 @@
+//! Serving metrics: latency percentiles, throughput counters, and the
+//! reconstruction-quality measures reported by the experiments.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Reservoir-free latency recorder: keeps every sample (serving runs here
+/// are bounded) and reports percentiles.
+#[derive(Default, Debug, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p / 100.0).round() as usize;
+        s[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.1}us p50={:.1}us p90={:.1}us p99={:.1}us",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+        )
+    }
+}
+
+/// Shared monotonically increasing counters (engine-wide).
+#[derive(Default, Debug)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub tokens_prefilled: AtomicU64,
+    pub tokens_decoded: AtomicU64,
+    pub pages_allocated: AtomicU64,
+    pub pages_freed: AtomicU64,
+    pub bytes_compressed: AtomicU64,
+    pub bytes_uncompressed: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump(field: &AtomicU64, by: u64) {
+        field.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(field: &AtomicU64) -> u64 {
+        field.load(Ordering::Relaxed)
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        let c = self.bytes_compressed.load(Ordering::Relaxed);
+        let u = self.bytes_uncompressed.load(Ordering::Relaxed);
+        if c == 0 {
+            return f64::NAN;
+        }
+        u as f64 / c as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// reconstruction / fidelity measures
+// ---------------------------------------------------------------------
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    crate::quant::pipeline::mse(a, b)
+}
+
+/// Cosine similarity between two vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += (x as f64) * (y as f64);
+        na += (x as f64) * (x as f64);
+        nb += (y as f64) * (y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 1.0 } else { 0.0 };
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Relative L2 error ‖a-b‖/‖a‖.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (x as f64).powi(2);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Fraction of positions where the arg-max of `a` equals that of `b`
+/// over consecutive chunks of `width` (top-1 agreement of logits).
+pub fn top1_agreement(a: &[f32], b: &[f32], width: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(width > 0 && a.len() % width == 0);
+    let rows = a.len() / width;
+    let mut agree = 0usize;
+    for r in 0..rows {
+        let am = argmax(&a[r * width..(r + 1) * width]);
+        let bm = argmax(&b[r * width..(r + 1) * width]);
+        if am == bm {
+            agree += 1;
+        }
+    }
+    agree as f64 / rows as f64
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record_us(i as f64);
+        }
+        assert_eq!(r.len(), 100);
+        assert!((r.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((r.percentile(99.0) - 98.0).abs() <= 2.0);
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_nan() {
+        let r = LatencyRecorder::new();
+        assert!(r.percentile(50.0).is_nan());
+        assert!(r.mean().is_nan());
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0; 2], &[0.0; 2]), 1.0);
+    }
+
+    #[test]
+    fn rel_l2_basics() {
+        assert_eq!(rel_l2(&[2.0, 0.0], &[2.0, 0.0]), 0.0);
+        assert!((rel_l2(&[2.0, 0.0], &[0.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top1() {
+        let a = [1.0, 2.0, 0.0, 5.0, 1.0, 0.0];
+        let b = [0.5, 3.0, 0.0, 0.0, 9.0, 0.0];
+        // rows of width 3: argmax a = [1, 0], argmax b = [1, 1] → 50%
+        assert!((top1_agreement(&a, &b, 3) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters() {
+        let c = Counters::default();
+        Counters::bump(&c.bytes_compressed, 100);
+        Counters::bump(&c.bytes_uncompressed, 1600);
+        assert!((c.compression_ratio() - 16.0).abs() < 1e-12);
+    }
+}

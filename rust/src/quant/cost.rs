@@ -1,0 +1,164 @@
+//! Analytical complexity model — regenerates paper Table 1 and scales it
+//! to arbitrary d (§6).
+//!
+//! Counting conventions follow the paper: one quaternion product ≈ 16
+//! FMAs; the RotorQuant 3D block costs ≈ 56 FMAs (the fused rotor
+//! sandwich as shipped by the baseline's CUDA kernel, including its
+//! multivector expansion overhead); a dense rotation costs d² FMAs; a
+//! planar 2D block costs ~4 FMAs.  `measured_*` counters in tests pin
+//! the *implemented* arithmetic to the model within the documented
+//! conventions.
+
+use crate::quant::params::Variant;
+
+/// Forward rotation cost (FMAs) for one vector at head dim d — the
+/// quantity in paper Table 1's "FMAs" column.
+pub fn forward_rotation_fmas(variant: Variant, d: usize) -> usize {
+    let g4 = d.div_ceil(4);
+    let g2 = d.div_ceil(2);
+    match variant {
+        // two quaternion products per block (eq. 22): 32 g₄
+        Variant::IsoFull => 32 * g4,
+        // one quaternion product per block (eq. 25): 16 g₄
+        Variant::IsoFast => 16 * g4,
+        // one 2×2 rotation per pair: 4 FMAs
+        Variant::Planar2D => 4 * g2,
+        // paper's counting: ≈ 56 FMAs per 3D rotor block (incl. the
+        // multivector expansion its kernel pays), plus the planar tail
+        Variant::Rotor3D => {
+            let nfull = d / 3;
+            let tail = match d % 3 {
+                2 => 4,
+                1 => 0,
+                _ => 0,
+            };
+            56 * nfull + tail
+        }
+        Variant::Dense => d * d,
+        // two chained double-sided stages per 8-block: 2 × 2 × 32 = 128
+        Variant::Grouped8D => 128 * d.div_ceil(8),
+    }
+}
+
+/// Stored rotation parameters (scalars) — Table 1's "Params" column, in
+/// the paper's convention (per-block realized scalars: (cosθ, sinθ)
+/// counts as 2, a rotor as 4 incl. tail handling).
+pub fn param_scalars_paper_convention(variant: Variant, d: usize) -> usize {
+    match variant {
+        Variant::Planar2D => 2 * d.div_ceil(2), // (cos, sin) per pair → 128 at d=128
+        Variant::Rotor3D => 4 * d.div_ceil(3),  // 43 blocks × 4 → 172 at d=128
+        v => v.param_count(d),
+    }
+}
+
+/// One row of Table 1.
+#[derive(Clone, Debug)]
+pub struct CostRow {
+    pub method: &'static str,
+    pub block_structure: String,
+    pub params: usize,
+    pub fmas: usize,
+}
+
+/// Regenerate Table 1 for a given head dim (the paper prints d = 128).
+pub fn table1(d: usize) -> Vec<CostRow> {
+    let g4 = d.div_ceil(4);
+    let g2 = d.div_ceil(2);
+    let n3 = d / 3;
+    let tail = d % 3;
+    vec![
+        CostRow {
+            method: "TurboQuant (dense)",
+            block_structure: format!("dense {d}x{d}"),
+            params: param_scalars_paper_convention(Variant::Dense, d),
+            fmas: forward_rotation_fmas(Variant::Dense, d),
+        },
+        CostRow {
+            method: "RotorQuant",
+            block_structure: if tail == 2 {
+                format!("{n3} x 3D + 2D tail")
+            } else if tail == 1 {
+                format!("{n3} x 3D + 1D tail")
+            } else {
+                format!("{n3} x 3D")
+            },
+            params: param_scalars_paper_convention(Variant::Rotor3D, d),
+            fmas: forward_rotation_fmas(Variant::Rotor3D, d),
+        },
+        CostRow {
+            method: "IsoQuant-2D",
+            block_structure: format!("{g2} x 2D"),
+            params: param_scalars_paper_convention(Variant::Planar2D, d),
+            fmas: forward_rotation_fmas(Variant::Planar2D, d),
+        },
+        CostRow {
+            method: "IsoQuant-Full",
+            block_structure: format!("{g4} x 4D"),
+            params: param_scalars_paper_convention(Variant::IsoFull, d),
+            fmas: forward_rotation_fmas(Variant::IsoFull, d),
+        },
+        CostRow {
+            method: "IsoQuant-Fast",
+            block_structure: format!("{g4} x 4D"),
+            params: param_scalars_paper_convention(Variant::IsoFast, d),
+            fmas: forward_rotation_fmas(Variant::IsoFast, d),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_table1_at_d128() {
+        // paper Table 1 (d = 128)
+        assert_eq!(forward_rotation_fmas(Variant::Dense, 128), 16_384);
+        assert_eq!(forward_rotation_fmas(Variant::IsoFull, 128), 1_024);
+        assert_eq!(forward_rotation_fmas(Variant::IsoFast, 128), 512);
+        assert_eq!(forward_rotation_fmas(Variant::Planar2D, 128), 256);
+        // paper: ≈ 2,408 = 42×56 + tail ≈ 2352 + 4 (we print 2356; the
+        // paper's 2408 uses 43×56, counting the tail as a full block)
+        let rotor = forward_rotation_fmas(Variant::Rotor3D, 128);
+        assert!((2_300..=2_410).contains(&rotor), "rotor {rotor}");
+
+        assert_eq!(param_scalars_paper_convention(Variant::Dense, 128), 16_384);
+        assert_eq!(param_scalars_paper_convention(Variant::Rotor3D, 128), 172);
+        assert_eq!(param_scalars_paper_convention(Variant::Planar2D, 128), 128);
+        assert_eq!(param_scalars_paper_convention(Variant::IsoFull, 128), 256);
+        assert_eq!(param_scalars_paper_convention(Variant::IsoFast, 128), 128);
+    }
+
+    #[test]
+    fn full_cuts_rotor_cost_by_more_than_2x() {
+        // §6: "cuts rotation arithmetic by more than 2×"
+        for d in [128usize, 256, 512] {
+            let rotor = forward_rotation_fmas(Variant::Rotor3D, d);
+            let full = forward_rotation_fmas(Variant::IsoFull, d);
+            let fast = forward_rotation_fmas(Variant::IsoFast, d);
+            assert!(rotor as f64 / full as f64 > 2.0, "d={d}");
+            assert!(rotor as f64 / fast as f64 > 4.0, "d={d}");
+        }
+    }
+
+    #[test]
+    fn linear_scaling_in_d() {
+        for v in [Variant::IsoFull, Variant::IsoFast, Variant::Planar2D, Variant::Rotor3D] {
+            let f128 = forward_rotation_fmas(v, 128) as f64;
+            let f512 = forward_rotation_fmas(v, 512) as f64;
+            assert!((f512 / f128 - 4.0).abs() < 0.1, "{v:?}");
+        }
+        // dense is quadratic
+        let d128 = forward_rotation_fmas(Variant::Dense, 128) as f64;
+        let d512 = forward_rotation_fmas(Variant::Dense, 512) as f64;
+        assert!((d512 / d128 - 16.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn table_rows_complete() {
+        let rows = table1(128);
+        assert_eq!(rows.len(), 5);
+        assert!(rows[1].block_structure.contains("42 x 3D + 2D tail"));
+        assert!(rows[3].block_structure.contains("32 x 4D"));
+    }
+}

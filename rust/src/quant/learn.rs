@@ -1,0 +1,243 @@
+//! Learned rotation parameters (paper §5.5 / Table 3 "learned
+//! normalized" axis): derivative-free refinement of the quaternion /
+//! angle banks on a calibration batch.
+//!
+//! The paper parameterizes unit quaternions by normalizing unconstrained
+//! vectors and leaves learned-vs-random as an open question (§10 item 3).
+//! We optimize directly on the manifold with a simple annealed random
+//! search per block: propose a slerp step toward a random quaternion
+//! (resp. an angle nudge), accept if calibration MSE improves.  Blocks
+//! are independent given the input (block-diagonal transform), so each
+//! block's objective is separable — this makes coordinate-wise search
+//! exact rather than a heuristic.
+
+use crate::math::quaternion::{self as quat};
+use crate::quant::params::{ParamBank, Variant};
+use crate::quant::pipeline::{Stage1, Stage1Config};
+use crate::util::prng::Rng;
+
+/// Options for the learner.
+#[derive(Clone, Debug)]
+pub struct LearnOptions {
+    pub iters: usize,
+    /// initial slerp step toward proposals
+    pub step0: f32,
+    /// multiplicative step decay per iteration
+    pub decay: f32,
+    pub seed: u64,
+}
+
+impl Default for LearnOptions {
+    fn default() -> Self {
+        LearnOptions {
+            iters: 60,
+            step0: 0.5,
+            decay: 0.95,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Per-block calibration MSE for the current bank.
+fn block_mse(stage: &Stage1, data: &[f32], n: usize) -> Vec<f64> {
+    let d = stage.d();
+    let k = block_span(stage.cfg.variant);
+    let nblocks = d.div_ceil(k);
+    let mut out = vec![0.0f32; d];
+    let mut acc = vec![0.0f64; nblocks];
+    for r in 0..n {
+        let x = &data[r * d..(r + 1) * d];
+        stage.roundtrip(x, &mut out);
+        for b in 0..nblocks {
+            let lo = b * k;
+            let hi = ((b + 1) * k).min(d);
+            for i in lo..hi {
+                let e = (x[i] - out[i]) as f64;
+                acc[b] += e * e;
+            }
+        }
+    }
+    acc
+}
+
+fn block_span(variant: Variant) -> usize {
+    match variant {
+        Variant::IsoFull | Variant::IsoFast => 4,
+        Variant::Planar2D => 2,
+        Variant::Rotor3D => 3, // tail handled by its own angle
+        Variant::Grouped8D => 8,
+        Variant::Dense => usize::MAX, // not block-separable; unsupported
+    }
+}
+
+/// Refine a bank on calibration data (row-major n × d).  Returns the
+/// learned stage and the (before, after) calibration MSE.
+pub fn learn(cfg: Stage1Config, data: &[f32], n: usize, opts: &LearnOptions) -> (Stage1, f64, f64) {
+    assert_ne!(
+        cfg.variant,
+        Variant::Dense,
+        "dense banks are not block-separable; learn() supports blockwise variants"
+    );
+    let d = cfg.d;
+    assert_eq!(data.len(), n * d);
+    let mut rng = Rng::new(opts.seed);
+    let mut bank = ParamBank::random(cfg.variant, d, cfg.seed);
+    let mut stage = Stage1::with_bank(cfg.clone(), bank.clone());
+
+    let total = |per_block: &[f64]| per_block.iter().sum::<f64>() / (n * d) as f64;
+    let mut cur = block_mse(&stage, data, n);
+    let before = total(&cur);
+
+    let mut step = opts.step0;
+    for _ in 0..opts.iters {
+        // propose one joint perturbation; accept per-block (separable)
+        let mut cand = bank.clone();
+        for q in cand.q_l.iter_mut() {
+            *q = quat::slerp(*q, rng.haar_quaternion(), step);
+        }
+        for q in cand.q_r.iter_mut() {
+            *q = quat::slerp(*q, rng.haar_quaternion(), step);
+        }
+        for t in cand.theta.iter_mut() {
+            *t += (rng.gaussian() as f32) * step;
+        }
+        cand.refresh_cos_sin();
+        let cand_stage = Stage1::with_bank(cfg.clone(), cand.clone());
+        let cand_mse = block_mse(&cand_stage, data, n);
+
+        // per-block accept: keep whichever parameters scored lower.
+        // Block b of span k maps to q_l[b] (+ q_r[b]) for 4D, theta[b]
+        // for 2D, q_l[b] for rotor blocks, pairs (2b, 2b+1) for 8D.
+        let nblocks = cur.len();
+        for b in 0..nblocks {
+            if cand_mse[b] < cur[b] {
+                match cfg.variant {
+                    Variant::IsoFull => {
+                        bank.q_l[b] = cand.q_l[b];
+                        bank.q_r[b] = cand.q_r[b];
+                    }
+                    Variant::IsoFast => bank.q_l[b] = cand.q_l[b],
+                    Variant::Planar2D => bank.theta[b] = cand.theta[b],
+                    Variant::Rotor3D => {
+                        if b < bank.q_l.len() {
+                            bank.q_l[b] = cand.q_l[b];
+                        } else if !bank.theta.is_empty() {
+                            bank.theta[0] = cand.theta[0];
+                        }
+                    }
+                    Variant::Grouped8D => {
+                        bank.q_l[2 * b] = cand.q_l[2 * b];
+                        bank.q_l[2 * b + 1] = cand.q_l[2 * b + 1];
+                        bank.q_r[2 * b] = cand.q_r[2 * b];
+                        bank.q_r[2 * b + 1] = cand.q_r[2 * b + 1];
+                    }
+                    Variant::Dense => unreachable!(),
+                }
+                cur[b] = cand_mse[b];
+            }
+        }
+        bank.refresh_cos_sin();
+        stage = Stage1::with_bank(cfg.clone(), bank.clone());
+        step *= opts.decay;
+    }
+    let after = total(&block_mse(&stage, data, n));
+    (stage, before, after)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Correlated calibration data: energy concentrated per block, the
+    /// case where learned rotations should beat random ones.
+    fn concentrated_data(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; n * d];
+        for r in 0..n {
+            for b in 0..d / 4 {
+                let base = rng.gaussian() as f32;
+                x[r * d + b * 4] = base;
+                x[r * d + b * 4 + 1] = 0.9 * base + 0.05 * rng.gaussian() as f32;
+                x[r * d + b * 4 + 2] = 0.1 * rng.gaussian() as f32;
+                x[r * d + b * 4 + 3] = 0.05 * rng.gaussian() as f32;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn learning_reduces_calibration_mse() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (128usize, 32usize);
+        let data = concentrated_data(&mut rng, n, d);
+        let cfg = Stage1Config::new(Variant::IsoFull, d, 2);
+        let opts = LearnOptions {
+            iters: 40,
+            ..Default::default()
+        };
+        let (_stage, before, after) = learn(cfg, &data, n, &opts);
+        assert!(
+            after < before * 0.95,
+            "learning should improve ≥5%: {before} → {after}"
+        );
+    }
+
+    #[test]
+    fn learned_generalizes_to_heldout() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (128usize, 32usize);
+        let train = concentrated_data(&mut rng, n, d);
+        let test = concentrated_data(&mut rng, n, d);
+        let cfg = Stage1Config::new(Variant::IsoFull, d, 2);
+        let (learned, _, _) = learn(
+            cfg.clone(),
+            &train,
+            n,
+            &LearnOptions {
+                iters: 40,
+                ..Default::default()
+            },
+        );
+        let random = Stage1::new(cfg);
+        let mut out = vec![0.0f32; n * d];
+        learned.roundtrip_batch(&test, &mut out, n);
+        let mse_learned = crate::quant::pipeline::mse(&test, &out);
+        random.roundtrip_batch(&test, &mut out, n);
+        let mse_random = crate::quant::pipeline::mse(&test, &out);
+        assert!(
+            mse_learned < mse_random,
+            "learned {mse_learned} vs random {mse_random}"
+        );
+    }
+
+    #[test]
+    fn learn_supports_planar_and_fast() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (64usize, 16usize);
+        let data = concentrated_data(&mut rng, n, d);
+        for v in [Variant::IsoFast, Variant::Planar2D] {
+            let cfg = Stage1Config::new(v, d, 2);
+            let (_s, before, after) = learn(
+                cfg,
+                &data,
+                n,
+                &LearnOptions {
+                    iters: 25,
+                    ..Default::default()
+                },
+            );
+            assert!(after <= before, "{v:?}: {before} → {after}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not block-separable")]
+    fn dense_rejected() {
+        let data = vec![0.0f32; 64];
+        learn(
+            Stage1Config::new(Variant::Dense, 8, 2),
+            &data,
+            8,
+            &LearnOptions::default(),
+        );
+    }
+}

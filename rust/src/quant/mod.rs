@@ -1,0 +1,25 @@
+//! Stage-1 online vector quantization — the paper's core contribution —
+//! plus the stage-2 residual extension and the learned-rotation trainer.
+//!
+//! Layout:
+//! * [`params`]   — rotation parameter banks per variant (paper §5.5)
+//! * [`scalar`]   — Lloyd–Max / uniform scalar quantizers (+ [`codebooks`])
+//! * [`packing`]  — 2/3/4-bit code packing
+//! * [`pipeline`] — the fused stage-1 hot path (paper Alg. 1) + the
+//!   unfused module-level reference (§9.4)
+//! * [`cost`]     — the analytical complexity model (Table 1)
+//! * [`residual`] — QJL-style stage-2 correction (§8)
+//! * [`learn`]    — learned rotations (Table 3 axis)
+
+pub mod codebooks;
+pub mod cost;
+pub mod learn;
+pub mod packing;
+pub mod params;
+pub mod pipeline;
+pub mod residual;
+pub mod scalar;
+
+pub use params::{ParamBank, Variant};
+pub use pipeline::{mse, Stage1, Stage1Config, Stage1Unfused};
+pub use scalar::{QuantKind, ScalarQuantizer};

@@ -1,0 +1,200 @@
+//! Bit packing for quantized codes (2/3/4 bits per code).
+//!
+//! The compressed KV-cache pages store codes packed; the paper's
+//! hardware-alignment argument shows up here too: 2- and 4-bit codes pack
+//! into whole bytes with power-of-two fan-in (4 or 2 codes per byte),
+//! while the generic path handles 3-bit codes via a u64 bit accumulator.
+
+/// Number of bytes needed for `n` codes at `bits` bits each.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Pack `codes` (each < 2^bits) into `out` (cleared first).
+pub fn pack(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(packed_len(codes.len(), bits));
+    match bits {
+        4 => {
+            for pair in codes.chunks(2) {
+                let lo = pair[0] & 0x0F;
+                let hi = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
+                out.push(lo | (hi << 4));
+            }
+        }
+        2 => {
+            for quad in codes.chunks(4) {
+                let mut b = 0u8;
+                for (i, &c) in quad.iter().enumerate() {
+                    b |= (c & 0x03) << (2 * i);
+                }
+                out.push(b);
+            }
+        }
+        _ => {
+            // generic bitstream (used for 3-bit and any future widths)
+            let mut acc: u64 = 0;
+            let mut nbits: u32 = 0;
+            let mask = (1u64 << bits) - 1;
+            for &c in codes {
+                acc |= (c as u64 & mask) << nbits;
+                nbits += bits as u32;
+                while nbits >= 8 {
+                    out.push((acc & 0xFF) as u8);
+                    acc >>= 8;
+                    nbits -= 8;
+                }
+            }
+            if nbits > 0 {
+                out.push((acc & 0xFF) as u8);
+            }
+        }
+    }
+}
+
+/// Unpack `n` codes of `bits` bits from `data` into `out` (cleared first).
+pub fn unpack(data: &[u8], bits: u8, n: usize, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(n);
+    match bits {
+        4 => {
+            for i in 0..n {
+                let byte = data[i / 2];
+                out.push(if i % 2 == 0 { byte & 0x0F } else { byte >> 4 });
+            }
+        }
+        2 => {
+            for i in 0..n {
+                let byte = data[i / 4];
+                out.push((byte >> (2 * (i % 4))) & 0x03);
+            }
+        }
+        _ => {
+            let mut acc: u64 = 0;
+            let mut nbits: u32 = 0;
+            let mut pos = 0usize;
+            let mask = (1u64 << bits) - 1;
+            for _ in 0..n {
+                while nbits < bits as u32 {
+                    acc |= (data[pos] as u64) << nbits;
+                    pos += 1;
+                    nbits += 8;
+                }
+                out.push((acc & mask) as u8);
+                acc >>= bits;
+                nbits -= bits as u32;
+            }
+        }
+    }
+}
+
+/// Direct dequantize-from-packed: avoids materializing the index vector
+/// on the decode hot path.  `levels.len() == 2^bits`.
+pub fn unpack_dequantize(data: &[u8], bits: u8, n: usize, levels: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(levels.len(), 1usize << bits);
+    debug_assert!(out.len() >= n);
+    match bits {
+        4 => {
+            for i in 0..n {
+                let byte = data[i / 2];
+                let c = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                out[i] = levels[c as usize];
+            }
+        }
+        2 => {
+            for i in 0..n {
+                let byte = data[i / 4];
+                out[i] = levels[((byte >> (2 * (i % 4))) & 0x03) as usize];
+            }
+        }
+        _ => {
+            let mut acc: u64 = 0;
+            let mut nbits: u32 = 0;
+            let mut pos = 0usize;
+            let mask = (1u64 << bits) - 1;
+            for o in out.iter_mut().take(n) {
+                while nbits < bits as u32 {
+                    acc |= (data[pos] as u64) << nbits;
+                    pos += 1;
+                    nbits += 8;
+                }
+                *o = levels[(acc & mask) as usize];
+                acc >>= bits;
+                nbits -= bits as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn roundtrip_case(bits: u8, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+        let mut packed = Vec::new();
+        pack(&codes, bits, &mut packed);
+        assert_eq!(packed.len(), packed_len(n, bits));
+        let mut back = Vec::new();
+        unpack(&packed, bits, n, &mut back);
+        assert_eq!(back, codes, "bits={bits} n={n}");
+    }
+
+    #[test]
+    fn roundtrip_all_widths_and_lengths() {
+        for bits in [2u8, 3, 4] {
+            for n in [0usize, 1, 2, 3, 7, 8, 9, 64, 127, 128, 1000] {
+                roundtrip_case(bits, n, bits as u64 * 1000 + n as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_len_math() {
+        assert_eq!(packed_len(128, 2), 32);
+        assert_eq!(packed_len(128, 3), 48);
+        assert_eq!(packed_len(128, 4), 64);
+        assert_eq!(packed_len(3, 3), 2); // 9 bits → 2 bytes
+        assert_eq!(packed_len(0, 3), 0);
+    }
+
+    #[test]
+    fn compression_ratio() {
+        // the headline KV saving: f32 (4 bytes) → b bits
+        for (bits, ratio) in [(2u8, 16.0f64), (3, 32.0 / 3.0), (4, 8.0)] {
+            let n = 1024;
+            let packed = packed_len(n, bits);
+            let r = (n * 4) as f64 / packed as f64;
+            assert!((r - ratio).abs() < 0.1, "bits={bits}: {r}");
+        }
+    }
+
+    #[test]
+    fn unpack_dequantize_matches_two_step() {
+        let mut rng = Rng::new(9);
+        for bits in [2u8, 3, 4] {
+            let levels: Vec<f32> = (0..(1 << bits)).map(|i| i as f32 * 0.5 - 2.0).collect();
+            let n = 333;
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let mut packed = Vec::new();
+            pack(&codes, bits, &mut packed);
+            let mut direct = vec![0.0f32; n];
+            unpack_dequantize(&packed, bits, n, &levels, &mut direct);
+            let want: Vec<f32> = codes.iter().map(|&c| levels[c as usize]).collect();
+            assert_eq!(direct, want);
+        }
+    }
+
+    #[test]
+    fn high_bits_masked() {
+        // stray high bits in input codes must not corrupt neighbors
+        let codes = vec![0xFFu8, 0x00, 0xFF, 0x00];
+        let mut packed = Vec::new();
+        pack(&codes, 2, &mut packed);
+        let mut back = Vec::new();
+        unpack(&packed, 2, 4, &mut back);
+        assert_eq!(back, vec![3, 0, 3, 0]);
+    }
+}

@@ -1,0 +1,350 @@
+//! Rotation parameter banks for every stage-1 variant (paper §5.5):
+//! random Haar initialization, learned refinement, serialization, and
+//! flattening into the shapes the AOT HLO graphs expect.
+
+use anyhow::{bail, Result};
+
+use crate::math::quaternion::{self as quat, Quat};
+use crate::util::prng::Rng;
+use crate::util::tensorfile::Tensor;
+
+/// The rotation families of the paper (plus the 8D grouped ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// IsoQuant-Full: v ↦ qL v conj(qR), 6 DoF per 4-block (§5.2).
+    IsoFull,
+    /// IsoQuant-Fast: v ↦ qL v, 3 DoF per 4-block (§5.3).
+    IsoFast,
+    /// 2D planar special case (§5.4).
+    Planar2D,
+    /// RotorQuant baseline: 3D Clifford rotors + 2D tail (paper [2]).
+    Rotor3D,
+    /// TurboQuant-style dense rotation (paper [1]).
+    Dense,
+    /// 8D grouped variant: two chained 4-blocks with a fixed lane swap
+    /// (Table 3 "optionally 8D grouped variants" axis).
+    Grouped8D,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::IsoFull => "iso-full",
+            Variant::IsoFast => "iso-fast",
+            Variant::Planar2D => "iso-2d",
+            Variant::Rotor3D => "rotorquant",
+            Variant::Dense => "dense",
+            Variant::Grouped8D => "iso-8d",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "iso-full" | "full" => Variant::IsoFull,
+            "iso-fast" | "fast" => Variant::IsoFast,
+            "iso-2d" | "2d" | "planar" => Variant::Planar2D,
+            "rotorquant" | "rotor" => Variant::Rotor3D,
+            "dense" | "turboquant" => Variant::Dense,
+            "iso-8d" | "8d" => Variant::Grouped8D,
+            _ => bail!("unknown variant {s:?}"),
+        })
+    }
+
+    /// Block size k of the local rotations (the quantizer marginal's k).
+    pub fn block_k(self) -> usize {
+        match self {
+            Variant::IsoFull | Variant::IsoFast => 4,
+            Variant::Planar2D => 2,
+            Variant::Rotor3D => 3,
+            Variant::Dense => 4,     // large-d marginal ≈ the k=4 table (see ref.py)
+            Variant::Grouped8D => 4, // per-lane marginal of chained 4D rotations
+        }
+    }
+
+    /// Parameter count at head dim d (paper §6).
+    pub fn param_count(self, d: usize) -> usize {
+        let g4 = d.div_ceil(4);
+        let g2 = d.div_ceil(2);
+        match self {
+            Variant::IsoFull => 8 * g4,
+            Variant::IsoFast => 4 * g4,
+            Variant::Planar2D => g2, // one angle per pair (stored as θ)
+            Variant::Rotor3D => {
+                // one rotor (4 scalars) per 3-block + tail angle
+                4 * (d / 3) + if d % 3 == 2 { 1 } else { 0 }
+            }
+            Variant::Dense => d * d,
+            Variant::Grouped8D => 16 * (d.div_ceil(8)), // two quaternion pairs per 8-block
+        }
+    }
+}
+
+/// Parameters for one (variant, d) rotation bank.
+#[derive(Clone, Debug)]
+pub struct ParamBank {
+    pub variant: Variant,
+    pub d: usize,
+    /// left quaternions: IsoFull / IsoFast / Rotor3D (rotor as quat) /
+    /// Grouped8D (2 per 8-block: positions 2i, 2i+1)
+    pub q_l: Vec<Quat>,
+    /// right quaternions: IsoFull / Grouped8D
+    pub q_r: Vec<Quat>,
+    /// planar angles θ (Planar2D: one per pair; Rotor3D: tail angle)
+    pub theta: Vec<f32>,
+    /// precomputed (cosθ, sinθ) mirroring `theta`
+    pub cos_sin: Vec<(f32, f32)>,
+    /// dense d×d row-major orthogonal matrix (Dense only)
+    pub dense: Vec<f32>,
+}
+
+impl ParamBank {
+    /// Haar-random bank (paper §5.5: Gaussian-normalize on S³, uniform
+    /// angles, QR-of-Gaussian for dense).
+    pub fn random(variant: Variant, d: usize, seed: u64) -> ParamBank {
+        let mut rng = Rng::new(seed);
+        let mut bank = ParamBank {
+            variant,
+            d,
+            q_l: Vec::new(),
+            q_r: Vec::new(),
+            theta: Vec::new(),
+            cos_sin: Vec::new(),
+            dense: Vec::new(),
+        };
+        match variant {
+            Variant::IsoFull => {
+                let g = d.div_ceil(4);
+                bank.q_l = (0..g).map(|_| rng.haar_quaternion()).collect();
+                bank.q_r = (0..g).map(|_| rng.haar_quaternion()).collect();
+            }
+            Variant::IsoFast => {
+                let g = d.div_ceil(4);
+                bank.q_l = (0..g).map(|_| rng.haar_quaternion()).collect();
+            }
+            Variant::Planar2D => {
+                let g = d.div_ceil(2);
+                bank.theta = (0..g).map(|_| rng.haar_angle()).collect();
+            }
+            Variant::Rotor3D => {
+                let nfull = d / 3;
+                bank.q_l = (0..nfull).map(|_| rng.haar_quaternion()).collect();
+                if d % 3 == 2 {
+                    bank.theta = vec![rng.haar_angle()];
+                }
+            }
+            Variant::Dense => {
+                bank.dense = rng.haar_orthogonal(d);
+            }
+            Variant::Grouped8D => {
+                let g8 = d.div_ceil(8);
+                bank.q_l = (0..2 * g8).map(|_| rng.haar_quaternion()).collect();
+                bank.q_r = (0..2 * g8).map(|_| rng.haar_quaternion()).collect();
+            }
+        }
+        bank.refresh_cos_sin();
+        bank
+    }
+
+    /// Identity bank (no rotation) — baseline for ablations.
+    pub fn identity(variant: Variant, d: usize) -> ParamBank {
+        let mut bank = ParamBank::random(variant, d, 0);
+        for q in bank.q_l.iter_mut().chain(bank.q_r.iter_mut()) {
+            *q = quat::IDENTITY;
+        }
+        for t in bank.theta.iter_mut() {
+            *t = 0.0;
+        }
+        if !bank.dense.is_empty() {
+            bank.dense.fill(0.0);
+            for i in 0..d {
+                bank.dense[i * d + i] = 1.0;
+            }
+        }
+        bank.refresh_cos_sin();
+        bank
+    }
+
+    pub fn refresh_cos_sin(&mut self) {
+        self.cos_sin = self.theta.iter().map(|&t| (t.cos(), t.sin())).collect();
+    }
+
+    /// Flatten into the tensors the AOT stage-1 HLO graph expects
+    /// (shapes must match `python/compile/model.py::stage1_example_args`).
+    pub fn to_hlo_inputs(&self) -> Vec<Tensor> {
+        let quats = |qs: &[Quat], name: &str| {
+            let flat: Vec<f32> = qs.iter().flatten().copied().collect();
+            Tensor::from_f32(name, vec![qs.len(), 4], &flat)
+        };
+        match self.variant {
+            Variant::IsoFull => vec![quats(&self.q_l, "q_l"), quats(&self.q_r, "q_r")],
+            Variant::IsoFast => vec![quats(&self.q_l, "q_l")],
+            Variant::Planar2D => vec![Tensor::from_f32(
+                "theta",
+                vec![self.theta.len()],
+                &self.theta,
+            )],
+            Variant::Rotor3D => vec![
+                quats(&self.q_l, "q"),
+                Tensor::from_f32("tail_theta", vec![self.theta.len()], &self.theta),
+            ],
+            Variant::Dense => vec![Tensor::from_f32(
+                "m",
+                vec![self.d, self.d],
+                &self.dense,
+            )],
+            Variant::Grouped8D => vec![quats(&self.q_l, "q_l"), quats(&self.q_r, "q_r")],
+        }
+    }
+
+    /// Serialize to tensorfile tensors (persisted parameter banks).
+    pub fn to_tensors(&self) -> Vec<Tensor> {
+        let mut out = vec![Tensor::from_f32(
+            "meta",
+            vec![2],
+            &[self.d as f32, self.variant.block_k() as f32],
+        )];
+        out[0].name = format!("bank.{}.meta", self.variant.name());
+        let mut push = |name: &str, shape: Vec<usize>, data: &[f32]| {
+            if !data.is_empty() {
+                out.push(Tensor::from_f32(
+                    &format!("bank.{}.{}", self.variant.name(), name),
+                    shape,
+                    data,
+                ));
+            }
+        };
+        let ql: Vec<f32> = self.q_l.iter().flatten().copied().collect();
+        let qr: Vec<f32> = self.q_r.iter().flatten().copied().collect();
+        push("q_l", vec![self.q_l.len(), 4], &ql);
+        push("q_r", vec![self.q_r.len(), 4], &qr);
+        push("theta", vec![self.theta.len()], &self.theta);
+        push("dense", vec![self.d, self.d], &self.dense);
+        out
+    }
+
+    /// Interpolate two banks of the same shape on the rotation manifold
+    /// (slerp per quaternion, lerp per angle) — the §11 smooth-
+    /// interpolation property, used by the adaptive-rotation extension.
+    pub fn interpolate(&self, other: &ParamBank, t: f32) -> ParamBank {
+        assert_eq!(self.variant, other.variant);
+        assert_eq!(self.d, other.d);
+        let mut out = self.clone();
+        for (q, o) in out.q_l.iter_mut().zip(&other.q_l) {
+            *q = quat::slerp(*q, *o, t);
+        }
+        for (q, o) in out.q_r.iter_mut().zip(&other.q_r) {
+            *q = quat::slerp(*q, *o, t);
+        }
+        for (a, b) in out.theta.iter_mut().zip(&other.theta) {
+            // shortest-path angular interpolation
+            let mut diff = (b - *a) % std::f32::consts::TAU;
+            if diff > std::f32::consts::PI {
+                diff -= std::f32::consts::TAU;
+            }
+            if diff < -std::f32::consts::PI {
+                diff += std::f32::consts::TAU;
+            }
+            *a += t * diff;
+        }
+        out.refresh_cos_sin();
+        assert!(out.dense.is_empty(), "dense banks do not interpolate");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_paper_table1_at_d128() {
+        // Table 1: TurboQuant 16384, RotorQuant 172, 2D 128 (paper counts
+        // cos/sin? no — 2 per block in the paper; we store θ only, the
+        // paper's "Params 128" for 64 blocks = 2 per block: count the
+        // (cos,sin) realization), Full 256, Fast 128
+        assert_eq!(Variant::Dense.param_count(128), 16_384);
+        assert_eq!(Variant::IsoFull.param_count(128), 256);
+        assert_eq!(Variant::IsoFast.param_count(128), 128);
+        // rotor: 42 rotors × 4 + 1 tail angle = 169; the paper's 172
+        // counts 43 blocks × 4 — both conventions are small; ours is the
+        // literal stored-scalar count
+        assert_eq!(Variant::Rotor3D.param_count(128), 169);
+        // planar: θ per pair = 64 stored scalars (paper's 128 counts the
+        // (cos, sin) pair per block)
+        assert_eq!(Variant::Planar2D.param_count(128), 64);
+    }
+
+    #[test]
+    fn random_banks_have_unit_quaternions() {
+        for v in [Variant::IsoFull, Variant::IsoFast, Variant::Rotor3D, Variant::Grouped8D] {
+            let bank = ParamBank::random(v, 128, 7);
+            for q in bank.q_l.iter().chain(&bank.q_r) {
+                let n = quat::norm(*q);
+                assert!((n - 1.0).abs() < 1e-5, "{v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bank_shapes() {
+        let full = ParamBank::random(Variant::IsoFull, 128, 1);
+        assert_eq!(full.q_l.len(), 32);
+        assert_eq!(full.q_r.len(), 32);
+        let fast = ParamBank::random(Variant::IsoFast, 128, 1);
+        assert_eq!(fast.q_l.len(), 32);
+        assert!(fast.q_r.is_empty());
+        let p2 = ParamBank::random(Variant::Planar2D, 128, 1);
+        assert_eq!(p2.theta.len(), 64);
+        let rot = ParamBank::random(Variant::Rotor3D, 128, 1);
+        assert_eq!(rot.q_l.len(), 42);
+        assert_eq!(rot.theta.len(), 1); // d=128 → 2-wide tail
+        let rot129 = ParamBank::random(Variant::Rotor3D, 129, 1);
+        assert_eq!(rot129.q_l.len(), 43);
+        assert!(rot129.theta.is_empty());
+        let dense = ParamBank::random(Variant::Dense, 64, 1);
+        assert_eq!(dense.dense.len(), 64 * 64);
+        let g8 = ParamBank::random(Variant::Grouped8D, 128, 1);
+        assert_eq!(g8.q_l.len(), 32); // 16 8-blocks × 2
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ParamBank::random(Variant::IsoFull, 64, 42);
+        let b = ParamBank::random(Variant::IsoFull, 64, 42);
+        assert_eq!(a.q_l, b.q_l);
+        let c = ParamBank::random(Variant::IsoFull, 64, 43);
+        assert_ne!(a.q_l, c.q_l);
+    }
+
+    #[test]
+    fn hlo_inputs_shapes() {
+        let bank = ParamBank::random(Variant::IsoFull, 128, 1);
+        let t = bank.to_hlo_inputs();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].shape, vec![32, 4]);
+        let rot = ParamBank::random(Variant::Rotor3D, 128, 1);
+        let t = rot.to_hlo_inputs();
+        assert_eq!(t[0].shape, vec![42, 4]);
+        assert_eq!(t[1].shape, vec![1]);
+    }
+
+    #[test]
+    fn interpolation_stays_on_manifold() {
+        let a = ParamBank::random(Variant::IsoFull, 64, 1);
+        let b = ParamBank::random(Variant::IsoFull, 64, 2);
+        let mid = a.interpolate(&b, 0.5);
+        for q in mid.q_l.iter().chain(&mid.q_r) {
+            assert!((quat::norm(*q) - 1.0).abs() < 1e-5);
+        }
+        let at0 = a.interpolate(&b, 0.0);
+        assert_eq!(at0.q_l, a.q_l);
+    }
+
+    #[test]
+    fn identity_bank_is_identity() {
+        let bank = ParamBank::identity(Variant::IsoFull, 64);
+        for q in bank.q_l.iter().chain(&bank.q_r) {
+            assert_eq!(*q, quat::IDENTITY);
+        }
+    }
+}

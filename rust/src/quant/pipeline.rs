@@ -1,0 +1,1109 @@
+//! The stage-1 quantization pipeline (paper Alg. 1) — the native hot
+//! path executed on the serving critical path and measured by the
+//! Table-2 sweep.
+//!
+//! Semantics are pinned to the Pallas/HLO graphs (`python/compile/`):
+//!
+//! 1. ρ = ‖x‖₂, x̄ = x / max(ρ, ε)                    (eq. 3)
+//! 2. blockwise rotation of x̄                        (eq. 22/25/29)
+//! 3. per-coordinate quantize→dequantize of √d·x̄      (scalar Q)
+//! 4. inverse blockwise rotation                      (eq. 24/27/31)
+//! 5. scale by ρ
+//!
+//! The fused implementation folds the √d/ρ scaling into a single
+//! pre-factor, keeps each block in registers from load to store, and
+//! never materializes rotation matrices — the paper's closed-form
+//! quaternion-sandwich claim.  [`Stage1::roundtrip`] is the
+//! quantize–dequantize path benchmarked in Table 2;
+//! [`Stage1::encode`]/[`Stage1::decode`] add bit-packing and are what the
+//! KV cache stores.
+
+use crate::math::quaternion::{self as quat};
+use crate::math::rotor3::Rotor;
+use crate::quant::packing;
+use crate::quant::params::{ParamBank, Variant};
+use crate::quant::scalar::{QuantKind, ScalarQuantizer};
+use crate::util::f16;
+
+const EPS: f32 = 1e-12;
+
+/// Fixed interleave used by the grouped-8D variant between its two
+/// rotation stages (hierarchical cross-block mixing, paper §10).
+const P8: [usize; 8] = [0, 4, 1, 5, 2, 6, 3, 7];
+
+/// How the RotorQuant baseline realizes the Cl(3,0) sandwich.
+///
+/// The paper attributes part of RotorQuant's cost to "the expansion to an
+/// 8-component multivector representation" (§9.3) — that is what the
+/// released rotor kernel pays and what [`RotorImpl::Multivector`]
+/// reproduces (the default, used by the Table-2 baseline).
+/// [`RotorImpl::OddIntermediate`] is the *best-case* rotor kernel (two
+/// quaternion-shaped products through the 4-component odd intermediate);
+/// the ablation benches report both so the baseline-implementation and
+/// method-intrinsic contributions to the speedup can be separated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotorImpl {
+    Multivector,
+    OddIntermediate,
+}
+
+/// Full configuration of a stage-1 transform.
+#[derive(Clone, Debug)]
+pub struct Stage1Config {
+    pub variant: Variant,
+    pub d: usize,
+    pub bits: u8,
+    pub quant: QuantKind,
+    pub seed: u64,
+    pub rotor_impl: RotorImpl,
+}
+
+impl Stage1Config {
+    pub fn new(variant: Variant, d: usize, bits: u8) -> Stage1Config {
+        Stage1Config {
+            variant,
+            d,
+            bits,
+            quant: QuantKind::Lloyd,
+            seed: 0x150_0541,
+            rotor_impl: RotorImpl::Multivector,
+        }
+    }
+
+    pub fn with_rotor_impl(mut self, imp: RotorImpl) -> Stage1Config {
+        self.rotor_impl = imp;
+        self
+    }
+}
+
+/// A ready-to-run stage-1 transform: parameter bank + quantizers.
+#[derive(Clone, Debug)]
+pub struct Stage1 {
+    pub cfg: Stage1Config,
+    pub bank: ParamBank,
+    /// quantizer for the main blocks (k = variant.block_k())
+    q_block: ScalarQuantizer,
+    /// quantizer for the rotor baseline's ragged tail (k = 2)
+    q_tail: ScalarQuantizer,
+    /// √d
+    scale: f32,
+    /// rotors precomputed from the quaternion bank (Rotor3D only)
+    rotors: Vec<Rotor>,
+}
+
+impl Stage1 {
+    pub fn new(cfg: Stage1Config) -> Stage1 {
+        let bank = ParamBank::random(cfg.variant, cfg.d, cfg.seed);
+        Stage1::with_bank(cfg, bank)
+    }
+
+    pub fn with_bank(cfg: Stage1Config, bank: ParamBank) -> Stage1 {
+        assert_eq!(bank.variant, cfg.variant);
+        assert_eq!(bank.d, cfg.d);
+        let q_block = ScalarQuantizer::for_kind(cfg.quant, cfg.variant.block_k(), cfg.bits);
+        let q_tail = ScalarQuantizer::for_kind(cfg.quant, 2, cfg.bits);
+        let rotors = bank.q_l.iter().map(|&q| Rotor::from_quaternion(q)).collect();
+        Stage1 {
+            scale: (cfg.d as f32).sqrt(),
+            q_block,
+            q_tail,
+            rotors,
+            bank,
+            cfg,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.cfg.d
+    }
+
+    /// Bytes per compressed vector: packed codes + f32 norm.
+    pub fn encoded_len(&self) -> usize {
+        packing::packed_len(self.n_codes(), self.cfg.bits) + 4
+    }
+
+    /// Number of quantized coordinates per vector (includes padding for
+    /// non-multiple dims, matching the HLO graphs).
+    pub fn n_codes(&self) -> usize {
+        match self.cfg.variant {
+            Variant::IsoFull | Variant::IsoFast => self.cfg.d.div_ceil(4) * 4,
+            Variant::Planar2D => self.cfg.d.div_ceil(2) * 2,
+            Variant::Rotor3D | Variant::Dense => self.cfg.d,
+            Variant::Grouped8D => self.cfg.d.div_ceil(8) * 8,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // fused quantize→dequantize (Table 2's measured path)
+    // ------------------------------------------------------------------
+
+    /// Fused stage-1 roundtrip of one vector (`x.len() == d`).
+    pub fn roundtrip(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cfg.d);
+        debug_assert_eq!(out.len(), self.cfg.d);
+        let rho = l2_norm(x);
+        let pre = self.scale / rho.max(EPS); // x → √d·x̄
+        let post = rho / self.scale;
+        match self.cfg.variant {
+            Variant::IsoFull => self.rt_full(x, out, pre, post),
+            Variant::IsoFast => self.rt_fast(x, out, pre, post),
+            Variant::Planar2D => self.rt_planar(x, out, pre, post),
+            Variant::Rotor3D => self.rt_rotor(x, out, pre, post),
+            Variant::Dense => self.rt_dense(x, out, pre, post),
+            Variant::Grouped8D => self.rt_grouped8(x, out, pre, post),
+        }
+    }
+
+    /// Batch roundtrip over row-major `x` (n × d).
+    pub fn roundtrip_batch(&self, x: &[f32], out: &mut [f32], n: usize) {
+        debug_assert_eq!(x.len(), n * self.cfg.d);
+        debug_assert_eq!(out.len(), n * self.cfg.d);
+        let d = self.cfg.d;
+        for i in 0..n {
+            self.roundtrip(&x[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// fp16 execution-dtype model: inputs/outputs are binary16; arithmetic
+    /// in f32 with intermediate rounding at the load/store boundaries
+    /// (what a fused fp16 CUDA kernel with fp32 accumulators does).
+    pub fn roundtrip_batch_f16(&self, x: &[u16], out: &mut [u16], n: usize) {
+        let d = self.cfg.d;
+        debug_assert_eq!(x.len(), n * d);
+        let mut xin = vec![0.0f32; d];
+        let mut xout = vec![0.0f32; d];
+        for i in 0..n {
+            for (j, &h) in x[i * d..(i + 1) * d].iter().enumerate() {
+                xin[j] = f16::f16_bits_to_f32(h);
+            }
+            self.roundtrip(&xin, &mut xout);
+            for (j, &v) in xout.iter().enumerate() {
+                out[i * d + j] = f16::f32_to_f16_bits(v);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // encode / decode (the compressed KV-cache representation)
+    // ------------------------------------------------------------------
+
+    /// Compress one vector into `(norm, packed codes)` appended to `out`.
+    pub fn encode(&self, x: &[f32], out: &mut Vec<u8>) {
+        debug_assert_eq!(x.len(), self.cfg.d);
+        let rho = l2_norm(x);
+        let pre = self.scale / rho.max(EPS);
+        let mut codes = Vec::with_capacity(self.n_codes());
+        self.rotate_quantize_codes(x, pre, &mut codes);
+        out.extend_from_slice(&rho.to_le_bytes());
+        let mut packed = Vec::new();
+        packing::pack(&codes, self.cfg.bits, &mut packed);
+        out.extend_from_slice(&packed);
+    }
+
+    /// Decompress one vector previously produced by [`Stage1::encode`].
+    pub fn decode(&self, data: &[u8], out: &mut [f32]) {
+        debug_assert_eq!(data.len(), self.encoded_len());
+        debug_assert_eq!(out.len(), self.cfg.d);
+        let rho = f32::from_le_bytes([data[0], data[1], data[2], data[3]]);
+        let mut codes = Vec::with_capacity(self.n_codes());
+        packing::unpack(&data[4..], self.cfg.bits, self.n_codes(), &mut codes);
+        let post = rho / self.scale;
+        self.dequantize_unrotate(&codes, post, out);
+    }
+
+    // ------------------------------------------------------------------
+    // per-variant fused bodies
+    // ------------------------------------------------------------------
+
+    fn rt_full(&self, x: &[f32], out: &mut [f32], pre: f32, post: f32) {
+        let d = self.cfg.d;
+        let full = d / 4;
+        for b in 0..full {
+            let i = b * 4;
+            let v = [x[i] * pre, x[i + 1] * pre, x[i + 2] * pre, x[i + 3] * pre];
+            let y = quat::sandwich(self.bank.q_l[b], v, self.bank.q_r[b]);
+            let yq = [
+                self.q_block.qdq1(y[0]),
+                self.q_block.qdq1(y[1]),
+                self.q_block.qdq1(y[2]),
+                self.q_block.qdq1(y[3]),
+            ];
+            let r = quat::sandwich_inv(self.bank.q_l[b], yq, self.bank.q_r[b]);
+            out[i] = r[0] * post;
+            out[i + 1] = r[1] * post;
+            out[i + 2] = r[2] * post;
+            out[i + 3] = r[3] * post;
+        }
+        if d % 4 != 0 {
+            let b = full;
+            let i = b * 4;
+            let mut v = [0.0f32; 4];
+            for (j, slot) in v.iter_mut().enumerate().take(d - i) {
+                *slot = x[i + j] * pre;
+            }
+            let y = quat::sandwich(self.bank.q_l[b], v, self.bank.q_r[b]);
+            let yq = [
+                self.q_block.qdq1(y[0]),
+                self.q_block.qdq1(y[1]),
+                self.q_block.qdq1(y[2]),
+                self.q_block.qdq1(y[3]),
+            ];
+            let r = quat::sandwich_inv(self.bank.q_l[b], yq, self.bank.q_r[b]);
+            for j in 0..(d - i) {
+                out[i + j] = r[j] * post;
+            }
+        }
+    }
+
+    fn rt_fast(&self, x: &[f32], out: &mut [f32], pre: f32, post: f32) {
+        let d = self.cfg.d;
+        let full = d / 4;
+        for b in 0..full {
+            let i = b * 4;
+            let v = [x[i] * pre, x[i + 1] * pre, x[i + 2] * pre, x[i + 3] * pre];
+            let y = quat::hamilton(self.bank.q_l[b], v);
+            let yq = [
+                self.q_block.qdq1(y[0]),
+                self.q_block.qdq1(y[1]),
+                self.q_block.qdq1(y[2]),
+                self.q_block.qdq1(y[3]),
+            ];
+            let r = quat::hamilton(quat::conjugate(self.bank.q_l[b]), yq);
+            out[i] = r[0] * post;
+            out[i + 1] = r[1] * post;
+            out[i + 2] = r[2] * post;
+            out[i + 3] = r[3] * post;
+        }
+        if d % 4 != 0 {
+            let b = full;
+            let i = b * 4;
+            let mut v = [0.0f32; 4];
+            for (j, slot) in v.iter_mut().enumerate().take(d - i) {
+                *slot = x[i + j] * pre;
+            }
+            let y = quat::hamilton(self.bank.q_l[b], v);
+            let yq: [f32; 4] = std::array::from_fn(|j| self.q_block.qdq1(y[j]));
+            let r = quat::hamilton(quat::conjugate(self.bank.q_l[b]), yq);
+            for j in 0..(d - i) {
+                out[i + j] = r[j] * post;
+            }
+        }
+    }
+
+    fn rt_planar(&self, x: &[f32], out: &mut [f32], pre: f32, post: f32) {
+        let d = self.cfg.d;
+        let full = d / 2;
+        for b in 0..full {
+            let i = b * 2;
+            let (c, s) = self.bank.cos_sin[b];
+            let u0 = x[i] * pre;
+            let u1 = x[i + 1] * pre;
+            let y0 = self.q_block.qdq1(c * u0 - s * u1);
+            let y1 = self.q_block.qdq1(s * u0 + c * u1);
+            out[i] = (c * y0 + s * y1) * post;
+            out[i + 1] = (-s * y0 + c * y1) * post;
+        }
+        if d % 2 != 0 {
+            let b = full;
+            let (c, s) = self.bank.cos_sin[b];
+            let u0 = x[d - 1] * pre;
+            let y0 = self.q_block.qdq1(c * u0);
+            let y1 = self.q_block.qdq1(s * u0);
+            out[d - 1] = (c * y0 + s * y1) * post;
+        }
+    }
+
+    #[inline(always)]
+    fn rotor_fwd(&self, b: usize, v: [f32; 3]) -> [f32; 3] {
+        match self.cfg.rotor_impl {
+            RotorImpl::Multivector => {
+                crate::math::rotor3::sandwich_multivector(self.rotors[b], v)
+            }
+            RotorImpl::OddIntermediate => self.rotors[b].apply(v),
+        }
+    }
+
+    #[inline(always)]
+    fn rotor_inv(&self, b: usize, v: [f32; 3]) -> [f32; 3] {
+        match self.cfg.rotor_impl {
+            RotorImpl::Multivector => {
+                crate::math::rotor3::sandwich_multivector(self.rotors[b].reverse(), v)
+            }
+            RotorImpl::OddIntermediate => self.rotors[b].apply_inv(v),
+        }
+    }
+
+    fn rt_rotor(&self, x: &[f32], out: &mut [f32], pre: f32, post: f32) {
+        let d = self.cfg.d;
+        let nfull = d / 3;
+        for b in 0..nfull {
+            let i = b * 3;
+            let v = [x[i] * pre, x[i + 1] * pre, x[i + 2] * pre];
+            let y = self.rotor_fwd(b, v);
+            let yq = [
+                self.q_block.qdq1(y[0]),
+                self.q_block.qdq1(y[1]),
+                self.q_block.qdq1(y[2]),
+            ];
+            let r = self.rotor_inv(b, yq);
+            out[i] = r[0] * post;
+            out[i + 1] = r[1] * post;
+            out[i + 2] = r[2] * post;
+        }
+        match d % 3 {
+            2 => {
+                let i = 3 * nfull;
+                let (c, s) = self.bank.cos_sin[0];
+                let u0 = x[i] * pre;
+                let u1 = x[i + 1] * pre;
+                let y0 = self.q_tail.qdq1(c * u0 - s * u1);
+                let y1 = self.q_tail.qdq1(s * u0 + c * u1);
+                out[i] = (c * y0 + s * y1) * post;
+                out[i + 1] = (-s * y0 + c * y1) * post;
+            }
+            1 => {
+                let i = 3 * nfull;
+                out[i] = self.q_tail.qdq1(x[i] * pre) * post;
+            }
+            _ => {}
+        }
+    }
+
+    fn rt_dense(&self, x: &[f32], out: &mut [f32], pre: f32, post: f32) {
+        let d = self.cfg.d;
+        // y = M · (pre·x); quantize; rec = Mᵀ · yq; out = post · rec
+        let mut y = vec![0.0f32; d];
+        for i in 0..d {
+            let row = &self.bank.dense[i * d..(i + 1) * d];
+            let mut s = 0.0f32;
+            for j in 0..d {
+                s += row[j] * x[j];
+            }
+            y[i] = self.q_block.qdq1(s * pre);
+        }
+        out.fill(0.0);
+        for i in 0..d {
+            let row = &self.bank.dense[i * d..(i + 1) * d];
+            let yv = y[i];
+            for j in 0..d {
+                out[j] += yv * row[j];
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= post;
+        }
+    }
+
+    fn rt_grouped8(&self, x: &[f32], out: &mut [f32], pre: f32, post: f32) {
+        let d = self.cfg.d;
+        let g8 = d.div_ceil(8);
+        for b in 0..g8 {
+            let base = b * 8;
+            let mut v = [0.0f32; 8];
+            for (j, slot) in v.iter_mut().enumerate() {
+                if base + j < d {
+                    *slot = x[base + j] * pre;
+                }
+            }
+            // stage A: rotate both 4-halves with pair 2b
+            let (qa_l, qa_r) = (self.bank.q_l[2 * b], self.bank.q_r[2 * b]);
+            let lo = quat::sandwich(qa_l, [v[0], v[1], v[2], v[3]], qa_r);
+            let hi = quat::sandwich(qa_l, [v[4], v[5], v[6], v[7]], qa_r);
+            let merged = [lo[0], lo[1], lo[2], lo[3], hi[0], hi[1], hi[2], hi[3]];
+            // interleave, then stage B with pair 2b+1
+            let mut mixed = [0.0f32; 8];
+            for (dst, &src) in P8.iter().enumerate() {
+                mixed[dst] = merged[src];
+            }
+            let (qb_l, qb_r) = (self.bank.q_l[2 * b + 1], self.bank.q_r[2 * b + 1]);
+            let lo2 = quat::sandwich(qb_l, [mixed[0], mixed[1], mixed[2], mixed[3]], qb_r);
+            let hi2 = quat::sandwich(qb_l, [mixed[4], mixed[5], mixed[6], mixed[7]], qb_r);
+            let yq: [f32; 8] = std::array::from_fn(|j| {
+                self.q_block.qdq1(if j < 4 { lo2[j] } else { hi2[j - 4] })
+            });
+            // inverse: stage B⁻¹, deinterleave, stage A⁻¹
+            let lo3 = quat::sandwich_inv(qb_l, [yq[0], yq[1], yq[2], yq[3]], qb_r);
+            let hi3 = quat::sandwich_inv(qb_l, [yq[4], yq[5], yq[6], yq[7]], qb_r);
+            let back = [lo3[0], lo3[1], lo3[2], lo3[3], hi3[0], hi3[1], hi3[2], hi3[3]];
+            let mut unmixed = [0.0f32; 8];
+            for (dst, &src) in P8.iter().enumerate() {
+                unmixed[src] = back[dst];
+            }
+            let lo4 = quat::sandwich_inv(qa_l, [unmixed[0], unmixed[1], unmixed[2], unmixed[3]], qa_r);
+            let hi4 = quat::sandwich_inv(qa_l, [unmixed[4], unmixed[5], unmixed[6], unmixed[7]], qa_r);
+            for j in 0..8 {
+                if base + j < d {
+                    out[base + j] = (if j < 4 { lo4[j] } else { hi4[j - 4] }) * post;
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // encode/decode internals (shared rotate-then-code body)
+    // ------------------------------------------------------------------
+
+    fn rotate_quantize_codes(&self, x: &[f32], pre: f32, codes: &mut Vec<u8>) {
+        let d = self.cfg.d;
+        match self.cfg.variant {
+            Variant::IsoFull => {
+                let g = d.div_ceil(4);
+                for b in 0..g {
+                    let i = b * 4;
+                    let mut v = [0.0f32; 4];
+                    for (j, slot) in v.iter_mut().enumerate() {
+                        if i + j < d {
+                            *slot = x[i + j] * pre;
+                        }
+                    }
+                    let y = quat::sandwich(self.bank.q_l[b], v, self.bank.q_r[b]);
+                    for yy in y {
+                        codes.push(self.q_block.encode1(yy));
+                    }
+                }
+            }
+            Variant::IsoFast => {
+                let g = d.div_ceil(4);
+                for b in 0..g {
+                    let i = b * 4;
+                    let mut v = [0.0f32; 4];
+                    for (j, slot) in v.iter_mut().enumerate() {
+                        if i + j < d {
+                            *slot = x[i + j] * pre;
+                        }
+                    }
+                    let y = quat::hamilton(self.bank.q_l[b], v);
+                    for yy in y {
+                        codes.push(self.q_block.encode1(yy));
+                    }
+                }
+            }
+            Variant::Planar2D => {
+                let g = d.div_ceil(2);
+                for b in 0..g {
+                    let i = b * 2;
+                    let (c, s) = self.bank.cos_sin[b];
+                    let u0 = x[i] * pre;
+                    let u1 = if i + 1 < d { x[i + 1] * pre } else { 0.0 };
+                    codes.push(self.q_block.encode1(c * u0 - s * u1));
+                    codes.push(self.q_block.encode1(s * u0 + c * u1));
+                }
+            }
+            Variant::Rotor3D => {
+                let nfull = d / 3;
+                for b in 0..nfull {
+                    let i = b * 3;
+                    let y = self.rotor_fwd(b, [x[i] * pre, x[i + 1] * pre, x[i + 2] * pre]);
+                    for yy in y {
+                        codes.push(self.q_block.encode1(yy));
+                    }
+                }
+                match d % 3 {
+                    2 => {
+                        let i = 3 * nfull;
+                        let (c, s) = self.bank.cos_sin[0];
+                        let u0 = x[i] * pre;
+                        let u1 = x[i + 1] * pre;
+                        codes.push(self.q_tail.encode1(c * u0 - s * u1));
+                        codes.push(self.q_tail.encode1(s * u0 + c * u1));
+                    }
+                    1 => codes.push(self.q_tail.encode1(x[3 * nfull] * pre)),
+                    _ => {}
+                }
+            }
+            Variant::Dense => {
+                for i in 0..d {
+                    let row = &self.bank.dense[i * d..(i + 1) * d];
+                    let mut s = 0.0f32;
+                    for j in 0..d {
+                        s += row[j] * x[j];
+                    }
+                    codes.push(self.q_block.encode1(s * pre));
+                }
+            }
+            Variant::Grouped8D => {
+                // reuse the fused body through a temporary: encode is not
+                // on the grouped variant's hot path (ablation only)
+                let g8 = d.div_ceil(8);
+                for b in 0..g8 {
+                    let base = b * 8;
+                    let mut v = [0.0f32; 8];
+                    for (j, slot) in v.iter_mut().enumerate() {
+                        if base + j < d {
+                            *slot = x[base + j] * pre;
+                        }
+                    }
+                    let (qa_l, qa_r) = (self.bank.q_l[2 * b], self.bank.q_r[2 * b]);
+                    let lo = quat::sandwich(qa_l, [v[0], v[1], v[2], v[3]], qa_r);
+                    let hi = quat::sandwich(qa_l, [v[4], v[5], v[6], v[7]], qa_r);
+                    let merged = [lo[0], lo[1], lo[2], lo[3], hi[0], hi[1], hi[2], hi[3]];
+                    let mut mixed = [0.0f32; 8];
+                    for (dst, &src) in P8.iter().enumerate() {
+                        mixed[dst] = merged[src];
+                    }
+                    let (qb_l, qb_r) = (self.bank.q_l[2 * b + 1], self.bank.q_r[2 * b + 1]);
+                    let lo2 = quat::sandwich(qb_l, [mixed[0], mixed[1], mixed[2], mixed[3]], qb_r);
+                    let hi2 = quat::sandwich(qb_l, [mixed[4], mixed[5], mixed[6], mixed[7]], qb_r);
+                    for j in 0..8 {
+                        let y = if j < 4 { lo2[j] } else { hi2[j - 4] };
+                        codes.push(self.q_block.encode1(y));
+                    }
+                }
+            }
+        }
+    }
+
+    fn dequantize_unrotate(&self, codes: &[u8], post: f32, out: &mut [f32]) {
+        let d = self.cfg.d;
+        match self.cfg.variant {
+            Variant::IsoFull => {
+                for b in 0..d.div_ceil(4) {
+                    let i = b * 4;
+                    let yq: [f32; 4] =
+                        std::array::from_fn(|j| self.q_block.decode1(codes[i + j]));
+                    let r = quat::sandwich_inv(self.bank.q_l[b], yq, self.bank.q_r[b]);
+                    for j in 0..4 {
+                        if i + j < d {
+                            out[i + j] = r[j] * post;
+                        }
+                    }
+                }
+            }
+            Variant::IsoFast => {
+                for b in 0..d.div_ceil(4) {
+                    let i = b * 4;
+                    let yq: [f32; 4] =
+                        std::array::from_fn(|j| self.q_block.decode1(codes[i + j]));
+                    let r = quat::hamilton(quat::conjugate(self.bank.q_l[b]), yq);
+                    for j in 0..4 {
+                        if i + j < d {
+                            out[i + j] = r[j] * post;
+                        }
+                    }
+                }
+            }
+            Variant::Planar2D => {
+                for b in 0..d.div_ceil(2) {
+                    let i = b * 2;
+                    let (c, s) = self.bank.cos_sin[b];
+                    let y0 = self.q_block.decode1(codes[i]);
+                    let y1 = self.q_block.decode1(codes[i + 1]);
+                    out[i] = (c * y0 + s * y1) * post;
+                    if i + 1 < d {
+                        out[i + 1] = (-s * y0 + c * y1) * post;
+                    }
+                }
+            }
+            Variant::Rotor3D => {
+                let nfull = d / 3;
+                for b in 0..nfull {
+                    let i = b * 3;
+                    let yq = [
+                        self.q_block.decode1(codes[i]),
+                        self.q_block.decode1(codes[i + 1]),
+                        self.q_block.decode1(codes[i + 2]),
+                    ];
+                    let r = self.rotor_inv(b, yq);
+                    out[i] = r[0] * post;
+                    out[i + 1] = r[1] * post;
+                    out[i + 2] = r[2] * post;
+                }
+                match d % 3 {
+                    2 => {
+                        let i = 3 * nfull;
+                        let (c, s) = self.bank.cos_sin[0];
+                        let y0 = self.q_tail.decode1(codes[i]);
+                        let y1 = self.q_tail.decode1(codes[i + 1]);
+                        out[i] = (c * y0 + s * y1) * post;
+                        out[i + 1] = (-s * y0 + c * y1) * post;
+                    }
+                    1 => {
+                        let i = 3 * nfull;
+                        out[i] = self.q_tail.decode1(codes[i]) * post;
+                    }
+                    _ => {}
+                }
+            }
+            Variant::Dense => {
+                out.fill(0.0);
+                for i in 0..d {
+                    let row = &self.bank.dense[i * d..(i + 1) * d];
+                    let yv = self.q_block.decode1(codes[i]);
+                    for j in 0..d {
+                        out[j] += yv * row[j];
+                    }
+                }
+                for o in out.iter_mut() {
+                    *o *= post;
+                }
+            }
+            Variant::Grouped8D => {
+                for b in 0..d.div_ceil(8) {
+                    let base = b * 8;
+                    let yq: [f32; 8] =
+                        std::array::from_fn(|j| self.q_block.decode1(codes[base + j]));
+                    let (qa_l, qa_r) = (self.bank.q_l[2 * b], self.bank.q_r[2 * b]);
+                    let (qb_l, qb_r) = (self.bank.q_l[2 * b + 1], self.bank.q_r[2 * b + 1]);
+                    let lo3 = quat::sandwich_inv(qb_l, [yq[0], yq[1], yq[2], yq[3]], qb_r);
+                    let hi3 = quat::sandwich_inv(qb_l, [yq[4], yq[5], yq[6], yq[7]], qb_r);
+                    let back = [lo3[0], lo3[1], lo3[2], lo3[3], hi3[0], hi3[1], hi3[2], hi3[3]];
+                    let mut unmixed = [0.0f32; 8];
+                    for (dst, &src) in P8.iter().enumerate() {
+                        unmixed[src] = back[dst];
+                    }
+                    let lo4 =
+                        quat::sandwich_inv(qa_l, [unmixed[0], unmixed[1], unmixed[2], unmixed[3]], qa_r);
+                    let hi4 =
+                        quat::sandwich_inv(qa_l, [unmixed[4], unmixed[5], unmixed[6], unmixed[7]], qa_r);
+                    for j in 0..8 {
+                        if base + j < d {
+                            out[base + j] = (if j < 4 { lo4[j] } else { hi4[j - 4] }) * post;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Unfused "module-level" path (paper §9.4): separate normalize / rotate /
+// quantize / dequantize / unrotate passes with materialized per-block
+// rotation matrices and intermediate buffers — models a naive PyTorch
+// module composition.
+// ----------------------------------------------------------------------
+
+/// Unfused reference: multiple passes, heap intermediates, dense 4×4
+/// (or 3×3-in-multivector) block matrices.
+pub struct Stage1Unfused {
+    fused: Stage1,
+    /// materialized per-block matrices (IsoFull/IsoFast/Grouped8D)
+    block_mats: Vec<[f32; 16]>,
+}
+
+impl Stage1Unfused {
+    pub fn new(cfg: Stage1Config) -> Stage1Unfused {
+        let fused = Stage1::new(cfg);
+        Stage1Unfused::from_fused(fused)
+    }
+
+    pub fn from_fused(fused: Stage1) -> Stage1Unfused {
+        use crate::math::so4;
+        let block_mats = match fused.cfg.variant {
+            Variant::IsoFull => fused
+                .bank
+                .q_l
+                .iter()
+                .zip(&fused.bank.q_r)
+                .map(|(&l, &r)| so4::isoclinic_matrix(l, r))
+                .collect(),
+            Variant::IsoFast => fused
+                .bank
+                .q_l
+                .iter()
+                .map(|&l| so4::left_isoclinic_matrix(l))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Stage1Unfused { fused, block_mats }
+    }
+
+    /// Multi-pass roundtrip with per-stage buffers.
+    pub fn roundtrip(&self, x: &[f32]) -> Vec<f32> {
+        let d = self.fused.cfg.d;
+        // pass 1: norm
+        let rho = l2_norm(x);
+        // pass 2: normalize (new buffer)
+        let xbar: Vec<f32> = x.iter().map(|&v| v / rho.max(EPS)).collect();
+        // pass 3: rotate (new buffer)
+        let y = self.rotate_passes(&xbar);
+        // pass 4: scale + quantize to indices (new buffer).  The rotor
+        // baseline's ragged tail uses the k=2 quantizer, matching the
+        // fused path.
+        let s = self.fused.scale;
+        let tail_start = match self.fused.cfg.variant {
+            Variant::Rotor3D => 3 * (d / 3),
+            _ => usize::MAX,
+        };
+        let qz = |i: usize| {
+            if i >= tail_start {
+                &self.fused.q_tail
+            } else {
+                &self.fused.q_block
+            }
+        };
+        let codes: Vec<u8> = y
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| qz(i).encode1(v * s))
+            .collect();
+        // pass 5: dequantize (new buffer)
+        let yq: Vec<f32> = codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| qz(i).decode1(c) / s)
+            .collect();
+        // pass 6: inverse rotate (new buffer)
+        let rec = self.unrotate_passes(&yq);
+        // pass 7: restore norm
+        rec.iter().take(d).map(|&v| v * rho).collect()
+    }
+
+    fn rotate_passes(&self, xbar: &[f32]) -> Vec<f32> {
+        use crate::math::rotor3::{sandwich_multivector, Rotor};
+        use crate::math::so4;
+        let d = self.fused.cfg.d;
+        match self.fused.cfg.variant {
+            Variant::IsoFull | Variant::IsoFast => {
+                let g = d.div_ceil(4);
+                let mut y = vec![0.0f32; g * 4];
+                for b in 0..g {
+                    let mut v = [0.0f32; 4];
+                    for j in 0..4 {
+                        if b * 4 + j < d {
+                            v[j] = xbar[b * 4 + j];
+                        }
+                    }
+                    let r = so4::matvec4(&self.block_mats[b], v);
+                    y[b * 4..b * 4 + 4].copy_from_slice(&r);
+                }
+                y
+            }
+            Variant::Rotor3D => {
+                let nfull = d / 3;
+                let mut y = vec![0.0f32; d];
+                for b in 0..nfull {
+                    let i = b * 3;
+                    let rot = Rotor::from_quaternion(self.fused.bank.q_l[b]);
+                    // the 8-component multivector expansion (see rotor3.rs)
+                    let r = sandwich_multivector(rot, [xbar[i], xbar[i + 1], xbar[i + 2]]);
+                    y[i..i + 3].copy_from_slice(&r);
+                }
+                // tail: planar
+                match d % 3 {
+                    2 => {
+                        let i = 3 * nfull;
+                        let (c, s) = self.fused.bank.cos_sin[0];
+                        y[i] = c * xbar[i] - s * xbar[i + 1];
+                        y[i + 1] = s * xbar[i] + c * xbar[i + 1];
+                    }
+                    1 => y[d - 1] = xbar[d - 1],
+                    _ => {}
+                }
+                y
+            }
+            _ => {
+                // fall back to the fused rotation for variants whose
+                // unfused path is not part of §9.4
+                let mut codes = Vec::new();
+                self.fused.rotate_quantize_codes(xbar, 1.0, &mut codes);
+                codes
+                    .iter()
+                    .map(|&c| self.fused.q_block.decode1(c))
+                    .collect()
+            }
+        }
+    }
+
+    fn unrotate_passes(&self, yq: &[f32]) -> Vec<f32> {
+        use crate::math::rotor3::{sandwich_multivector, Rotor};
+        let d = self.fused.cfg.d;
+        match self.fused.cfg.variant {
+            Variant::IsoFull | Variant::IsoFast => {
+                let g = d.div_ceil(4);
+                let mut out = vec![0.0f32; g * 4];
+                for b in 0..g {
+                    let m = &self.block_mats[b];
+                    let v = [yq[b * 4], yq[b * 4 + 1], yq[b * 4 + 2], yq[b * 4 + 3]];
+                    // Mᵀ v (inverse of orthogonal)
+                    for j in 0..4 {
+                        out[b * 4 + j] =
+                            m[j] * v[0] + m[4 + j] * v[1] + m[8 + j] * v[2] + m[12 + j] * v[3];
+                    }
+                }
+                out
+            }
+            Variant::Rotor3D => {
+                let nfull = d / 3;
+                let mut out = vec![0.0f32; d];
+                for b in 0..nfull {
+                    let i = b * 3;
+                    let rot = Rotor::from_quaternion(self.fused.bank.q_l[b]).reverse();
+                    let r = sandwich_multivector(rot, [yq[i], yq[i + 1], yq[i + 2]]);
+                    out[i..i + 3].copy_from_slice(&r);
+                }
+                match d % 3 {
+                    2 => {
+                        let i = 3 * nfull;
+                        let (c, s) = self.fused.bank.cos_sin[0];
+                        out[i] = c * yq[i] + s * yq[i + 1];
+                        out[i + 1] = -s * yq[i] + c * yq[i + 1];
+                    }
+                    1 => out[d - 1] = yq[d - 1],
+                    _ => {}
+                }
+                out
+            }
+            _ => yq.to_vec(),
+        }
+    }
+}
+
+#[inline(always)]
+pub fn l2_norm(x: &[f32]) -> f32 {
+    // f64 accumulation: x ~ 1e30 would overflow an f32 sum of squares
+    // and poison the whole pipeline with inf/NaN
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let e = (x - y) as f64;
+            e * e
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn gen_batch(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        rng.gaussian_vec_f32(n * d)
+    }
+
+    const ALL: [Variant; 6] = [
+        Variant::IsoFull,
+        Variant::IsoFast,
+        Variant::Planar2D,
+        Variant::Rotor3D,
+        Variant::Dense,
+        Variant::Grouped8D,
+    ];
+
+    #[test]
+    fn roundtrip_reduces_like_quantizer_should() {
+        // reconstruction error must decrease with bit width, per variant
+        let mut rng = Rng::new(1);
+        let d = 128;
+        let x = gen_batch(&mut rng, 256, d);
+        for v in ALL {
+            let mut prev = f64::INFINITY;
+            for bits in [2u8, 3, 4] {
+                let s = Stage1::new(Stage1Config::new(v, d, bits));
+                let mut out = vec![0.0f32; x.len()];
+                s.roundtrip_batch(&x, &mut out, 256);
+                let e = mse(&x, &out);
+                assert!(e < prev, "{v:?} bits={bits}: {e} !< {prev}");
+                assert!(e.is_finite());
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn mse_sane_at_4_bits() {
+        // at 4 bits the relative error should be well under 10%
+        let mut rng = Rng::new(2);
+        let d = 128;
+        let n = 512;
+        let x = gen_batch(&mut rng, n, d);
+        let power = x.iter().map(|&v| (v * v) as f64).sum::<f64>() / x.len() as f64;
+        for v in ALL {
+            let s = Stage1::new(Stage1Config::new(v, d, 4));
+            let mut out = vec![0.0f32; x.len()];
+            s.roundtrip_batch(&x, &mut out, n);
+            let rel = mse(&x, &out) / power;
+            assert!(rel < 0.10, "{v:?}: rel mse {rel}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_matches_roundtrip() {
+        // the packed path and the fused qdq path must agree exactly
+        let mut rng = Rng::new(3);
+        for v in ALL {
+            for d in [64usize, 128] {
+                for bits in [2u8, 3, 4] {
+                    let s = Stage1::new(Stage1Config::new(v, d, bits));
+                    let x = rng.gaussian_vec_f32(d);
+                    let mut fused = vec![0.0f32; d];
+                    s.roundtrip(&x, &mut fused);
+                    let mut enc = Vec::new();
+                    s.encode(&x, &mut enc);
+                    assert_eq!(enc.len(), s.encoded_len());
+                    let mut dec = vec![0.0f32; d];
+                    s.decode(&enc, &mut dec);
+                    for i in 0..d {
+                        assert!(
+                            (fused[i] - dec[i]).abs() < 1e-5,
+                            "{v:?} d={d} b={bits} i={i}: {} vs {}",
+                            fused[i],
+                            dec[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_dims_supported() {
+        let mut rng = Rng::new(4);
+        for v in ALL {
+            for d in [63usize, 65, 66, 127] {
+                let s = Stage1::new(Stage1Config::new(v, d, 4));
+                let x = rng.gaussian_vec_f32(d);
+                let mut out = vec![0.0f32; d];
+                s.roundtrip(&x, &mut out);
+                assert!(out.iter().all(|o| o.is_finite()), "{v:?} d={d}");
+                let rel = mse(&x, &out)
+                    / (x.iter().map(|&v| (v * v) as f64).sum::<f64>() / d as f64);
+                assert!(rel < 0.2, "{v:?} d={d}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_equivariance() {
+        // xhat(c·x) == c·xhat(x) thanks to the norm split (paper eq. 3)
+        let mut rng = Rng::new(5);
+        let d = 64;
+        let x = rng.gaussian_vec_f32(d);
+        let x3: Vec<f32> = x.iter().map(|&v| 3.0 * v).collect();
+        for v in ALL {
+            let s = Stage1::new(Stage1Config::new(v, d, 3));
+            let mut a = vec![0.0f32; d];
+            let mut b = vec![0.0f32; d];
+            s.roundtrip(&x, &mut a);
+            s.roundtrip(&x3, &mut b);
+            for i in 0..d {
+                assert!(
+                    (3.0 * a[i] - b[i]).abs() < 1e-4 * b[i].abs().max(1.0),
+                    "{v:?} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_safe() {
+        for v in ALL {
+            let s = Stage1::new(Stage1Config::new(v, 64, 2));
+            let x = vec![0.0f32; 64];
+            let mut out = vec![1.0f32; 64];
+            s.roundtrip(&x, &mut out);
+            assert!(out.iter().all(|o| o.is_finite()), "{v:?}");
+            // rho = 0 → reconstruction must be exactly 0
+            assert!(out.iter().all(|&o| o == 0.0), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn f16_path_close_to_f32() {
+        let mut rng = Rng::new(6);
+        let d = 128;
+        let n = 32;
+        let x = gen_batch(&mut rng, n, d);
+        let xh: Vec<u16> = x.iter().map(|&v| f16::f32_to_f16_bits(v)).collect();
+        for v in [Variant::IsoFull, Variant::IsoFast, Variant::Planar2D, Variant::Rotor3D] {
+            let s = Stage1::new(Stage1Config::new(v, d, 4));
+            let mut out32 = vec![0.0f32; n * d];
+            s.roundtrip_batch(&x, &mut out32, n);
+            let mut out16 = vec![0u16; n * d];
+            s.roundtrip_batch_f16(&xh, &mut out16, n);
+            let out16f: Vec<f32> = out16.iter().map(|&h| f16::f16_bits_to_f32(h)).collect();
+            // quantization error dominates fp16 rounding: paths agree closely
+            let diff = mse(&out32, &out16f);
+            assert!(diff < 1e-4, "{v:?}: {diff}");
+        }
+    }
+
+    #[test]
+    fn unfused_matches_fused() {
+        let mut rng = Rng::new(7);
+        let d = 128;
+        for v in [Variant::IsoFull, Variant::IsoFast, Variant::Rotor3D] {
+            let cfg = Stage1Config::new(v, d, 4);
+            let fused = Stage1::new(cfg.clone());
+            let unfused = Stage1Unfused::from_fused(fused.clone());
+            let x = rng.gaussian_vec_f32(d);
+            let mut a = vec![0.0f32; d];
+            fused.roundtrip(&x, &mut a);
+            let b = unfused.roundtrip(&x);
+            for i in 0..d {
+                assert!(
+                    (a[i] - b[i]).abs() < 1e-4 * a[i].abs().max(1.0) + 1e-5,
+                    "{v:?} i={i}: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_improves_concentrated_blocks() {
+        // eq. 40's operational claim (mirrors the python test)
+        let mut rng = Rng::new(8);
+        let d = 128;
+        let n = 512;
+        let mut x = vec![0.0f32; n * d];
+        for r in 0..n {
+            for b in 0..d / 4 {
+                let base = rng.gaussian() as f32;
+                x[r * d + b * 4] = base;
+                x[r * d + b * 4 + 1] = 0.05 * base + 0.01 * rng.gaussian() as f32;
+                x[r * d + b * 4 + 2] = 0.03 * base + 0.01 * rng.gaussian() as f32;
+                x[r * d + b * 4 + 3] = 0.02 * base + 0.01 * rng.gaussian() as f32;
+            }
+        }
+        let rotated = Stage1::new(Stage1Config::new(Variant::IsoFull, d, 2));
+        let ident = Stage1::with_bank(
+            Stage1Config::new(Variant::IsoFull, d, 2),
+            ParamBank::identity(Variant::IsoFull, d),
+        );
+        let mut out = vec![0.0f32; n * d];
+        rotated.roundtrip_batch(&x, &mut out, n);
+        let mse_rot = mse(&x, &out);
+        ident.roundtrip_batch(&x, &mut out, n);
+        let mse_id = mse(&x, &out);
+        assert!(
+            mse_rot < mse_id * 0.8,
+            "rotation should help concentrated data: {mse_rot} vs {mse_id}"
+        );
+    }
+
+    #[test]
+    fn grouped8_mixes_across_4blocks() {
+        // a vector whose energy lives in one 4-lane group should spread
+        // into the adjacent group under the 8D two-stage transform —
+        // verified via decode of the encoded form being exact roundtrip
+        let d = 16;
+        let s = Stage1::new(Stage1Config::new(Variant::Grouped8D, d, 4));
+        let mut x = vec![0.0f32; d];
+        x[0] = 1.0;
+        x[1] = -0.5;
+        let mut out = vec![0.0f32; d];
+        s.roundtrip(&x, &mut out);
+        assert!(out.iter().all(|o| o.is_finite()));
+        let rel = mse(&x, &out) / (x.iter().map(|&v| (v * v) as f64).sum::<f64>() / d as f64);
+        assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn encoded_len_accounting() {
+        let s = Stage1::new(Stage1Config::new(Variant::IsoFull, 128, 4));
+        assert_eq!(s.encoded_len(), 4 + 64); // f32 norm + 128 codes @ 4 bits
+        let s2 = Stage1::new(Stage1Config::new(Variant::IsoFull, 128, 2));
+        assert_eq!(s2.encoded_len(), 4 + 32);
+        let s3 = Stage1::new(Stage1Config::new(Variant::Rotor3D, 128, 3));
+        assert_eq!(s3.encoded_len(), 4 + 48);
+    }
+}

@@ -1,0 +1,218 @@
+//! Stage-2 residual correction (paper §8): QJL-style quantized
+//! Johnson–Lindenstrauss projection of the stage-1 residual
+//! r = x − x̂_mse, providing an (approximately) unbiased inner-product
+//! correction ⟨q, x⟩ ≈ ⟨q, x̂⟩ + ĉ(q, r).
+//!
+//! Following QJL (paper [3]): project the residual with a Gaussian
+//! matrix S (m × d), keep only the *signs* of Sr (1 bit each) plus the
+//! residual norm ‖r‖; estimate the inner product against a query q as
+//!
+//! ```text
+//! ĉ(q, r) = √(π/2) / m · ‖r‖ · ⟨sign(Sr), Sq⟩
+//! ```
+//!
+//! which is unbiased for the cosine similarity under Gaussian S (the
+//! sign-projection estimator).  This module makes IsoQuant a drop-in
+//! stage-1 inside a TurboQuant-style two-stage pipeline (§9.6 item 1).
+
+use crate::util::prng::Rng;
+
+/// Shared projection matrix (one per model/layer, reused across tokens).
+pub struct QjlProjector {
+    pub d: usize,
+    pub m: usize,
+    /// row-major m × d Gaussian matrix
+    s: Vec<f32>,
+}
+
+/// Compressed residual: 1-bit signs + the residual norm.
+#[derive(Clone, Debug)]
+pub struct QjlResidual {
+    pub signs: Vec<u8>, // bit-packed, ⌈m/8⌉ bytes
+    pub norm: f32,
+}
+
+impl QjlProjector {
+    pub fn new(d: usize, m: usize, seed: u64) -> QjlProjector {
+        let mut rng = Rng::new(seed);
+        QjlProjector {
+            d,
+            m,
+            s: rng.gaussian_vec_f32(m * d),
+        }
+    }
+
+    /// Bytes per stored residual.
+    pub fn encoded_len(&self) -> usize {
+        self.m.div_ceil(8) + 4
+    }
+
+    /// Compress a residual vector r (length d).
+    pub fn encode(&self, r: &[f32]) -> QjlResidual {
+        assert_eq!(r.len(), self.d);
+        let norm = r.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        let mut signs = vec![0u8; self.m.div_ceil(8)];
+        for i in 0..self.m {
+            let row = &self.s[i * self.d..(i + 1) * self.d];
+            let mut dot = 0.0f32;
+            for j in 0..self.d {
+                dot += row[j] * r[j];
+            }
+            if dot >= 0.0 {
+                signs[i / 8] |= 1 << (i % 8);
+            }
+        }
+        QjlResidual { signs, norm }
+    }
+
+    /// Estimate ⟨q, r⟩ from the compressed residual (QJL estimator).
+    pub fn inner_product(&self, q: &[f32], res: &QjlResidual) -> f32 {
+        assert_eq!(q.len(), self.d);
+        if res.norm == 0.0 {
+            return 0.0;
+        }
+        let qn = q.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        if qn == 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
+        let mut sq_norm_acc = 0.0f64;
+        for i in 0..self.m {
+            let row = &self.s[i * self.d..(i + 1) * self.d];
+            let mut sq = 0.0f32;
+            for j in 0..self.d {
+                sq += row[j] * q[j];
+            }
+            let sgn = if res.signs[i / 8] >> (i % 8) & 1 == 1 {
+                1.0f64
+            } else {
+                -1.0f64
+            };
+            acc += sgn * sq as f64;
+            sq_norm_acc += (sq as f64) * (sq as f64);
+        }
+        // E[sign(⟨s,r⟩)·⟨s,q⟩] = √(2/π) ‖q‖ cos∠(q,r); invert:
+        let scale = (std::f64::consts::PI / 2.0).sqrt() / self.m as f64;
+        let cos_est = (acc * scale) / qn as f64;
+        let _ = sq_norm_acc;
+        (cos_est * res.norm as f64 * qn as f64) as f32
+    }
+}
+
+/// Two-stage pipeline glue: stage-1 reconstruction plus stage-2 corrected
+/// inner products (the quantity attention cares about, §9.6 item 2).
+pub struct TwoStage {
+    pub stage1: crate::quant::pipeline::Stage1,
+    pub projector: QjlProjector,
+}
+
+/// Compressed two-stage representation of one vector.
+pub struct TwoStageCode {
+    pub stage1_bytes: Vec<u8>,
+    pub residual: QjlResidual,
+}
+
+impl TwoStage {
+    pub fn new(stage1: crate::quant::pipeline::Stage1, m: usize, seed: u64) -> TwoStage {
+        let d = stage1.d();
+        TwoStage {
+            stage1,
+            projector: QjlProjector::new(d, m, seed),
+        }
+    }
+
+    pub fn encode(&self, x: &[f32]) -> TwoStageCode {
+        let mut s1 = Vec::new();
+        self.stage1.encode(x, &mut s1);
+        let mut xhat = vec![0.0f32; x.len()];
+        self.stage1.decode(&s1, &mut xhat);
+        let r: Vec<f32> = x.iter().zip(&xhat).map(|(&a, &b)| a - b).collect();
+        TwoStageCode {
+            stage1_bytes: s1,
+            residual: self.projector.encode(&r),
+        }
+    }
+
+    /// Corrected inner-product estimate ⟨q, x⟩ ≈ ⟨q, x̂⟩ + ĉ(q, r).
+    pub fn inner_product(&self, q: &[f32], code: &TwoStageCode) -> f32 {
+        let mut xhat = vec![0.0f32; q.len()];
+        self.stage1.decode(&code.stage1_bytes, &mut xhat);
+        let base: f32 = q.iter().zip(&xhat).map(|(&a, &b)| a * b).sum();
+        base + self.projector.inner_product(q, &code.residual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::params::Variant;
+    use crate::quant::pipeline::{Stage1, Stage1Config};
+
+    #[test]
+    fn sign_estimator_roughly_unbiased() {
+        // average over many projectors: estimate of ⟨q, r⟩ converges
+        let d = 64;
+        let mut rng = Rng::new(1);
+        let r: Vec<f32> = rng.gaussian_vec_f32(d);
+        let q: Vec<f32> = rng.gaussian_vec_f32(d);
+        let truth: f32 = q.iter().zip(&r).map(|(&a, &b)| a * b).sum();
+        let mut est_sum = 0.0f64;
+        let trials = 30;
+        for t in 0..trials {
+            let p = QjlProjector::new(d, 256, 100 + t);
+            let code = p.encode(&r);
+            est_sum += p.inner_product(&q, &code) as f64;
+        }
+        let est = est_sum / trials as f64;
+        let scale = (r.iter().map(|&v| (v * v) as f64).sum::<f64>()
+            * q.iter().map(|&v| (v * v) as f64).sum::<f64>())
+        .sqrt();
+        assert!(
+            (est - truth as f64).abs() < 0.25 * scale,
+            "est {est} truth {truth} scale {scale}"
+        );
+    }
+
+    #[test]
+    fn residual_correction_reduces_inner_product_error() {
+        // §8/§9.6: two-stage beats stage-1-only on inner products
+        let d = 128;
+        let mut rng = Rng::new(2);
+        let s1 = Stage1::new(Stage1Config::new(Variant::IsoFull, d, 2));
+        let two = TwoStage::new(s1.clone(), 512, 7);
+        let mut err1 = 0.0f64;
+        let mut err2 = 0.0f64;
+        let n = 200;
+        for _ in 0..n {
+            let x = rng.gaussian_vec_f32(d);
+            let q = rng.gaussian_vec_f32(d);
+            let truth: f32 = q.iter().zip(&x).map(|(&a, &b)| a * b).sum();
+            let code = two.encode(&x);
+            let mut xhat = vec![0.0f32; d];
+            s1.decode(&code.stage1_bytes, &mut xhat);
+            let base: f32 = q.iter().zip(&xhat).map(|(&a, &b)| a * b).sum();
+            let corrected = two.inner_product(&q, &code);
+            err1 += ((base - truth) as f64).powi(2);
+            err2 += ((corrected - truth) as f64).powi(2);
+        }
+        assert!(
+            err2 < err1,
+            "corrected {err2} should beat stage-1-only {err1}"
+        );
+    }
+
+    #[test]
+    fn zero_residual_estimates_zero() {
+        let p = QjlProjector::new(16, 64, 3);
+        let code = p.encode(&vec![0.0; 16]);
+        assert_eq!(code.norm, 0.0);
+        let q = vec![1.0f32; 16];
+        assert_eq!(p.inner_product(&q, &code), 0.0);
+    }
+
+    #[test]
+    fn encoded_len() {
+        let p = QjlProjector::new(128, 256, 1);
+        assert_eq!(p.encoded_len(), 32 + 4);
+    }
+}

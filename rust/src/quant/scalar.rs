@@ -1,0 +1,310 @@
+//! Scalar quantizers (paper §3 item 2): Lloyd–Max codebooks trained on
+//! the analytic rotated-coordinate marginal (shipped as constants shared
+//! with the Pallas kernels — see `codebooks.rs`) and a symmetric uniform
+//! quantizer.  Includes a Lloyd trainer used by tests and by codebook
+//! retraining on empirical data (ablation axis).
+
+use crate::quant::codebooks;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantKind {
+    /// Lloyd–Max codebook for the f_k marginal (paper eq. 36).
+    Lloyd,
+    /// Symmetric mid-rise uniform on [-√k, √k].
+    Uniform,
+}
+
+/// A small scalar codebook quantizer (≤ 16 levels at b ≤ 4).
+///
+/// Hot-path layout (§Perf): levels and boundaries live in fixed-size
+/// arrays (no heap indirection); `encode1` is a branchless 4-step binary
+/// search over boundaries padded with +∞, so every bit width costs the
+/// same 4 predictable compare+adds — the CPU analogue of the fused CUDA
+/// kernel's unrolled compile-time codebook.
+#[derive(Clone, Debug)]
+pub struct ScalarQuantizer {
+    pub bits: u8,
+    n_levels: usize,
+    levels: [f32; 16],
+    /// bounds[i] separates level i from level i+1; padded with +∞
+    bounds: [f32; 15],
+}
+
+impl ScalarQuantizer {
+    pub fn from_levels(bits: u8, levels_in: Vec<f32>) -> ScalarQuantizer {
+        assert_eq!(levels_in.len(), 1usize << bits, "level count != 2^bits");
+        assert!(
+            levels_in.windows(2).all(|w| w[0] < w[1]),
+            "levels must be strictly ascending"
+        );
+        let n_levels = levels_in.len();
+        let mut levels = [0.0f32; 16];
+        levels[..n_levels].copy_from_slice(&levels_in);
+        // pad the tail with the top level so a (padded-)search result of
+        // an out-of-range index still decodes to something sane
+        for i in n_levels..16 {
+            levels[i] = levels_in[n_levels - 1];
+        }
+        let mut bounds = [f32::INFINITY; 15];
+        for (i, w) in levels_in.windows(2).enumerate() {
+            bounds[i] = 0.5 * (w[0] + w[1]);
+        }
+        ScalarQuantizer {
+            bits,
+            n_levels,
+            levels,
+            bounds,
+        }
+    }
+
+    /// The shipped Lloyd–Max codebook for block size k.
+    pub fn lloyd(k: usize, bits: u8) -> ScalarQuantizer {
+        let levels = codebooks::lloyd_codebook(k, bits).to_vec();
+        ScalarQuantizer::from_levels(bits, levels)
+    }
+
+    /// Lloyd–Max for N(0,1) (grouped-8D / unnormalized ablations).
+    pub fn gaussian(bits: u8) -> ScalarQuantizer {
+        ScalarQuantizer::from_levels(bits, codebooks::gaussian_lloyd_codebook(bits).to_vec())
+    }
+
+    /// Symmetric mid-rise uniform quantizer on [-clip, clip], matching
+    /// `python/compile/kernels/quantizer.py::quant_dequant_uniform`.
+    pub fn uniform(bits: u8, clip: f32) -> ScalarQuantizer {
+        let n = 1usize << bits;
+        let step = 2.0 * clip / n as f32;
+        let levels = (0..n)
+            .map(|i| (i as f32 + 0.5) * step - clip)
+            .collect();
+        ScalarQuantizer::from_levels(bits, levels)
+    }
+
+    pub fn for_kind(kind: QuantKind, k: usize, bits: u8) -> ScalarQuantizer {
+        match kind {
+            QuantKind::Lloyd => ScalarQuantizer::lloyd(k, bits),
+            QuantKind::Uniform => ScalarQuantizer::uniform(bits, (k as f32).sqrt()),
+        }
+    }
+
+    pub fn levels(&self) -> &[f32] {
+        &self.levels[..self.n_levels]
+    }
+
+    /// Nearest-level index: branchless 4-step binary search over the
+    /// ∞-padded boundary array.  Identical cost for b ∈ {2, 3, 4}.
+    #[inline(always)]
+    pub fn encode1(&self, x: f32) -> u8 {
+        let b = &self.bounds;
+        let mut lo = 8 * usize::from(x > b[7]);
+        lo += 4 * usize::from(x > b[lo + 3]);
+        lo += 2 * usize::from(x > b[lo + 1]);
+        lo += usize::from(x > b[lo]);
+        lo as u8
+    }
+
+    #[inline(always)]
+    pub fn decode1(&self, idx: u8) -> f32 {
+        self.levels[(idx & 15) as usize]
+    }
+
+    /// Fused quantize→dequantize of one value.
+    #[inline(always)]
+    pub fn qdq1(&self, x: f32) -> f32 {
+        self.levels[(self.encode1(x) & 15) as usize]
+    }
+
+    pub fn encode_slice(&self, xs: &[f32], out: &mut Vec<u8>) {
+        out.extend(xs.iter().map(|&x| self.encode1(x)));
+    }
+
+    pub fn qdq_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.qdq1(*x);
+        }
+    }
+
+    /// Mean squared distortion of this quantizer on a sample.
+    pub fn distortion(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| {
+                let e = (x - self.qdq1(x)) as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+}
+
+/// Classic Lloyd iteration on empirical samples; returns sorted levels.
+/// Mirrors `python/compile/kernels/quantizer.py::lloyd_max_train`.
+pub fn train_lloyd(samples: &[f32], n_levels: usize, iters: usize) -> Vec<f32> {
+    assert!(n_levels >= 2 && !samples.is_empty());
+    let mut s: Vec<f32> = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = s[0] as f64;
+    let hi = s[s.len() - 1] as f64;
+    let mut levels: Vec<f64> = (1..=n_levels)
+        .map(|i| lo + (hi - lo) * i as f64 / (n_levels + 1) as f64)
+        .collect();
+    let mut sums = vec![0.0f64; n_levels];
+    let mut counts = vec![0usize; n_levels];
+    for _ in 0..iters {
+        sums.fill(0.0);
+        counts.fill(0);
+        // partition by boundaries (s sorted → sweep)
+        let mut j = 0usize;
+        for &x in &s {
+            while j + 1 < n_levels && (x as f64) > 0.5 * (levels[j] + levels[j + 1]) {
+                j += 1;
+            }
+            // x may belong to an earlier cell when sweeping restarted; since
+            // s is sorted j only advances — correct.
+            sums[j] += x as f64;
+            counts[j] += 1;
+        }
+        let mut moved = 0.0f64;
+        for i in 0..n_levels {
+            if counts[i] > 0 {
+                let nl = sums[i] / counts[i] as f64;
+                moved = moved.max((nl - levels[i]).abs());
+                levels[i] = nl;
+            }
+        }
+        // levels must stay sorted; Lloyd preserves order, assert in debug
+        debug_assert!(levels.windows(2).all(|w| w[0] <= w[1]));
+        if moved < 1e-10 {
+            break;
+        }
+    }
+    levels.iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn shipped_codebooks_valid() {
+        for k in [2, 3, 4] {
+            for bits in [2u8, 3, 4] {
+                let q = ScalarQuantizer::lloyd(k, bits);
+                assert_eq!(q.levels().len(), 1 << bits);
+            }
+        }
+    }
+
+    #[test]
+    fn codebooks_symmetric() {
+        for k in [2usize, 3, 4] {
+            let q = ScalarQuantizer::lloyd(k, 4);
+            let l = q.levels();
+            for i in 0..l.len() {
+                assert!(
+                    (l[i] + l[l.len() - 1 - i]).abs() < 6e-3,
+                    "k={k} level {i}: {} vs {}",
+                    l[i],
+                    l[l.len() - 1 - i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_is_nearest_neighbor() {
+        let q = ScalarQuantizer::lloyd(4, 3);
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let x = rng.gaussian() as f32 * 2.0;
+            let idx = q.encode1(x) as usize;
+            let best = q
+                .levels()
+                .iter()
+                .enumerate()
+                .min_by(|a, b| {
+                    (a.1 - x).abs().partial_cmp(&(b.1 - x).abs()).unwrap()
+                })
+                .unwrap()
+                .0;
+            // ties at exact boundaries can go either way — accept both
+            let d_idx = (q.levels()[idx] - x).abs();
+            let d_best = (q.levels()[best] - x).abs();
+            assert!((d_idx - d_best).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn qdq_idempotent() {
+        let q = ScalarQuantizer::lloyd(2, 2);
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            let x = rng.gaussian() as f32;
+            let once = q.qdq1(x);
+            assert_eq!(q.qdq1(once), once);
+        }
+    }
+
+    #[test]
+    fn uniform_matches_python_formula() {
+        // python: idx = clip(floor((clip(x) + c)/step), 0, n-1); out = (idx+.5)*step - c
+        let bits = 3u8;
+        let clip = 2.0f32;
+        let q = ScalarQuantizer::uniform(bits, clip);
+        let n = 1 << bits;
+        let step = 2.0 * clip / n as f32;
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let x = rng.gaussian() as f32 * 2.0;
+            let xc = x.clamp(-clip, clip - 1e-7 * clip);
+            let idx = (((xc + clip) / step).floor()).clamp(0.0, (n - 1) as f32);
+            let want = (idx + 0.5) * step - clip;
+            assert!(
+                (q.qdq1(x) - want).abs() < 1e-5,
+                "x={x} got={} want={want}",
+                q.qdq1(x)
+            );
+        }
+    }
+
+    #[test]
+    fn distortion_decreases_with_bits() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.gaussian() as f32).collect();
+        let d2 = ScalarQuantizer::gaussian(2).distortion(&xs);
+        let d3 = ScalarQuantizer::gaussian(3).distortion(&xs);
+        let d4 = ScalarQuantizer::gaussian(4).distortion(&xs);
+        assert!(d2 > d3 && d3 > d4, "{d2} {d3} {d4}");
+    }
+
+    #[test]
+    fn trained_lloyd_beats_uniform_on_gaussian() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.gaussian() as f32).collect();
+        let levels = train_lloyd(&xs, 8, 100);
+        let trained = ScalarQuantizer::from_levels(3, levels);
+        let uniform = ScalarQuantizer::uniform(3, 3.0);
+        assert!(trained.distortion(&xs) < uniform.distortion(&xs));
+    }
+
+    #[test]
+    fn rust_trainer_close_to_shipped_gaussian_codebook() {
+        // the shipped python-trained gaussian codebook and our rust
+        // trainer should agree to sampling error
+        let mut rng = Rng::new(6);
+        let xs: Vec<f32> = (0..400_000).map(|_| rng.gaussian() as f32).collect();
+        let levels = train_lloyd(&xs, 8, 200);
+        let shipped = codebooks::gaussian_lloyd_codebook(3);
+        for (a, b) in levels.iter().zip(shipped) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "level count")]
+    fn from_levels_validates_count() {
+        ScalarQuantizer::from_levels(2, vec![0.0, 1.0]);
+    }
+}

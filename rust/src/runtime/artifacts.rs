@@ -1,0 +1,293 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  Parses `artifacts/manifest.json` and exposes typed
+//! specs for every AOT-compiled graph plus the model geometry.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoDtype {
+    F32,
+    F16,
+    I32,
+}
+
+impl IoDtype {
+    fn from_str(s: &str) -> Result<IoDtype> {
+        Ok(match s {
+            "f32" => IoDtype::F32,
+            "f16" => IoDtype::F16,
+            "i32" => IoDtype::I32,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: IoDtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Model geometry (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_chunk: usize,
+    pub n_params: usize,
+    pub serve_batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub weights_file: String,
+    pub weight_specs: Vec<(String, Vec<usize>)>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parse manifest.json")?;
+        let m = root.get("model").context("manifest missing 'model'")?;
+        let mu = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("model.{k} missing"))
+        };
+        let model = ModelMeta {
+            vocab: mu("vocab")?,
+            d_model: mu("d_model")?,
+            n_heads: mu("n_heads")?,
+            d_head: mu("d_head")?,
+            n_layers: mu("n_layers")?,
+            d_ff: mu("d_ff")?,
+            max_seq: mu("max_seq")?,
+            prefill_chunk: mu("prefill_chunk")?,
+            n_params: mu("n_params")?,
+            serve_batch: mu("serve_batch")?,
+        };
+        let weights_file = root
+            .get("weights")
+            .and_then(|v| v.as_str())
+            .unwrap_or("weights.bin")
+            .to_string();
+        let mut weight_specs = Vec::new();
+        for w in root
+            .get("weight_specs")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+        {
+            let name = w
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("weight_specs entry missing name")?
+                .to_string();
+            let shape = w
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .context("weight_specs entry missing shape")?
+                .iter()
+                .map(|v| v.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            weight_specs.push((name, shape));
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing 'artifacts'")?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("artifact missing name")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .context("artifact missing file")?
+                .to_string();
+            let mut inputs = Vec::new();
+            for i in a.get("inputs").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                inputs.push(IoSpec {
+                    name: i
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    shape: i
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .context("input missing shape")?
+                        .iter()
+                        .map(|v| v.as_usize().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: IoDtype::from_str(
+                        i.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"),
+                    )?,
+                });
+            }
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(mm)) = a.get("meta") {
+                for (k, v) in mm {
+                    let vs = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => {
+                            if n.fract() == 0.0 {
+                                format!("{}", *n as i64)
+                            } else {
+                                format!("{n}")
+                            }
+                        }
+                        Json::Bool(b) => format!("{b}"),
+                        _ => continue,
+                    };
+                    meta.insert(k.clone(), vs);
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                inputs,
+                meta,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            weights_file,
+            weight_specs,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// All stage-1 parity artifacts.
+    pub fn stage1_artifacts(&self) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.meta.get("kind").map(|k| k == "stage1").unwrap_or(false))
+            .collect()
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+}
+
+/// Default artifacts directory: `$ISOQUANT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("ISOQUANT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "model": {"vocab": 512, "d_model": 256, "n_heads": 4, "d_head": 64,
+                "n_layers": 2, "d_ff": 512, "max_seq": 256,
+                "prefill_chunk": 32, "n_params": 1312000, "serve_batch": 4},
+      "weights": "weights.bin",
+      "weight_specs": [{"name": "embed", "shape": [512, 256]}],
+      "artifacts": [
+        {"name": "stage1_full_d128_b2", "file": "s.hlo.txt",
+         "inputs": [{"name": "x", "shape": [64, 128], "dtype": "f32"},
+                    {"name": "q_l", "shape": [32, 4], "dtype": "f32"},
+                    {"name": "q_r", "shape": [32, 4], "dtype": "f32"}],
+         "meta": {"kind": "stage1", "variant": "full", "d": 128, "bits": 2,
+                  "batch": 64, "quantizer": "lloyd"}},
+        {"name": "decode_step", "file": "d.hlo.txt",
+         "inputs": [{"name": "tok", "shape": [4], "dtype": "i32"}],
+         "meta": {"kind": "decode", "batch": 4}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.model.d_head, 64);
+        assert_eq!(m.model.n_params, 1_312_000);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.artifact("stage1_full_d128_b2").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![64, 128]);
+        assert_eq!(a.inputs[0].dtype, IoDtype::F32);
+        assert_eq!(a.meta_usize("bits"), Some(2));
+        assert_eq!(a.meta.get("variant").map(|s| s.as_str()), Some("full"));
+        assert_eq!(m.stage1_artifacts().len(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration-level check against the actual AOT output
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifact("decode_step").is_ok());
+            assert!(m.artifact("prefill_chunk").is_ok());
+            assert!(!m.stage1_artifacts().is_empty());
+            assert_eq!(m.weight_specs.len(), 3 + 8 * m.model.n_layers);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! The PJRT runtime: loads HLO-text artifacts, compiles them once on the
+//! CPU client, and executes them from the serving hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.  The
+//! AOT graphs are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal that we unpack.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use super::exec::{literal_to_f32, HostTensor};
+use crate::util::tensorfile;
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+}
+
+/// A device buffer plus the host literal backing its (possibly async)
+/// upload — see [`Runtime::stage`].
+pub struct Staged {
+    pub buffer: PjRtBuffer,
+    _literal: Literal,
+}
+
+impl Runtime {
+    /// Boot a CPU PJRT client and load the manifest (compilation is lazy).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let spec = self.manifest.artifact(name)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Execute an artifact with host tensors, validating against the
+    /// manifest's input specs; returns the flattened output tuple as f32
+    /// vectors.
+    pub fn run_f32(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<Literal>(&lits).context("execute")?;
+        untuple_f32(result)
+    }
+
+    /// Execute with pre-staged device buffers (weights stay resident).
+    pub fn run_buffers_f32(
+        &mut self,
+        name: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute_b::<&PjRtBuffer>(inputs).context("execute_b")?;
+        untuple_f32(result)
+    }
+
+    /// Stage a host tensor onto the device (used for resident weights).
+    ///
+    /// IMPORTANT: `buffer_from_host_literal` on the TFRT CPU client is
+    /// asynchronous — the copy may happen after this call returns, so the
+    /// source literal must outlive the buffer's first use.  [`Staged`]
+    /// keeps the literal alive alongside the buffer (dropping it early is
+    /// a use-after-free that crashes inside XLA).
+    pub fn stage(&self, t: &HostTensor) -> Result<Staged> {
+        let lit = t.to_literal()?;
+        let buffer = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("stage buffer")?;
+        Ok(Staged {
+            buffer,
+            _literal: lit,
+        })
+    }
+
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: {} inputs given, {} expected",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            t.check(s)
+                .with_context(|| format!("artifact {}", spec.name))?;
+        }
+        Ok(())
+    }
+
+    /// Load the model weights from the manifest's tensorfile, in
+    /// weight-spec order.
+    pub fn load_weights(&self) -> Result<Vec<HostTensor>> {
+        let tensors = tensorfile::read_tensorfile(&self.manifest.weights_path())?;
+        let by_name: HashMap<&str, &tensorfile::Tensor> =
+            tensors.iter().map(|t| (t.name.as_str(), t)).collect();
+        let mut out = Vec::new();
+        for (name, shape) in &self.manifest.weight_specs {
+            let t = by_name
+                .get(name.as_str())
+                .with_context(|| format!("weight {name} missing from weights.bin"))?;
+            if &t.shape != shape {
+                bail!("weight {name}: shape {:?} != manifest {:?}", t.shape, shape);
+            }
+            out.push(HostTensor::F32(t.as_f32()?, t.shape.clone()));
+        }
+        Ok(out)
+    }
+}
+
+/// Unpack the `[[tuple_buffer]]` returned by PJRT execute into f32 vecs.
+fn untuple_f32(result: Vec<Vec<PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+    let buf = result
+        .into_iter()
+        .next()
+        .and_then(|r| r.into_iter().next())
+        .context("empty execution result")?;
+    let lit = buf.to_literal_sync().context("fetch result literal")?;
+    let parts = lit.to_tuple().context("untuple result")?;
+    parts.iter().map(literal_to_f32).collect()
+}

@@ -1,0 +1,107 @@
+//! Typed host↔device tensor helpers over the `xla` crate's literals.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use super::artifacts::{IoDtype, IoSpec};
+
+/// A host-side tensor heading into (or out of) an executable.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    /// Validate against an artifact input spec (shape + dtype).
+    pub fn check(&self, spec: &IoSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input {:?}: shape {:?} != expected {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        let ok = matches!(
+            (self, spec.dtype),
+            (HostTensor::F32(_, _), IoDtype::F32) | (HostTensor::I32(_, _), IoDtype::I32)
+        );
+        if !ok {
+            bail!("input {:?}: dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            HostTensor::F32(v, shape) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+                    .context("create f32 literal")
+            }
+            HostTensor::I32(v, shape) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+                    .context("create i32 literal")
+            }
+        }
+    }
+}
+
+/// Read an f32 literal back to a host vector.
+pub fn literal_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, -2.5, 3.25, 0.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::I32(vec![7, -3], vec![2]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -3]);
+    }
+
+    #[test]
+    fn check_validates_shape_and_dtype() {
+        let spec = IoSpec {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: IoDtype::F32,
+        };
+        assert!(HostTensor::F32(vec![0.0; 4], vec![2, 2]).check(&spec).is_ok());
+        assert!(HostTensor::F32(vec![0.0; 4], vec![4]).check(&spec).is_err());
+        assert!(HostTensor::I32(vec![0; 4], vec![2, 2]).check(&spec).is_err());
+    }
+}

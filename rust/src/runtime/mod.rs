@@ -1,0 +1,12 @@
+//! XLA/PJRT runtime: artifact manifest, typed execution helpers, and the
+//! serving model (decode/prefill executables + resident weights).
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+pub mod model;
+
+pub use artifacts::{default_dir, ArtifactSpec, IoDtype, IoSpec, Manifest, ModelMeta};
+pub use client::Runtime;
+pub use exec::HostTensor;
+pub use model::{DecodeOut, ServingModel};

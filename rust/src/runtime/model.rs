@@ -1,0 +1,139 @@
+//! The serving model: decode / prefill executables with device-resident
+//! weights.  This is the only thing that runs model math on the request
+//! path — all of it inside XLA executables compiled from the AOT
+//! artifacts (Python never runs here).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use super::artifacts::ModelMeta;
+use super::client::{Runtime, Staged};
+use super::exec::HostTensor;
+
+pub struct ServingModel {
+    pub rt: Runtime,
+    pub meta: ModelMeta,
+    /// weights staged once as device buffers (order = manifest order);
+    /// `Staged` keeps the backing literals alive (async upload)
+    weights: Vec<Staged>,
+}
+
+/// Output of one decode step.
+pub struct DecodeOut {
+    /// (B, vocab)
+    pub logits: Vec<f32>,
+    /// (L, B, H, dh) — this token's K per layer
+    pub k_new: Vec<f32>,
+    /// (L, B, H, dh)
+    pub v_new: Vec<f32>,
+}
+
+impl ServingModel {
+    pub fn load(artifacts_dir: &Path) -> Result<ServingModel> {
+        let mut rt = Runtime::load(artifacts_dir)?;
+        let meta = rt.manifest.model.clone();
+        // compile eagerly so serving never pays JIT latency mid-request
+        rt.executable("decode_step")?;
+        rt.executable("prefill_chunk")?;
+        let host_weights = rt.load_weights()?;
+        let weights = host_weights
+            .iter()
+            .map(|t| rt.stage(t))
+            .collect::<Result<Vec<_>>>()
+            .context("stage weights")?;
+        Ok(ServingModel { rt, meta, weights })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.meta.serve_batch
+    }
+
+    pub fn cache_numel(&self) -> usize {
+        let m = &self.meta;
+        m.n_layers * m.serve_batch * m.n_heads * m.max_seq * m.d_head
+    }
+
+    /// One batched decode step with per-lane positions (continuous
+    /// batching).
+    ///
+    /// `tok`: (B,) token ids; `pos`: (B,) per-lane positions;
+    /// `k_cache`/`v_cache`: (L, B, H, T, dh) reconstructed caches.
+    pub fn decode_step(
+        &mut self,
+        tok: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+    ) -> Result<DecodeOut> {
+        let m = self.meta.clone();
+        if tok.len() != m.serve_batch || pos.len() != m.serve_batch {
+            bail!("decode_step: tok/pos len != batch {}", m.serve_batch);
+        }
+        if k_cache.len() != self.cache_numel() || v_cache.len() != self.cache_numel() {
+            bail!("decode_step: cache shape mismatch");
+        }
+        let cache_shape = vec![m.n_layers, m.serve_batch, m.n_heads, m.max_seq, m.d_head];
+        let ins = [
+            HostTensor::I32(tok.to_vec(), vec![m.serve_batch]),
+            HostTensor::I32(pos.to_vec(), vec![m.serve_batch]),
+            HostTensor::F32(k_cache.to_vec(), cache_shape.clone()),
+            HostTensor::F32(v_cache.to_vec(), cache_shape),
+        ];
+        let outs = self.run_with_weights("decode_step", &ins)?;
+        let [logits, k_new, v_new]: [Vec<f32>; 3] = outs
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("decode_step: expected 3 outputs"))?;
+        Ok(DecodeOut {
+            logits,
+            k_new,
+            v_new,
+        })
+    }
+
+    /// One chunked prefill step over P = meta.prefill_chunk tokens with
+    /// per-lane chunk start positions.
+    /// Returns (logits (B, P, vocab), k_chunk (L,B,H,P,dh), v_chunk).
+    pub fn prefill_chunk(
+        &mut self,
+        tok: &[i32],
+        pos0: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+    ) -> Result<DecodeOut> {
+        let m = self.meta.clone();
+        let p = m.prefill_chunk;
+        if tok.len() != m.serve_batch * p || pos0.len() != m.serve_batch {
+            bail!("prefill_chunk: tok/pos0 shape mismatch");
+        }
+        let cache_shape = vec![m.n_layers, m.serve_batch, m.n_heads, m.max_seq, m.d_head];
+        let ins = [
+            HostTensor::I32(tok.to_vec(), vec![m.serve_batch, p]),
+            HostTensor::I32(pos0.to_vec(), vec![m.serve_batch]),
+            HostTensor::F32(k_cache.to_vec(), cache_shape.clone()),
+            HostTensor::F32(v_cache.to_vec(), cache_shape),
+        ];
+        let outs = self.run_with_weights("prefill_chunk", &ins)?;
+        let [logits, k_new, v_new]: [Vec<f32>; 3] = outs
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("prefill_chunk: expected 3 outputs"))?;
+        Ok(DecodeOut {
+            logits,
+            k_new,
+            v_new,
+        })
+    }
+
+    fn run_with_weights(&mut self, name: &str, ins: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        // stage per-call inputs (literals kept alive by `Staged`), then
+        // execute with the resident weights
+        let staged: Vec<Staged> = ins
+            .iter()
+            .map(|t| self.rt.stage(t))
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&PjRtBuffer> = staged.iter().map(|s| &s.buffer).collect();
+        args.extend(self.weights.iter().map(|s| &s.buffer));
+        self.rt.run_buffers_f32(name, &args)
+    }
+}

@@ -1,0 +1,238 @@
+//! TCP serving front-end: JSON-lines protocol over `std::net`.
+//!
+//! Request:  `{"id": 1, "prompt": [3, 17, 5], "max_new_tokens": 16}`
+//! Response: `{"id": 1, "tokens": [...], "prompt_len": 3,
+//!             "ttft_us": 1234.5, "total_us": 5678.9, "finish": "max_tokens"}`
+//!
+//! The listener thread parses requests into the engine's queue; the
+//! engine thread runs `step()` continuously and pushes completions back
+//! to the matching connection.  One in-flight request per connection
+//! line keeps the protocol trivial while still exercising batched
+//! multi-client serving (clients connect concurrently).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Completion, Engine, FinishReason, Request};
+use crate::util::json::Json;
+
+/// Parse one request line.
+pub fn parse_request(line: &str, fallback_id: u64, default_max_new: usize) -> Result<Request> {
+    let v = Json::parse(line).context("request is not valid JSON")?;
+    let id = v
+        .get("id")
+        .and_then(|x| x.as_f64())
+        .map(|f| f as u64)
+        .unwrap_or(fallback_id);
+    let prompt = v
+        .get("prompt")
+        .and_then(|x| x.as_arr())
+        .context("request missing 'prompt' array")?
+        .iter()
+        .map(|t| t.as_f64().map(|f| f as i32).context("bad token"))
+        .collect::<Result<Vec<i32>>>()?;
+    let max_new_tokens = v
+        .get("max_new_tokens")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(default_max_new);
+    Ok(Request {
+        id,
+        prompt,
+        max_new_tokens,
+    })
+}
+
+/// Render one completion line.
+pub fn render_completion(c: &Completion) -> String {
+    let finish = match c.finish {
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::ContextFull => "context_full",
+        FinishReason::Rejected => "rejected",
+    };
+    Json::obj(vec![
+        ("id", Json::num(c.id as f64)),
+        (
+            "tokens",
+            Json::Arr(c.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("prompt_len", Json::num(c.prompt_len as f64)),
+        ("ttft_us", Json::num(c.timing.ttft_us().unwrap_or(-1.0))),
+        ("total_us", Json::num(c.timing.total_us().unwrap_or(-1.0))),
+        ("finish", Json::str(finish)),
+    ])
+    .to_string()
+}
+
+/// Run the server until `stop` is set.
+///
+/// The PJRT client is `!Send`, so the *engine loop runs on the calling
+/// thread*; the TCP acceptor and per-connection readers run on spawned
+/// threads and feed requests through a channel.
+pub fn serve(mut engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+    listener.set_nonblocking(true)?;
+    eprintln!(
+        "isoquant: serving on {bind} (variant={}, bits={})",
+        engine.cfg.variant.name(),
+        engine.cfg.bits
+    );
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    type Sinks = Arc<Mutex<HashMap<u64, TcpStream>>>;
+    let sinks: Sinks = Arc::new(Mutex::new(HashMap::new()));
+    let default_max_new = engine.cfg.max_new_tokens_default;
+
+    // acceptor thread (TcpListener is Send; the engine is not)
+    let stop_a = stop.clone();
+    let sinks_a = sinks.clone();
+    let acceptor = std::thread::Builder::new()
+        .name("isoquant-acceptor".into())
+        .spawn(move || {
+            let next_id = Arc::new(AtomicU64::new(1));
+            while !stop_a.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _addr)) => {
+                        let req_tx = req_tx.clone();
+                        let sinks = sinks_a.clone();
+                        let next_id = next_id.clone();
+                        std::thread::spawn(move || {
+                            let reader =
+                                BufReader::new(stream.try_clone().expect("clone stream"));
+                            for line in reader.lines() {
+                                let Ok(line) = line else { break };
+                                if line.trim().is_empty() {
+                                    continue;
+                                }
+                                let fallback =
+                                    next_id.fetch_add(1, Ordering::SeqCst) | (1 << 62);
+                                match parse_request(&line, fallback, default_max_new) {
+                                    Ok(req) => {
+                                        sinks
+                                            .lock()
+                                            .unwrap()
+                                            .insert(req.id, stream.try_clone().expect("clone"));
+                                        if req_tx.send(req).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        let mut s = stream.try_clone().expect("clone");
+                                        let _ = writeln!(
+                                            s,
+                                            "{}",
+                                            Json::obj(vec![(
+                                                "error",
+                                                Json::str(format!("{e:#}"))
+                                            )])
+                                        );
+                                    }
+                                }
+                            }
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+
+    // engine loop on this thread
+    while !stop.load(Ordering::SeqCst) {
+        while let Ok(r) = req_rx.try_recv() {
+            engine.submit(r);
+        }
+        let worked = engine.step()?;
+        for c in engine.take_completions() {
+            let line = render_completion(&c);
+            if let Some(mut s) = sinks.lock().unwrap().remove(&c.id) {
+                let _ = writeln!(s, "{line}");
+            }
+        }
+        if !worked {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+    acceptor.join().expect("acceptor thread");
+    Ok(())
+}
+
+/// Minimal blocking client for tests, examples, and the CLI.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request and block for its completion line.
+    pub fn generate(&mut self, id: u64, prompt: &[i32], max_new: usize) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            (
+                "prompt",
+                Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("max_new_tokens", Json::num(max_new as f64)),
+        ]);
+        writeln!(self.stream, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).context("parse completion")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Timing;
+
+    #[test]
+    fn parse_request_full() {
+        let r = parse_request(r#"{"id": 7, "prompt": [1,2,3], "max_new_tokens": 5}"#, 0, 32)
+            .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 5);
+    }
+
+    #[test]
+    fn parse_request_defaults() {
+        let r = parse_request(r#"{"prompt": [4]}"#, 99, 32).unwrap();
+        assert_eq!(r.id, 99);
+        assert_eq!(r.max_new_tokens, 32);
+    }
+
+    #[test]
+    fn parse_request_rejects_bad() {
+        assert!(parse_request("not json", 0, 32).is_err());
+        assert!(parse_request(r#"{"id": 1}"#, 0, 32).is_err());
+    }
+
+    #[test]
+    fn completion_roundtrips_through_json() {
+        let c = Completion {
+            id: 3,
+            tokens: vec![9, 8],
+            prompt_len: 2,
+            timing: Timing::new(),
+            finish: FinishReason::MaxTokens,
+        };
+        let line = render_completion(&c);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Benchmark timing harness (criterion is not vendorable offline).
+//!
+//! Methodology mirrors criterion's core loop: warmup, then repeated
+//! timed batches; we report median / p10 / p90 over batch means, which is
+//! robust to scheduler noise on a shared CPU.  All `cargo bench` targets
+//! in `rust/benches/` use this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// median per-iteration time
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters_per_batch: u64,
+    pub batches: usize,
+}
+
+impl BenchResult {
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_batches: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_batches: 50,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            max_batches: 20,
+        }
+    }
+
+    /// Time `f` (call overhead amortized over auto-sized batches).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup + batch sizing: grow batch until one batch ≥ ~2ms
+        let mut iters_per_batch = 1u64;
+        let warm_deadline = Instant::now() + self.warmup;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt < Duration::from_millis(2) {
+                iters_per_batch = (iters_per_batch * 2).min(1 << 24);
+            }
+            if Instant::now() >= warm_deadline && dt >= Duration::from_micros(500) {
+                break;
+            }
+        }
+
+        // measurement batches
+        let mut samples: Vec<f64> = Vec::new();
+        let deadline = Instant::now() + self.measure;
+        while Instant::now() < deadline && samples.len() < self.max_batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> Duration {
+            let idx = ((samples.len() - 1) as f64 * p).round() as usize;
+            Duration::from_secs_f64(samples[idx])
+        };
+        BenchResult {
+            name: name.to_string(),
+            median: q(0.5),
+            p10: q(0.1),
+            p90: q(0.9),
+            iters_per_batch,
+            batches: samples.len(),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width markdown-ish table printer used by the bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median > Duration::ZERO);
+        assert!(r.p10 <= r.p90);
+    }
+
+    #[test]
+    fn ordering_detects_slower_code() {
+        let b = Bencher::quick();
+        let fast = b.run("fast", || {
+            black_box((0..10u64).sum::<u64>());
+        });
+        let slow = b.run("slow", || {
+            black_box((0..100_000u64).map(|x| x.wrapping_mul(x)).sum::<u64>());
+        });
+        assert!(slow.median > fast.median);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+}

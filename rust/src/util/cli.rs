@@ -1,0 +1,235 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {msg}")]
+    Invalid { key: String, msg: String },
+}
+
+pub struct Parser {
+    specs: Vec<ArgSpec>,
+    pub command: &'static str,
+    pub about: &'static str,
+}
+
+impl Parser {
+    pub fn new(command: &'static str, about: &'static str) -> Parser {
+        Parser {
+            specs: Vec::new(),
+            command,
+            about,
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.command, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let def = spec
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!(
+                "  --{}{kind}\n      {}{def}\n",
+                spec.name, spec.help
+            ));
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.is_flag {
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        // apply defaults
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values
+                    .entry(spec.name.to_string())
+                    .or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        self.parse_as(key)
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        self.parse_as(key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        self.parse_as(key)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(key).ok_or_else(|| CliError::MissingValue(key.into()))?;
+        raw.parse().map_err(|e: T::Err| CliError::Invalid {
+            key: key.into(),
+            msg: e.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("test", "about")
+            .opt("dim", "128", "head dim")
+            .opt("bits", "4", "bit width")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("dim").unwrap(), 128);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_and_equals_forms() {
+        let a = parser()
+            .parse(&argv(&["--dim", "256", "--bits=2", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("dim").unwrap(), 256);
+        assert_eq!(a.get_usize("bits").unwrap(), 2);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parser().parse(&argv(&["serve", "--dim", "64"])).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(matches!(
+            parser().parse(&argv(&["--nope"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            parser().parse(&argv(&["--dim"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_value_rejected() {
+        let a = parser().parse(&argv(&["--dim", "abc"])).unwrap();
+        assert!(matches!(a.get_usize("dim"), Err(CliError::Invalid { .. })));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = parser().usage();
+        assert!(u.contains("--dim"));
+        assert!(u.contains("default: 128"));
+    }
+}

@@ -1,0 +1,225 @@
+//! Software IEEE 754 binary16 (half precision).
+//!
+//! The paper's Table 2 sweeps dtype ∈ {fp16, fp32}.  This environment has
+//! no GPU half-precision units and no `half` crate, so fp16 execution is
+//! modeled the way quantization studies care about: values are *stored*
+//! as 16-bit and every load/store rounds through binary16, reproducing
+//! fp16's precision effects exactly; arithmetic runs in f32 (which is
+//! also what tensor-core accumulators do).
+
+/// A 16-bit IEEE 754 half-precision float (storage type).
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    pub const MAX: F16 = F16(0x7BFF); // 65504
+
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+/// Round-to-nearest-even conversion f32 → binary16 bit pattern.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        return if mant == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 | ((mant >> 13) as u16 & 0x03FF)
+        };
+    }
+
+    // unbias to f16 exponent
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // normal f16
+        let e16 = (unbiased + 15) as u32;
+        let m16 = mant >> 13;
+        let rest = mant & 0x1FFF;
+        let mut h = (sign as u32) | (e16 << 10) | m16;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (m16 & 1) == 1) {
+            h += 1; // may carry into exponent — that is correct behaviour
+        }
+        return h as u16;
+    }
+    if unbiased >= -25 {
+        // subnormal f16
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let m16 = m >> shift;
+        let rest = m & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = (sign as u32) | m16;
+        if rest > half || (rest == half && (m16 & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign // underflow → signed zero
+}
+
+/// Conversion binary16 bit pattern → f32 (exact).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through binary16 precision (the fp16 "execution dtype"
+/// model used by the Table-2 sweep).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round a slice in place through binary16.
+pub fn round_f16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_f16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(round_f16(x), x, "{x} should be exact in f16");
+        }
+    }
+
+    #[test]
+    fn one_roundtrips() {
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(F16::from_f32(1.0), F16::ONE);
+    }
+
+    #[test]
+    fn max_value() {
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+        assert_eq!(round_f16(65504.0), 65504.0);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(F16::from_f32(-1e6).is_infinite());
+        assert_eq!(F16::from_f32(1e6), F16::INFINITY);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        // smallest positive subnormal f16 = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(round_f16(tiny), tiny);
+        // below half of it rounds to zero
+        assert_eq!(round_f16(tiny / 4.0), 0.0);
+        // smallest normal
+        let min_norm = 2.0f32.powi(-14);
+        assert_eq!(round_f16(min_norm), min_norm);
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 → ties to even (1.0)
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(round_f16(x), 1.0);
+        // 1 + 3*2^-11 ties to 1 + 2*2^-10? No: between 1+2^-10 and 1+2^-9·...
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(round_f16(y), 1.0 + 2.0 * 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // f16 has 11 significand bits → rel err ≤ 2^-11 for normals
+        let mut worst: f32 = 0.0;
+        let mut x = 0.001f32;
+        while x < 60000.0 {
+            let r = (round_f16(x) - x).abs() / x;
+            worst = worst.max(r);
+            x *= 1.37;
+        }
+        assert!(worst <= 2.0f32.powi(-11), "worst rel err {worst}");
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_f16_to_f32_to_f16() {
+        // every finite f16 must roundtrip bit-exactly through f32
+        for bits in 0..=0xFFFFu16 {
+            let h = F16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, bits, "bits {bits:#06x}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-light substrates: everything an offline build needs that a
+//! normal project would pull from crates.io (see DESIGN.md §6).
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod proplite;
+pub mod tensorfile;

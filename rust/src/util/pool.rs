@@ -1,0 +1,204 @@
+//! Scoped thread pool (tokio is unavailable offline; the coordinator and
+//! benches use this instead).
+//!
+//! Two primitives:
+//! * [`ThreadPool`] — long-lived workers consuming boxed jobs from a
+//!   shared queue; used by the serving engine for decode workers.
+//! * [`scope_chunks`] — data-parallel helper: split a mutable slice into
+//!   chunks processed on `std::thread::scope` threads; used by batch
+//!   compression paths.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// Fixed-size worker pool with a `join`/barrier primitive.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("isoquant-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.  Panics in jobs abort the worker loop but are
+    /// confined to that job (the worker catches unwind and continues).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(job));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let mut guard = self.shared.done_mx.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.done_mx.lock().unwrap();
+            sh.done_cv.notify_all();
+        }
+        if result.is_err() {
+            // job panicked: the panic is reported, the pool survives
+            eprintln!("isoquant-pool: job panicked (pool continues)");
+        }
+    }
+}
+
+/// Process `data` in roughly equal chunks on up to `threads` scoped
+/// threads: `f(chunk_index, chunk)`.
+pub fn scope_chunks<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    let threads = threads.max(1).min(data.len().max(1));
+    let chunk = data.len().div_ceil(threads);
+    if threads == 1 || data.len() <= 1 {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (i, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, part));
+        }
+    });
+}
+
+/// Available parallelism with a sane floor.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn join_waits_for_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicBool::new(false));
+        let d = done.clone();
+        pool.submit(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            d.store(true, Ordering::SeqCst);
+        });
+        pool.join();
+        assert!(done.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        pool.join();
+        let ok = Arc::new(AtomicBool::new(false));
+        let o = ok.clone();
+        pool.submit(move || o.store(true, Ordering::SeqCst));
+        pool.join();
+        assert!(ok.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn scope_chunks_covers_everything() {
+        let mut data: Vec<u32> = vec![0; 1037];
+        scope_chunks(&mut data, 8, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn scope_chunks_single_element() {
+        let mut data = vec![5u32];
+        scope_chunks(&mut data, 8, |_, chunk| chunk[0] *= 2);
+        assert_eq!(data, vec![10]);
+    }
+}

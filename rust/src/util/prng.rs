@@ -1,0 +1,249 @@
+//! Deterministic PRNG substrate (no external crates are available in this
+//! environment, so we ship our own): SplitMix64 seeding, xoshiro256++
+//! core, Gaussian sampling, and Haar-distributed rotation sampling.
+//!
+//! Haar sampling follows paper §5.5: Gaussian-normalize on S³ for the
+//! quaternion factors, uniform angles for the planar case, and QR of a
+//! Gaussian matrix (sign-fixed) for dense orthogonal baselines.
+
+/// xoshiro256++ by Blackman & Vigna — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Gaussian from the polar method
+    spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 top bits → double in [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (bias < 2^-53)
+        (self.uniform() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Marsaglia polar method (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.spare.take() {
+            return g;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.gaussian()).collect()
+    }
+
+    pub fn gaussian_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.gaussian() as f32).collect()
+    }
+
+    /// Haar-uniform unit quaternion (w, x, y, z) on S³.
+    pub fn haar_quaternion(&mut self) -> [f32; 4] {
+        loop {
+            let q = [
+                self.gaussian(),
+                self.gaussian(),
+                self.gaussian(),
+                self.gaussian(),
+            ];
+            let n = (q[0] * q[0] + q[1] * q[1] + q[2] * q[2] + q[3] * q[3]).sqrt();
+            if n > 1e-12 {
+                return [
+                    (q[0] / n) as f32,
+                    (q[1] / n) as f32,
+                    (q[2] / n) as f32,
+                    (q[3] / n) as f32,
+                ];
+            }
+        }
+    }
+
+    /// Haar angle on SO(2): Unif[0, 2π).
+    pub fn haar_angle(&mut self) -> f32 {
+        self.uniform_range(0.0, std::f64::consts::TAU) as f32
+    }
+
+    /// Haar-distributed dense orthogonal d×d matrix (row-major), via
+    /// modified Gram–Schmidt on a Gaussian matrix with sign fixing —
+    /// equivalent to QR with R-diagonal sign convention.
+    pub fn haar_orthogonal(&mut self, d: usize) -> Vec<f32> {
+        let mut a: Vec<Vec<f64>> = (0..d).map(|_| self.gaussian_vec(d)).collect();
+        for i in 0..d {
+            for j in 0..i {
+                let dot: f64 = (0..d).map(|k| a[i][k] * a[j][k]).sum();
+                for k in 0..d {
+                    a[i][k] -= dot * a[j][k];
+                }
+            }
+            let nrm: f64 = (0..d).map(|k| a[i][k] * a[i][k]).sum::<f64>().sqrt();
+            // re-draw pathological rows (measure-zero; defensive)
+            assert!(nrm > 1e-9, "degenerate Gaussian row in haar_orthogonal");
+            for k in 0..d {
+                a[i][k] /= nrm;
+            }
+        }
+        let mut out = Vec::with_capacity(d * d);
+        for row in &a {
+            out.extend(row.iter().map(|&x| x as f32));
+        }
+        out
+    }
+
+    /// Fill a slice with uniform bytes (used by failure-injection tests).
+    pub fn fill_bytes(&mut self, buf: &mut [u8]) {
+        for chunk in buf.chunks_mut(8) {
+            let v = self.next_u64().to_le_bytes();
+            let n = chunk.len();
+            chunk.copy_from_slice(&v[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let xs = r.gaussian_vec(n);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn haar_quaternion_unit_norm() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let q = r.haar_quaternion();
+            let n: f32 = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn haar_quaternion_first_coord_marginal() {
+        // paper eq. 38: f_4(z) = (2/π)√(1-z²) → P(|z| > 0.99) tiny
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let extreme = (0..n)
+            .filter(|_| r.haar_quaternion()[0].abs() > 0.99)
+            .count();
+        assert!((extreme as f64) / (n as f64) < 0.01);
+    }
+
+    #[test]
+    fn haar_orthogonal_is_orthogonal() {
+        let mut r = Rng::new(5);
+        for d in [4, 16, 32] {
+            let m = r.haar_orthogonal(d);
+            for i in 0..d {
+                for j in 0..d {
+                    let dot: f32 = (0..d).map(|k| m[i * d + k] * m[j * d + k]).sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (dot - want).abs() < 1e-4,
+                        "d={d} i={i} j={j} dot={dot}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_bytes_covers_tail() {
+        let mut r = Rng::new(1);
+        let mut buf = [0u8; 13];
+        r.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+}

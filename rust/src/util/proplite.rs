@@ -1,0 +1,138 @@
+//! proptest-lite: a tiny property-based testing harness (proptest is not
+//! vendorable offline).
+//!
+//! Usage:
+//! ```ignore
+//! proplite::check(200, 0xC0FFEE, |g| {
+//!     let d = g.usize_in(4, 512) & !3;
+//!     let x = g.vec_f32(d, 3.0);
+//!     // ... assert property, return Result<(), String> ...
+//!     Ok(())
+//! });
+//! ```
+//! On failure the case index and seed are printed so the exact draw can
+//! be replayed deterministically.
+
+use crate::util::prng::Rng;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Gaussian vector with the given scale.
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.gaussian() as f32 * scale).collect()
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`.  Panics (failing the enclosing
+/// `#[test]`) on the first counterexample, printing the replay seed.
+pub fn check<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // derive a per-case seed so cases are independent and replayable
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "mismatch at {i}: {x} vs {y} (|Δ|={} > tol {tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(50, 1, |g| {
+            let n = g.usize_in(1, 64);
+            let v = g.vec_f32(n, 1.0);
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, 2, |g| {
+            let n = g.usize_in(0, 100);
+            if n < 90 {
+                Ok(())
+            } else {
+                Err(format!("n={n} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<usize> = Vec::new();
+        check(10, 3, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check(10, 3, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Reader for the `weights.bin` tensorfile written by
+//! `python/compile/aot.py::write_tensorfile`, plus a writer so Rust tools
+//! can emit the same format (snapshots, learned parameter banks).
+//!
+//! Layout (little endian):
+//!   magic "ISOQTNSR" | u32 version | u32 count
+//!   per tensor: u32 name_len | name utf8 | u32 ndim | u64 dims[] |
+//!               u32 dtype (0=f32, 1=f16, 2=i32) | u64 byte_len | raw
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"ISOQTNSR";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I32,
+}
+
+impl Dtype {
+    fn from_code(c: u32) -> Result<Dtype> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::F16,
+            2 => Dtype::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    fn code(self) -> u32 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F16 => 1,
+            Dtype::I32 => 2,
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F16 => 2,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        match self.dtype {
+            Dtype::F32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            Dtype::F16 => Ok(self
+                .data
+                .chunks_exact(2)
+                .map(|c| crate::util::f16::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                .collect()),
+            Dtype::I32 => bail!("tensor {} is i32, not float", self.name),
+        }
+    }
+
+    pub fn from_f32(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::F32,
+            data,
+        }
+    }
+}
+
+pub fn read_tensorfile(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open tensorfile {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_tensorfile(&buf)
+}
+
+pub fn parse_tensorfile(buf: &[u8]) -> Result<Vec<Tensor>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("truncated tensorfile at byte {pos}: need {n} more bytes");
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32> {
+        let b = take(pos, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    };
+    let u64_at = |pos: &mut usize| -> Result<u64> {
+        let b = take(pos, 8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    };
+
+    if take(&mut pos, 8)? != MAGIC {
+        bail!("bad tensorfile magic");
+    }
+    let version = u32_at(&mut pos)?;
+    if version != 1 {
+        bail!("unsupported tensorfile version {version}");
+    }
+    let count = u32_at(&mut pos)? as usize;
+    if count > 1_000_000 {
+        bail!("implausible tensor count {count}");
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u32_at(&mut pos)? as usize;
+        if name_len > 4096 {
+            bail!("implausible tensor name length {name_len}");
+        }
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let ndim = u32_at(&mut pos)? as usize;
+        if ndim > 16 {
+            bail!("implausible ndim {ndim} for {name}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64_at(&mut pos)? as usize);
+        }
+        let dtype = Dtype::from_code(u32_at(&mut pos)?)?;
+        let byte_len = u64_at(&mut pos)? as usize;
+        // corrupted dims must not overflow the size computation
+        let expect = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .and_then(|n| n.checked_mul(dtype.size()));
+        let Some(expect) = expect else {
+            bail!("tensor {name}: shape {shape:?} overflows");
+        };
+        if byte_len != expect {
+            bail!("tensor {name}: byte_len {byte_len} != shape-implied {expect}");
+        }
+        let data = take(&mut pos, byte_len)?.to_vec();
+        out.push(Tensor {
+            name,
+            shape,
+            dtype,
+            data,
+        });
+    }
+    if pos != buf.len() {
+        bail!("{} trailing bytes in tensorfile", buf.len() - pos);
+    }
+    Ok(out)
+}
+
+pub fn write_tensorfile(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create tensorfile {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        f.write_all(&(t.name.len() as u32).to_le_bytes())?;
+        f.write_all(t.name.as_bytes())?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        f.write_all(&t.dtype.code().to_le_bytes())?;
+        f.write_all(&(t.data.len() as u64).to_le_bytes())?;
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("isoquant_tensorfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let tensors = vec![
+            Tensor::from_f32("a", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            Tensor::from_f32("b.scale", vec![1], &[0.5]),
+        ];
+        write_tensorfile(&path, &tensors).unwrap();
+        let back = read_tensorfile(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "a");
+        assert_eq!(back[0].shape, vec![2, 3]);
+        assert_eq!(back[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(back[1].name, "b.scale");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let t = vec![Tensor::from_f32("x", vec![4], &[1.0; 4])];
+        let dir = std::env::temp_dir().join("isoquant_tensorfile_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        write_tensorfile(&path, &t).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        assert!(parse_tensorfile(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_tensorfile(b"NOTMAGIC\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let t = vec![Tensor::from_f32("x", vec![4], &[1.0; 4])];
+        let dir = std::env::temp_dir().join("isoquant_tensorfile_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        write_tensorfile(&path, &t).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // corrupt the ndim field's first dim to 5 (byte_len now mismatched)
+        // dims start after magic(8)+ver(4)+count(4)+name_len(4)+name(1)+ndim(4)
+        let dim_off = 8 + 4 + 4 + 4 + 1 + 4;
+        bytes[dim_off] = 5;
+        assert!(parse_tensorfile(&bytes).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Failure injection: corrupted inputs must produce clean errors (or
+//! bounded garbage where the format has no integrity data), never panics
+//! or UB.
+
+use isoquant::config::{EngineConfig, RawConfig};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::runtime::Manifest;
+use isoquant::util::json::Json;
+use isoquant::util::prng::Rng;
+use isoquant::util::proplite::check;
+use isoquant::util::tensorfile;
+use std::path::Path;
+
+#[test]
+fn corrupted_manifest_variants_fail_cleanly() {
+    let cases = [
+        "",                                       // empty
+        "{",                                      // truncated
+        "[]",                                     // wrong root type
+        r#"{"model": {}}"#,                       // missing fields
+        r#"{"model": {"vocab": 1}, "artifacts": 3}"#, // wrong types
+        r#"{"model": {"vocab": 512, "d_model": 256, "n_heads": 4,
+            "d_head": 64, "n_layers": 2, "d_ff": 512, "max_seq": 256,
+            "prefill_chunk": 32, "n_params": 1, "serve_batch": 4},
+            "artifacts": [{"name": "x"}]}"#,      // artifact missing file
+    ];
+    for (i, text) in cases.iter().enumerate() {
+        let res = Manifest::parse(Path::new("/tmp"), text);
+        assert!(res.is_err(), "case {i} should fail: {text:.40}");
+    }
+}
+
+#[test]
+fn corrupted_tensorfile_fails_cleanly() {
+    let t = vec![tensorfile::Tensor::from_f32("w", vec![8], &[1.0; 8])];
+    let dir = std::env::temp_dir().join("isoquant_failinj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("w.bin");
+    tensorfile::write_tensorfile(&path, &t).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // every single-byte truncation must error, never panic
+    for cut in 0..good.len() {
+        let res = tensorfile::parse_tensorfile(&good[..cut]);
+        assert!(res.is_err(), "truncation at {cut} accepted");
+    }
+    // random byte flips either parse to the same structure (flip in the
+    // payload) or error — never panic
+    let mut rng = Rng::new(1);
+    for _ in 0..200 {
+        let mut bad = good.clone();
+        let idx = rng.below(bad.len());
+        bad[idx] ^= 1 << rng.below(8);
+        let _ = tensorfile::parse_tensorfile(&bad); // must not panic
+    }
+}
+
+#[test]
+fn corrupted_compressed_vector_decodes_to_finite_values() {
+    // the packed stage-1 encoding carries no checksum (by design — it is
+    // an in-memory cache format); decoding corrupted bytes must still be
+    // memory-safe and finite (codes are masked into codebook range)
+    let mut rng = Rng::new(2);
+    for variant in [Variant::IsoFull, Variant::Rotor3D, Variant::Planar2D] {
+        let s = Stage1::new(Stage1Config::new(variant, 64, 3));
+        let x = rng.gaussian_vec_f32(64);
+        let mut bytes = Vec::new();
+        s.encode(&x, &mut bytes);
+        for _ in 0..100 {
+            let mut bad = bytes.clone();
+            // corrupt code bytes only (first 4 bytes are the f32 norm;
+            // a flipped norm can legitimately produce inf)
+            let idx = 4 + rng.below(bad.len() - 4);
+            bad[idx] ^= 0xFF;
+            let mut out = vec![0.0f32; 64];
+            s.decode(&bad, &mut out);
+            assert!(
+                out.iter().all(|v| v.is_finite()),
+                "{variant:?}: non-finite decode from corrupted codes"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_config_rejects_nonsense() {
+    for text in [
+        "[engine]\nbits = 99",
+        "[engine]\nbits = 0",
+        "[engine]\nvariant = \"warp-drive\"",
+        "[engine]\nquantizer = \"psychic\"",
+    ] {
+        let raw = RawConfig::parse(text).unwrap();
+        assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+    }
+}
+
+#[test]
+fn server_request_parser_survives_fuzz() {
+    use isoquant::server::parse_request;
+    let mut rng = Rng::new(3);
+    // valid-ish JSON mutations and raw garbage: never panic
+    for _ in 0..500 {
+        let len = rng.below(60);
+        let mut bytes = vec![0u8; len];
+        rng.fill_bytes(&mut bytes);
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = parse_request(&s, 1, 16);
+    }
+    // structured fuzz around the real schema
+    check(200, 0xF022, |g| {
+        let id = g.usize_in(0, 1 << 20);
+        let n = g.usize_in(0, 5);
+        let toks: Vec<String> = (0..n).map(|_| g.usize_in(0, 600).to_string()).collect();
+        let line = format!(
+            r#"{{"id": {id}, "prompt": [{}], "max_new_tokens": {}}}"#,
+            toks.join(","),
+            g.usize_in(0, 64)
+        );
+        let req = parse_request(&line, 7, 16).map_err(|e| e.to_string())?;
+        if req.prompt.len() != n {
+            return Err("token count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_parser_survives_mutation_fuzz() {
+    let seed_docs = [
+        r#"{"a": [1, 2.5, -3e2], "b": {"c": "d\n", "e": null}, "f": true}"#,
+        r#"[[[[1]]], {}, "", -0.0]"#,
+    ];
+    let mut rng = Rng::new(4);
+    for doc in seed_docs {
+        let bytes = doc.as_bytes();
+        for _ in 0..2000 {
+            let mut bad = bytes.to_vec();
+            for _ in 0..1 + rng.below(3) {
+                let idx = rng.below(bad.len());
+                bad[idx] = (rng.next_u64() & 0x7F) as u8;
+            }
+            if let Ok(s) = std::str::from_utf8(&bad) {
+                let _ = Json::parse(s); // must not panic
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_with_wrong_length_is_rejected_in_debug() {
+    // encoded_len mismatches are caught by debug_assert in decode; in
+    // release we verify the public length accessor instead
+    let s = Stage1::new(Stage1Config::new(Variant::IsoFull, 128, 2));
+    let x = vec![1.0f32; 128];
+    let mut bytes = Vec::new();
+    s.encode(&x, &mut bytes);
+    assert_eq!(bytes.len(), s.encoded_len());
+}
+
+#[test]
+fn zero_and_extreme_inputs_are_safe_everywhere() {
+    let mut rng = Rng::new(5);
+    let patterns: Vec<Vec<f32>> = vec![
+        vec![0.0; 128],
+        vec![f32::MIN_POSITIVE; 128],
+        vec![1e30; 128],
+        vec![-1e30; 128],
+        (0..128).map(|i| if i == 0 { 1e30 } else { 0.0 }).collect(),
+        (0..128).map(|_| rng.gaussian() as f32 * 1e-20).collect(),
+    ];
+    for variant in [
+        Variant::IsoFull,
+        Variant::IsoFast,
+        Variant::Planar2D,
+        Variant::Rotor3D,
+        Variant::Grouped8D,
+    ] {
+        let s = Stage1::new(Stage1Config::new(variant, 128, 2));
+        for (i, x) in patterns.iter().enumerate() {
+            let mut out = vec![0.0f32; 128];
+            s.roundtrip(x, &mut out);
+            assert!(
+                out.iter().all(|v| v.is_finite()),
+                "{variant:?} pattern {i}: non-finite output"
+            );
+            let mut bytes = Vec::new();
+            s.encode(x, &mut bytes);
+            s.decode(&bytes, &mut out);
+            assert!(out.iter().all(|v| v.is_finite()), "{variant:?} pattern {i} (packed)");
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Integration tests over the PJRT runtime, the serving engine, and the
+//! TCP server.  These need `make artifacts`; they SKIP (pass trivially,
+//! with a note) when artifacts are absent so `cargo test` works in a
+//! fresh checkout, and exercise the real three-layer stack when present.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use isoquant::config::EngineConfig;
+use isoquant::coordinator::{Engine, FinishReason, Request};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::runtime::{HostTensor, Runtime, ServingModel};
+use isoquant::util::prng::Rng;
+
+/// The XLA CPU runtime does not tolerate concurrent PJRT client
+/// creation in one process; serialize every test that touches PJRT.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_guard() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = isoquant::runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts not built; skipping runtime integration test");
+        None
+    }
+}
+
+#[test]
+fn stage1_parity_native_vs_hlo() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let specs: Vec<_> = rt
+        .manifest
+        .stage1_artifacts()
+        .into_iter()
+        .cloned()
+        .collect();
+    assert!(!specs.is_empty());
+    for spec in specs {
+        let variant = Variant::from_name(spec.meta.get("variant").unwrap()).unwrap();
+        let d = spec.meta_usize("d").unwrap();
+        let bits = spec.meta_usize("bits").unwrap() as u8;
+        let batch = spec.meta_usize("batch").unwrap();
+        let stage = Stage1::new(Stage1Config::new(variant, d, bits));
+        let mut rng = Rng::new(0x7e57 + d as u64 * 31 + bits as u64);
+        let x = rng.gaussian_vec_f32(batch * d);
+        let mut native = vec![0.0f32; batch * d];
+        stage.roundtrip_batch(&x, &mut native, batch);
+        let mut inputs = vec![HostTensor::F32(x, vec![batch, d])];
+        for t in stage.bank.to_hlo_inputs() {
+            inputs.push(HostTensor::F32(t.as_f32().unwrap(), t.shape.clone()));
+        }
+        let outs = rt.run_f32(&spec.name, &inputs).unwrap();
+        let worst = native
+            .iter()
+            .zip(&outs[0])
+            .map(|(&a, &b)| ((a - b) as f64).abs())
+            .fold(0.0f64, f64::max);
+        assert!(worst < 5e-5, "{}: native-vs-HLO max|Δ| = {worst}", spec.name);
+    }
+}
+
+#[test]
+fn decode_step_shapes_and_determinism() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = ServingModel::load(&dir).unwrap();
+    let m = model.meta.clone();
+    let numel = model.cache_numel();
+    let k = vec![0.0f32; numel];
+    let v = vec![0.0f32; numel];
+    let toks = vec![1i32; m.serve_batch];
+    let pos = vec![0i32; m.serve_batch];
+    let out1 = model.decode_step(&toks, &pos, &k, &v).unwrap();
+    assert_eq!(out1.logits.len(), m.serve_batch * m.vocab);
+    assert_eq!(
+        out1.k_new.len(),
+        m.n_layers * m.serve_batch * m.n_heads * m.d_head
+    );
+    assert!(out1.logits.iter().all(|x| x.is_finite()));
+    let out2 = model.decode_step(&toks, &pos, &k, &v).unwrap();
+    assert_eq!(out1.logits, out2.logits, "XLA decode must be deterministic");
+}
+
+#[test]
+fn prefill_then_decode_consistent_with_pure_decode() {
+    // feeding a prompt via prefill_chunk and then decoding must produce
+    // the same next-token logits as feeding the prompt token-by-token
+    // through decode_step with exact caches.
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = ServingModel::load(&dir).unwrap();
+    let m = model.meta.clone();
+    let b = m.serve_batch;
+    let numel = model.cache_numel();
+    let mut rng = Rng::new(99);
+    let plen = 5usize;
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(m.vocab) as i32).collect();
+
+    // path A: prefill chunk (prompt in lane 0, zero-padded)
+    let mut toks_a = vec![0i32; b * m.prefill_chunk];
+    toks_a[..plen].copy_from_slice(&prompt);
+    let zeros_k = vec![0.0f32; numel];
+    let zeros_v = vec![0.0f32; numel];
+    let pos0 = vec![0i32; b];
+    let out_a = model
+        .prefill_chunk(&toks_a, &pos0, &zeros_k, &zeros_v)
+        .unwrap();
+    let logits_a =
+        &out_a.logits[(0 * m.prefill_chunk + (plen - 1)) * m.vocab..][..m.vocab];
+
+    // path B: token-by-token decode with exact cache writes
+    let mut k_cache = vec![0.0f32; numel];
+    let mut v_cache = vec![0.0f32; numel];
+    let mut logits_b = Vec::new();
+    for (step, &t) in prompt.iter().enumerate() {
+        let mut toks = vec![0i32; b];
+        toks[0] = t;
+        let mut pos = vec![0i32; b];
+        pos[0] = step as i32;
+        let out = model.decode_step(&toks, &pos, &k_cache, &v_cache).unwrap();
+        let (l, h, dh, tmax) = (m.n_layers, m.n_heads, m.d_head, m.max_seq);
+        for layer in 0..l {
+            for head in 0..h {
+                let src = (((layer * b) + 0) * h + head) * dh;
+                let dst = ((((layer * b) + 0) * h + head) * tmax + step) * dh;
+                k_cache[dst..dst + dh].copy_from_slice(&out.k_new[src..src + dh]);
+                v_cache[dst..dst + dh].copy_from_slice(&out.v_new[src..src + dh]);
+            }
+        }
+        logits_b = out.logits[..m.vocab].to_vec();
+    }
+    let worst = logits_a
+        .iter()
+        .zip(&logits_b)
+        .map(|(&a, &b)| ((a - b) as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(worst < 1e-3, "prefill vs decode logits diverge: {worst}");
+}
+
+#[test]
+fn engine_serves_requests_end_to_end() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let model = ServingModel::load(&dir).unwrap();
+    let vocab = model.meta.vocab;
+    let cfg = EngineConfig::default();
+    let mut engine = Engine::new(model, cfg).unwrap();
+    let mut rng = Rng::new(5);
+    let n_req = 6;
+    for i in 0..n_req {
+        let plen = 3 + rng.below(40);
+        engine.submit(Request {
+            id: i,
+            prompt: (0..plen).map(|_| rng.below(vocab) as i32).collect(),
+            max_new_tokens: 8,
+        });
+    }
+    let completions = engine.run_to_completion().unwrap();
+    assert_eq!(completions.len(), n_req as usize);
+    for c in &completions {
+        assert_eq!(c.finish, FinishReason::MaxTokens, "req {}", c.id);
+        assert_eq!(c.tokens.len(), 8, "req {}", c.id);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < vocab));
+        assert!(c.timing.ttft_us().unwrap() > 0.0);
+    }
+    // all pages must be released once everything finished
+    assert_eq!(engine.cache.pages_in_use(), 0);
+    assert_eq!(engine.active(), 0);
+}
+
+#[test]
+fn engine_rejects_oversized_and_continues() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let model = ServingModel::load(&dir).unwrap();
+    let max_seq = model.meta.max_seq;
+    let vocab = model.meta.vocab;
+    let mut engine = Engine::new(model, EngineConfig::default()).unwrap();
+    engine.submit(Request {
+        id: 1,
+        prompt: vec![1; max_seq + 10],
+        max_new_tokens: 4,
+    });
+    engine.submit(Request {
+        id: 2,
+        prompt: vec![2; 4],
+        max_new_tokens: 4,
+    });
+    let completions = engine.run_to_completion().unwrap();
+    assert_eq!(completions.len(), 2);
+    let rejected = completions.iter().find(|c| c.id == 1).unwrap();
+    assert_eq!(rejected.finish, FinishReason::Rejected);
+    let ok = completions.iter().find(|c| c.id == 2).unwrap();
+    assert_eq!(ok.finish, FinishReason::MaxTokens);
+    assert_eq!(ok.tokens.len(), 4);
+    let _ = vocab;
+}
+
+#[test]
+fn engine_deterministic_across_runs() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let run = || {
+        let model = ServingModel::load(&dir).unwrap();
+        let mut engine = Engine::new(model, EngineConfig::default()).unwrap();
+        engine.submit(Request {
+            id: 0,
+            prompt: vec![3, 1, 4, 1, 5],
+            max_new_tokens: 6,
+        });
+        engine.run_to_completion().unwrap()[0].tokens.clone()
+    };
+    assert_eq!(run(), run(), "greedy decode must be reproducible");
+}
+
+#[test]
+fn compressed_decode_tracks_exact_decode() {
+    // generation under 4-bit IsoQuant-Full compression should mostly
+    // agree with exact-cache generation over a short horizon
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let model = ServingModel::load(&dir).unwrap();
+    let vocab = model.meta.vocab;
+    let mut cfg = EngineConfig::default();
+    cfg.variant = Variant::IsoFull;
+    cfg.bits = 4;
+    let mut engine = Engine::new(model, cfg).unwrap();
+    let prompt: Vec<i32> = (0..12).map(|i| ((i * 37) % vocab) as i32).collect();
+    engine.submit(Request {
+        id: 0,
+        prompt: prompt.clone(),
+        max_new_tokens: 8,
+    });
+    let comp = engine.run_to_completion().unwrap();
+    let compressed_tokens = &comp[0].tokens;
+
+    // exact reference via direct decode-step driving
+    let mut model = engine.model;
+    let m = model.meta.clone();
+    let b = m.serve_batch;
+    let numel = m.n_layers * b * m.n_heads * m.max_seq * m.d_head;
+    let mut k_cache = vec![0.0f32; numel];
+    let mut v_cache = vec![0.0f32; numel];
+    let mut generated = Vec::new();
+    let mut last = prompt[0];
+    for step in 0..(prompt.len() + 8 - 1) {
+        let mut toks = vec![0i32; b];
+        toks[0] = last;
+        let mut pos = vec![0i32; b];
+        pos[0] = step as i32;
+        let out = model.decode_step(&toks, &pos, &k_cache, &v_cache).unwrap();
+        let (l, h, dh, tmax) = (m.n_layers, m.n_heads, m.d_head, m.max_seq);
+        for layer in 0..l {
+            for head in 0..h {
+                let src = (((layer * b) + 0) * h + head) * dh;
+                let dst = ((((layer * b) + 0) * h + head) * tmax + step) * dh;
+                k_cache[dst..dst + dh].copy_from_slice(&out.k_new[src..src + dh]);
+                v_cache[dst..dst + dh].copy_from_slice(&out.v_new[src..src + dh]);
+            }
+        }
+        if step + 1 < prompt.len() {
+            last = prompt[step + 1];
+        } else {
+            last = isoquant::metrics::argmax(&out.logits[..m.vocab]) as i32;
+            generated.push(last);
+        }
+    }
+    let agree = generated
+        .iter()
+        .zip(compressed_tokens)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree * 2 >= generated.len(),
+        "compressed generation diverged too much: {agree}/{} (exact {generated:?} vs compressed {compressed_tokens:?})",
+        generated.len()
+    );
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let model = ServingModel::load(&dir).unwrap();
+    let mut cfg = EngineConfig::default();
+    cfg.bind = "127.0.0.1:47391".to_string();
+    let engine = Engine::new(model, cfg.clone()).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let bind = cfg.bind.clone();
+    // engine is !Send → run the server on a dedicated *scoped* thread is
+    // impossible; instead run it on a plain thread created BEFORE the
+    // engine... we cannot move the engine.  Run the server on the main
+    // test thread and the client on a helper thread instead.
+    let client = std::thread::spawn(move || {
+        // wait for the listener
+        let mut ok = None;
+        for _ in 0..100 {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            if let Ok(c) = isoquant::server::Client::connect(&bind) {
+                ok = Some(c);
+                break;
+            }
+        }
+        let mut client = ok.expect("server did not come up");
+        let resp = client.generate(42, &[5, 6, 7], 4).expect("generate");
+        stop2.store(true, Ordering::SeqCst);
+        resp
+    });
+    isoquant::server::serve(engine, &cfg.bind, stop).unwrap();
+    let resp = client.join().unwrap();
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(42.0));
+    assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(resp.get("finish").unwrap().as_str(), Some("max_tokens"));
+}

@@ -1,0 +1,397 @@
+//! Property-based integration tests over the quantization stack and the
+//! coordinator substrates (proplite harness; each failure prints a
+//! replayable per-case seed).
+
+use isoquant::kvcache::{CacheManager, PageConfig};
+use isoquant::math::quaternion as quat;
+use isoquant::quant::packing;
+use isoquant::quant::{mse, ParamBank, QuantKind, Stage1, Stage1Config, Variant};
+use isoquant::util::prng::Rng;
+use isoquant::util::proplite::{assert_close, check};
+
+const VARIANTS: [Variant; 6] = [
+    Variant::IsoFull,
+    Variant::IsoFast,
+    Variant::Planar2D,
+    Variant::Rotor3D,
+    Variant::Dense,
+    Variant::Grouped8D,
+];
+
+#[test]
+fn prop_roundtrip_bounded_error_all_variants() {
+    // for any variant / d / bits / scale, stage-1 reconstruction keeps a
+    // bounded relative error and never produces non-finite values
+    check(150, 0xA11CE, |g| {
+        let variant = *g.choose(&VARIANTS);
+        let d = if variant == Variant::Dense {
+            g.usize_in(2, 96) // dense is O(d²); keep property cases small
+        } else {
+            g.usize_in(2, 512)
+        };
+        let bits = g.usize_in(2, 4) as u8;
+        let scale = g.f32_in(0.01, 100.0);
+        let x = g.vec_f32(d, scale);
+        let s = Stage1::new(Stage1Config::new(variant, d, bits));
+        let mut out = vec![0.0f32; d];
+        s.roundtrip(&x, &mut out);
+        if out.iter().any(|v| !v.is_finite()) {
+            return Err(format!("{variant:?} d={d} b={bits}: non-finite output"));
+        }
+        let power = x.iter().map(|&v| (v * v) as f64).sum::<f64>().max(1e-12);
+        let err = x
+            .iter()
+            .zip(&out)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>();
+        // stage-1 of a *normalized* vector can at worst lose all energy
+        // (err/power ≈ 1) but must never blow up beyond the double cover
+        // of the sphere radius
+        if err / power > 4.0 {
+            return Err(format!(
+                "{variant:?} d={d} b={bits}: rel err {} too large",
+                err / power
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encode_decode_equals_fused_roundtrip() {
+    check(120, 0xB0B, |g| {
+        let variant = *g.choose(&VARIANTS);
+        let d = if variant == Variant::Dense {
+            g.usize_in(2, 64)
+        } else {
+            g.usize_in(2, 256)
+        };
+        let bits = g.usize_in(2, 4) as u8;
+        let x = g.vec_f32(d, 1.0);
+        let s = Stage1::new(Stage1Config::new(variant, d, bits));
+        let mut fused = vec![0.0f32; d];
+        s.roundtrip(&x, &mut fused);
+        let mut bytes = Vec::new();
+        s.encode(&x, &mut bytes);
+        if bytes.len() != s.encoded_len() {
+            return Err(format!(
+                "{variant:?}: encoded {} bytes, expected {}",
+                bytes.len(),
+                s.encoded_len()
+            ));
+        }
+        let mut decoded = vec![0.0f32; d];
+        s.decode(&bytes, &mut decoded);
+        assert_close(&fused, &decoded, 1e-5, 1e-4)
+            .map_err(|e| format!("{variant:?} d={d} b={bits}: {e}"))
+    });
+}
+
+#[test]
+fn prop_uniform_quantizer_also_roundtrips() {
+    check(60, 0xC0DE, |g| {
+        let variant = *g.choose(&[Variant::IsoFull, Variant::Planar2D, Variant::Rotor3D]);
+        let d = g.usize_in(2, 256);
+        let bits = g.usize_in(2, 4) as u8;
+        let mut cfg = Stage1Config::new(variant, d, bits);
+        cfg.quant = QuantKind::Uniform;
+        let s = Stage1::new(cfg);
+        let x = g.vec_f32(d, 2.0);
+        let mut fused = vec![0.0f32; d];
+        s.roundtrip(&x, &mut fused);
+        let mut bytes = Vec::new();
+        s.encode(&x, &mut bytes);
+        let mut decoded = vec![0.0f32; d];
+        s.decode(&bytes, &mut decoded);
+        assert_close(&fused, &decoded, 1e-5, 1e-4).map_err(|e| format!("{variant:?}: {e}"))
+    });
+}
+
+#[test]
+fn prop_packing_roundtrip_arbitrary() {
+    check(300, 0xFACADE, |g| {
+        let bits = g.usize_in(2, 4) as u8;
+        let n = g.usize_in(0, 700);
+        let codes: Vec<u8> = (0..n)
+            .map(|_| (g.rng.below(1usize << bits)) as u8)
+            .collect();
+        let mut packed = Vec::new();
+        packing::pack(&codes, bits, &mut packed);
+        if packed.len() != packing::packed_len(n, bits) {
+            return Err("packed length mismatch".into());
+        }
+        let mut back = Vec::new();
+        packing::unpack(&packed, bits, n, &mut back);
+        if back != codes {
+            return Err(format!("roundtrip failed at bits={bits} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rotation_isometry_before_quantization() {
+    // with "infinite" bits (identity quantizer approximated by 4-bit at
+    // tiny amplitudes... instead test the rotation layer directly): any
+    // quaternion pair sandwich preserves norms of random 4-vectors
+    check(300, 0x150, |g| {
+        let ql = g.rng.haar_quaternion();
+        let qr = g.rng.haar_quaternion();
+        let v: [f32; 4] = std::array::from_fn(|_| g.rng.gaussian() as f32);
+        let y = quat::sandwich(ql, v, qr);
+        let nv = quat::norm(v);
+        let ny = quat::norm(y);
+        if (nv - ny).abs() > 1e-4 * nv.max(1.0) {
+            return Err(format!("norm not preserved: {nv} vs {ny}"));
+        }
+        let back = quat::sandwich_inv(ql, y, qr);
+        assert_close(&back, &v, 1e-5, 1e-4)
+    });
+}
+
+#[test]
+fn prop_param_bank_interpolation_on_manifold() {
+    check(80, 0x51E2, |g| {
+        let d = g.usize_in(4, 128) & !3;
+        let d = d.max(4);
+        let variant = *g.choose(&[Variant::IsoFull, Variant::IsoFast]);
+        let a = ParamBank::random(variant, d, g.rng.next_u64());
+        let b = ParamBank::random(variant, d, g.rng.next_u64());
+        let t = g.f32_in(0.0, 1.0);
+        let mid = a.interpolate(&b, t);
+        for q in mid.q_l.iter().chain(&mid.q_r) {
+            let n = quat::norm(*q);
+            if (n - 1.0).abs() > 1e-4 {
+                return Err(format!("interpolated quaternion norm {n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_manager_random_ops_vs_reference() {
+    // random append/gather/drop schedule against a plain Vec reference
+    check(30, 0xCACE, |g| {
+        let dh = 8 * g.usize_in(1, 4); // 8..32
+        let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, 4));
+        let cfg = PageConfig {
+            tokens_per_page: g.usize_in(1, 8),
+            n_layers: g.usize_in(1, 2),
+            n_heads: g.usize_in(1, 3),
+            d_head: dh,
+            encoded_len: stage1.encoded_len(),
+        };
+        let mut mgr = CacheManager::new(stage1, cfg, 256);
+        let mut reference: std::collections::HashMap<u64, Vec<(Vec<f32>, Vec<f32>)>> =
+            std::collections::HashMap::new();
+        let tok_n = cfg.n_layers * cfg.n_heads * dh;
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_seq = 0u64;
+        for _ in 0..40 {
+            match g.usize_in(0, 3) {
+                0 => {
+                    // start
+                    next_seq += 1;
+                    mgr.start_seq(next_seq).map_err(|e| e.to_string())?;
+                    reference.insert(next_seq, Vec::new());
+                    live.push(next_seq);
+                }
+                1 if !live.is_empty() => {
+                    // append
+                    let s = *g.choose(&live);
+                    let k = g.vec_f32(tok_n, 1.0);
+                    let v = g.vec_f32(tok_n, 1.0);
+                    mgr.append_token(s, &k, &v).map_err(|e| e.to_string())?;
+                    reference.get_mut(&s).unwrap().push((k, v));
+                }
+                2 if !live.is_empty() => {
+                    // drop
+                    let idx = g.rng.below(live.len());
+                    let s = live.swap_remove(idx);
+                    mgr.drop_seq(s);
+                    reference.remove(&s);
+                }
+                _ if !live.is_empty() => {
+                    // gather & verify token count + reconstruction quality
+                    let s = *g.choose(&live);
+                    let want = &reference[&s];
+                    let t_max = want.len().max(1) + g.usize_in(0, 3);
+                    let sz = cfg.n_layers * cfg.n_heads * t_max * dh;
+                    let mut k_out = vec![0.0f32; sz];
+                    let mut v_out = vec![0.0f32; sz];
+                    let n = mgr
+                        .gather(s, t_max, &mut k_out, &mut v_out)
+                        .map_err(|e| e.to_string())?;
+                    if n != want.len().min(t_max) {
+                        return Err(format!("gather count {n} != {}", want.len()));
+                    }
+                    // spot-check one (token, layer, head) reconstruction
+                    if n > 0 {
+                        let t = g.rng.below(n);
+                        let layer = g.rng.below(cfg.n_layers);
+                        let head = g.rng.below(cfg.n_heads);
+                        let src = (layer * cfg.n_heads + head) * dh;
+                        let dst = ((layer * cfg.n_heads + head) * t_max + t) * dh;
+                        let truth = &want[t].0[src..src + dh];
+                        let got = &k_out[dst..dst + dh];
+                        let rel = isoquant::metrics::rel_l2(truth, got);
+                        if rel > 0.5 {
+                            return Err(format!("reconstruction rel err {rel}"));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if mgr.active_seqs() != live.len() {
+            return Err("sequence accounting mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_path_tracks_f32_path() {
+    use isoquant::util::f16;
+    check(60, 0xF16, |g| {
+        let variant = *g.choose(&[Variant::IsoFull, Variant::IsoFast, Variant::Planar2D]);
+        let d = (g.usize_in(1, 64) * 4).max(4);
+        let bits = g.usize_in(2, 4) as u8;
+        let x = g.vec_f32(d, 1.0);
+        let s = Stage1::new(Stage1Config::new(variant, d, bits));
+        let mut out32 = vec![0.0f32; d];
+        s.roundtrip(&x, &mut out32);
+        let xh: Vec<u16> = x.iter().map(|&v| f16::f32_to_f16_bits(v)).collect();
+        let mut out16 = vec![0u16; d];
+        s.roundtrip_batch_f16(&xh, &mut out16, 1);
+        let out16f: Vec<f32> = out16.iter().map(|&h| f16::f16_bits_to_f32(h)).collect();
+        let diff = mse(&out32, &out16f);
+        if diff > 1e-3 {
+            return Err(format!("{variant:?} d={d} b={bits}: f16 drift {diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_double_cover_through_full_pipeline() {
+    // negating both quaternion banks leaves the whole stage-1 pipeline
+    // invariant (paper Prop. 1 eq. 13), not just the raw sandwich
+    check(60, 0xD0B1E, |g| {
+        let d = (g.usize_in(1, 32) * 4).max(4);
+        let bits = g.usize_in(2, 4) as u8;
+        let cfg = Stage1Config::new(Variant::IsoFull, d, bits);
+        let bank = ParamBank::random(Variant::IsoFull, d, g.rng.next_u64());
+        let mut neg = bank.clone();
+        for q in neg.q_l.iter_mut().chain(neg.q_r.iter_mut()) {
+            *q = [-q[0], -q[1], -q[2], -q[3]];
+        }
+        let s1 = Stage1::with_bank(cfg.clone(), bank);
+        let s2 = Stage1::with_bank(cfg, neg);
+        let x = g.vec_f32(d, 1.0);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        s1.roundtrip(&x, &mut a);
+        s2.roundtrip(&x, &mut b);
+        assert_close(&a, &b, 1e-6, 1e-6)
+    });
+}
+
+#[test]
+fn prop_batcher_never_loses_or_duplicates() {
+    use isoquant::coordinator::{Batcher, Request};
+    use std::time::{Duration, Instant};
+    check(80, 0xBA7C4, |g| {
+        let max_batch = g.usize_in(1, 8);
+        let window_us = g.usize_in(0, 5000) as u64;
+        let mut b = Batcher::new(Duration::from_micros(window_us), max_batch);
+        let t0 = Instant::now();
+        let n = g.usize_in(0, 50);
+        for i in 0..n {
+            b.submit_at(
+                Request {
+                    id: i as u64,
+                    prompt: vec![1],
+                    max_new_tokens: 1,
+                },
+                t0,
+            );
+        }
+        let mut seen = Vec::new();
+        let mut now = t0;
+        loop {
+            now += Duration::from_micros(window_us + 1);
+            match b.poll(now) {
+                Some(batch) => {
+                    if batch.len() > max_batch {
+                        return Err(format!("batch size {} > {max_batch}", batch.len()));
+                    }
+                    seen.extend(batch.iter().map(|r| r.id));
+                }
+                None => break,
+            }
+        }
+        if seen.len() != n {
+            return Err(format!("saw {} of {n} requests", seen.len()));
+        }
+        let sorted: Vec<u64> = (0..n as u64).collect();
+        if seen != sorted {
+            return Err("order or duplication violation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stage1_deterministic() {
+    // same config + seed + input → bit-identical output (required for
+    // the KV cache: decode must reproduce encode-time reconstructions)
+    check(40, 0xDE7, |g| {
+        let variant = *g.choose(&VARIANTS);
+        let d = if variant == Variant::Dense { 32 } else { 128 };
+        let bits = g.usize_in(2, 4) as u8;
+        let seed = g.rng.next_u64();
+        let mut cfg = Stage1Config::new(variant, d, bits);
+        cfg.seed = seed;
+        let s1 = Stage1::new(cfg.clone());
+        let s2 = Stage1::new(cfg);
+        let x = g.vec_f32(d, 1.0);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        s1.roundtrip(&x, &mut a);
+        s2.roundtrip(&x, &mut b);
+        if a != b {
+            return Err("non-deterministic pipeline".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_learned_rotations_never_worse_on_train() {
+    use isoquant::quant::learn::{learn, LearnOptions};
+    check(8, 0x1EA2, |g| {
+        let d = 16;
+        let n = 64;
+        let mut rng = Rng::new(g.rng.next_u64());
+        let data: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let variant = *g.choose(&[Variant::IsoFull, Variant::IsoFast, Variant::Planar2D]);
+        let cfg = Stage1Config::new(variant, d, 2);
+        let (_s, before, after) = learn(
+            cfg,
+            &data,
+            n,
+            &LearnOptions {
+                iters: 10,
+                seed: g.rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        // per-block accept-only-if-better ⇒ monotone non-increasing
+        if after > before * (1.0 + 1e-9) {
+            return Err(format!("train MSE increased {before} → {after}"));
+        }
+        Ok(())
+    });
+}

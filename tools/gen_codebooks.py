@@ -1,0 +1,35 @@
+"""Regenerate rust/src/quant/codebooks.rs from the python Lloyd-Max
+trainer (the cross-language parity contract). Run via `make codebooks`."""
+from compile.kernels.quantizer import lloyd_max_codebook, gaussian_codebook
+
+print('''//! Lloyd–Max codebooks, trained offline in python
+//! (`python/compile/kernels/quantizer.py`) on the analytic marginal
+//! f_k(z) ∝ (1-z²)^((k-3)/2) of a Haar-rotated block coordinate
+//! (paper eq. 36), scaled by √k.  These constants are the cross-language
+//! parity contract: the Pallas kernels bake the same values into the AOT
+//! HLO, and `python/tests/test_quantizer.py` pins the trainer output.
+//! Regenerate with `make codebooks`.
+
+/// codebook for (block size k, bits b); levels are sorted ascending.
+pub fn lloyd_codebook(k: usize, bits: u8) -> &'static [f32] {
+    match (k, bits) {''')
+for k in (2, 3, 4):
+    for b in (2, 3, 4):
+        cb = lloyd_max_codebook(k, b)
+        vals = ', '.join(f'{float(v):.9}' for v in cb)
+        print(f'        ({k}, {b}) => &[{vals}],')
+print('''        _ => panic!("no codebook trained for k={k} bits={bits}"),
+    }
+}
+
+/// classic Lloyd–Max codebook for N(0,1) (used by the grouped-8D variant
+/// and by unnormalized ablations).
+pub fn gaussian_lloyd_codebook(bits: u8) -> &'static [f32] {
+    match bits {''')
+for b in (2, 3, 4):
+    cb = gaussian_codebook(b)
+    vals = ', '.join(f'{float(v):.9}' for v in cb)
+    print(f'        {b} => &[{vals}],')
+print('''        _ => panic!("no gaussian codebook for bits={bits}"),
+    }
+}''')
