@@ -44,11 +44,9 @@ fn main() -> anyhow::Result<()> {
     ] {
         for bits in [2u8, 3, 4] {
             let s = Stage1::new(Stage1Config::new(variant, dh, bits));
-            let mut k_hat = vec![0.0f32; k.len()];
-            let mut v_hat = vec![0.0f32; v.len()];
-            s.roundtrip_batch(&k, &mut k_hat, h * t);
-            s.roundtrip_batch(&v, &mut v_hat, h * t);
-            let rep = attention::fidelity(&q, &k, &v, &k_hat, &v_hat, h, t, dh);
+            // measure through the packed batch path (encode_batch →
+            // decode_batch): the exact bytes the serving KV cache stores
+            let rep = attention::fidelity_compressed(&s, &q, &k, &v, h, t, dh);
             table.row(vec![
                 variant.name().to_string(),
                 bits.to_string(),

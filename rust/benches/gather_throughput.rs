@@ -1,0 +1,117 @@
+//! Page-gather throughput: tokens/sec reconstructing a cached sequence,
+//! comparing the retained per-vector reference path against the
+//! page-granular batch path (`Stage1::decode_batch_strided` via
+//! `CacheManager::gather_ws`), single-threaded and strip-parallel —
+//! reported at the Table-2 sweep points d ∈ {128, 256, 512} × bits ∈
+//! {2, 3, 4}.
+//!
+//! "tok/s" counts *cached tokens reconstructed per second*: one token =
+//! `n_layers × n_heads × 2` encoded head vectors decoded into the
+//! lane-major gather layout.
+//!
+//! Run: `cargo bench --bench gather_throughput`
+
+use isoquant::kvcache::{CacheManager, GatherWorkspace, PageConfig};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::util::bench::{black_box, Bencher, Table};
+use isoquant::util::pool::{default_threads, ParallelPolicy};
+use isoquant::util::prng::Rng;
+
+const DIMS: [usize; 3] = [128, 256, 512];
+const BITS: [u8; 3] = [2, 3, 4];
+const N_LAYERS: usize = 2;
+const N_HEADS: usize = 4;
+const TOKENS: usize = 128;
+const TOKENS_PER_PAGE: usize = 16;
+
+fn build_cache(d: usize, bits: u8) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, d, bits));
+    let cfg = PageConfig {
+        tokens_per_page: TOKENS_PER_PAGE,
+        n_layers: N_LAYERS,
+        n_heads: N_HEADS,
+        d_head: d,
+        encoded_len: stage1.encoded_len(),
+    };
+    let mut m = CacheManager::new(stage1, cfg, TOKENS.div_ceil(TOKENS_PER_PAGE) + 1);
+    m.start_seq(1).unwrap();
+    let mut rng = Rng::new(0xD0 + d as u64 + bits as u64);
+    let tok_n = N_LAYERS * N_HEADS * d;
+    for _ in 0..TOKENS {
+        let k = rng.gaussian_vec_f32(tok_n);
+        let v = rng.gaussian_vec_f32(tok_n);
+        m.append_token(1, &k, &v).unwrap();
+    }
+    m
+}
+
+fn main() {
+    println!(
+        "== page gather throughput: per-vector vs batched vs batched+threads ==\n\
+         model {N_LAYERS}L x {N_HEADS}H, {TOKENS} cached tokens, \
+         {TOKENS_PER_PAGE} tokens/page, IsoQuant-Full, {} cores\n",
+        default_threads()
+    );
+    let mut table = Table::new(&[
+        "d",
+        "bits",
+        "per-vec tok/s",
+        "batched tok/s",
+        "threads tok/s",
+        "batched x",
+        "threads x",
+    ]);
+    let bench = Bencher::quick();
+    for d in DIMS {
+        for bits in BITS {
+            let mut m = build_cache(d, bits);
+            let sz = N_LAYERS * N_HEADS * TOKENS * d;
+            let mut k_out = vec![0.0f32; sz];
+            let mut v_out = vec![0.0f32; sz];
+            let mut ws = GatherWorkspace::new();
+
+            let r_ref = bench.run("per-vector", || {
+                black_box(m.gather_reference(1, TOKENS, &mut k_out, &mut v_out).unwrap());
+            });
+
+            m.parallel = ParallelPolicy::Off;
+            let r_batch = bench.run("batched", || {
+                black_box(
+                    m.gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
+                        .unwrap(),
+                );
+            });
+
+            m.parallel = ParallelPolicy::Auto;
+            let r_par = bench.run("batched+threads", || {
+                black_box(
+                    m.gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
+                        .unwrap(),
+                );
+            });
+
+            let tps = |median_s: f64| TOKENS as f64 / median_s;
+            let (a, b, c) = (
+                tps(r_ref.median.as_secs_f64()),
+                tps(r_batch.median.as_secs_f64()),
+                tps(r_par.median.as_secs_f64()),
+            );
+            table.row(vec![
+                d.to_string(),
+                bits.to_string(),
+                format!("{a:.0}"),
+                format!("{b:.0}"),
+                format!("{c:.0}"),
+                format!("{:.2}", b / a),
+                format!("{:.2}", c / a),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nbatched = gather_ws with ParallelPolicy::Off (allocation-free strided \
+         page decode);\nthreads = ParallelPolicy::Auto across the {} (layer, head) \
+         strips.",
+        N_LAYERS * N_HEADS
+    );
+}

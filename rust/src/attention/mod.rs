@@ -5,6 +5,7 @@
 //! and as an independent cross-check of the HLO scorer.
 
 use crate::metrics;
+use crate::quant::{BatchScratch, PackedSink, Stage1};
 
 /// Single-query multi-head attention:
 ///   q (H, dh), k (H, T, dh), v (H, T, dh) → (out (H, dh), logits (H, T))
@@ -122,6 +123,35 @@ pub fn fidelity(
     }
 }
 
+/// Attention fidelity of `stage1` KV compression measured through the
+/// *packed* batch path — `encode_batch` → `decode_batch`, i.e. exactly
+/// the bytes the serving cache stores and the records the gather
+/// decodes — rather than the fused in-register roundtrip.  `k`/`v` are
+/// `(H, T, dh)` with `dh == stage1.d()`.
+pub fn fidelity_compressed(
+    stage1: &Stage1,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    t: usize,
+    dh: usize,
+) -> FidelityReport {
+    assert_eq!(stage1.d(), dh, "stage1 dimension must match d_head");
+    assert_eq!(k.len(), h * t * dh);
+    assert_eq!(v.len(), h * t * dh);
+    let n = h * t;
+    let mut sink = PackedSink::new();
+    let mut scratch = BatchScratch::new();
+    let mut k_hat = vec![0.0f32; k.len()];
+    let mut v_hat = vec![0.0f32; v.len()];
+    stage1.encode_batch(k, n, &mut sink);
+    stage1.decode_batch(sink.as_bytes(), n, &mut k_hat, &mut scratch);
+    stage1.encode_batch(v, n, &mut sink);
+    stage1.decode_batch(sink.as_bytes(), n, &mut v_hat, &mut scratch);
+    fidelity(q, k, v, &k_hat, &v_hat, h, t, dh)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +242,26 @@ mod tests {
         assert!(reports[1].logit_mse < reports[0].logit_mse);
         assert!(reports[1].out_rel_l2 < 0.35, "{:?}", reports[1]);
         assert!(reports[1].out_cosine > 0.9);
+    }
+
+    #[test]
+    fn packed_path_fidelity_matches_fused_roundtrip() {
+        // the packed batch path stores/loads the same reconstructions as
+        // the fused roundtrip, so both fidelity measures must agree
+        let mut rng = Rng::new(3);
+        let (h, t, dh) = (2usize, 16usize, 64usize);
+        let q = rng.gaussian_vec_f32(h * dh);
+        let k = rng.gaussian_vec_f32(h * t * dh);
+        let v = rng.gaussian_vec_f32(h * t * dh);
+        let s = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, 4));
+        let packed = fidelity_compressed(&s, &q, &k, &v, h, t, dh);
+        let mut k_hat = vec![0.0f32; k.len()];
+        let mut v_hat = vec![0.0f32; v.len()];
+        s.roundtrip_batch(&k, &mut k_hat, h * t);
+        s.roundtrip_batch(&v, &mut v_hat, h * t);
+        let fused = fidelity(&q, &k, &v, &k_hat, &v_hat, h, t, dh);
+        assert!((packed.logit_mse - fused.logit_mse).abs() < 1e-9 + 1e-3 * fused.logit_mse);
+        assert!((packed.out_rel_l2 - fused.out_rel_l2).abs() < 1e-5);
+        assert!(packed.out_cosine > 0.95);
     }
 }

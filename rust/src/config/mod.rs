@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::quant::params::Variant;
 use crate::quant::scalar::QuantKind;
+use crate::util::pool::ParallelPolicy;
 
 /// Raw parsed config: section → key → value.
 #[derive(Debug, Default, Clone)]
@@ -163,6 +164,9 @@ pub struct EngineConfig {
     pub bind: String,
     /// stage-2 residual correction (0 = off, else projection dim)
     pub residual_m: usize,
+    /// threading of the batched KV gather: `off`, `auto`, or a thread
+    /// count (`[engine] gather_parallel`)
+    pub gather_parallel: ParallelPolicy,
     pub seed: u64,
 }
 
@@ -180,6 +184,7 @@ impl Default for EngineConfig {
             max_new_tokens_default: 32,
             bind: "127.0.0.1:7439".to_string(),
             residual_m: 0,
+            gather_parallel: ParallelPolicy::Auto,
             seed: 0x150_0541,
         }
     }
@@ -215,6 +220,16 @@ impl EngineConfig {
             )?,
             bind: raw.str_or("server", "bind", &d.bind),
             residual_m: raw.usize_or("engine", "residual_m", d.residual_m)?,
+            gather_parallel: match raw.get("engine", "gather_parallel") {
+                None => d.gather_parallel,
+                Some(Value::Int(0)) => ParallelPolicy::Off,
+                Some(Value::Int(n)) if *n > 0 => ParallelPolicy::Fixed(*n as usize),
+                Some(Value::Str(s)) => match ParallelPolicy::parse(s) {
+                    Some(p) => p,
+                    None => bail!("gather_parallel must be off/auto/<threads>, got {s:?}"),
+                },
+                Some(v) => bail!("gather_parallel must be off/auto/<threads>, got {v:?}"),
+            },
             seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
         })
     }
@@ -271,6 +286,30 @@ bind = "0.0.0.0:9000"
         assert_eq!(raw.get("a", "y").unwrap().as_float(), Some(2.5));
         assert_eq!(raw.get("a", "z").unwrap().as_bool(), Some(true));
         assert_eq!(raw.get("a", "s").unwrap().as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn gather_parallel_knob() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.gather_parallel, ParallelPolicy::Auto);
+        for (text, want) in [
+            ("[engine]\ngather_parallel = \"off\"", ParallelPolicy::Off),
+            ("[engine]\ngather_parallel = off", ParallelPolicy::Off),
+            ("[engine]\ngather_parallel = \"auto\"", ParallelPolicy::Auto),
+            ("[engine]\ngather_parallel = 0", ParallelPolicy::Off),
+            ("[engine]\ngather_parallel = 4", ParallelPolicy::Fixed(4)),
+        ] {
+            let cfg = EngineConfig::from_raw(&RawConfig::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.gather_parallel, want, "{text}");
+        }
+        for text in [
+            "[engine]\ngather_parallel = \"sideways\"",
+            "[engine]\ngather_parallel = -2",
+            "[engine]\ngather_parallel = true",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
     }
 
     #[test]

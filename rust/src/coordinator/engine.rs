@@ -22,7 +22,7 @@ use anyhow::Result;
 
 use super::request::{Completion, FinishReason, Request, Timing};
 use crate::config::EngineConfig;
-use crate::kvcache::{CacheManager, PageConfig, SeqId};
+use crate::kvcache::{CacheManager, GatherWorkspace, PageConfig, SeqId};
 use crate::metrics::{argmax, Counters, LatencyRecorder};
 use crate::quant::{Stage1, Stage1Config};
 use crate::runtime::ServingModel;
@@ -72,6 +72,14 @@ pub struct Engine {
     // reused (L, B, H, T, dh) buffers
     k_buf: Vec<f32>,
     v_buf: Vec<f32>,
+    /// persistent batched-gather scratch (strip decode state)
+    gather_ws: GatherWorkspace,
+    /// lanes whose k_buf/v_buf regions hold stale gathered data (true
+    /// after a lane has been active; cleared when re-zeroed while free)
+    lane_dirty: Vec<bool>,
+    // reused per-token (L, H, dh) staging buffers for appends
+    tok_k: Vec<f32>,
+    tok_v: Vec<f32>,
     pub stats: EngineStats,
 }
 
@@ -93,9 +101,11 @@ impl Engine {
         };
         // pool sized for all lanes at max_seq plus 25% headroom
         let max_pages = (m.serve_batch * m.max_seq.div_ceil(cfg.page_tokens)) * 5 / 4 + 1;
-        let cache = CacheManager::new(stage1, page_cfg, max_pages);
+        let mut cache = CacheManager::new(stage1, page_cfg, max_pages);
+        cache.parallel = cfg.gather_parallel;
         let lanes = (0..m.serve_batch).map(|_| Lane::Free).collect();
         let cache_numel = model.cache_numel();
+        let tok_numel = m.n_layers * m.n_heads * m.d_head;
         Ok(Engine {
             model,
             cache,
@@ -106,6 +116,10 @@ impl Engine {
             next_seq: 1,
             k_buf: vec![0.0; cache_numel],
             v_buf: vec![0.0; cache_numel],
+            gather_ws: GatherWorkspace::new(),
+            lane_dirty: vec![false; m.serve_batch],
+            tok_k: vec![0.0; tok_numel],
+            tok_v: vec![0.0; tok_numel],
             stats: EngineStats::default(),
         })
     }
@@ -200,18 +214,36 @@ impl Engine {
     fn gather_lanes(&mut self) -> Result<()> {
         let t0 = Instant::now();
         let b = self.model.batch();
-        let t_max = self.model.meta.max_seq;
-        self.k_buf.fill(0.0);
-        self.v_buf.fill(0.0);
+        let m = &self.model.meta;
+        let (l, h, dh, t_max) = (m.n_layers, m.n_heads, m.d_head, m.max_seq);
+        // active lanes are fully overwritten by the strip gather below;
+        // only a free lane that previously held a sequence would leak
+        // stale cache bytes, so zero exactly those regions, once
+        for lane in 0..b {
+            match self.lanes[lane] {
+                Lane::Free if self.lane_dirty[lane] => {
+                    let len = h * t_max * dh;
+                    for layer in 0..l {
+                        let base = ((layer * b) + lane) * len;
+                        self.k_buf[base..base + len].fill(0.0);
+                        self.v_buf[base..base + len].fill(0.0);
+                    }
+                    self.lane_dirty[lane] = false;
+                }
+                Lane::Active(_) => self.lane_dirty[lane] = true,
+                Lane::Free => {}
+            }
+        }
         for lane in 0..b {
             if let Lane::Active(a) = &self.lanes[lane] {
-                self.cache.gather_into_batch(
+                self.cache.gather_into_batch_ws(
                     a.seq,
                     lane,
                     b,
                     t_max,
                     &mut self.k_buf,
                     &mut self.v_buf,
+                    &mut self.gather_ws,
                 )?;
             }
         }
@@ -220,7 +252,10 @@ impl Engine {
     }
 
     /// Append token `j` of a (L, B, H, P, dh)-shaped chunk (P = 1 for
-    /// decode outputs) for batch lane `lane` to sequence `seq`.
+    /// decode outputs) for batch lane `lane` to sequence `seq`.  The
+    /// token is staged into the persistent `tok_k`/`tok_v` buffers
+    /// (contiguous `[layer][head][dh]`, the batch-encode input layout),
+    /// so steady-state appends allocate nothing.
     fn append_from_chunk(
         &mut self,
         seq: SeqId,
@@ -230,21 +265,20 @@ impl Engine {
         p: usize,
         j: usize,
     ) -> Result<()> {
-        let m = self.model.meta.clone();
+        let m = &self.model.meta;
         let (l, b, h, dh) = (m.n_layers, m.serve_batch, m.n_heads, m.d_head);
         debug_assert_eq!(k_chunk.len(), l * b * h * p * dh);
-        let mut k_t = vec![0.0f32; l * h * dh];
-        let mut v_t = vec![0.0f32; l * h * dh];
+        debug_assert_eq!(self.tok_k.len(), l * h * dh);
         for layer in 0..l {
             for head in 0..h {
                 let src = ((((layer * b) + lane) * h + head) * p + j) * dh;
                 let dst = (layer * h + head) * dh;
-                k_t[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
-                v_t[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
+                self.tok_k[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
+                self.tok_v[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
             }
         }
         let t0 = Instant::now();
-        self.cache.append_token(seq, &k_t, &v_t)?;
+        self.cache.append_token(seq, &self.tok_k, &self.tok_v)?;
         self.stats.append.record(t0.elapsed());
         let (c, u) = self.cache.slot_bytes();
         Counters::bump(&self.stats.counters.bytes_compressed, c as u64);

@@ -6,6 +6,21 @@
 //! append and *decoded* on every subsequent decode step's gather — the
 //! deployment pattern the paper's fused-kernel latency argument is
 //! about.
+//!
+//! Both directions run the batch-first stage-1 API
+//! (`quant::pipeline`'s `encode_batch` / `decode_batch_strided`):
+//!
+//! * **append** batch-encodes a token's `n_layers × n_heads` contiguous
+//!   K (then V) head vectors into a persistent [`PackedSink`] and fans
+//!   the records out to page slots — zero steady-state allocation;
+//! * **gather** decomposes into `n_layers × n_heads` independent
+//!   *strips* (one `[t][dh]` destination run per (layer, head)), each
+//!   decoded page-by-page with strided batch decodes, optionally in
+//!   parallel across strips per the manager's [`ParallelPolicy`].
+//!
+//! The pre-batch per-vector path survives as
+//! [`CacheManager::gather_reference`]: the property-test oracle and the
+//! bench baseline (`benches/gather_throughput.rs`).
 
 use std::collections::HashMap;
 
@@ -13,9 +28,16 @@ use anyhow::{bail, Context, Result};
 
 use super::allocator::{PageAllocator, PageId};
 use super::page::PageConfig;
-use crate::quant::Stage1;
+use crate::quant::{BatchScratch, PackedSink, Stage1};
+use crate::util::pool::{scope_units, ParallelPolicy};
 
 pub type SeqId = u64;
+
+/// Below this many encoded vectors (tokens × layers × heads × K/V) a
+/// gather runs single-threaded even under `ParallelPolicy::Auto` —
+/// spawning scoped threads costs tens of microseconds, which only pays
+/// off once the decode work dwarfs it.
+const MIN_PARALLEL_VECTORS: usize = 512;
 
 /// Per-sequence state: block table + token count.
 #[derive(Debug, Default, Clone)]
@@ -28,11 +50,33 @@ struct SeqCache {
     shadow_v: Vec<f32>,
 }
 
+/// Persistent scratch for the batched gather path: one decode scratch
+/// per (layer, head) strip so strips can decode concurrently, plus the
+/// strip-base table.  Keep one per engine (or per bench loop); the hot
+/// inner-loop buffers then persist across gathers — the only remaining
+/// per-call allocation is the O(layers × heads) strip-slice
+/// bookkeeping, whose `&mut` lifetimes are necessarily per-call.
+#[derive(Debug, Default)]
+pub struct GatherWorkspace {
+    scratch: Vec<BatchScratch>,
+    bases: Vec<usize>,
+}
+
+impl GatherWorkspace {
+    pub fn new() -> GatherWorkspace {
+        GatherWorkspace::default()
+    }
+}
+
 /// The engine-wide KV cache.
 pub struct CacheManager {
     alloc: PageAllocator,
     stage1: Stage1,
     seqs: HashMap<SeqId, SeqCache>,
+    /// persistent encode sink for appends (K batch, then V batch)
+    sink: PackedSink,
+    /// threading policy for the strip-parallel gather path
+    pub parallel: ParallelPolicy,
     /// keep an uncompressed shadow (for fidelity measurement only; off on
     /// the real serving path)
     pub keep_shadow: bool,
@@ -46,6 +90,8 @@ impl CacheManager {
             alloc: PageAllocator::new(page_cfg, max_pages),
             stage1,
             seqs: HashMap::new(),
+            sink: PackedSink::new(),
+            parallel: ParallelPolicy::Off,
             keep_shadow: false,
         }
     }
@@ -102,7 +148,10 @@ impl CacheManager {
 
     /// Append one token's K/V: `k_t`/`v_t` are laid out `[layer][head][dh]`
     /// (the `k_new`/`v_new` outputs of the decode artifact for one batch
-    /// lane).  Compresses each head vector independently.
+    /// lane).  The K vectors (then the V vectors) are one contiguous
+    /// `n_layers × n_heads` batch, so each side is a single
+    /// `encode_batch` call into the persistent sink; only the resulting
+    /// records are fanned out to page slots.
     pub fn append_token(&mut self, seq: SeqId, k_t: &[f32], v_t: &[f32]) -> Result<()> {
         let cfg = *self.alloc.cfg();
         let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
@@ -132,17 +181,13 @@ impl CacheManager {
             }
         };
 
-        let mut buf = Vec::with_capacity(cfg.encoded_len);
-        for layer in 0..l {
-            for head in 0..h {
-                let base = (layer * h + head) * dh;
-                for (is_v, src) in [(false, k_t), (true, v_t)] {
-                    buf.clear();
-                    self.stage1.encode(&src[base..base + dh], &mut buf);
-                    self.alloc
-                        .page_mut(page_id)
-                        .slot_mut(&cfg, slot, layer, head, is_v)
-                        .copy_from_slice(&buf);
+        for (is_v, src) in [(false, k_t), (true, v_t)] {
+            self.stage1.encode_batch(src, l * h, &mut self.sink);
+            let page = self.alloc.page_mut(page_id);
+            for layer in 0..l {
+                for head in 0..h {
+                    page.slot_mut(&cfg, slot, layer, head, is_v)
+                        .copy_from_slice(self.sink.encoded(layer * h + head));
                 }
             }
         }
@@ -157,8 +202,169 @@ impl CacheManager {
 
     /// Reconstruct this sequence's cache into caller buffers shaped
     /// `[layer][head][t_max][dh]` (padded with zeros beyond `len`).
-    /// This is the decode-side hot loop.
+    /// This is the decode-side hot loop; `ws` persists decode scratch
+    /// across calls.
+    pub fn gather_ws(
+        &self,
+        seq: SeqId,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        ws: &mut GatherWorkspace,
+    ) -> Result<usize> {
+        let cfg = *self.alloc.cfg();
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        if k_out.len() != l * h * t_max * dh || v_out.len() != l * h * t_max * dh {
+            bail!("gather: output buffer shape mismatch");
+        }
+        let s = self.seqs.get(&seq).context("unknown sequence")?;
+        let n = self.gather_strips(s, t_max, k_out, v_out, ws, |layer, head| {
+            (layer * h + head) * t_max * dh
+        });
+        Ok(n)
+    }
+
+    /// [`CacheManager::gather_ws`] with a throwaway workspace (tests and
+    /// one-off callers; the engine holds a persistent workspace).
     pub fn gather(
+        &self,
+        seq: SeqId,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<usize> {
+        self.gather_ws(seq, t_max, k_out, v_out, &mut GatherWorkspace::new())
+    }
+
+    /// Reconstruct directly into a batched `(L, B, H, T, dh)` buffer at
+    /// batch lane `lane` — the layout the decode artifact consumes.
+    /// Avoids an intermediate per-sequence copy on the serving hot path.
+    pub fn gather_into_batch_ws(
+        &self,
+        seq: SeqId,
+        lane: usize,
+        batch: usize,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        ws: &mut GatherWorkspace,
+    ) -> Result<usize> {
+        let cfg = *self.alloc.cfg();
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        let expect = l * batch * h * t_max * dh;
+        if k_out.len() != expect || v_out.len() != expect {
+            bail!("gather_into_batch: buffer shape mismatch");
+        }
+        if lane >= batch {
+            bail!("gather_into_batch: lane {lane} >= batch {batch}");
+        }
+        let s = self.seqs.get(&seq).context("unknown sequence")?;
+        let n = self.gather_strips(s, t_max, k_out, v_out, ws, |layer, head| {
+            (((layer * batch) + lane) * h + head) * t_max * dh
+        });
+        Ok(n)
+    }
+
+    /// [`CacheManager::gather_into_batch_ws`] with a throwaway workspace.
+    pub fn gather_into_batch(
+        &self,
+        seq: SeqId,
+        lane: usize,
+        batch: usize,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<usize> {
+        self.gather_into_batch_ws(
+            seq,
+            lane,
+            batch,
+            t_max,
+            k_out,
+            v_out,
+            &mut GatherWorkspace::new(),
+        )
+    }
+
+    /// The shared batched gather core: carve `k_out`/`v_out` into the
+    /// `n_layers × n_heads` disjoint per-(layer, head) strips located by
+    /// `strip_base`, zero each strip, then decode it page-run by
+    /// page-run with strided batch decodes — in parallel across strips
+    /// when the policy allows.
+    fn gather_strips(
+        &self,
+        s: &SeqCache,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        ws: &mut GatherWorkspace,
+        strip_base: impl Fn(usize, usize) -> usize,
+    ) -> usize {
+        let cfg = *self.alloc.cfg();
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        let n = s.len.min(t_max);
+        let tp = cfg.tokens_per_page;
+        let slot_bytes = cfg.slot_bytes();
+        let strip_len = t_max * dh;
+        ws.scratch.resize_with(l * h, BatchScratch::new);
+        ws.bases.clear();
+        ws.bases.extend((0..l * h).map(|j| strip_base(j / h, j % h)));
+
+        let k_strips = carve_strips(k_out, &ws.bases, strip_len);
+        let v_strips = carve_strips(v_out, &ws.bases, strip_len);
+        let units: Vec<(usize, &mut [f32], &mut [f32], &mut BatchScratch)> = k_strips
+            .into_iter()
+            .zip(v_strips)
+            .zip(ws.scratch.iter_mut())
+            .enumerate()
+            .map(|(j, ((ks, vs), sc))| (j, ks, vs, sc))
+            .collect();
+
+        // scoped threads rather than the long-lived ThreadPool: the units
+        // borrow the caller's output buffers, which `ThreadPool`'s
+        // 'static jobs cannot; the spawn cost is gated on work size
+        let threads = if n * l * h * 2 < MIN_PARALLEL_VECTORS {
+            1
+        } else {
+            self.parallel.threads(l * h)
+        };
+        scope_units(units, threads, |(j, k_strip, v_strip, scratch)| {
+            let (layer, head) = (j / h, j % h);
+            k_strip.fill(0.0);
+            v_strip.fill(0.0);
+            let mut t = 0usize;
+            while t < n {
+                let run = tp.min(n - t);
+                let page = self.alloc.page(s.pages[t / tp]);
+                let (k_col, stride) = page.column(&cfg, layer, head, false);
+                let (v_col, _) = page.column(&cfg, layer, head, true);
+                debug_assert_eq!(stride, slot_bytes);
+                self.stage1.decode_batch_strided(
+                    k_col,
+                    slot_bytes,
+                    run,
+                    &mut k_strip[t * dh..(t + run) * dh],
+                    scratch,
+                );
+                self.stage1.decode_batch_strided(
+                    v_col,
+                    slot_bytes,
+                    run,
+                    &mut v_strip[t * dh..(t + run) * dh],
+                    scratch,
+                );
+                t += run;
+            }
+        });
+        n
+    }
+
+    /// The pre-batch per-vector gather (one `Stage1::decode` call per
+    /// (token, layer, head) vector, allocating inside each call) —
+    /// retained as the property-test oracle and the
+    /// `gather_throughput` bench baseline.  Same output layout and
+    /// zero-padding semantics as [`CacheManager::gather_ws`].
+    pub fn gather_reference(
         &self,
         seq: SeqId,
         t_max: usize,
@@ -168,7 +374,7 @@ impl CacheManager {
         let cfg = *self.alloc.cfg();
         let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
         if k_out.len() != l * h * t_max * dh || v_out.len() != l * h * t_max * dh {
-            bail!("gather: output buffer shape mismatch");
+            bail!("gather_reference: output buffer shape mismatch");
         }
         let s = self.seqs.get(&seq).context("unknown sequence")?;
         let n = s.len.min(t_max);
@@ -181,58 +387,6 @@ impl CacheManager {
             for layer in 0..l {
                 for head in 0..h {
                     let dst = ((layer * h + head) * t_max + t) * dh;
-                    self.stage1.decode(
-                        page.slot(&cfg, slot, layer, head, false),
-                        &mut k_out[dst..dst + dh],
-                    );
-                    self.stage1.decode(
-                        page.slot(&cfg, slot, layer, head, true),
-                        &mut v_out[dst..dst + dh],
-                    );
-                }
-            }
-        }
-        Ok(n)
-    }
-
-    /// Reconstruct directly into a batched `(L, B, H, T, dh)` buffer at
-    /// batch lane `lane` — the layout the decode artifact consumes.
-    /// Avoids an intermediate per-sequence copy on the serving hot path.
-    pub fn gather_into_batch(
-        &self,
-        seq: SeqId,
-        lane: usize,
-        batch: usize,
-        t_max: usize,
-        k_out: &mut [f32],
-        v_out: &mut [f32],
-    ) -> Result<usize> {
-        let cfg = *self.alloc.cfg();
-        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
-        let expect = l * batch * h * t_max * dh;
-        if k_out.len() != expect || v_out.len() != expect {
-            bail!("gather_into_batch: buffer shape mismatch");
-        }
-        if lane >= batch {
-            bail!("gather_into_batch: lane {lane} >= batch {batch}");
-        }
-        let s = self.seqs.get(&seq).context("unknown sequence")?;
-        let n = s.len.min(t_max);
-        let tp = cfg.tokens_per_page;
-        for layer in 0..l {
-            for head in 0..h {
-                // zero this lane's strip (slots ≥ n must not leak)
-                let strip = (((layer * batch) + lane) * h + head) * t_max * dh;
-                k_out[strip..strip + t_max * dh].fill(0.0);
-                v_out[strip..strip + t_max * dh].fill(0.0);
-            }
-        }
-        for t in 0..n {
-            let page = self.alloc.page(s.pages[t / tp]);
-            let slot = t % tp;
-            for layer in 0..l {
-                for head in 0..h {
-                    let dst = ((((layer * batch) + lane) * h + head) * t_max + t) * dh;
                     self.stage1.decode(
                         page.slot(&cfg, slot, layer, head, false),
                         &mut k_out[dst..dst + dh],
@@ -280,6 +434,29 @@ impl CacheManager {
         let cfg = self.alloc.cfg();
         (cfg.slot_bytes(), cfg.slot_bytes_uncompressed())
     }
+}
+
+/// Split `buf` into disjoint `strip_len`-sized mutable windows starting
+/// at the (strictly ascending, non-overlapping) `bases`, skipping the
+/// gaps between them.  Lets the strip-parallel gather hand each worker
+/// an owned `&mut` window of a shared output buffer safely.
+fn carve_strips<'a>(
+    mut buf: &'a mut [f32],
+    bases: &[usize],
+    strip_len: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(bases.len());
+    let mut cursor = 0usize;
+    for &base in bases {
+        debug_assert!(base >= cursor, "strip bases must ascend without overlap");
+        let tmp = buf;
+        let (_gap, rest) = tmp.split_at_mut(base - cursor);
+        let (strip, rest) = rest.split_at_mut(strip_len);
+        out.push(strip);
+        buf = rest;
+        cursor = base + strip_len;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -334,6 +511,85 @@ mod tests {
         // padding stays zero
         let pad = ((0 * cfg.n_heads) * t_max + 12) * dh;
         assert!(k_out[pad..pad + dh].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batched_gather_bit_exact_with_reference() {
+        // the batch path (any threading policy) must reproduce the
+        // per-vector reference path bit for bit
+        for policy in [
+            ParallelPolicy::Off,
+            ParallelPolicy::Auto,
+            ParallelPolicy::Fixed(3),
+        ] {
+            let mut m = mk(64, 3);
+            m.parallel = policy;
+            let cfg = m.page_cfg();
+            let mut rng = Rng::new(7);
+            m.start_seq(1).unwrap();
+            // 64 tokens × 2L × 2H × 2 = 512 vectors: crosses
+            // MIN_PARALLEL_VECTORS so the threaded path really runs
+            for _ in 0..64 {
+                let (k, v) = token(&mut rng, &cfg);
+                m.append_token(1, &k, &v).unwrap();
+            }
+            let t_max = 68;
+            let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+            let (mut ka, mut va) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+            let (mut kb, mut vb) = (vec![1.0f32; sz], vec![1.0f32; sz]);
+            let mut ws = GatherWorkspace::new();
+            let na = m.gather_reference(1, t_max, &mut ka, &mut va).unwrap();
+            let nb = m.gather_ws(1, t_max, &mut kb, &mut vb, &mut ws).unwrap();
+            assert_eq!(na, nb);
+            assert_eq!(
+                ka.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                kb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{policy:?} K"
+            );
+            assert_eq!(
+                va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{policy:?} V"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_lane_gather_matches_single_gather() {
+        let mut m = mk(64, 4);
+        m.parallel = ParallelPolicy::Auto;
+        let cfg = m.page_cfg();
+        let mut rng = Rng::new(8);
+        m.start_seq(1).unwrap();
+        for _ in 0..18 {
+            let (k, v) = token(&mut rng, &cfg);
+            m.append_token(1, &k, &v).unwrap();
+        }
+        let (t_max, batch, lane) = (20usize, 3usize, 1usize);
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        let single = l * h * t_max * dh;
+        let (mut k1, mut v1) = (vec![0.0f32; single], vec![0.0f32; single]);
+        m.gather(1, t_max, &mut k1, &mut v1).unwrap();
+        let wide = l * batch * h * t_max * dh;
+        let (mut kb, mut vb) = (vec![9.0f32; wide], vec![9.0f32; wide]);
+        let mut ws = GatherWorkspace::new();
+        m.gather_into_batch_ws(1, lane, batch, t_max, &mut kb, &mut vb, &mut ws)
+            .unwrap();
+        for layer in 0..l {
+            for head in 0..h {
+                let a = (layer * h + head) * t_max * dh;
+                let b = (((layer * batch) + lane) * h + head) * t_max * dh;
+                assert_eq!(
+                    &k1[a..a + t_max * dh],
+                    &kb[b..b + t_max * dh],
+                    "layer {layer} head {head}"
+                );
+                assert_eq!(&v1[a..a + t_max * dh], &vb[b..b + t_max * dh]);
+            }
+        }
+        // other lanes untouched by the lane gather
+        let other = (((0 * batch) + 0) * h + 0) * t_max * dh;
+        assert!(kb[other..other + dh].iter().all(|&x| x == 9.0));
     }
 
     #[test]
@@ -442,5 +698,23 @@ mod tests {
         m.drop_seq(1);
         // seq 2 still readable after seq 1 dropped
         assert!(m.gather(2, t_max, &mut b, &mut tmp).is_ok());
+    }
+
+    #[test]
+    fn carve_strips_tiles_and_skips_gaps() {
+        let mut buf = vec![0.0f32; 40];
+        let strips = carve_strips(&mut buf, &[5, 15, 30], 5);
+        assert_eq!(strips.len(), 3);
+        for (i, s) in strips.into_iter().enumerate() {
+            s.fill((i + 1) as f32);
+        }
+        assert_eq!(&buf[5..10], &[1.0; 5]);
+        assert_eq!(&buf[15..20], &[2.0; 5]);
+        assert_eq!(&buf[30..35], &[3.0; 5]);
+        // gaps untouched
+        assert!(buf[0..5].iter().all(|&x| x == 0.0));
+        assert!(buf[10..15].iter().all(|&x| x == 0.0));
+        assert!(buf[20..30].iter().all(|&x| x == 0.0));
+        assert!(buf[35..].iter().all(|&x| x == 0.0));
     }
 }

@@ -6,5 +6,5 @@ pub mod manager;
 pub mod page;
 
 pub use allocator::{PageAllocator, PageId};
-pub use manager::{CacheManager, SeqId};
+pub use manager::{CacheManager, GatherWorkspace, SeqId};
 pub use page::{Page, PageConfig};

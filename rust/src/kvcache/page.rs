@@ -66,6 +66,16 @@ impl Page {
         &self.data[off..off + cfg.encoded_len]
     }
 
+    /// The (layer, head, K|V) *column* of this page: one encoded record
+    /// per token slot, strided by [`PageConfig::slot_bytes`].  Returns
+    /// `(bytes, stride)` in the exact shape
+    /// `Stage1::decode_batch_strided` consumes — slot `t`'s record lives
+    /// at `bytes[t * stride..t * stride + encoded_len]`.
+    pub fn column(&self, cfg: &PageConfig, layer: usize, head: usize, is_v: bool) -> (&[u8], usize) {
+        let off = cfg.offset(0, layer, head, is_v);
+        (&self.data[off..], cfg.slot_bytes())
+    }
+
     /// Zero the page (reuse hygiene — stale codes must not leak between
     /// sequences).
     pub fn clear(&mut self) {
@@ -111,6 +121,23 @@ mod tests {
         }
         // offsets tile the page exactly
         assert_eq!(seen.len() * c.encoded_len, c.page_bytes());
+    }
+
+    #[test]
+    fn column_is_the_strided_slot_run() {
+        let c = cfg();
+        let mut p = Page::new(&c);
+        for slot in 0..c.tokens_per_page {
+            p.slot_mut(&c, slot, 1, 2, false).fill(slot as u8);
+        }
+        let (bytes, stride) = p.column(&c, 1, 2, false);
+        assert_eq!(stride, c.slot_bytes());
+        for slot in 0..c.tokens_per_page {
+            assert_eq!(
+                &bytes[slot * stride..slot * stride + c.encoded_len],
+                p.slot(&c, slot, 1, 2, false)
+            );
+        }
     }
 
     #[test]

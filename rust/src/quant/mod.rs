@@ -21,5 +21,5 @@ pub mod residual;
 pub mod scalar;
 
 pub use params::{ParamBank, Variant};
-pub use pipeline::{mse, Stage1, Stage1Config, Stage1Unfused};
+pub use pipeline::{mse, BatchScratch, PackedSink, Stage1, Stage1Config, Stage1Unfused};
 pub use scalar::{QuantKind, ScalarQuantizer};

@@ -13,6 +13,12 @@ pub fn packed_len(n: usize, bits: u8) -> usize {
 /// Pack `codes` (each < 2^bits) into `out` (cleared first).
 pub fn pack(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
     out.clear();
+    pack_append(codes, bits, out);
+}
+
+/// Pack `codes` (each < 2^bits), appending to `out` — the batch encode
+/// path packs many vectors into one contiguous buffer with this.
+pub fn pack_append(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
     out.reserve(packed_len(codes.len(), bits));
     match bits {
         4 => {
@@ -184,6 +190,28 @@ mod tests {
             unpack_dequantize(&packed, bits, n, &levels, &mut direct);
             let want: Vec<f32> = codes.iter().map(|&c| levels[c as usize]).collect();
             assert_eq!(direct, want);
+        }
+    }
+
+    #[test]
+    fn pack_append_concatenates_per_vector_packings() {
+        // appending two packings must equal packing each separately and
+        // concatenating the byte runs (vectors are byte-aligned)
+        let mut rng = Rng::new(11);
+        for bits in [2u8, 3, 4] {
+            // ragged lengths: each vector's packing is byte-padded, so
+            // appends always start byte-aligned
+            let a: Vec<u8> = (0..127).map(|_| rng.below(1 << bits) as u8).collect();
+            let b: Vec<u8> = (0..61).map(|_| rng.below(1 << bits) as u8).collect();
+            let mut joined = Vec::new();
+            pack_append(&a, bits, &mut joined);
+            pack_append(&b, bits, &mut joined);
+            let mut pa = Vec::new();
+            let mut pb = Vec::new();
+            pack(&a, bits, &mut pa);
+            pack(&b, bits, &mut pb);
+            pa.extend_from_slice(&pb);
+            assert_eq!(joined, pa, "bits={bits}");
         }
     }
 

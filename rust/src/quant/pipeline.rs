@@ -17,6 +17,31 @@
 //! quantize–dequantize path benchmarked in Table 2;
 //! [`Stage1::encode`]/[`Stage1::decode`] add bit-packing and are what the
 //! KV cache stores.
+//!
+//! # Batch API (the serving hot path)
+//!
+//! The per-vector [`Stage1::encode`]/[`Stage1::decode`] pair allocates
+//! scratch on every call and is retained as the *reference* the batch
+//! path is property-tested against.  The cache and engine drive the
+//! batch-first API instead:
+//!
+//! * [`Stage1::encode_batch`] compresses `n_vecs` row-major `d`-vectors
+//!   into a [`PackedSink`] — one contiguous run of `encoded_len()`-byte
+//!   records (f32 norm + byte-padded packed codes, identical bytes to
+//!   per-vector [`Stage1::encode`]).  The sink's buffers persist across
+//!   calls, so steady-state appends allocate nothing.
+//! * [`Stage1::decode_batch_strided`] walks `n_vecs` encoded records
+//!   spaced `stride` bytes apart (a KV page stores one token per
+//!   `slot_bytes()` stride) and reconstructs straight into a contiguous
+//!   `n_vecs × d` f32 destination — the lane-major gather layout — via a
+//!   reusable [`BatchScratch`], with no intermediate per-vector `Vec`s.
+//!   [`Stage1::decode_batch`] is the contiguous (`stride == encoded_len`)
+//!   special case.
+//!
+//! Both batch directions are bit-exact with their per-vector references
+//! (`rust/tests/proptest_invariants.rs` sweeps every variant × d × bits
+//! combination plus ragged tails), so threading page decodes across
+//! cores cannot change served results.
 
 use crate::math::quaternion::{self as quat};
 use crate::math::rotor3::Rotor;
@@ -45,6 +70,59 @@ const P8: [usize; 8] = [0, 4, 1, 5, 2, 6, 3, 7];
 pub enum RotorImpl {
     Multivector,
     OddIntermediate,
+}
+
+/// Reusable destination for [`Stage1::encode_batch`]: a contiguous run
+/// of encoded vectors plus the quantize scratch, all retained across
+/// calls so steady-state encoding allocates nothing.
+#[derive(Debug, Default)]
+pub struct PackedSink {
+    /// `n_vecs × encoded_len` bytes, vector `i` at `i * encoded_len`
+    bytes: Vec<u8>,
+    /// per-vector code-index scratch (`n_codes` entries)
+    codes: Vec<u8>,
+    encoded_len: usize,
+    n_vecs: usize,
+}
+
+impl PackedSink {
+    pub fn new() -> PackedSink {
+        PackedSink::default()
+    }
+
+    /// Number of encoded vectors from the last `encode_batch` call.
+    pub fn len(&self) -> usize {
+        self.n_vecs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_vecs == 0
+    }
+
+    /// The `i`-th encoded vector (norm + packed codes).
+    pub fn encoded(&self, i: usize) -> &[u8] {
+        assert!(i < self.n_vecs, "PackedSink: vector {i} of {}", self.n_vecs);
+        &self.bytes[i * self.encoded_len..(i + 1) * self.encoded_len]
+    }
+
+    /// All encoded vectors as one contiguous byte run.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes[..self.n_vecs * self.encoded_len]
+    }
+}
+
+/// Reusable scratch for [`Stage1::decode_batch_strided`] — one per
+/// concurrent decode strip.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// unpacked code indices of the vector being decoded (`n_codes`)
+    codes: Vec<u8>,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
 }
 
 /// Full configuration of a stage-1 transform.
@@ -195,9 +273,7 @@ impl Stage1 {
         let mut codes = Vec::with_capacity(self.n_codes());
         self.rotate_quantize_codes(x, pre, &mut codes);
         out.extend_from_slice(&rho.to_le_bytes());
-        let mut packed = Vec::new();
-        packing::pack(&codes, self.cfg.bits, &mut packed);
-        out.extend_from_slice(&packed);
+        packing::pack_append(&codes, self.cfg.bits, out);
     }
 
     /// Decompress one vector previously produced by [`Stage1::encode`].
@@ -209,6 +285,89 @@ impl Stage1 {
         packing::unpack(&data[4..], self.cfg.bits, self.n_codes(), &mut codes);
         let post = rho / self.scale;
         self.dequantize_unrotate(&codes, post, out);
+    }
+
+    // ------------------------------------------------------------------
+    // batched encode / decode (the page-granular serving hot path)
+    // ------------------------------------------------------------------
+
+    /// Compress `n_vecs` row-major `d`-vectors into `sink` as one
+    /// contiguous run of `encoded_len()`-byte records.
+    ///
+    /// Record `i` is byte-identical to what [`Stage1::encode`] appends
+    /// for `x[i*d..(i+1)*d]`; the parameter bank, quantizer tables, and
+    /// scratch buffers are hoisted out of the per-vector loop and the
+    /// sink's capacity persists across calls (zero steady-state
+    /// allocation once warm).
+    pub fn encode_batch(&self, x: &[f32], n_vecs: usize, sink: &mut PackedSink) {
+        let d = self.cfg.d;
+        assert_eq!(x.len(), n_vecs * d, "encode_batch: x must be n_vecs × d");
+        let enc = self.encoded_len();
+        sink.encoded_len = enc;
+        sink.n_vecs = n_vecs;
+        sink.bytes.clear();
+        sink.bytes.reserve(n_vecs * enc);
+        for i in 0..n_vecs {
+            let xi = &x[i * d..(i + 1) * d];
+            let rho = l2_norm(xi);
+            let pre = self.scale / rho.max(EPS);
+            sink.codes.clear();
+            self.rotate_quantize_codes(xi, pre, &mut sink.codes);
+            sink.bytes.extend_from_slice(&rho.to_le_bytes());
+            packing::pack_append(&sink.codes, self.cfg.bits, &mut sink.bytes);
+        }
+    }
+
+    /// Decode `n_vecs` records stored contiguously (`stride ==
+    /// encoded_len()`) into `out` (`n_vecs × d`).  See
+    /// [`Stage1::decode_batch_strided`].
+    pub fn decode_batch(
+        &self,
+        data: &[u8],
+        n_vecs: usize,
+        out: &mut [f32],
+        scratch: &mut BatchScratch,
+    ) {
+        self.decode_batch_strided(data, self.encoded_len(), n_vecs, out, scratch);
+    }
+
+    /// Decode `n_vecs` encoded records spaced `stride` bytes apart in
+    /// `data` (record `i` at `data[i*stride..i*stride+encoded_len()]`)
+    /// straight into the contiguous destination `out[i*d..(i+1)*d]`.
+    ///
+    /// This is the KV-page gather kernel: a page stores one token slot
+    /// every `PageConfig::slot_bytes()`, so a (layer, head) column of a
+    /// page is exactly a strided record run, and the destination is the
+    /// lane-major `[t][dh]` gather layout.  Bit-exact with per-vector
+    /// [`Stage1::decode`]; no per-vector allocation (scratch is reused).
+    pub fn decode_batch_strided(
+        &self,
+        data: &[u8],
+        stride: usize,
+        n_vecs: usize,
+        out: &mut [f32],
+        scratch: &mut BatchScratch,
+    ) {
+        let d = self.cfg.d;
+        let enc = self.encoded_len();
+        let nc = self.n_codes();
+        let bits = self.cfg.bits;
+        assert!(stride >= enc, "decode_batch_strided: stride {stride} < encoded_len {enc}");
+        assert_eq!(out.len(), n_vecs * d, "decode_batch_strided: out must be n_vecs × d");
+        if n_vecs == 0 {
+            return;
+        }
+        assert!(
+            data.len() >= (n_vecs - 1) * stride + enc,
+            "decode_batch_strided: data too short for {n_vecs} records"
+        );
+        for i in 0..n_vecs {
+            let rec = &data[i * stride..i * stride + enc];
+            let rho = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+            let post = rho / self.scale;
+            packing::unpack(&rec[4..], bits, nc, &mut scratch.codes);
+            self.dequantize_unrotate(&scratch.codes, post, &mut out[i * d..(i + 1) * d]);
+        }
     }
 
     // ------------------------------------------------------------------
@@ -1095,6 +1254,85 @@ mod tests {
         assert!(out.iter().all(|o| o.is_finite()));
         let rel = mse(&x, &out) / (x.iter().map(|&v| (v * v) as f64).sum::<f64>() / d as f64);
         assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn batch_encode_decode_bit_exact_with_per_vector() {
+        let mut rng = Rng::new(10);
+        for v in ALL {
+            for (d, n) in [(64usize, 9usize), (66, 5)] {
+                let s = Stage1::new(Stage1Config::new(v, d, 3));
+                let enc = s.encoded_len();
+                let x = rng.gaussian_vec_f32(n * d);
+                let mut sink = PackedSink::new();
+                s.encode_batch(&x, n, &mut sink);
+                assert_eq!(sink.len(), n);
+                let mut reference = Vec::new();
+                for i in 0..n {
+                    s.encode(&x[i * d..(i + 1) * d], &mut reference);
+                }
+                assert_eq!(sink.as_bytes(), &reference[..], "{v:?} d={d} encode");
+                let mut out = vec![0.0f32; n * d];
+                let mut scratch = BatchScratch::new();
+                s.decode_batch(sink.as_bytes(), n, &mut out, &mut scratch);
+                let mut want = vec![0.0f32; n * d];
+                for i in 0..n {
+                    s.decode(&reference[i * enc..(i + 1) * enc], &mut want[i * d..(i + 1) * d]);
+                }
+                for j in 0..n * d {
+                    assert_eq!(
+                        out[j].to_bits(),
+                        want[j].to_bits(),
+                        "{v:?} d={d} decode j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_decode_ignores_gap_bytes() {
+        let mut rng = Rng::new(11);
+        let d = 64;
+        let n = 6;
+        let s = Stage1::new(Stage1Config::new(Variant::IsoFull, d, 4));
+        let enc = s.encoded_len();
+        let x = rng.gaussian_vec_f32(n * d);
+        let mut sink = PackedSink::new();
+        s.encode_batch(&x, n, &mut sink);
+        // re-lay the records with a 13-byte garbage gap between them
+        let stride = enc + 13;
+        let mut strided = vec![0xABu8; n * stride];
+        for i in 0..n {
+            strided[i * stride..i * stride + enc].copy_from_slice(sink.encoded(i));
+        }
+        let mut scratch = BatchScratch::new();
+        let mut got = vec![0.0f32; n * d];
+        s.decode_batch_strided(&strided, stride, n, &mut got, &mut scratch);
+        let mut want = vec![0.0f32; n * d];
+        s.decode_batch(sink.as_bytes(), n, &mut want, &mut scratch);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sink_reuse_across_batches() {
+        let mut rng = Rng::new(12);
+        let d = 32;
+        let s = Stage1::new(Stage1Config::new(Variant::IsoFast, d, 2));
+        let mut sink = PackedSink::new();
+        let big = rng.gaussian_vec_f32(16 * d);
+        s.encode_batch(&big, 16, &mut sink);
+        assert_eq!(sink.len(), 16);
+        // a smaller follow-up batch must fully replace the previous one
+        let small = rng.gaussian_vec_f32(3 * d);
+        s.encode_batch(&small, 3, &mut sink);
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.as_bytes().len(), 3 * s.encoded_len());
+        let mut direct = Vec::new();
+        for i in 0..3 {
+            s.encode(&small[i * d..(i + 1) * d], &mut direct);
+        }
+        assert_eq!(sink.as_bytes(), &direct[..]);
     }
 
     #[test]

@@ -20,15 +20,24 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {msg}")]
     Invalid { key: String, msg: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::Invalid { key, msg } => write!(f, "invalid value for --{key}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 pub struct Parser {
     specs: Vec<ArgSpec>,

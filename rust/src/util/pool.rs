@@ -1,12 +1,18 @@
 //! Scoped thread pool (tokio is unavailable offline; the coordinator and
 //! benches use this instead).
 //!
-//! Two primitives:
+//! Primitives:
 //! * [`ThreadPool`] — long-lived workers consuming boxed jobs from a
 //!   shared queue; used by the serving engine for decode workers.
 //! * [`scope_chunks`] — data-parallel helper: split a mutable slice into
 //!   chunks processed on `std::thread::scope` threads; used by batch
 //!   compression paths.
+//! * [`scope_units`] — task-parallel helper: drain a queue of
+//!   independent work units (each typically carrying its own `&mut`
+//!   output strips) on scoped threads; used by the page-granular KV
+//!   gather path.
+//! * [`ParallelPolicy`] — the off/auto/n configuration knob that decides
+//!   how many threads the data-parallel helpers may use.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -133,6 +139,80 @@ where
     });
 }
 
+/// Run every unit in `units` exactly once on up to `threads` scoped
+/// threads, draining a shared queue (units may be unevenly sized, so a
+/// queue beats static chunking).  `threads <= 1` runs inline.
+///
+/// Units typically carry disjoint `&mut` output regions — ownership
+/// moves into `f`, so the borrow checker enforces disjointness at the
+/// call site.
+pub fn scope_units<T: Send, F>(units: Vec<T>, threads: usize, f: F)
+where
+    F: Fn(T) + Send + Sync,
+{
+    let threads = threads.max(1).min(units.len());
+    if threads <= 1 {
+        for u in units {
+            f(u);
+        }
+        return;
+    }
+    let queue = std::sync::Mutex::new(units.into_iter());
+    let f = &f;
+    let queue = &queue;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(move || loop {
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some(u) => f(u),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// How a data-parallel section may use threads: the serving config's
+/// `off` / `auto` / `n` knob (see `config::EngineConfig`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParallelPolicy {
+    /// single-threaded (deterministic baseline, also the default for
+    /// directly-constructed components)
+    #[default]
+    Off,
+    /// one thread per available core, capped by the number of work units
+    Auto,
+    /// exactly `n` threads (still capped by the number of work units)
+    Fixed(usize),
+}
+
+impl ParallelPolicy {
+    /// Threads to use for `units` independent work items.
+    pub fn threads(&self, units: usize) -> usize {
+        let t = match self {
+            ParallelPolicy::Off => 1,
+            ParallelPolicy::Auto => default_threads(),
+            ParallelPolicy::Fixed(n) => (*n).max(1),
+        };
+        t.min(units.max(1))
+    }
+
+    /// Parse the config-file form: `"off"`, `"auto"`, or a thread count
+    /// (`0` means off).
+    pub fn parse(s: &str) -> Option<ParallelPolicy> {
+        match s {
+            "off" => Some(ParallelPolicy::Off),
+            "auto" => Some(ParallelPolicy::Auto),
+            _ => match s.parse::<usize>() {
+                Ok(0) => Some(ParallelPolicy::Off),
+                Ok(n) => Some(ParallelPolicy::Fixed(n)),
+                Err(_) => None,
+            },
+        }
+    }
+}
+
 /// Available parallelism with a sane floor.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
@@ -193,6 +273,46 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn scope_units_runs_every_unit_once() {
+        let mut data = vec![0u32; 137];
+        // each unit owns a disjoint &mut chunk
+        let units: Vec<&mut [u32]> = data.chunks_mut(10).collect();
+        scope_units(units, 4, |chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn scope_units_inline_when_single_thread() {
+        let mut hits = vec![false; 5];
+        let units: Vec<&mut bool> = hits.iter_mut().collect();
+        scope_units(units, 1, |h| *h = true);
+        assert!(hits.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn scope_units_empty_ok() {
+        scope_units(Vec::<u32>::new(), 8, |_| {});
+    }
+
+    #[test]
+    fn parallel_policy_threads_and_parse() {
+        assert_eq!(ParallelPolicy::Off.threads(64), 1);
+        assert_eq!(ParallelPolicy::Fixed(3).threads(64), 3);
+        assert_eq!(ParallelPolicy::Fixed(8).threads(2), 2);
+        assert!(ParallelPolicy::Auto.threads(64) >= 1);
+        assert_eq!(ParallelPolicy::Auto.threads(1), 1);
+        assert_eq!(ParallelPolicy::parse("off"), Some(ParallelPolicy::Off));
+        assert_eq!(ParallelPolicy::parse("auto"), Some(ParallelPolicy::Auto));
+        assert_eq!(ParallelPolicy::parse("0"), Some(ParallelPolicy::Off));
+        assert_eq!(ParallelPolicy::parse("6"), Some(ParallelPolicy::Fixed(6)));
+        assert_eq!(ParallelPolicy::parse("warp"), None);
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //! coordinator substrates (proplite harness; each failure prints a
 //! replayable per-case seed).
 
-use isoquant::kvcache::{CacheManager, PageConfig};
+use isoquant::kvcache::{CacheManager, GatherWorkspace, PageConfig};
 use isoquant::math::quaternion as quat;
 use isoquant::quant::packing;
-use isoquant::quant::{mse, ParamBank, QuantKind, Stage1, Stage1Config, Variant};
+use isoquant::quant::{
+    mse, BatchScratch, PackedSink, ParamBank, QuantKind, Stage1, Stage1Config, Variant,
+};
+use isoquant::util::pool::ParallelPolicy;
 use isoquant::util::prng::Rng;
 use isoquant::util::proplite::{assert_close, check};
 
@@ -84,6 +87,166 @@ fn prop_encode_decode_equals_fused_roundtrip() {
         s.decode(&bytes, &mut decoded);
         assert_close(&fused, &decoded, 1e-5, 1e-4)
             .map_err(|e| format!("{variant:?} d={d} b={bits}: {e}"))
+    });
+}
+
+/// Compare batch encode/decode against the per-vector reference for one
+/// `(stage1, x)` case, requiring *bit* equality (f32-to_bits) of decodes
+/// and byte equality of encodes.  Also exercises the strided decode with
+/// a randomized inter-record gap (a simulated ragged tail page).
+fn assert_batch_bitexact(
+    s: &Stage1,
+    x: &[f32],
+    n: usize,
+    gap: usize,
+    sink: &mut PackedSink,
+    scratch: &mut BatchScratch,
+) -> Result<(), String> {
+    let d = s.d();
+    let enc = s.encoded_len();
+    s.encode_batch(x, n, sink);
+    let mut reference = Vec::new();
+    for i in 0..n {
+        s.encode(&x[i * d..(i + 1) * d], &mut reference);
+    }
+    if sink.as_bytes() != &reference[..] {
+        return Err("encode_batch bytes differ from per-vector encode".into());
+    }
+    // contiguous batch decode vs per-vector decode
+    let mut got = vec![0.0f32; n * d];
+    s.decode_batch(sink.as_bytes(), n, &mut got, scratch);
+    let mut want = vec![0.0f32; n * d];
+    for i in 0..n {
+        s.decode(&reference[i * enc..(i + 1) * enc], &mut want[i * d..(i + 1) * d]);
+    }
+    for j in 0..n * d {
+        if got[j].to_bits() != want[j].to_bits() {
+            return Err(format!(
+                "decode_batch not bit-exact at {j}: {} vs {}",
+                got[j], want[j]
+            ));
+        }
+    }
+    // strided decode over a ragged page image (garbage in the gaps)
+    if n > 0 {
+        let stride = enc + gap;
+        let mut page = vec![0xEEu8; n * stride];
+        for i in 0..n {
+            page[i * stride..i * stride + enc].copy_from_slice(sink.encoded(i));
+        }
+        let mut strided = vec![0.0f32; n * d];
+        s.decode_batch_strided(&page, stride, n, &mut strided, scratch);
+        for j in 0..n * d {
+            if strided[j].to_bits() != want[j].to_bits() {
+                return Err(format!("strided decode not bit-exact at {j}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_batch_bitexact_full_table2_sweep() {
+    // the acceptance sweep: every variant × d ∈ {128, 256, 512} × bits ∈
+    // {2, 3, 4}, bit-exact in both directions, plus a ragged (n not a
+    // multiple of anything) strided layout per point
+    let mut rng = Rng::new(0xBA7C);
+    let mut sink = PackedSink::new();
+    let mut scratch = BatchScratch::new();
+    for variant in VARIANTS {
+        for d in [128usize, 256, 512] {
+            // one parameter bank per (variant, d): Dense banks are O(d³)
+            // to sample, so share them across bit widths
+            let bank = ParamBank::random(variant, d, 0x5EED ^ d as u64);
+            for bits in [2u8, 3, 4] {
+                let s = Stage1::with_bank(Stage1Config::new(variant, d, bits), bank.clone());
+                let n = 5;
+                let x = rng.gaussian_vec_f32(n * d);
+                assert_batch_bitexact(&s, &x, n, 7, &mut sink, &mut scratch)
+                    .unwrap_or_else(|e| panic!("{variant:?} d={d} bits={bits}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batch_bitexact_random_shapes() {
+    // randomized dims (including non-multiples of the block size →
+    // padded tail codes), batch sizes, and strided gaps
+    check(60, 0xB17E, |g| {
+        let variant = *g.choose(&VARIANTS);
+        let d = if variant == Variant::Dense {
+            g.usize_in(2, 48)
+        } else {
+            g.usize_in(2, 200)
+        };
+        let bits = g.usize_in(2, 4) as u8;
+        let n = g.usize_in(0, 12);
+        let gap = g.usize_in(0, 20);
+        let s = Stage1::new(Stage1Config::new(variant, d, bits));
+        let x = g.vec_f32(n * d, 2.0);
+        let mut sink = PackedSink::new();
+        let mut scratch = BatchScratch::new();
+        assert_batch_bitexact(&s, &x, n, gap, &mut sink, &mut scratch)
+            .map_err(|e| format!("{variant:?} d={d} bits={bits} n={n}: {e}"))
+    });
+}
+
+#[test]
+fn prop_batched_gather_bitexact_vs_reference_gather() {
+    // random cache states: the strip-parallel batched gather must equal
+    // the retained per-vector reference gather bit for bit, and ragged
+    // tail pages (len % tokens_per_page != 0) must round-trip
+    check(25, 0x6A7E, |g| {
+        let dh = 4 * g.usize_in(1, 16); // 4..64
+        let bits = g.usize_in(2, 4) as u8;
+        let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, bits));
+        let cfg = PageConfig {
+            tokens_per_page: g.usize_in(1, 7),
+            n_layers: g.usize_in(1, 3),
+            n_heads: g.usize_in(1, 4),
+            d_head: dh,
+            encoded_len: stage1.encoded_len(),
+        };
+        let mut mgr = CacheManager::new(stage1, cfg, 512);
+        mgr.parallel = *g.choose(&[
+            ParallelPolicy::Off,
+            ParallelPolicy::Auto,
+            ParallelPolicy::Fixed(2),
+        ]);
+        mgr.start_seq(1).map_err(|e| e.to_string())?;
+        let tok_n = cfg.n_layers * cfg.n_heads * dh;
+        let len = g.usize_in(0, 3 * cfg.tokens_per_page + 1); // ragged tails likely
+        for _ in 0..len {
+            let k = g.vec_f32(tok_n, 1.0);
+            let v = g.vec_f32(tok_n, 1.0);
+            mgr.append_token(1, &k, &v).map_err(|e| e.to_string())?;
+        }
+        let t_max = len + g.usize_in(0, 4);
+        let sz = cfg.n_layers * cfg.n_heads * t_max * dh;
+        let (mut ka, mut va) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        let (mut kb, mut vb) = (vec![3.0f32; sz], vec![3.0f32; sz]);
+        let mut ws = GatherWorkspace::new();
+        let na = mgr
+            .gather_reference(1, t_max, &mut ka, &mut va)
+            .map_err(|e| e.to_string())?;
+        let nb = mgr
+            .gather_ws(1, t_max, &mut kb, &mut vb, &mut ws)
+            .map_err(|e| e.to_string())?;
+        if na != nb {
+            return Err(format!("token counts differ: {na} vs {nb}"));
+        }
+        for (name, a, b) in [("K", &ka, &kb), ("V", &va, &vb)] {
+            for j in 0..sz {
+                if a[j].to_bits() != b[j].to_bits() {
+                    return Err(format!(
+                        "{name} not bit-exact at {j} ({} vs {}, policy {:?})",
+                        a[j], b[j], mgr.parallel
+                    ));
+                }
+            }
+        }
+        Ok(())
     });
 }
 

@@ -1,0 +1,213 @@
+//! Minimal, offline-vendored subset of the `anyhow` API.
+//!
+//! The real crate is not vendorable in this container, so this shim
+//! re-implements exactly the surface the workspace uses:
+//!
+//! * [`Error`] — a boxed message chain with `Display`/`Debug`,
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion (what makes `?` work on io/parse errors) coherent with the
+//! reflexive `From<Error> for Error` used by `?` on `Result<T, Error>`.
+
+use std::fmt;
+
+/// An error message plus the chain of contexts wrapped around it
+/// (most-recent context first, original cause last).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The chain of messages, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        // flatten the std error chain into our message chain
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(err.to_string());
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            out = Some(match out {
+                None => Error { msg, source: None },
+                Some(inner) => Error {
+                    msg,
+                    source: Some(Box::new(inner)),
+                },
+            });
+        }
+        out.expect("non-empty chain")
+    }
+}
+
+/// Attach context to failure values (`Result` errors and `None`s).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`]-constructed error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("base failure {}", 42)
+    }
+
+    #[test]
+    fn bail_and_context_chain() {
+        let err = fails().context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer");
+        assert_eq!(err.root_cause(), "base failure 42");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("base failure 42"));
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            let v: i32 = s.parse()?;
+            Ok(v)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let err = none.context("missing").unwrap_err();
+        assert_eq!(err.to_string(), "missing");
+        let some = Some(3u8).with_context(|| "unused").unwrap();
+        assert_eq!(some, 3);
+    }
+
+    #[test]
+    fn inline_format_capture() {
+        let x = 5;
+        let e = anyhow!("value {x}");
+        assert_eq!(e.to_string(), "value 5");
+    }
+}

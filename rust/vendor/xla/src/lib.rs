@@ -1,0 +1,227 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) binding surface this
+//! workspace uses.
+//!
+//! The real crate links the XLA runtime, which is not available in this
+//! container.  The stub keeps the crate compiling and the *host-side*
+//! pieces fully functional:
+//!
+//! * [`Literal`] round-trips typed host data (used by unit tests and by
+//!   `runtime::exec::HostTensor`),
+//! * every PJRT entry point ([`PjRtClient::cpu`], compilation, execution,
+//!   buffer staging) returns a clean [`Error`] explaining that the build
+//!   has no device runtime.
+//!
+//! Integration tests skip when AOT artifacts are absent, so the serving
+//! stack degrades exactly like a checkout without `make artifacts`.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime unavailable (built against the vendored stub in rust/vendor/xla)"
+    ))
+}
+
+/// Element dtypes used by this workspace's artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host types a [`Literal`] can be read back into.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_ne(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne(bytes: [u8; 4]) -> Self {
+        f32::from_ne_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne(bytes: [u8; 4]) -> Self {
+        i32::from_ne_bytes(bytes)
+    }
+}
+
+/// A host-resident typed array (or tuple of arrays).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = shape.iter().product();
+        if numel * 4 != data.len() {
+            return Err(Error(format!(
+                "literal shape {shape:?} needs {} bytes, got {}",
+                numel * 4,
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            shape: shape.to_vec(),
+            data: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            ty: ElementType::F32,
+            shape: Vec::new(),
+            data: Vec::new(),
+            tuple: Some(parts),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal dtype {:?} read as {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_ne([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        self.tuple
+            .clone()
+            .ok_or_else(|| Error("literal is not a tuple".into()))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible without the runtime).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parse HLO text {path}")))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_literal"))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let xs = [1.0f32, -2.0, 3.5];
+        let bytes: Vec<u8> = xs.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn pjrt_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
