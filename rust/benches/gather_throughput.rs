@@ -1,19 +1,30 @@
 //! Page-gather throughput: tokens/sec reconstructing a cached sequence,
 //! comparing the retained per-vector reference path against the
 //! page-granular batch path (`Stage1::decode_batch_strided` via
-//! `CacheManager::gather_ws`), single-threaded and strip-parallel —
-//! reported at the Table-2 sweep points d ∈ {128, 256, 512} × bits ∈
-//! {2, 3, 4}.
+//! `CacheManager::gather_ws`) under the scalar and SIMD kernel
+//! backends, single-threaded and strip-parallel — reported at the
+//! Table-2 sweep points d ∈ {128, 256, 512} × bits ∈ {2, 3, 4}.
 //!
 //! "tok/s" counts *cached tokens reconstructed per second*: one token =
 //! `n_layers × n_heads × 2` encoded head vectors decoded into the
-//! lane-major gather layout.
+//! lane-major gather layout.  "MB/s" is the uncompressed f32 bandwidth
+//! that reconstruction produces.
 //!
-//! Run: `cargo bench --bench gather_throughput`
+//! Besides the table, the run emits machine-readable
+//! `BENCH_stage1.json` (per-point tokens/sec + MB/s for every
+//! backend/mode, plus the SIMD-vs-scalar batch speedup) so future PRs
+//! can track the perf trajectory.  Cargo runs bench binaries with the
+//! package root as working directory, so the file lands at
+//! `rust/BENCH_stage1.json`.
+//!
+//! Run: `cargo bench --bench gather_throughput` (`-- --quick` for the
+//! CI smoke subset).
 
 use isoquant::kvcache::{CacheManager, GatherWorkspace, PageConfig};
+use isoquant::quant::kernels::KernelBackend;
 use isoquant::quant::{Stage1, Stage1Config, Variant};
 use isoquant::util::bench::{black_box, Bencher, Table};
+use isoquant::util::json::Json;
 use isoquant::util::pool::{default_threads, ParallelPolicy};
 use isoquant::util::prng::Rng;
 
@@ -24,8 +35,8 @@ const N_HEADS: usize = 4;
 const TOKENS: usize = 128;
 const TOKENS_PER_PAGE: usize = 16;
 
-fn build_cache(d: usize, bits: u8) -> CacheManager {
-    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, d, bits));
+fn build_cache(d: usize, bits: u8, backend: KernelBackend) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, d, bits).with_backend(backend));
     let cfg = PageConfig {
         tokens_per_page: TOKENS_PER_PAGE,
         n_layers: N_LAYERS,
@@ -46,72 +57,137 @@ fn build_cache(d: usize, bits: u8) -> CacheManager {
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dims: &[usize] = if quick { &[128] } else { &DIMS };
+    let bits_sweep: &[u8] = if quick { &[4] } else { &BITS };
+    let simd_name = KernelBackend::Auto.resolve().name().to_string();
     println!(
-        "== page gather throughput: per-vector vs batched vs batched+threads ==\n\
+        "== page gather throughput: per-vector vs batched, scalar vs {simd_name} kernels ==\n\
          model {N_LAYERS}L x {N_HEADS}H, {TOKENS} cached tokens, \
-         {TOKENS_PER_PAGE} tokens/page, IsoQuant-Full, {} cores\n",
-        default_threads()
+         {TOKENS_PER_PAGE} tokens/page, IsoQuant-Full, {} cores{}\n",
+        default_threads(),
+        if quick { " (quick subset)" } else { "" }
     );
     let mut table = Table::new(&[
         "d",
         "bits",
         "per-vec tok/s",
-        "batched tok/s",
-        "threads tok/s",
-        "batched x",
-        "threads x",
+        "scalar tok/s",
+        "simd tok/s",
+        "simd+thr tok/s",
+        "simd x scalar",
+        "simd MB/s",
     ]);
     let bench = Bencher::quick();
-    for d in DIMS {
-        for bits in BITS {
-            let mut m = build_cache(d, bits);
+    let mut entries: Vec<Json> = Vec::new();
+    for &d in dims {
+        for &bits in bits_sweep {
+            let mut scalar_cache = build_cache(d, bits, KernelBackend::Scalar);
+            let mut simd_cache = build_cache(d, bits, KernelBackend::Auto);
             let sz = N_LAYERS * N_HEADS * TOKENS * d;
             let mut k_out = vec![0.0f32; sz];
             let mut v_out = vec![0.0f32; sz];
             let mut ws = GatherWorkspace::new();
-
-            let r_ref = bench.run("per-vector", || {
-                black_box(m.gather_reference(1, TOKENS, &mut k_out, &mut v_out).unwrap());
-            });
-
-            m.parallel = ParallelPolicy::Off;
-            let r_batch = bench.run("batched", || {
-                black_box(
-                    m.gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
-                        .unwrap(),
-                );
-            });
-
-            m.parallel = ParallelPolicy::Auto;
-            let r_par = bench.run("batched+threads", || {
-                black_box(
-                    m.gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
-                        .unwrap(),
-                );
-            });
-
+            let uncompressed_bytes = (N_LAYERS * N_HEADS * 2 * d * 4 * TOKENS) as f64;
             let tps = |median_s: f64| TOKENS as f64 / median_s;
-            let (a, b, c) = (
-                tps(r_ref.median.as_secs_f64()),
-                tps(r_batch.median.as_secs_f64()),
-                tps(r_par.median.as_secs_f64()),
+            let mbs = |median_s: f64| uncompressed_bytes / median_s / 1e6;
+
+            // baseline: the pre-batch per-vector reference (scalar math)
+            let r_ref = bench.run("per-vector", || {
+                black_box(
+                    scalar_cache
+                        .gather_reference(1, TOKENS, &mut k_out, &mut v_out)
+                        .unwrap(),
+                );
+            });
+            // batched page decode, scalar kernels
+            scalar_cache.parallel = ParallelPolicy::Off;
+            let r_scalar = bench.run("batched-scalar", || {
+                black_box(
+                    scalar_cache
+                        .gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
+                        .unwrap(),
+                );
+            });
+            // batched page decode, SIMD kernels (the tile path)
+            simd_cache.parallel = ParallelPolicy::Off;
+            let r_simd = bench.run("batched-simd", || {
+                black_box(
+                    simd_cache
+                        .gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
+                        .unwrap(),
+                );
+            });
+            // SIMD + strip-parallel threads
+            simd_cache.parallel = ParallelPolicy::Auto;
+            let r_par = bench.run("batched-simd-threads", || {
+                black_box(
+                    simd_cache
+                        .gather_ws(1, TOKENS, &mut k_out, &mut v_out, &mut ws)
+                        .unwrap(),
+                );
+            });
+
+            let (t_ref, t_scalar, t_simd, t_par) = (
+                r_ref.median.as_secs_f64(),
+                r_scalar.median.as_secs_f64(),
+                r_simd.median.as_secs_f64(),
+                r_par.median.as_secs_f64(),
             );
             table.row(vec![
                 d.to_string(),
                 bits.to_string(),
-                format!("{a:.0}"),
-                format!("{b:.0}"),
-                format!("{c:.0}"),
-                format!("{:.2}", b / a),
-                format!("{:.2}", c / a),
+                format!("{:.0}", tps(t_ref)),
+                format!("{:.0}", tps(t_scalar)),
+                format!("{:.0}", tps(t_simd)),
+                format!("{:.0}", tps(t_par)),
+                format!("{:.2}", t_scalar / t_simd),
+                format!("{:.0}", mbs(t_simd)),
             ]);
+            for (mode, backend, secs) in [
+                ("per-vector", "scalar", t_ref),
+                ("batched", "scalar", t_scalar),
+                ("batched", simd_name.as_str(), t_simd),
+                ("batched+threads", simd_name.as_str(), t_par),
+            ] {
+                entries.push(Json::obj(vec![
+                    ("d", Json::num(d as f64)),
+                    ("bits", Json::num(bits as f64)),
+                    ("mode", Json::str(mode)),
+                    ("backend", Json::str(backend)),
+                    ("tokens_per_sec", Json::num(tps(secs))),
+                    ("mb_per_sec", Json::num(mbs(secs))),
+                ]));
+            }
+            entries.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("bits", Json::num(bits as f64)),
+                ("mode", Json::str("speedup")),
+                ("backend", Json::str(simd_name.as_str())),
+                ("simd_over_scalar_batched", Json::num(t_scalar / t_simd)),
+                ("threads_over_scalar_batched", Json::num(t_scalar / t_par)),
+            ]));
         }
     }
     table.print();
     println!(
-        "\nbatched = gather_ws with ParallelPolicy::Off (allocation-free strided \
-         page decode);\nthreads = ParallelPolicy::Auto across the {} (layer, head) \
+        "\nscalar/simd = gather_ws with ParallelPolicy::Off under KernelBackend \
+         Scalar/{simd_name};\nsimd+thr = ParallelPolicy::Auto across the {} (layer, head) \
          strips.",
         N_LAYERS * N_HEADS
     );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("gather_throughput")),
+        ("simd_backend", Json::str(simd_name.as_str())),
+        ("cores", Json::num(default_threads() as f64)),
+        ("tokens", Json::num(TOKENS as f64)),
+        ("layers", Json::num(N_LAYERS as f64)),
+        ("heads", Json::num(N_HEADS as f64)),
+        ("quick", Json::Bool(quick)),
+        ("points", Json::Arr(entries)),
+    ]);
+    match std::fs::write("BENCH_stage1.json", doc.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_stage1.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_stage1.json: {e}"),
+    }
 }

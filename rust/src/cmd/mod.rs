@@ -8,7 +8,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::EngineConfig;
 use crate::coordinator::Engine;
-use crate::quant::{cost, mse, QuantKind, Stage1, Stage1Config, Variant};
+use crate::quant::{
+    cost, mse, BatchScratch, KernelBackend, PackedSink, QuantKind, Stage1, Stage1Config, Variant,
+};
 use crate::runtime::{self, HostTensor, Runtime, ServingModel};
 use crate::util::bench::Table;
 use crate::util::cli::Parser;
@@ -22,6 +24,22 @@ fn parse_or_usage(p: &Parser, args: &[String]) -> Result<Option<crate::util::cli
     Ok(Some(p.parse(args)?))
 }
 
+/// Parse the `--kernel` option (empty = not given → `None`); rejects
+/// backends this host cannot run.
+fn parse_kernel(a: &crate::util::cli::Args) -> Result<Option<KernelBackend>> {
+    match a.get("kernel") {
+        None | Some("") => Ok(None),
+        Some(s) => {
+            let b = KernelBackend::parse(s)
+                .with_context(|| format!("unknown kernel backend {s:?} (scalar|auto|avx2|neon)"))?;
+            if let Err(e) = b.validate() {
+                bail!("{e}");
+            }
+            Ok(Some(b))
+        }
+    }
+}
+
 /// `isoquant compress` — one-shot stage-1 compression demo.
 pub fn compress(args: &[String]) -> Result<()> {
     let p = Parser::new("isoquant compress", "stage-1 compression demo on synthetic vectors")
@@ -30,6 +48,7 @@ pub fn compress(args: &[String]) -> Result<()> {
         .opt("bits", "4", "bit width (2-4)")
         .opt("batch", "8192", "number of vectors")
         .opt("seed", "0", "data seed")
+        .opt("kernel", "", "kernel backend: scalar | auto | avx2 | neon")
         .flag("uniform", "use the uniform quantizer instead of Lloyd-Max");
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
@@ -42,6 +61,9 @@ pub fn compress(args: &[String]) -> Result<()> {
     if a.has_flag("uniform") {
         cfg.quant = QuantKind::Uniform;
     }
+    if let Some(b) = parse_kernel(&a)? {
+        cfg.backend = b;
+    }
     let stage = Stage1::new(cfg);
     let mut rng = Rng::new(a.get_u64("seed")?);
     let x = rng.gaussian_vec_f32(n * d);
@@ -52,15 +74,42 @@ pub fn compress(args: &[String]) -> Result<()> {
     let power = x.iter().map(|&v| (v * v) as f64).sum::<f64>() / x.len() as f64;
     let e = mse(&x, &out);
     println!("variant         : {}", variant.name());
+    println!("kernel backend  : {}", stage.kernel_backend().name());
     println!("d x batch       : {d} x {n}");
     println!("bits            : {bits}");
     println!("mse             : {e:.6}");
     println!("relative mse    : {:.4}%", 100.0 * e / power);
     println!("compressed      : {} B/vector (from {} B)", stage.encoded_len(), d * 4);
     println!(
-        "fused roundtrip : {:.1} us/batch ({:.1} ns/vector)",
+        "fused roundtrip : {:.1} us/batch ({:.1} ns/vector, scalar math)",
         dt.as_secs_f64() * 1e6,
         dt.as_secs_f64() * 1e9 / n as f64
+    );
+    // the packed encode→decode path is what the KV cache runs and what
+    // the --kernel backend accelerates; warm the persistent buffers
+    // first so the timed pass is steady-state
+    let mut sink = PackedSink::new();
+    let mut scratch = BatchScratch::new();
+    let mut dec = vec![0.0f32; n * d];
+    stage.encode_batch(&x, n, &mut sink);
+    stage.decode_batch(sink.as_bytes(), n, &mut dec, &mut scratch);
+    let t0 = std::time::Instant::now();
+    stage.encode_batch(&x, n, &mut sink);
+    let enc_dt = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    stage.decode_batch(sink.as_bytes(), n, &mut dec, &mut scratch);
+    let dec_dt = t1.elapsed();
+    println!(
+        "packed encode   : {:.1} us/batch ({:.1} ns/vector, {} kernels)",
+        enc_dt.as_secs_f64() * 1e6,
+        enc_dt.as_secs_f64() * 1e9 / n as f64,
+        stage.kernel_backend().name()
+    );
+    println!(
+        "packed decode   : {:.1} us/batch ({:.1} ns/vector, {} kernels)",
+        dec_dt.as_secs_f64() * 1e6,
+        dec_dt.as_secs_f64() * 1e9 / n as f64,
+        stage.kernel_backend().name()
     );
     Ok(())
 }
@@ -87,24 +136,28 @@ pub fn table1(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `isoquant sweep` — quick latency/MSE sweep (the full 18-setting Table 2
-/// regeneration lives in `cargo bench --bench table2_sweep`).
+/// `isoquant sweep` — quick latency/MSE sweep over the packed
+/// encode→decode path, the serving representation the `--kernel`
+/// backend accelerates (the full 18-setting Table 2 regeneration lives
+/// in `cargo bench --bench table2_sweep`).
 pub fn sweep(args: &[String]) -> Result<()> {
-    let p = Parser::new("isoquant sweep", "quick latency/MSE sweep across variants")
+    let p = Parser::new("isoquant sweep", "quick packed encode+decode latency/MSE sweep")
         .opt("dim", "128", "vector dimension")
         .opt("bits", "4", "bit width")
-        .opt("batch", "8192", "batch size");
+        .opt("batch", "8192", "batch size")
+        .opt("kernel", "", "kernel backend: scalar | auto | avx2 | neon");
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
     };
     let d = a.get_usize("dim")?;
     let bits = a.get_usize("bits")? as u8;
     let n = a.get_usize("batch")?;
+    let kernel = parse_kernel(&a)?;
     let mut rng = Rng::new(1);
     let x = rng.gaussian_vec_f32(n * d);
     let mut out = vec![0.0f32; n * d];
     let bench = crate::util::bench::Bencher::quick();
-    let mut t = Table::new(&["variant", "median us/batch", "MSE", "speedup vs rotor"]);
+    let mut t = Table::new(&["variant", "packed us/batch", "MSE", "speedup vs rotor"]);
     let mut rotor_us = 0.0;
     let configs = [
         ("rotorquant", Stage1Config::new(Variant::Rotor3D, d, bits)),
@@ -117,12 +170,23 @@ pub fn sweep(args: &[String]) -> Result<()> {
         ("iso-fast", Stage1Config::new(Variant::IsoFast, d, bits)),
         ("iso-2d", Stage1Config::new(Variant::Planar2D, d, bits)),
     ];
-    for (name, cfg) in configs {
+    let mut kname = "scalar";
+    for (name, mut cfg) in configs {
+        if let Some(b) = kernel {
+            cfg.backend = b;
+        }
         let s = Stage1::new(cfg);
+        kname = s.kernel_backend().name();
+        // the packed encode→decode pair is the KV-cache serving path —
+        // the one the kernel backend dispatches
+        let mut sink = PackedSink::new();
+        let mut scratch = BatchScratch::new();
         let r = bench.run(name, || {
-            s.roundtrip_batch(&x, &mut out, n);
+            s.encode_batch(&x, n, &mut sink);
+            s.decode_batch(sink.as_bytes(), n, &mut out, &mut scratch);
         });
-        s.roundtrip_batch(&x, &mut out, n);
+        s.encode_batch(&x, n, &mut sink);
+        s.decode_batch(sink.as_bytes(), n, &mut out, &mut scratch);
         let e = mse(&x, &out);
         if name == "rotorquant" {
             rotor_us = r.median_us();
@@ -134,7 +198,7 @@ pub fn sweep(args: &[String]) -> Result<()> {
             format!("{:.2}x", rotor_us / r.median_us()),
         ]);
     }
-    println!("d={d} bits={bits} batch={n} (f32, Lloyd-Max):\n");
+    println!("d={d} bits={bits} batch={n} (f32, Lloyd-Max, {kname} kernels):\n");
     t.print();
     Ok(())
 }
@@ -246,7 +310,8 @@ pub fn serve(args: &[String]) -> Result<()> {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("bind", "", "bind address (overrides config)")
         .opt("variant", "", "stage-1 variant (overrides config)")
-        .opt("bits", "", "bit width (overrides config)");
+        .opt("bits", "", "bit width (overrides config)")
+        .opt("kernel", "", "kernel backend (overrides config): scalar | auto | avx2 | neon");
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
     };
@@ -269,6 +334,9 @@ pub fn serve(args: &[String]) -> Result<()> {
         if !b.is_empty() {
             cfg.bits = b.parse()?;
         }
+    }
+    if let Some(b) = parse_kernel(&a)? {
+        cfg.kernel_backend = b;
     }
     let model = ServingModel::load(Path::new(&cfg.artifacts_dir))?;
     let engine = Engine::new(model, cfg.clone())?;

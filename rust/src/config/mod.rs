@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::kernels::KernelBackend;
 use crate::quant::params::Variant;
 use crate::quant::scalar::QuantKind;
 use crate::util::pool::ParallelPolicy;
@@ -167,6 +168,11 @@ pub struct EngineConfig {
     /// threading of the batched KV gather: `off`, `auto`, or a thread
     /// count (`[engine] gather_parallel`)
     pub gather_parallel: ParallelPolicy,
+    /// stage-1 kernel implementation: `scalar`, `auto`, `avx2`, or
+    /// `neon` (`[engine] kernel_backend`); all backends are bit-exact,
+    /// `scalar` is the reference.  Rejected at load time when the host
+    /// cannot run an explicitly requested SIMD backend.
+    pub kernel_backend: KernelBackend,
     pub seed: u64,
 }
 
@@ -185,6 +191,9 @@ impl Default for EngineConfig {
             bind: "127.0.0.1:7439".to_string(),
             residual_m: 0,
             gather_parallel: ParallelPolicy::Auto,
+            // honor the ISOQUANT_KERNEL process override (the CI matrix
+            // forces the backend through it), falling back to auto
+            kernel_backend: KernelBackend::from_env_default(),
             seed: 0x150_0541,
         }
     }
@@ -229,6 +238,19 @@ impl EngineConfig {
                     None => bail!("gather_parallel must be off/auto/<threads>, got {s:?}"),
                 },
                 Some(v) => bail!("gather_parallel must be off/auto/<threads>, got {v:?}"),
+            },
+            kernel_backend: match raw.get("engine", "kernel_backend") {
+                None => d.kernel_backend,
+                Some(Value::Str(s)) => match KernelBackend::parse(s) {
+                    Some(b) => {
+                        if let Err(e) = b.validate() {
+                            bail!("{e}");
+                        }
+                        b
+                    }
+                    None => bail!("kernel_backend must be scalar/auto/avx2/neon, got {s:?}"),
+                },
+                Some(v) => bail!("kernel_backend must be scalar/auto/avx2/neon, got {v:?}"),
             },
             seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
         })
@@ -310,6 +332,39 @@ bind = "0.0.0.0:9000"
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
         }
+    }
+
+    #[test]
+    fn kernel_backend_knob() {
+        // the default follows the process override (CI forces it via
+        // ISOQUANT_KERNEL), so compare against that, not a literal
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.kernel_backend, KernelBackend::from_env_default());
+        for (text, want) in [
+            ("[engine]\nkernel_backend = \"scalar\"", KernelBackend::Scalar),
+            ("[engine]\nkernel_backend = scalar", KernelBackend::Scalar),
+            ("[engine]\nkernel_backend = \"auto\"", KernelBackend::Auto),
+        ] {
+            let cfg = EngineConfig::from_raw(&RawConfig::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.kernel_backend, want, "{text}");
+        }
+        for text in [
+            "[engine]\nkernel_backend = \"sse9\"",
+            "[engine]\nkernel_backend = 4",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+        // an explicitly requested SIMD backend the host supports parses;
+        // one it cannot run is rejected at load time
+        let avx = EngineConfig::from_raw(
+            &RawConfig::parse("[engine]\nkernel_backend = \"avx2\"").unwrap(),
+        );
+        assert_eq!(avx.is_ok(), KernelBackend::Avx2.validate().is_ok());
+        let neon = EngineConfig::from_raw(
+            &RawConfig::parse("[engine]\nkernel_backend = \"neon\"").unwrap(),
+        );
+        assert_eq!(neon.is_ok(), KernelBackend::Neon.validate().is_ok());
     }
 
     #[test]

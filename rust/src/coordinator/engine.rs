@@ -80,6 +80,11 @@ pub struct Engine {
     // reused per-token (L, H, dh) staging buffers for appends
     tok_k: Vec<f32>,
     tok_v: Vec<f32>,
+    // reused (P, L, H, dh) staging buffers for batched prefill appends
+    chunk_k: Vec<f32>,
+    chunk_v: Vec<f32>,
+    /// reused (seq, lane) list for the cross-lane gather drain
+    lane_jobs: Vec<(SeqId, usize)>,
     pub stats: EngineStats,
 }
 
@@ -90,6 +95,7 @@ impl Engine {
             let mut c = Stage1Config::new(cfg.variant, m.d_head, cfg.bits);
             c.quant = cfg.quant;
             c.seed = cfg.seed;
+            c.backend = cfg.kernel_backend;
             c
         });
         let page_cfg = PageConfig {
@@ -120,6 +126,9 @@ impl Engine {
             lane_dirty: vec![false; m.serve_batch],
             tok_k: vec![0.0; tok_numel],
             tok_v: vec![0.0; tok_numel],
+            chunk_k: vec![0.0; m.prefill_chunk * tok_numel],
+            chunk_v: vec![0.0; m.prefill_chunk * tok_numel],
+            lane_jobs: Vec::with_capacity(m.serve_batch),
             stats: EngineStats::default(),
         })
     }
@@ -234,20 +243,71 @@ impl Engine {
                 Lane::Free => {}
             }
         }
+        // one cross-lane drain: every active lane's strip units share a
+        // single scope_units queue instead of per-lane barriers
+        self.lane_jobs.clear();
         for lane in 0..b {
             if let Lane::Active(a) = &self.lanes[lane] {
-                self.cache.gather_into_batch_ws(
-                    a.seq,
-                    lane,
-                    b,
-                    t_max,
-                    &mut self.k_buf,
-                    &mut self.v_buf,
-                    &mut self.gather_ws,
-                )?;
+                self.lane_jobs.push((a.seq, lane));
             }
         }
+        if !self.lane_jobs.is_empty() {
+            self.cache.gather_lanes_into_batch_ws(
+                &self.lane_jobs,
+                b,
+                t_max,
+                &mut self.k_buf,
+                &mut self.v_buf,
+                &mut self.gather_ws,
+            )?;
+        }
         self.stats.gather.record(t0.elapsed());
+        Ok(())
+    }
+
+    /// Stage tokens `0..c` of a `(L, B, H, P, dh)` prefill chunk for
+    /// batch lane `lane` into the persistent run buffers (token-major
+    /// `[t][layer][head][dh]`, the batch-encode input layout) and append
+    /// them in one [`CacheManager::append_run`] call — the whole
+    /// chunk's `c × L × H` vectors per side go through a single
+    /// `encode_batch`.
+    fn append_chunk_run(
+        &mut self,
+        seq: SeqId,
+        lane: usize,
+        k_chunk: &[f32],
+        v_chunk: &[f32],
+        p: usize,
+        c: usize,
+    ) -> Result<()> {
+        let m = &self.model.meta;
+        let (l, b, h, dh) = (m.n_layers, m.serve_batch, m.n_heads, m.d_head);
+        debug_assert!(c <= p);
+        debug_assert_eq!(k_chunk.len(), l * b * h * p * dh);
+        debug_assert!(self.chunk_k.len() >= c * l * h * dh);
+        for layer in 0..l {
+            for head in 0..h {
+                let src0 = (((layer * b) + lane) * h + head) * p;
+                let dst0 = (layer * h + head) * dh;
+                for j in 0..c {
+                    let src = (src0 + j) * dh;
+                    let dst = j * l * h * dh + dst0;
+                    self.chunk_k[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
+                    self.chunk_v[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
+                }
+            }
+        }
+        let t0 = Instant::now();
+        self.cache.append_run(
+            seq,
+            &self.chunk_k[..c * l * h * dh],
+            &self.chunk_v[..c * l * h * dh],
+            c,
+        )?;
+        self.stats.append.record(t0.elapsed());
+        let (cb, ub) = self.cache.slot_bytes();
+        Counters::bump(&self.stats.counters.bytes_compressed, (cb * c) as u64);
+        Counters::bump(&self.stats.counters.bytes_uncompressed, (ub * c) as u64);
         Ok(())
     }
 
@@ -324,9 +384,7 @@ impl Engine {
                 },
                 _ => unreachable!(),
             };
-            for j in 0..c {
-                self.append_from_chunk(seq, lane, &out.k_new, &out.v_new, p, j)?;
-            }
+            self.append_chunk_run(seq, lane, &out.k_new, &out.v_new, p, c)?;
             Counters::bump(&self.stats.counters.tokens_prefilled, c as u64);
             let a = match &mut self.lanes[lane] {
                 Lane::Active(a) => a,

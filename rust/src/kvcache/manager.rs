@@ -12,11 +12,18 @@
 //!
 //! * **append** batch-encodes a token's `n_layers × n_heads` contiguous
 //!   K (then V) head vectors into a persistent [`PackedSink`] and fans
-//!   the records out to page slots — zero steady-state allocation;
+//!   the records out to page slots — zero steady-state allocation; the
+//!   prefill path appends whole chunks at once through
+//!   [`CacheManager::append_run`] (one `encode_batch` per side covering
+//!   `tokens × layers × heads` vectors, page slots written in slot
+//!   order);
 //! * **gather** decomposes into `n_layers × n_heads` independent
 //!   *strips* (one `[t][dh]` destination run per (layer, head)), each
 //!   decoded page-by-page with strided batch decodes, optionally in
-//!   parallel across strips per the manager's [`ParallelPolicy`].
+//!   parallel across strips per the manager's [`ParallelPolicy`]; the
+//!   engine gathers *all* active lanes through one
+//!   [`CacheManager::gather_lanes_into_batch_ws`] drain so every lane's
+//!   strip units share one work queue.
 //!
 //! The pre-batch per-vector path survives as
 //! [`CacheManager::gather_reference`]: the property-test oracle and the
@@ -54,8 +61,9 @@ struct SeqCache {
 /// per (layer, head) strip so strips can decode concurrently, plus the
 /// strip-base table.  Keep one per engine (or per bench loop); the hot
 /// inner-loop buffers then persist across gathers — the only remaining
-/// per-call allocation is the O(layers × heads) strip-slice
-/// bookkeeping, whose `&mut` lifetimes are necessarily per-call.
+/// per-call allocation is the O(lanes × layers × heads) strip/job-list
+/// bookkeeping, whose `&mut`/`&SeqCache` lifetimes are necessarily
+/// per-call.
 #[derive(Debug, Default)]
 pub struct GatherWorkspace {
     scratch: Vec<BatchScratch>,
@@ -148,54 +156,86 @@ impl CacheManager {
 
     /// Append one token's K/V: `k_t`/`v_t` are laid out `[layer][head][dh]`
     /// (the `k_new`/`v_new` outputs of the decode artifact for one batch
-    /// lane).  The K vectors (then the V vectors) are one contiguous
-    /// `n_layers × n_heads` batch, so each side is a single
-    /// `encode_batch` call into the persistent sink; only the resulting
-    /// records are fanned out to page slots.
+    /// lane).  A run of length 1 — see [`CacheManager::append_run`].
     pub fn append_token(&mut self, seq: SeqId, k_t: &[f32], v_t: &[f32]) -> Result<()> {
+        self.append_run(seq, k_t, v_t, 1)
+    }
+
+    /// Append a run of `n_tokens` tokens' K/V in one batched encode per
+    /// side: `k_run`/`v_run` are token-major `[t][layer][head][dh]`.
+    /// Each side is a *single* `encode_batch` call over `n_tokens × L ×
+    /// H` vectors into the persistent sink (so the SIMD tile kernels
+    /// see the whole run), and the resulting records are fanned out to
+    /// page slots in ascending slot order.  This is the batched prefill
+    /// append: `Engine::step_prefill` stages a whole chunk per lane and
+    /// appends it here instead of looping `append_token`.
+    ///
+    /// Pages are reserved up front, so failure (pool exhaustion or an
+    /// unknown sequence) leaves the sequence unchanged.
+    pub fn append_run(
+        &mut self,
+        seq: SeqId,
+        k_run: &[f32],
+        v_run: &[f32],
+        n_tokens: usize,
+    ) -> Result<()> {
         let cfg = *self.alloc.cfg();
         let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
-        if k_t.len() != l * h * dh || v_t.len() != l * h * dh {
+        let expect = n_tokens * l * h * dh;
+        if k_run.len() != expect || v_run.len() != expect {
             bail!(
-                "append_token: expected {}x{}x{} floats, got k={} v={}",
-                l, h, dh, k_t.len(), v_t.len()
+                "append_run: expected {}x{}x{}x{} floats, got k={} v={}",
+                n_tokens, l, h, dh, k_run.len(), v_run.len()
             );
         }
-        // reserve the page first so failure leaves the sequence unchanged
-        let (page_id, slot) = {
+        if n_tokens == 0 {
+            self.seqs.get(&seq).context("unknown sequence")?;
+            return Ok(());
+        }
+        let tp = cfg.tokens_per_page;
+        // reserve every page the run needs before touching anything
+        let (start_len, have_pages) = {
             let s = self.seqs.get(&seq).context("unknown sequence")?;
-            let tp = cfg.tokens_per_page;
-            let slot = s.len % tp;
-            if slot == 0 {
-                (None, 0)
-            } else {
-                (Some(*s.pages.last().unwrap()), slot)
-            }
+            (s.len, s.pages.len())
         };
-        let page_id = match page_id {
-            Some(p) => p,
-            None => {
-                let p = self.alloc.alloc()?;
-                self.seqs.get_mut(&seq).unwrap().pages.push(p);
-                p
+        let need = (start_len + n_tokens).div_ceil(tp).saturating_sub(have_pages);
+        let mut fresh: Vec<PageId> = Vec::with_capacity(need);
+        for _ in 0..need {
+            match self.alloc.alloc() {
+                Ok(p) => fresh.push(p),
+                Err(e) => {
+                    for p in fresh {
+                        self.alloc.release(p);
+                    }
+                    return Err(e);
+                }
             }
-        };
+        }
+        self.seqs.get_mut(&seq).unwrap().pages.extend(fresh);
 
-        for (is_v, src) in [(false, k_t), (true, v_t)] {
-            self.stage1.encode_batch(src, l * h, &mut self.sink);
-            let page = self.alloc.page_mut(page_id);
-            for layer in 0..l {
-                for head in 0..h {
-                    page.slot_mut(&cfg, slot, layer, head, is_v)
-                        .copy_from_slice(self.sink.encoded(layer * h + head));
+        for (is_v, src) in [(false, k_run), (true, v_run)] {
+            self.stage1.encode_batch(src, n_tokens * l * h, &mut self.sink);
+            // record (t, layer, head) is sink index (t·L + layer)·H + head
+            // — walking tokens then layers then heads writes page slots
+            // in ascending offset order
+            for t in 0..n_tokens {
+                let tok = start_len + t;
+                let page_id = self.seqs.get(&seq).unwrap().pages[tok / tp];
+                let slot = tok % tp;
+                let page = self.alloc.page_mut(page_id);
+                for layer in 0..l {
+                    for head in 0..h {
+                        page.slot_mut(&cfg, slot, layer, head, is_v)
+                            .copy_from_slice(self.sink.encoded((t * l + layer) * h + head));
+                    }
                 }
             }
         }
         let s = self.seqs.get_mut(&seq).unwrap();
-        s.len += 1;
+        s.len += n_tokens;
         if self.keep_shadow {
-            s.shadow_k.extend_from_slice(k_t);
-            s.shadow_v.extend_from_slice(v_t);
+            s.shadow_k.extend_from_slice(k_run);
+            s.shadow_v.extend_from_slice(v_run);
         }
         Ok(())
     }
@@ -286,11 +326,59 @@ impl CacheManager {
         )
     }
 
-    /// The shared batched gather core: carve `k_out`/`v_out` into the
-    /// `n_layers × n_heads` disjoint per-(layer, head) strips located by
-    /// `strip_base`, zero each strip, then decode it page-run by
-    /// page-run with strided batch decodes — in parallel across strips
-    /// when the policy allows.
+    /// Reconstruct the caches of several sequences into disjoint lanes
+    /// of one batched `(L, B, H, T, dh)` buffer pair in a *single*
+    /// strip-parallel drain: the `(layer, head)` strip units of every
+    /// listed lane feed one `scope_units` queue, so a fast lane's
+    /// threads help finish a slow lane instead of idling at per-lane
+    /// barriers (ROADMAP cross-lane item).  `lanes` pairs each sequence
+    /// with its batch lane and must be strictly ascending by lane.
+    /// Returns the reconstructed token count per listed lane.
+    pub fn gather_lanes_into_batch_ws(
+        &self,
+        lanes: &[(SeqId, usize)],
+        batch: usize,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        ws: &mut GatherWorkspace,
+    ) -> Result<Vec<usize>> {
+        let cfg = *self.alloc.cfg();
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        let expect = l * batch * h * t_max * dh;
+        if k_out.len() != expect || v_out.len() != expect {
+            bail!("gather_lanes: buffer shape mismatch");
+        }
+        let mut seqs = Vec::with_capacity(lanes.len());
+        let mut prev: Option<usize> = None;
+        for &(seq, lane) in lanes {
+            if lane >= batch {
+                bail!("gather_lanes: lane {lane} >= batch {batch}");
+            }
+            if prev.is_some_and(|p| lane <= p) {
+                bail!("gather_lanes: lanes must be strictly ascending");
+            }
+            prev = Some(lane);
+            seqs.push(self.seqs.get(&seq).context("unknown sequence")?);
+        }
+        // iterate layer-major, then lane, then head: strip bases ascend
+        // strictly, which carve_strips requires
+        let mut jobs = Vec::with_capacity(l * lanes.len() * h);
+        for layer in 0..l {
+            for (i, &(_, lane)) in lanes.iter().enumerate() {
+                for head in 0..h {
+                    let base = (((layer * batch) + lane) * h + head) * t_max * dh;
+                    jobs.push((seqs[i], layer, head, base));
+                }
+            }
+        }
+        self.gather_strips_multi(jobs, t_max, k_out, v_out, ws);
+        Ok(seqs.iter().map(|s| s.len.min(t_max)).collect())
+    }
+
+    /// The single-sequence strip gather: build this sequence's
+    /// `n_layers × n_heads` strip jobs located by `strip_base` and run
+    /// them through the shared drain.
     fn gather_strips(
         &self,
         s: &SeqCache,
@@ -301,35 +389,61 @@ impl CacheManager {
         strip_base: impl Fn(usize, usize) -> usize,
     ) -> usize {
         let cfg = *self.alloc.cfg();
-        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
-        let n = s.len.min(t_max);
+        let (l, h) = (cfg.n_layers, cfg.n_heads);
+        let mut jobs = Vec::with_capacity(l * h);
+        for layer in 0..l {
+            for head in 0..h {
+                jobs.push((s, layer, head, strip_base(layer, head)));
+            }
+        }
+        self.gather_strips_multi(jobs, t_max, k_out, v_out, ws);
+        s.len.min(t_max)
+    }
+
+    /// The shared batched gather core: carve `k_out`/`v_out` into the
+    /// disjoint strips located by the (strictly ascending) job bases,
+    /// zero each strip, then decode it page-run by page-run with
+    /// strided batch decodes — in parallel across all jobs when the
+    /// policy allows.  Jobs may reference different sequences (the
+    /// cross-lane drain).
+    fn gather_strips_multi(
+        &self,
+        jobs: Vec<(&SeqCache, usize, usize, usize)>,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        ws: &mut GatherWorkspace,
+    ) {
+        let cfg = *self.alloc.cfg();
+        let dh = cfg.d_head;
         let tp = cfg.tokens_per_page;
         let slot_bytes = cfg.slot_bytes();
         let strip_len = t_max * dh;
-        ws.scratch.resize_with(l * h, BatchScratch::new);
+        ws.scratch.resize_with(jobs.len(), BatchScratch::new);
         ws.bases.clear();
-        ws.bases.extend((0..l * h).map(|j| strip_base(j / h, j % h)));
+        ws.bases.extend(jobs.iter().map(|&(_, _, _, base)| base));
 
+        let total_vecs: usize =
+            jobs.iter().map(|&(s, _, _, _)| s.len.min(t_max)).sum::<usize>() * 2;
         let k_strips = carve_strips(k_out, &ws.bases, strip_len);
         let v_strips = carve_strips(v_out, &ws.bases, strip_len);
-        let units: Vec<(usize, &mut [f32], &mut [f32], &mut BatchScratch)> = k_strips
-            .into_iter()
-            .zip(v_strips)
-            .zip(ws.scratch.iter_mut())
-            .enumerate()
-            .map(|(j, ((ks, vs), sc))| (j, ks, vs, sc))
-            .collect();
+        let units: Vec<(&SeqCache, usize, usize, &mut [f32], &mut [f32], &mut BatchScratch)> =
+            jobs.into_iter()
+                .zip(k_strips.into_iter().zip(v_strips))
+                .zip(ws.scratch.iter_mut())
+                .map(|(((s, layer, head, _), (ks, vs)), sc)| (s, layer, head, ks, vs, sc))
+                .collect();
 
         // scoped threads rather than the long-lived ThreadPool: the units
         // borrow the caller's output buffers, which `ThreadPool`'s
         // 'static jobs cannot; the spawn cost is gated on work size
-        let threads = if n * l * h * 2 < MIN_PARALLEL_VECTORS {
+        let threads = if total_vecs < MIN_PARALLEL_VECTORS {
             1
         } else {
-            self.parallel.threads(l * h)
+            self.parallel.threads(units.len())
         };
-        scope_units(units, threads, |(j, k_strip, v_strip, scratch)| {
-            let (layer, head) = (j / h, j % h);
+        scope_units(units, threads, |(s, layer, head, k_strip, v_strip, scratch)| {
+            let n = s.len.min(t_max);
             k_strip.fill(0.0);
             v_strip.fill(0.0);
             let mut t = 0usize;
@@ -356,7 +470,6 @@ impl CacheManager {
                 t += run;
             }
         });
-        n
     }
 
     /// The pre-batch per-vector gather (one `Stage1::decode` call per
@@ -590,6 +703,173 @@ mod tests {
         // other lanes untouched by the lane gather
         let other = (((0 * batch) + 0) * h + 0) * t_max * dh;
         assert!(kb[other..other + dh].iter().all(|&x| x == 9.0));
+    }
+
+    #[test]
+    fn append_run_matches_append_token_loop() {
+        // one chunk-append must leave pages bit-identical to the same
+        // tokens appended one at a time (ragged page boundary included:
+        // 3 tokens pre-seeded, then a 9-token run over 4-token pages)
+        let (mut a, mut b) = (mk(64, 3), mk(64, 3));
+        let cfg = a.page_cfg();
+        let tok_n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+        let mut rng = Rng::new(21);
+        a.start_seq(1).unwrap();
+        b.start_seq(1).unwrap();
+        let seed: Vec<(Vec<f32>, Vec<f32>)> = (0..3).map(|_| token(&mut rng, &cfg)).collect();
+        for (k, v) in &seed {
+            a.append_token(1, k, v).unwrap();
+            b.append_token(1, k, v).unwrap();
+        }
+        let run: Vec<(Vec<f32>, Vec<f32>)> = (0..9).map(|_| token(&mut rng, &cfg)).collect();
+        let mut k_run = Vec::new();
+        let mut v_run = Vec::new();
+        for (k, v) in &run {
+            k_run.extend_from_slice(k);
+            v_run.extend_from_slice(v);
+            b.append_token(1, k, v).unwrap();
+        }
+        assert_eq!(k_run.len(), 9 * tok_n);
+        a.append_run(1, &k_run, &v_run, 9).unwrap();
+        assert_eq!(a.seq_len(1), 12);
+        assert_eq!(a.seq_len(1), b.seq_len(1));
+        let t_max = 12;
+        let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+        let (mut ka, mut va) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        let (mut kb, mut vb) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        a.gather(1, t_max, &mut ka, &mut va).unwrap();
+        b.gather(1, t_max, &mut kb, &mut vb).unwrap();
+        assert_eq!(
+            ka.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            kb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn append_run_failure_leaves_sequence_unchanged() {
+        // pool of 2 pages × 4 tokens = 8; a 9-token run must fail and
+        // roll back the pre-reserved pages
+        let mut m = mk(2, 2);
+        let cfg = m.page_cfg();
+        let tok_n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+        let mut rng = Rng::new(22);
+        m.start_seq(1).unwrap();
+        let k_run = rng.gaussian_vec_f32(9 * tok_n);
+        let v_run = rng.gaussian_vec_f32(9 * tok_n);
+        assert!(m.append_run(1, &k_run, &v_run, 9).is_err());
+        assert_eq!(m.seq_len(1), 0);
+        assert_eq!(m.pages_in_use(), 0, "reserved pages must be released");
+        // an 8-token run then fits
+        m.append_run(1, &k_run[..8 * tok_n], &v_run[..8 * tok_n], 8).unwrap();
+        assert_eq!(m.seq_len(1), 8);
+    }
+
+    #[test]
+    fn append_run_empty_and_shadow() {
+        let mut m = mk(8, 4);
+        m.keep_shadow = true;
+        let cfg = m.page_cfg();
+        let tok_n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+        let mut rng = Rng::new(23);
+        m.start_seq(1).unwrap();
+        m.append_run(1, &[], &[], 0).unwrap();
+        assert_eq!(m.seq_len(1), 0);
+        assert!(m.append_run(99, &[], &[], 0).is_err());
+        let k = rng.gaussian_vec_f32(2 * tok_n);
+        let v = rng.gaussian_vec_f32(2 * tok_n);
+        m.append_run(1, &k, &v, 2).unwrap();
+        let t_max = 2;
+        let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+        let (mut ks, mut vs) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        m.gather_shadow(1, t_max, &mut ks, &mut vs).unwrap();
+        // token 1, layer 1, head 0 of the shadow equals the run input
+        let dh = cfg.d_head;
+        let src = (1 * cfg.n_layers * cfg.n_heads + 1 * cfg.n_heads) * dh;
+        let dst = ((1 * cfg.n_heads) * t_max + 1) * dh;
+        assert_eq!(&ks[dst..dst + dh], &k[src..src + dh]);
+    }
+
+    #[test]
+    fn multi_lane_gather_matches_per_lane_gathers() {
+        for policy in [ParallelPolicy::Off, ParallelPolicy::Auto] {
+            let mut m = mk(64, 4);
+            m.parallel = policy;
+            let cfg = m.page_cfg();
+            let mut rng = Rng::new(24);
+            // three sequences of different lengths on lanes 0, 2, 3 of 4
+            let lens = [5usize, 11, 64];
+            let lanes = [0usize, 2, 3];
+            for (i, &len) in lens.iter().enumerate() {
+                m.start_seq(i as u64 + 1).unwrap();
+                for _ in 0..len {
+                    let (k, v) = token(&mut rng, &cfg);
+                    m.append_token(i as u64 + 1, &k, &v).unwrap();
+                }
+            }
+            let (t_max, batch) = (64usize, 4usize);
+            let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+            let wide = l * batch * h * t_max * dh;
+            let (mut ka, mut va) = (vec![7.0f32; wide], vec![7.0f32; wide]);
+            let (mut kb, mut vb) = (vec![7.0f32; wide], vec![7.0f32; wide]);
+            let mut ws = GatherWorkspace::new();
+            // reference: one gather_into_batch per lane
+            for (i, &lane) in lanes.iter().enumerate() {
+                m.gather_into_batch_ws(i as u64 + 1, lane, batch, t_max, &mut ka, &mut va, &mut ws)
+                    .unwrap();
+            }
+            // one cross-lane drain
+            let pairs: Vec<(SeqId, usize)> =
+                lanes.iter().enumerate().map(|(i, &lane)| (i as u64 + 1, lane)).collect();
+            let ns = m
+                .gather_lanes_into_batch_ws(&pairs, batch, t_max, &mut kb, &mut vb, &mut ws)
+                .unwrap();
+            assert_eq!(ns, lens.to_vec());
+            assert_eq!(
+                ka.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                kb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{policy:?} K"
+            );
+            assert_eq!(
+                va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{policy:?} V"
+            );
+            // untouched lane 1 keeps its sentinel
+            let lane1 = ((0 * batch + 1) * h) * t_max * dh;
+            assert!(kb[lane1..lane1 + dh].iter().all(|&x| x == 7.0));
+        }
+    }
+
+    #[test]
+    fn multi_lane_gather_validates_lanes() {
+        let mut m = mk(8, 2);
+        m.start_seq(1).unwrap();
+        m.start_seq(2).unwrap();
+        let cfg = m.page_cfg();
+        let sz = cfg.n_layers * 4 * cfg.n_heads * 8 * cfg.d_head;
+        let (mut k, mut v) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        let mut ws = GatherWorkspace::new();
+        // out-of-range lane
+        assert!(m
+            .gather_lanes_into_batch_ws(&[(1, 4)], 4, 8, &mut k, &mut v, &mut ws)
+            .is_err());
+        // non-ascending lanes
+        assert!(m
+            .gather_lanes_into_batch_ws(&[(1, 2), (2, 1)], 4, 8, &mut k, &mut v, &mut ws)
+            .is_err());
+        // unknown sequence
+        assert!(m
+            .gather_lanes_into_batch_ws(&[(9, 0)], 4, 8, &mut k, &mut v, &mut ws)
+            .is_err());
+        // empty lane list is a no-op
+        let ns = m
+            .gather_lanes_into_batch_ws(&[], 4, 8, &mut k, &mut v, &mut ws)
+            .unwrap();
+        assert!(ns.is_empty());
     }
 
     #[test]

@@ -1,0 +1,564 @@
+//! AVX2 stage-1 kernels (x86_64).
+//!
+//! Layout conventions (see `kernels` module docs for the contracts):
+//!
+//! * single-vector kernels put 8 consecutive *blocks* in the 8 lanes of
+//!   a register (SoA transpose at the load/store boundary, quaternion
+//!   components loaded from the prebuilt [`SoaBank`] arrays);
+//! * tile kernels put 8 consecutive *vectors* in the 8 lanes (block's
+//!   quaternion broadcast), which is the block-major shape of the KV
+//!   page gather;
+//! * codes travel packed four-per-dword — block `b`'s four code bytes
+//!   are exactly dword `b` of the code array, so an 8-block group's
+//!   codes are one 256-bit load/store with byte lanes `w|x<<8|y<<16|z<<24`.
+//!
+//! Every function here is `unsafe` solely because of
+//! `#[target_feature(enable = "avx2")]`; callers (the dispatch in
+//! `kernels::mod`) guarantee the feature was runtime-detected.  All
+//! memory access is through unaligned intrinsics on ranges proven in
+//! bounds by the leading `assert!`s.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::arch::x86_64::*;
+
+use super::SoaBank;
+use crate::quant::scalar::ScalarQuantizer;
+
+// ---------------------------------------------------------------------
+// small wrappers: keep the hamilton bodies readable while staying on
+// the exact-mul/add/sub (never FMA) instruction set
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+unsafe fn mul(a: __m256, b: __m256) -> __m256 {
+    _mm256_mul_ps(a, b)
+}
+
+#[inline(always)]
+unsafe fn add(a: __m256, b: __m256) -> __m256 {
+    _mm256_add_ps(a, b)
+}
+
+#[inline(always)]
+unsafe fn sub(a: __m256, b: __m256) -> __m256 {
+    _mm256_sub_ps(a, b)
+}
+
+/// Exact sign flip (IEEE negation never rounds).
+#[inline(always)]
+unsafe fn neg(a: __m256) -> __m256 {
+    _mm256_xor_ps(a, _mm256_set1_ps(-0.0))
+}
+
+/// 8 independent quaternions, one per lane, in SoA registers.
+#[derive(Clone, Copy)]
+struct Q8 {
+    w: __m256,
+    x: __m256,
+    y: __m256,
+    z: __m256,
+}
+
+/// Vertical Hamilton product with the *exact* left-to-right operation
+/// order of `math::quaternion::hamilton` (bit-exactness contract).
+#[inline(always)]
+unsafe fn hamilton8(a: Q8, b: Q8) -> Q8 {
+    Q8 {
+        w: sub(sub(sub(mul(a.w, b.w), mul(a.x, b.x)), mul(a.y, b.y)), mul(a.z, b.z)),
+        x: sub(add(add(mul(a.w, b.x), mul(a.x, b.w)), mul(a.y, b.z)), mul(a.z, b.y)),
+        y: add(add(sub(mul(a.w, b.y), mul(a.x, b.z)), mul(a.y, b.w)), mul(a.z, b.x)),
+        z: add(sub(add(mul(a.w, b.z), mul(a.x, b.y)), mul(a.y, b.x)), mul(a.z, b.w)),
+    }
+}
+
+/// `encode1` as a rank count: `idx = |{i : v > bounds[i]}|` over the
+/// ascending boundary array (equal to the scalar branchless binary
+/// search — see module docs).
+#[inline(always)]
+unsafe fn encode_cmp(v: __m256, bounds: &[f32; 15], n_bounds: usize) -> __m256i {
+    let mut acc = _mm256_setzero_si256();
+    for &b in bounds.iter().take(n_bounds) {
+        let m = _mm256_cmp_ps::<_CMP_GT_OQ>(v, _mm256_set1_ps(b));
+        // true lanes are integer -1: subtracting accumulates the rank
+        acc = _mm256_sub_epi32(acc, _mm256_castps_si256(m));
+    }
+    acc
+}
+
+/// `decode1` as an in-register table select over the 16-entry padded
+/// level table (`lo` = levels[0..8], `hi` = levels[8..16]).
+#[inline(always)]
+unsafe fn lookup16(lo: __m256, hi: __m256, idx: __m256i) -> __m256 {
+    let a = _mm256_permutevar8x32_ps(lo, idx); // uses idx mod 8
+    let b = _mm256_permutevar8x32_ps(hi, idx);
+    let use_hi = _mm256_cmpgt_epi32(idx, _mm256_set1_epi32(7));
+    _mm256_blendv_ps(a, b, _mm256_castsi256_ps(use_hi))
+}
+
+/// Split a code dword register (one block/vector per lane, four packed
+/// code bytes per dword) into four index registers.
+#[inline(always)]
+unsafe fn unpack_code_dwords(dw: __m256i) -> (__m256i, __m256i, __m256i, __m256i) {
+    let m = _mm256_set1_epi32(0xFF);
+    (
+        _mm256_and_si256(dw, m),
+        _mm256_and_si256(_mm256_srli_epi32::<8>(dw), m),
+        _mm256_and_si256(_mm256_srli_epi32::<16>(dw), m),
+        _mm256_srli_epi32::<24>(dw),
+    )
+}
+
+/// Pack four code index registers back into one dword-per-lane register
+/// (inverse of [`unpack_code_dwords`]; codes are < 16 so bytes never
+/// collide).
+#[inline(always)]
+unsafe fn pack_code_dwords(c0: __m256i, c1: __m256i, c2: __m256i, c3: __m256i) -> __m256i {
+    _mm256_or_si256(
+        _mm256_or_si256(c0, _mm256_slli_epi32::<8>(c1)),
+        _mm256_or_si256(_mm256_slli_epi32::<16>(c2), _mm256_slli_epi32::<24>(c3)),
+    )
+}
+
+/// 8 AoS blocks (32 consecutive floats) -> SoA (W,X,Y,Z with lane k =
+/// block k).
+#[inline(always)]
+unsafe fn transpose_load8(p: *const f32) -> Q8 {
+    let r0 = _mm256_loadu_ps(p);
+    let r1 = _mm256_loadu_ps(p.add(8));
+    let r2 = _mm256_loadu_ps(p.add(16));
+    let r3 = _mm256_loadu_ps(p.add(24));
+    lane_transpose(
+        _mm256_permute2f128_ps::<0x20>(r0, r2), // [b0 | b4]
+        _mm256_permute2f128_ps::<0x31>(r0, r2), // [b1 | b5]
+        _mm256_permute2f128_ps::<0x20>(r1, r3), // [b2 | b6]
+        _mm256_permute2f128_ps::<0x31>(r1, r3), // [b3 | b7]
+    )
+}
+
+/// Four registers holding one (w,x,y,z) quadruple in each 128-bit half
+/// (`q0` = items 0 and 4, `q1` = 1 and 5, ...) -> SoA.
+#[inline(always)]
+unsafe fn lane_transpose(q0: __m256, q1: __m256, q2: __m256, q3: __m256) -> Q8 {
+    let t0 = _mm256_unpacklo_ps(q0, q1); // [w0 w1 x0 x1 | w4 w5 x4 x5]
+    let t1 = _mm256_unpacklo_ps(q2, q3); // [w2 w3 x2 x3 | w6 w7 x6 x7]
+    let t2 = _mm256_unpackhi_ps(q0, q1); // [y0 y1 z0 z1 | y4 y5 z4 z5]
+    let t3 = _mm256_unpackhi_ps(q2, q3);
+    Q8 {
+        w: _mm256_shuffle_ps::<0b01_00_01_00>(t0, t1),
+        x: _mm256_shuffle_ps::<0b11_10_11_10>(t0, t1),
+        y: _mm256_shuffle_ps::<0b01_00_01_00>(t2, t3),
+        z: _mm256_shuffle_ps::<0b11_10_11_10>(t2, t3),
+    }
+}
+
+/// SoA -> four registers with item k's (w,x,y,z) contiguous: returns
+/// (p0, p1, p2, p3) where p0 holds items 0 (low half) and 4 (high),
+/// p1 items 1/5, p2 items 2/6, p3 items 3/7.
+#[inline(always)]
+unsafe fn soa_to_quads(v: Q8) -> (__m256, __m256, __m256, __m256) {
+    let t0 = _mm256_unpacklo_ps(v.w, v.x); // [w0 x0 w1 x1 | w4 x4 w5 x5]
+    let t1 = _mm256_unpackhi_ps(v.w, v.x); // [w2 x2 w3 x3 | w6 x6 w7 x7]
+    let t2 = _mm256_unpacklo_ps(v.y, v.z); // [y0 z0 y1 z1 | y4 z4 y5 z5]
+    let t3 = _mm256_unpackhi_ps(v.y, v.z);
+    (
+        _mm256_shuffle_ps::<0b01_00_01_00>(t0, t2), // [it0 | it4]
+        _mm256_shuffle_ps::<0b11_10_11_10>(t0, t2), // [it1 | it5]
+        _mm256_shuffle_ps::<0b01_00_01_00>(t1, t3), // [it2 | it6]
+        _mm256_shuffle_ps::<0b11_10_11_10>(t1, t3), // [it3 | it7]
+    )
+}
+
+/// SoA -> 8 AoS blocks stored at 32 consecutive floats.
+#[inline(always)]
+unsafe fn transpose_store8(p: *mut f32, v: Q8) {
+    let (p0, p1, p2, p3) = soa_to_quads(v);
+    _mm256_storeu_ps(p, _mm256_permute2f128_ps::<0x20>(p0, p1)); // blocks 0,1
+    _mm256_storeu_ps(p.add(8), _mm256_permute2f128_ps::<0x20>(p2, p3)); // 2,3
+    _mm256_storeu_ps(p.add(16), _mm256_permute2f128_ps::<0x31>(p0, p1)); // 4,5
+    _mm256_storeu_ps(p.add(24), _mm256_permute2f128_ps::<0x31>(p2, p3)); // 6,7
+}
+
+/// Broadcast quaternion `b` of the left bank, conjugated when `conj`.
+#[inline(always)]
+unsafe fn splat_quat(w: &[f32], x: &[f32], y: &[f32], z: &[f32], b: usize, conj: bool) -> Q8 {
+    let s = if conj { -1.0f32 } else { 1.0 };
+    Q8 {
+        w: _mm256_set1_ps(w[b]),
+        x: _mm256_set1_ps(s * x[b]),
+        y: _mm256_set1_ps(s * y[b]),
+        z: _mm256_set1_ps(s * z[b]),
+    }
+}
+
+/// Load 8 consecutive blocks' quaternion components from the SoA bank.
+#[inline(always)]
+unsafe fn load_quats(w: &[f32], x: &[f32], y: &[f32], z: &[f32], b0: usize, conj: bool) -> Q8 {
+    let q = Q8 {
+        w: _mm256_loadu_ps(w.as_ptr().add(b0)),
+        x: _mm256_loadu_ps(x.as_ptr().add(b0)),
+        y: _mm256_loadu_ps(y.as_ptr().add(b0)),
+        z: _mm256_loadu_ps(z.as_ptr().add(b0)),
+    };
+    if conj {
+        Q8 {
+            w: q.w,
+            x: neg(q.x),
+            y: neg(q.y),
+            z: neg(q.z),
+        }
+    } else {
+        q
+    }
+}
+
+// ---------------------------------------------------------------------
+// single-vector kernels (8 blocks per iteration)
+// ---------------------------------------------------------------------
+
+/// Fused rotate→quantize of the leading `8⌊(d/4)/8⌋` blocks of one
+/// vector; returns codes written.  `use_right`: IsoFull (two-sided
+/// sandwich) vs IsoFast (left-only).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn encode_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pre: f32,
+    codes: &mut [u8],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    let nsimd = full - full % 8;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(x.len() >= nsimd * 4);
+    assert!(codes.len() >= nsimd * 4);
+    assert!(soa.lw.len() >= nsimd);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = _mm256_set1_ps(pre);
+    for b0 in (0..nsimd).step_by(8) {
+        let v0 = transpose_load8(x.as_ptr().add(b0 * 4));
+        let v = Q8 {
+            w: mul(v0.w, prev),
+            x: mul(v0.x, prev),
+            y: mul(v0.y, prev),
+            z: mul(v0.z, prev),
+        };
+        let l = load_quats(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b0, false);
+        let mut y = hamilton8(l, v);
+        if use_right {
+            let r = load_quats(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b0, true);
+            y = hamilton8(y, r);
+        }
+        let packed = pack_code_dwords(
+            encode_cmp(y.w, bounds, nb),
+            encode_cmp(y.x, bounds, nb),
+            encode_cmp(y.y, bounds, nb),
+            encode_cmp(y.z, bounds, nb),
+        );
+        _mm256_storeu_si256(codes.as_mut_ptr().add(b0 * 4) as *mut __m256i, packed);
+    }
+    nsimd * 4
+}
+
+/// Fused dequantize→unrotate of the leading `8⌊(d/4)/8⌋` blocks;
+/// returns codes consumed.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes: &[u8],
+    post: f32,
+    out: &mut [f32],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    let nsimd = full - full % 8;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(codes.len() >= nsimd * 4);
+    assert!(out.len() >= nsimd * 4);
+    assert!(soa.lw.len() >= nsimd);
+    let levels = q.levels_padded();
+    let lo = _mm256_loadu_ps(levels.as_ptr());
+    let hi = _mm256_loadu_ps(levels.as_ptr().add(8));
+    let postv = _mm256_set1_ps(post);
+    for b0 in (0..nsimd).step_by(8) {
+        let dw = _mm256_loadu_si256(codes.as_ptr().add(b0 * 4) as *const __m256i);
+        let (iw, ix, iy, iz) = unpack_code_dwords(dw);
+        let yq = Q8 {
+            w: lookup16(lo, hi, iw),
+            x: lookup16(lo, hi, ix),
+            y: lookup16(lo, hi, iy),
+            z: lookup16(lo, hi, iz),
+        };
+        let lc = load_quats(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b0, true);
+        let mut r = hamilton8(lc, yq);
+        if use_right {
+            let rp = load_quats(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b0, false);
+            r = hamilton8(r, rp);
+        }
+        let o = Q8 {
+            w: mul(r.w, postv),
+            x: mul(r.x, postv),
+            y: mul(r.y, postv),
+            z: mul(r.z, postv),
+        };
+        transpose_store8(out.as_mut_ptr().add(b0 * 4), o);
+    }
+    nsimd * 4
+}
+
+/// dword-lane order fixup for the planar even/odd shuffle:
+/// [0 1 4 5 2 3 6 7] (self-inverse).
+#[inline(always)]
+unsafe fn planar_fix() -> __m256i {
+    _mm256_setr_epi32(0, 1, 4, 5, 2, 3, 6, 7)
+}
+
+/// Planar2D forward: the leading `8⌊(d/2)/8⌋` pairs.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn encode_planar(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pre: f32,
+    codes: &mut [u8],
+) -> usize {
+    let full = d / 2;
+    let nsimd = full - full % 8;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(x.len() >= nsimd * 2);
+    assert!(codes.len() >= nsimd * 2);
+    assert!(soa.cs.len() >= nsimd);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = _mm256_set1_ps(pre);
+    let fix = planar_fix();
+    for p0 in (0..nsimd).step_by(8) {
+        let r0 = _mm256_loadu_ps(x.as_ptr().add(p0 * 2));
+        let r1 = _mm256_loadu_ps(x.as_ptr().add(p0 * 2 + 8));
+        // deinterleave pairs: u0 = even elements, u1 = odd elements
+        let e = _mm256_shuffle_ps::<0b10_00_10_00>(r0, r1);
+        let o = _mm256_shuffle_ps::<0b11_01_11_01>(r0, r1);
+        let u0 = mul(_mm256_permutevar8x32_ps(e, fix), prev);
+        let u1 = mul(_mm256_permutevar8x32_ps(o, fix), prev);
+        let c = _mm256_loadu_ps(soa.cs.as_ptr().add(p0));
+        let s = _mm256_loadu_ps(soa.sn.as_ptr().add(p0));
+        let y0 = sub(mul(c, u0), mul(s, u1)); // c*u0 - s*u1
+        let y1 = add(mul(s, u0), mul(c, u1)); // s*u0 + c*u1
+        let packed = _mm256_or_si256(
+            encode_cmp(y0, bounds, nb),
+            _mm256_slli_epi32::<8>(encode_cmp(y1, bounds, nb)),
+        );
+        let mut buf = [0i32; 8];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, packed);
+        for (k, &pk) in buf.iter().enumerate() {
+            codes[(p0 + k) * 2] = pk as u8;
+            codes[(p0 + k) * 2 + 1] = (pk >> 8) as u8;
+        }
+    }
+    nsimd * 2
+}
+
+/// Planar2D inverse: the leading `8⌊(d/2)/8⌋` pairs.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_planar(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes: &[u8],
+    post: f32,
+    out: &mut [f32],
+) -> usize {
+    let full = d / 2;
+    let nsimd = full - full % 8;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(codes.len() >= nsimd * 2);
+    assert!(out.len() >= nsimd * 2);
+    assert!(soa.cs.len() >= nsimd);
+    let levels = q.levels_padded();
+    let lo = _mm256_loadu_ps(levels.as_ptr());
+    let hi = _mm256_loadu_ps(levels.as_ptr().add(8));
+    let postv = _mm256_set1_ps(post);
+    let fix = planar_fix();
+    for p0 in (0..nsimd).step_by(8) {
+        // 8 pairs = 16 code bytes = 8 u16s; widen to one dword per pair
+        let raw = _mm_loadu_si128(codes.as_ptr().add(p0 * 2) as *const __m128i);
+        let v = _mm256_cvtepu16_epi32(raw);
+        let i0 = _mm256_and_si256(v, _mm256_set1_epi32(0xFF));
+        let i1 = _mm256_srli_epi32::<8>(v);
+        let y0 = lookup16(lo, hi, i0);
+        let y1 = lookup16(lo, hi, i1);
+        let c = _mm256_loadu_ps(soa.cs.as_ptr().add(p0));
+        let s = _mm256_loadu_ps(soa.sn.as_ptr().add(p0));
+        let o0 = mul(add(mul(c, y0), mul(s, y1)), postv); // (c*y0 + s*y1) * post
+        let o1 = mul(add(mul(neg(s), y0), mul(c, y1)), postv); // (-s*y0 + c*y1) * post
+        // re-interleave and store
+        let a = _mm256_permutevar8x32_ps(o0, fix);
+        let b = _mm256_permutevar8x32_ps(o1, fix);
+        _mm256_storeu_ps(out.as_mut_ptr().add(p0 * 2), _mm256_unpacklo_ps(a, b));
+        _mm256_storeu_ps(out.as_mut_ptr().add(p0 * 2 + 8), _mm256_unpackhi_ps(a, b));
+    }
+    nsimd * 2
+}
+
+// ---------------------------------------------------------------------
+// block-major tile kernels (8 vectors per tile)
+// ---------------------------------------------------------------------
+
+/// Tile decode: 8 vectors' unpacked code rows (row `v` at
+/// `codes_tile[v * n_codes ..]`), per-vector `post` factors, output
+/// rows at `out[v * d ..]`.  Covers all `d/4` full blocks; returns the
+/// codes consumed per vector.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_tile_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes_tile: &[u8],
+    n_codes: usize,
+    posts: &[f32],
+    out: &mut [f32],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(posts.len(), 8);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 8 * n_codes);
+    assert!(out.len() >= 7 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let levels = q.levels_padded();
+    let lo = _mm256_loadu_ps(levels.as_ptr());
+    let hi = _mm256_loadu_ps(levels.as_ptr().add(8));
+    let postv = _mm256_loadu_ps(posts.as_ptr());
+    let nc = n_codes as i32;
+    // byte offset of each vector's code row (gather scale 1)
+    let rows = _mm256_setr_epi32(0, nc, 2 * nc, 3 * nc, 4 * nc, 5 * nc, 6 * nc, 7 * nc);
+    let base = codes_tile.as_ptr() as *const i32;
+    let outp = out.as_mut_ptr();
+    for b in 0..full {
+        // lane v = vector v's four packed code bytes for block b
+        let vidx = _mm256_add_epi32(rows, _mm256_set1_epi32((4 * b) as i32));
+        let dw = _mm256_i32gather_epi32::<1>(base, vidx);
+        let (iw, ix, iy, iz) = unpack_code_dwords(dw);
+        let yq = Q8 {
+            w: lookup16(lo, hi, iw),
+            x: lookup16(lo, hi, ix),
+            y: lookup16(lo, hi, iy),
+            z: lookup16(lo, hi, iz),
+        };
+        let lc = splat_quat(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b, true);
+        let mut r = hamilton8(lc, yq);
+        if use_right {
+            let rp = splat_quat(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b, false);
+            r = hamilton8(r, rp);
+        }
+        let o = Q8 {
+            w: mul(r.w, postv),
+            x: mul(r.x, postv),
+            y: mul(r.y, postv),
+            z: mul(r.z, postv),
+        };
+        // scatter each vector's reconstructed block to its output row
+        let (p0, p1, p2, p3) = soa_to_quads(o);
+        let col = 4 * b;
+        _mm_storeu_ps(outp.add(col), _mm256_castps256_ps128(p0));
+        _mm_storeu_ps(outp.add(d + col), _mm256_castps256_ps128(p1));
+        _mm_storeu_ps(outp.add(2 * d + col), _mm256_castps256_ps128(p2));
+        _mm_storeu_ps(outp.add(3 * d + col), _mm256_castps256_ps128(p3));
+        _mm_storeu_ps(outp.add(4 * d + col), _mm256_extractf128_ps::<1>(p0));
+        _mm_storeu_ps(outp.add(5 * d + col), _mm256_extractf128_ps::<1>(p1));
+        _mm_storeu_ps(outp.add(6 * d + col), _mm256_extractf128_ps::<1>(p2));
+        _mm_storeu_ps(outp.add(7 * d + col), _mm256_extractf128_ps::<1>(p3));
+    }
+    full * 4
+}
+
+/// Tile encode: 8 vectors' rows at `x[v * d ..]` with per-vector `pre`
+/// factors; code rows written to `codes_tile[v * n_codes ..]`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn encode_tile_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pres: &[f32],
+    codes_tile: &mut [u8],
+    n_codes: usize,
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(pres.len(), 8);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 8 * n_codes);
+    assert!(x.len() >= 7 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = _mm256_loadu_ps(pres.as_ptr());
+    let xp = x.as_ptr();
+    for b in 0..full {
+        let col = 4 * b;
+        // gather each vector's block into lane v (pairs share a register)
+        let q0 = _mm256_insertf128_ps::<1>(
+            _mm256_castps128_ps256(_mm_loadu_ps(xp.add(col))),
+            _mm_loadu_ps(xp.add(4 * d + col)),
+        );
+        let q1 = _mm256_insertf128_ps::<1>(
+            _mm256_castps128_ps256(_mm_loadu_ps(xp.add(d + col))),
+            _mm_loadu_ps(xp.add(5 * d + col)),
+        );
+        let q2 = _mm256_insertf128_ps::<1>(
+            _mm256_castps128_ps256(_mm_loadu_ps(xp.add(2 * d + col))),
+            _mm_loadu_ps(xp.add(6 * d + col)),
+        );
+        let q3 = _mm256_insertf128_ps::<1>(
+            _mm256_castps128_ps256(_mm_loadu_ps(xp.add(3 * d + col))),
+            _mm_loadu_ps(xp.add(7 * d + col)),
+        );
+        let v0 = lane_transpose(q0, q1, q2, q3);
+        let v = Q8 {
+            w: mul(v0.w, prev),
+            x: mul(v0.x, prev),
+            y: mul(v0.y, prev),
+            z: mul(v0.z, prev),
+        };
+        let l = splat_quat(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b, false);
+        let mut y = hamilton8(l, v);
+        if use_right {
+            let r = splat_quat(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b, true);
+            y = hamilton8(y, r);
+        }
+        let packed = pack_code_dwords(
+            encode_cmp(y.w, bounds, nb),
+            encode_cmp(y.x, bounds, nb),
+            encode_cmp(y.y, bounds, nb),
+            encode_cmp(y.z, bounds, nb),
+        );
+        let mut buf = [0i32; 8];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, packed);
+        for (v_i, &dword) in buf.iter().enumerate() {
+            let off = v_i * n_codes + col;
+            codes_tile[off..off + 4].copy_from_slice(&dword.to_le_bytes());
+        }
+    }
+    full * 4
+}

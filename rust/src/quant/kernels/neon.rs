@@ -1,0 +1,496 @@
+//! NEON stage-1 kernels (aarch64) — the 4-lane mirror of `avx2.rs`.
+//!
+//! NEON's structured loads do the SoA transposes in hardware:
+//! `vld4q_f32`/`vst4q_f32` deinterleave/reinterleave four 4D blocks in
+//! one instruction, and `vld2q_f32`/`vst2q_f32` do the same for planar
+//! pairs.  The ≤16-entry level table lives in a `vqtbl4q_u8` register
+//! quartet (the paper's "codebook fits a shuffle register" claim).
+//!
+//! NEON is architecturally mandatory on aarch64, so these functions
+//! carry no `#[target_feature]`; they are still kept `unsafe` and
+//! behind the same dispatch boundary as AVX2 for symmetry, with all
+//! accesses on ranges proven in bounds by the leading `assert!`s.
+//! The bit-exactness rules from the `kernels` module docs apply
+//! unchanged: exact mul/add/sub (no `vfmaq`), scalar operation order,
+//! rank-count encode, table-select decode.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::arch::aarch64::*;
+
+use super::SoaBank;
+use crate::quant::scalar::ScalarQuantizer;
+
+/// 4 independent quaternions, one per lane, in SoA registers.
+#[derive(Clone, Copy)]
+struct Q4 {
+    w: float32x4_t,
+    x: float32x4_t,
+    y: float32x4_t,
+    z: float32x4_t,
+}
+
+/// Vertical Hamilton product with the exact operation order of
+/// `math::quaternion::hamilton`.
+#[inline(always)]
+unsafe fn hamilton4(a: Q4, b: Q4) -> Q4 {
+    Q4 {
+        w: vsubq_f32(
+            vsubq_f32(
+                vsubq_f32(vmulq_f32(a.w, b.w), vmulq_f32(a.x, b.x)),
+                vmulq_f32(a.y, b.y),
+            ),
+            vmulq_f32(a.z, b.z),
+        ),
+        x: vsubq_f32(
+            vaddq_f32(
+                vaddq_f32(vmulq_f32(a.w, b.x), vmulq_f32(a.x, b.w)),
+                vmulq_f32(a.y, b.z),
+            ),
+            vmulq_f32(a.z, b.y),
+        ),
+        y: vaddq_f32(
+            vaddq_f32(
+                vsubq_f32(vmulq_f32(a.w, b.y), vmulq_f32(a.x, b.z)),
+                vmulq_f32(a.y, b.w),
+            ),
+            vmulq_f32(a.z, b.x),
+        ),
+        z: vaddq_f32(
+            vsubq_f32(
+                vaddq_f32(vmulq_f32(a.w, b.z), vmulq_f32(a.x, b.y)),
+                vmulq_f32(a.y, b.x),
+            ),
+            vmulq_f32(a.z, b.w),
+        ),
+    }
+}
+
+/// `encode1` as a rank count over the ascending boundary array.
+#[inline(always)]
+unsafe fn encode_cmp4(v: float32x4_t, bounds: &[f32; 15], n_bounds: usize) -> uint32x4_t {
+    let mut acc = vdupq_n_u32(0);
+    for &b in bounds.iter().take(n_bounds) {
+        let m = vcgtq_f32(v, vdupq_n_f32(b)); // all-ones where v > b
+        acc = vsubq_u32(acc, m);
+    }
+    acc
+}
+
+/// The 16-entry level table as a `vqtbl4q` register quartet.
+#[inline(always)]
+unsafe fn level_table(levels: &[f32; 16]) -> uint8x16x4_t {
+    let p = levels.as_ptr() as *const u8;
+    uint8x16x4_t(
+        vld1q_u8(p),
+        vld1q_u8(p.add(16)),
+        vld1q_u8(p.add(32)),
+        vld1q_u8(p.add(48)),
+    )
+}
+
+/// `decode1` as a byte-table select: lane index i (0..16) becomes the
+/// four byte indices 4i..4i+3 of the f32 level.
+#[inline(always)]
+unsafe fn lookup16_4(table: uint8x16x4_t, idx: uint32x4_t) -> float32x4_t {
+    let base = vshlq_n_u32::<2>(idx);
+    let bytes = vaddq_u32(
+        vmulq_u32(base, vdupq_n_u32(0x0101_0101)),
+        vdupq_n_u32(0x0302_0100),
+    );
+    vreinterpretq_f32_u8(vqtbl4q_u8(table, vreinterpretq_u8_u32(bytes)))
+}
+
+/// Split packed code dwords (one block/vector per lane) into four index
+/// registers.
+#[inline(always)]
+unsafe fn unpack_code_dwords4(
+    dw: uint32x4_t,
+) -> (uint32x4_t, uint32x4_t, uint32x4_t, uint32x4_t) {
+    let m = vdupq_n_u32(0xFF);
+    (
+        vandq_u32(dw, m),
+        vandq_u32(vshrq_n_u32::<8>(dw), m),
+        vandq_u32(vshrq_n_u32::<16>(dw), m),
+        vshrq_n_u32::<24>(dw),
+    )
+}
+
+#[inline(always)]
+unsafe fn pack_code_dwords4(
+    c0: uint32x4_t,
+    c1: uint32x4_t,
+    c2: uint32x4_t,
+    c3: uint32x4_t,
+) -> uint32x4_t {
+    vorrq_u32(
+        vorrq_u32(c0, vshlq_n_u32::<8>(c1)),
+        vorrq_u32(vshlq_n_u32::<16>(c2), vshlq_n_u32::<24>(c3)),
+    )
+}
+
+/// 4×4 f32 transpose (involutive): rows in, columns out.
+#[inline(always)]
+unsafe fn transpose4(
+    a: float32x4_t,
+    b: float32x4_t,
+    c: float32x4_t,
+    d: float32x4_t,
+) -> Q4 {
+    let t0 = vtrn1q_f32(a, b); // [a0 b0 a2 b2]
+    let t1 = vtrn2q_f32(a, b); // [a1 b1 a3 b3]
+    let t2 = vtrn1q_f32(c, d);
+    let t3 = vtrn2q_f32(c, d);
+    Q4 {
+        w: vreinterpretq_f32_f64(vtrn1q_f64(
+            vreinterpretq_f64_f32(t0),
+            vreinterpretq_f64_f32(t2),
+        )),
+        x: vreinterpretq_f32_f64(vtrn1q_f64(
+            vreinterpretq_f64_f32(t1),
+            vreinterpretq_f64_f32(t3),
+        )),
+        y: vreinterpretq_f32_f64(vtrn2q_f64(
+            vreinterpretq_f64_f32(t0),
+            vreinterpretq_f64_f32(t2),
+        )),
+        z: vreinterpretq_f32_f64(vtrn2q_f64(
+            vreinterpretq_f64_f32(t1),
+            vreinterpretq_f64_f32(t3),
+        )),
+    }
+}
+
+/// Broadcast quaternion `b`, conjugated when `conj`.
+#[inline(always)]
+unsafe fn splat_quat4(w: &[f32], x: &[f32], y: &[f32], z: &[f32], b: usize, conj: bool) -> Q4 {
+    let s = if conj { -1.0f32 } else { 1.0 };
+    Q4 {
+        w: vdupq_n_f32(w[b]),
+        x: vdupq_n_f32(s * x[b]),
+        y: vdupq_n_f32(s * y[b]),
+        z: vdupq_n_f32(s * z[b]),
+    }
+}
+
+/// Load 4 consecutive blocks' quaternion components from the SoA bank.
+#[inline(always)]
+unsafe fn load_quats4(w: &[f32], x: &[f32], y: &[f32], z: &[f32], b0: usize, conj: bool) -> Q4 {
+    let q = Q4 {
+        w: vld1q_f32(w.as_ptr().add(b0)),
+        x: vld1q_f32(x.as_ptr().add(b0)),
+        y: vld1q_f32(y.as_ptr().add(b0)),
+        z: vld1q_f32(z.as_ptr().add(b0)),
+    };
+    if conj {
+        Q4 {
+            w: q.w,
+            x: vnegq_f32(q.x),
+            y: vnegq_f32(q.y),
+            z: vnegq_f32(q.z),
+        }
+    } else {
+        q
+    }
+}
+
+// ---------------------------------------------------------------------
+// single-vector kernels (4 blocks per iteration)
+// ---------------------------------------------------------------------
+
+pub(crate) unsafe fn encode_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pre: f32,
+    codes: &mut [u8],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    let nsimd = full - full % 4;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(x.len() >= nsimd * 4);
+    assert!(codes.len() >= nsimd * 4);
+    assert!(soa.lw.len() >= nsimd);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = vdupq_n_f32(pre);
+    for b0 in (0..nsimd).step_by(4) {
+        let raw = vld4q_f32(x.as_ptr().add(b0 * 4)); // hw deinterleave
+        let v = Q4 {
+            w: vmulq_f32(raw.0, prev),
+            x: vmulq_f32(raw.1, prev),
+            y: vmulq_f32(raw.2, prev),
+            z: vmulq_f32(raw.3, prev),
+        };
+        let l = load_quats4(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b0, false);
+        let mut y = hamilton4(l, v);
+        if use_right {
+            let r = load_quats4(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b0, true);
+            y = hamilton4(y, r);
+        }
+        let packed = pack_code_dwords4(
+            encode_cmp4(y.w, bounds, nb),
+            encode_cmp4(y.x, bounds, nb),
+            encode_cmp4(y.y, bounds, nb),
+            encode_cmp4(y.z, bounds, nb),
+        );
+        vst1q_u8(codes.as_mut_ptr().add(b0 * 4), vreinterpretq_u8_u32(packed));
+    }
+    nsimd * 4
+}
+
+pub(crate) unsafe fn decode_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes: &[u8],
+    post: f32,
+    out: &mut [f32],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    let nsimd = full - full % 4;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(codes.len() >= nsimd * 4);
+    assert!(out.len() >= nsimd * 4);
+    assert!(soa.lw.len() >= nsimd);
+    let table = level_table(q.levels_padded());
+    let postv = vdupq_n_f32(post);
+    for b0 in (0..nsimd).step_by(4) {
+        let raw = vld1q_u8(codes.as_ptr().add(b0 * 4));
+        let (iw, ix, iy, iz) = unpack_code_dwords4(vreinterpretq_u32_u8(raw));
+        let yq = Q4 {
+            w: lookup16_4(table, iw),
+            x: lookup16_4(table, ix),
+            y: lookup16_4(table, iy),
+            z: lookup16_4(table, iz),
+        };
+        let lc = load_quats4(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b0, true);
+        let mut r = hamilton4(lc, yq);
+        if use_right {
+            let rp = load_quats4(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b0, false);
+            r = hamilton4(r, rp);
+        }
+        let o = float32x4x4_t(
+            vmulq_f32(r.w, postv),
+            vmulq_f32(r.x, postv),
+            vmulq_f32(r.y, postv),
+            vmulq_f32(r.z, postv),
+        );
+        vst4q_f32(out.as_mut_ptr().add(b0 * 4), o); // hw reinterleave
+    }
+    nsimd * 4
+}
+
+pub(crate) unsafe fn encode_planar(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pre: f32,
+    codes: &mut [u8],
+) -> usize {
+    let full = d / 2;
+    let nsimd = full - full % 4;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(x.len() >= nsimd * 2);
+    assert!(codes.len() >= nsimd * 2);
+    assert!(soa.cs.len() >= nsimd);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = vdupq_n_f32(pre);
+    for p0 in (0..nsimd).step_by(4) {
+        let raw = vld2q_f32(x.as_ptr().add(p0 * 2)); // (evens, odds)
+        let u0 = vmulq_f32(raw.0, prev);
+        let u1 = vmulq_f32(raw.1, prev);
+        let c = vld1q_f32(soa.cs.as_ptr().add(p0));
+        let s = vld1q_f32(soa.sn.as_ptr().add(p0));
+        let y0 = vsubq_f32(vmulq_f32(c, u0), vmulq_f32(s, u1)); // c*u0 - s*u1
+        let y1 = vaddq_f32(vmulq_f32(s, u0), vmulq_f32(c, u1)); // s*u0 + c*u1
+        let packed = vorrq_u32(
+            encode_cmp4(y0, bounds, nb),
+            vshlq_n_u32::<8>(encode_cmp4(y1, bounds, nb)),
+        );
+        let mut buf = [0u32; 4];
+        vst1q_u32(buf.as_mut_ptr(), packed);
+        for (k, &pk) in buf.iter().enumerate() {
+            codes[(p0 + k) * 2] = pk as u8;
+            codes[(p0 + k) * 2 + 1] = (pk >> 8) as u8;
+        }
+    }
+    nsimd * 2
+}
+
+pub(crate) unsafe fn decode_planar(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes: &[u8],
+    post: f32,
+    out: &mut [f32],
+) -> usize {
+    let full = d / 2;
+    let nsimd = full - full % 4;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(codes.len() >= nsimd * 2);
+    assert!(out.len() >= nsimd * 2);
+    assert!(soa.cs.len() >= nsimd);
+    let table = level_table(q.levels_padded());
+    let postv = vdupq_n_f32(post);
+    for p0 in (0..nsimd).step_by(4) {
+        // 4 pairs = 8 code bytes; widen to one dword per pair
+        let b8 = vld1_u8(codes.as_ptr().add(p0 * 2));
+        let wide = vmovl_u16(vreinterpret_u16_u8(b8));
+        let i0 = vandq_u32(wide, vdupq_n_u32(0xFF));
+        let i1 = vshrq_n_u32::<8>(wide);
+        let y0 = lookup16_4(table, i0);
+        let y1 = lookup16_4(table, i1);
+        let c = vld1q_f32(soa.cs.as_ptr().add(p0));
+        let s = vld1q_f32(soa.sn.as_ptr().add(p0));
+        // (c*y0 + s*y1) * post ; (-s*y0 + c*y1) * post
+        let o0 = vmulq_f32(vaddq_f32(vmulq_f32(c, y0), vmulq_f32(s, y1)), postv);
+        let o1 = vmulq_f32(
+            vaddq_f32(vmulq_f32(vnegq_f32(s), y0), vmulq_f32(c, y1)),
+            postv,
+        );
+        vst2q_f32(out.as_mut_ptr().add(p0 * 2), float32x4x2_t(o0, o1));
+    }
+    nsimd * 2
+}
+
+// ---------------------------------------------------------------------
+// block-major tile kernels (4 vectors per tile)
+// ---------------------------------------------------------------------
+
+pub(crate) unsafe fn decode_tile_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes_tile: &[u8],
+    n_codes: usize,
+    posts: &[f32],
+    out: &mut [f32],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(posts.len(), 4);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 4 * n_codes);
+    assert!(out.len() >= 3 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let table = level_table(q.levels_padded());
+    let postv = vld1q_f32(posts.as_ptr());
+    let outp = out.as_mut_ptr();
+    for b in 0..full {
+        let col = 4 * b;
+        // lane v = vector v's four packed code bytes for block b
+        let mut rows = [0u32; 4];
+        for (v, r) in rows.iter_mut().enumerate() {
+            let off = v * n_codes + col;
+            *r = u32::from_le_bytes([
+                codes_tile[off],
+                codes_tile[off + 1],
+                codes_tile[off + 2],
+                codes_tile[off + 3],
+            ]);
+        }
+        let (iw, ix, iy, iz) = unpack_code_dwords4(vld1q_u32(rows.as_ptr()));
+        let yq = Q4 {
+            w: lookup16_4(table, iw),
+            x: lookup16_4(table, ix),
+            y: lookup16_4(table, iy),
+            z: lookup16_4(table, iz),
+        };
+        let lc = splat_quat4(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b, true);
+        let mut r = hamilton4(lc, yq);
+        if use_right {
+            let rp = splat_quat4(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b, false);
+            r = hamilton4(r, rp);
+        }
+        let o = Q4 {
+            w: vmulq_f32(r.w, postv),
+            x: vmulq_f32(r.x, postv),
+            y: vmulq_f32(r.y, postv),
+            z: vmulq_f32(r.z, postv),
+        };
+        // columns -> per-vector rows, then scatter
+        let t = transpose4(o.w, o.x, o.y, o.z);
+        vst1q_f32(outp.add(col), t.w);
+        vst1q_f32(outp.add(d + col), t.x);
+        vst1q_f32(outp.add(2 * d + col), t.y);
+        vst1q_f32(outp.add(3 * d + col), t.z);
+    }
+    full * 4
+}
+
+pub(crate) unsafe fn encode_tile_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pres: &[f32],
+    codes_tile: &mut [u8],
+    n_codes: usize,
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(pres.len(), 4);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 4 * n_codes);
+    assert!(x.len() >= 3 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = vld1q_f32(pres.as_ptr());
+    let xp = x.as_ptr();
+    for b in 0..full {
+        let col = 4 * b;
+        let raw = transpose4(
+            vld1q_f32(xp.add(col)),
+            vld1q_f32(xp.add(d + col)),
+            vld1q_f32(xp.add(2 * d + col)),
+            vld1q_f32(xp.add(3 * d + col)),
+        );
+        let v = Q4 {
+            w: vmulq_f32(raw.w, prev),
+            x: vmulq_f32(raw.x, prev),
+            y: vmulq_f32(raw.y, prev),
+            z: vmulq_f32(raw.z, prev),
+        };
+        let l = splat_quat4(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b, false);
+        let mut y = hamilton4(l, v);
+        if use_right {
+            let r = splat_quat4(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b, true);
+            y = hamilton4(y, r);
+        }
+        let packed = pack_code_dwords4(
+            encode_cmp4(y.w, bounds, nb),
+            encode_cmp4(y.x, bounds, nb),
+            encode_cmp4(y.y, bounds, nb),
+            encode_cmp4(y.z, bounds, nb),
+        );
+        let mut buf = [0u32; 4];
+        vst1q_u32(buf.as_mut_ptr(), packed);
+        for (v_i, &dword) in buf.iter().enumerate() {
+            let off = v_i * n_codes + col;
+            codes_tile[off..off + 4].copy_from_slice(&dword.to_le_bytes());
+        }
+    }
+    full * 4
+}

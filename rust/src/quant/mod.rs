@@ -7,12 +7,16 @@
 //! * [`packing`]  — 2/3/4-bit code packing
 //! * [`pipeline`] — the fused stage-1 hot path (paper Alg. 1) + the
 //!   unfused module-level reference (§9.4)
+//! * [`kernels`]  — runtime-dispatched SIMD (AVX2/NEON) encode/decode
+//!   kernels behind the `Stage1Config::backend` knob; scalar reference
+//!   retained as the bit-exact fallback
 //! * [`cost`]     — the analytical complexity model (Table 1)
 //! * [`residual`] — QJL-style stage-2 correction (§8)
 //! * [`learn`]    — learned rotations (Table 3 axis)
 
 pub mod codebooks;
 pub mod cost;
+pub mod kernels;
 pub mod learn;
 pub mod packing;
 pub mod params;
@@ -20,6 +24,7 @@ pub mod pipeline;
 pub mod residual;
 pub mod scalar;
 
+pub use kernels::KernelBackend;
 pub use params::{ParamBank, Variant};
 pub use pipeline::{mse, BatchScratch, PackedSink, Stage1, Stage1Config, Stage1Unfused};
 pub use scalar::{QuantKind, ScalarQuantizer};

@@ -61,18 +61,26 @@ pub fn pack_append(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
 /// Unpack `n` codes of `bits` bits from `data` into `out` (cleared first).
 pub fn unpack(data: &[u8], bits: u8, n: usize, out: &mut Vec<u8>) {
     out.clear();
-    out.reserve(n);
+    out.resize(n, 0);
+    unpack_into(data, bits, n, out);
+}
+
+/// Unpack `n` codes of `bits` bits from `data` into the slice `out`
+/// (`out.len() >= n`) — the batch tile paths stage several vectors'
+/// codes into rows of one scratch buffer with this.
+pub fn unpack_into(data: &[u8], bits: u8, n: usize, out: &mut [u8]) {
+    debug_assert!(out.len() >= n);
     match bits {
         4 => {
-            for i in 0..n {
+            for (i, o) in out.iter_mut().enumerate().take(n) {
                 let byte = data[i / 2];
-                out.push(if i % 2 == 0 { byte & 0x0F } else { byte >> 4 });
+                *o = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
             }
         }
         2 => {
-            for i in 0..n {
+            for (i, o) in out.iter_mut().enumerate().take(n) {
                 let byte = data[i / 4];
-                out.push((byte >> (2 * (i % 4))) & 0x03);
+                *o = (byte >> (2 * (i % 4))) & 0x03;
             }
         }
         _ => {
@@ -80,13 +88,13 @@ pub fn unpack(data: &[u8], bits: u8, n: usize, out: &mut Vec<u8>) {
             let mut nbits: u32 = 0;
             let mut pos = 0usize;
             let mask = (1u64 << bits) - 1;
-            for _ in 0..n {
+            for o in out.iter_mut().take(n) {
                 while nbits < bits as u32 {
                     acc |= (data[pos] as u64) << nbits;
                     pos += 1;
                     nbits += 8;
                 }
-                out.push((acc & mask) as u8);
+                *o = (acc & mask) as u8;
                 acc >>= bits;
                 nbits -= bits as u32;
             }

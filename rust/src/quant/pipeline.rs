@@ -42,9 +42,25 @@
 //! (`rust/tests/proptest_invariants.rs` sweeps every variant × d × bits
 //! combination plus ragged tails), so threading page decodes across
 //! cores cannot change served results.
+//!
+//! # SIMD kernels
+//!
+//! The encode/decode bodies dispatch through [`quant::kernels`]
+//! (`Stage1Config::backend`, default auto-detected): AVX2/NEON kernels
+//! cover the IsoFull/IsoFast/Planar2D rotate→quantize and
+//! dequantize→unrotate loops — single-vector SoA-across-blocks kernels
+//! for `encode`/`decode`, and block-major multi-vector tiles inside
+//! [`Stage1::encode_batch`] / [`Stage1::decode_batch_strided`].  Every
+//! SIMD path is bit-exact with the scalar reference (which
+//! `KernelBackend::Scalar` selects at runtime), so the backend knob can
+//! never change served results — `rust/tests/kernel_equivalence.rs`
+//! enforces this across the full Table-2 sweep.
+//!
+//! [`quant::kernels`]: crate::quant::kernels
 
 use crate::math::quaternion::{self as quat};
 use crate::math::rotor3::Rotor;
+use crate::quant::kernels::{self, KernelBackend, KernelState};
 use crate::quant::packing;
 use crate::quant::params::{ParamBank, Variant};
 use crate::quant::scalar::{QuantKind, ScalarQuantizer};
@@ -81,6 +97,11 @@ pub struct PackedSink {
     bytes: Vec<u8>,
     /// per-vector code-index scratch (`n_codes` entries)
     codes: Vec<u8>,
+    /// block-major tile scratch: `tile × n_codes` code rows (SIMD path)
+    tile_codes: Vec<u8>,
+    /// per-tile-vector norms and pre-factors (SIMD path)
+    rhos: Vec<f32>,
+    pres: Vec<f32>,
     encoded_len: usize,
     n_vecs: usize,
 }
@@ -117,6 +138,10 @@ impl PackedSink {
 pub struct BatchScratch {
     /// unpacked code indices of the vector being decoded (`n_codes`)
     codes: Vec<u8>,
+    /// block-major tile scratch: `tile × n_codes` code rows (SIMD path)
+    tile_codes: Vec<u8>,
+    /// per-tile-vector post-factors (SIMD path)
+    posts: Vec<f32>,
 }
 
 impl BatchScratch {
@@ -134,6 +159,10 @@ pub struct Stage1Config {
     pub quant: QuantKind,
     pub seed: u64,
     pub rotor_impl: RotorImpl,
+    /// which kernel implementation runs the encode/decode bodies (all
+    /// backends are bit-exact; `Scalar` is the reference).  Defaults to
+    /// `Auto` unless the `ISOQUANT_KERNEL` env var overrides it.
+    pub backend: KernelBackend,
 }
 
 impl Stage1Config {
@@ -145,11 +174,17 @@ impl Stage1Config {
             quant: QuantKind::Lloyd,
             seed: 0x150_0541,
             rotor_impl: RotorImpl::Multivector,
+            backend: KernelBackend::from_env_default(),
         }
     }
 
     pub fn with_rotor_impl(mut self, imp: RotorImpl) -> Stage1Config {
         self.rotor_impl = imp;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: KernelBackend) -> Stage1Config {
+        self.backend = backend;
         self
     }
 }
@@ -167,6 +202,8 @@ pub struct Stage1 {
     scale: f32,
     /// rotors precomputed from the quaternion bank (Rotor3D only)
     rotors: Vec<Rotor>,
+    /// resolved kernel backend + SoA parameter copy (see `quant::kernels`)
+    kern: KernelState,
 }
 
 impl Stage1 {
@@ -181,11 +218,13 @@ impl Stage1 {
         let q_block = ScalarQuantizer::for_kind(cfg.quant, cfg.variant.block_k(), cfg.bits);
         let q_tail = ScalarQuantizer::for_kind(cfg.quant, 2, cfg.bits);
         let rotors = bank.q_l.iter().map(|&q| Rotor::from_quaternion(q)).collect();
+        let kern = KernelState::build(cfg.backend, &bank, cfg.variant);
         Stage1 {
             scale: (cfg.d as f32).sqrt(),
             q_block,
             q_tail,
             rotors,
+            kern,
             bank,
             cfg,
         }
@@ -193,6 +232,12 @@ impl Stage1 {
 
     pub fn d(&self) -> usize {
         self.cfg.d
+    }
+
+    /// The kernel implementation this instance actually runs (what the
+    /// `backend` request resolved to on this host).
+    pub fn kernel_backend(&self) -> kernels::Resolved {
+        self.kern.resolved
     }
 
     /// Bytes per compressed vector: packed codes + f32 norm.
@@ -303,11 +348,59 @@ impl Stage1 {
         let d = self.cfg.d;
         assert_eq!(x.len(), n_vecs * d, "encode_batch: x must be n_vecs × d");
         let enc = self.encoded_len();
+        let nc = self.n_codes();
         sink.encoded_len = enc;
         sink.n_vecs = n_vecs;
         sink.bytes.clear();
         sink.bytes.reserve(n_vecs * enc);
-        for i in 0..n_vecs {
+        let mut i = 0usize;
+        // block-major SIMD tiles: `tile` vectors at a time, the block
+        // sandwich vertical across vectors (see quant::kernels)
+        let tile = kernels::tile_width(&self.kern, self.cfg.variant, d);
+        if tile > 1 {
+            // every row position is overwritten below (kernel prefix +
+            // scalar tail), so a plain resize keeps the buffers warm
+            sink.tile_codes.resize(tile * nc, 0);
+            sink.rhos.resize(tile, 0.0);
+            sink.pres.resize(tile, 0.0);
+            while i + tile <= n_vecs {
+                for v in 0..tile {
+                    let rho = l2_norm(&x[(i + v) * d..(i + v + 1) * d]);
+                    sink.rhos[v] = rho;
+                    sink.pres[v] = self.scale / rho.max(EPS);
+                }
+                let covered = kernels::encode_tile_prefix(
+                    &self.kern,
+                    self.cfg.variant,
+                    &self.q_block,
+                    d,
+                    &x[i * d..(i + tile) * d],
+                    &sink.pres,
+                    &mut sink.tile_codes,
+                    nc,
+                );
+                for v in 0..tile {
+                    // scalar reference finishes each row's ragged tail,
+                    // then the row packs exactly like the per-vector path
+                    let pre = sink.pres[v];
+                    let rho = sink.rhos[v];
+                    self.rotate_quantize_codes_from(
+                        &x[(i + v) * d..(i + v + 1) * d],
+                        pre,
+                        &mut sink.tile_codes[v * nc..(v + 1) * nc],
+                        covered,
+                    );
+                    sink.bytes.extend_from_slice(&rho.to_le_bytes());
+                    packing::pack_append(
+                        &sink.tile_codes[v * nc..(v + 1) * nc],
+                        self.cfg.bits,
+                        &mut sink.bytes,
+                    );
+                }
+                i += tile;
+            }
+        }
+        for i in i..n_vecs {
             let xi = &x[i * d..(i + 1) * d];
             let rho = l2_norm(xi);
             let pre = self.scale / rho.max(EPS);
@@ -361,7 +454,50 @@ impl Stage1 {
             data.len() >= (n_vecs - 1) * stride + enc,
             "decode_batch_strided: data too short for {n_vecs} records"
         );
-        for i in 0..n_vecs {
+        let mut i = 0usize;
+        // block-major SIMD tiles: `tile` records at a time, the inverse
+        // sandwich vertical across vectors (the KV-gather hot shape)
+        let tile = kernels::tile_width(&self.kern, self.cfg.variant, d);
+        if tile > 1 {
+            // unpack_into rewrites every row position, so a plain resize
+            // keeps the buffers warm across calls
+            scratch.tile_codes.resize(tile * nc, 0);
+            scratch.posts.resize(tile, 0.0);
+            while i + tile <= n_vecs {
+                for v in 0..tile {
+                    let rec = &data[(i + v) * stride..(i + v) * stride + enc];
+                    let rho = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+                    scratch.posts[v] = rho / self.scale;
+                    packing::unpack_into(
+                        &rec[4..],
+                        bits,
+                        nc,
+                        &mut scratch.tile_codes[v * nc..(v + 1) * nc],
+                    );
+                }
+                let covered = kernels::decode_tile_prefix(
+                    &self.kern,
+                    self.cfg.variant,
+                    &self.q_block,
+                    d,
+                    &scratch.tile_codes,
+                    nc,
+                    &scratch.posts,
+                    &mut out[i * d..(i + tile) * d],
+                );
+                for v in 0..tile {
+                    // scalar reference finishes each row's ragged tail
+                    self.dequantize_unrotate_from(
+                        &scratch.tile_codes[v * nc..(v + 1) * nc],
+                        scratch.posts[v],
+                        &mut out[(i + v) * d..(i + v + 1) * d],
+                        covered,
+                    );
+                }
+                i += tile;
+            }
+        }
+        for i in i..n_vecs {
             let rec = &data[i * stride..i * stride + enc];
             let rho = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
             let post = rho / self.scale;
@@ -603,11 +739,30 @@ impl Stage1 {
     // ------------------------------------------------------------------
 
     fn rotate_quantize_codes(&self, x: &[f32], pre: f32, codes: &mut Vec<u8>) {
+        codes.clear();
+        codes.resize(self.n_codes(), 0);
+        let done = kernels::encode_prefix(
+            &self.kern,
+            self.cfg.variant,
+            &self.q_block,
+            self.cfg.d,
+            x,
+            pre,
+            codes,
+        );
+        self.rotate_quantize_codes_from(x, pre, codes, done);
+    }
+
+    /// The scalar reference encode body, from code position `start`
+    /// (block-aligned) onward — `start = 0` is the full reference path,
+    /// non-zero finishes what a SIMD prefix left (ragged tails, sub-tile
+    /// remainders).  Retained verbatim modulo indexed writes.
+    fn rotate_quantize_codes_from(&self, x: &[f32], pre: f32, codes: &mut [u8], start: usize) {
         let d = self.cfg.d;
         match self.cfg.variant {
             Variant::IsoFull => {
                 let g = d.div_ceil(4);
-                for b in 0..g {
+                for b in start / 4..g {
                     let i = b * 4;
                     let mut v = [0.0f32; 4];
                     for (j, slot) in v.iter_mut().enumerate() {
@@ -616,14 +771,14 @@ impl Stage1 {
                         }
                     }
                     let y = quat::sandwich(self.bank.q_l[b], v, self.bank.q_r[b]);
-                    for yy in y {
-                        codes.push(self.q_block.encode1(yy));
+                    for (j, yy) in y.into_iter().enumerate() {
+                        codes[i + j] = self.q_block.encode1(yy);
                     }
                 }
             }
             Variant::IsoFast => {
                 let g = d.div_ceil(4);
-                for b in 0..g {
+                for b in start / 4..g {
                     let i = b * 4;
                     let mut v = [0.0f32; 4];
                     for (j, slot) in v.iter_mut().enumerate() {
@@ -632,29 +787,30 @@ impl Stage1 {
                         }
                     }
                     let y = quat::hamilton(self.bank.q_l[b], v);
-                    for yy in y {
-                        codes.push(self.q_block.encode1(yy));
+                    for (j, yy) in y.into_iter().enumerate() {
+                        codes[i + j] = self.q_block.encode1(yy);
                     }
                 }
             }
             Variant::Planar2D => {
                 let g = d.div_ceil(2);
-                for b in 0..g {
+                for b in start / 2..g {
                     let i = b * 2;
                     let (c, s) = self.bank.cos_sin[b];
                     let u0 = x[i] * pre;
                     let u1 = if i + 1 < d { x[i + 1] * pre } else { 0.0 };
-                    codes.push(self.q_block.encode1(c * u0 - s * u1));
-                    codes.push(self.q_block.encode1(s * u0 + c * u1));
+                    codes[i] = self.q_block.encode1(c * u0 - s * u1);
+                    codes[i + 1] = self.q_block.encode1(s * u0 + c * u1);
                 }
             }
             Variant::Rotor3D => {
+                debug_assert_eq!(start, 0, "Rotor3D has no SIMD prefix");
                 let nfull = d / 3;
                 for b in 0..nfull {
                     let i = b * 3;
                     let y = self.rotor_fwd(b, [x[i] * pre, x[i + 1] * pre, x[i + 2] * pre]);
-                    for yy in y {
-                        codes.push(self.q_block.encode1(yy));
+                    for (j, yy) in y.into_iter().enumerate() {
+                        codes[i + j] = self.q_block.encode1(yy);
                     }
                 }
                 match d % 3 {
@@ -663,24 +819,26 @@ impl Stage1 {
                         let (c, s) = self.bank.cos_sin[0];
                         let u0 = x[i] * pre;
                         let u1 = x[i + 1] * pre;
-                        codes.push(self.q_tail.encode1(c * u0 - s * u1));
-                        codes.push(self.q_tail.encode1(s * u0 + c * u1));
+                        codes[i] = self.q_tail.encode1(c * u0 - s * u1);
+                        codes[i + 1] = self.q_tail.encode1(s * u0 + c * u1);
                     }
-                    1 => codes.push(self.q_tail.encode1(x[3 * nfull] * pre)),
+                    1 => codes[d - 1] = self.q_tail.encode1(x[3 * nfull] * pre),
                     _ => {}
                 }
             }
             Variant::Dense => {
+                debug_assert_eq!(start, 0, "Dense has no SIMD prefix");
                 for i in 0..d {
                     let row = &self.bank.dense[i * d..(i + 1) * d];
                     let mut s = 0.0f32;
                     for j in 0..d {
                         s += row[j] * x[j];
                     }
-                    codes.push(self.q_block.encode1(s * pre));
+                    codes[i] = self.q_block.encode1(s * pre);
                 }
             }
             Variant::Grouped8D => {
+                debug_assert_eq!(start, 0, "Grouped8D has no SIMD prefix");
                 // reuse the fused body through a temporary: encode is not
                 // on the grouped variant's hot path (ablation only)
                 let g8 = d.div_ceil(8);
@@ -705,7 +863,7 @@ impl Stage1 {
                     let hi2 = quat::sandwich(qb_l, [mixed[4], mixed[5], mixed[6], mixed[7]], qb_r);
                     for j in 0..8 {
                         let y = if j < 4 { lo2[j] } else { hi2[j - 4] };
-                        codes.push(self.q_block.encode1(y));
+                        codes[base + j] = self.q_block.encode1(y);
                     }
                 }
             }
@@ -713,10 +871,26 @@ impl Stage1 {
     }
 
     fn dequantize_unrotate(&self, codes: &[u8], post: f32, out: &mut [f32]) {
+        let done = kernels::decode_prefix(
+            &self.kern,
+            self.cfg.variant,
+            &self.q_block,
+            self.cfg.d,
+            codes,
+            post,
+            out,
+        );
+        self.dequantize_unrotate_from(codes, post, out, done);
+    }
+
+    /// The scalar reference decode body, from code position `start`
+    /// (block-aligned) onward — the exact inverse counterpart of
+    /// [`Stage1::rotate_quantize_codes_from`].
+    fn dequantize_unrotate_from(&self, codes: &[u8], post: f32, out: &mut [f32], start: usize) {
         let d = self.cfg.d;
         match self.cfg.variant {
             Variant::IsoFull => {
-                for b in 0..d.div_ceil(4) {
+                for b in start / 4..d.div_ceil(4) {
                     let i = b * 4;
                     let yq: [f32; 4] =
                         std::array::from_fn(|j| self.q_block.decode1(codes[i + j]));
@@ -729,7 +903,7 @@ impl Stage1 {
                 }
             }
             Variant::IsoFast => {
-                for b in 0..d.div_ceil(4) {
+                for b in start / 4..d.div_ceil(4) {
                     let i = b * 4;
                     let yq: [f32; 4] =
                         std::array::from_fn(|j| self.q_block.decode1(codes[i + j]));
@@ -742,7 +916,7 @@ impl Stage1 {
                 }
             }
             Variant::Planar2D => {
-                for b in 0..d.div_ceil(2) {
+                for b in start / 2..d.div_ceil(2) {
                     let i = b * 2;
                     let (c, s) = self.bank.cos_sin[b];
                     let y0 = self.q_block.decode1(codes[i]);
@@ -754,6 +928,7 @@ impl Stage1 {
                 }
             }
             Variant::Rotor3D => {
+                debug_assert_eq!(start, 0, "Rotor3D has no SIMD prefix");
                 let nfull = d / 3;
                 for b in 0..nfull {
                     let i = b * 3;
@@ -784,6 +959,7 @@ impl Stage1 {
                 }
             }
             Variant::Dense => {
+                debug_assert_eq!(start, 0, "Dense has no SIMD prefix");
                 out.fill(0.0);
                 for i in 0..d {
                     let row = &self.bank.dense[i * d..(i + 1) * d];
@@ -797,6 +973,7 @@ impl Stage1 {
                 }
             }
             Variant::Grouped8D => {
+                debug_assert_eq!(start, 0, "Grouped8D has no SIMD prefix");
                 for b in 0..d.div_ceil(8) {
                     let base = b * 8;
                     let yq: [f32; 8] =

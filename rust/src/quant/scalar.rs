@@ -90,6 +90,24 @@ impl ScalarQuantizer {
         &self.levels[..self.n_levels]
     }
 
+    pub fn n_levels(&self) -> usize {
+        self.n_levels
+    }
+
+    /// The raw 16-entry level table (tail padded with the top level) —
+    /// exactly what `decode1` indexes.  Exposed for the SIMD kernels'
+    /// in-register table lookups (`quant::kernels`).
+    pub fn levels_padded(&self) -> &[f32; 16] {
+        &self.levels
+    }
+
+    /// The raw 15-entry decision-boundary table (tail padded with +∞) —
+    /// exactly what `encode1` searches.  `encode1` equals the rank
+    /// `|{i : x > bounds[i]}|`, which is how the SIMD kernels compute it.
+    pub fn bounds_padded(&self) -> &[f32; 15] {
+        &self.bounds
+    }
+
     /// Nearest-level index: branchless 4-step binary search over the
     /// ∞-padded boundary array.  Identical cost for b ∈ {2, 3, 4}.
     #[inline(always)]
