@@ -311,7 +311,12 @@ pub fn serve(args: &[String]) -> Result<()> {
         .opt("bind", "", "bind address (overrides config)")
         .opt("variant", "", "stage-1 variant (overrides config)")
         .opt("bits", "", "bit width (overrides config)")
-        .opt("kernel", "", "kernel backend (overrides config): scalar | auto | avx2 | neon");
+        .opt("kernel", "", "kernel backend (overrides config): scalar | auto | avx2 | neon")
+        .opt(
+            "prefix-sharing",
+            "",
+            "share prompt-prefix KV pages between requests (overrides config): on | off",
+        );
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
     };
@@ -337,6 +342,12 @@ pub fn serve(args: &[String]) -> Result<()> {
     }
     if let Some(b) = parse_kernel(&a)? {
         cfg.kernel_backend = b;
+    }
+    match a.get("prefix-sharing") {
+        None | Some("") => {}
+        Some("on") => cfg.prefix_sharing = true,
+        Some("off") => cfg.prefix_sharing = false,
+        Some(other) => bail!("--prefix-sharing must be on|off, got {other:?}"),
     }
     let model = ServingModel::load(Path::new(&cfg.artifacts_dir))?;
     let engine = Engine::new(model, cfg.clone())?;

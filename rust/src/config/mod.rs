@@ -173,6 +173,10 @@ pub struct EngineConfig {
     /// `scalar` is the reference.  Rejected at load time when the host
     /// cannot run an explicitly requested SIMD backend.
     pub kernel_backend: KernelBackend,
+    /// share sealed prompt pages between same-prefix sequences
+    /// (`[cache] prefix_sharing = off|on`); off reproduces the
+    /// exclusive-ownership cache
+    pub prefix_sharing: bool,
     pub seed: u64,
 }
 
@@ -194,8 +198,19 @@ impl Default for EngineConfig {
             // honor the ISOQUANT_KERNEL process override (the CI matrix
             // forces the backend through it), falling back to auto
             kernel_backend: KernelBackend::from_env_default(),
+            prefix_sharing: false,
             seed: 0x150_0541,
         }
+    }
+}
+
+/// Parse an `off|on` (or bare bool) config value.
+fn parse_switch(v: &Value, what: &str) -> Result<bool> {
+    match v {
+        Value::Bool(b) => Ok(*b),
+        Value::Str(s) if s == "on" => Ok(true),
+        Value::Str(s) if s == "off" => Ok(false),
+        other => bail!("{what} must be off/on, got {other:?}"),
     }
 }
 
@@ -251,6 +266,10 @@ impl EngineConfig {
                     None => bail!("kernel_backend must be scalar/auto/avx2/neon, got {s:?}"),
                 },
                 Some(v) => bail!("kernel_backend must be scalar/auto/avx2/neon, got {v:?}"),
+            },
+            prefix_sharing: match raw.get("cache", "prefix_sharing") {
+                None => d.prefix_sharing,
+                Some(v) => parse_switch(v, "[cache] prefix_sharing")?,
             },
             seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
         })
@@ -365,6 +384,30 @@ bind = "0.0.0.0:9000"
             &RawConfig::parse("[engine]\nkernel_backend = \"neon\"").unwrap(),
         );
         assert_eq!(neon.is_ok(), KernelBackend::Neon.validate().is_ok());
+    }
+
+    #[test]
+    fn prefix_sharing_knob() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert!(!cfg.prefix_sharing, "defaults off");
+        for (text, want) in [
+            ("[cache]\nprefix_sharing = \"on\"", true),
+            ("[cache]\nprefix_sharing = on", true),
+            ("[cache]\nprefix_sharing = true", true),
+            ("[cache]\nprefix_sharing = \"off\"", false),
+            ("[cache]\nprefix_sharing = off", false),
+            ("[cache]\nprefix_sharing = false", false),
+        ] {
+            let cfg = EngineConfig::from_raw(&RawConfig::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.prefix_sharing, want, "{text}");
+        }
+        for text in [
+            "[cache]\nprefix_sharing = 1",
+            "[cache]\nprefix_sharing = \"maybe\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! Dynamic batcher: groups incoming requests into admission batches,
 //! trading a bounded wait (`window`) for fuller batches — the classic
 //! throughput/latency knob of serving systems.
+//!
+//! Drained batches are stable-sorted by prompt so requests sharing a
+//! prefix land in the *same* admission wave: the first of them seals
+//! and publishes the prefix pages, the rest adopt them before pool
+//! pressure could evict the entries.  FIFO order is preserved within a
+//! prefix group (stable sort) and selection into the batch stays FIFO.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -38,7 +44,8 @@ impl Batcher {
 
     /// Returns a batch when (a) `max_batch` requests are waiting, or
     /// (b) the oldest request has waited ≥ `window`.  Otherwise `None`
-    /// (caller keeps decoding and polls again).
+    /// (caller keeps decoding and polls again).  The batch is grouped
+    /// by shared prefix (stable sort by prompt).
     pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
         if self.queue.is_empty() {
             return None;
@@ -46,18 +53,30 @@ impl Batcher {
         let oldest_wait = now.duration_since(self.queue.front().unwrap().1);
         if self.queue.len() >= self.max_batch || oldest_wait >= self.window {
             let n = self.queue.len().min(self.max_batch);
-            Some(self.queue.drain(..n).map(|(r, _)| r).collect())
+            let mut batch: Vec<Request> = self.queue.drain(..n).map(|(r, _)| r).collect();
+            group_by_prefix(&mut batch);
+            Some(batch)
         } else {
             None
         }
     }
 
     /// Pull up to `n` requests immediately (used when lanes free up
-    /// mid-flight — continuous batching does not wait for the window).
+    /// mid-flight — continuous batching does not wait for the window),
+    /// grouped by shared prefix like [`Batcher::poll`].
     pub fn take_up_to(&mut self, n: usize) -> Vec<Request> {
         let n = n.min(self.queue.len());
-        self.queue.drain(..n).map(|(r, _)| r).collect()
+        let mut batch: Vec<Request> = self.queue.drain(..n).map(|(r, _)| r).collect();
+        group_by_prefix(&mut batch);
+        batch
     }
+}
+
+/// Stable-sort a drained batch so shared-prefix prompts sit adjacent
+/// (lexicographic by token ids groups equal prompts and common-prefix
+/// prompts alike); equal prompts keep their FIFO order.
+fn group_by_prefix(batch: &mut [Request]) {
+    batch.sort_by(|a, b| a.prompt.cmp(&b.prompt));
 }
 
 #[cfg(test)]
@@ -105,6 +124,32 @@ mod tests {
         assert_eq!(b.pending(), 3);
         assert_eq!(b.take_up_to(10).len(), 3);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn shared_prefix_requests_grouped_in_batch() {
+        let mut b = Batcher::new(Duration::from_millis(0), 8);
+        let t0 = Instant::now();
+        let mk = |id, prompt: &[i32]| Request {
+            id,
+            prompt: prompt.to_vec(),
+            max_new_tokens: 1,
+        };
+        // interleaved prefix groups; ids record submit order
+        b.submit_at(mk(0, &[9, 9, 1]), t0);
+        b.submit_at(mk(1, &[2, 2]), t0);
+        b.submit_at(mk(2, &[9, 9, 1]), t0);
+        b.submit_at(mk(3, &[9, 9, 5]), t0);
+        b.submit_at(mk(4, &[2, 2]), t0);
+        let ids: Vec<u64> = b.poll(t0).unwrap().iter().map(|r| r.id).collect();
+        // groups adjacent ([2,2] < [9,9,…]), FIFO within each group,
+        // common-prefix prompts ([9,9,1] and [9,9,5]) adjacent too
+        assert_eq!(ids, vec![1, 4, 0, 2, 3]);
+        // take_up_to groups as well
+        b.submit_at(mk(5, &[7]), t0);
+        b.submit_at(mk(6, &[3]), t0);
+        let ids: Vec<u64> = b.take_up_to(2).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![6, 5]);
     }
 
     #[test]

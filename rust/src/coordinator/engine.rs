@@ -37,12 +37,15 @@ struct ActiveSeq {
     req: Request,
     timing: Timing,
     seq: SeqId,
-    /// tokens whose K/V are in the cache
+    /// tokens whose K/V are in the cache (starts at the prefix-reuse
+    /// coverage, not 0, when shared pages were adopted)
     pos: usize,
     generated: Vec<i32>,
     phase: Phase,
     /// token to feed at the next decode step
     last_token: i32,
+    /// pages adopted from the prefix index at admission
+    prefix_hit_pages: usize,
 }
 
 enum Lane {
@@ -85,6 +88,12 @@ pub struct Engine {
     chunk_v: Vec<f32>,
     /// reused (seq, lane) list for the cross-lane gather drain
     lane_jobs: Vec<(SeqId, usize)>,
+    /// backpressure memo: the (available_pages, prefix_index_len)
+    /// snapshot at the last denied admission.  While nothing that could
+    /// change the verdict has moved (every page release, adoption,
+    /// eviction, or publish perturbs one of the two), the per-step
+    /// admit pass skips re-running the O(prompt) prefix probe
+    admit_denied: Option<(usize, usize)>,
     pub stats: EngineStats,
 }
 
@@ -109,6 +118,7 @@ impl Engine {
         let max_pages = (m.serve_batch * m.max_seq.div_ceil(cfg.page_tokens)) * 5 / 4 + 1;
         let mut cache = CacheManager::new(stage1, page_cfg, max_pages);
         cache.parallel = cfg.gather_parallel;
+        cache.prefix_sharing = cfg.prefix_sharing;
         let lanes = (0..m.serve_batch).map(|_| Lane::Free).collect();
         let cache_numel = model.cache_numel();
         let tok_numel = m.n_layers * m.n_heads * m.d_head;
@@ -129,6 +139,7 @@ impl Engine {
             chunk_k: vec![0.0; m.prefill_chunk * tok_numel],
             chunk_v: vec![0.0; m.prefill_chunk * tok_numel],
             lane_jobs: Vec::with_capacity(m.serve_batch),
+            admit_denied: None,
             stats: EngineStats::default(),
         })
     }
@@ -183,6 +194,12 @@ impl Engine {
 
     fn admit(&mut self) -> Result<()> {
         let max_seq = self.model.meta.max_seq;
+        // nothing admission-relevant changed since the last denial:
+        // the head request would be re-denied, so skip the probe
+        let cache_state = (self.cache.available_pages(), self.cache.prefix_index_len());
+        if self.admit_denied == Some(cache_state) {
+            return Ok(());
+        }
         while let Some(free_lane) = self.lanes.iter().position(|l| matches!(l, Lane::Free)) {
             let Some((req, mut timing)) = self.waiting.pop_front() else {
                 break;
@@ -193,28 +210,46 @@ impl Engine {
                     id: req.id,
                     tokens: Vec::new(),
                     prompt_len: req.prompt.len(),
+                    prefix_hit_pages: 0,
                     timing,
                     finish: FinishReason::Rejected,
                 });
                 continue;
             }
-            if !self.cache.can_admit(total) {
-                // backpressure: requeue and stop admitting
+            // prefix-aware admission: only the pages this request needs
+            // *after* index reuse count against the pool, so a burst of
+            // same-prefix requests admits far more lanes
+            if !self.cache.can_admit_prompt(&req.prompt, total) {
+                // backpressure: requeue, stop admitting, and remember
+                // the pool/index snapshot so the probe isn't re-run
+                // every step while nothing changes
                 self.waiting.push_front((req, timing));
+                self.admit_denied =
+                    Some((self.cache.available_pages(), self.cache.prefix_index_len()));
                 break;
             }
             let seq = self.next_seq;
             self.next_seq += 1;
-            self.cache.start_seq(seq)?;
+            // prefix-hit accounting lives in cache.share (single source
+            // of truth); the per-request count rides on the completion
+            let reuse = self.cache.start_seq_with_prompt(seq, &req.prompt)?;
+            self.admit_denied = None;
             timing.admitted = Some(Instant::now());
+            // adopted tokens are already cached; prefill resumes after
+            // them.  Keep ≥ 1 prompt token to run so the first generated
+            // token's logits exist — on a full-prefix hit the last
+            // prompt token is recomputed (its cache slot is masked by
+            // pos0) and its append is skipped.
+            let consumed = reuse.tokens.min(req.prompt.len() - 1);
             self.lanes[free_lane] = Lane::Active(Box::new(ActiveSeq {
                 last_token: *req.prompt.first().unwrap(),
                 req,
                 timing,
                 seq,
-                pos: 0,
+                pos: reuse.tokens,
                 generated: Vec::new(),
-                phase: Phase::Prefill { consumed: 0 },
+                phase: Phase::Prefill { consumed },
+                prefix_hit_pages: reuse.pages,
             }));
         }
         Ok(())
@@ -265,12 +300,14 @@ impl Engine {
         Ok(())
     }
 
-    /// Stage tokens `0..c` of a `(L, B, H, P, dh)` prefill chunk for
+    /// Stage tokens `skip..c` of a `(L, B, H, P, dh)` prefill chunk for
     /// batch lane `lane` into the persistent run buffers (token-major
     /// `[t][layer][head][dh]`, the batch-encode input layout) and append
     /// them in one [`CacheManager::append_run`] call — the whole
-    /// chunk's `c × L × H` vectors per side go through a single
-    /// `encode_batch`.
+    /// chunk's `(c - skip) × L × H` vectors per side go through a single
+    /// `encode_batch`.  `skip` > 0 only on a full-prefix hit, where the
+    /// chunk's leading token(s) are already cached in adopted pages and
+    /// must not be appended again.
     fn append_chunk_run(
         &mut self,
         seq: SeqId,
@@ -279,18 +316,20 @@ impl Engine {
         v_chunk: &[f32],
         p: usize,
         c: usize,
+        skip: usize,
     ) -> Result<()> {
         let m = &self.model.meta;
         let (l, b, h, dh) = (m.n_layers, m.serve_batch, m.n_heads, m.d_head);
-        debug_assert!(c <= p);
+        debug_assert!(skip <= c && c <= p);
         debug_assert_eq!(k_chunk.len(), l * b * h * p * dh);
-        debug_assert!(self.chunk_k.len() >= c * l * h * dh);
+        let n = c - skip;
+        debug_assert!(self.chunk_k.len() >= n * l * h * dh);
         for layer in 0..l {
             for head in 0..h {
                 let src0 = (((layer * b) + lane) * h + head) * p;
                 let dst0 = (layer * h + head) * dh;
-                for j in 0..c {
-                    let src = (src0 + j) * dh;
+                for j in 0..n {
+                    let src = (src0 + skip + j) * dh;
                     let dst = j * l * h * dh + dst0;
                     self.chunk_k[dst..dst + dh].copy_from_slice(&k_chunk[src..src + dh]);
                     self.chunk_v[dst..dst + dh].copy_from_slice(&v_chunk[src..src + dh]);
@@ -300,14 +339,14 @@ impl Engine {
         let t0 = Instant::now();
         self.cache.append_run(
             seq,
-            &self.chunk_k[..c * l * h * dh],
-            &self.chunk_v[..c * l * h * dh],
-            c,
+            &self.chunk_k[..n * l * h * dh],
+            &self.chunk_v[..n * l * h * dh],
+            n,
         )?;
         self.stats.append.record(t0.elapsed());
         let (cb, ub) = self.cache.slot_bytes();
-        Counters::bump(&self.stats.counters.bytes_compressed, (cb * c) as u64);
-        Counters::bump(&self.stats.counters.bytes_uncompressed, (ub * c) as u64);
+        Counters::bump(&self.stats.counters.bytes_compressed, (cb * n) as u64);
+        Counters::bump(&self.stats.counters.bytes_uncompressed, (ub * n) as u64);
         Ok(())
     }
 
@@ -361,7 +400,11 @@ impl Engine {
                     for j in 0..c {
                         toks[lane * p + j] = a.req.prompt[consumed + j];
                     }
-                    pos0[lane] = a.pos as i32;
+                    // chunk positions start at `consumed`, which can
+                    // trail `pos` by one on a full-prefix hit; the
+                    // artifact masks cache slots ≥ pos0, so the
+                    // recomputed token never double-attends itself
+                    pos0[lane] = consumed as i32;
                     chunk_len[lane] = c;
                 }
             }
@@ -377,20 +420,25 @@ impl Engine {
             if c == 0 {
                 continue;
             }
-            let (seq, consumed) = match &self.lanes[lane] {
+            let (seq, consumed, pos) = match &self.lanes[lane] {
                 Lane::Active(a) => match a.phase {
-                    Phase::Prefill { consumed } => (a.seq, consumed),
+                    Phase::Prefill { consumed } => (a.seq, consumed, a.pos),
                     _ => unreachable!(),
                 },
                 _ => unreachable!(),
             };
-            self.append_chunk_run(seq, lane, &out.k_new, &out.v_new, p, c)?;
+            // tokens already cached by prefix adoption (pos > consumed
+            // only on a full-prefix hit) are recomputed for their
+            // logits but not re-appended
+            let skip = pos - consumed;
+            debug_assert!(skip <= c);
+            self.append_chunk_run(seq, lane, &out.k_new, &out.v_new, p, c, skip)?;
             Counters::bump(&self.stats.counters.tokens_prefilled, c as u64);
             let a = match &mut self.lanes[lane] {
                 Lane::Active(a) => a,
                 _ => unreachable!(),
             };
-            a.pos += c;
+            a.pos += c - skip;
             let done = consumed + c >= a.req.prompt.len();
             if done {
                 // sample the first generated token from the logits at the
@@ -484,9 +532,31 @@ impl Engine {
                 id: a.req.id,
                 tokens: a.generated,
                 prompt_len: a.req.prompt.len(),
+                prefix_hit_pages: a.prefix_hit_pages,
                 timing: a.timing,
                 finish: reason,
             });
         }
+    }
+
+    /// One-line serving snapshot for the periodic server stats log:
+    /// page-pool residency (live/cached/high-water, shared vs
+    /// exclusive), prefix-sharing activity, and throughput counters.
+    pub fn stats_line(&self) -> String {
+        let c = &self.stats.counters;
+        format!(
+            "pages: live={} cached={} hw={}/{} shared={} excl={} | {} | req={} tok={}p+{}d kv={:.1}x",
+            self.cache.live_pages(),
+            self.cache.cached_pages(),
+            self.cache.high_water_pages(),
+            self.cache.page_capacity(),
+            self.cache.shared_pages(),
+            self.cache.exclusive_pages(),
+            self.cache.share.summary(),
+            Counters::get(&c.requests),
+            Counters::get(&c.tokens_prefilled),
+            Counters::get(&c.tokens_decoded),
+            c.compression_ratio(),
+        )
     }
 }

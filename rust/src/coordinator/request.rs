@@ -57,6 +57,9 @@ pub struct Completion {
     pub id: RequestId,
     pub tokens: Vec<i32>,
     pub prompt_len: usize,
+    /// whole KV pages adopted from the prefix index at admission (0
+    /// with prefix sharing off or on a cold prefix)
+    pub prefix_hit_pages: usize,
     pub timing: Timing,
     /// why generation stopped
     pub finish: FinishReason,

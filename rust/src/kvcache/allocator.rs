@@ -1,6 +1,14 @@
 //! Pooled page allocator with a hard capacity — the backpressure point
 //! of the serving engine (a full pool rejects admission rather than
 //! OOMing mid-decode).
+//!
+//! Pages are **refcounted** so sealed prefix pages can be shared between
+//! sequences: `alloc` hands out a page with refcount 1, [`PageAllocator::retain`]
+//! adds an owner, [`PageAllocator::release`] is a pure decref (it does
+//! *not* recycle the page), and [`PageAllocator::free`] returns a
+//! zero-ref page to the pool.  The split lets the cache manager keep
+//! zero-ref *indexed* pages resident (evictable prefix cache) instead of
+//! recycling them immediately.
 
 use anyhow::{bail, Result};
 
@@ -12,8 +20,13 @@ pub type PageId = u32;
 pub struct PageAllocator {
     cfg: PageConfig,
     pages: Vec<Page>,
+    /// parallel to `pages`: current owner count (0 = free-listed or
+    /// resident in the zero-ref prefix cache)
+    refs: Vec<u32>,
     free: Vec<PageId>,
     max_pages: usize,
+    /// most pages ever simultaneously resident (serve stats line)
+    high_water: usize,
 }
 
 impl PageAllocator {
@@ -21,8 +34,10 @@ impl PageAllocator {
         PageAllocator {
             cfg,
             pages: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             max_pages,
+            high_water: 0,
         }
     }
 
@@ -30,6 +45,8 @@ impl PageAllocator {
         &self.cfg
     }
 
+    /// Pages resident outside the free list (includes zero-ref pages the
+    /// prefix cache is keeping warm).
     pub fn allocated(&self) -> usize {
         self.pages.len() - self.free.len()
     }
@@ -47,25 +64,65 @@ impl PageAllocator {
         self.free_count() >= n
     }
 
+    /// Allocate an open page with refcount 1.
     pub fn alloc(&mut self) -> Result<PageId> {
-        if let Some(id) = self.free.pop() {
+        let id = if let Some(id) = self.free.pop() {
+            debug_assert_eq!(self.refs[id as usize], 0, "free-listed page had owners");
             self.pages[id as usize].clear();
-            return Ok(id);
-        }
-        if self.pages.len() >= self.max_pages {
-            bail!(
-                "KV page pool exhausted ({} pages in use)",
-                self.pages.len()
-            );
-        }
-        self.pages.push(Page::new(&self.cfg));
-        Ok((self.pages.len() - 1) as PageId)
+            self.refs[id as usize] = 1;
+            id
+        } else {
+            if self.pages.len() >= self.max_pages {
+                bail!(
+                    "KV page pool exhausted ({} pages in use)",
+                    self.pages.len()
+                );
+            }
+            self.pages.push(Page::new(&self.cfg));
+            self.refs.push(1);
+            (self.pages.len() - 1) as PageId
+        };
+        self.high_water = self.high_water.max(self.allocated());
+        Ok(id)
     }
 
-    pub fn release(&mut self, id: PageId) {
+    /// Add an owner to a resident page (prefix-index adoption; a 0→1
+    /// transition revives a page from the zero-ref cache).
+    pub fn retain(&mut self, id: PageId) {
         debug_assert!((id as usize) < self.pages.len());
+        debug_assert!(
+            !self.free.contains(&id),
+            "retain of free-listed page {id}"
+        );
+        self.refs[id as usize] += 1;
+    }
+
+    /// Drop one owner; returns the remaining refcount.  The page is NOT
+    /// recycled — at zero the caller decides between [`PageAllocator::free`]
+    /// (recycle) and keeping it resident as a zero-ref prefix page.
+    pub fn release(&mut self, id: PageId) -> u32 {
+        debug_assert!((id as usize) < self.pages.len());
+        debug_assert!(
+            self.refs[id as usize] > 0,
+            "double free: release of zero-ref page {id}"
+        );
+        self.refs[id as usize] -= 1;
+        self.refs[id as usize]
+    }
+
+    /// Return a zero-ref page to the free pool.
+    pub fn free(&mut self, id: PageId) {
+        debug_assert!((id as usize) < self.pages.len());
+        debug_assert_eq!(
+            self.refs[id as usize], 0,
+            "freeing page {id} that still has owners"
+        );
         debug_assert!(!self.free.contains(&id), "double free of page {id}");
         self.free.push(id);
+    }
+
+    pub fn refcount(&self, id: PageId) -> u32 {
+        self.refs[id as usize]
     }
 
     pub fn page(&self, id: PageId) -> &Page {
@@ -76,9 +133,45 @@ impl PageAllocator {
         &mut self.pages[id as usize]
     }
 
+    /// Copy `src`'s bytes into `dst` (copy-on-write of a shared tail).
+    /// Seal state is NOT copied: the destination stays open.
+    pub fn copy_page(&mut self, src: PageId, dst: PageId) {
+        assert_ne!(src, dst, "copy_page onto itself");
+        let (s, d) = (src as usize, dst as usize);
+        let (lo, hi) = self.pages.split_at_mut(s.max(d));
+        if s < d {
+            hi[0].data.copy_from_slice(&lo[s].data);
+        } else {
+            lo[d].data.copy_from_slice(&hi[0].data);
+        }
+    }
+
     /// Bytes currently resident (all touched pages, free or not).
     pub fn resident_bytes(&self) -> usize {
         self.pages.len() * self.cfg.page_bytes()
+    }
+
+    // -- stats for the serve stats line --------------------------------
+
+    /// Most pages ever simultaneously resident.
+    pub fn high_water_pages(&self) -> usize {
+        self.high_water
+    }
+
+    /// Pages owned by 2+ sequences (shared prefix residency).
+    pub fn shared_pages(&self) -> usize {
+        self.refs.iter().filter(|&&r| r >= 2).count()
+    }
+
+    /// Pages owned by exactly one sequence.
+    pub fn exclusive_pages(&self) -> usize {
+        self.refs.iter().filter(|&&r| r == 1).count()
+    }
+
+    /// Total owner count across all pages (0 ⇔ no sequence holds any
+    /// page — the leak check of the property tests).
+    pub fn live_refs(&self) -> u64 {
+        self.refs.iter().map(|&r| r as u64).sum()
     }
 }
 
@@ -106,7 +199,8 @@ mod tests {
         let p1 = a.alloc().unwrap();
         assert_eq!(a.allocated(), 2);
         assert!(a.alloc().is_err(), "pool must enforce capacity");
-        a.release(p0);
+        assert_eq!(a.release(p0), 0);
+        a.free(p0);
         assert_eq!(a.allocated(), 1);
         let p2 = a.alloc().unwrap();
         assert_eq!(p2, p0, "freed page is reused");
@@ -118,9 +212,12 @@ mod tests {
         let mut a = mk(1);
         let p = a.alloc().unwrap();
         a.page_mut(p).data.fill(0xAB);
-        a.release(p);
+        a.page_mut(p).seal(None);
+        assert_eq!(a.release(p), 0);
+        a.free(p);
         let p2 = a.alloc().unwrap();
         assert!(a.page(p2).data.iter().all(|&b| b == 0));
+        assert!(!a.page(p2).is_sealed(), "reuse must reopen the page");
     }
 
     #[test]
@@ -130,5 +227,70 @@ mod tests {
         let _p = a.alloc().unwrap();
         assert!(a.can_alloc(2));
         assert!(!a.can_alloc(3));
+    }
+
+    #[test]
+    fn refcounts_and_stats() {
+        let mut a = mk(4);
+        let p0 = a.alloc().unwrap();
+        let p1 = a.alloc().unwrap();
+        assert_eq!(a.refcount(p0), 1);
+        a.retain(p0); // second owner
+        assert_eq!(a.refcount(p0), 2);
+        assert_eq!(a.shared_pages(), 1);
+        assert_eq!(a.exclusive_pages(), 1);
+        assert_eq!(a.live_refs(), 3);
+        assert_eq!(a.release(p0), 1, "release is a pure decref");
+        assert_eq!(a.allocated(), 2, "page stays resident while owned");
+        assert_eq!(a.release(p0), 0);
+        a.free(p0);
+        assert_eq!(a.release(p1), 0);
+        a.free(p1);
+        assert_eq!(a.live_refs(), 0);
+        assert_eq!(a.high_water_pages(), 2);
+    }
+
+    #[test]
+    fn zero_ref_page_stays_resident_until_freed() {
+        let mut a = mk(2);
+        let p0 = a.alloc().unwrap();
+        a.page_mut(p0).data.fill(0x5A);
+        assert_eq!(a.release(p0), 0);
+        // not freed: bytes survive and the pool slot stays occupied
+        assert_eq!(a.allocated(), 1);
+        assert!(a.page(p0).data.iter().all(|&b| b == 0x5A));
+        // revive: 0 → 1
+        a.retain(p0);
+        assert_eq!(a.refcount(p0), 1);
+        assert_eq!(a.release(p0), 0);
+        a.free(p0);
+        assert_eq!(a.allocated(), 0);
+    }
+
+    #[test]
+    fn copy_page_copies_bytes_not_seal() {
+        let mut a = mk(3);
+        let src = a.alloc().unwrap();
+        let dst = a.alloc().unwrap();
+        a.page_mut(src).data.fill(0x7E);
+        a.page_mut(src).seal(None);
+        a.copy_page(src, dst);
+        assert!(a.page(dst).data.iter().all(|&b| b == 0x7E));
+        assert!(!a.page(dst).is_sealed(), "CoW copy must stay open");
+        // and the reverse direction
+        let third = a.alloc().unwrap();
+        a.page_mut(third).data.fill(0x11);
+        a.copy_page(third, src);
+        assert!(a.page(src).data.iter().all(|&b| b == 0x11));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double free")]
+    fn double_release_asserts() {
+        let mut a = mk(1);
+        let p = a.alloc().unwrap();
+        a.release(p);
+        a.release(p); // refcount already 0 → debug assert
     }
 }

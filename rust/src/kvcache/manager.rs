@@ -28,13 +28,21 @@
 //! The pre-batch per-vector path survives as
 //! [`CacheManager::gather_reference`]: the property-test oracle and the
 //! bench baseline (`benches/gather_throughput.rs`).
+//!
+//! With `prefix_sharing` on, page ownership is refcounted and sealed
+//! prompt pages are shared between same-prefix sequences through the
+//! [`super::prefix::PrefixIndex`] — see the `kvcache` module docs for
+//! the sealed/open/CoW invariants.  All gather paths are read-only and
+//! unaffected by sharing.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
 use super::allocator::{PageAllocator, PageId};
-use super::page::PageConfig;
+use super::page::{chain_key, PageConfig, PrefixKey};
+use super::prefix::PrefixIndex;
+use crate::metrics::ShareStats;
 use crate::quant::{BatchScratch, PackedSink, Stage1};
 use crate::util::pool::{scope_units, ParallelPolicy};
 
@@ -51,10 +59,49 @@ const MIN_PARALLEL_VECTORS: usize = 512;
 struct SeqCache {
     pages: Vec<PageId>,
     len: usize,
+    /// the prompt's token ids (prefix sharing only) — published index
+    /// entries carry the exact token run they cover, so lookups verify
+    /// content rather than trusting a 64-bit hash
+    prompt: Vec<i32>,
+    /// chain keys of the prompt's full pages (prefix sharing only; set
+    /// by [`CacheManager::start_seq_with_prompt`]) — page `i` of the
+    /// sequence, once full, seals under `prompt_keys[i]`
+    prompt_keys: Vec<PrefixKey>,
+    /// chain key of the prompt's partial last page, if any
+    tail_key: Option<PrefixKey>,
+    /// how many leading tokens of this sequence are prompt tokens (0
+    /// when admitted without a prompt, or with sharing off)
+    prompt_len: usize,
     /// optional uncompressed shadow copy (fidelity experiments):
     /// layout [layer][head][token][dh], appended per token
     shadow_k: Vec<f32>,
     shadow_v: Vec<f32>,
+}
+
+/// What prefix-index adoption contributed to a newly admitted sequence.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixReuse {
+    /// whole sealed pages adopted from the index
+    pub pages: usize,
+    /// prompt tokens those pages cover (already cached — prefill can
+    /// skip them)
+    pub tokens: usize,
+}
+
+/// Read-only result of walking the prefix index over a prompt.
+#[derive(Default)]
+struct PrefixProbe {
+    /// adoptable pages, in sequence order (full pages, then possibly
+    /// the sealed partial tail)
+    pages: Vec<PageId>,
+    /// how many of those are hits on *full* prompt pages (a tail hit is
+    /// excluded: its copy-on-write replacement still costs a fresh page)
+    full_hits: usize,
+    /// prompt tokens the adoptable pages cover
+    tokens: usize,
+    /// hits that are currently zero-ref cached — adopting them consumes
+    /// pages the admission math would otherwise count as evictable
+    cached_hits: usize,
 }
 
 /// Persistent scratch for the batched gather path: one decode scratch
@@ -81,6 +128,12 @@ pub struct CacheManager {
     alloc: PageAllocator,
     stage1: Stage1,
     seqs: HashMap<SeqId, SeqCache>,
+    /// content-addressed index of sealed prompt pages
+    prefix: PrefixIndex,
+    /// chain-hash salt: stage-1 config fingerprint mixed with the page
+    /// geometry, so caches with different encodings or layouts never
+    /// share pages
+    fingerprint: u64,
     /// persistent encode sink for appends (K batch, then V batch)
     sink: PackedSink,
     /// threading policy for the strip-parallel gather path
@@ -88,19 +141,36 @@ pub struct CacheManager {
     /// keep an uncompressed shadow (for fidelity measurement only; off on
     /// the real serving path)
     pub keep_shadow: bool,
+    /// share sealed prompt pages between sequences (`[cache]
+    /// prefix_sharing`); off reproduces the exclusive-ownership cache
+    pub prefix_sharing: bool,
+    /// prefix-sharing accounting (hits, CoW copies, bytes deduplicated)
+    pub share: ShareStats,
 }
 
 impl CacheManager {
     pub fn new(stage1: Stage1, page_cfg: PageConfig, max_pages: usize) -> CacheManager {
         assert_eq!(stage1.d(), page_cfg.d_head);
         assert_eq!(stage1.encoded_len(), page_cfg.encoded_len);
+        let mut fingerprint = stage1.cfg.fingerprint();
+        for v in [
+            page_cfg.tokens_per_page,
+            page_cfg.n_layers,
+            page_cfg.n_heads,
+        ] {
+            fingerprint = crate::util::prng::mix64(fingerprint, v as u64);
+        }
         CacheManager {
             alloc: PageAllocator::new(page_cfg, max_pages),
             stage1,
             seqs: HashMap::new(),
+            prefix: PrefixIndex::new(),
+            fingerprint,
             sink: PackedSink::new(),
             parallel: ParallelPolicy::Off,
             keep_shadow: false,
+            prefix_sharing: false,
+            share: ShareStats::default(),
         }
     }
 
@@ -120,8 +190,56 @@ impl CacheManager {
         self.seqs.len()
     }
 
+    /// Pages resident outside the free pool — includes zero-ref pages
+    /// the prefix index keeps warm (see [`CacheManager::live_pages`]).
     pub fn pages_in_use(&self) -> usize {
         self.alloc.allocated()
+    }
+
+    /// Pages owned by at least one live sequence.
+    pub fn live_pages(&self) -> usize {
+        self.alloc.allocated() - self.prefix.cached_len()
+    }
+
+    /// Zero-ref sealed pages the prefix index keeps resident (evictable).
+    pub fn cached_pages(&self) -> usize {
+        self.prefix.cached_len()
+    }
+
+    pub fn high_water_pages(&self) -> usize {
+        self.alloc.high_water_pages()
+    }
+
+    /// Hard pool capacity in pages.
+    pub fn page_capacity(&self) -> usize {
+        self.alloc.capacity()
+    }
+
+    /// Pages shared by 2+ sequences.
+    pub fn shared_pages(&self) -> usize {
+        self.alloc.shared_pages()
+    }
+
+    /// Pages owned by exactly one sequence.
+    pub fn exclusive_pages(&self) -> usize {
+        self.alloc.exclusive_pages()
+    }
+
+    /// Total page ownerships across all sequences (0 ⇔ every sequence
+    /// dropped returned its pages).
+    pub fn live_refs(&self) -> u64 {
+        self.alloc.live_refs()
+    }
+
+    /// Prefix-index entries (sealed prompt pages addressable by content).
+    pub fn prefix_index_len(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Pages a new allocation could draw on: the free pool plus
+    /// zero-ref cached pages (evictable on demand).
+    pub fn available_pages(&self) -> usize {
+        self.alloc.free_count() + self.prefix.cached_len()
     }
 
     /// Pages needed to grow a sequence to `new_len` tokens.
@@ -132,10 +250,28 @@ impl CacheManager {
         need.saturating_sub(have)
     }
 
-    /// Admission check for a new sequence of `prompt_len` + `gen_len`.
+    /// Admission check for a new sequence of `prompt_len` + `gen_len`
+    /// with an unknown prompt (no prefix reuse assumed).
     pub fn can_admit(&self, total_len: usize) -> bool {
         let tp = self.alloc.cfg().tokens_per_page;
-        self.alloc.can_alloc(total_len.div_ceil(tp))
+        self.available_pages() >= total_len.div_ceil(tp)
+    }
+
+    /// Prefix-aware admission: whether a request with this prompt and
+    /// `total_len` = prompt + generation budget fits, counting only the
+    /// *new* pages it needs after index reuse.  A burst of same-prefix
+    /// requests therefore admits far more lanes than raw
+    /// `pages_needed(total_len)` math would.
+    pub fn can_admit_prompt(&self, prompt: &[i32], total_len: usize) -> bool {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let pages_total = total_len.div_ceil(tp);
+        let probe = self.probe_prefix(prompt);
+        // adopted full pages need no allocation; an adopted tail still
+        // costs its copy-on-write replacement, so it is not subtracted
+        let needed = pages_total.saturating_sub(probe.full_hits);
+        // pages we are about to adopt are no longer evictable headroom
+        let evictable = self.prefix.cached_len() - probe.cached_hits;
+        self.alloc.free_count() + evictable >= needed
     }
 
     pub fn start_seq(&mut self, seq: SeqId) -> Result<()> {
@@ -146,10 +282,219 @@ impl CacheManager {
         Ok(())
     }
 
+    /// Start a sequence for a known prompt: walk the prefix index,
+    /// adopt every sealed page whose chained content key matches a
+    /// leading run of `prompt` (whole full pages, plus the sealed
+    /// partial tail on a complete-prefix hit), and record the chain keys
+    /// so this sequence's own prompt pages seal-and-publish as they
+    /// fill.  Adopted tokens are already cached: prefill can skip them
+    /// (the engine starts at `PrefixReuse::tokens`).
+    ///
+    /// With `prefix_sharing` off this is exactly [`CacheManager::start_seq`].
+    pub fn start_seq_with_prompt(&mut self, seq: SeqId, prompt: &[i32]) -> Result<PrefixReuse> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already exists");
+        }
+        let mut sc = SeqCache::default();
+        let mut reuse = PrefixReuse::default();
+        if self.prefix_sharing && !prompt.is_empty() {
+            let (keys, tail) = self.prompt_chain(prompt);
+            let probe = self.probe_prefix_with(prompt, &keys, tail);
+            for &p in &probe.pages {
+                self.prefix.on_adopt(p);
+                self.alloc.retain(p);
+            }
+            reuse = PrefixReuse {
+                pages: probe.pages.len(),
+                tokens: probe.tokens,
+            };
+            sc.pages = probe.pages;
+            sc.len = probe.tokens;
+            sc.prompt = prompt.to_vec();
+            sc.prompt_keys = keys;
+            sc.tail_key = tail;
+            sc.prompt_len = prompt.len();
+            self.share.prefix_hit_pages += reuse.pages as u64;
+            self.share.prefix_hit_tokens += reuse.tokens as u64;
+            // dedup credit counts whole shared pages only: an adopted
+            // tail still costs its CoW replacement (same reasoning as
+            // the admission math)
+            self.share.bytes_deduped +=
+                (probe.full_hits * self.alloc.cfg().page_bytes()) as u64;
+        }
+        self.seqs.insert(seq, sc);
+        Ok(reuse)
+    }
+
     pub fn drop_seq(&mut self, seq: SeqId) {
         if let Some(s) = self.seqs.remove(&seq) {
             for p in s.pages {
-                self.alloc.release(p);
+                self.release_page(p);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // prefix-sharing internals
+    // ------------------------------------------------------------------
+
+    /// Chain keys over a prompt: one key per full page of tokens, plus
+    /// the partial-tail key when the prompt ends mid-page.
+    fn prompt_chain(&self, prompt: &[i32]) -> (Vec<PrefixKey>, Option<PrefixKey>) {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let n_full = prompt.len() / tp;
+        let mut keys = Vec::with_capacity(n_full);
+        let mut parent = None;
+        for i in 0..n_full {
+            let k = chain_key(parent, &prompt[i * tp..(i + 1) * tp], self.fingerprint);
+            keys.push(k);
+            parent = Some(k);
+        }
+        let rem = prompt.len() % tp;
+        let tail =
+            (rem > 0).then(|| chain_key(parent, &prompt[n_full * tp..], self.fingerprint));
+        (keys, tail)
+    }
+
+    /// [`CacheManager::probe_prefix_with`] computing the chain itself
+    /// (admission-check path; `start_seq_with_prompt` reuses its own
+    /// chain to avoid hashing the prompt twice).
+    fn probe_prefix(&self, prompt: &[i32]) -> PrefixProbe {
+        if !self.prefix_sharing || prompt.is_empty() {
+            return PrefixProbe::default();
+        }
+        let (keys, tail) = self.prompt_chain(prompt);
+        self.probe_prefix_with(prompt, &keys, tail)
+    }
+
+    /// Read-only index walk: which leading pages of `prompt` are
+    /// adoptable right now.  Stops at the first miss; the partial tail
+    /// only counts when every full page hit (pages adopt in prefix
+    /// order or not at all).  Every lookup is token-verified — a key
+    /// collision reads as a miss, never as another prompt's pages.
+    fn probe_prefix_with(
+        &self,
+        prompt: &[i32],
+        keys: &[PrefixKey],
+        tail: Option<PrefixKey>,
+    ) -> PrefixProbe {
+        let mut probe = PrefixProbe::default();
+        if !self.prefix_sharing || prompt.is_empty() {
+            return probe;
+        }
+        let tp = self.alloc.cfg().tokens_per_page;
+        for (i, &key) in keys.iter().enumerate() {
+            let parent = if i > 0 { Some(keys[i - 1]) } else { None };
+            let run = &prompt[i * tp..(i + 1) * tp];
+            let Some(p) = self.prefix.lookup(key, parent, run) else {
+                return probe;
+            };
+            debug_assert!(self.alloc.page(p).is_sealed());
+            if self.alloc.refcount(p) == 0 {
+                probe.cached_hits += 1;
+            }
+            probe.pages.push(p);
+            probe.full_hits += 1;
+            probe.tokens += tp;
+        }
+        if let Some(key) = tail {
+            let parent = keys.last().copied();
+            let run = &prompt[keys.len() * tp..];
+            if let Some(p) = self.prefix.lookup(key, parent, run) {
+                debug_assert!(self.alloc.page(p).is_sealed());
+                if self.alloc.refcount(p) == 0 {
+                    probe.cached_hits += 1;
+                }
+                probe.pages.push(p);
+                probe.tokens = prompt.len();
+            }
+        }
+        probe
+    }
+
+    /// Drop one ownership of `p`.  At zero refs an indexed page is
+    /// parked in the zero-ref prefix cache (still resident, adoptable,
+    /// evictable); anything else returns to the free pool.
+    fn release_page(&mut self, p: PageId) {
+        if self.alloc.release(p) == 0 {
+            let key = self.alloc.page(p).key();
+            match key {
+                Some(k) if self.prefix.is_indexed(k, p) => self.prefix.cache_zero_ref(p, k),
+                _ => self.alloc.free(p),
+            }
+        }
+    }
+
+    /// Allocate a page, evicting zero-ref prefix-cache entries (LRU)
+    /// under pool pressure.
+    fn alloc_page(&mut self) -> Result<PageId> {
+        loop {
+            match self.alloc.alloc() {
+                Ok(p) => return Ok(p),
+                Err(e) => match self.prefix.evict_lru() {
+                    Some(victim) => {
+                        self.alloc.free(victim);
+                        self.share.pages_evicted += 1;
+                    }
+                    None => return Err(e),
+                },
+            }
+        }
+    }
+
+    /// Seal (and, for prompt pages, publish) every page whose content
+    /// became final during an append that grew the sequence from
+    /// `start_len` to its current length: pages that filled completely,
+    /// plus the partial tail the moment the prompt completes mid-page.
+    fn seal_after_append(&mut self, seq: SeqId, start_len: usize) {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let (len, prompt_len) = {
+            let s = self.seqs.get(&seq).unwrap();
+            (s.len, s.prompt_len)
+        };
+        for pi in start_len / tp..len / tp {
+            let (page_id, key, parent, run) = {
+                let s = self.seqs.get(&seq).unwrap();
+                let key = if self.prefix_sharing && (pi + 1) * tp <= prompt_len {
+                    s.prompt_keys.get(pi).copied()
+                } else {
+                    None
+                };
+                let parent = if pi > 0 {
+                    s.prompt_keys.get(pi - 1).copied()
+                } else {
+                    None
+                };
+                let run = key.map(|_| s.prompt[pi * tp..(pi + 1) * tp].to_vec());
+                (s.pages[pi], key, parent, run)
+            };
+            if self.alloc.page(page_id).is_sealed() {
+                continue; // adopted pages arrive sealed
+            }
+            self.alloc.page_mut(page_id).seal(key);
+            if let (Some(k), Some(run)) = (key, run) {
+                if self.prefix.publish(k, page_id, parent, &run) {
+                    self.share.pages_published += 1;
+                }
+            }
+        }
+        if self.prefix_sharing && prompt_len > 0 && len == prompt_len && len % tp != 0 {
+            let (page_id, tail_key, parent, run) = {
+                let s = self.seqs.get(&seq).unwrap();
+                (
+                    *s.pages.last().unwrap(),
+                    s.tail_key,
+                    s.prompt_keys.last().copied(),
+                    s.prompt[(prompt_len / tp) * tp..].to_vec(),
+                )
+            };
+            if let Some(k) = tail_key {
+                if !self.alloc.page(page_id).is_sealed() {
+                    self.alloc.page_mut(page_id).seal(Some(k));
+                    if self.prefix.publish(k, page_id, parent, &run) {
+                        self.share.pages_published += 1;
+                    }
+                }
             }
         }
     }
@@ -171,7 +516,10 @@ impl CacheManager {
     /// appends it here instead of looping `append_token`.
     ///
     /// Pages are reserved up front, so failure (pool exhaustion or an
-    /// unknown sequence) leaves the sequence unchanged.
+    /// unknown sequence) leaves the sequence unchanged.  If the
+    /// sequence's tail page is sealed (an adopted shared prompt tail,
+    /// or its own published one), it is copy-on-write replaced before
+    /// any slot is written — sealed pages are immutable.
     pub fn append_run(
         &mut self,
         seq: SeqId,
@@ -198,18 +546,40 @@ impl CacheManager {
             let s = self.seqs.get(&seq).context("unknown sequence")?;
             (s.len, s.pages.len())
         };
-        let need = (start_len + n_tokens).div_ceil(tp).saturating_sub(have_pages);
+        // a partially-filled sealed tail must be CoW-copied before this
+        // run appends into it (costs one extra fresh page)
+        let cow_src = if start_len % tp != 0 {
+            let last = *self.seqs.get(&seq).unwrap().pages.last().unwrap();
+            debug_assert!(
+                self.alloc.page(last).is_sealed() || self.alloc.refcount(last) == 1,
+                "open tail must be exclusively owned"
+            );
+            self.alloc.page(last).is_sealed().then_some(last)
+        } else {
+            None
+        };
+        let need = (start_len + n_tokens).div_ceil(tp).saturating_sub(have_pages)
+            + cow_src.is_some() as usize;
         let mut fresh: Vec<PageId> = Vec::with_capacity(need);
         for _ in 0..need {
-            match self.alloc.alloc() {
+            match self.alloc_page() {
                 Ok(p) => fresh.push(p),
                 Err(e) => {
                     for p in fresh {
-                        self.alloc.release(p);
+                        let remaining = self.alloc.release(p);
+                        debug_assert_eq!(remaining, 0, "fresh page had extra owners");
+                        self.alloc.free(p);
                     }
                     return Err(e);
                 }
             }
+        }
+        if let Some(old) = cow_src {
+            let dst = fresh.pop().unwrap();
+            self.alloc.copy_page(old, dst);
+            *self.seqs.get_mut(&seq).unwrap().pages.last_mut().unwrap() = dst;
+            self.release_page(old);
+            self.share.cow_copies += 1;
         }
         self.seqs.get_mut(&seq).unwrap().pages.extend(fresh);
 
@@ -237,6 +607,7 @@ impl CacheManager {
             s.shadow_k.extend_from_slice(k_run);
             s.shadow_v.extend_from_slice(v_run);
         }
+        self.seal_after_append(seq, start_len);
         Ok(())
     }
 
@@ -978,6 +1349,288 @@ mod tests {
         m.drop_seq(1);
         // seq 2 still readable after seq 1 dropped
         assert!(m.gather(2, t_max, &mut b, &mut tmp).is_ok());
+    }
+
+    /// Deterministic per-token K/V (stands in for the model: same
+    /// prefix → same vectors), so shared pages must be byte-identical
+    /// to freshly encoded ones.
+    fn token_stream(seed: u64, n: usize, cfg: &PageConfig) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| token(&mut rng, cfg)).collect()
+    }
+
+    fn gather_pair(m: &CacheManager, seq: SeqId, t_max: usize) -> (Vec<f32>, Vec<f32>) {
+        let cfg = m.page_cfg();
+        let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+        let (mut k, mut v) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        m.gather(seq, t_max, &mut k, &mut v).unwrap();
+        (k, v)
+    }
+
+    #[test]
+    fn prefix_sharing_adopts_pages_and_stays_bit_exact() {
+        // tp = 4; prompt of 10 = 2 full pages + sealed tail of 2
+        let mut m = mk(64, 4);
+        m.prefix_sharing = true;
+        let mut r = mk(64, 4); // unshared reference cache
+        let cfg = m.page_cfg();
+        let prompt: Vec<i32> = (0..10).map(|i| 100 + i).collect();
+        let pv = token_stream(11, 10, &cfg);
+        let dec1 = token_stream(12, 3, &cfg);
+        let dec2 = token_stream(13, 3, &cfg);
+        let run =
+            |toks: &[(Vec<f32>, Vec<f32>)]| -> (Vec<f32>, Vec<f32>) {
+                let mut k = Vec::new();
+                let mut v = Vec::new();
+                for (tk, tv) in toks {
+                    k.extend_from_slice(tk);
+                    v.extend_from_slice(tv);
+                }
+                (k, v)
+            };
+        let (pk, pvv) = run(&pv);
+
+        // seq 1: cold — encodes everything, publishes 2 full pages + tail
+        let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+        assert_eq!(reuse, PrefixReuse::default());
+        m.append_run(1, &pk, &pvv, 10).unwrap();
+        assert_eq!(m.prefix_index_len(), 3);
+        r.start_seq_with_prompt(1, &prompt).unwrap();
+        r.append_run(1, &pk, &pvv, 10).unwrap();
+        assert_eq!(r.prefix_index_len(), 0, "sharing off publishes nothing");
+
+        // seq 2: warm — adopts all three pages, prefill skips 10 tokens
+        let reuse = m.start_seq_with_prompt(2, &prompt).unwrap();
+        assert_eq!(reuse, PrefixReuse { pages: 3, tokens: 10 });
+        assert_eq!(m.seq_len(2), 10);
+        assert_eq!(m.shared_pages(), 3);
+        r.start_seq(2).unwrap();
+        r.append_run(2, &pk, &pvv, 10).unwrap();
+
+        // decode appends: both tails CoW off the shared sealed tail
+        for (d, seq, mgr) in [(&dec1, 1, true), (&dec2, 2, true), (&dec1, 1, false), (&dec2, 2, false)] {
+            let target = if mgr { &mut m } else { &mut r };
+            for (tk, tv) in d.iter() {
+                target.append_token(seq, tk, tv).unwrap();
+            }
+        }
+        assert_eq!(m.share.cow_copies, 2);
+        assert_eq!(m.share.prefix_hit_pages, 3);
+        assert_eq!(m.share.prefix_hit_tokens, 10);
+        // dedup credit counts the 2 adopted *full* pages; the adopted
+        // tail is excluded because its CoW replacement costs a page
+        assert_eq!(m.share.bytes_deduped, 2 * cfg.page_bytes() as u64);
+
+        // byte-exact: shared cache == unshared cache == per-vector oracle
+        let t_max = 14;
+        for seq in [1u64, 2] {
+            let (mk_, mv_) = gather_pair(&m, seq, t_max);
+            let (rk, rv) = gather_pair(&r, seq, t_max);
+            assert_eq!(
+                mk_.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                rk.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} K shared vs unshared"
+            );
+            assert_eq!(
+                mv_.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                rv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} V shared vs unshared"
+            );
+            let sz = mk_.len();
+            let (mut ok, mut ov) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+            m.gather_reference(seq, t_max, &mut ok, &mut ov).unwrap();
+            assert_eq!(
+                mk_.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                ok.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} K batched vs reference on shared pages"
+            );
+        }
+        // page economics: 2 shared prompt pages + 1 shared-then-cached
+        // tail + per-seq {CoW tail, 1 overflow page} = 7 resident, vs 8
+        // for the unshared run
+        assert_eq!(m.pages_in_use(), 7);
+        assert_eq!(r.pages_in_use(), 8);
+
+        // teardown: every ref returns; indexed pages stay warm
+        m.drop_seq(1);
+        m.drop_seq(2);
+        assert_eq!(m.live_refs(), 0);
+        assert_eq!(m.live_pages(), 0);
+        assert_eq!(m.cached_pages(), 3);
+        assert_eq!(m.pages_in_use(), 3);
+
+        // seq 3 revives the whole prefix from the zero-ref cache
+        let reuse = m.start_seq_with_prompt(3, &prompt).unwrap();
+        assert_eq!(reuse, PrefixReuse { pages: 3, tokens: 10 });
+        assert_eq!(m.cached_pages(), 0);
+        let (mk_, _) = gather_pair(&m, 3, 10);
+        let (rk, _) = gather_pair(&r, 2, 10);
+        // prompt region identical to the unshared cache's
+        assert_eq!(
+            mk_.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            rk.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn cross_lane_drain_bit_exact_on_shared_pages() {
+        // two sequences sharing adopted prompt pages, gathered through
+        // the cross-lane drain, must match their per-lane gathers and
+        // the per-vector reference bit for bit
+        let mut m = mk(64, 4);
+        m.prefix_sharing = true;
+        m.parallel = ParallelPolicy::Auto;
+        let cfg = m.page_cfg();
+        let prompt: Vec<i32> = (0..10).collect();
+        let pv = token_stream(71, 10, &cfg);
+        let (mut pk, mut pvv) = (Vec::new(), Vec::new());
+        for (k, v) in &pv {
+            pk.extend_from_slice(k);
+            pvv.extend_from_slice(v);
+        }
+        m.start_seq_with_prompt(1, &prompt).unwrap();
+        m.append_run(1, &pk, &pvv, 10).unwrap();
+        let reuse = m.start_seq_with_prompt(2, &prompt).unwrap();
+        assert_eq!(reuse.pages, 3);
+        // divergent decode tails
+        for (seq, seed) in [(1u64, 72u64), (2, 73)] {
+            for (k, v) in &token_stream(seed, 2, &cfg) {
+                m.append_token(seq, k, v).unwrap();
+            }
+        }
+        assert!(m.shared_pages() >= 2, "prompt pages still shared");
+        let (t_max, batch) = (12usize, 3usize);
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        let wide = l * batch * h * t_max * dh;
+        let (mut ka, mut va) = (vec![5.0f32; wide], vec![5.0f32; wide]);
+        let (mut kb, mut vb) = (vec![5.0f32; wide], vec![5.0f32; wide]);
+        let mut ws = GatherWorkspace::new();
+        // reference: per-lane batch gathers
+        m.gather_into_batch_ws(1, 0, batch, t_max, &mut ka, &mut va, &mut ws)
+            .unwrap();
+        m.gather_into_batch_ws(2, 2, batch, t_max, &mut ka, &mut va, &mut ws)
+            .unwrap();
+        // one cross-lane drain over both shared-page sequences
+        let ns = m
+            .gather_lanes_into_batch_ws(&[(1, 0), (2, 2)], batch, t_max, &mut kb, &mut vb, &mut ws)
+            .unwrap();
+        assert_eq!(ns, vec![12, 12]);
+        assert_eq!(
+            ka.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            kb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn partial_prefix_hit_adopts_leading_pages_only() {
+        let mut m = mk(64, 3);
+        m.prefix_sharing = true;
+        let cfg = m.page_cfg();
+        let prompt_a: Vec<i32> = (0..8).collect(); // 2 full pages
+        let pv = token_stream(31, 8, &cfg);
+        m.start_seq_with_prompt(1, &prompt_a).unwrap();
+        for (k, v) in &pv {
+            m.append_token(1, k, v).unwrap();
+        }
+        assert_eq!(m.prefix_index_len(), 2);
+        // same first page, divergent second page → adopt only page 0
+        let mut prompt_b = prompt_a.clone();
+        prompt_b[5] = 999;
+        let reuse = m.start_seq_with_prompt(2, &prompt_b).unwrap();
+        assert_eq!(reuse, PrefixReuse { pages: 1, tokens: 4 });
+        // longer prompt with matching start → both full pages, no tail
+        let mut prompt_c = prompt_a.clone();
+        prompt_c.extend_from_slice(&[7, 7, 7]);
+        let reuse = m.start_seq_with_prompt(3, &prompt_c).unwrap();
+        assert_eq!(reuse, PrefixReuse { pages: 2, tokens: 8 });
+        // and a shorter prompt that ends mid-page misses (its tail key
+        // covers tokens 4..6, which nobody published)
+        let reuse = m.start_seq_with_prompt(4, &prompt_a[..6]).unwrap();
+        assert_eq!(reuse, PrefixReuse { pages: 1, tokens: 4 });
+    }
+
+    #[test]
+    fn prefix_admission_math_counts_reuse() {
+        // pool of 4 pages, tp = 4
+        let mut m = mk(4, 2);
+        m.prefix_sharing = true;
+        let cfg = m.page_cfg();
+        let prompt: Vec<i32> = (0..8).collect();
+        let pv = token_stream(41, 8, &cfg);
+        let (mut pk, mut pvv) = (Vec::new(), Vec::new());
+        for (k, v) in &pv {
+            pk.extend_from_slice(k);
+            pvv.extend_from_slice(v);
+        }
+        m.start_seq_with_prompt(1, &prompt).unwrap();
+        m.append_run(1, &pk, &pvv, 8).unwrap();
+        // 2 of 4 pages used; a 12-token request needs 3 pages raw...
+        assert!(!m.can_admit(12));
+        // ...but only 1 after adopting the 2 published prompt pages
+        assert!(m.can_admit_prompt(&prompt, 12));
+        let reuse = m.start_seq_with_prompt(2, &prompt).unwrap();
+        assert_eq!(reuse.pages, 2);
+        // growing seq 2 to 12 tokens allocates exactly 1 fresh page
+        let dec = token_stream(42, 4, &cfg);
+        for (k, v) in &dec {
+            m.append_token(2, k, v).unwrap();
+        }
+        assert_eq!(m.pages_in_use(), 3);
+        assert_eq!(m.shared_pages(), 2);
+    }
+
+    #[test]
+    fn zero_ref_pages_evicted_lru_under_pressure() {
+        let mut m = mk(2, 2);
+        m.prefix_sharing = true;
+        let cfg = m.page_cfg();
+        let prompt: Vec<i32> = (0..8).collect();
+        let pv = token_stream(51, 8, &cfg);
+        m.start_seq_with_prompt(1, &prompt).unwrap();
+        for (k, v) in &pv {
+            m.append_token(1, k, v).unwrap();
+        }
+        m.drop_seq(1);
+        assert_eq!(m.cached_pages(), 2);
+        assert_eq!(m.available_pages(), 2, "cached pages are evictable headroom");
+        assert!(m.can_admit(8));
+        // a fresh unrelated sequence must evict the cached pages
+        m.start_seq(2).unwrap();
+        let fresh = token_stream(52, 8, &cfg);
+        for (k, v) in &fresh {
+            m.append_token(2, k, v).unwrap();
+        }
+        assert_eq!(m.share.pages_evicted, 2);
+        assert_eq!(m.prefix_index_len(), 0);
+        assert_eq!(m.cached_pages(), 0);
+        m.drop_seq(2);
+        assert_eq!(m.live_refs(), 0);
+    }
+
+    #[test]
+    fn sharing_off_is_seed_behavior() {
+        // start_seq_with_prompt with sharing off = plain start_seq:
+        // nothing published, nothing adopted, pages freed on drop
+        let mut m = mk(8, 2);
+        let cfg = m.page_cfg();
+        let prompt: Vec<i32> = (0..8).collect();
+        let pv = token_stream(61, 8, &cfg);
+        let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+        assert_eq!(reuse, PrefixReuse::default());
+        for (k, v) in &pv {
+            m.append_token(1, k, v).unwrap();
+        }
+        assert_eq!(m.prefix_index_len(), 0);
+        let reuse = m.start_seq_with_prompt(2, &prompt).unwrap();
+        assert_eq!(reuse, PrefixReuse::default());
+        m.drop_seq(1);
+        m.drop_seq(2);
+        assert_eq!(m.pages_in_use(), 0);
+        assert_eq!(m.share, crate::metrics::ShareStats::default());
     }
 
     #[test]

@@ -1,10 +1,47 @@
 //! Paged, compressed KV cache (vLLM-style block tables over pooled pages
-//! whose contents are IsoQuant stage-1 encodings).
+//! whose contents are IsoQuant stage-1 encodings) with **refcounted
+//! prefix sharing**.
+//!
+//! Because stage-1 encoding is deterministic given its config, a full
+//! page is an immutable byte block whose contents are a pure function of
+//! the token ids it covers (and every token before them).  That makes
+//! pages content-addressable: sequences that start with the same prompt
+//! prefix can share the same physical pages, with zero re-encode cost
+//! and byte-identical gathers.
+//!
+//! # Ownership & sharing invariants
+//!
+//! * **Sealed pages are immutable.**  A page seals when it fills, or
+//!   when a prompt completes mid-page (the sealed *partial tail*).
+//!   Sealed prompt pages carry a [`page::PrefixKey`] — the chained hash
+//!   of the token ids they cover plus the stage-1 config fingerprint —
+//!   and are published to the [`prefix::PrefixIndex`].
+//! * **The open tail is exclusively owned.**  Only the last page of a
+//!   sequence may be open (unsealed), and an open page always has
+//!   refcount 1.  Appending to a sequence whose tail is sealed
+//!   copy-on-write replaces it first ([`CacheManager::append_run`]).
+//! * **The index holds no refs.**  [`prefix::PrefixIndex`] entries are
+//!   hints, and lookups are token-verified (a hash collision reads as a
+//!   miss, never as another prompt's pages): adoption at admission
+//!   ([`CacheManager::start_seq_with_prompt`])
+//!   takes the refcount 0→1 or n→n+1; when the last owner releases an
+//!   indexed page it parks as a *zero-ref cached* page — still resident
+//!   and adoptable, and evicted LRU-first under pool pressure.
+//! * **Gathers are read-only** and therefore identical on shared and
+//!   exclusive pages; every gather path must stay bit-exact vs
+//!   [`CacheManager::gather_reference`].
+//!
+//! Admission is prefix-aware end to end: [`CacheManager::can_admit_prompt`]
+//! counts only the *new* pages a request needs after index reuse, so a
+//! burst of same-prompt requests admits far more lanes than raw
+//! length-based math would.
 
 pub mod allocator;
 pub mod manager;
 pub mod page;
+pub mod prefix;
 
 pub use allocator::{PageAllocator, PageId};
-pub use manager::{CacheManager, GatherWorkspace, SeqId};
-pub use page::{Page, PageConfig};
+pub use manager::{CacheManager, GatherWorkspace, PrefixReuse, SeqId};
+pub use page::{chain_key, Page, PageConfig, PrefixKey};
+pub use prefix::PrefixIndex;

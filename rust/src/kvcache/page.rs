@@ -4,6 +4,14 @@
 //! every (layer, head), the stage-1 encoding of the K and V head vectors
 //! (norm + packed codes, see `quant::pipeline::Stage1::encode`).  Pages
 //! are fixed-size byte arrays so the allocator can pool them.
+//!
+//! Pages are **open** while a sequence is still writing slots and become
+//! **sealed** once their content is final (all slots filled, or a prompt
+//! ended mid-page).  Sealed pages are immutable, which makes them
+//! content-addressable: a sealed page whose slots encode a known run of
+//! prompt tokens carries a [`PrefixKey`] — the chained hash of every
+//! token id it covers plus the stage-1 config fingerprint — and can be
+//! shared byte-for-byte between sequences (see `kvcache::prefix`).
 
 /// Geometry of the cached model + compression (fixed at engine boot).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,17 +51,76 @@ impl PageConfig {
     }
 }
 
+/// Content identity of a sealed prompt page: the chained hash of the
+/// token ids the page (and every page before it) covers, mixed with the
+/// stage-1 config fingerprint.  Equal keys ⇒ byte-identical page
+/// contents (stage-1 encoding is deterministic given config + inputs),
+/// which is what makes whole-page sharing pure bookkeeping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PrefixKey(pub u64);
+
+/// Extend a prefix chain over the next run of token ids.  `parent` is
+/// the key of the preceding full page (`None` for the first page);
+/// `fingerprint` pins the stage-1 config + page geometry so caches with
+/// different encodings never collide.  FNV-1a over (parent, fingerprint,
+/// run length, token ids).
+pub fn chain_key(parent: Option<PrefixKey>, tokens: &[i32], fingerprint: u64) -> PrefixKey {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = OFFSET;
+    h = fnv_u64(h, parent.map(|k| k.0).unwrap_or(0x9e37_79b9));
+    h = fnv_u64(h, parent.is_some() as u64);
+    h = fnv_u64(h, fingerprint);
+    h = fnv_u64(h, tokens.len() as u64);
+    for &t in tokens {
+        h = fnv_u64(h, t as u32 as u64);
+    }
+    PrefixKey(h)
+}
+
+#[inline]
+fn fnv_u64(mut h: u64, v: u64) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// One fixed-size compressed page.
 #[derive(Clone, Debug)]
 pub struct Page {
     pub data: Vec<u8>,
+    /// sealed pages are immutable (their bytes are final); only an open
+    /// page may have slots written
+    sealed: bool,
+    /// content key, present only on sealed pages that encode a pure
+    /// prompt prefix (the shareable ones)
+    key: Option<PrefixKey>,
 }
 
 impl Page {
     pub fn new(cfg: &PageConfig) -> Page {
         Page {
             data: vec![0u8; cfg.page_bytes()],
+            sealed: false,
+            key: None,
         }
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.sealed
+    }
+
+    pub fn key(&self) -> Option<PrefixKey> {
+        self.key
+    }
+
+    /// Freeze the page.  `key` is `Some` only for prompt-prefix pages
+    /// that are candidates for sharing via the prefix index.
+    pub fn seal(&mut self, key: Option<PrefixKey>) {
+        debug_assert!(!self.sealed, "sealing an already-sealed page");
+        self.sealed = true;
+        self.key = key;
     }
 
     pub fn slot_mut(&mut self, cfg: &PageConfig, slot: usize, layer: usize, head: usize, is_v: bool) -> &mut [u8] {
@@ -76,10 +143,12 @@ impl Page {
         (&self.data[off..], cfg.slot_bytes())
     }
 
-    /// Zero the page (reuse hygiene — stale codes must not leak between
-    /// sequences).
+    /// Zero the page and reopen it (reuse hygiene — stale codes and a
+    /// stale seal/key must not leak between sequences).
     pub fn clear(&mut self) {
         self.data.fill(0);
+        self.sealed = false;
+        self.key = None;
     }
 }
 
@@ -138,6 +207,38 @@ mod tests {
                 p.slot(&c, slot, 1, 2, false)
             );
         }
+    }
+
+    #[test]
+    fn seal_and_clear_lifecycle() {
+        let c = cfg();
+        let mut p = Page::new(&c);
+        assert!(!p.is_sealed());
+        assert!(p.key().is_none());
+        let k = chain_key(None, &[1, 2, 3], 42);
+        p.seal(Some(k));
+        assert!(p.is_sealed());
+        assert_eq!(p.key(), Some(k));
+        p.clear();
+        assert!(!p.is_sealed(), "clear must reopen the page");
+        assert!(p.key().is_none(), "clear must drop the stale key");
+    }
+
+    #[test]
+    fn chain_key_discriminates() {
+        let fp = 0xF00D;
+        let a = chain_key(None, &[1, 2, 3], fp);
+        // same tokens, different parent / fingerprint / length → new key
+        assert_ne!(a, chain_key(Some(a), &[1, 2, 3], fp));
+        assert_ne!(a, chain_key(None, &[1, 2, 3], fp + 1));
+        assert_ne!(a, chain_key(None, &[1, 2], fp));
+        assert_ne!(a, chain_key(None, &[1, 2, 4], fp));
+        // deterministic
+        assert_eq!(a, chain_key(None, &[1, 2, 3], fp));
+        // chaining is order-sensitive
+        let ab = chain_key(Some(chain_key(None, &[1], fp)), &[2], fp);
+        let ba = chain_key(Some(chain_key(None, &[2], fp)), &[1], fp);
+        assert_ne!(ab, ba);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Prefix index: content-addressed lookup of sealed prompt pages.
+//!
+//! Maps [`PrefixKey`]s (chained hashes of prompt token runs, see
+//! `kvcache::page::chain_key`) to sealed [`PageId`]s so a new sequence
+//! whose prompt starts with an already-cached prefix can adopt whole
+//! pages instead of re-encoding them.
+//!
+//! A key match alone is not trusted: token ids are client-controlled
+//! and a 64-bit hash can collide, so every entry stores the exact token
+//! run it covers plus its parent key, and [`PrefixIndex::lookup`]
+//! verifies both before serving a page.  Walking the chain therefore
+//! re-verifies the full prefix token-by-token, never by hash equality
+//! alone.
+//!
+//! Ownership rules (see the `kvcache` module docs for the full
+//! invariant set):
+//!
+//! * the index itself holds **no refcounts** — an entry is a hint, not
+//!   an owner;
+//! * when the last owning sequence releases an indexed page, the cache
+//!   manager parks it here as a **zero-ref cached** page: still
+//!   resident, adoptable, and evictable;
+//! * under pool pressure the manager evicts zero-ref entries in LRU
+//!   order ([`PrefixIndex::evict_lru`], O(log n)), which removes the
+//!   index entry and lets the page be recycled.  Pages with live owners
+//!   are never evicted.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::allocator::PageId;
+use super::page::PrefixKey;
+
+/// One published prefix page: the page plus the exact chain link it
+/// claims to encode (verified on every lookup).
+#[derive(Debug)]
+struct IndexEntry {
+    page: PageId,
+    parent: Option<PrefixKey>,
+    tokens: Vec<i32>,
+}
+
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    /// content key → sealed page holding that prefix run
+    map: HashMap<PrefixKey, IndexEntry>,
+    /// zero-ref indexed pages: page → (its key, LRU stamp); only these
+    /// are evictable
+    cached: HashMap<PageId, (PrefixKey, u64)>,
+    /// LRU order over the zero-ref set: stamp → page (stamps are unique)
+    lru: BTreeMap<u64, PageId>,
+    /// monotonic stamp source for LRU ordering
+    clock: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Number of indexed prefix pages.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Zero-ref (evictable) indexed pages.
+    pub fn cached_len(&self) -> usize {
+        self.cached.len()
+    }
+
+    /// Verified lookup: the entry must exist under `key` AND cover
+    /// exactly `tokens` with the same `parent` link.  The token check
+    /// makes a hash collision yield a miss, not another request's KV.
+    pub fn lookup(
+        &self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        tokens: &[i32],
+    ) -> Option<PageId> {
+        let e = self.map.get(&key)?;
+        (e.parent == parent && e.tokens == tokens).then_some(e.page)
+    }
+
+    /// Whether `key` maps to exactly `page` (a page can carry a key yet
+    /// have lost the publish race to another page with the same
+    /// content).
+    pub fn is_indexed(&self, key: PrefixKey, page: PageId) -> bool {
+        self.map.get(&key).map(|e| e.page) == Some(page)
+    }
+
+    /// Publish a sealed page under its content key, recording the token
+    /// run and parent link for lookup verification.  First publisher
+    /// wins: if the key is already mapped (another sequence sealed the
+    /// same content first) the entry is left untouched and `false` is
+    /// returned — the caller's page simply stays private.
+    pub fn publish(
+        &mut self,
+        key: PrefixKey,
+        page: PageId,
+        parent: Option<PrefixKey>,
+        tokens: &[i32],
+    ) -> bool {
+        use std::collections::hash_map::Entry;
+        match self.map.entry(key) {
+            Entry::Occupied(_) => false,
+            Entry::Vacant(v) => {
+                v.insert(IndexEntry {
+                    page,
+                    parent,
+                    tokens: tokens.to_vec(),
+                });
+                true
+            }
+        }
+    }
+
+    /// A sequence adopted `page` (its refcount is about to go ≥ 1): it
+    /// is no longer evictable.
+    pub fn on_adopt(&mut self, page: PageId) {
+        if let Some((_, stamp)) = self.cached.remove(&page) {
+            self.lru.remove(&stamp);
+        }
+    }
+
+    /// Park a zero-ref indexed page as cached/evictable.  `key` must be
+    /// the key the index maps to this page.
+    pub fn cache_zero_ref(&mut self, page: PageId, key: PrefixKey) {
+        debug_assert!(self.is_indexed(key, page));
+        self.clock += 1;
+        self.cached.insert(page, (key, self.clock));
+        self.lru.insert(self.clock, page);
+    }
+
+    /// Evict the least-recently-parked zero-ref page: removes the
+    /// cached entry and the index mapping, returning the page for the
+    /// caller to recycle.  `None` when nothing is evictable.
+    pub fn evict_lru(&mut self) -> Option<PageId> {
+        let (_, page) = self.lru.pop_first()?;
+        let (key, _) = self.cached.remove(&page).expect("lru/cached out of sync");
+        let removed = self.map.remove(&key).map(|e| e.page);
+        debug_assert_eq!(removed, Some(page));
+        Some(page)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::page::chain_key;
+
+    fn key(i: u64) -> PrefixKey {
+        chain_key(None, &[i as i32], 7)
+    }
+
+    fn toks(i: u64) -> Vec<i32> {
+        vec![i as i32]
+    }
+
+    #[test]
+    fn publish_lookup_first_wins() {
+        let mut idx = PrefixIndex::new();
+        assert!(idx.lookup(key(1), None, &toks(1)).is_none());
+        assert!(idx.publish(key(1), 10, None, &toks(1)));
+        assert_eq!(idx.lookup(key(1), None, &toks(1)), Some(10));
+        // second publisher of the same content loses
+        assert!(!idx.publish(key(1), 11, None, &toks(1)));
+        assert_eq!(idx.lookup(key(1), None, &toks(1)), Some(10));
+        assert!(idx.is_indexed(key(1), 10));
+        assert!(!idx.is_indexed(key(1), 11));
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn lookup_verifies_tokens_and_parent_not_just_hash() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(key(1), 10, None, &toks(1));
+        // same key, wrong tokens (simulated collision) → miss
+        assert_eq!(idx.lookup(key(1), None, &toks(2)), None);
+        // same key + tokens, wrong parent link → miss
+        assert_eq!(idx.lookup(key(1), Some(key(9)), &toks(1)), None);
+        // exact match → hit
+        assert_eq!(idx.lookup(key(1), None, &toks(1)), Some(10));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut idx = PrefixIndex::new();
+        for i in 0..3u64 {
+            idx.publish(key(i), i as PageId, None, &toks(i));
+        }
+        assert_eq!(idx.cached_len(), 0);
+        // park in order 1, 0, 2 → eviction order must follow
+        idx.cache_zero_ref(1, key(1));
+        idx.cache_zero_ref(0, key(0));
+        idx.cache_zero_ref(2, key(2));
+        assert_eq!(idx.cached_len(), 3);
+        assert_eq!(idx.evict_lru(), Some(1));
+        assert_eq!(idx.evict_lru(), Some(0));
+        assert_eq!(idx.evict_lru(), Some(2));
+        assert_eq!(idx.evict_lru(), None);
+        // evicted entries are gone from the map too
+        assert!(idx.lookup(key(0), None, &toks(0)).is_none());
+        assert_eq!(idx.len(), 0);
+    }
+
+    #[test]
+    fn adoption_removes_from_evictable_set() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(key(5), 5, None, &toks(5));
+        idx.cache_zero_ref(5, key(5));
+        assert_eq!(idx.cached_len(), 1);
+        idx.on_adopt(5);
+        assert_eq!(idx.cached_len(), 0);
+        // adopted page is not evictable, but stays indexed
+        assert_eq!(idx.evict_lru(), None);
+        assert_eq!(idx.lookup(key(5), None, &toks(5)), Some(5));
+        // re-parking later works
+        idx.cache_zero_ref(5, key(5));
+        assert_eq!(idx.evict_lru(), Some(5));
+    }
+}

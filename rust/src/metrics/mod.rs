@@ -73,6 +73,39 @@ pub struct Counters {
     pub bytes_uncompressed: AtomicU64,
 }
 
+/// Prefix-sharing accounting kept by the cache manager (single-writer,
+/// so plain integers): index hits, copy-on-write activity, and the bytes
+/// sharing kept off the allocator.
+#[derive(Default, Debug, Clone, PartialEq, Eq)]
+pub struct ShareStats {
+    /// sealed pages adopted from the prefix index at admission
+    pub prefix_hit_pages: u64,
+    /// cached tokens those adoptions covered (prefill work avoided)
+    pub prefix_hit_tokens: u64,
+    /// shared tails copied before an append (CoW)
+    pub cow_copies: u64,
+    /// page bytes served from shared pages instead of fresh allocations
+    pub bytes_deduped: u64,
+    /// sealed prompt pages published to the index
+    pub pages_published: u64,
+    /// zero-ref index entries evicted under pool pressure
+    pub pages_evicted: u64,
+}
+
+impl ShareStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "prefix: hits={}p/{}t cow={} dedup={:.1}MB published={} evicted={}",
+            self.prefix_hit_pages,
+            self.prefix_hit_tokens,
+            self.cow_copies,
+            self.bytes_deduped as f64 / 1e6,
+            self.pages_published,
+            self.pages_evicted,
+        )
+    }
+}
+
 impl Counters {
     pub fn bump(field: &AtomicU64, by: u64) {
         field.fetch_add(by, Ordering::Relaxed);

@@ -187,6 +187,37 @@ impl Stage1Config {
         self.backend = backend;
         self
     }
+
+    /// Stable identity of the *byte format* this config produces: two
+    /// configs with equal fingerprints encode any input to identical
+    /// bytes, so their encoded records are interchangeable (the
+    /// content-addressing premise of the KV prefix cache).  The kernel
+    /// `backend` is deliberately excluded — every backend is bit-exact
+    /// by contract (`tests/kernel_equivalence.rs`), so pages written
+    /// under different backends stay shareable.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::prng::mix64;
+        let mut h = 0x1505_1505_1505_1505u64;
+        h = mix64(h, self.variant as u64);
+        h = mix64(h, self.d as u64);
+        h = mix64(h, self.bits as u64);
+        h = mix64(
+            h,
+            match self.quant {
+                QuantKind::Lloyd => 0,
+                QuantKind::Uniform => 1,
+            },
+        );
+        h = mix64(h, self.seed);
+        h = mix64(
+            h,
+            match self.rotor_impl {
+                RotorImpl::Multivector => 0,
+                RotorImpl::OddIntermediate => 1,
+            },
+        );
+        h
+    }
 }
 
 /// A ready-to-run stage-1 transform: parameter bank + quantizers.

@@ -18,7 +18,7 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Completion, Engine, FinishReason, Request};
+use crate::coordinator::{Batcher, Completion, Engine, FinishReason, Request};
 use crate::util::json::Json;
 
 /// Parse one request line.
@@ -61,6 +61,7 @@ pub fn render_completion(c: &Completion) -> String {
             Json::Arr(c.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
         ),
         ("prompt_len", Json::num(c.prompt_len as f64)),
+        ("prefix_hit_pages", Json::num(c.prefix_hit_pages as f64)),
         ("ttft_us", Json::num(c.timing.ttft_us().unwrap_or(-1.0))),
         ("total_us", Json::num(c.timing.total_us().unwrap_or(-1.0))),
         ("finish", Json::str(finish)),
@@ -73,13 +74,24 @@ pub fn render_completion(c: &Completion) -> String {
 /// The PJRT client is `!Send`, so the *engine loop runs on the calling
 /// thread*; the TCP acceptor and per-connection readers run on spawned
 /// threads and feed requests through a channel.
-pub fn serve(mut engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<()> {
+pub fn serve(engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<()> {
     let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+    serve_on(engine, listener, stop)
+}
+
+/// [`serve`] on an already-bound listener (lets tests bind port 0 and
+/// read the assigned address before starting the engine loop).
+pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
     listener.set_nonblocking(true)?;
     eprintln!(
-        "isoquant: serving on {bind} (variant={}, bits={})",
+        "isoquant: serving on {} (variant={}, bits={}, prefix_sharing={})",
+        listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into()),
         engine.cfg.variant.name(),
-        engine.cfg.bits
+        engine.cfg.bits,
+        if engine.cfg.prefix_sharing { "on" } else { "off" },
     );
 
     let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -143,17 +155,42 @@ pub fn serve(mut engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<()
             }
         })?;
 
-    // engine loop on this thread
+    // engine loop on this thread.  Incoming requests pass through the
+    // dynamic batcher, which holds them up to `batch_window_us` to form
+    // fuller admission waves and stable-sorts each drained batch by
+    // prompt — so same-prefix requests reach the engine adjacently and
+    // adopt each other's pages before pool pressure can evict them.
+    let mut batcher = Batcher::new(
+        std::time::Duration::from_micros(engine.cfg.batch_window_us),
+        engine.cfg.max_batch.max(1),
+    );
+    let mut last_stats = std::time::Instant::now();
+    let mut last_finished: u64 = 0;
     while !stop.load(Ordering::SeqCst) {
         while let Ok(r) = req_rx.try_recv() {
-            engine.submit(r);
+            batcher.submit(r);
+        }
+        if let Some(batch) = batcher.poll(std::time::Instant::now()) {
+            for r in batch {
+                engine.submit(r);
+            }
         }
         let worked = engine.step()?;
         for c in engine.take_completions() {
+            last_finished += 1;
             let line = render_completion(&c);
             if let Some(mut s) = sinks.lock().unwrap().remove(&c.id) {
                 let _ = writeln!(s, "{line}");
             }
+        }
+        // periodic serve stats line (page residency, prefix sharing,
+        // throughput) — only when something completed since last print
+        if last_stats.elapsed() >= std::time::Duration::from_secs(5) {
+            if last_finished > 0 {
+                eprintln!("isoquant: {}", engine.stats_line());
+                last_finished = 0;
+            }
+            last_stats = std::time::Instant::now();
         }
         if !worked {
             std::thread::sleep(std::time::Duration::from_micros(200));
@@ -226,6 +263,7 @@ mod tests {
             id: 3,
             tokens: vec![9, 8],
             prompt_len: 2,
+            prefix_hit_pages: 5,
             timing: Timing::new(),
             finish: FinishReason::MaxTokens,
         };
@@ -233,6 +271,7 @@ mod tests {
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("id").unwrap().as_f64(), Some(3.0));
         assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("prefix_hit_pages").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
     }
 }

@@ -23,6 +23,19 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Fold `v` into accumulator `h` (golden-ratio multiply + xor-shift).
+/// The single non-cryptographic field mixer used by every fingerprint
+/// in the tree (`Stage1Config::fingerprint`, the KV cache geometry
+/// salt) — widen or change hashing HERE, not at the call sites, so all
+/// fingerprints move together.  (Token-run chain hashing in
+/// `kvcache::page::chain_key` intentionally uses byte-wise FNV-1a
+/// instead: it streams variable-length token runs.)
+#[inline]
+pub fn mix64(h: u64, v: u64) -> u64 {
+    let x = (h ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^ (x >> 29)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;

@@ -1,0 +1,313 @@
+//! Prefix-sharing property tests: any interleaving of
+//! {admit-with-shared-prefix, CoW append, drop_seq} must yield gathers
+//! byte-identical to an unshared reference cache, and every page
+//! ownership must return to zero once all sequences drop.
+//!
+//! The "model" here is a deterministic map from a token-id prefix to
+//! K/V vectors (same prefix ⇒ same vectors), which is exactly the
+//! property that makes real prompt prefixes shareable.
+
+use isoquant::kvcache::{chain_key, CacheManager, GatherWorkspace, PageConfig};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::util::pool::ParallelPolicy;
+use isoquant::util::prng::Rng;
+use isoquant::util::proplite::{check, Gen};
+
+struct Geometry {
+    cfg: PageConfig,
+    bits: u8,
+}
+
+fn geometry(g: &mut Gen) -> Geometry {
+    let dh = 4 * g.usize_in(4, 12); // 16..48, multiple of 4
+    let bits = g.usize_in(2, 4) as u8;
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, bits));
+    Geometry {
+        cfg: PageConfig {
+            tokens_per_page: g.usize_in(2, 5),
+            n_layers: g.usize_in(1, 2),
+            n_heads: g.usize_in(1, 2),
+            d_head: dh,
+            encoded_len: stage1.encoded_len(),
+        },
+        bits,
+    }
+}
+
+fn mk_cache(geo: &Geometry, max_pages: usize, sharing: bool) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, geo.cfg.d_head, geo.bits));
+    let mut m = CacheManager::new(stage1, geo.cfg, max_pages);
+    m.prefix_sharing = sharing;
+    m
+}
+
+/// Deterministic K/V for the token at position `t` of `stream`: seeded
+/// by the chained hash of `stream[..=t]`, so equal prefixes produce
+/// equal vectors — the stand-in for a real model's prefix-determined
+/// K/V.
+fn kv_at(stream: &[i32], t: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let seed = chain_key(None, &stream[..=t], 0xBEEF).0;
+    let mut rng = Rng::new(seed);
+    let n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+    (rng.gaussian_vec_f32(n), rng.gaussian_vec_f32(n))
+}
+
+/// Flatten tokens `from..to` of `stream` into one token-major run.
+fn kv_run(stream: &[i32], from: usize, to: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for t in from..to {
+        let (tk, tv) = kv_at(stream, t, cfg);
+        k.extend_from_slice(&tk);
+        v.extend_from_slice(&tv);
+    }
+    (k, v)
+}
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Gather `seq` from both caches through every path and demand
+/// bit-identical results everywhere.
+fn verify_seq(
+    shared: &CacheManager,
+    unshared: &CacheManager,
+    seq: u64,
+    len: usize,
+    cfg: &PageConfig,
+    ws: &mut GatherWorkspace,
+) -> Result<(), String> {
+    let t_max = len.max(1) + 2;
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut ks, mut vs) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    let (mut ko, mut vo) = (vec![1.0f32; sz], vec![1.0f32; sz]);
+    let (mut kr, mut vr) = (vec![2.0f32; sz], vec![2.0f32; sz]);
+    let n1 = shared
+        .gather_ws(seq, t_max, &mut ks, &mut vs, ws)
+        .map_err(|e| e.to_string())?;
+    let n2 = shared
+        .gather_reference(seq, t_max, &mut ko, &mut vo)
+        .map_err(|e| e.to_string())?;
+    let n3 = unshared
+        .gather_reference(seq, t_max, &mut kr, &mut vr)
+        .map_err(|e| e.to_string())?;
+    if n1 != len || n2 != len || n3 != len {
+        return Err(format!("seq {seq}: lengths {n1}/{n2}/{n3} != {len}"));
+    }
+    if bits_of(&ks) != bits_of(&ko) || bits_of(&vs) != bits_of(&vo) {
+        return Err(format!("seq {seq}: batched gather != reference on shared cache"));
+    }
+    if bits_of(&ks) != bits_of(&kr) || bits_of(&vs) != bits_of(&vr) {
+        return Err(format!("seq {seq}: shared cache != unshared cache"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_shared_cache_bit_identical_to_unshared() {
+    check(20, 0x5A4E, |g| {
+        let geo = geometry(g);
+        let cfg = geo.cfg;
+        // shared cache under (possible) pool pressure; reference cache
+        // never shares and never evicts
+        let pool = g.usize_in(24, 96);
+        let mut shared = mk_cache(&geo, pool, true);
+        let mut unshared = mk_cache(&geo, 4096, false);
+        shared.parallel = *g.choose(&[ParallelPolicy::Off, ParallelPolicy::Auto]);
+        let mut ws = GatherWorkspace::new();
+
+        // base prompts the ops draw shared prefixes from
+        let bases: Vec<Vec<i32>> = (0..3)
+            .map(|b| {
+                let n = g.usize_in(2 * cfg.tokens_per_page, 6 * cfg.tokens_per_page);
+                (0..n).map(|i| (b * 1000 + i) as i32).collect()
+            })
+            .collect();
+
+        // live sequences: (seq, full token stream so far, prompt_len)
+        let mut live: Vec<(u64, Vec<i32>, usize)> = Vec::new();
+        let mut next_seq = 0u64;
+        let mut next_tok = 50_000i32;
+
+        for _ in 0..30 {
+            match g.usize_in(0, 3) {
+                // admit a sequence whose prompt is a prefix of a base
+                // prompt (often shared), sometimes with a twist
+                0 => {
+                    let base = g.choose(&bases).clone();
+                    let plen = g.usize_in(1, base.len());
+                    let mut prompt = base[..plen].to_vec();
+                    if g.bool() && g.bool() {
+                        // diverge mid-prompt: exercises partial hits
+                        let i = g.usize_in(0, plen - 1);
+                        prompt[i] = next_tok;
+                        next_tok += 1;
+                    }
+                    if !shared.can_admit_prompt(&prompt, prompt.len()) {
+                        continue; // pool full even after reuse: skip
+                    }
+                    next_seq += 1;
+                    let reuse = shared
+                        .start_seq_with_prompt(next_seq, &prompt)
+                        .map_err(|e| e.to_string())?;
+                    if reuse.tokens > prompt.len() {
+                        return Err(format!("reuse {} > prompt {}", reuse.tokens, prompt.len()));
+                    }
+                    // append only the part adoption didn't cover
+                    let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+                    shared
+                        .append_run(next_seq, &k, &v, prompt.len() - reuse.tokens)
+                        .map_err(|e| format!("admitted but append failed: {e}"))?;
+                    unshared.start_seq(next_seq).map_err(|e| e.to_string())?;
+                    let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+                    unshared
+                        .append_run(next_seq, &k, &v, prompt.len())
+                        .map_err(|e| e.to_string())?;
+                    live.push((next_seq, prompt, plen));
+                }
+                // decode append (CoW when the tail is a shared page)
+                1 if !live.is_empty() => {
+                    let i = g.rng.below(live.len());
+                    let (seq, stream, _) = &mut live[i];
+                    stream.push(next_tok);
+                    next_tok += 1;
+                    let t = stream.len() - 1;
+                    let (k, v) = kv_at(stream, t, &cfg);
+                    match shared.append_token(*seq, &k, &v) {
+                        Ok(()) => {
+                            unshared
+                                .append_token(*seq, &k, &v)
+                                .map_err(|e| e.to_string())?;
+                        }
+                        Err(_) => {
+                            // pool exhausted: keep streams aligned
+                            stream.pop();
+                        }
+                    }
+                }
+                // drop
+                2 if !live.is_empty() => {
+                    let i = g.rng.below(live.len());
+                    let (seq, _, _) = live.swap_remove(i);
+                    shared.drop_seq(seq);
+                    unshared.drop_seq(seq);
+                }
+                // verify a random live sequence through every path
+                _ if !live.is_empty() => {
+                    let i = g.rng.below(live.len());
+                    let (seq, stream, _) = &live[i];
+                    verify_seq(&shared, &unshared, *seq, stream.len(), &cfg, &mut ws)?;
+                }
+                _ => {}
+            }
+        }
+
+        // final sweep: every live sequence still byte-identical
+        for (seq, stream, _) in &live {
+            verify_seq(&shared, &unshared, *seq, stream.len(), &cfg, &mut ws)?;
+        }
+
+        // teardown: all ownerships return to zero (zero-ref cached
+        // pages may stay resident — they are owned by nobody)
+        for (seq, _, _) in live.drain(..) {
+            shared.drop_seq(seq);
+            unshared.drop_seq(seq);
+        }
+        if shared.live_refs() != 0 {
+            return Err(format!("{} refs leaked", shared.live_refs()));
+        }
+        if shared.live_pages() != 0 {
+            return Err(format!("{} live pages leaked", shared.live_pages()));
+        }
+        if unshared.pages_in_use() != 0 {
+            return Err("unshared cache leaked pages".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn burst_of_same_prompt_sequences_allocates_shared_prefix_once() {
+    // the manager-level acceptance check: 64 same-prompt sequences on a
+    // shared cache allocate the prefix pages once (+ per-seq tails),
+    // where the unshared cache pays for everything 64 times
+    let geo = Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 32, 3)).encoded_len(),
+        },
+        bits: 3,
+    };
+    let cfg = geo.cfg;
+    let mut shared = mk_cache(&geo, 4096, true);
+    let mut unshared = mk_cache(&geo, 4096, false);
+    let prompt: Vec<i32> = (0..18).collect(); // 4 full pages + tail of 2
+    let clients = 64u64;
+    let decode_per_seq = 3usize;
+
+    let mut streams = Vec::new();
+    for seq in 1..=clients {
+        let reuse = shared.start_seq_with_prompt(seq, &prompt).unwrap();
+        if seq == 1 {
+            assert_eq!(reuse.pages, 0, "first client is cold");
+        } else {
+            assert_eq!(reuse.pages, 5, "followers adopt 4 full pages + tail");
+            assert_eq!(reuse.tokens, prompt.len());
+        }
+        let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+        shared
+            .append_run(seq, &k, &v, prompt.len() - reuse.tokens)
+            .unwrap();
+        unshared.start_seq(seq).unwrap();
+        let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+        unshared.append_run(seq, &k, &v, prompt.len()).unwrap();
+        // a few decode tokens, unique per sequence
+        let mut stream = prompt.clone();
+        for d in 0..decode_per_seq {
+            stream.push(100_000 + (seq as i32) * 10 + d as i32);
+            let t = stream.len() - 1;
+            let (k, v) = kv_at(&stream, t, &cfg);
+            shared.append_token(seq, &k, &v).unwrap();
+            unshared.append_token(seq, &k, &v).unwrap();
+        }
+        streams.push(stream);
+    }
+
+    // page accounting: prompt spans 5 pages. Shared: 4 full pages once,
+    // + the sealed tail once (cached after the CoW dance), + per seq
+    // {CoW tail + 1 overflow page for tokens 20..21}.  Unshared: 6
+    // pages per sequence.
+    let shared_prefix_pages = 5;
+    let per_seq_tail_pages = 2; // CoW'd tail + overflow page
+    assert_eq!(
+        unshared.pages_in_use(),
+        clients as usize * 6,
+        "unshared pays full freight"
+    );
+    assert!(
+        shared.pages_in_use()
+            <= shared_prefix_pages + clients as usize * per_seq_tail_pages,
+        "shared run must not duplicate the prefix: {} pages",
+        shared.pages_in_use()
+    );
+    assert_eq!(shared.share.prefix_hit_pages, (clients - 1) * 5);
+    assert_eq!(shared.share.cow_copies, clients);
+
+    // byte-identical reconstructions for every client
+    let mut ws = GatherWorkspace::new();
+    for (i, stream) in streams.iter().enumerate() {
+        verify_seq(&shared, &unshared, i as u64 + 1, stream.len(), &cfg, &mut ws).unwrap();
+    }
+
+    for seq in 1..=clients {
+        shared.drop_seq(seq);
+        unshared.drop_seq(seq);
+    }
+    assert_eq!(shared.live_refs(), 0);
+    assert_eq!(shared.live_pages(), 0);
+    assert_eq!(unshared.pages_in_use(), 0);
+}

@@ -1,0 +1,131 @@
+//! Serve smoke: N concurrent same-prefix clients against the real TCP
+//! server must receive byte-identical token streams, with prefix
+//! sharing on and off — and the two runs must agree with each other
+//! (sharing is an allocator optimization, never a semantic one).
+//!
+//! Needs `make artifacts`; SKIPS (passes trivially, with a note) when
+//! artifacts are absent so `cargo test` works in a fresh checkout.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use isoquant::config::EngineConfig;
+use isoquant::coordinator::Engine;
+use isoquant::runtime::ServingModel;
+use isoquant::server::{serve_on, Client};
+
+/// The XLA CPU runtime does not tolerate concurrent PJRT client
+/// creation in one process; serialize everything that touches PJRT.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_guard() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = isoquant::runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts not built; skipping serve smoke test");
+        None
+    }
+}
+
+/// Boot a server (engine on its own thread — the PJRT client is !Send,
+/// so it must be created where it runs), fire all clients concurrently,
+/// and return (per-client token streams, per-client prefix_hit_pages)
+/// in client order.
+fn run_serve(
+    dir: &PathBuf,
+    prefix_sharing: bool,
+    prompts: &[Vec<i32>],
+) -> (Vec<Vec<i32>>, Vec<usize>) {
+    // bind before spawning: client connects queue in the backlog even
+    // if the accept loop isn't polling yet
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let dir_srv = dir.clone();
+    let server = std::thread::spawn(move || {
+        let model = ServingModel::load(&dir_srv).expect("load model");
+        let mut cfg = EngineConfig::default();
+        cfg.prefix_sharing = prefix_sharing;
+        let engine = Engine::new(model, cfg).expect("boot engine");
+        serve_on(engine, listener, stop_srv).expect("serve");
+    });
+
+    let clients: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, prompt)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let v = c
+                    .generate(i as u64 + 1, &prompt, 8)
+                    .expect("generate");
+                let toks: Vec<i32> = v
+                    .get("tokens")
+                    .expect("tokens field")
+                    .as_arr()
+                    .expect("tokens array")
+                    .iter()
+                    .map(|t| t.as_f64().unwrap() as i32)
+                    .collect();
+                let hits = v
+                    .get("prefix_hit_pages")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0);
+                (toks, hits)
+            })
+        })
+        .collect();
+    let results: Vec<(Vec<i32>, usize)> =
+        clients.into_iter().map(|j| j.join().unwrap()).collect();
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap();
+    results.into_iter().unzip()
+}
+
+#[test]
+fn same_prefix_clients_get_identical_completions_sharing_on_and_off() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    // 2× the lane count of same-prompt clients: the first wave is cold;
+    // the second can only be admitted after a first-wave lane finished,
+    // by which time the prefix pages are published — so it must hit
+    let lanes = isoquant::runtime::Manifest::load(&dir)
+        .expect("manifest")
+        .model
+        .serve_batch;
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 7) % 50 + 1).collect();
+    let prompts = vec![prompt; lanes * 2];
+
+    let (on_tokens, on_hits) = run_serve(&dir, true, &prompts);
+    let (off_tokens, off_hits) = run_serve(&dir, false, &prompts);
+
+    // every client sees the same completion within a run...
+    for (i, t) in on_tokens.iter().enumerate() {
+        assert!(!t.is_empty(), "client {i} got no tokens (sharing on)");
+        assert_eq!(t, &on_tokens[0], "client {i} diverged (sharing on)");
+    }
+    for (i, t) in off_tokens.iter().enumerate() {
+        assert_eq!(t, &off_tokens[0], "client {i} diverged (sharing off)");
+    }
+    // ...and sharing must not change a single token
+    assert_eq!(on_tokens[0], off_tokens[0], "sharing changed the output");
+
+    // sharing off never reports hits; sharing on reports hits for the
+    // late wave (2× lanes clients can't all be admitted cold)
+    assert!(off_hits.iter().all(|&h| h == 0));
+    assert!(
+        on_hits.iter().sum::<usize>() > 0,
+        "no prefix hits across {} same-prompt clients: {on_hits:?}",
+        prompts.len()
+    );
+}
