@@ -1,0 +1,183 @@
+//! Persist-restart benchmark: what the on-disk page store buys a
+//! rebooted server — per-client TTFT proxy (admission + prompt
+//! materialization) on a **cold boot** (empty store: every prompt
+//! encodes from scratch) vs a **warm boot** (same persist dir, fresh
+//! cache: every prompt promotes its pages from disk instead of
+//! re-encoding).
+//!
+//! Every client uses a *distinct* prompt, so intra-boot RAM sharing
+//! never kicks in and the measured difference is purely
+//! encode-vs-promote — the restart benefit, isolated.  A third row
+//! reboots once more with the store already hot in the page cache to
+//! show the steady-state restart cost.
+//!
+//! No PJRT artifacts needed: the bench drives `CacheManager` admission
+//! and appends directly (the serving path minus the model step).
+//!
+//! Besides the table, emits machine-readable `BENCH_persist.json` (one
+//! row per boot phase) so future PRs can track the trajectory.  Cargo
+//! runs bench binaries with the package root as working directory, so
+//! the file lands at `rust/BENCH_persist.json`.
+//!
+//! Run: `cargo bench --bench persist_restart` (`-- --quick` for the CI
+//! smoke subset).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use isoquant::kvcache::{CacheManager, PageConfig, PageStore, StoreConfig};
+use isoquant::metrics::LatencyRecorder;
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::util::bench::Table;
+use isoquant::util::json::Json;
+use isoquant::util::prng::Rng;
+
+const D_HEAD: usize = 128;
+const N_LAYERS: usize = 2;
+const N_HEADS: usize = 4;
+const BITS: u8 = 4;
+const TOKENS_PER_PAGE: usize = 16;
+const PROMPT_LEN: usize = 128; // 8 pages per client
+const POOL_PAGES: usize = 4096;
+
+fn mk_cache() -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, D_HEAD, BITS));
+    let cfg = PageConfig {
+        tokens_per_page: TOKENS_PER_PAGE,
+        n_layers: N_LAYERS,
+        n_heads: N_HEADS,
+        d_head: D_HEAD,
+        encoded_len: stage1.encoded_len(),
+    };
+    let mut m = CacheManager::new(stage1, cfg, POOL_PAGES);
+    m.prefix_sharing = true;
+    m
+}
+
+struct BootPoint {
+    phase: &'static str,
+    ttft_p50_us: f64,
+    ttft_mean_us: f64,
+    reused_tokens: u64,
+    promoted: u64,
+    spilled: u64,
+    rehydrated: u64,
+}
+
+/// One server lifetime: admit `clients` distinct prompts, serve, drop
+/// (parking + spilling every prompt page), flush, shut down.
+fn run_boot(dir: &Path, clients: usize, phase: &'static str) -> BootPoint {
+    let mut m = mk_cache();
+    let store = PageStore::open(StoreConfig::for_cache(
+        dir.to_path_buf(),
+        m.fingerprint(),
+        m.page_cfg().page_bytes(),
+        0,
+    ))
+    .expect("open page store");
+    m.attach_store(store);
+    let tok_n = N_LAYERS * N_HEADS * D_HEAD;
+    let mut ttft = LatencyRecorder::new();
+    for c in 0..clients {
+        let prompt: Vec<i32> = (0..PROMPT_LEN as i32).map(|i| (c as i32) * 10_000 + i).collect();
+        // deterministic per-client K/V: identical across boots, the
+        // stand-in for a real model's prefix-determined cache
+        let mut rng = Rng::new(0xB007 + c as u64);
+        let k = rng.gaussian_vec_f32(PROMPT_LEN * tok_n);
+        let v = rng.gaussian_vec_f32(PROMPT_LEN * tok_n);
+        let seq = c as u64 + 1;
+        let t0 = Instant::now();
+        assert!(m.can_admit_prompt(&prompt, PROMPT_LEN));
+        let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+        let left = PROMPT_LEN - reuse.tokens;
+        if left > 0 {
+            m.append_run(seq, &k[reuse.tokens * tok_n..], &v[reuse.tokens * tok_n..], left)
+                .unwrap();
+        }
+        ttft.record(t0.elapsed());
+        m.drop_seq(seq);
+    }
+    m.flush_store();
+    BootPoint {
+        phase,
+        ttft_p50_us: ttft.percentile(50.0),
+        ttft_mean_us: ttft.mean(),
+        reused_tokens: m.share.prefix_hit_tokens,
+        promoted: m.share.pages_promoted,
+        spilled: m.share.pages_spilled,
+        rehydrated: m.share.pages_rehydrated,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let clients = if quick { 8 } else { 32 };
+    let dir: PathBuf = std::env::temp_dir().join(format!(
+        "isoquant-bench-persist-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "== persist restart: {clients} clients × distinct {PROMPT_LEN}-token prompts \
+         ({} pages each), store at {}{} ==\n",
+        PROMPT_LEN / TOKENS_PER_PAGE,
+        dir.display(),
+        if quick { " (quick subset)" } else { "" }
+    );
+    let boots = [
+        run_boot(&dir, clients, "cold"),   // empty store: encode everything
+        run_boot(&dir, clients, "warm"),   // restart: promote from disk
+        run_boot(&dir, clients, "warm+2"), // second restart: page-cache hot
+    ];
+    let mut table = Table::new(&[
+        "boot",
+        "ttft p50 us",
+        "ttft mean us",
+        "reused tok",
+        "promoted",
+        "spilled",
+        "rehydrated",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for b in &boots {
+        table.row(vec![
+            b.phase.to_string(),
+            format!("{:.0}", b.ttft_p50_us),
+            format!("{:.0}", b.ttft_mean_us),
+            b.reused_tokens.to_string(),
+            b.promoted.to_string(),
+            b.spilled.to_string(),
+            b.rehydrated.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("phase", Json::str(b.phase)),
+            ("clients", Json::num(clients as f64)),
+            ("ttft_p50_us", Json::num(b.ttft_p50_us)),
+            ("ttft_mean_us", Json::num(b.ttft_mean_us)),
+            ("reused_tokens", Json::num(b.reused_tokens as f64)),
+            ("pages_promoted", Json::num(b.promoted as f64)),
+            ("pages_spilled", Json::num(b.spilled as f64)),
+            ("pages_rehydrated", Json::num(b.rehydrated as f64)),
+        ]));
+    }
+    table.print();
+    let speedup = boots[0].ttft_p50_us / boots[1].ttft_p50_us.max(1e-9);
+    println!(
+        "\nwarm-boot TTFT speedup vs cold: {speedup:.2}x (cold = stage-1 encode of every \
+         prompt page; warm = CRC-verified read + memcpy from the persisted store)"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("persist_restart")),
+        ("prompt_len", Json::num(PROMPT_LEN as f64)),
+        ("tokens_per_page", Json::num(TOKENS_PER_PAGE as f64)),
+        ("pool_pages", Json::num(POOL_PAGES as f64)),
+        ("quick", Json::Bool(quick)),
+        ("warm_speedup_p50", Json::num(speedup)),
+        ("boots", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_persist.json", doc.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_persist.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_persist.json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -316,6 +316,21 @@ pub fn serve(args: &[String]) -> Result<()> {
             "prefix-sharing",
             "",
             "share prompt-prefix KV pages between requests (overrides config): on | off",
+        )
+        .opt(
+            "persist-dir",
+            "",
+            "persist prompt pages to this directory across restarts (overrides config; \
+             requires prefix sharing)",
+        )
+        .opt(
+            "persist-budget-mb",
+            "",
+            "on-disk budget of the page store in MiB (overrides config; 0 = unlimited)",
+        )
+        .flag(
+            "no-persist",
+            "disable the persistent page store even when the config enables it",
         );
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
@@ -348,6 +363,21 @@ pub fn serve(args: &[String]) -> Result<()> {
         Some("on") => cfg.prefix_sharing = true,
         Some("off") => cfg.prefix_sharing = false,
         Some(other) => bail!("--prefix-sharing must be on|off, got {other:?}"),
+    }
+    if let Some(dir) = a.get("persist-dir") {
+        if !dir.is_empty() {
+            cfg.persist_dir = dir.to_string();
+        }
+    }
+    if let Some(mb) = a.get("persist-budget-mb") {
+        if !mb.is_empty() {
+            cfg.persist_budget_mb = mb
+                .parse()
+                .with_context(|| format!("--persist-budget-mb must be an integer, got {mb:?}"))?;
+        }
+    }
+    if a.has_flag("no-persist") {
+        cfg.persist_dir.clear();
     }
     let model = ServingModel::load(Path::new(&cfg.artifacts_dir))?;
     let engine = Engine::new(model, cfg.clone())?;

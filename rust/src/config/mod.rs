@@ -177,6 +177,15 @@ pub struct EngineConfig {
     /// (`[cache] prefix_sharing = off|on`); off reproduces the
     /// exclusive-ownership cache
     pub prefix_sharing: bool,
+    /// directory of the persistent page store (`[cache] persist_dir`);
+    /// empty (the default) disables persistence — no file I/O at all.
+    /// Requires `prefix_sharing = on` (the store rides on the
+    /// content-addressed index)
+    pub persist_dir: String,
+    /// on-disk budget of the page store in MiB
+    /// (`[cache] persist_budget_mb`); 0 = unlimited.  Enforced by
+    /// retiring the oldest log segments
+    pub persist_budget_mb: usize,
     pub seed: u64,
 }
 
@@ -199,6 +208,8 @@ impl Default for EngineConfig {
             // forces the backend through it), falling back to auto
             kernel_backend: KernelBackend::from_env_default(),
             prefix_sharing: false,
+            persist_dir: String::new(),
+            persist_budget_mb: 256,
             seed: 0x150_0541,
         }
     }
@@ -271,6 +282,12 @@ impl EngineConfig {
                 None => d.prefix_sharing,
                 Some(v) => parse_switch(v, "[cache] prefix_sharing")?,
             },
+            persist_dir: match raw.get("cache", "persist_dir") {
+                None => d.persist_dir,
+                Some(Value::Str(s)) => s.clone(),
+                Some(v) => bail!("[cache] persist_dir must be a string path, got {v:?}"),
+            },
+            persist_budget_mb: raw.usize_or("cache", "persist_budget_mb", d.persist_budget_mb)?,
             seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
         })
     }
@@ -404,6 +421,37 @@ bind = "0.0.0.0:9000"
         for text in [
             "[cache]\nprefix_sharing = 1",
             "[cache]\nprefix_sharing = \"maybe\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn persist_knobs() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.persist_dir, "", "persistence defaults off");
+        assert_eq!(cfg.persist_budget_mb, 256);
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse(
+                "[cache]\nprefix_sharing = on\npersist_dir = \"/tmp/kv\"\npersist_budget_mb = 64",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.persist_dir, "/tmp/kv");
+        assert_eq!(cfg.persist_budget_mb, 64);
+        assert!(cfg.prefix_sharing);
+        // bare (unquoted) paths parse too
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse("[cache]\npersist_dir = kvstore").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.persist_dir, "kvstore");
+        for text in [
+            "[cache]\npersist_dir = 5",
+            "[cache]\npersist_dir = true",
+            "[cache]\npersist_budget_mb = \"lots\"",
         ] {
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");

@@ -18,11 +18,11 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::request::{Completion, FinishReason, Request, Timing};
 use crate::config::EngineConfig;
-use crate::kvcache::{CacheManager, GatherWorkspace, PageConfig, SeqId};
+use crate::kvcache::{CacheManager, GatherWorkspace, PageConfig, PageStore, SeqId, StoreConfig};
 use crate::metrics::{argmax, Counters, LatencyRecorder};
 use crate::quant::{Stage1, Stage1Config};
 use crate::runtime::ServingModel;
@@ -119,6 +119,28 @@ impl Engine {
         let mut cache = CacheManager::new(stage1, page_cfg, max_pages);
         cache.parallel = cfg.gather_parallel;
         cache.prefix_sharing = cfg.prefix_sharing;
+        if !cfg.persist_dir.is_empty() {
+            // persistence rides on the content-addressed index: without
+            // sharing nothing is ever published, so nothing could spill
+            // or rehydrate — reject the combination instead of silently
+            // doing no I/O
+            if !cfg.prefix_sharing {
+                bail!("[cache] persist_dir requires prefix_sharing = on");
+            }
+            let store = PageStore::open(StoreConfig::for_cache(
+                std::path::PathBuf::from(&cfg.persist_dir),
+                cache.fingerprint(),
+                page_cfg.page_bytes(),
+                (cfg.persist_budget_mb as u64) << 20,
+            ))?;
+            eprintln!(
+                "isoquant: page store at {} — {} cold pages rehydrated ({:.1} MB on disk)",
+                cfg.persist_dir,
+                store.len(),
+                store.disk_bytes() as f64 / 1e6,
+            );
+            cache.attach_store(store);
+        }
         let lanes = (0..m.serve_batch).map(|_| Lane::Free).collect();
         let cache_numel = model.cache_numel();
         let tok_numel = m.n_layers * m.n_heads * m.d_head;
@@ -544,8 +566,12 @@ impl Engine {
     /// exclusive), prefix-sharing activity, and throughput counters.
     pub fn stats_line(&self) -> String {
         let c = &self.stats.counters;
+        let cold = match self.cache.store() {
+            Some(s) => format!(" cold={}({:.1}MB)", s.len(), s.disk_bytes() as f64 / 1e6),
+            None => String::new(),
+        };
         format!(
-            "pages: live={} cached={} hw={}/{} shared={} excl={} | {} | req={} tok={}p+{}d kv={:.1}x",
+            "pages: live={} cached={}{cold} hw={}/{} shared={} excl={} | {} | req={} tok={}p+{}d kv={:.1}x",
             self.cache.live_pages(),
             self.cache.cached_pages(),
             self.cache.high_water_pages(),

@@ -42,6 +42,7 @@ use anyhow::{bail, Context, Result};
 use super::allocator::{PageAllocator, PageId};
 use super::page::{chain_key, PageConfig, PrefixKey};
 use super::prefix::PrefixIndex;
+use super::store::PageStore;
 use crate::metrics::ShareStats;
 use crate::quant::{BatchScratch, PackedSink, Stage1};
 use crate::util::pool::{scope_units, ParallelPolicy};
@@ -88,20 +89,45 @@ pub struct PrefixReuse {
     pub tokens: usize,
 }
 
-/// Read-only result of walking the prefix index over a prompt.
+/// One adoptable link of a prompt's chain, as discovered by a probe.
+#[derive(Debug, Clone)]
+struct ProbeHit {
+    key: PrefixKey,
+    parent: Option<PrefixKey>,
+    /// `Some` = resident page (hot or warm) to adopt by refcount;
+    /// `None` = cold: resolvable only from the persistent store, needs
+    /// promotion into a freshly allocated page
+    page: Option<PageId>,
+    /// prompt token range `[start, end)` this page covers
+    start: usize,
+    end: usize,
+    /// chain depth (page index; the partial tail is one past the last
+    /// full page)
+    depth: u32,
+}
+
+/// Read-only result of walking the prefix index (and, when attached,
+/// the persistent store) over a prompt.
 #[derive(Default)]
 struct PrefixProbe {
-    /// adoptable pages, in sequence order (full pages, then possibly
-    /// the sealed partial tail)
-    pages: Vec<PageId>,
-    /// how many of those are hits on *full* prompt pages (a tail hit is
-    /// excluded: its copy-on-write replacement still costs a fresh page)
-    full_hits: usize,
-    /// prompt tokens the adoptable pages cover
-    tokens: usize,
-    /// hits that are currently zero-ref cached — adopting them consumes
-    /// pages the admission math would otherwise count as evictable
+    /// adoptable chain links, in sequence order (full pages, then
+    /// possibly the sealed partial tail); the walk stops at the first
+    /// total miss
+    hits: Vec<ProbeHit>,
+    /// resident hits on *full* prompt pages — the only hits that need
+    /// no allocation (a tail hit still costs its copy-on-write
+    /// replacement; a cold hit costs the page it promotes into)
+    warm_full_hits: usize,
+    /// resident hits that are currently zero-ref cached — adopting them
+    /// consumes pages the admission math would otherwise count as
+    /// evictable
     cached_hits: usize,
+    /// the partial tail resolved to a *resident* page — the only tail
+    /// outcome that costs no allocation beyond its counted slot (a
+    /// cold tail promotes into a fresh page, a missed tail encodes
+    /// into one; either way the sealed result is then copy-on-write
+    /// replaced by the first generated token, costing a second page)
+    warm_tail: bool,
 }
 
 /// Persistent scratch for the batched gather path: one decode scratch
@@ -146,6 +172,9 @@ pub struct CacheManager {
     pub prefix_sharing: bool,
     /// prefix-sharing accounting (hits, CoW copies, bytes deduplicated)
     pub share: ShareStats,
+    /// optional persistent page store: zero-ref parks spill to it
+    /// (write-behind) and index misses consult it before re-encoding
+    store: Option<PageStore>,
 }
 
 impl CacheManager {
@@ -171,11 +200,55 @@ impl CacheManager {
             keep_shadow: false,
             prefix_sharing: false,
             share: ShareStats::default(),
+            store: None,
         }
     }
 
     pub fn stage1(&self) -> &Stage1 {
         &self.stage1
+    }
+
+    /// The chain-hash salt: stage-1 config fingerprint mixed with the
+    /// page geometry.  A persistent store must be opened with exactly
+    /// this value so its records are interchangeable with this cache's
+    /// pages.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Attach a persistent page store (must share this cache's
+    /// fingerprint and page size).  From here on, zero-ref parks spill
+    /// to it and prefix-index misses consult it before re-encoding.
+    pub fn attach_store(&mut self, store: PageStore) {
+        assert_eq!(
+            store.fingerprint(),
+            self.fingerprint,
+            "store fingerprint must match the cache"
+        );
+        assert_eq!(
+            store.cfg().page_bytes,
+            self.alloc.cfg().page_bytes(),
+            "store page size must match the cache"
+        );
+        self.share.pages_rehydrated += store.stats().rehydrated;
+        self.store = Some(store);
+    }
+
+    pub fn store(&self) -> Option<&PageStore> {
+        self.store.as_ref()
+    }
+
+    /// Cold entries resolvable from the persistent store (0 without one).
+    pub fn cold_pages(&self) -> usize {
+        self.store.as_ref().map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Block until every spill enqueued so far is durable (shutdown /
+    /// test barrier; a no-op without a store).
+    pub fn flush_store(&self) {
+        if let Some(s) = &self.store {
+            s.flush();
+        }
     }
 
     pub fn page_cfg(&self) -> PageConfig {
@@ -266,9 +339,20 @@ impl CacheManager {
         let tp = self.alloc.cfg().tokens_per_page;
         let pages_total = total_len.div_ceil(tp);
         let probe = self.probe_prefix(prompt);
-        // adopted full pages need no allocation; an adopted tail still
-        // costs its copy-on-write replacement, so it is not subtracted
-        let needed = pages_total.saturating_sub(probe.full_hits);
+        // adopted resident full pages need no allocation; an adopted
+        // tail still costs its copy-on-write replacement, and a cold
+        // (store-only) hit costs the page it promotes into, so neither
+        // is subtracted — cold hits save prefill work, not pool pages.
+        // A prompt that ends mid-page and will generate needs one page
+        // beyond its counted tail slot unless the tail is resident:
+        // the sealed tail (freshly encoded or promoted, either way
+        // sequence-owned and non-evictable) is CoW-replaced by the
+        // first generated token while still occupying its page
+        let cow_extra = (self.prefix_sharing
+            && prompt.len() % tp != 0
+            && total_len > prompt.len()
+            && !probe.warm_tail) as usize;
+        let needed = pages_total.saturating_sub(probe.warm_full_hits) + cow_extra;
         // pages we are about to adopt are no longer evictable headroom
         let evictable = self.prefix.cached_len() - probe.cached_hits;
         self.alloc.free_count() + evictable >= needed
@@ -298,29 +382,74 @@ impl CacheManager {
         let mut sc = SeqCache::default();
         let mut reuse = PrefixReuse::default();
         if self.prefix_sharing && !prompt.is_empty() {
+            let tp = self.alloc.cfg().tokens_per_page;
             let (keys, tail) = self.prompt_chain(prompt);
             let probe = self.probe_prefix_with(prompt, &keys, tail);
-            for &p in &probe.pages {
-                self.prefix.on_adopt(p);
-                self.alloc.retain(p);
+            // pin every *resident* hit first: promotions below may
+            // allocate (and therefore evict zero-ref pages), and a
+            // parked page this walk is about to adopt must not be the
+            // victim.  Reuse credit waits until the page is actually
+            // kept — a failed walk must not inflate retention scores
+            for hit in &probe.hits {
+                if let Some(p) = hit.page {
+                    self.prefix.unpark(p);
+                    self.alloc.retain(p);
+                }
+            }
+            // adopt in chain order; a cold hit promotes from the store
+            // (fresh page + full re-verification).  The first failure
+            // truncates reuse there — later pinned pages are released
+            // back to the warm tier
+            let mut pages: Vec<PageId> = Vec::with_capacity(probe.hits.len());
+            let mut tokens = 0usize;
+            let mut warm_full_adopted = 0usize;
+            let mut failed = false;
+            for hit in &probe.hits {
+                if failed {
+                    if let Some(p) = hit.page {
+                        self.release_page(p);
+                    }
+                    continue;
+                }
+                match hit.page {
+                    Some(p) => {
+                        self.prefix.credit_reuse(hit.key, p);
+                        pages.push(p);
+                        tokens = hit.end;
+                        if hit.end - hit.start == tp {
+                            warm_full_adopted += 1;
+                        }
+                    }
+                    None => {
+                        let run = &prompt[hit.start..hit.end];
+                        match self.promote_from_store(hit.key, hit.parent, run, hit.depth) {
+                            Some(p) => {
+                                pages.push(p);
+                                tokens = hit.end;
+                            }
+                            None => failed = true,
+                        }
+                    }
+                }
             }
             reuse = PrefixReuse {
-                pages: probe.pages.len(),
-                tokens: probe.tokens,
+                pages: pages.len(),
+                tokens,
             };
-            sc.pages = probe.pages;
-            sc.len = probe.tokens;
+            sc.pages = pages;
+            sc.len = tokens;
             sc.prompt = prompt.to_vec();
             sc.prompt_keys = keys;
             sc.tail_key = tail;
             sc.prompt_len = prompt.len();
             self.share.prefix_hit_pages += reuse.pages as u64;
             self.share.prefix_hit_tokens += reuse.tokens as u64;
-            // dedup credit counts whole shared pages only: an adopted
-            // tail still costs its CoW replacement (same reasoning as
-            // the admission math)
+            // dedup credit counts whole *shared* resident pages only:
+            // an adopted tail still costs its CoW replacement, and a
+            // promotion costs a fresh page (same reasoning as the
+            // admission math)
             self.share.bytes_deduped +=
-                (probe.full_hits * self.alloc.cfg().page_bytes()) as u64;
+                (warm_full_adopted * self.alloc.cfg().page_bytes()) as u64;
         }
         self.seqs.insert(seq, sc);
         Ok(reuse)
@@ -367,11 +496,13 @@ impl CacheManager {
         self.probe_prefix_with(prompt, &keys, tail)
     }
 
-    /// Read-only index walk: which leading pages of `prompt` are
-    /// adoptable right now.  Stops at the first miss; the partial tail
-    /// only counts when every full page hit (pages adopt in prefix
-    /// order or not at all).  Every lookup is token-verified — a key
-    /// collision reads as a miss, never as another prompt's pages.
+    /// Read-only walk over the prefix index *and* (when attached) the
+    /// persistent store: which leading pages of `prompt` are adoptable
+    /// right now, and from which tier.  Stops at the first total miss;
+    /// the partial tail only counts when every full page hit (pages
+    /// adopt in prefix order or not at all).  Every lookup — RAM or
+    /// disk — is token-verified: a key collision reads as a miss,
+    /// never as another prompt's pages.
     fn probe_prefix_with(
         &self,
         prompt: &[i32],
@@ -386,52 +517,150 @@ impl CacheManager {
         for (i, &key) in keys.iter().enumerate() {
             let parent = if i > 0 { Some(keys[i - 1]) } else { None };
             let run = &prompt[i * tp..(i + 1) * tp];
-            let Some(p) = self.prefix.lookup(key, parent, run) else {
+            let Some(hit) = self.probe_one(key, parent, run, i * tp, (i + 1) * tp, i as u32)
+            else {
                 return probe;
             };
-            debug_assert!(self.alloc.page(p).is_sealed());
-            if self.alloc.refcount(p) == 0 {
-                probe.cached_hits += 1;
+            match hit.page {
+                Some(p) => {
+                    if self.alloc.refcount(p) == 0 {
+                        probe.cached_hits += 1;
+                    }
+                    probe.warm_full_hits += 1;
+                }
+                None => {}
             }
-            probe.pages.push(p);
-            probe.full_hits += 1;
-            probe.tokens += tp;
+            probe.hits.push(hit);
         }
         if let Some(key) = tail {
             let parent = keys.last().copied();
-            let run = &prompt[keys.len() * tp..];
-            if let Some(p) = self.prefix.lookup(key, parent, run) {
-                debug_assert!(self.alloc.page(p).is_sealed());
-                if self.alloc.refcount(p) == 0 {
-                    probe.cached_hits += 1;
+            let start = keys.len() * tp;
+            if let Some(hit) =
+                self.probe_one(key, parent, &prompt[start..], start, prompt.len(), keys.len() as u32)
+            {
+                match hit.page {
+                    Some(p) => {
+                        if self.alloc.refcount(p) == 0 {
+                            probe.cached_hits += 1;
+                        }
+                        probe.warm_tail = true;
+                    }
+                    None => {}
                 }
-                probe.pages.push(p);
-                probe.tokens = prompt.len();
+                probe.hits.push(hit);
             }
         }
         probe
     }
 
+    /// Resolve one chain link: resident index first (warm/hot), then
+    /// the persistent store (cold).  `None` = total miss.
+    fn probe_one(
+        &self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        run: &[i32],
+        start: usize,
+        end: usize,
+        depth: u32,
+    ) -> Option<ProbeHit> {
+        if let Some(p) = self.prefix.lookup(key, parent, run) {
+            debug_assert!(self.alloc.page(p).is_sealed());
+            return Some(ProbeHit {
+                key,
+                parent,
+                page: Some(p),
+                start,
+                end,
+                depth,
+            });
+        }
+        let cold = self
+            .store
+            .as_ref()
+            .is_some_and(|s| s.lookup_meta(key, parent, run));
+        cold.then_some(ProbeHit {
+            key,
+            parent,
+            page: None,
+            start,
+            end,
+            depth,
+        })
+    }
+
+    /// Promote one cold page: read + fully re-verify the record from
+    /// the store, allocate a fresh page (evicting warm pages if the
+    /// pool demands it), install the bytes sealed under `key`, and
+    /// publish it back to the resident index.  Any failure — disk,
+    /// verification, pool exhaustion — returns `None`: a miss, so the
+    /// caller re-encodes instead of ever adopting wrong bytes.
+    fn promote_from_store(
+        &mut self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        run: &[i32],
+        depth: u32,
+    ) -> Option<PageId> {
+        let bytes = self.store.as_ref()?.read_page(key, parent, run)?;
+        if bytes.len() != self.alloc.cfg().page_bytes() {
+            return None;
+        }
+        let p = self.alloc_page().ok()?;
+        self.alloc.page_mut(p).data.copy_from_slice(&bytes);
+        self.alloc.page_mut(p).seal(Some(key));
+        let published = self.prefix.publish(key, p, parent, run, depth);
+        debug_assert!(published, "promoted a key that was already resident");
+        self.share.pages_promoted += 1;
+        Some(p)
+    }
+
     /// Drop one ownership of `p`.  At zero refs an indexed page is
     /// parked in the zero-ref prefix cache (still resident, adoptable,
-    /// evictable); anything else returns to the free pool.
+    /// evictable) and — when a persistent store is attached — handed to
+    /// the write-behind spill thread, so a later eviction demotes it to
+    /// the cold tier instead of destroying it.  Anything else returns
+    /// to the free pool.
     fn release_page(&mut self, p: PageId) {
         if self.alloc.release(p) == 0 {
             let key = self.alloc.page(p).key();
             match key {
-                Some(k) if self.prefix.is_indexed(k, p) => self.prefix.cache_zero_ref(p, k),
+                Some(k) if self.prefix.is_indexed(k, p) => {
+                    self.spill_page(k, p);
+                    self.prefix.cache_zero_ref(p, k);
+                }
                 _ => self.alloc.free(p),
             }
         }
     }
 
-    /// Allocate a page, evicting zero-ref prefix-cache entries (LRU)
-    /// under pool pressure.
+    /// Write-behind persistence of a parking page.  The store dedups
+    /// (a key already durable or already queued is skipped), and the
+    /// job owns a copy of the bytes, so eviction never has to wait for
+    /// the disk.
+    fn spill_page(&mut self, key: PrefixKey, page: PageId) {
+        let enqueued = {
+            let Some(store) = self.store.as_ref() else { return };
+            let Some((_, parent, tokens, _)) = self.prefix.entry_meta(key) else {
+                return;
+            };
+            store.spill(key, parent, tokens, &self.alloc.page(page).data)
+        };
+        if enqueued {
+            self.share.pages_spilled += 1;
+        }
+    }
+
+    /// Allocate a page, demoting zero-ref prefix-cache entries (lowest
+    /// reuse/depth retention score first — see
+    /// [`PrefixIndex::evict_victim`]) under pool pressure.  With a
+    /// store attached the victims were spilled when they parked, so
+    /// this recycles only the RAM copy.
     fn alloc_page(&mut self) -> Result<PageId> {
         loop {
             match self.alloc.alloc() {
                 Ok(p) => return Ok(p),
-                Err(e) => match self.prefix.evict_lru() {
+                Err(e) => match self.prefix.evict_victim() {
                     Some(victim) => {
                         self.alloc.free(victim);
                         self.share.pages_evicted += 1;
@@ -473,7 +702,7 @@ impl CacheManager {
             }
             self.alloc.page_mut(page_id).seal(key);
             if let (Some(k), Some(run)) = (key, run) {
-                if self.prefix.publish(k, page_id, parent, &run) {
+                if self.prefix.publish(k, page_id, parent, &run, pi as u32) {
                     self.share.pages_published += 1;
                 }
             }
@@ -491,7 +720,8 @@ impl CacheManager {
             if let Some(k) = tail_key {
                 if !self.alloc.page(page_id).is_sealed() {
                     self.alloc.page_mut(page_id).seal(Some(k));
-                    if self.prefix.publish(k, page_id, parent, &run) {
+                    let depth = (prompt_len / tp) as u32;
+                    if self.prefix.publish(k, page_id, parent, &run, depth) {
                         self.share.pages_published += 1;
                     }
                 }

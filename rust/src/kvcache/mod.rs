@@ -36,12 +36,37 @@
 //! burst of same-prompt requests admits far more lanes than raw
 //! length-based math would.
 
+//! # Tiered residency (hot → warm → cold)
+//!
+//! With a persistent [`store::PageStore`] attached, a sealed prompt
+//! page moves through three tiers instead of two:
+//!
+//! * **hot** — owned by ≥ 1 live sequence (never evicted);
+//! * **warm** — zero-ref but resident, parked in the prefix index; the
+//!   moment a page parks it is also *spilled* (write-behind) to the
+//!   store, so pool pressure can demote it to…
+//! * **cold** — on disk only: the weighted eviction
+//!   ([`prefix::PrefixIndex::evict_victim`]) recycles the RAM copy,
+//!   but the verified on-disk record keeps the content resolvable.  A
+//!   prefix-index miss consults the store before re-encoding and
+//!   *promotes* the page back (fresh allocation + full
+//!   CRC/fingerprint/token re-verification); a promotion failure of
+//!   any kind is a miss, never wrong bytes.
+//!
+//! On boot the store rescans its segments and rebuilds the cold
+//! directory, so a restarted server adopts yesterday's system prompts
+//! without re-encoding them (`[cache] persist_dir`).  With no store
+//! attached (the default), nothing touches the filesystem and the
+//! two-tier behavior is unchanged.
+
 pub mod allocator;
 pub mod manager;
 pub mod page;
 pub mod prefix;
+pub mod store;
 
 pub use allocator::{PageAllocator, PageId};
 pub use manager::{CacheManager, GatherWorkspace, PrefixReuse, SeqId};
 pub use page::{chain_key, Page, PageConfig, PrefixKey};
 pub use prefix::PrefixIndex;
+pub use store::{PageStore, StoreConfig, StoreStats};

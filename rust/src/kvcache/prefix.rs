@@ -20,15 +20,25 @@
 //! * when the last owning sequence releases an indexed page, the cache
 //!   manager parks it here as a **zero-ref cached** page: still
 //!   resident, adoptable, and evictable;
-//! * under pool pressure the manager evicts zero-ref entries in LRU
-//!   order ([`PrefixIndex::evict_lru`], O(log n)), which removes the
-//!   index entry and lets the page be recycled.  Pages with live owners
-//!   are never evicted.
+//! * under pool pressure the manager evicts zero-ref entries in
+//!   **weighted** order ([`PrefixIndex::evict_victim`], O(log n)): the
+//!   victim is the parked page with the lowest retention score
+//!   `(reuse + 1) / (depth + 1)` — so root pages (every descendant
+//!   needs them) and frequently re-adopted pages outlive deep,
+//!   never-reused leaves; ties fall back to least-recently-parked.
+//!   Eviction removes the index entry and lets the page be recycled.
+//!   Pages with live owners are never evicted.  When a persistent
+//!   store is attached, pages are spilled at park time, so this same
+//!   ordering is the RAM→disk *demotion* ordering.
 
 use std::collections::{BTreeMap, HashMap};
 
 use super::allocator::PageId;
 use super::page::PrefixKey;
+
+/// Fixed-point scale of the retention score (keeps the reuse/depth
+/// ratio meaningful in integer math).
+const SCORE_SCALE: u64 = 1 << 16;
 
 /// One published prefix page: the page plus the exact chain link it
 /// claims to encode (verified on every lookup).
@@ -37,18 +47,32 @@ struct IndexEntry {
     page: PageId,
     parent: Option<PrefixKey>,
     tokens: Vec<i32>,
+    /// chain position: 0 for the root page of a prompt, +1 per page
+    depth: u32,
+    /// how many times a sequence adopted this page since publish
+    reuse: u32,
+}
+
+impl IndexEntry {
+    /// Retention weight: bigger = keep longer.  Reuse dominates (a
+    /// hot leaf outlives a never-used root); at equal reuse, shallower
+    /// pages win because every descendant's chain walks through them.
+    fn score(&self) -> u64 {
+        (self.reuse as u64 + 1) * SCORE_SCALE / (self.depth as u64 + 1)
+    }
 }
 
 #[derive(Debug, Default)]
 pub struct PrefixIndex {
     /// content key → sealed page holding that prefix run
     map: HashMap<PrefixKey, IndexEntry>,
-    /// zero-ref indexed pages: page → (its key, LRU stamp); only these
-    /// are evictable
-    cached: HashMap<PageId, (PrefixKey, u64)>,
-    /// LRU order over the zero-ref set: stamp → page (stamps are unique)
-    lru: BTreeMap<u64, PageId>,
-    /// monotonic stamp source for LRU ordering
+    /// zero-ref indexed pages: page → (its key, its queue slot); only
+    /// these are evictable
+    cached: HashMap<PageId, (PrefixKey, (u64, u64))>,
+    /// eviction order over the zero-ref set: (score, park stamp) →
+    /// page — the first entry is the next victim
+    queue: BTreeMap<(u64, u64), PageId>,
+    /// monotonic stamp source for the park-time tiebreak
     clock: u64,
 }
 
@@ -91,17 +115,28 @@ impl PrefixIndex {
         self.map.get(&key).map(|e| e.page) == Some(page)
     }
 
+    /// The chain link recorded for `key`: (page, parent, token run,
+    /// depth).  The persistence layer uses this to serialize a parked
+    /// page without re-deriving its chain.
+    pub fn entry_meta(&self, key: PrefixKey) -> Option<(PageId, Option<PrefixKey>, &[i32], u32)> {
+        self.map
+            .get(&key)
+            .map(|e| (e.page, e.parent, e.tokens.as_slice(), e.depth))
+    }
+
     /// Publish a sealed page under its content key, recording the token
-    /// run and parent link for lookup verification.  First publisher
-    /// wins: if the key is already mapped (another sequence sealed the
-    /// same content first) the entry is left untouched and `false` is
-    /// returned — the caller's page simply stays private.
+    /// run, parent link, and chain depth for lookup verification and
+    /// eviction weighting.  First publisher wins: if the key is already
+    /// mapped (another sequence sealed the same content first) the
+    /// entry is left untouched and `false` is returned — the caller's
+    /// page simply stays private.
     pub fn publish(
         &mut self,
         key: PrefixKey,
         page: PageId,
         parent: Option<PrefixKey>,
         tokens: &[i32],
+        depth: u32,
     ) -> bool {
         use std::collections::hash_map::Entry;
         match self.map.entry(key) {
@@ -111,35 +146,55 @@ impl PrefixIndex {
                     page,
                     parent,
                     tokens: tokens.to_vec(),
+                    depth,
+                    reuse: 0,
                 });
                 true
             }
         }
     }
 
-    /// A sequence adopted `page` (its refcount is about to go ≥ 1): it
-    /// is no longer evictable.
-    pub fn on_adopt(&mut self, page: PageId) {
-        if let Some((_, stamp)) = self.cached.remove(&page) {
-            self.lru.remove(&stamp);
+    /// Remove a page from the evictable set (it is about to gain an
+    /// owner, or must be protected while one is being arranged).
+    /// Carries no reuse credit — see [`PrefixIndex::credit_reuse`].
+    pub fn unpark(&mut self, page: PageId) {
+        if let Some((_, slot)) = self.cached.remove(&page) {
+            self.queue.remove(&slot);
+        }
+    }
+
+    /// Credit one adoption to the entry under `key`: its reuse count —
+    /// the dominant term of the retention score — grows.  Kept separate
+    /// from [`PrefixIndex::unpark`] so a walk that pins pages and then
+    /// fails (releasing them unused) does not inflate their scores.
+    pub fn credit_reuse(&mut self, key: PrefixKey, page: PageId) {
+        if let Some(e) = self.map.get_mut(&key) {
+            if e.page == page {
+                e.reuse = e.reuse.saturating_add(1);
+            }
         }
     }
 
     /// Park a zero-ref indexed page as cached/evictable.  `key` must be
-    /// the key the index maps to this page.
+    /// the key the index maps to this page.  The eviction slot is
+    /// scored now, from the entry's current reuse count (reuse only
+    /// changes while adopted, i.e. while not parked).
     pub fn cache_zero_ref(&mut self, page: PageId, key: PrefixKey) {
         debug_assert!(self.is_indexed(key, page));
+        let score = self.map.get(&key).map(|e| e.score()).unwrap_or(0);
         self.clock += 1;
-        self.cached.insert(page, (key, self.clock));
-        self.lru.insert(self.clock, page);
+        let slot = (score, self.clock);
+        self.cached.insert(page, (key, slot));
+        self.queue.insert(slot, page);
     }
 
-    /// Evict the least-recently-parked zero-ref page: removes the
-    /// cached entry and the index mapping, returning the page for the
-    /// caller to recycle.  `None` when nothing is evictable.
-    pub fn evict_lru(&mut self) -> Option<PageId> {
-        let (_, page) = self.lru.pop_first()?;
-        let (key, _) = self.cached.remove(&page).expect("lru/cached out of sync");
+    /// Evict the lowest-scored zero-ref page (ties: least recently
+    /// parked): removes the cached entry and the index mapping,
+    /// returning the page for the caller to recycle.  `None` when
+    /// nothing is evictable.
+    pub fn evict_victim(&mut self) -> Option<PageId> {
+        let (_, page) = self.queue.pop_first()?;
+        let (key, _) = self.cached.remove(&page).expect("queue/cached out of sync");
         let removed = self.map.remove(&key).map(|e| e.page);
         debug_assert_eq!(removed, Some(page));
         Some(page)
@@ -163,10 +218,10 @@ mod tests {
     fn publish_lookup_first_wins() {
         let mut idx = PrefixIndex::new();
         assert!(idx.lookup(key(1), None, &toks(1)).is_none());
-        assert!(idx.publish(key(1), 10, None, &toks(1)));
+        assert!(idx.publish(key(1), 10, None, &toks(1), 0));
         assert_eq!(idx.lookup(key(1), None, &toks(1)), Some(10));
         // second publisher of the same content loses
-        assert!(!idx.publish(key(1), 11, None, &toks(1)));
+        assert!(!idx.publish(key(1), 11, None, &toks(1), 0));
         assert_eq!(idx.lookup(key(1), None, &toks(1)), Some(10));
         assert!(idx.is_indexed(key(1), 10));
         assert!(!idx.is_indexed(key(1), 11));
@@ -176,7 +231,7 @@ mod tests {
     #[test]
     fn lookup_verifies_tokens_and_parent_not_just_hash() {
         let mut idx = PrefixIndex::new();
-        idx.publish(key(1), 10, None, &toks(1));
+        idx.publish(key(1), 10, None, &toks(1), 0);
         // same key, wrong tokens (simulated collision) → miss
         assert_eq!(idx.lookup(key(1), None, &toks(2)), None);
         // same key + tokens, wrong parent link → miss
@@ -186,39 +241,82 @@ mod tests {
     }
 
     #[test]
-    fn lru_eviction_order() {
+    fn entry_meta_exposes_the_chain_link() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(key(2), 4, Some(key(1)), &toks(2), 3);
+        let (page, parent, tokens, depth) = idx.entry_meta(key(2)).unwrap();
+        assert_eq!(page, 4);
+        assert_eq!(parent, Some(key(1)));
+        assert_eq!(tokens, &toks(2)[..]);
+        assert_eq!(depth, 3);
+        assert!(idx.entry_meta(key(9)).is_none());
+    }
+
+    #[test]
+    fn equal_scores_evict_in_park_order() {
         let mut idx = PrefixIndex::new();
         for i in 0..3u64 {
-            idx.publish(key(i), i as PageId, None, &toks(i));
+            idx.publish(key(i), i as PageId, None, &toks(i), 0);
         }
         assert_eq!(idx.cached_len(), 0);
-        // park in order 1, 0, 2 → eviction order must follow
+        // same depth, same reuse → pure LRU tiebreak: park 1, 0, 2
         idx.cache_zero_ref(1, key(1));
         idx.cache_zero_ref(0, key(0));
         idx.cache_zero_ref(2, key(2));
         assert_eq!(idx.cached_len(), 3);
-        assert_eq!(idx.evict_lru(), Some(1));
-        assert_eq!(idx.evict_lru(), Some(0));
-        assert_eq!(idx.evict_lru(), Some(2));
-        assert_eq!(idx.evict_lru(), None);
+        assert_eq!(idx.evict_victim(), Some(1));
+        assert_eq!(idx.evict_victim(), Some(0));
+        assert_eq!(idx.evict_victim(), Some(2));
+        assert_eq!(idx.evict_victim(), None);
         // evicted entries are gone from the map too
         assert!(idx.lookup(key(0), None, &toks(0)).is_none());
         assert_eq!(idx.len(), 0);
     }
 
     #[test]
+    fn deep_pages_evict_before_roots() {
+        let mut idx = PrefixIndex::new();
+        // a 3-page chain parked root-first (LRU alone would evict the
+        // root first — the depth weight must override it)
+        for depth in 0..3u32 {
+            idx.publish(key(depth as u64), depth as PageId, None, &toks(depth as u64), depth);
+            idx.cache_zero_ref(depth as PageId, key(depth as u64));
+        }
+        assert_eq!(idx.evict_victim(), Some(2), "leaf goes first");
+        assert_eq!(idx.evict_victim(), Some(1));
+        assert_eq!(idx.evict_victim(), Some(0), "root goes last");
+    }
+
+    #[test]
+    fn reuse_outweighs_depth() {
+        let mut idx = PrefixIndex::new();
+        // a leaf adopted many times must outlive an unused root:
+        // score(leaf) = (9+1)/(2+1) > score(root) = 1/1
+        idx.publish(key(0), 0, None, &toks(0), 0);
+        idx.publish(key(2), 2, None, &toks(2), 2);
+        for _ in 0..9 {
+            idx.credit_reuse(key(2), 2);
+        }
+        idx.cache_zero_ref(0, key(0));
+        idx.cache_zero_ref(2, key(2));
+        assert_eq!(idx.evict_victim(), Some(0), "cold root evicts first");
+        assert_eq!(idx.evict_victim(), Some(2));
+    }
+
+    #[test]
     fn adoption_removes_from_evictable_set() {
         let mut idx = PrefixIndex::new();
-        idx.publish(key(5), 5, None, &toks(5));
+        idx.publish(key(5), 5, None, &toks(5), 0);
         idx.cache_zero_ref(5, key(5));
         assert_eq!(idx.cached_len(), 1);
-        idx.on_adopt(5);
+        idx.unpark(5);
+        idx.credit_reuse(key(5), 5);
         assert_eq!(idx.cached_len(), 0);
         // adopted page is not evictable, but stays indexed
-        assert_eq!(idx.evict_lru(), None);
+        assert_eq!(idx.evict_victim(), None);
         assert_eq!(idx.lookup(key(5), None, &toks(5)), Some(5));
         // re-parking later works
         idx.cache_zero_ref(5, key(5));
-        assert_eq!(idx.evict_lru(), Some(5));
+        assert_eq!(idx.evict_victim(), Some(5));
     }
 }

@@ -1,0 +1,632 @@
+//! Persistent page store: a cross-restart home for sealed prompt pages.
+//!
+//! PR 3 made sealed prompt pages immutable, content-addressed byte
+//! blocks (chained [`PrefixKey`]s salted with the stage-1 config
+//! fingerprint), and the kernel-equivalence suite guarantees the bytes
+//! are identical across scalar/AVX2/NEON backends — so a page is a
+//! backend-portable artifact that is safe to persist verbatim and
+//! rehydrate on a later boot, the way rotated-KV schemes treat the
+//! quantized cache as a stable low-bit byte format rather than
+//! transient activations.
+//!
+//! # Shape
+//!
+//! * **Segmented append-only log** — records (see [`record`]) are
+//!   appended to `seg-<n>.iqs` files under the persist directory; a
+//!   segment rotates once it crosses `segment_bytes`, and the byte
+//!   budget is enforced by retiring whole oldest segments (their
+//!   directory entries simply disappear — cold entries age out, they
+//!   are never rewritten in place).
+//! * **In-memory directory** — `PrefixKey → (segment, offset, token
+//!   run, parent link)`, rebuilt by scanning the segments at
+//!   [`PageStore::open`].  Like the RAM prefix index, the directory is
+//!   a *hint*: every byte served goes back through full record
+//!   verification at read time.
+//! * **Write-behind spill worker** — [`PageStore::spill`] clones the
+//!   page bytes into a job and returns immediately; a background
+//!   thread ([`spill`]) appends, rotates, and retires.  The clone is
+//!   what lets pool pressure evict the RAM copy while the write is
+//!   still in flight.
+//!
+//! # Trust model (same as the RAM index, extended to disk)
+//!
+//! A record is served only when its CRC verifies, its fingerprint
+//! matches the booting cache's stage-1 config + page geometry, and its
+//! stored token run equals the run the caller is resolving.  A
+//! truncated tail, a flipped bit, a stale config, or a hash collision
+//! all read as a **miss** — the cache re-encodes, it never adopts
+//! wrong bytes.  Corruption stops the scan of that one segment;
+//! records already verified (and other segments) stay usable, and the
+//! worker always appends to a *fresh* segment so a damaged tail is
+//! never extended.
+
+mod record;
+mod spill;
+
+pub use record::{record_len, Crc32, Record, HEADER_LEN};
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fs::{self, File};
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+
+use anyhow::{Context, Result};
+
+use super::page::PrefixKey;
+
+/// Identity + placement of a page store.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    pub dir: PathBuf,
+    /// the owning cache's fingerprint (stage-1 config ⊕ page geometry);
+    /// records from any other fingerprint are invisible
+    pub fingerprint: u64,
+    /// exact page payload size this cache reads/writes
+    pub page_bytes: usize,
+    /// total on-disk budget in bytes (0 = unlimited); enforced by
+    /// retiring oldest segments
+    pub budget_bytes: u64,
+    /// segment rotation threshold
+    pub segment_bytes: u64,
+}
+
+impl StoreConfig {
+    /// Config for a cache with the given identity: segments sized to
+    /// hold a healthy run of pages (≥ 64 pages or 8 MiB, whichever is
+    /// larger) so retirement granularity stays reasonable.
+    pub fn for_cache(
+        dir: PathBuf,
+        fingerprint: u64,
+        page_bytes: usize,
+        budget_bytes: u64,
+    ) -> StoreConfig {
+        let segment_bytes = (8u64 << 20).max(64 * record::record_len(64, page_bytes) as u64);
+        StoreConfig {
+            dir,
+            fingerprint,
+            page_bytes,
+            budget_bytes,
+            segment_bytes,
+        }
+    }
+}
+
+/// Store-side counters (see also `metrics::ShareStats` for the
+/// cache-side spill/promote view).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// records adopted into the directory by the boot-time scan
+    pub rehydrated: u64,
+    /// CRC-clean records skipped because they belong to another
+    /// config/geometry fingerprint
+    pub stale_skipped: u64,
+    /// segments whose scan stopped early on a damaged record
+    pub corrupt_tails: u64,
+    /// records durably appended by the spill worker
+    pub spilled: u64,
+    /// spill append failures (record dropped, fresh segment next time)
+    pub spill_errors: u64,
+    /// whole segments retired to stay inside the byte budget
+    pub retired_segments: u64,
+    /// read-time verification failures (entry dropped, served as miss)
+    pub read_errors: u64,
+}
+
+/// Where one key's record lives on disk.
+#[derive(Debug)]
+struct DirEntry {
+    segment: u64,
+    offset: u64,
+    len: u64,
+    parent: Option<PrefixKey>,
+    tokens: Vec<i32>,
+}
+
+/// State shared between the front-end API and the spill worker.
+pub(crate) struct Shared {
+    dir: HashMap<PrefixKey, DirEntry>,
+    /// bytes per segment currently on disk (the largest id is the
+    /// worker's active segment)
+    segments: BTreeMap<u64, u64>,
+    /// keys enqueued for spill but not yet durable (write dedup)
+    pending: HashSet<PrefixKey>,
+    stats: StoreStats,
+}
+
+impl Shared {
+    /// Retire whole oldest segments until `budget` is met, never
+    /// touching `protect` (the spill worker's active segment).  Drops
+    /// the retired segments' directory entries and returns (retired
+    /// segment ids for the caller to unlink, directory entries
+    /// dropped).  The one retirement policy for both the boot scan and
+    /// the steady-state append path.
+    fn retire_over_budget(&mut self, budget: u64, protect: Option<u64>) -> (Vec<u64>, u64) {
+        let mut retired = Vec::new();
+        let mut dropped = 0u64;
+        if budget == 0 {
+            return (retired, dropped);
+        }
+        while self.segments.values().sum::<u64>() > budget {
+            let Some((&oldest, _)) = self.segments.first_key_value() else {
+                break;
+            };
+            if Some(oldest) == protect {
+                break;
+            }
+            self.segments.remove(&oldest);
+            let before = self.dir.len();
+            self.dir.retain(|_, e| e.segment != oldest);
+            dropped += (before - self.dir.len()) as u64;
+            self.stats.retired_segments += 1;
+            retired.push(oldest);
+        }
+        (retired, dropped)
+    }
+}
+
+pub struct PageStore {
+    cfg: StoreConfig,
+    shared: Arc<Mutex<Shared>>,
+    tx: Option<mpsc::Sender<spill::Job>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for PageStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PageStore")
+            .field("dir", &self.cfg.dir)
+            .field("entries", &self.len())
+            .finish()
+    }
+}
+
+/// Path of segment `id` under `dir` — the one source of the segment
+/// naming scheme (tests build/inspect segment files through this).
+pub fn segment_path(dir: &std::path::Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id:08}.iqs"))
+}
+
+impl PageStore {
+    /// Open (or create) the store at `cfg.dir` and rehydrate the
+    /// directory by scanning every segment.  Damaged records terminate
+    /// their segment's scan; stale-fingerprint records are skipped;
+    /// duplicate keys keep the newest copy (the content is identical
+    /// by construction, and the newest segment outlives retirement
+    /// longest).
+    pub fn open(cfg: StoreConfig) -> Result<PageStore> {
+        fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("create persist dir {}", cfg.dir.display()))?;
+        let mut shared = Shared {
+            dir: HashMap::new(),
+            segments: BTreeMap::new(),
+            pending: HashSet::new(),
+            stats: StoreStats::default(),
+        };
+        let mut ids: Vec<u64> = Vec::new();
+        for entry in fs::read_dir(&cfg.dir)
+            .with_context(|| format!("read persist dir {}", cfg.dir.display()))?
+        {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name
+                .strip_prefix("seg-")
+                .and_then(|s| s.strip_suffix(".iqs"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        for &id in &ids {
+            scan_segment(&cfg, id, &mut shared);
+        }
+        // enforce the budget at boot too: a store written under a
+        // larger budget (or whose entries only ever re-park, which the
+        // spill dedup skips) must shrink to the configured bound now,
+        // not wait for an append that may never come.  Records the
+        // retirement discards were never really rehydrated
+        let (retired, dropped) = shared.retire_over_budget(cfg.budget_bytes, None);
+        shared.stats.rehydrated = shared.stats.rehydrated.saturating_sub(dropped);
+        for id in retired {
+            let _ = fs::remove_file(segment_path(&cfg.dir, id));
+        }
+        // the worker never appends to an existing segment: a damaged
+        // tail must not be extended, and retirement stays whole-file
+        let next_segment = ids.last().map(|&i| i + 1).unwrap_or(0);
+        let shared = Arc::new(Mutex::new(shared));
+        let (tx, rx) = mpsc::channel();
+        let worker = spill::spawn(cfg.clone(), shared.clone(), rx, next_segment)?;
+        Ok(PageStore {
+            cfg,
+            shared,
+            tx: Some(tx),
+            worker: Some(worker),
+        })
+    }
+
+    pub fn cfg(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.cfg.fingerprint
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Shared> {
+        self.shared.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Cold entries currently resolvable from disk.
+    pub fn len(&self) -> usize {
+        self.lock().dir.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total segment bytes on disk.
+    pub fn disk_bytes(&self) -> u64 {
+        self.lock().segments.values().sum()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.lock().stats
+    }
+
+    /// Verified membership probe (no I/O): does the store hold a record
+    /// for exactly this chain link?  Token + parent verification makes
+    /// a key collision read as a miss, matching the RAM index contract.
+    pub fn lookup_meta(
+        &self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        tokens: &[i32],
+    ) -> bool {
+        let s = self.lock();
+        s.dir
+            .get(&key)
+            .is_some_and(|e| e.parent == parent && e.tokens == tokens)
+    }
+
+    /// Read and fully re-verify one page from disk.  Any failure —
+    /// vanished segment, torn read, CRC, identity mismatch — drops the
+    /// directory entry and returns `None` (a miss, never wrong bytes).
+    pub fn read_page(
+        &self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        tokens: &[i32],
+    ) -> Option<Vec<u8>> {
+        let (segment, offset, len) = {
+            let s = self.lock();
+            let e = s.dir.get(&key)?;
+            if e.parent != parent || e.tokens != tokens {
+                return None;
+            }
+            (e.segment, e.offset, e.len)
+        };
+        let page = (|| -> Option<Vec<u8>> {
+            let mut f = File::open(segment_path(&self.cfg.dir, segment)).ok()?;
+            f.seek(SeekFrom::Start(offset)).ok()?;
+            let mut buf = vec![0u8; len as usize];
+            f.read_exact(&mut buf).ok()?;
+            match record::read_record(&mut &buf[..], self.cfg.fingerprint, self.cfg.page_bytes) {
+                record::ReadOutcome::Ok(rec)
+                    if rec.key == key && rec.parent == parent && rec.tokens == tokens =>
+                {
+                    Some(rec.page)
+                }
+                _ => None,
+            }
+        })();
+        if page.is_none() {
+            let mut s = self.lock();
+            s.dir.remove(&key);
+            s.stats.read_errors += 1;
+        }
+        page
+    }
+
+    /// Enqueue a page for write-behind persistence.  Returns `true`
+    /// when a job was actually queued (a key already durable or already
+    /// pending is skipped — content addressing makes rewrites useless).
+    /// The page bytes are cloned into the job, so the caller may evict
+    /// or reuse the RAM copy immediately.
+    pub fn spill(
+        &self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        tokens: &[i32],
+        page: &[u8],
+    ) -> bool {
+        debug_assert_eq!(page.len(), self.cfg.page_bytes);
+        {
+            let mut s = self.lock();
+            if s.dir.contains_key(&key) || !s.pending.insert(key) {
+                return false;
+            }
+        }
+        let job = spill::Job::Spill {
+            key,
+            parent,
+            tokens: tokens.to_vec(),
+            page: page.to_vec(),
+        };
+        match self.tx.as_ref().map(|tx| tx.send(job)) {
+            Some(Ok(())) => true,
+            _ => {
+                self.lock().pending.remove(&key);
+                false
+            }
+        }
+    }
+
+    /// Block until every spill enqueued so far is durable (fsync'd).
+    pub fn flush(&self) {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if let Some(tx) = self.tx.as_ref() {
+            if tx.send(spill::Job::Flush(ack_tx)).is_ok() {
+                let _ = ack_rx.recv();
+            }
+        }
+    }
+}
+
+impl Drop for PageStore {
+    fn drop(&mut self) {
+        // closing the channel lets the worker drain the queue and exit;
+        // joining makes shutdown persistence deterministic
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scan one segment into the directory.  Stops at the first damaged
+/// record; everything before it is trustworthy (and re-verified again
+/// at read time anyway).
+fn scan_segment(cfg: &StoreConfig, id: u64, shared: &mut Shared) {
+    let path = segment_path(&cfg.dir, id);
+    let Ok(file) = File::open(&path) else { return };
+    let disk_len = file.metadata().map(|m| m.len()).unwrap_or(0);
+    let mut r = BufReader::new(file);
+    let mut offset = 0u64;
+    loop {
+        match record::read_record(&mut r, cfg.fingerprint, cfg.page_bytes) {
+            record::ReadOutcome::Eof => break,
+            record::ReadOutcome::Ok(rec) => {
+                let len = rec.encoded_len() as u64;
+                // newest copy wins (segments scan oldest→newest): a key
+                // can legitimately recur — a dropped-then-respilled
+                // entry, or a second writer — and the bytes are
+                // identical by content addressing, so pointing at the
+                // newest record keeps the key resolvable for as long
+                // as budget retirement allows.  `rehydrated` counts
+                // unique resolvable keys, not raw records
+                let prev = shared.dir.insert(
+                    rec.key,
+                    DirEntry {
+                        segment: id,
+                        offset,
+                        len,
+                        parent: rec.parent,
+                        tokens: rec.tokens,
+                    },
+                );
+                if prev.is_none() {
+                    shared.stats.rehydrated += 1;
+                }
+                offset += len;
+            }
+            record::ReadOutcome::Stale(rec) => {
+                shared.stats.stale_skipped += 1;
+                offset += rec.encoded_len() as u64;
+            }
+            record::ReadOutcome::Corrupt(_) => {
+                shared.stats.corrupt_tails += 1;
+                break;
+            }
+        }
+    }
+    // budget accounting uses the real file size (a damaged tail still
+    // occupies disk until its segment retires)
+    shared.segments.insert(id, disk_len);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::page::chain_key;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "isoquant-store-{}-{}-{tag}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cfg(dir: &PathBuf, fingerprint: u64) -> StoreConfig {
+        StoreConfig {
+            dir: dir.clone(),
+            fingerprint,
+            page_bytes: 64,
+            budget_bytes: 0,
+            segment_bytes: 4096,
+        }
+    }
+
+    fn key(i: u64) -> PrefixKey {
+        chain_key(None, &[i as i32], 0xF00D)
+    }
+
+    #[test]
+    fn spill_flush_reopen_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let page_a = vec![0xA5u8; 64];
+        let page_b = vec![0x3Cu8; 64];
+        {
+            let store = PageStore::open(cfg(&dir, 7)).unwrap();
+            assert!(store.spill(key(1), None, &[10, 11], &page_a));
+            assert!(store.spill(key(2), Some(key(1)), &[12], &page_b));
+            // dedup: same key again is a no-op
+            assert!(!store.spill(key(1), None, &[10, 11], &page_a));
+            store.flush();
+            assert_eq!(store.len(), 2);
+            assert_eq!(store.stats().spilled, 2);
+            // verified reads
+            assert_eq!(store.read_page(key(1), None, &[10, 11]), Some(page_a.clone()));
+            // wrong tokens / parent → miss without touching the entry
+            assert!(!store.lookup_meta(key(1), None, &[10, 12]));
+            assert!(!store.lookup_meta(key(2), None, &[12]));
+        }
+        // reopen: directory rebuilt from disk
+        let store = PageStore::open(cfg(&dir, 7)).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats().rehydrated, 2);
+        assert_eq!(store.read_page(key(2), Some(key(1)), &[12]), Some(page_b));
+        // a different fingerprint sees nothing
+        drop(store);
+        let other = PageStore::open(cfg(&dir, 8)).unwrap();
+        assert_eq!(other.len(), 0);
+        assert_eq!(other.stats().stale_skipped, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_rehydrates_partial_and_appends_to_fresh_segment() {
+        let dir = tmpdir("trunc");
+        {
+            let store = PageStore::open(cfg(&dir, 7)).unwrap();
+            for i in 0..3u64 {
+                store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+            }
+            store.flush();
+        }
+        // chop the single segment mid-way through the last record
+        let seg = segment_path(&dir, 0);
+        let len = fs::metadata(&seg).unwrap().len();
+        let f = fs::OpenOptions::new().write(true).open(&seg).unwrap();
+        f.set_len(len - 10).unwrap();
+        drop(f);
+        {
+            let store = PageStore::open(cfg(&dir, 7)).unwrap();
+            assert_eq!(store.len(), 2, "two intact records survive");
+            assert_eq!(store.stats().corrupt_tails, 1);
+            assert_eq!(store.read_page(key(0), None, &[0]), Some(vec![0u8; 64]));
+            assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![1u8; 64]));
+            assert!(store.read_page(key(2), None, &[2]).is_none());
+            // new spills land in seg-1, not after the damaged tail
+            store.spill(key(9), None, &[9], &vec![9u8; 64]);
+            store.flush();
+            assert!(segment_path(&dir, 1).exists());
+        }
+        // and the recovered store reopens clean
+        let store = PageStore::open(cfg(&dir, 7)).unwrap();
+        assert_eq!(store.len(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_flip_drops_only_the_damaged_suffix() {
+        let dir = tmpdir("flip");
+        {
+            let store = PageStore::open(cfg(&dir, 7)).unwrap();
+            for i in 0..3u64 {
+                store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+            }
+            store.flush();
+        }
+        // flip one bit inside record 1's page payload
+        let seg = segment_path(&dir, 0);
+        let mut bytes = fs::read(&seg).unwrap();
+        let rec_len = record::record_len(1, 64);
+        bytes[rec_len + record::HEADER_LEN + 4 + 7] ^= 0x10;
+        fs::write(&seg, &bytes).unwrap();
+        let store = PageStore::open(cfg(&dir, 7)).unwrap();
+        // record 0 intact; the scan stops at the damaged record, so 2
+        // is also gone — a *partial* index, never wrong bytes
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.read_page(key(0), None, &[0]), Some(vec![0u8; 64]));
+        assert!(store.read_page(key(1), None, &[1]).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_retires_oldest_segments() {
+        let dir = tmpdir("budget");
+        let one_record = record::record_len(1, 64) as u64;
+        let mut c = cfg(&dir, 7);
+        c.segment_bytes = one_record; // one record per segment
+        c.budget_bytes = 3 * one_record;
+        let store = PageStore::open(c).unwrap();
+        for i in 0..6u64 {
+            store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+        }
+        store.flush();
+        let stats = store.stats();
+        assert_eq!(stats.spilled, 6);
+        assert!(stats.retired_segments >= 2, "budget must retire segments");
+        assert!(store.disk_bytes() <= 3 * one_record + one_record);
+        // oldest keys aged out, newest still resolvable
+        assert!(store.read_page(key(0), None, &[0]).is_none());
+        assert_eq!(store.read_page(key(5), None, &[5]), Some(vec![5u8; 64]));
+        // an aged-out key can be re-spilled
+        assert!(store.spill(key(0), None, &[0], &vec![0u8; 64]));
+        store.flush();
+        assert_eq!(store.read_page(key(0), None, &[0]), Some(vec![0u8; 64]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopening_under_a_smaller_budget_retires_at_boot() {
+        let dir = tmpdir("shrink");
+        let one_record = record::record_len(1, 64) as u64;
+        let mut c = cfg(&dir, 7);
+        c.segment_bytes = one_record; // one record per segment
+        {
+            let store = PageStore::open(c.clone()).unwrap();
+            for i in 0..5u64 {
+                store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+            }
+            store.flush();
+            assert_eq!(store.len(), 5);
+        }
+        // the operator lowers the budget and restarts: the store must
+        // shrink immediately, not wait for a future append
+        c.budget_bytes = 2 * one_record;
+        let store = PageStore::open(c).unwrap();
+        assert!(store.disk_bytes() <= 2 * one_record);
+        assert_eq!(store.len(), 2, "only the newest records survive");
+        assert_eq!(
+            store.stats().rehydrated,
+            2,
+            "records discarded by boot retirement must not count as rehydrated"
+        );
+        assert!(store.read_page(key(0), None, &[0]).is_none());
+        assert_eq!(store.read_page(key(4), None, &[4]), Some(vec![4u8; 64]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn vanished_segment_reads_as_miss() {
+        let dir = tmpdir("vanish");
+        let store = PageStore::open(cfg(&dir, 7)).unwrap();
+        store.spill(key(1), None, &[1], &vec![1u8; 64]);
+        store.flush();
+        fs::remove_file(segment_path(&dir, 0)).unwrap();
+        assert!(store.read_page(key(1), None, &[1]).is_none());
+        assert_eq!(store.stats().read_errors, 1);
+        // the broken entry is dropped, not retried forever
+        assert_eq!(store.len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,358 @@
+//! On-disk record format of the persistent page store.
+//!
+//! One record = one sealed prompt page plus everything a cold boot
+//! needs to re-verify it before trusting a single byte:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"IQPG"
+//!      4     2  version (= 1, little-endian)
+//!      6     2  flags   (bit 0: parent key present)
+//!      8     8  key         (PrefixKey)
+//!     16     8  parent      (0 when flags bit 0 is clear)
+//!     24     8  fingerprint (Stage1Config fingerprint ⊕ page geometry)
+//!     32     4  n_tokens    (token ids covered by this page)
+//!     36     4  page_len    (bytes of page payload)
+//!     40     4  crc32       (IEEE, over bytes [4..40) ++ tokens ++ page)
+//!     44     …  tokens      (n_tokens × i32, little-endian)
+//!      …     …  page bytes  (page_len)
+//! ```
+//!
+//! The trust model mirrors the in-RAM [`super::super::prefix::PrefixIndex`]:
+//! a key alone is never believed.  A record is only served when the
+//! magic/version parse, the CRC covers the *exact* token run and page
+//! bytes, the fingerprint matches the booting cache's stage-1 config +
+//! page geometry, and the caller's token run equals the stored one.
+//! Anything less — truncation, a flipped bit, a record written by a
+//! different config — reads as a **miss**, never as another prompt's
+//! pages.
+
+use std::io::Read;
+
+use super::super::page::PrefixKey;
+
+pub const MAGIC: [u8; 4] = *b"IQPG";
+pub const VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 44;
+const FLAG_HAS_PARENT: u16 = 1;
+
+/// Upper bounds used only to reject absurd length fields before any
+/// allocation happens (a corrupt header must not OOM the scan).
+const MAX_TOKENS: u32 = 1 << 20;
+const MAX_PAGE_LEN: u32 = 1 << 30;
+
+/// One fully parsed and CRC-verified record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub key: PrefixKey,
+    pub parent: Option<PrefixKey>,
+    pub fingerprint: u64,
+    pub tokens: Vec<i32>,
+    pub page: Vec<u8>,
+}
+
+impl Record {
+    /// Total serialized size of this record.
+    pub fn encoded_len(&self) -> usize {
+        record_len(self.tokens.len(), self.page.len())
+    }
+}
+
+pub fn record_len(n_tokens: usize, page_len: usize) -> usize {
+    HEADER_LEN + n_tokens * 4 + page_len
+}
+
+/// Serialize a record, appending to `out`.
+pub fn encode_record(
+    out: &mut Vec<u8>,
+    key: PrefixKey,
+    parent: Option<PrefixKey>,
+    fingerprint: u64,
+    tokens: &[i32],
+    page: &[u8],
+) {
+    let flags: u16 = if parent.is_some() { FLAG_HAS_PARENT } else { 0 };
+    out.reserve(record_len(tokens.len(), page.len()));
+    out.extend_from_slice(&MAGIC);
+    let body_start = out.len();
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&key.0.to_le_bytes());
+    out.extend_from_slice(&parent.map(|k| k.0).unwrap_or(0).to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(page.len() as u32).to_le_bytes());
+    let mut crc = Crc32::new();
+    crc.update(&out[body_start..]);
+    for &t in tokens {
+        crc.update(&(t as u32).to_le_bytes());
+    }
+    crc.update(page);
+    out.extend_from_slice(&crc.finish().to_le_bytes());
+    for &t in tokens {
+        out.extend_from_slice(&(t as u32).to_le_bytes());
+    }
+    out.extend_from_slice(page);
+}
+
+/// What one attempted record read produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// clean end of the segment (zero bytes where the next header
+    /// would start)
+    Eof,
+    /// a fully verified record
+    Ok(Record),
+    /// a structurally valid, CRC-clean record that belongs to another
+    /// cache (stage-1 config / page geometry fingerprint differs) —
+    /// safe to skip and keep scanning
+    Stale(Record),
+    /// the segment is damaged from here on (bad magic/version, absurd
+    /// lengths, truncation, or CRC failure) — the scan of this segment
+    /// must stop; everything already returned stays trustworthy
+    Corrupt(&'static str),
+}
+
+/// Read and verify one record.  `expect_fingerprint` and
+/// `expect_page_len` pin the booting cache's identity; a CRC-clean
+/// record that does not match them is [`ReadOutcome::Stale`].
+pub fn read_record(
+    r: &mut impl Read,
+    expect_fingerprint: u64,
+    expect_page_len: usize,
+) -> ReadOutcome {
+    let mut header = [0u8; HEADER_LEN];
+    match read_exact_or_eof(r, &mut header) {
+        Fill::Eof => return ReadOutcome::Eof,
+        Fill::Partial => return ReadOutcome::Corrupt("truncated header"),
+        Fill::Full => {}
+    }
+    if header[0..4] != MAGIC {
+        return ReadOutcome::Corrupt("bad magic");
+    }
+    if u16::from_le_bytes([header[4], header[5]]) != VERSION {
+        return ReadOutcome::Corrupt("unknown version");
+    }
+    let flags = u16::from_le_bytes([header[6], header[7]]);
+    let key = PrefixKey(le_u64(&header[8..16]));
+    let parent_raw = le_u64(&header[16..24]);
+    let fingerprint = le_u64(&header[24..32]);
+    let n_tokens = u32::from_le_bytes(header[32..36].try_into().unwrap());
+    let page_len = u32::from_le_bytes(header[36..40].try_into().unwrap());
+    let crc_stored = u32::from_le_bytes(header[40..44].try_into().unwrap());
+    if n_tokens > MAX_TOKENS || page_len > MAX_PAGE_LEN {
+        return ReadOutcome::Corrupt("absurd length field");
+    }
+    let mut tok_bytes = vec![0u8; n_tokens as usize * 4];
+    if !matches!(read_exact_or_eof(r, &mut tok_bytes), Fill::Full) {
+        return ReadOutcome::Corrupt("truncated token run");
+    }
+    let mut page = vec![0u8; page_len as usize];
+    if !matches!(read_exact_or_eof(r, &mut page), Fill::Full) {
+        return ReadOutcome::Corrupt("truncated page payload");
+    }
+    let mut crc = Crc32::new();
+    crc.update(&header[4..40]);
+    crc.update(&tok_bytes);
+    crc.update(&page);
+    if crc.finish() != crc_stored {
+        return ReadOutcome::Corrupt("crc mismatch");
+    }
+    let parent = (flags & FLAG_HAS_PARENT != 0).then_some(PrefixKey(parent_raw));
+    let tokens = tok_bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as i32)
+        .collect();
+    let rec = Record {
+        key,
+        parent,
+        fingerprint,
+        tokens,
+        page,
+    };
+    if fingerprint != expect_fingerprint || page_len as usize != expect_page_len {
+        ReadOutcome::Stale(rec)
+    } else {
+        ReadOutcome::Ok(rec)
+    }
+}
+
+enum Fill {
+    Full,
+    Partial,
+    Eof,
+}
+
+/// `read_exact` that distinguishes a clean EOF at offset 0 (the normal
+/// end of a segment) from a mid-record truncation.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Fill {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return if got == 0 { Fill::Eof } else { Fill::Partial },
+            Ok(n) => got += n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Fill::Partial,
+        }
+    }
+    Fill::Full
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().unwrap())
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3), table-driven — no external crates in the
+// offline build, and the polynomial choice matches what readers expect
+// from a "crc32" field.
+// ---------------------------------------------------------------------
+
+pub struct Crc32 {
+    state: u32,
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(parent: bool) -> Vec<u8> {
+        let mut buf = Vec::new();
+        encode_record(
+            &mut buf,
+            PrefixKey(0xABCD),
+            parent.then_some(PrefixKey(0x1234)),
+            77,
+            &[5, -2, 900_000],
+            &[9u8; 64],
+        );
+        buf
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic check value: CRC-32("123456789") = 0xCBF43926
+        let mut c = Crc32::new();
+        c.update(b"123456789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+        // streaming in pieces matches one-shot
+        let mut s = Crc32::new();
+        s.update(b"1234");
+        s.update(b"56789");
+        assert_eq!(s.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn roundtrip_with_and_without_parent() {
+        for parent in [false, true] {
+            let buf = sample(parent);
+            assert_eq!(buf.len(), record_len(3, 64));
+            let mut r = &buf[..];
+            match read_record(&mut r, 77, 64) {
+                ReadOutcome::Ok(rec) => {
+                    assert_eq!(rec.key, PrefixKey(0xABCD));
+                    assert_eq!(rec.parent, parent.then_some(PrefixKey(0x1234)));
+                    assert_eq!(rec.tokens, vec![5, -2, 900_000]);
+                    assert_eq!(rec.page, vec![9u8; 64]);
+                }
+                other => panic!("expected Ok, got {other:?}"),
+            }
+            // the stream is fully consumed: next read is a clean EOF
+            assert!(matches!(read_record(&mut r, 77, 64), ReadOutcome::Eof));
+        }
+    }
+
+    #[test]
+    fn wrong_fingerprint_or_page_len_is_stale_not_corrupt() {
+        let buf = sample(true);
+        assert!(matches!(
+            read_record(&mut &buf[..], 78, 64),
+            ReadOutcome::Stale(_)
+        ));
+        assert!(matches!(
+            read_record(&mut &buf[..], 77, 65),
+            ReadOutcome::Stale(_)
+        ));
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let buf = sample(true);
+        for bit in 0..buf.len() * 8 {
+            let mut bad = buf.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            // the CRC covers everything after the magic, and a magic /
+            // CRC-field flip fails its own check, so *every* flip must
+            // surface as Corrupt — never as a valid or stale record
+            match read_record(&mut &bad[..], 77, 64) {
+                ReadOutcome::Corrupt(_) => {}
+                other => panic!("bit {bit}: flip read as {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_at_any_point_is_corrupt() {
+        let buf = sample(false);
+        for cut in 1..buf.len() {
+            match read_record(&mut &buf[..cut], 77, 64) {
+                ReadOutcome::Corrupt(_) => {}
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+        // cutting to zero bytes is the clean EOF
+        assert!(matches!(read_record(&mut &buf[..0], 77, 64), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn absurd_lengths_rejected_before_allocation() {
+        let mut buf = sample(false);
+        buf[32..36].copy_from_slice(&u32::MAX.to_le_bytes()); // n_tokens
+        assert!(matches!(
+            read_record(&mut &buf[..], 77, 64),
+            ReadOutcome::Corrupt("absurd length field")
+        ));
+    }
+}

@@ -1,0 +1,173 @@
+//! Write-behind spill worker: the background thread that makes parked
+//! prefix pages durable.
+//!
+//! The cache manager's zero-ref parking path feeds this thread through
+//! [`super::PageStore::spill`]; each job owns a copy of the page bytes,
+//! so the RAM copy can be evicted the moment the job is queued.  The
+//! worker appends records to the active segment, rotates at
+//! `segment_bytes`, and enforces the byte budget by retiring whole
+//! oldest segments (never the active one).  A failed append poisons the
+//! active segment (the next job starts a fresh one) so a half-written
+//! record is never extended — on the next boot the damaged tail reads
+//! as a clean end-of-segment.
+//!
+//! Durability: segment data is flushed on every append (plain
+//! `write_all` on an unbuffered `File`) and fsync'd on [`Job::Flush`]
+//! and at shutdown; per-record fsync is deliberately not done (the
+//! store is a cache of recomputable artifacts — losing the last few
+//! records to a crash costs a re-encode, not correctness).
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::Result;
+
+use super::super::page::PrefixKey;
+use super::{record, segment_path, Shared, StoreConfig};
+
+pub(crate) enum Job {
+    Spill {
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        tokens: Vec<i32>,
+        page: Vec<u8>,
+    },
+    /// fsync the active segment, then ack
+    Flush(mpsc::Sender<()>),
+}
+
+pub(crate) fn spawn(
+    cfg: StoreConfig,
+    shared: Arc<Mutex<Shared>>,
+    rx: mpsc::Receiver<Job>,
+    next_segment: u64,
+) -> Result<std::thread::JoinHandle<()>> {
+    Ok(std::thread::Builder::new()
+        .name("isoquant-spill".into())
+        .spawn(move || worker(cfg, shared, rx, next_segment))?)
+}
+
+struct ActiveSegment {
+    id: u64,
+    file: File,
+    bytes: u64,
+}
+
+fn worker(cfg: StoreConfig, shared: Arc<Mutex<Shared>>, rx: mpsc::Receiver<Job>, mut next_id: u64) {
+    let mut active: Option<ActiveSegment> = None;
+    let mut buf: Vec<u8> = Vec::new();
+    // recv drains every queued job before reporting disconnect, so
+    // dropping the sender (PageStore::drop) is a clean "finish all
+    // pending spills, then exit"
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Flush(ack) => {
+                if let Some(a) = active.as_ref() {
+                    let _ = a.file.sync_all();
+                }
+                let _ = ack.send(());
+            }
+            Job::Spill {
+                key,
+                parent,
+                tokens,
+                page,
+            } => {
+                append_one(&cfg, &shared, &mut active, &mut next_id, &mut buf, key, parent, &tokens, &page);
+            }
+        }
+    }
+    if let Some(a) = active.as_ref() {
+        let _ = a.file.sync_all();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn append_one(
+    cfg: &StoreConfig,
+    shared: &Arc<Mutex<Shared>>,
+    active: &mut Option<ActiveSegment>,
+    next_id: &mut u64,
+    buf: &mut Vec<u8>,
+    key: PrefixKey,
+    parent: Option<PrefixKey>,
+    tokens: &[i32],
+    page: &[u8],
+) {
+    // rotate once the active segment crossed the threshold
+    if active.as_ref().is_some_and(|a| a.bytes >= cfg.segment_bytes) {
+        if let Some(a) = active.take() {
+            let _ = a.file.sync_all();
+        }
+    }
+    if active.is_none() {
+        let id = *next_id;
+        match OpenOptions::new()
+            .create_new(true)
+            .write(true)
+            .open(segment_path(&cfg.dir, id))
+        {
+            Ok(file) => {
+                *next_id += 1;
+                *active = Some(ActiveSegment { id, file, bytes: 0 });
+            }
+            Err(_) => {
+                // move past the failed id either way: a create_new
+                // collision (e.g. another writer took this id) must
+                // not wedge every future spill on the same name
+                *next_id += 1;
+                let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+                s.pending.remove(&key);
+                s.stats.spill_errors += 1;
+                return;
+            }
+        }
+    }
+    let a = active.as_mut().unwrap();
+    buf.clear();
+    record::encode_record(buf, key, parent, cfg.fingerprint, tokens, page);
+    let offset = a.bytes;
+    if a.file.write_all(buf).is_err() {
+        // the segment may now hold a torn record: abandon it so the
+        // tail is never extended (it scans as a clean partial segment).
+        // Account the file's *real* size — the torn bytes occupy disk
+        // until the segment retires, same as the boot-time scan's view
+        let id = a.id;
+        let bytes = a
+            .file
+            .metadata()
+            .map(|m| m.len())
+            .unwrap_or(a.bytes + buf.len() as u64);
+        *active = None;
+        let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+        s.segments.insert(id, bytes);
+        s.pending.remove(&key);
+        s.stats.spill_errors += 1;
+        return;
+    }
+    a.bytes += buf.len() as u64;
+    let (id, seg_bytes) = (a.id, a.bytes);
+    let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+    s.segments.insert(id, seg_bytes);
+    s.pending.remove(&key);
+    s.dir.insert(
+        key,
+        super::DirEntry {
+            segment: id,
+            offset,
+            len: buf.len() as u64,
+            parent,
+            tokens: tokens.to_vec(),
+        },
+    );
+    s.stats.spilled += 1;
+    // budget: retire whole oldest segments (never the active one);
+    // their directory entries age out with them.  Files are unlinked
+    // after the lock drops — lookups racing the unlink read as misses
+    let (retired, _) = s.retire_over_budget(cfg.budget_bytes, Some(id));
+    drop(s);
+    for old in retired {
+        let _ = std::fs::remove_file(segment_path(&cfg.dir, old));
+    }
+}

@@ -88,20 +88,34 @@ pub struct ShareStats {
     pub bytes_deduped: u64,
     /// sealed prompt pages published to the index
     pub pages_published: u64,
-    /// zero-ref index entries evicted under pool pressure
+    /// zero-ref index entries evicted under pool pressure (with a
+    /// persistent store attached these are RAM→disk demotions: the
+    /// content stays resolvable cold)
     pub pages_evicted: u64,
+    /// pages handed to the persistent store's write-behind spill
+    /// thread at zero-ref park time
+    pub pages_spilled: u64,
+    /// on-disk records adopted into the cold directory at boot
+    pub pages_rehydrated: u64,
+    /// cold pages promoted from disk into fresh resident pages on a
+    /// prefix-index miss (re-encode avoided)
+    pub pages_promoted: u64,
 }
 
 impl ShareStats {
     pub fn summary(&self) -> String {
         format!(
-            "prefix: hits={}p/{}t cow={} dedup={:.1}MB published={} evicted={}",
+            "prefix: hits={}p/{}t cow={} dedup={:.1}MB published={} evicted={} \
+             spill={} rehydrated={} promote={}",
             self.prefix_hit_pages,
             self.prefix_hit_tokens,
             self.cow_copies,
             self.bytes_deduped as f64 / 1e6,
             self.pages_published,
             self.pages_evicted,
+            self.pages_spilled,
+            self.pages_rehydrated,
+            self.pages_promoted,
         )
     }
 }

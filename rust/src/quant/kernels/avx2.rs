@@ -562,3 +562,63 @@ pub(crate) unsafe fn encode_tile_iso(
     }
     full * 4
 }
+
+// ---------------------------------------------------------------------
+// packed-code expansion (the SIMD unpack_into: 4-bit nibbles and 2-bit
+// crumbs are radix expansions, vectorized as byte-shuffle interleaves)
+// ---------------------------------------------------------------------
+
+/// Expand the leading `n / 32 * 32` 4-bit codes of `data` into one code
+/// byte each.  Per 16 input bytes: split into low/high nibbles and
+/// interleave (`punpcklbw`/`punpckhbw`), which reproduces the scalar
+/// order exactly (code 2i = byte i & 0xF, code 2i+1 = byte i >> 4).
+/// Returns codes covered (a multiple of 32, so the scalar tail starts
+/// byte-aligned).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn unpack4_prefix(data: &[u8], n: usize, out: &mut [u8]) -> usize {
+    let chunks = n / 32;
+    assert!(data.len() >= chunks * 16);
+    assert!(out.len() >= chunks * 32);
+    let mask = _mm_set1_epi8(0x0F);
+    for c in 0..chunks {
+        let src = _mm_loadu_si128(data.as_ptr().add(c * 16) as *const __m128i);
+        let lo = _mm_and_si128(src, mask);
+        // 16-bit shift leaks the neighbor byte's low bits into the
+        // high nibble — masked right off
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(src), mask);
+        let a = _mm_unpacklo_epi8(lo, hi);
+        let b = _mm_unpackhi_epi8(lo, hi);
+        _mm_storeu_si128(out.as_mut_ptr().add(c * 32) as *mut __m128i, a);
+        _mm_storeu_si128(out.as_mut_ptr().add(c * 32 + 16) as *mut __m128i, b);
+    }
+    chunks * 32
+}
+
+/// Expand the leading `n / 64 * 64` 2-bit codes of `data`: the nibble
+/// split above, applied twice (byte → nibbles → crumbs), keeps the
+/// stream order at every stage.  Returns codes covered (a multiple of
+/// 64).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn unpack2_prefix(data: &[u8], n: usize, out: &mut [u8]) -> usize {
+    let chunks = n / 64;
+    assert!(data.len() >= chunks * 16);
+    assert!(out.len() >= chunks * 64);
+    let m4 = _mm_set1_epi8(0x0F);
+    let m2 = _mm_set1_epi8(0x03);
+    for c in 0..chunks {
+        let src = _mm_loadu_si128(data.as_ptr().add(c * 16) as *const __m128i);
+        let nib_lo = _mm_and_si128(src, m4);
+        let nib_hi = _mm_and_si128(_mm_srli_epi16::<4>(src), m4);
+        // na covers input bytes 0..8 (codes 0..32), nb bytes 8..16
+        let na = _mm_unpacklo_epi8(nib_lo, nib_hi);
+        let nb = _mm_unpackhi_epi8(nib_lo, nib_hi);
+        for (half, v) in [na, nb].into_iter().enumerate() {
+            let cl = _mm_and_si128(v, m2);
+            let ch = _mm_and_si128(_mm_srli_epi16::<2>(v), m2);
+            let dst = out.as_mut_ptr().add(c * 64 + half * 32);
+            _mm_storeu_si128(dst as *mut __m128i, _mm_unpacklo_epi8(cl, ch));
+            _mm_storeu_si128(dst.add(16) as *mut __m128i, _mm_unpackhi_epi8(cl, ch));
+        }
+    }
+    chunks * 64
+}

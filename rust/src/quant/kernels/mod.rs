@@ -430,6 +430,53 @@ pub(crate) fn decode_tile_prefix(
     }
 }
 
+/// Dispatched packed-code expansion — the SIMD lift of
+/// `packing::unpack_into`, which profiles showed as a visible fraction
+/// of tile decode (every gathered record unpacks its codes before the
+/// vertical sandwich).  4-bit and 2-bit widths are pure radix
+/// expansions, so they vectorize as byte-shuffle interleaves
+/// (`punpck` on AVX2, `vzip` on NEON): split each byte into its
+/// low/high halves and interleave, once for nibbles, twice for crumbs.
+/// The 3-bit width (and any remainder after the SIMD prefix, which
+/// always ends byte-aligned) falls back to the scalar reference.
+/// Bit-exact with `packing::unpack_into` for every backend — it is
+/// exact integer work, enforced by the tests below.
+pub(crate) fn unpack_codes(ks: &KernelState, data: &[u8], bits: u8, n: usize, out: &mut [u8]) {
+    debug_assert!(out.len() >= n);
+    #[allow(unused_mut)]
+    let mut done = 0usize;
+    match ks.resolved {
+        Resolved::Scalar => {}
+        #[cfg(target_arch = "x86_64")]
+        Resolved::Avx2 => match bits {
+            // SAFETY: Resolved::Avx2 implies the runtime probe
+            // succeeded (see module docs); bounds asserted inside.
+            4 => done = unsafe { avx2::unpack4_prefix(data, n, out) },
+            2 => done = unsafe { avx2::unpack2_prefix(data, n, out) },
+            _ => {}
+        },
+        #[cfg(target_arch = "aarch64")]
+        Resolved::Neon => match bits {
+            // SAFETY: NEON is mandatory on aarch64; bounds asserted inside.
+            4 => done = unsafe { neon::unpack4_prefix(data, n, out) },
+            2 => done = unsafe { neon::unpack2_prefix(data, n, out) },
+            _ => {}
+        },
+        #[allow(unreachable_patterns)]
+        _ => {}
+    }
+    if done < n {
+        // the SIMD prefix covers whole input bytes, so the scalar tail
+        // starts byte-aligned
+        crate::quant::packing::unpack_into(
+            &data[done * bits as usize / 8..],
+            bits,
+            n - done,
+            &mut out[done..n],
+        );
+    }
+}
+
 /// Block-major tile encode: `tile_width` vectors' rows at `x[v * d ..]`
 /// with per-vector `pre` factors; code rows written to
 /// `codes_tile[v * n_codes ..]`.  Returns codes covered per vector.
@@ -506,6 +553,32 @@ mod tests {
         #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
         assert_eq!(r, Resolved::Scalar);
         let _ = r;
+    }
+
+    #[test]
+    fn unpack_codes_bit_exact_with_scalar_reference() {
+        use crate::quant::packing;
+        use crate::util::prng::Rng;
+        let bank = ParamBank::random(Variant::IsoFull, 64, 1);
+        let mut rng = Rng::new(0x0DDC);
+        for backend in [KernelBackend::Scalar, KernelBackend::Auto] {
+            let ks = KernelState::build(backend, &bank, Variant::IsoFull);
+            for bits in [2u8, 3, 4] {
+                for n in [0usize, 1, 7, 31, 32, 33, 63, 64, 65, 128, 257, 1000] {
+                    let codes: Vec<u8> =
+                        (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+                    let mut packed = Vec::new();
+                    packing::pack(&codes, bits, &mut packed);
+                    let mut want = vec![0u8; n];
+                    packing::unpack_into(&packed, bits, n, &mut want);
+                    // sentinel beyond n must survive
+                    let mut got = vec![0xEEu8; n + 3];
+                    unpack_codes(&ks, &packed, bits, n, &mut got);
+                    assert_eq!(&got[..n], &want[..], "{backend:?} bits={bits} n={n}");
+                    assert_eq!(&got[n..], &[0xEE; 3], "{backend:?} bits={bits} n={n} overran");
+                }
+            }
+        }
     }
 
     #[test]

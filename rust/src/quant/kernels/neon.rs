@@ -494,3 +494,53 @@ pub(crate) unsafe fn encode_tile_iso(
     }
     full * 4
 }
+
+// ---------------------------------------------------------------------
+// packed-code expansion (the SIMD unpack_into: 4-bit nibbles and 2-bit
+// crumbs are radix expansions, vectorized as `vzip` byte interleaves)
+// ---------------------------------------------------------------------
+
+/// Expand the leading `n / 32 * 32` 4-bit codes of `data` into one code
+/// byte each: split each byte into low/high nibbles and `vzip` them,
+/// reproducing the scalar order exactly (code 2i = byte i & 0xF,
+/// code 2i+1 = byte i >> 4).  Returns codes covered (a multiple of 32,
+/// so the scalar tail starts byte-aligned).
+pub(super) unsafe fn unpack4_prefix(data: &[u8], n: usize, out: &mut [u8]) -> usize {
+    let chunks = n / 32;
+    assert!(data.len() >= chunks * 16);
+    assert!(out.len() >= chunks * 32);
+    for c in 0..chunks {
+        let src = vld1q_u8(data.as_ptr().add(c * 16));
+        let lo = vandq_u8(src, vdupq_n_u8(0x0F));
+        let hi = vshrq_n_u8::<4>(src); // byte shift: no cross-byte leak
+        vst1q_u8(out.as_mut_ptr().add(c * 32), vzip1q_u8(lo, hi));
+        vst1q_u8(out.as_mut_ptr().add(c * 32 + 16), vzip2q_u8(lo, hi));
+    }
+    chunks * 32
+}
+
+/// Expand the leading `n / 64 * 64` 2-bit codes of `data`: the nibble
+/// split above applied twice (byte → nibbles → crumbs), order-stable
+/// at every stage.  Returns codes covered (a multiple of 64).
+pub(super) unsafe fn unpack2_prefix(data: &[u8], n: usize, out: &mut [u8]) -> usize {
+    let chunks = n / 64;
+    assert!(data.len() >= chunks * 16);
+    assert!(out.len() >= chunks * 64);
+    let m2 = vdupq_n_u8(0x03);
+    for c in 0..chunks {
+        let src = vld1q_u8(data.as_ptr().add(c * 16));
+        let nib_lo = vandq_u8(src, vdupq_n_u8(0x0F));
+        let nib_hi = vshrq_n_u8::<4>(src);
+        // na covers input bytes 0..8 (codes 0..32), nb bytes 8..16
+        let na = vzip1q_u8(nib_lo, nib_hi);
+        let nb = vzip2q_u8(nib_lo, nib_hi);
+        for (half, v) in [na, nb].into_iter().enumerate() {
+            let cl = vandq_u8(v, m2);
+            let ch = vandq_u8(vshrq_n_u8::<2>(v), m2);
+            let dst = out.as_mut_ptr().add(c * 64 + half * 32);
+            vst1q_u8(dst, vzip1q_u8(cl, ch));
+            vst1q_u8(dst.add(16), vzip2q_u8(cl, ch));
+        }
+    }
+    chunks * 64
+}

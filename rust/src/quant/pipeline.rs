@@ -499,7 +499,10 @@ impl Stage1 {
                     let rec = &data[(i + v) * stride..(i + v) * stride + enc];
                     let rho = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
                     scratch.posts[v] = rho / self.scale;
-                    packing::unpack_into(
+                    // dispatched nibble/crumb expansion (scalar for
+                    // 3-bit); bit-exact with packing::unpack_into
+                    kernels::unpack_codes(
+                        &self.kern,
                         &rec[4..],
                         bits,
                         nc,

@@ -1,0 +1,380 @@
+//! Persistent page store integration tests: restart rehydration,
+//! RAM→disk demotion + promotion, and every corruption mode degrading
+//! to a clean miss.
+//!
+//! The safety bar throughout: a warm boot must either serve
+//! *byte-identical* pages (full record verification passed) or
+//! re-encode (miss) — wrong bytes are never an outcome, no matter what
+//! happened to the files in between.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use isoquant::kvcache::{chain_key, CacheManager, PageConfig, PageStore, StoreConfig};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::util::prng::Rng;
+
+const TP: usize = 4;
+const D_HEAD: usize = 32;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "isoquant-persist-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn mk_cache(max_pages: usize, bits: u8, sharing: bool) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, D_HEAD, bits));
+    let cfg = PageConfig {
+        tokens_per_page: TP,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: D_HEAD,
+        encoded_len: stage1.encoded_len(),
+    };
+    let mut m = CacheManager::new(stage1, cfg, max_pages);
+    m.prefix_sharing = sharing;
+    m
+}
+
+fn attach(m: &mut CacheManager, dir: &Path) {
+    let store = PageStore::open(StoreConfig::for_cache(
+        dir.to_path_buf(),
+        m.fingerprint(),
+        m.page_cfg().page_bytes(),
+        0, // unlimited budget: these tests exercise verification, not retirement
+    ))
+    .unwrap();
+    m.attach_store(store);
+}
+
+/// Deterministic K/V for position `t` of `stream` (same prefix ⇒ same
+/// vectors — the property that makes prompt pages shareable and
+/// persistable).
+fn kv_at(stream: &[i32], t: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let seed = chain_key(None, &stream[..=t], 0xBEEF).0;
+    let mut rng = Rng::new(seed);
+    let n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+    (rng.gaussian_vec_f32(n), rng.gaussian_vec_f32(n))
+}
+
+fn kv_run(stream: &[i32], from: usize, to: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let (mut k, mut v) = (Vec::new(), Vec::new());
+    for t in from..to {
+        let (tk, tv) = kv_at(stream, t, cfg);
+        k.extend_from_slice(&tk);
+        v.extend_from_slice(&tv);
+    }
+    (k, v)
+}
+
+fn gather_bits(m: &CacheManager, seq: u64, t_max: usize) -> (Vec<u32>, Vec<u32>) {
+    let cfg = m.page_cfg();
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut k, mut v) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    m.gather(seq, t_max, &mut k, &mut v).unwrap();
+    (
+        k.iter().map(|x| x.to_bits()).collect(),
+        v.iter().map(|x| x.to_bits()).collect(),
+    )
+}
+
+/// Populate a store: one sequence runs `prompt`, publishes its pages,
+/// then drops — parking (and spilling) every prompt page.  Returns the
+/// byte-level gather of the prompt region as ground truth.
+fn populate(dir: &Path, prompt: &[i32], bits: u8) -> (Vec<u32>, Vec<u32>) {
+    let mut m = mk_cache(64, bits, true);
+    attach(&mut m, dir);
+    let cfg = m.page_cfg();
+    m.start_seq_with_prompt(1, prompt).unwrap();
+    let (k, v) = kv_run(prompt, 0, prompt.len(), &cfg);
+    m.append_run(1, &k, &v, prompt.len()).unwrap();
+    let truth = gather_bits(&m, 1, prompt.len());
+    m.drop_seq(1);
+    m.flush_store();
+    truth
+}
+
+/// Boot a fresh cache on `dir` and admit `prompt`; return (reused
+/// tokens, gather bits over the prompt region after appending whatever
+/// reuse did not cover).
+fn warm_boot(dir: &Path, prompt: &[i32], bits: u8) -> (usize, (Vec<u32>, Vec<u32>)) {
+    let mut m = mk_cache(64, bits, true);
+    attach(&mut m, dir);
+    let cfg = m.page_cfg();
+    assert!(m.can_admit_prompt(prompt, prompt.len()));
+    let reuse = m.start_seq_with_prompt(1, prompt).unwrap();
+    let (k, v) = kv_run(prompt, reuse.tokens, prompt.len(), &cfg);
+    m.append_run(1, &k, &v, prompt.len() - reuse.tokens).unwrap();
+    let bits_out = gather_bits(&m, 1, prompt.len());
+    // batched path still agrees with the per-vector oracle on
+    // promoted pages
+    let sz = cfg.n_layers * cfg.n_heads * prompt.len() * cfg.d_head;
+    let (mut ko, mut vo) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    m.gather_reference(1, prompt.len(), &mut ko, &mut vo).unwrap();
+    assert_eq!(
+        bits_out.0,
+        ko.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "batched vs reference K gather diverged after promotion"
+    );
+    assert_eq!(
+        bits_out.1,
+        vo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "batched vs reference V gather diverged after promotion"
+    );
+    m.drop_seq(1);
+    assert_eq!(m.live_refs(), 0);
+    (reuse.tokens, bits_out)
+}
+
+fn prompt10() -> Vec<i32> {
+    (0..10).map(|i| 100 + i).collect() // 2 full pages + sealed tail of 2
+}
+
+fn single_segment(dir: &Path) -> PathBuf {
+    let mut segs: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|e| e == "iqs"))
+        .collect();
+    assert_eq!(segs.len(), 1, "expected exactly one segment: {segs:?}");
+    segs.pop().unwrap()
+}
+
+#[test]
+fn restart_promotes_pages_byte_identical() {
+    let dir = tmpdir("restart");
+    let prompt = prompt10();
+    let truth = populate(&dir, &prompt, 3);
+
+    // warm boot: full-prefix hit served entirely from disk
+    let mut m = mk_cache(64, 3, true);
+    attach(&mut m, &dir);
+    assert_eq!(m.share.pages_rehydrated, 3, "2 full pages + sealed tail");
+    assert_eq!(m.cold_pages(), 3);
+    assert_eq!(m.prefix_index_len(), 0, "RAM index starts empty");
+    let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+    assert_eq!(reuse.tokens, prompt.len(), "no re-encode of the shared prefix");
+    assert_eq!(reuse.pages, 3);
+    assert_eq!(m.share.pages_promoted, 3);
+    assert_eq!(m.prefix_index_len(), 3, "promotions republish to RAM");
+    assert_eq!(gather_bits(&m, 1, prompt.len()), truth, "bytes survive the disk roundtrip");
+
+    // a second sequence now warm-hits RAM, not disk
+    let reuse2 = m.start_seq_with_prompt(2, &prompt).unwrap();
+    assert_eq!(reuse2.tokens, prompt.len());
+    assert_eq!(m.share.pages_promoted, 3, "second adoption is a RAM hit");
+
+    // decode appends CoW the promoted tail exactly like a warm one
+    let mut stream = prompt.clone();
+    for d in 0..3 {
+        stream.push(10_000 + d);
+        let (k, v) = kv_at(&stream, stream.len() - 1, &m.page_cfg());
+        m.append_token(1, &k, &v).unwrap();
+    }
+    assert_eq!(m.share.cow_copies, 1);
+    m.drop_seq(1);
+    m.drop_seq(2);
+    assert_eq!(m.live_refs(), 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pool_pressure_demotes_and_promotes_back() {
+    // pool of 2 pages: prompt A's pages must be demoted to disk to
+    // make room for prompt B, then promoted back — the full
+    // hot→warm→cold→warm cycle on one live cache
+    let dir = tmpdir("demote");
+    let mut m = mk_cache(2, 2, true);
+    attach(&mut m, &dir);
+    let cfg = m.page_cfg();
+    let prompt_a: Vec<i32> = (0..8).collect();
+    let prompt_b: Vec<i32> = (100..108).collect();
+
+    let run = |m: &mut CacheManager, seq: u64, prompt: &[i32]| -> (Vec<u32>, Vec<u32>) {
+        let reuse = m.start_seq_with_prompt(seq, prompt).unwrap();
+        let (k, v) = kv_run(prompt, reuse.tokens, prompt.len(), &cfg);
+        m.append_run(seq, &k, &v, prompt.len() - reuse.tokens).unwrap();
+        let out = gather_bits(m, seq, prompt.len());
+        m.drop_seq(seq);
+        out
+    };
+    let truth_a = run(&mut m, 1, &prompt_a);
+    assert_eq!(m.cached_pages(), 2, "A parked warm");
+    let _ = run(&mut m, 2, &prompt_b);
+    assert_eq!(m.share.pages_evicted, 2, "B's allocs demoted A");
+    m.flush_store();
+    assert_eq!(m.cold_pages(), 4, "A and B both resolvable cold");
+
+    // A comes back: index miss → store hit → promotion (evicting B)
+    let reuse = m.start_seq_with_prompt(3, &prompt_a).unwrap();
+    assert_eq!(reuse.tokens, 8, "full prompt served from disk");
+    assert_eq!(m.share.pages_promoted, 2);
+    assert_eq!(gather_bits(&m, 3, 8), truth_a);
+    m.drop_seq(3);
+    assert_eq!(m.live_refs(), 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cold_tail_admission_charges_the_cow_replacement() {
+    // a prompt of 3 (tp = 4) persists as a single sealed-tail record.
+    // Serving it cold needs TWO pages: one to promote into (owned, so
+    // not evictable) and one for the CoW replacement the first decode
+    // append forces.  Admission must say no on a 1-page pool — the
+    // old math charged one page and the append would have failed
+    // mid-serve.
+    let dir = tmpdir("coldtail");
+    let prompt: Vec<i32> = vec![7, 8, 9];
+    let _ = populate(&dir, &prompt, 3);
+
+    {
+        let mut m = mk_cache(1, 3, true);
+        attach(&mut m, &dir);
+        assert_eq!(m.cold_pages(), 1);
+        assert!(
+            !m.can_admit_prompt(&prompt, 4),
+            "1 page cannot host promotion + CoW"
+        );
+        // the fresh-encode variant has the same shape: an unseen
+        // mid-page prompt seals its own tail and CoWs it on the first
+        // generated token, so it too needs two pages
+        assert!(!m.can_admit_prompt(&[901, 902, 903], 4));
+    }
+    // with two pages the same request fits and the whole flow runs
+    let mut m = mk_cache(2, 3, true);
+    attach(&mut m, &dir);
+    assert!(m.can_admit_prompt(&prompt, 4));
+    let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+    assert_eq!(reuse.tokens, 3, "tail served from disk");
+    assert_eq!(m.share.pages_promoted, 1);
+    let mut stream = prompt.clone();
+    stream.push(99);
+    let (k, v) = kv_at(&stream, 3, &m.page_cfg());
+    m.append_token(1, &k, &v).unwrap();
+    assert_eq!(m.share.cow_copies, 1);
+    m.drop_seq(1);
+    assert_eq!(m.live_refs(), 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_final_record_degrades_to_partial_reuse() {
+    let dir = tmpdir("truncate");
+    let prompt = prompt10();
+    let truth = populate(&dir, &prompt, 3);
+    // chop mid-way through the final record (the sealed tail)
+    let seg = single_segment(&dir);
+    let len = fs::metadata(&seg).unwrap().len();
+    let f = fs::OpenOptions::new().write(true).open(&seg).unwrap();
+    f.set_len(len - 7).unwrap();
+    drop(f);
+    let (reused, out) = warm_boot(&dir, &prompt, 3);
+    assert_eq!(reused, 8, "two intact full pages promote; the tail re-encodes");
+    assert_eq!(out, truth, "re-encode reproduces identical bytes");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bit_flipped_payload_fails_crc_and_reencodes() {
+    let dir = tmpdir("bitflip");
+    let prompt = prompt10();
+    let truth = populate(&dir, &prompt, 3);
+    // flip one bit inside the first record's payload: the scan stops
+    // there, so the whole chain cold-misses
+    let seg = single_segment(&dir);
+    let mut bytes = fs::read(&seg).unwrap();
+    let mid = 60; // inside record 0 (header is 44 bytes)
+    bytes[mid] ^= 0x04;
+    fs::write(&seg, &bytes).unwrap();
+    let (reused, out) = warm_boot(&dir, &prompt, 3);
+    assert_eq!(reused, 0, "corrupt root: everything re-encodes");
+    assert_eq!(out, truth);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_config_fingerprint_reads_as_miss() {
+    let dir = tmpdir("stale");
+    let prompt = prompt10();
+    let _ = populate(&dir, &prompt, 3);
+    // same prompt, different bit width ⇒ different fingerprint: the
+    // store's records are invisible, never misdecoded
+    let mut m = mk_cache(64, 2, true);
+    attach(&mut m, &dir);
+    assert_eq!(m.share.pages_rehydrated, 0);
+    let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+    assert_eq!(reuse.tokens, 0);
+    let cfg = m.page_cfg();
+    let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+    m.append_run(1, &k, &v, prompt.len()).unwrap();
+    // the 2-bit cache's own pages spill alongside the 3-bit records…
+    m.drop_seq(1);
+    m.flush_store();
+    drop(m);
+    // …and each config rehydrates exactly its own
+    let m2 = mk_cache(64, 2, true);
+    let m3 = mk_cache(64, 3, true);
+    let store2 = PageStore::open(StoreConfig::for_cache(
+        dir.clone(),
+        m2.fingerprint(),
+        m2.page_cfg().page_bytes(),
+        0,
+    ))
+    .unwrap();
+    let store3 = PageStore::open(StoreConfig::for_cache(
+        dir.clone(),
+        m3.fingerprint(),
+        m3.page_cfg().page_bytes(),
+        0,
+    ))
+    .unwrap();
+    assert_eq!(store2.stats().rehydrated, 3);
+    assert_eq!(store3.stats().rehydrated, 3);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mid_spill_kill_at_any_cut_point_rehydrates_clean() {
+    use isoquant::kvcache::store::{record_len, segment_path};
+    // simulate a process killed mid-spill: truncate the segment at a
+    // spread of byte positions; every resulting store must boot to a
+    // clean partial index covering exactly the records the cut left
+    // intact, and reproduce byte-identical gathers either way
+    let dir = tmpdir("kill");
+    let prompt = prompt10();
+    let truth = populate(&dir, &prompt, 3);
+    let seg = single_segment(&dir);
+    let full = fs::read(&seg).unwrap();
+    // records in spill order: two 4-token full pages, then the 2-token
+    // sealed tail — a cut resurrects exactly the whole records before it
+    let page_bytes = mk_cache(1, 3, true).page_cfg().page_bytes();
+    let r_full = record_len(4, page_bytes);
+    assert_eq!(full.len(), 2 * r_full + record_len(2, page_bytes));
+    let expect = |cut: usize| {
+        if cut >= 2 * r_full {
+            8 // both full pages promote; the tail re-encodes
+        } else if cut >= r_full {
+            4
+        } else {
+            0
+        }
+    };
+    let cuts = [1usize, 20, 43, 44, 100, r_full, full.len() / 2, full.len() - 1];
+    for &cut in &cuts {
+        let case = tmpdir(&format!("kill-cut{cut}"));
+        fs::write(segment_path(&case, 0), &full[..cut]).unwrap();
+        let (reused, out) = warm_boot(&case, &prompt, 3);
+        assert_eq!(reused, expect(cut), "cut {cut}");
+        assert_eq!(out, truth, "cut {cut}: bytes must match after partial rehydrate");
+        let _ = fs::remove_dir_all(&case);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -7,7 +7,7 @@
 //! K/V vectors (same prefix ⇒ same vectors), which is exactly the
 //! property that makes real prompt prefixes shareable.
 
-use isoquant::kvcache::{chain_key, CacheManager, GatherWorkspace, PageConfig};
+use isoquant::kvcache::{chain_key, CacheManager, GatherWorkspace, PageConfig, PageStore, StoreConfig};
 use isoquant::quant::{Stage1, Stage1Config, Variant};
 use isoquant::util::pool::ParallelPolicy;
 use isoquant::util::prng::Rng;
@@ -223,6 +223,118 @@ fn prop_shared_cache_bit_identical_to_unshared() {
         if unshared.pages_in_use() != 0 {
             return Err("unshared cache leaked pages".into());
         }
+        Ok(())
+    });
+}
+
+/// Persist → restart → byte-identical gather, as a property over
+/// random geometries and prompt mixes: whatever a first boot published
+/// and spilled, a second boot (fresh cache, same persist dir) must
+/// adopt without re-encoding — covering the *entire* prompt (every
+/// prompt page of a completed prompt is published, parked, and spilled
+/// on drop) — and reconstruct bit-for-bit what an unshared,
+/// never-persisted reference cache produces.
+#[test]
+fn prop_persist_restart_gathers_byte_identical() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    check(10, 0x7E57, |g| {
+        let geo = geometry(g);
+        let cfg = geo.cfg;
+        let dir = std::env::temp_dir().join(format!(
+            "isoquant-prefix-persist-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let attach = |m: &mut CacheManager| {
+            let store = PageStore::open(StoreConfig::for_cache(
+                dir.clone(),
+                m.fingerprint(),
+                m.page_cfg().page_bytes(),
+                0,
+            ))
+            .map_err(|e| e.to_string())?;
+            m.attach_store(store);
+            Ok::<(), String>(())
+        };
+        // prompts: random prefixes of a base stream (often overlapping)
+        let base: Vec<i32> = (0..6 * cfg.tokens_per_page as i32).collect();
+        let n_prompts = g.usize_in(1, 3);
+        let prompts: Vec<Vec<i32>> = (0..n_prompts)
+            .map(|_| base[..g.usize_in(1, base.len())].to_vec())
+            .collect();
+
+        // ---- boot 1: populate, decode a little, drop, spill --------
+        let mut first = mk_cache(&geo, 4096, true);
+        attach(&mut first)?;
+        let mut unshared = mk_cache(&geo, 4096, false);
+        for (i, prompt) in prompts.iter().enumerate() {
+            let seq = i as u64 + 1;
+            let reuse = first
+                .start_seq_with_prompt(seq, prompt)
+                .map_err(|e| e.to_string())?;
+            let (k, v) = kv_run(prompt, reuse.tokens, prompt.len(), &cfg);
+            first
+                .append_run(seq, &k, &v, prompt.len() - reuse.tokens)
+                .map_err(|e| e.to_string())?;
+            unshared.start_seq(seq).map_err(|e| e.to_string())?;
+            let (k, v) = kv_run(prompt, 0, prompt.len(), &cfg);
+            unshared
+                .append_run(seq, &k, &v, prompt.len())
+                .map_err(|e| e.to_string())?;
+            // a few decode tokens (CoW off the published tail)
+            if g.bool() {
+                let mut stream = prompt.clone();
+                for d in 0..g.usize_in(1, 3) {
+                    stream.push(90_000 + (i * 100 + d) as i32);
+                    let (tk, tv) = kv_at(&stream, stream.len() - 1, &cfg);
+                    first.append_token(seq, &tk, &tv).map_err(|e| e.to_string())?;
+                }
+            }
+            first.drop_seq(seq);
+        }
+        first.flush_store();
+        let spilled = first.share.pages_spilled;
+        drop(first);
+        if spilled == 0 {
+            return Err("nothing spilled — the property would be vacuous".into());
+        }
+
+        // ---- boot 2: fresh cache, same dir ------------------------
+        let mut second = mk_cache(&geo, 4096, true);
+        attach(&mut second)?;
+        if second.share.pages_rehydrated == 0 {
+            return Err("nothing rehydrated".into());
+        }
+        let mut ws = GatherWorkspace::new();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let seq = i as u64 + 1;
+            let reuse = second
+                .start_seq_with_prompt(seq, prompt)
+                .map_err(|e| e.to_string())?;
+            // every page of a completed prompt was published + spilled:
+            // the warm boot must cover the whole prompt without
+            // re-encoding a single token
+            if reuse.tokens != prompt.len() {
+                return Err(format!(
+                    "prompt {i}: warm boot reused {}/{} tokens",
+                    reuse.tokens,
+                    prompt.len()
+                ));
+            }
+            verify_seq(&second, &unshared, seq, prompt.len(), &cfg, &mut ws)?;
+        }
+        if second.share.pages_promoted == 0 {
+            return Err("no promotions on a warm boot".into());
+        }
+        for i in 0..prompts.len() {
+            second.drop_seq(i as u64 + 1);
+        }
+        if second.live_refs() != 0 {
+            return Err("refs leaked across restart".into());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
         Ok(())
     });
 }

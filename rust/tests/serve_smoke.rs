@@ -42,6 +42,7 @@ fn run_serve(
     dir: &PathBuf,
     prefix_sharing: bool,
     prompts: &[Vec<i32>],
+    persist_dir: Option<&std::path::Path>,
 ) -> (Vec<Vec<i32>>, Vec<usize>) {
     // bind before spawning: client connects queue in the backlog even
     // if the accept loop isn't polling yet
@@ -50,10 +51,14 @@ fn run_serve(
     let stop = Arc::new(AtomicBool::new(false));
     let stop_srv = stop.clone();
     let dir_srv = dir.clone();
+    let persist = persist_dir.map(|p| p.to_string_lossy().into_owned());
     let server = std::thread::spawn(move || {
         let model = ServingModel::load(&dir_srv).expect("load model");
         let mut cfg = EngineConfig::default();
         cfg.prefix_sharing = prefix_sharing;
+        if let Some(p) = persist {
+            cfg.persist_dir = p;
+        }
         let engine = Engine::new(model, cfg).expect("boot engine");
         serve_on(engine, listener, stop_srv).expect("serve");
     });
@@ -106,8 +111,8 @@ fn same_prefix_clients_get_identical_completions_sharing_on_and_off() {
     let prompt: Vec<i32> = (0..24).map(|i| (i * 7) % 50 + 1).collect();
     let prompts = vec![prompt; lanes * 2];
 
-    let (on_tokens, on_hits) = run_serve(&dir, true, &prompts);
-    let (off_tokens, off_hits) = run_serve(&dir, false, &prompts);
+    let (on_tokens, on_hits) = run_serve(&dir, true, &prompts, None);
+    let (off_tokens, off_hits) = run_serve(&dir, false, &prompts, None);
 
     // every client sees the same completion within a run...
     for (i, t) in on_tokens.iter().enumerate() {
@@ -128,4 +133,47 @@ fn same_prefix_clients_get_identical_completions_sharing_on_and_off() {
         "no prefix hits across {} same-prompt clients: {on_hits:?}",
         prompts.len()
     );
+}
+
+/// Restart rehydration against the real TCP server: a second boot on
+/// the same `persist_dir` must adopt the first boot's prompt pages
+/// (every client reports `prefix_hit_pages > 0` — even the very first
+/// admission, which can only be served by the rehydrated store) and
+/// produce byte-identical completions, which must also match a run
+/// that never persisted anything.
+#[test]
+fn restart_on_same_persist_dir_rehydrates_and_matches() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let lanes = isoquant::runtime::Manifest::load(&dir)
+        .expect("manifest")
+        .model
+        .serve_batch;
+    let persist = std::env::temp_dir().join(format!(
+        "isoquant-serve-persist-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&persist);
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 5) % 40 + 1).collect();
+    let prompts = vec![prompt; lanes.max(2)];
+
+    // boot 1 populates the store; boot 2 must warm-start from it
+    let (cold_tokens, _) = run_serve(&dir, true, &prompts, Some(persist.as_path()));
+    let (warm_tokens, warm_hits) = run_serve(&dir, true, &prompts, Some(persist.as_path()));
+    // a run that never persisted anything is the semantic reference
+    let (plain_tokens, _) = run_serve(&dir, true, &prompts, None);
+
+    for (i, t) in cold_tokens.iter().enumerate() {
+        assert!(!t.is_empty(), "client {i} got no tokens (cold boot)");
+    }
+    assert_eq!(cold_tokens, warm_tokens, "restart changed completions");
+    assert_eq!(cold_tokens, plain_tokens, "persistence changed completions");
+    // the warm boot serves the prefix from disk: every client —
+    // including the first admission, before anything was published in
+    // RAM — adopts rehydrated pages
+    assert!(
+        warm_hits.iter().all(|&h| h > 0),
+        "a post-restart client missed the rehydrated prefix: {warm_hits:?}"
+    );
+    let _ = std::fs::remove_dir_all(&persist);
 }
