@@ -8,17 +8,28 @@
 //! and appends directly (the serving path minus the model step), with a
 //! deterministic prompt→K/V map standing in for the model.
 //!
-//! Besides the table, emits machine-readable `BENCH_prefix.json` (one
-//! row per sweep point × sharing mode) so future PRs can track the
-//! trajectory.  Cargo runs bench binaries with the package root as
-//! working directory, so the file lands at `rust/BENCH_prefix.json`.
+//! Two scenarios:
+//!
+//! 1. **shared-fraction sweep** — page-aligned shared prefixes, sharing
+//!    off vs on (the PR 3 economics, unchanged);
+//! 2. **high fan-out, divergent tails** — many clients share a long
+//!    stem that ends mid-page and diverge only in the last token:
+//!    flat vs radix index (`[cache] prefix_index`), where the radix
+//!    tree's sub-page slot-range reuse turns the shared tail slots
+//!    into copies instead of re-encodes and keeps divergent tails
+//!    open (no per-client seal→CoW page).
+//!
+//! Besides the tables, emits machine-readable `BENCH_prefix.json` (one
+//! row per sweep point × mode) so future PRs can track the trajectory.
+//! Cargo runs bench binaries with the package root as working
+//! directory, so the file lands at `rust/BENCH_prefix.json`.
 //!
 //! Run: `cargo bench --bench prefix_reuse` (`-- --quick` for the CI
 //! smoke subset).
 
 use std::time::Instant;
 
-use isoquant::kvcache::{CacheManager, PageConfig};
+use isoquant::kvcache::{CacheManager, PageConfig, PrefixIndexKind};
 use isoquant::metrics::LatencyRecorder;
 use isoquant::quant::{Stage1, Stage1Config, Variant};
 use isoquant::util::bench::Table;
@@ -36,7 +47,7 @@ const DECODE_BUDGET: usize = 16; // total_len = 144 → 9 pages/client
 /// clients fit; shared-prefix bursts fit many more
 const POOL_PAGES: usize = 96;
 
-fn mk_cache(max_pages: usize, sharing: bool) -> CacheManager {
+fn mk_cache(max_pages: usize, sharing: bool, index: PrefixIndexKind) -> CacheManager {
     let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, D_HEAD, BITS));
     let cfg = PageConfig {
         tokens_per_page: TOKENS_PER_PAGE,
@@ -47,6 +58,7 @@ fn mk_cache(max_pages: usize, sharing: bool) -> CacheManager {
     };
     let mut m = CacheManager::new(stage1, cfg, max_pages);
     m.prefix_sharing = sharing;
+    m.index_kind = index;
     m
 }
 
@@ -66,7 +78,7 @@ struct SweepPoint {
 /// `shared_len` tokens, appending each prompt's non-reused remainder
 /// (the work on the TTFT path).  Returns the sweep-point measurements.
 fn run_burst(clients: usize, shared_len: usize, sharing: bool) -> SweepPoint {
-    let mut m = mk_cache(POOL_PAGES, sharing);
+    let mut m = mk_cache(POOL_PAGES, sharing, PrefixIndexKind::Flat);
     let tok_n = N_LAYERS * N_HEADS * D_HEAD;
     // the shared prefix K/V, generated once (a real model produces
     // identical K/V for identical prefixes)
@@ -129,6 +141,78 @@ fn run_burst(clients: usize, shared_len: usize, sharing: bool) -> SweepPoint {
     }
 }
 
+struct FanoutPoint {
+    index: PrefixIndexKind,
+    admitted: usize,
+    pages: usize,
+    high_water: usize,
+    ttft_p50_us: f64,
+    hit_tokens: u64,
+    slots_copied: u64,
+    tail_copies: u64,
+    cow_copies: u64,
+}
+
+/// High fan-out scenario: `clients` prompts share a long stem that ends
+/// *mid-page* (stem = PROMPT_LEN − 8, i.e. 7 full pages + 8 slots) and
+/// diverge only in their final token, then each decodes 2 tokens.  The
+/// flat index re-encodes the whole mixed tail page per client and pays
+/// a seal→CoW page on the first decode; the radix index copies the 8
+/// shared slots, re-encodes 1 token, and keeps the tail open.
+fn run_fanout(clients: usize, index: PrefixIndexKind) -> FanoutPoint {
+    let stem_len = PROMPT_LEN - 8;
+    let decode = 2usize;
+    let tok_n = N_LAYERS * N_HEADS * D_HEAD;
+    let mut m = mk_cache(POOL_PAGES, true, index);
+    let mut rng = Rng::new(0xFA_0427);
+    let stem_k = rng.gaussian_vec_f32(stem_len * tok_n);
+    let stem_v = rng.gaussian_vec_f32(stem_len * tok_n);
+    let stem_toks: Vec<i32> = (0..stem_len as i32).collect();
+    let mut ttft = LatencyRecorder::new();
+    let mut admitted = 0usize;
+    for c in 0..clients {
+        let mut prompt = stem_toks.clone();
+        prompt.push(20_000 + c as i32); // 1-token divergent tail
+        let div_k = rng.gaussian_vec_f32(tok_n);
+        let div_v = rng.gaussian_vec_f32(tok_n);
+        let t0 = Instant::now();
+        if !m.can_admit_prompt(&prompt, prompt.len() + decode) {
+            continue;
+        }
+        let seq = c as u64 + 1;
+        let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+        let n_shared_left = stem_len.saturating_sub(reuse.tokens);
+        if n_shared_left > 0 {
+            m.append_run(
+                seq,
+                &stem_k[reuse.tokens * tok_n..],
+                &stem_v[reuse.tokens * tok_n..],
+                n_shared_left,
+            )
+            .unwrap();
+        }
+        m.append_run(seq, &div_k, &div_v, 1).unwrap();
+        ttft.record(t0.elapsed());
+        for _ in 0..decode {
+            let dk = rng.gaussian_vec_f32(tok_n);
+            let dv = rng.gaussian_vec_f32(tok_n);
+            m.append_run(seq, &dk, &dv, 1).unwrap();
+        }
+        admitted += 1;
+    }
+    FanoutPoint {
+        index,
+        admitted,
+        pages: m.pages_in_use(),
+        high_water: m.high_water_pages(),
+        ttft_p50_us: ttft.percentile(50.0),
+        hit_tokens: m.share.prefix_hit_tokens,
+        slots_copied: m.share.slots_copied,
+        tail_copies: m.share.tail_copies,
+        cow_copies: m.share.cow_copies,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let clients = if quick { 16 } else { 64 };
@@ -187,6 +271,60 @@ fn main() {
          only new-pages-after-reuse); ttft p50 = admission + prompt-encode wall time per\n\
          admitted client — the pre-first-token work the engine does on the cache path."
     );
+
+    // scenario 2: high fan-out, mid-page stem, 1-token divergent tails —
+    // the flat-vs-radix column ([cache] prefix_index)
+    println!(
+        "\n== high fan-out: {clients} clients, {}-token shared stem (mid-page) + 1-token \
+         divergent tails + 2 decode tokens, pool {POOL_PAGES} pages ==\n",
+        PROMPT_LEN - 8,
+    );
+    let mut fan_table = Table::new(&[
+        "index",
+        "admitted",
+        "pages",
+        "hw pages",
+        "ttft p50 us",
+        "hit tok",
+        "slot copies",
+        "tail copies",
+        "cow",
+    ]);
+    let mut fan_rows: Vec<Json> = Vec::new();
+    for index in [PrefixIndexKind::Flat, PrefixIndexKind::Radix] {
+        let p = run_fanout(clients, index);
+        fan_table.row(vec![
+            p.index.name().to_string(),
+            p.admitted.to_string(),
+            p.pages.to_string(),
+            p.high_water.to_string(),
+            format!("{:.0}", p.ttft_p50_us),
+            p.hit_tokens.to_string(),
+            p.slots_copied.to_string(),
+            p.tail_copies.to_string(),
+            p.cow_copies.to_string(),
+        ]);
+        fan_rows.push(Json::obj(vec![
+            ("index", Json::str(p.index.name())),
+            ("clients", Json::num(clients as f64)),
+            ("stem_len", Json::num((PROMPT_LEN - 8) as f64)),
+            ("admitted_lanes", Json::num(p.admitted as f64)),
+            ("pages_in_use", Json::num(p.pages as f64)),
+            ("high_water_pages", Json::num(p.high_water as f64)),
+            ("ttft_p50_us", Json::num(p.ttft_p50_us)),
+            ("prefix_hit_tokens", Json::num(p.hit_tokens as f64)),
+            ("slots_copied", Json::num(p.slots_copied as f64)),
+            ("tail_copies", Json::num(p.tail_copies as f64)),
+            ("cow_copies", Json::num(p.cow_copies as f64)),
+        ]));
+    }
+    fan_table.print();
+    println!(
+        "\nradix matches the stem at token granularity: followers copy the 8 shared tail\n\
+         slots instead of re-encoding them, and their open tails skip the per-client\n\
+         seal->CoW page the flat lifecycle pays on the first decode token."
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::str("prefix_reuse")),
         ("prompt_len", Json::num(PROMPT_LEN as f64)),
@@ -195,6 +333,7 @@ fn main() {
         ("pool_pages", Json::num(POOL_PAGES as f64)),
         ("quick", Json::Bool(quick)),
         ("points", Json::Arr(rows)),
+        ("fanout_points", Json::Arr(fan_rows)),
     ]);
     match std::fs::write("BENCH_prefix.json", doc.to_string()) {
         Ok(()) => println!("\nwrote BENCH_prefix.json"),

@@ -318,6 +318,12 @@ pub fn serve(args: &[String]) -> Result<()> {
             "share prompt-prefix KV pages between requests (overrides config): on | off",
         )
         .opt(
+            "prefix-index",
+            "",
+            "prefix-index structure (overrides config): flat | radix \
+             (radix adds token-granular sub-page matching)",
+        )
+        .opt(
             "persist-dir",
             "",
             "persist prompt pages to this directory across restarts (overrides config; \
@@ -363,6 +369,13 @@ pub fn serve(args: &[String]) -> Result<()> {
         Some("on") => cfg.prefix_sharing = true,
         Some("off") => cfg.prefix_sharing = false,
         Some(other) => bail!("--prefix-sharing must be on|off, got {other:?}"),
+    }
+    match a.get("prefix-index") {
+        None | Some("") => {}
+        Some(s) => {
+            cfg.prefix_index = crate::kvcache::PrefixIndexKind::parse(s)
+                .with_context(|| format!("--prefix-index must be flat|radix, got {s:?}"))?;
+        }
     }
     if let Some(dir) = a.get("persist-dir") {
         if !dir.is_empty() {

@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::kvcache::PrefixIndexKind;
 use crate::quant::kernels::KernelBackend;
 use crate::quant::params::Variant;
 use crate::quant::scalar::QuantKind;
@@ -177,6 +178,12 @@ pub struct EngineConfig {
     /// (`[cache] prefix_sharing = off|on`); off reproduces the
     /// exclusive-ownership cache
     pub prefix_sharing: bool,
+    /// prefix-index structure (`[cache] prefix_index = flat|radix`):
+    /// `flat` (default) is the whole-page chain-hash index and
+    /// preserves PR 3/4 behavior exactly; `radix` is the token-level
+    /// radix tree with sub-page slot-range reuse and hierarchical
+    /// eviction
+    pub prefix_index: PrefixIndexKind,
     /// directory of the persistent page store (`[cache] persist_dir`);
     /// empty (the default) disables persistence — no file I/O at all.
     /// Requires `prefix_sharing = on` (the store rides on the
@@ -208,6 +215,7 @@ impl Default for EngineConfig {
             // forces the backend through it), falling back to auto
             kernel_backend: KernelBackend::from_env_default(),
             prefix_sharing: false,
+            prefix_index: PrefixIndexKind::Flat,
             persist_dir: String::new(),
             persist_budget_mb: 256,
             seed: 0x150_0541,
@@ -281,6 +289,14 @@ impl EngineConfig {
             prefix_sharing: match raw.get("cache", "prefix_sharing") {
                 None => d.prefix_sharing,
                 Some(v) => parse_switch(v, "[cache] prefix_sharing")?,
+            },
+            prefix_index: match raw.get("cache", "prefix_index") {
+                None => d.prefix_index,
+                Some(Value::Str(s)) => match PrefixIndexKind::parse(s) {
+                    Some(k) => k,
+                    None => bail!("[cache] prefix_index must be flat|radix, got {s:?}"),
+                },
+                Some(v) => bail!("[cache] prefix_index must be flat|radix, got {v:?}"),
             },
             persist_dir: match raw.get("cache", "persist_dir") {
                 None => d.persist_dir,
@@ -421,6 +437,29 @@ bind = "0.0.0.0:9000"
         for text in [
             "[cache]\nprefix_sharing = 1",
             "[cache]\nprefix_sharing = \"maybe\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn prefix_index_knob() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.prefix_index, PrefixIndexKind::Flat, "defaults flat");
+        for (text, want) in [
+            ("[cache]\nprefix_index = \"flat\"", PrefixIndexKind::Flat),
+            ("[cache]\nprefix_index = flat", PrefixIndexKind::Flat),
+            ("[cache]\nprefix_index = \"radix\"", PrefixIndexKind::Radix),
+            ("[cache]\nprefix_index = radix", PrefixIndexKind::Radix),
+        ] {
+            let cfg = EngineConfig::from_raw(&RawConfig::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.prefix_index, want, "{text}");
+        }
+        for text in [
+            "[cache]\nprefix_index = \"hash\"",
+            "[cache]\nprefix_index = 2",
+            "[cache]\nprefix_index = true",
         ] {
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");

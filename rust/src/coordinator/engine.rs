@@ -119,6 +119,7 @@ impl Engine {
         let mut cache = CacheManager::new(stage1, page_cfg, max_pages);
         cache.parallel = cfg.gather_parallel;
         cache.prefix_sharing = cfg.prefix_sharing;
+        cache.index_kind = cfg.prefix_index;
         if !cfg.persist_dir.is_empty() {
             // persistence rides on the content-addressed index: without
             // sharing nothing is ever published, so nothing could spill
@@ -181,6 +182,15 @@ impl Engine {
             .iter()
             .filter(|l| matches!(l, Lane::Active(_)))
             .count()
+    }
+
+    /// Lanes with no active sequence.  The serve loop uses this for the
+    /// idle-lane fast path: while free lanes exist, queued requests are
+    /// drained into the engine immediately instead of waiting out the
+    /// batching window (`batch_window_us` is a *lanes-full* trade, not
+    /// a floor on time-to-first-token).
+    pub fn free_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| matches!(l, Lane::Free)).count()
     }
 
     pub fn take_completions(&mut self) -> Vec<Completion> {
@@ -258,7 +268,11 @@ impl Engine {
             self.admit_denied = None;
             timing.admitted = Some(Instant::now());
             // adopted tokens are already cached; prefill resumes after
-            // them.  Keep ≥ 1 prompt token to run so the first generated
+            // them — at a *token*, not a page, boundary: with the radix
+            // index a slot-range copy can cover a mid-page run (e.g.
+            // 15 of a 16-token page), and the first chunk then encodes
+            // only the divergent suffix into the open copied tail.
+            // Keep ≥ 1 prompt token to run so the first generated
             // token's logits exist — on a full-prefix hit the last
             // prompt token is recomputed (its cache slot is masked by
             // pos0) and its append is skipped.

@@ -146,6 +146,28 @@ impl PageAllocator {
         }
     }
 
+    /// Copy the slot run `[slot0, slot0 + n)` from `src` into the same
+    /// slots of `dst` (the radix index's sub-page copy-on-write: a new
+    /// sequence adopts the shared leading slots of a sealed page and
+    /// re-encodes only its divergent suffix).  The destination must be
+    /// open; token position ↔ slot alignment is the caller's contract
+    /// (see [`super::page::PageConfig::slot_span`]).
+    pub fn copy_slots(&mut self, src: PageId, dst: PageId, slot0: usize, n: usize) {
+        assert_ne!(src, dst, "copy_slots onto itself");
+        debug_assert!(
+            !self.pages[dst as usize].is_sealed(),
+            "copy_slots into a sealed page"
+        );
+        let span = self.cfg.slot_span(slot0, n);
+        let (s, d) = (src as usize, dst as usize);
+        let (lo, hi) = self.pages.split_at_mut(s.max(d));
+        if s < d {
+            hi[0].data[span.clone()].copy_from_slice(&lo[s].data[span]);
+        } else {
+            lo[d].data[span.clone()].copy_from_slice(&hi[0].data[span]);
+        }
+    }
+
     /// Bytes currently resident (all touched pages, free or not).
     pub fn resident_bytes(&self) -> usize {
         self.pages.len() * self.cfg.page_bytes()
@@ -282,6 +304,20 @@ mod tests {
         a.page_mut(third).data.fill(0x11);
         a.copy_page(third, src);
         assert!(a.page(src).data.iter().all(|&b| b == 0x11));
+    }
+
+    #[test]
+    fn copy_slots_copies_only_the_span() {
+        let mut a = mk(2);
+        let src = a.alloc().unwrap();
+        let dst = a.alloc().unwrap();
+        a.page_mut(src).data.fill(0x5C);
+        a.copy_slots(src, dst, 1, 2);
+        let sb = a.cfg().slot_bytes();
+        let d = &a.page(dst).data;
+        assert!(d[..sb].iter().all(|&b| b == 0), "slot 0 untouched");
+        assert!(d[sb..3 * sb].iter().all(|&b| b == 0x5C), "slots 1..3 copied");
+        assert!(d[3 * sb..].iter().all(|&b| b == 0), "slot 3 untouched");
     }
 
     #[test]

@@ -30,10 +30,14 @@
 //! bench baseline (`benches/gather_throughput.rs`).
 //!
 //! With `prefix_sharing` on, page ownership is refcounted and sealed
-//! prompt pages are shared between same-prefix sequences through the
-//! [`super::prefix::PrefixIndex`] — see the `kvcache` module docs for
-//! the sealed/open/CoW invariants.  All gather paths are read-only and
-//! unaffected by sharing.
+//! prompt pages are shared between same-prefix sequences through one of
+//! two index backends (`[cache] prefix_index`): the whole-page
+//! [`super::prefix::PrefixIndex`] (flat, the default) or the
+//! token-level [`super::radix::RadixIndex`], whose sub-page matches
+//! become slot-range copies so prefill resumes at a *token* boundary —
+//! see the `kvcache` module docs for the sealed/open/CoW invariants.
+//! All gather paths are read-only and unaffected by sharing or the
+//! index choice.
 
 use std::collections::HashMap;
 
@@ -41,7 +45,8 @@ use anyhow::{bail, Context, Result};
 
 use super::allocator::{PageAllocator, PageId};
 use super::page::{chain_key, PageConfig, PrefixKey};
-use super::prefix::PrefixIndex;
+use super::prefix::{PrefixIndex, PrefixIndexKind};
+use super::radix::RadixIndex;
 use super::store::PageStore;
 use crate::metrics::ShareStats;
 use crate::quant::{BatchScratch, PackedSink, Stage1};
@@ -73,6 +78,11 @@ struct SeqCache {
     /// how many leading tokens of this sequence are prompt tokens (0
     /// when admitted without a prompt, or with sharing off)
     prompt_len: usize,
+    /// radix index only: the prompt's final page was assembled by a
+    /// sub-page slot-range copy and stays *open* (exclusively owned),
+    /// so decode appends write in place — it must not seal/publish at
+    /// prompt completion the way a freshly encoded tail does
+    tail_copied: bool,
     /// optional uncompressed shadow copy (fidelity experiments):
     /// layout [layer][head][token][dh], appended per token
     shadow_k: Vec<f32>,
@@ -130,6 +140,60 @@ struct PrefixProbe {
     warm_tail: bool,
 }
 
+/// One resolved step of a radix adoption plan
+/// ([`CacheManager::plan_radix`]), in page-position order.
+enum RadixStep {
+    /// a resident sealed page fully covers tokens `[start, end)`:
+    /// adopt it whole by refcount — no allocation.  For the prompt's
+    /// partial tail this also covers the *strict sub-prefix* case
+    /// (gathers read only the leading slots), which the flat index
+    /// cannot match at all
+    Adopt {
+        page: PageId,
+        start: usize,
+        end: usize,
+    },
+    /// tokens `[start, end)` resolve only from the persistent store:
+    /// promote into a fresh page (full re-verification; failure is a
+    /// miss)
+    Promote {
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        start: usize,
+        end: usize,
+    },
+    /// resident coverage that no single page serves whole: copy the
+    /// covered slot ranges `srcs = (page, slot0, n)` into a fresh
+    /// *open* page.  For a *full* span split across source pages the
+    /// plan continues (the assembled page is complete); a *partial*
+    /// span ends the plan, and prefill re-encodes only the divergent
+    /// suffix
+    Copy {
+        srcs: Vec<(PageId, usize, usize)>,
+        start: usize,
+        end: usize,
+    },
+}
+
+/// What [`CacheManager::adopt_radix`] produced for a new sequence.
+#[derive(Default)]
+struct RadixAdoption {
+    /// the sequence's leading pages, in position order (adopted,
+    /// promoted, and at most one trailing slot-copy page)
+    pages: Vec<PageId>,
+    /// prompt tokens covered — prefill resumes here (token, not page,
+    /// granularity)
+    tokens: usize,
+    /// the prompt's final page is an open slot-copy (suppresses the
+    /// tail seal/publish and the decode-time CoW)
+    tail_copied: bool,
+    /// whole resident full pages adopted (the zero-allocation hits)
+    warm_full: usize,
+    /// index hits (adopted + promoted pages; the copy page is an
+    /// allocation, not a hit)
+    hit_pages: usize,
+}
+
 /// Persistent scratch for the batched gather path: one decode scratch
 /// per (layer, head) strip so strips can decode concurrently, plus the
 /// strip-base table.  Keep one per engine (or per bench loop); the hot
@@ -154,8 +218,15 @@ pub struct CacheManager {
     alloc: PageAllocator,
     stage1: Stage1,
     seqs: HashMap<SeqId, SeqCache>,
-    /// content-addressed index of sealed prompt pages
+    /// content-addressed whole-page index of sealed prompt pages
+    /// (active when `index_kind` is [`PrefixIndexKind::Flat`])
     prefix: PrefixIndex,
+    /// token-level radix tree over the same pages (active when
+    /// `index_kind` is [`PrefixIndexKind::Radix`])
+    radix: RadixIndex,
+    /// which index structure answers prefix lookups
+    /// (`[cache] prefix_index`); set before the first sequence starts
+    pub index_kind: PrefixIndexKind,
     /// chain-hash salt: stage-1 config fingerprint mixed with the page
     /// geometry, so caches with different encodings or layouts never
     /// share pages
@@ -194,6 +265,8 @@ impl CacheManager {
             stage1,
             seqs: HashMap::new(),
             prefix: PrefixIndex::new(),
+            radix: RadixIndex::new(page_cfg.tokens_per_page),
+            index_kind: PrefixIndexKind::Flat,
             fingerprint,
             sink: PackedSink::new(),
             parallel: ParallelPolicy::Off,
@@ -269,14 +342,22 @@ impl CacheManager {
         self.alloc.allocated()
     }
 
+    /// Zero-ref cached pages of whichever index backend is active.
+    fn index_cached_len(&self) -> usize {
+        match self.index_kind {
+            PrefixIndexKind::Flat => self.prefix.cached_len(),
+            PrefixIndexKind::Radix => self.radix.cached_len(),
+        }
+    }
+
     /// Pages owned by at least one live sequence.
     pub fn live_pages(&self) -> usize {
-        self.alloc.allocated() - self.prefix.cached_len()
+        self.alloc.allocated() - self.index_cached_len()
     }
 
     /// Zero-ref sealed pages the prefix index keeps resident (evictable).
     pub fn cached_pages(&self) -> usize {
-        self.prefix.cached_len()
+        self.index_cached_len()
     }
 
     pub fn high_water_pages(&self) -> usize {
@@ -304,15 +385,19 @@ impl CacheManager {
         self.alloc.live_refs()
     }
 
-    /// Prefix-index entries (sealed prompt pages addressable by content).
+    /// Prefix-index entries (sealed prompt pages addressable by content
+    /// — flat map entries, or radix-referenced pages).
     pub fn prefix_index_len(&self) -> usize {
-        self.prefix.len()
+        match self.index_kind {
+            PrefixIndexKind::Flat => self.prefix.len(),
+            PrefixIndexKind::Radix => self.radix.len(),
+        }
     }
 
     /// Pages a new allocation could draw on: the free pool plus
     /// zero-ref cached pages (evictable on demand).
     pub fn available_pages(&self) -> usize {
-        self.alloc.free_count() + self.prefix.cached_len()
+        self.alloc.free_count() + self.index_cached_len()
     }
 
     /// Pages needed to grow a sequence to `new_len` tokens.
@@ -336,6 +421,9 @@ impl CacheManager {
     /// requests therefore admits far more lanes than raw
     /// `pages_needed(total_len)` math would.
     pub fn can_admit_prompt(&self, prompt: &[i32], total_len: usize) -> bool {
+        if self.index_kind == PrefixIndexKind::Radix {
+            return self.can_admit_prompt_radix(prompt, total_len);
+        }
         let tp = self.alloc.cfg().tokens_per_page;
         let pages_total = total_len.div_ceil(tp);
         let probe = self.probe_prefix(prompt);
@@ -355,6 +443,66 @@ impl CacheManager {
         let needed = pages_total.saturating_sub(probe.warm_full_hits) + cow_extra;
         // pages we are about to adopt are no longer evictable headroom
         let evictable = self.prefix.cached_len() - probe.cached_hits;
+        self.alloc.free_count() + evictable >= needed
+    }
+
+    /// [`CacheManager::can_admit_prompt`] for the radix index: the same
+    /// arithmetic over a radix adoption plan.  Whole resident full-page
+    /// adoptions are free; a promotion or a slot-range copy consumes the
+    /// page slot `pages_total` already counts for that position; the
+    /// CoW surcharge applies only when the prompt's sealed tail will be
+    /// copy-on-write replaced by the first generated token — which a
+    /// copied (open) tail never is.
+    fn can_admit_prompt_radix(&self, prompt: &[i32], total_len: usize) -> bool {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let pages_total = total_len.div_ceil(tp);
+        if !self.prefix_sharing || prompt.is_empty() {
+            return self.can_admit(total_len);
+        }
+        let (keys, tail_key) = self.prompt_chain(prompt);
+        let plan = self.plan_radix(prompt, &keys, tail_key);
+        let mut warm_full = 0usize;
+        let mut cached_hits = 0usize;
+        // whether the decode-time CoW of the prompt's sealed tail needs
+        // a page *beyond* the counted tail slot.  A miss or a promoted
+        // tail consumes the counted slot for the encode/promotion and
+        // pays the CoW on top; an *adopted* resident tail costs nothing
+        // now (its later CoW is what the counted slot pays for — the
+        // flat path's `warm_tail` case); an open copied final page
+        // never CoWs at all
+        let mut cow_needs_extra = prompt.len() % tp != 0;
+        for step in &plan {
+            match step {
+                RadixStep::Adopt { page, start, end } => {
+                    if self.alloc.refcount(*page) == 0 {
+                        cached_hits += 1;
+                    }
+                    if end - start == tp {
+                        warm_full += 1;
+                    } else {
+                        cow_needs_extra = false; // warm tail: slot covers the CoW
+                    }
+                }
+                RadixStep::Promote { .. } => {
+                    // consumes its counted slot; a promoted tail is
+                    // sealed, so the default `cow_needs_extra` holds
+                }
+                RadixStep::Copy { srcs, start, .. } => {
+                    for &(p, _, _) in srcs {
+                        if self.alloc.refcount(p) == 0 {
+                            cached_hits += 1;
+                        }
+                    }
+                    if *start / tp == (prompt.len() - 1) / tp {
+                        cow_needs_extra = false; // open copied final page: no CoW
+                    }
+                }
+            }
+        }
+        let cow_extra =
+            (prompt.len() % tp != 0 && total_len > prompt.len() && cow_needs_extra) as usize;
+        let needed = pages_total.saturating_sub(warm_full) + cow_extra;
+        let evictable = self.radix.cached_len().saturating_sub(cached_hits);
         self.alloc.free_count() + evictable >= needed
     }
 
@@ -381,7 +529,31 @@ impl CacheManager {
         }
         let mut sc = SeqCache::default();
         let mut reuse = PrefixReuse::default();
-        if self.prefix_sharing && !prompt.is_empty() {
+        if self.prefix_sharing && !prompt.is_empty() && self.index_kind == PrefixIndexKind::Radix
+        {
+            // radix index: token-granular adoption — whole sealed pages
+            // by refcount where the tree covers a full page, cold pages
+            // promoted from the store, and a partial match turned into
+            // a slot-range copy (the sub-page dedup path)
+            let (keys, tail) = self.prompt_chain(prompt);
+            let adoption = self.adopt_radix(prompt, &keys, tail);
+            reuse = PrefixReuse {
+                pages: adoption.hit_pages,
+                tokens: adoption.tokens,
+            };
+            sc.len = adoption.tokens;
+            sc.pages = adoption.pages;
+            sc.prompt = prompt.to_vec();
+            sc.prompt_keys = keys;
+            sc.tail_key = tail;
+            sc.prompt_len = prompt.len();
+            sc.tail_copied = adoption.tail_copied;
+            self.share.prefix_hit_pages += reuse.pages as u64;
+            self.share.prefix_hit_tokens += reuse.tokens as u64;
+            // dedup credit: whole resident full pages, as in flat mode
+            self.share.bytes_deduped +=
+                (adoption.warm_full * self.alloc.cfg().page_bytes()) as u64;
+        } else if self.prefix_sharing && !prompt.is_empty() {
             let tp = self.alloc.cfg().tokens_per_page;
             let (keys, tail) = self.prompt_chain(prompt);
             let probe = self.probe_prefix_with(prompt, &keys, tail);
@@ -615,6 +787,269 @@ impl CacheManager {
         Some(p)
     }
 
+    // ------------------------------------------------------------------
+    // radix-index internals ([`PrefixIndexKind::Radix`])
+    // ------------------------------------------------------------------
+
+    /// Walk the radix tree (and, beyond its coverage, the persistent
+    /// store) over `prompt` and decide, per page position, how that
+    /// page's tokens are served.  Read-only: shared by the admission
+    /// check and the adoption path.  The plan is in page-position
+    /// order; a *partial* [`RadixStep::Copy`] or a missing position
+    /// ends the plan (coverage past the first unmatched token is
+    /// unknowable; pages adopt in prefix order or not at all), while a
+    /// fully-covered span — adopted whole or assembled from several
+    /// source pages — lets the walk continue.
+    fn plan_radix(
+        &self,
+        prompt: &[i32],
+        keys: &[PrefixKey],
+        tail_key: Option<PrefixKey>,
+    ) -> Vec<RadixStep> {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let plen = prompt.len();
+        let (segs, matched) = self.radix.match_prefix(prompt);
+        let mut steps = Vec::new();
+        for pi in 0..plen.div_ceil(tp) {
+            let s = pi * tp;
+            let e = (s + tp).min(plen);
+            let covered = matched.min(e).saturating_sub(s);
+            // resident pieces covering [s, s + covered), coalesced so
+            // adjacent segments of one page become one copy/pin unit
+            let mut pieces: Vec<(PageId, usize, usize)> = Vec::new();
+            for seg in &segs {
+                let ss = seg.start.max(s);
+                let se = (seg.start + seg.len).min(s + covered);
+                if ss >= se {
+                    continue;
+                }
+                let slot0 = seg.slot0 + (ss - seg.start);
+                match pieces.last_mut() {
+                    Some((p, ps, pn)) if *p == seg.page && *ps + *pn == slot0 => {
+                        *pn += se - ss;
+                    }
+                    _ => pieces.push((seg.page, slot0, se - ss)),
+                }
+            }
+            if covered == e - s && pieces.len() == 1 {
+                // the whole span is resident on one sealed page: adopt
+                // it by refcount — including a *partial tail* span,
+                // which the flat index can only match on an exact
+                // whole-run key (gathers read only the leading slots)
+                steps.push(RadixStep::Adopt {
+                    page: pieces[0].0,
+                    start: s,
+                    end: e,
+                });
+                continue;
+            }
+            // not fully resident on one page: the store may hold the
+            // whole page-aligned run (full pages under their chain
+            // keys, the partial tail under its tail key)
+            let store_key = if e - s == tp { keys.get(pi).copied() } else { tail_key };
+            let parent = if pi > 0 { keys.get(pi - 1).copied() } else { None };
+            if let Some(k) = store_key {
+                let cold = self
+                    .store
+                    .as_ref()
+                    .is_some_and(|st| st.lookup_meta(k, parent, &prompt[s..e]));
+                if cold {
+                    steps.push(RadixStep::Promote {
+                        key: k,
+                        parent,
+                        start: s,
+                        end: e,
+                    });
+                    continue;
+                }
+            }
+            if covered == e - s && !pieces.is_empty() {
+                // the whole span is resident but split across source
+                // pages (an earlier divergence left the shared head on
+                // one page and the suffix on another): assemble a full
+                // copy and keep walking — later positions are still
+                // matched and adoptable
+                steps.push(RadixStep::Copy {
+                    srcs: pieces,
+                    start: s,
+                    end: e,
+                });
+                continue;
+            }
+            if covered > 0 {
+                // sub-page partial coverage: copy the covered slots
+                // into a fresh open page; prefill resumes at token
+                // `s + covered`, re-encoding only the divergent suffix
+                steps.push(RadixStep::Copy {
+                    srcs: pieces,
+                    start: s,
+                    end: s + covered,
+                });
+            }
+            break;
+        }
+        steps
+    }
+
+    /// Execute a radix adoption plan for a new sequence.  Mirrors the
+    /// flat walk's discipline: every *resident* page the plan touches
+    /// (whole adoptions and copy sources) is pinned first, so the
+    /// allocations promotions and copies make cannot evict a page the
+    /// same walk is about to use; reuse credit lands only on executed
+    /// steps; the first failure truncates reuse there and releases the
+    /// remaining pins back to the warm tier.
+    fn adopt_radix(
+        &mut self,
+        prompt: &[i32],
+        keys: &[PrefixKey],
+        tail_key: Option<PrefixKey>,
+    ) -> RadixAdoption {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let steps = self.plan_radix(prompt, keys, tail_key);
+        for step in &steps {
+            match step {
+                RadixStep::Adopt { page, .. } => {
+                    self.radix.unpark(*page);
+                    self.alloc.retain(*page);
+                }
+                RadixStep::Copy { srcs, .. } => {
+                    for &(p, _, _) in srcs {
+                        self.radix.unpark(p);
+                        self.alloc.retain(p);
+                    }
+                }
+                RadixStep::Promote { .. } => {}
+            }
+        }
+        let mut out = RadixAdoption::default();
+        let mut failed = false;
+        for step in &steps {
+            if failed {
+                match step {
+                    RadixStep::Adopt { page, .. } => self.release_page(*page),
+                    RadixStep::Copy { srcs, .. } => {
+                        for &(p, _, _) in srcs {
+                            self.release_page(p);
+                        }
+                    }
+                    RadixStep::Promote { .. } => {}
+                }
+                continue;
+            }
+            match step {
+                RadixStep::Adopt { page, start, end } => {
+                    debug_assert!(self.alloc.page(*page).is_sealed());
+                    self.radix.credit_page(*page);
+                    out.pages.push(*page);
+                    out.tokens = *end;
+                    out.hit_pages += 1;
+                    if end - start == tp {
+                        out.warm_full += 1;
+                    }
+                }
+                RadixStep::Promote { key, parent, start, end } => {
+                    match self.promote_radix(*key, *parent, prompt, *start, *end) {
+                        Some(p) => {
+                            out.pages.push(p);
+                            out.tokens = *end;
+                            out.hit_pages += 1;
+                        }
+                        None => failed = true,
+                    }
+                }
+                RadixStep::Copy { srcs, start, end } => match self.alloc_page() {
+                    Ok(dst) => {
+                        for &(src, slot0, n) in srcs {
+                            self.alloc.copy_slots(src, dst, slot0, n);
+                            self.radix.credit_page(src);
+                            self.share.slots_copied += n as u64;
+                            self.release_page(src);
+                        }
+                        out.pages.push(dst);
+                        out.tokens = *end;
+                        // the copy page stays open; only when it is the
+                        // prompt's final page does it suppress the
+                        // seal-and-publish (and therefore the CoW) the
+                        // flat tail lifecycle would impose.  Interior
+                        // assembled pages (full spans split across
+                        // source pages) stay open too, harmlessly —
+                        // they are complete, never written again, and
+                        // never published
+                        if start / tp == (prompt.len() - 1) / tp {
+                            out.tail_copied = true;
+                        }
+                        self.share.tail_copies += 1;
+                    }
+                    Err(_) => {
+                        failed = true;
+                        for &(p, _, _) in srcs {
+                            self.release_page(p);
+                        }
+                    }
+                },
+            }
+        }
+        out
+    }
+
+    /// Promote one cold page under the radix index: read + fully
+    /// re-verify the record, install the bytes into a fresh sealed
+    /// page, and publish its run back into the tree.  Any failure is a
+    /// miss — the caller re-encodes, never adopts wrong bytes.
+    fn promote_radix(
+        &mut self,
+        key: PrefixKey,
+        parent: Option<PrefixKey>,
+        prompt: &[i32],
+        start: usize,
+        end: usize,
+    ) -> Option<PageId> {
+        let run = &prompt[start..end];
+        let bytes = self.store.as_ref()?.read_page(key, parent, run)?;
+        if bytes.len() != self.alloc.cfg().page_bytes() {
+            return None;
+        }
+        let p = self.alloc_page().ok()?;
+        self.alloc.page_mut(p).data.copy_from_slice(&bytes);
+        self.alloc.page_mut(p).seal(Some(key));
+        // losing the publish race to an existing covering run just
+        // leaves this page as a private resident copy of the sequence
+        let _ = self.radix.insert(&prompt[..end], start, p);
+        self.share.pages_promoted += 1;
+        Some(p)
+    }
+
+    /// Write-behind persistence of a parking page under the radix
+    /// index.  The record's *edge* (parent key + covered token run) is
+    /// derived from the page's tree path, so it is addressable by
+    /// exactly the chain keys [`CacheManager::plan_radix`]'s store
+    /// fallback computes — flat- and radix-written stores are
+    /// interchangeable.  A page whose covered run does not start at
+    /// slot 0 (a promoted divergent suffix) is already durable under
+    /// its original whole-run record and is skipped.
+    fn spill_page_radix(&mut self, page: PageId) {
+        let tp = self.alloc.cfg().tokens_per_page;
+        let enqueued = {
+            let Some(store) = self.store.as_ref() else { return };
+            let Some((start, run, prefix)) = self.radix.page_run(page) else {
+                return;
+            };
+            if start % tp != 0 {
+                return;
+            }
+            debug_assert_eq!(prefix.len(), start);
+            let mut parent = None;
+            for chunk in prefix.chunks(tp) {
+                parent = Some(chain_key(parent, chunk, self.fingerprint));
+            }
+            let key = chain_key(parent, &run, self.fingerprint);
+            store.spill(key, parent, &run, &self.alloc.page(page).data)
+        };
+        if enqueued {
+            self.share.pages_spilled += 1;
+        }
+    }
+
     /// Drop one ownership of `p`.  At zero refs an indexed page is
     /// parked in the zero-ref prefix cache (still resident, adoptable,
     /// evictable) and — when a persistent store is attached — handed to
@@ -623,13 +1058,25 @@ impl CacheManager {
     /// to the free pool.
     fn release_page(&mut self, p: PageId) {
         if self.alloc.release(p) == 0 {
-            let key = self.alloc.page(p).key();
-            match key {
-                Some(k) if self.prefix.is_indexed(k, p) => {
-                    self.spill_page(k, p);
-                    self.prefix.cache_zero_ref(p, k);
+            match self.index_kind {
+                PrefixIndexKind::Flat => {
+                    let key = self.alloc.page(p).key();
+                    match key {
+                        Some(k) if self.prefix.is_indexed(k, p) => {
+                            self.spill_page(k, p);
+                            self.prefix.cache_zero_ref(p, k);
+                        }
+                        _ => self.alloc.free(p),
+                    }
                 }
-                _ => self.alloc.free(p),
+                PrefixIndexKind::Radix => {
+                    if self.radix.is_referenced(p) {
+                        self.spill_page_radix(p);
+                        self.radix.park(p);
+                    } else {
+                        self.alloc.free(p);
+                    }
+                }
             }
         }
     }
@@ -653,20 +1100,31 @@ impl CacheManager {
 
     /// Allocate a page, demoting zero-ref prefix-cache entries (lowest
     /// reuse/depth retention score first — see
-    /// [`PrefixIndex::evict_victim`]) under pool pressure.  With a
-    /// store attached the victims were spilled when they parked, so
-    /// this recycles only the RAM copy.
+    /// [`PrefixIndex::evict_victim`] and [`RadixIndex::evict_victim`])
+    /// under pool pressure.  Radix eviction is hierarchical and may
+    /// cascade: dropping an interior run frees any parked pages its
+    /// subtree stranded, all of which recycle here.  With a store
+    /// attached the victims were spilled when they parked, so this
+    /// recycles only the RAM copies.
     fn alloc_page(&mut self) -> Result<PageId> {
         loop {
             match self.alloc.alloc() {
                 Ok(p) => return Ok(p),
-                Err(e) => match self.prefix.evict_victim() {
-                    Some(victim) => {
-                        self.alloc.free(victim);
+                Err(e) => {
+                    let freed = match self.index_kind {
+                        PrefixIndexKind::Flat => {
+                            self.prefix.evict_victim().map_or_else(Vec::new, |v| vec![v])
+                        }
+                        PrefixIndexKind::Radix => self.radix.evict_victim(),
+                    };
+                    if freed.is_empty() {
+                        return Err(e);
+                    }
+                    for v in freed {
+                        self.alloc.free(v);
                         self.share.pages_evicted += 1;
                     }
-                    None => return Err(e),
-                },
+                }
             }
         }
     }
@@ -702,26 +1160,61 @@ impl CacheManager {
             }
             self.alloc.page_mut(page_id).seal(key);
             if let (Some(k), Some(run)) = (key, run) {
-                if self.prefix.publish(k, page_id, parent, &run, pi as u32) {
+                let published = match self.index_kind {
+                    PrefixIndexKind::Flat => {
+                        self.prefix.publish(k, page_id, parent, &run, pi as u32)
+                    }
+                    PrefixIndexKind::Radix => {
+                        // publish the run under its token path; a page
+                        // whose leading slots were slot-copied inserts
+                        // only its divergent suffix (the copied part
+                        // already resolves to the source page)
+                        let prefix_run = {
+                            let s = self.seqs.get(&seq).unwrap();
+                            s.prompt[..(pi + 1) * tp].to_vec()
+                        };
+                        self.radix.insert(&prefix_run, pi * tp, page_id)
+                    }
+                };
+                if published {
                     self.share.pages_published += 1;
                 }
             }
         }
         if self.prefix_sharing && prompt_len > 0 && len == prompt_len && len % tp != 0 {
-            let (page_id, tail_key, parent, run) = {
+            let (page_id, tail_key, parent, run, tail_copied) = {
                 let s = self.seqs.get(&seq).unwrap();
                 (
                     *s.pages.last().unwrap(),
                     s.tail_key,
                     s.prompt_keys.last().copied(),
                     s.prompt[(prompt_len / tp) * tp..].to_vec(),
+                    s.tail_copied,
                 )
             };
+            // a radix slot-copied tail stays *open*: decode appends
+            // write in place, so there is no seal, no publish, and no
+            // copy-on-write page per divergent-tail sequence — the
+            // shared part of the run is already indexed on its source
+            // page, which is where followers copy from
+            let skip_seal = self.index_kind == PrefixIndexKind::Radix && tail_copied;
             if let Some(k) = tail_key {
-                if !self.alloc.page(page_id).is_sealed() {
+                if !self.alloc.page(page_id).is_sealed() && !skip_seal {
                     self.alloc.page_mut(page_id).seal(Some(k));
                     let depth = (prompt_len / tp) as u32;
-                    if self.prefix.publish(k, page_id, parent, &run, depth) {
+                    let published = match self.index_kind {
+                        PrefixIndexKind::Flat => {
+                            self.prefix.publish(k, page_id, parent, &run, depth)
+                        }
+                        PrefixIndexKind::Radix => {
+                            let prefix_run = {
+                                let s = self.seqs.get(&seq).unwrap();
+                                s.prompt.clone()
+                            };
+                            self.radix.insert(&prefix_run, (prompt_len / tp) * tp, page_id)
+                        }
+                    };
+                    if published {
                         self.share.pages_published += 1;
                     }
                 }
@@ -1861,6 +2354,186 @@ mod tests {
         m.drop_seq(2);
         assert_eq!(m.pages_in_use(), 0);
         assert_eq!(m.share, crate::metrics::ShareStats::default());
+    }
+
+    /// Flatten a token stream into one run for append_run.
+    fn flat_run(toks: &[(Vec<f32>, Vec<f32>)]) -> (Vec<f32>, Vec<f32>) {
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for (tk, tv) in toks {
+            k.extend_from_slice(tk);
+            v.extend_from_slice(tv);
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn radix_sub_page_tail_copy_is_bit_exact_and_saves_pages() {
+        // tp = 4; 4 clients share 10 of 11 prompt tokens (2 full pages
+        // + 2 of 3 tail slots), then each decodes 2 tokens.  The radix
+        // index copies the 2 shared tail slots and re-encodes only the
+        // divergent one; the copied tail stays open, so divergent
+        // clients skip the seal→CoW dance entirely and the cache ends
+        // strictly below the flat index's page count — with every
+        // gather byte-identical to the unshared reference.
+        let mk_shared = |kind: PrefixIndexKind| {
+            let mut m = mk(64, 4);
+            m.prefix_sharing = true;
+            m.index_kind = kind;
+            m
+        };
+        let mut rx = mk_shared(PrefixIndexKind::Radix);
+        let mut fx = mk_shared(PrefixIndexKind::Flat);
+        let mut un = mk(64, 4); // unshared reference
+        let cfg = rx.page_cfg();
+        let clients = 4u64;
+        let shared = token_stream(31, 10, &cfg);
+        for c in 0..clients {
+            let seq = c + 1;
+            let mut prompt: Vec<i32> = (0..10).collect();
+            prompt.push(900 + c as i32);
+            let tail = token_stream(40 + c, 1, &cfg);
+            let (sk, sv) = flat_run(&shared);
+            let (tk, tv) = flat_run(&tail);
+            for (m, is_radix) in [(&mut rx, true), (&mut fx, false)] {
+                let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+                if c == 0 {
+                    assert_eq!(reuse, PrefixReuse::default(), "first client is cold");
+                } else if is_radix {
+                    assert_eq!(
+                        reuse,
+                        PrefixReuse { pages: 2, tokens: 10 },
+                        "radix covers the shared tail slots too"
+                    );
+                } else {
+                    assert_eq!(
+                        reuse,
+                        PrefixReuse { pages: 2, tokens: 8 },
+                        "flat stops at the page boundary"
+                    );
+                }
+                let skip = reuse.tokens;
+                if skip < 10 {
+                    m.append_run(seq, &sk[skip * cfg.n_layers * cfg.n_heads * cfg.d_head..],
+                        &sv[skip * cfg.n_layers * cfg.n_heads * cfg.d_head..], 10 - skip)
+                        .unwrap();
+                }
+                m.append_run(seq, &tk, &tv, 1).unwrap();
+                assert_eq!(m.seq_len(seq), 11);
+            }
+            un.start_seq(seq).unwrap();
+            let (sk, sv) = flat_run(&shared);
+            un.append_run(seq, &sk, &sv, 10).unwrap();
+            un.append_run(seq, &tk, &tv, 1).unwrap();
+        }
+        // sub-page accounting: 3 followers × 2 copied slots
+        assert_eq!(rx.share.slots_copied, 6);
+        assert_eq!(rx.share.tail_copies, 3);
+        assert_eq!(fx.share.slots_copied, 0);
+        // decode: 2 tokens per client (crosses into an overflow page)
+        for c in 0..clients {
+            let seq = c + 1;
+            let dec = token_stream(70 + c, 2, &cfg);
+            for (tk, tv) in &dec {
+                rx.append_token(seq, tk, tv).unwrap();
+                fx.append_token(seq, tk, tv).unwrap();
+                un.append_token(seq, tk, tv).unwrap();
+            }
+        }
+        // CoW economics: only the cold client's published tail CoWs
+        // under radix; every client CoWs under flat
+        assert_eq!(rx.share.cow_copies, 1);
+        assert_eq!(fx.share.cow_copies, 4);
+        // page economics: radix = 2 shared + cold client {parked tail,
+        // CoW, overflow} + 3 × {open copy page, overflow};
+        // flat = 2 shared + 4 × {parked tail, CoW page, overflow}
+        assert_eq!(rx.pages_in_use(), 2 + 3 + 3 * 2);
+        assert_eq!(fx.pages_in_use(), 2 + 4 * 3);
+        assert!(rx.pages_in_use() < fx.pages_in_use());
+        // byte-identity everywhere
+        let t_max = 13;
+        for c in 0..clients {
+            let seq = c + 1;
+            let (rk, rv) = gather_pair(&rx, seq, t_max);
+            let (fk, fv) = gather_pair(&fx, seq, t_max);
+            let (uk, uv) = gather_pair(&un, seq, t_max);
+            assert_eq!(
+                rk.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                uk.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} K radix vs unshared"
+            );
+            assert_eq!(
+                rv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                uv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} V radix vs unshared"
+            );
+            assert_eq!(
+                fk.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                uk.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} K flat vs unshared"
+            );
+            assert_eq!(
+                fv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                uv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "seq {seq} V flat vs unshared"
+            );
+        }
+        // teardown: every ref returns on both shared caches
+        for c in 0..clients {
+            rx.drop_seq(c + 1);
+            fx.drop_seq(c + 1);
+        }
+        assert_eq!(rx.live_refs(), 0);
+        assert_eq!(rx.live_pages(), 0);
+        assert_eq!(fx.live_refs(), 0);
+    }
+
+    #[test]
+    fn radix_strict_prefix_adopts_the_longer_tail_page() {
+        // a shorter prompt that ends mid-page adopts the longer
+        // prompt's sealed tail page whole and reads only its leading
+        // slots — a match the flat index cannot produce at all
+        let mut m = mk(64, 4);
+        m.prefix_sharing = true;
+        m.index_kind = PrefixIndexKind::Radix;
+        let mut un = mk(64, 4);
+        let cfg = m.page_cfg();
+        let prompt_a: Vec<i32> = (0..11).collect();
+        let pv = token_stream(61, 11, &cfg);
+        let (pk, pvv) = flat_run(&pv);
+        m.start_seq_with_prompt(1, &prompt_a).unwrap();
+        m.append_run(1, &pk, &pvv, 11).unwrap();
+        // prompt B = the first 9 tokens of A: 2 full pages + 1 tail
+        // token, all resident — zero allocation, zero re-encode
+        let before = m.pages_in_use();
+        let reuse = m.start_seq_with_prompt(2, &prompt_a[..9]).unwrap();
+        assert_eq!(reuse, PrefixReuse { pages: 3, tokens: 9 });
+        assert_eq!(m.seq_len(2), 9);
+        assert_eq!(m.pages_in_use(), before, "whole-page adoption allocates nothing");
+        assert_eq!(m.shared_pages(), 3);
+        un.start_seq(2).unwrap();
+        let n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+        un.append_run(2, &pk[..9 * n], &pvv[..9 * n], 9).unwrap();
+        // decode: the adopted sealed tail CoWs exactly like a flat one
+        let dec = token_stream(62, 2, &cfg);
+        for (tk, tv) in &dec {
+            m.append_token(2, tk, tv).unwrap();
+            un.append_token(2, tk, tv).unwrap();
+        }
+        assert_eq!(m.share.cow_copies, 1);
+        let (mk_, mv_) = gather_pair(&m, 2, 11);
+        let (uk, uv) = gather_pair(&un, 2, 11);
+        assert_eq!(
+            mk_.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            uk.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            mv_.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            uv.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        m.drop_seq(1);
+        m.drop_seq(2);
+        assert_eq!(m.live_refs(), 0);
+        assert_eq!(m.live_pages(), 0);
     }
 
     #[test]

@@ -16,10 +16,13 @@
 //!   Sealed prompt pages carry a [`page::PrefixKey`] — the chained hash
 //!   of the token ids they cover plus the stage-1 config fingerprint —
 //!   and are published to the [`prefix::PrefixIndex`].
-//! * **The open tail is exclusively owned.**  Only the last page of a
-//!   sequence may be open (unsealed), and an open page always has
-//!   refcount 1.  Appending to a sequence whose tail is sealed
+//! * **Open pages are exclusively owned.**  An open (unsealed) page
+//!   always has refcount 1.  Only the *tail* page is ever written
+//!   again — appending to a sequence whose tail is sealed
 //!   copy-on-write replaces it first ([`CacheManager::append_run`]).
+//!   (Under the radix index a sequence may also hold open *interior*
+//!   pages: fully-assembled slot-range copies, complete and never
+//!   rewritten or published.)
 //! * **The index holds no refs.**  [`prefix::PrefixIndex`] entries are
 //!   hints, and lookups are token-verified (a hash collision reads as a
 //!   miss, never as another prompt's pages): adoption at admission
@@ -35,6 +38,26 @@
 //! counts only the *new* pages a request needs after index reuse, so a
 //! burst of same-prompt requests admits far more lanes than raw
 //! length-based math would.
+//!
+//! # Index backends (`[cache] prefix_index = flat|radix`)
+//!
+//! Two interchangeable index structures resolve prompt prefixes to
+//! cached pages (selected by [`CacheManager::index_kind`]):
+//!
+//! * **flat** ([`prefix::PrefixIndex`], the default) — whole-page
+//!   chain-hash lookups; exactly the PR 3/4 behavior.
+//! * **radix** ([`radix::RadixIndex`]) — a token-level radix tree
+//!   (vLLM/SGLang style): longest-common-prefix walks match at *token*
+//!   granularity, insertion splits nodes at the divergence token, and a
+//!   sub-page match becomes a **slot-range copy-on-write** — two
+//!   prompts sharing 15 of 16 tail tokens share those 15 slots' bytes
+//!   and encode work, re-encoding only the divergent suffix.  Copied
+//!   tails stay *open*, so divergent-tail sequences also skip the
+//!   seal→CoW dance and hold one page where the flat lifecycle holds
+//!   two.  Eviction is hierarchical (leaves before the interior runs
+//!   every descendant needs), and both backends share the same
+//!   persistent-store record format — a store written under one index
+//!   rehydrates under the other.
 
 //! # Tiered residency (hot → warm → cold)
 //!
@@ -63,10 +86,12 @@ pub mod allocator;
 pub mod manager;
 pub mod page;
 pub mod prefix;
+pub mod radix;
 pub mod store;
 
 pub use allocator::{PageAllocator, PageId};
 pub use manager::{CacheManager, GatherWorkspace, PrefixReuse, SeqId};
 pub use page::{chain_key, Page, PageConfig, PrefixKey};
-pub use prefix::PrefixIndex;
+pub use prefix::{PrefixIndex, PrefixIndexKind};
+pub use radix::RadixIndex;
 pub use store::{PageStore, StoreConfig, StoreStats};

@@ -49,6 +49,21 @@ impl PageConfig {
     pub fn slot_bytes_uncompressed(&self) -> usize {
         self.n_layers * self.n_heads * 2 * self.d_head * 4
     }
+
+    /// Byte range of the contiguous slot run `[slot0, slot0 + n)`.
+    ///
+    /// Slots are laid out slot-major (see [`PageConfig::offset`]), so a
+    /// run of token slots is one contiguous byte window — which is what
+    /// makes the radix index's *slot-range copy-on-write* a single
+    /// `memcpy`: token position `t` always lives at slot
+    /// `t % tokens_per_page`, so the same range means the same token
+    /// positions in every page, and stage-1 encoding is deterministic,
+    /// so copied slot bytes are identical to freshly re-encoded ones.
+    pub fn slot_span(&self, slot0: usize, n: usize) -> std::ops::Range<usize> {
+        debug_assert!(slot0 + n <= self.tokens_per_page);
+        let sb = self.slot_bytes();
+        slot0 * sb..(slot0 + n) * sb
+    }
 }
 
 /// Content identity of a sealed prompt page: the chained hash of the
@@ -190,6 +205,17 @@ mod tests {
         }
         // offsets tile the page exactly
         assert_eq!(seen.len() * c.encoded_len, c.page_bytes());
+    }
+
+    #[test]
+    fn slot_span_is_contiguous_and_slot_major() {
+        let c = cfg();
+        // the span of slots [3, 7) is exactly slots 3..7's offsets
+        let span = c.slot_span(3, 4);
+        assert_eq!(span.start, c.offset(3, 0, 0, false));
+        assert_eq!(span.end, c.offset(7, 0, 0, false));
+        assert_eq!(span.len(), 4 * c.slot_bytes());
+        assert_eq!(c.slot_span(0, c.tokens_per_page), 0..c.page_bytes());
     }
 
     #[test]

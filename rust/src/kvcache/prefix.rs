@@ -1,9 +1,17 @@
-//! Prefix index: content-addressed lookup of sealed prompt pages.
+//! Flat prefix index: content-addressed lookup of sealed prompt pages.
 //!
 //! Maps [`PrefixKey`]s (chained hashes of prompt token runs, see
 //! `kvcache::page::chain_key`) to sealed [`PageId`]s so a new sequence
 //! whose prompt starts with an already-cached prefix can adopt whole
 //! pages instead of re-encoding them.
+//!
+//! This is the *flat* of the two index backends selected by
+//! `[cache] prefix_index` (see [`PrefixIndexKind`]): it matches whole
+//! pages only — a prompt sharing 15 of a page's 16 tokens shares
+//! nothing here.  The token-level [`super::radix::RadixIndex`] closes
+//! that gap with longest-common-prefix walks and sub-page slot-range
+//! reuse; this flat index remains the default and the reference
+//! behavior.
 //!
 //! A key match alone is not trusted: token ids are client-controlled
 //! and a 64-bit hash can collide, so every entry stores the exact token
@@ -35,6 +43,41 @@ use std::collections::{BTreeMap, HashMap};
 
 use super::allocator::PageId;
 use super::page::PrefixKey;
+
+/// Which prefix-index structure the cache manager runs
+/// (`[cache] prefix_index = flat|radix`).
+///
+/// * [`PrefixIndexKind::Flat`] — the PR 3/4 content-addressed
+///   whole-page index ([`PrefixIndex`]); the default, and bit-for-bit
+///   the previous behavior.
+/// * [`PrefixIndexKind::Radix`] — the token-level radix tree
+///   ([`super::radix::RadixIndex`]): longest-common-prefix lookups,
+///   node splits at the divergence token, sub-page slot-range
+///   copy-on-write, and hierarchical (leaves-first) eviction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum PrefixIndexKind {
+    #[default]
+    Flat,
+    Radix,
+}
+
+impl PrefixIndexKind {
+    /// Parse a `[cache] prefix_index` / `--prefix-index` value.
+    pub fn parse(s: &str) -> Option<PrefixIndexKind> {
+        match s {
+            "flat" => Some(PrefixIndexKind::Flat),
+            "radix" => Some(PrefixIndexKind::Radix),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefixIndexKind::Flat => "flat",
+            PrefixIndexKind::Radix => "radix",
+        }
+    }
+}
 
 /// Fixed-point scale of the retention score (keeps the reuse/depth
 /// ratio meaningful in integer math).

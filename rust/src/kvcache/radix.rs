@@ -1,0 +1,735 @@
+//! Token-level radix tree over sealed prompt pages — the `radix` prefix
+//! index (`[cache] prefix_index = radix`).
+//!
+//! Where the flat [`super::prefix::PrefixIndex`] maps whole-page chain
+//! hashes to pages (and therefore cannot see a match shorter than a
+//! page), this index stores the *token runs themselves* as a radix tree
+//! in the style of vLLM/SGLang prefix caches:
+//!
+//! ```text
+//!             root
+//!              │ "the quick brown fox "      node run → (page 4, slots 0..16)
+//!              ├──────────────┐
+//!   "jumps over"       "walks under"         split at the divergence token:
+//!   (page 7, 0..10)    (page 9, 0..11)       two prompts share the parent run
+//! ```
+//!
+//! * Each **node** owns a run of token ids that never crosses a page
+//!   boundary, plus the page (and slot range inside it) holding that
+//!   run's stage-1 encoded K/V.  Token position `t` of the prompt always
+//!   lives at slot `t % tokens_per_page` of its page, so slot ranges of
+//!   different prompts line up and can be copied between pages verbatim.
+//! * **Lookup** ([`RadixIndex::match_prefix`]) walks the
+//!   longest-common-prefix of a prompt and returns the covered
+//!   `(page, slot range)` segments — a match can end in the middle of a
+//!   page (the flat index can only answer per whole page) and in the
+//!   middle of a node (no mutation on lookup).
+//! * **Insertion** ([`RadixIndex::insert`]) splits a node at the
+//!   divergence token, so two prompts sharing 15 of 16 tail tokens end
+//!   up as a shared 15-token parent with two 1-token children.  The
+//!   cache manager turns such a partial match into a *slot-range
+//!   copy-on-write*: it copies the 15 shared slots out of the indexed
+//!   page and re-encodes only the divergent suffix
+//!   (`CacheManager::start_seq_with_prompt`).
+//! * **Eviction** ([`RadixIndex::evict_victim`]) is hierarchical: the
+//!   parked page with the lowest retention score
+//!   `(reuse + 1) / (depth + 1)` goes first (ties: least recently
+//!   parked), which makes leaves evict before the interior runs every
+//!   descendant depends on.  Evicting a page drops every node that
+//!   references it *and their subtrees* — a child whose ancestor run is
+//!   gone can never be matched again, so any parked pages stranded by
+//!   the cascade are freed in the same call.
+//!
+//! Like the flat index, this structure holds **no page refcounts** and
+//! serves only verified data: a node stores the exact token ids it
+//! covers, so matching is literal comparison — there is no hash to
+//! collide.  Zero-ref pages park here (evictable, re-adoptable) exactly
+//! as they do in the flat index; the manager's hot→warm→cold tiering
+//! and the persistent store are index-agnostic (see
+//! `CacheManager::fingerprint` and `kvcache::store`).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::allocator::PageId;
+
+/// Fixed-point scale of the retention score (keeps the reuse/depth
+/// ratio meaningful in integer math); matches the flat index.
+const SCORE_SCALE: u64 = 1 << 16;
+
+pub type NodeId = u32;
+
+/// One radix node: a token run backed by a slot range of one page.
+#[derive(Debug)]
+struct Node {
+    /// the token ids this node covers (never crosses a page boundary)
+    tokens: Vec<i32>,
+    /// absolute prompt position of `tokens[0]`; the run occupies slots
+    /// `start % tokens_per_page ..` of `page`
+    start: usize,
+    /// page holding this run's encoded K/V
+    page: PageId,
+    parent: Option<NodeId>,
+    /// children keyed by the first token of their run
+    children: HashMap<i32, NodeId>,
+    /// adoptions credited to this node's page since publish (the
+    /// dominant retention-score term)
+    reuse: u32,
+}
+
+impl Node {
+    /// Retention weight: bigger = keep longer.  `depth` is the page
+    /// position (`start / tokens_per_page`) so scores are comparable
+    /// with the flat index's.
+    fn score(&self, tp: usize) -> u64 {
+        (self.reuse as u64 + 1) * SCORE_SCALE / ((self.start / tp) as u64 + 1)
+    }
+}
+
+/// One contiguous match segment returned by [`RadixIndex::match_prefix`]:
+/// prompt tokens `[start, start + len)` are held by `page` at slots
+/// `[slot0, slot0 + len)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Seg {
+    pub page: PageId,
+    pub slot0: usize,
+    pub len: usize,
+    /// absolute prompt position of the segment's first token
+    pub start: usize,
+}
+
+/// The token-level prefix index.  See the module docs for semantics.
+#[derive(Debug, Default)]
+pub struct RadixIndex {
+    tp: usize,
+    /// node slab; `None` = freed id
+    nodes: Vec<Option<Node>>,
+    free_ids: Vec<NodeId>,
+    /// top-level runs keyed by their first token
+    roots: HashMap<i32, NodeId>,
+    /// page → nodes referencing (slot ranges of) it
+    by_page: HashMap<PageId, Vec<NodeId>>,
+    /// zero-ref indexed pages parked for eviction: page → queue slot
+    parked: HashMap<PageId, (u64, u64)>,
+    /// eviction order over the parked set: (score, park stamp) → page
+    queue: BTreeMap<(u64, u64), PageId>,
+    /// monotonic stamp source for the park-time tiebreak
+    clock: u64,
+}
+
+impl RadixIndex {
+    pub fn new(tokens_per_page: usize) -> RadixIndex {
+        RadixIndex {
+            tp: tokens_per_page.max(1),
+            ..RadixIndex::default()
+        }
+    }
+
+    /// Number of indexed pages (pages referenced by at least one node).
+    pub fn len(&self) -> usize {
+        self.by_page.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_page.is_empty()
+    }
+
+    /// Zero-ref (evictable) indexed pages.
+    pub fn cached_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Live node count (tests and stats).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    /// Whether any node references `page` (the radix analogue of the
+    /// flat index's `is_indexed`).
+    pub fn is_referenced(&self, page: PageId) -> bool {
+        self.by_page.contains_key(&page)
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        self.nodes[id as usize].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes[id as usize].as_mut().expect("live node")
+    }
+
+    fn alloc_node(&mut self, node: Node) -> NodeId {
+        match self.free_ids.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                (self.nodes.len() - 1) as NodeId
+            }
+        }
+    }
+
+    /// Walk the longest common prefix of `prompt` through the tree.
+    /// Returns the contiguous covered segments (token positions
+    /// `[0, matched)`) and `matched` itself.  A match may end mid-node;
+    /// nothing is mutated (splits happen only on insert).
+    pub fn match_prefix(&self, prompt: &[i32]) -> (Vec<Seg>, usize) {
+        let mut segs: Vec<Seg> = Vec::new();
+        let mut pos = 0usize;
+        let mut cur = prompt.first().and_then(|t| self.roots.get(t).copied());
+        while let Some(id) = cur {
+            let n = self.node(id);
+            debug_assert_eq!(n.start, pos, "node position must equal walk position");
+            let k = n
+                .tokens
+                .iter()
+                .zip(&prompt[pos..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            if k > 0 {
+                segs.push(Seg {
+                    page: n.page,
+                    slot0: n.start % self.tp,
+                    len: k,
+                    start: pos,
+                });
+                pos += k;
+            }
+            if k < n.tokens.len() || pos >= prompt.len() {
+                break;
+            }
+            cur = n.children.get(&prompt[pos]).copied();
+        }
+        (segs, pos)
+    }
+
+    /// Publish the run `prefix[start..]` (one page's worth of a prompt,
+    /// `prefix` being the prompt's first `end` tokens) as backed by
+    /// `page`.  The walk to position `start` must already be covered by
+    /// the tree; if the whole run is already covered the existing nodes
+    /// win (first-publisher-wins, like the flat index) and `false` is
+    /// returned.  Splits the node at the divergence token when the run
+    /// forks off mid-node.  Returns `true` iff a new node now
+    /// references `page`.
+    pub fn insert(&mut self, prefix: &[i32], start: usize, page: PageId) -> bool {
+        let end = prefix.len();
+        if start >= end {
+            return false;
+        }
+        debug_assert_eq!(
+            start / self.tp,
+            (end - 1) / self.tp,
+            "a published run must not cross a page boundary"
+        );
+        let mut pos = 0usize;
+        let mut parent: Option<NodeId> = None;
+        let mut cur = prefix.first().and_then(|t| self.roots.get(t).copied());
+        while let Some(id) = cur {
+            let (k, run_len) = {
+                let n = self.node(id);
+                let k = n
+                    .tokens
+                    .iter()
+                    .zip(&prefix[pos..])
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                (k, n.tokens.len())
+            };
+            pos += k;
+            if pos >= end {
+                return false; // run already fully covered
+            }
+            if k == run_len {
+                parent = Some(id);
+                cur = self.node(id).children.get(&prefix[pos]).copied();
+            } else {
+                // diverges mid-node (k >= 1: roots/children are keyed by
+                // their first token, so a found node always matches it)
+                if pos < start {
+                    return false; // ancestors of the run are missing
+                }
+                self.split(id, k);
+                parent = Some(id);
+                cur = None;
+                break;
+            }
+        }
+        if pos < start {
+            return false; // ancestors of the run are missing
+        }
+        debug_assert!(cur.is_none());
+        let nid = self.alloc_node(Node {
+            tokens: prefix[pos..end].to_vec(),
+            start: pos,
+            page,
+            parent,
+            children: HashMap::new(),
+            reuse: 0,
+        });
+        match parent {
+            Some(p) => {
+                self.node_mut(p).children.insert(prefix[pos], nid);
+            }
+            None => {
+                self.roots.insert(prefix[pos], nid);
+            }
+        }
+        self.by_page.entry(page).or_default().push(nid);
+        true
+    }
+
+    /// Split node `id` after its first `k` tokens: the node keeps the
+    /// head run, a new child (same page, shifted slot range) takes the
+    /// tail and inherits the children.  Reuse is inherited by both
+    /// halves — the split is a representation change, not an adoption.
+    fn split(&mut self, id: NodeId, k: usize) {
+        debug_assert!(k >= 1);
+        let (rest, start, page, reuse, children) = {
+            let n = self.node_mut(id);
+            debug_assert!(k < n.tokens.len());
+            let rest = n.tokens.split_off(k);
+            (
+                rest,
+                n.start + k,
+                n.page,
+                n.reuse,
+                std::mem::take(&mut n.children),
+            )
+        };
+        let first = rest[0];
+        let child = self.alloc_node(Node {
+            tokens: rest,
+            start,
+            page,
+            parent: Some(id),
+            children,
+            reuse,
+        });
+        let grand: Vec<NodeId> = self.node(child).children.values().copied().collect();
+        for g in grand {
+            self.node_mut(g).parent = Some(child);
+        }
+        self.node_mut(id).children.insert(first, child);
+        self.by_page.entry(page).or_default().push(child);
+    }
+
+    /// Credit one adoption to every node referencing `page` (their
+    /// reuse count is the dominant retention-score term).  Kept apart
+    /// from [`RadixIndex::unpark`] so a pinned-then-abandoned walk does
+    /// not inflate scores — the same split as the flat index.
+    pub fn credit_page(&mut self, page: PageId) {
+        if let Some(ids) = self.by_page.get(&page).cloned() {
+            for id in ids {
+                let n = self.node_mut(id);
+                n.reuse = n.reuse.saturating_add(1);
+            }
+        }
+    }
+
+    /// Remove `page` from the evictable set (it is about to gain an
+    /// owner, or must be protected while one is being arranged).
+    pub fn unpark(&mut self, page: PageId) {
+        if let Some(slot) = self.parked.remove(&page) {
+            self.queue.remove(&slot);
+        }
+    }
+
+    /// Park a zero-ref indexed page as cached/evictable, scored now
+    /// from its nodes' current reuse counts (reuse only changes while
+    /// adopted, i.e. while not parked).
+    pub fn park(&mut self, page: PageId) {
+        debug_assert!(self.is_referenced(page), "parking an unindexed page");
+        let score = self.page_score(page);
+        self.clock += 1;
+        let slot = (score, self.clock);
+        if let Some(old) = self.parked.insert(page, slot) {
+            self.queue.remove(&old);
+        }
+        self.queue.insert(slot, page);
+    }
+
+    /// A page's retention score: the best score over its nodes (a page
+    /// serving a hot interior run must outlive its coldest leaf split).
+    fn page_score(&self, page: PageId) -> u64 {
+        self.by_page
+            .get(&page)
+            .map(|ids| {
+                ids.iter()
+                    .map(|&id| self.node(id).score(self.tp))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .unwrap_or(0)
+    }
+
+    /// Evict the lowest-scored parked page and drop every node that
+    /// references it, cascading through their subtrees (descendants of
+    /// a dropped run can never be matched again).  Parked pages
+    /// stranded by the cascade are freed too.  Returns every page the
+    /// caller should recycle (victim first); empty when nothing is
+    /// parked.
+    pub fn evict_victim(&mut self) -> Vec<PageId> {
+        let Some((_, page)) = self.queue.pop_first() else {
+            return Vec::new();
+        };
+        self.parked.remove(&page);
+        let mut freed = vec![page];
+        if let Some(ids) = self.by_page.remove(&page) {
+            for id in ids {
+                self.remove_subtree(id, &mut freed);
+            }
+        }
+        freed
+    }
+
+    /// Remove `id` and its whole subtree, releasing page references.
+    /// Any page whose last reference disappears while parked is pushed
+    /// onto `freed` (it is unreachable for future matches).
+    fn remove_subtree(&mut self, id: NodeId, freed: &mut Vec<PageId>) {
+        if self.nodes[id as usize].is_none() {
+            return; // already removed through an ancestor
+        }
+        // detach the subtree root from its parent (or the root table)
+        let (parent, first) = {
+            let n = self.node(id);
+            (n.parent, n.tokens[0])
+        };
+        match parent {
+            Some(p) if self.nodes[p as usize].is_some() => {
+                self.node_mut(p).children.remove(&first);
+            }
+            Some(_) => {}
+            None => {
+                self.roots.remove(&first);
+            }
+        }
+        let mut stack = vec![id];
+        while let Some(i) = stack.pop() {
+            let Some(n) = self.nodes[i as usize].take() else {
+                continue;
+            };
+            self.free_ids.push(i);
+            stack.extend(n.children.values().copied());
+            if let Some(list) = self.by_page.get_mut(&n.page) {
+                list.retain(|&x| x != i);
+                if list.is_empty() {
+                    self.by_page.remove(&n.page);
+                    if let Some(slot) = self.parked.remove(&n.page) {
+                        self.queue.remove(&slot);
+                        freed.push(n.page);
+                    }
+                }
+            }
+        }
+        // a parent left with a lone same-page child collapses back into
+        // one node (undo of a split whose other branch is gone)
+        if let Some(p) = parent {
+            self.try_merge(p);
+        }
+    }
+
+    /// Merge `id` with its only child when both halves live on the same
+    /// page and cover contiguous tokens — the inverse of
+    /// [`RadixIndex::split`].
+    fn try_merge(&mut self, id: NodeId) {
+        if self.nodes[id as usize].is_none() {
+            return;
+        }
+        let child_id = {
+            let n = self.node(id);
+            if n.children.len() != 1 {
+                return;
+            }
+            let &c = n.children.values().next().unwrap();
+            let cn = self.node(c);
+            if cn.page != n.page || cn.start != n.start + n.tokens.len() {
+                return;
+            }
+            c
+        };
+        let (page, ctokens, cchildren, creuse) = {
+            let c = self.nodes[child_id as usize].take().expect("live child");
+            self.free_ids.push(child_id);
+            (c.page, c.tokens, c.children, c.reuse)
+        };
+        if let Some(list) = self.by_page.get_mut(&page) {
+            list.retain(|&x| x != child_id);
+        }
+        {
+            let n = self.node_mut(id);
+            n.tokens.extend(ctokens);
+            n.reuse = n.reuse.max(creuse);
+            n.children = cchildren;
+        }
+        let grand: Vec<NodeId> = self.node(id).children.values().copied().collect();
+        for g in grand {
+            self.node_mut(g).parent = Some(id);
+        }
+    }
+
+    /// The contiguous token run `page` holds and the full prompt prefix
+    /// in front of it: `(start, run, prefix_tokens)` where the page
+    /// covers prompt positions `[start, start + run.len())` and
+    /// `prefix_tokens` are positions `[0, start)` collected from the
+    /// ancestor chain.  This is what the persistence layer needs to
+    /// serialize a parked page as an edge-aware store record
+    /// (`parent key` over the prefix + the covered run) without
+    /// re-deriving the chain.  `None` when the page is unindexed or its
+    /// references are not one contiguous run.
+    pub fn page_run(&self, page: PageId) -> Option<(usize, Vec<i32>, Vec<i32>)> {
+        let ids = self.by_page.get(&page)?;
+        let mut nodes: Vec<&Node> = ids.iter().map(|&i| self.node(i)).collect();
+        nodes.sort_by_key(|n| n.start);
+        let start = nodes[0].start;
+        let mut run = Vec::new();
+        let mut pos = start;
+        for n in &nodes {
+            if n.start != pos {
+                return None; // non-contiguous references
+            }
+            run.extend_from_slice(&n.tokens);
+            pos += n.tokens.len();
+        }
+        let mut parts: Vec<&[i32]> = Vec::new();
+        let mut cur = nodes[0].parent;
+        while let Some(p) = cur {
+            let n = self.node(p);
+            parts.push(&n.tokens);
+            cur = n.parent;
+        }
+        let mut prefix = Vec::with_capacity(start);
+        for part in parts.into_iter().rev() {
+            prefix.extend_from_slice(part);
+        }
+        if prefix.len() != start {
+            return None; // defensive: broken ancestor chain
+        }
+        Some((start, run, prefix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// tp = 4 throughout; helper to build a run insert.
+    fn idx() -> RadixIndex {
+        RadixIndex::new(4)
+    }
+
+    #[test]
+    fn insert_and_match_whole_pages() {
+        let mut r = idx();
+        let prompt: Vec<i32> = (0..8).collect();
+        assert!(r.insert(&prompt[..4], 0, 10));
+        assert!(r.insert(&prompt[..8], 4, 11));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.node_count(), 2);
+        let (segs, matched) = r.match_prefix(&prompt);
+        assert_eq!(matched, 8);
+        assert_eq!(
+            segs,
+            vec![
+                Seg { page: 10, slot0: 0, len: 4, start: 0 },
+                Seg { page: 11, slot0: 0, len: 4, start: 4 },
+            ]
+        );
+        // a shorter prompt matches mid-node without mutation
+        let (segs, matched) = r.match_prefix(&prompt[..6]);
+        assert_eq!(matched, 6);
+        assert_eq!(segs[1], Seg { page: 11, slot0: 0, len: 2, start: 4 });
+        assert_eq!(r.node_count(), 2, "lookup must not split");
+        // re-publishing covered content loses (first publisher wins)
+        assert!(!r.insert(&prompt[..8], 4, 99));
+        let (segs, _) = r.match_prefix(&prompt);
+        assert_eq!(segs[1].page, 11);
+    }
+
+    #[test]
+    fn insert_splits_at_the_divergence_token() {
+        let mut r = idx();
+        // page 10 covers tokens [0,1,2,3]; a second prompt shares 3 of 4
+        let a: Vec<i32> = vec![5, 6, 7, 8];
+        let b: Vec<i32> = vec![5, 6, 7, 9];
+        assert!(r.insert(&a, 0, 10));
+        assert!(r.insert(&b, 0, 20));
+        // the shared head stays on page 10; both tails are 1-token
+        // children at slot 3
+        assert_eq!(r.node_count(), 3);
+        let (segs, matched) = r.match_prefix(&a);
+        assert_eq!(matched, 4);
+        assert_eq!(
+            segs,
+            vec![
+                Seg { page: 10, slot0: 0, len: 3, start: 0 },
+                Seg { page: 10, slot0: 3, len: 1, start: 3 },
+            ]
+        );
+        let (segs, matched) = r.match_prefix(&b);
+        assert_eq!(matched, 4);
+        assert_eq!(
+            segs,
+            vec![
+                Seg { page: 10, slot0: 0, len: 3, start: 0 },
+                Seg { page: 20, slot0: 3, len: 1, start: 3 },
+            ]
+        );
+        // a third prompt diverging at token 0 becomes a new root
+        let c: Vec<i32> = vec![1, 2, 3, 4];
+        assert!(r.insert(&c, 0, 30));
+        assert_eq!(r.match_prefix(&c).1, 4);
+        assert_eq!(r.match_prefix(&[9, 9]).1, 0);
+    }
+
+    #[test]
+    fn insert_requires_covered_ancestors() {
+        let mut r = idx();
+        let prompt: Vec<i32> = (0..8).collect();
+        // page 2's run cannot attach before page 1's run exists
+        assert!(!r.insert(&prompt[..8], 4, 11));
+        assert!(r.insert(&prompt[..4], 0, 10));
+        assert!(r.insert(&prompt[..8], 4, 11));
+        // a run attaching past a mid-node divergence is rejected too
+        let mut fork = prompt.clone();
+        fork[2] = 99;
+        assert!(!r.insert(&fork[..8], 4, 12));
+    }
+
+    #[test]
+    fn eviction_prefers_leaves_and_cascades() {
+        let mut r = idx();
+        let prompt: Vec<i32> = (0..12).collect();
+        r.insert(&prompt[..4], 0, 10);
+        r.insert(&prompt[..8], 4, 11);
+        r.insert(&prompt[..12], 8, 12);
+        // park root-first: depth weighting must still evict the leaf
+        r.park(10);
+        r.park(11);
+        r.park(12);
+        assert_eq!(r.cached_len(), 3);
+        assert_eq!(r.evict_victim(), vec![12], "leaf goes first");
+        assert_eq!(r.evict_victim(), vec![11]);
+        assert_eq!(r.evict_victim(), vec![10], "root goes last");
+        assert!(r.evict_victim().is_empty());
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.node_count(), 0);
+    }
+
+    #[test]
+    fn evicting_an_interior_page_frees_its_stranded_subtree() {
+        let mut r = idx();
+        let prompt: Vec<i32> = (0..8).collect();
+        r.insert(&prompt[..4], 0, 10);
+        r.insert(&prompt[..8], 4, 11);
+        // only the interior page is parked; the leaf page is parked too
+        // but with lots of reuse so the root is the victim
+        r.credit_page(11);
+        r.credit_page(11);
+        r.credit_page(11);
+        r.credit_page(11);
+        r.park(10);
+        r.park(11);
+        // root's score (reuse 0, depth 0) = 1.0 < leaf's (reuse 4,
+        // depth 1) = 2.5 → root evicts first and strands the leaf
+        let freed = r.evict_victim();
+        assert_eq!(freed, vec![10, 11], "cascade frees the stranded leaf");
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.cached_len(), 0);
+        assert_eq!(r.node_count(), 0);
+    }
+
+    #[test]
+    fn reuse_outweighs_depth() {
+        let mut r = idx();
+        // two independent roots at different depths... same depth here,
+        // so build one shallow cold page and one deep hot page
+        let a: Vec<i32> = (0..4).collect();
+        let b: Vec<i32> = (100..112).collect();
+        r.insert(&a, 0, 10); // depth 0, cold
+        r.insert(&b[..4], 0, 20);
+        r.insert(&b[..8], 4, 21);
+        r.insert(&b[..12], 8, 22); // depth 2
+        for _ in 0..9 {
+            r.credit_page(22); // hot leaf: (9+1)/(2+1) > (0+1)/(0+1)
+        }
+        r.park(10);
+        r.park(22);
+        assert_eq!(r.evict_victim(), vec![10], "cold root evicts before hot leaf");
+    }
+
+    #[test]
+    fn sibling_eviction_merges_the_split_back() {
+        let mut r = idx();
+        let a: Vec<i32> = vec![5, 6, 7, 8];
+        let b: Vec<i32> = vec![5, 6, 7, 9];
+        r.insert(&a, 0, 10);
+        r.insert(&b, 0, 20); // splits page 10's node at token 3
+        assert_eq!(r.node_count(), 3);
+        r.park(20);
+        assert_eq!(r.evict_victim(), vec![20]);
+        // page 10's head + tail halves merged back into one node
+        assert_eq!(r.node_count(), 1);
+        let (segs, matched) = r.match_prefix(&a);
+        assert_eq!(matched, 4);
+        assert_eq!(segs, vec![Seg { page: 10, slot0: 0, len: 4, start: 0 }]);
+        assert_eq!(r.page_run(10), Some((0, a.clone(), vec![])));
+    }
+
+    #[test]
+    fn unpark_protects_and_park_rescores() {
+        let mut r = idx();
+        let a: Vec<i32> = (0..4).collect();
+        r.insert(&a, 0, 10);
+        r.park(10);
+        assert_eq!(r.cached_len(), 1);
+        r.unpark(10);
+        assert_eq!(r.cached_len(), 0);
+        assert!(r.evict_victim().is_empty(), "unparked pages are protected");
+        assert!(r.is_referenced(10), "unpark keeps the index entry");
+        r.credit_page(10);
+        r.park(10);
+        assert_eq!(r.evict_victim(), vec![10]);
+    }
+
+    #[test]
+    fn page_run_reports_the_chain_link() {
+        let mut r = idx();
+        let prompt: Vec<i32> = (0..10).collect();
+        r.insert(&prompt[..4], 0, 10);
+        r.insert(&prompt[..8], 4, 11);
+        r.insert(&prompt[..10], 8, 12); // partial tail run
+        assert_eq!(r.page_run(10), Some((0, prompt[..4].to_vec(), vec![])));
+        assert_eq!(
+            r.page_run(11),
+            Some((4, prompt[4..8].to_vec(), prompt[..4].to_vec()))
+        );
+        assert_eq!(
+            r.page_run(12),
+            Some((8, prompt[8..10].to_vec(), prompt[..8].to_vec()))
+        );
+        assert_eq!(r.page_run(99), None);
+        // a split page still reports one contiguous run
+        let mut fork = prompt[..10].to_vec();
+        fork[9] = 99;
+        r.insert(&fork[..10], 8, 13);
+        assert_eq!(r.page_run(12), Some((8, prompt[8..10].to_vec(), prompt[..8].to_vec())));
+    }
+
+    #[test]
+    fn mid_page_divergence_segments_share_the_page() {
+        // the 15-of-16 case from the module docs, at tp = 4: prompts
+        // sharing 3 of 4 tail tokens must come back as one shared
+        // 3-slot segment plus per-prompt 1-slot segments
+        let mut r = idx();
+        let a: Vec<i32> = vec![1, 2, 3, 4, 10, 11, 12, 13];
+        let mut b = a.clone();
+        b[7] = 99;
+        r.insert(&a[..4], 0, 50);
+        r.insert(&a[..8], 4, 51);
+        let (segs, matched) = r.match_prefix(&b);
+        assert_eq!(matched, 7, "LCP ends at the divergence token");
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[1], Seg { page: 51, slot0: 0, len: 3, start: 4 });
+    }
+}

@@ -24,9 +24,14 @@
 //!   verification at read time.
 //! * **Write-behind spill worker** — [`PageStore::spill`] clones the
 //!   page bytes into a job and returns immediately; a background
-//!   thread ([`spill`]) appends, rotates, and retires.  The clone is
+//!   thread (`spill.rs`) appends, rotates, and retires.  The clone is
 //!   what lets pool pressure evict the RAM copy while the write is
 //!   still in flight.
+//! * **Single-writer lock** — a flock'd owner marker ([`LOCK_FILE`])
+//!   makes a second server on the same directory fail loudly at boot
+//!   instead of racing segment retirement against the first writer's
+//!   appends.  The kernel drops the lock with the process, so a crash
+//!   never leaves a stale lock.
 //!
 //! # Trust model (same as the RAM index, extended to disk)
 //!
@@ -40,20 +45,56 @@
 //! worker always appends to a *fresh* segment so a damaged tail is
 //! never extended.
 
-mod record;
+pub mod record;
 mod spill;
 
 pub use record::{record_len, Crc32, Record, HEADER_LEN};
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fs::{self, File};
-use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::page::PrefixKey;
+
+/// Name of the single-writer owner marker inside a persist directory.
+pub const LOCK_FILE: &str = "LOCK";
+
+/// Take an exclusive, non-blocking `flock` on `file`.  `Ok(true)` =
+/// lock acquired (held until the file handle closes), `Ok(false)` =
+/// another open handle holds it.  `flock` locks follow the open file
+/// description, so two [`PageStore::open`] calls conflict even inside
+/// one process — which is what the tests exercise.
+#[cfg(unix)]
+fn try_exclusive_lock(file: &File) -> std::io::Result<bool> {
+    use std::os::unix::io::AsRawFd;
+    // the symbol lives in the platform libc that std already links;
+    // declaring it here keeps the offline build free of a libc crate
+    extern "C" {
+        fn flock(fd: std::os::raw::c_int, operation: std::os::raw::c_int) -> std::os::raw::c_int;
+    }
+    const LOCK_EX: std::os::raw::c_int = 2;
+    const LOCK_NB: std::os::raw::c_int = 4;
+    if unsafe { flock(file.as_raw_fd(), LOCK_EX | LOCK_NB) } == 0 {
+        return Ok(true);
+    }
+    let err = std::io::Error::last_os_error();
+    if err.kind() == std::io::ErrorKind::WouldBlock {
+        Ok(false)
+    } else {
+        Err(err)
+    }
+}
+
+/// Non-unix fallback: no advisory locking — the marker file is still
+/// written for diagnostics, but concurrent writers are not detected.
+#[cfg(not(unix))]
+fn try_exclusive_lock(_file: &File) -> std::io::Result<bool> {
+    Ok(true)
+}
 
 /// Identity + placement of a page store.
 #[derive(Clone, Debug)]
@@ -170,6 +211,9 @@ pub struct PageStore {
     shared: Arc<Mutex<Shared>>,
     tx: Option<mpsc::Sender<spill::Job>>,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// flock'd single-writer owner marker: held (the fd stays open) for
+    /// the store's whole lifetime, released when the store drops
+    _lock: File,
 }
 
 impl std::fmt::Debug for PageStore {
@@ -194,9 +238,42 @@ impl PageStore {
     /// duplicate keys keep the newest copy (the content is identical
     /// by construction, and the newest segment outlives retirement
     /// longest).
+    ///
+    /// **Single-writer**: the directory is guarded by a flock'd owner
+    /// marker ([`LOCK_FILE`]).  A second store on the same directory —
+    /// same process or another one — fails loudly here instead of
+    /// silently racing segment retirement against the first writer's
+    /// appends.  The lock releases when the store drops (or the
+    /// process dies — flock is kernel-held, so a crashed server never
+    /// leaves a stale lock behind).
     pub fn open(cfg: StoreConfig) -> Result<PageStore> {
         fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("create persist dir {}", cfg.dir.display()))?;
+        let mut lock = fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(false)
+            .open(cfg.dir.join(LOCK_FILE))
+            .with_context(|| format!("open lockfile in {}", cfg.dir.display()))?;
+        match try_exclusive_lock(&lock) {
+            Ok(true) => {
+                // best-effort pid marker for the operator debugging a
+                // refused boot; the flock itself is the real guard
+                let _ = lock.set_len(0);
+                let _ = writeln!(lock, "{}", std::process::id());
+            }
+            Ok(false) => bail!(
+                "persist dir {} is already owned by another running store \
+                 (flock on {LOCK_FILE} is held) — two servers must not share \
+                 one persist_dir",
+                cfg.dir.display()
+            ),
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("flock lockfile in {}", cfg.dir.display())
+                })
+            }
+        }
         let mut shared = Shared {
             dir: HashMap::new(),
             segments: BTreeMap::new(),
@@ -242,6 +319,7 @@ impl PageStore {
             shared,
             tx: Some(tx),
             worker: Some(worker),
+            _lock: lock,
         })
     }
 
@@ -613,6 +691,41 @@ mod tests {
         );
         assert!(store.read_page(key(0), None, &[0]).is_none());
         assert_eq!(store.read_page(key(4), None, &[4]), Some(vec![4u8; 64]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_writer_on_same_dir_fails_loudly() {
+        let dir = tmpdir("lock");
+        let first = PageStore::open(cfg(&dir, 7)).unwrap();
+        // a second store on the same directory — even a different
+        // fingerprint, even in the same process — must be refused
+        let err = PageStore::open(cfg(&dir, 8)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("already owned"), "unexpected error: {msg}");
+        // the refused open must not have disturbed the owner
+        assert!(first.spill(key(1), None, &[1], &vec![1u8; 64]));
+        first.flush();
+        assert_eq!(first.len(), 1);
+        // dropping the owner releases the flock; the next open succeeds
+        drop(first);
+        let second = PageStore::open(cfg(&dir, 7)).unwrap();
+        assert_eq!(second.len(), 1, "segments survive the handover");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lockfile_is_not_scanned_as_a_segment() {
+        let dir = tmpdir("lockscan");
+        {
+            let store = PageStore::open(cfg(&dir, 7)).unwrap();
+            store.spill(key(1), None, &[1], &vec![1u8; 64]);
+            store.flush();
+        }
+        assert!(dir.join(LOCK_FILE).exists());
+        let store = PageStore::open(cfg(&dir, 7)).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.stats().corrupt_tails, 0, "LOCK must not be scanned");
         let _ = fs::remove_dir_all(&dir);
     }
 

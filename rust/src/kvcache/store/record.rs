@@ -26,6 +26,21 @@
 //! Anything less — truncation, a flipped bit, a record written by a
 //! different config — reads as a **miss**, never as another prompt's
 //! pages.
+//!
+//! # Records are edges
+//!
+//! The `(parent, key, tokens)` triple serializes one *edge* of the
+//! prefix structure: `parent` is the chain key of everything before
+//! this page, `tokens` is the run the page covers, and `key` extends
+//! the chain over it.  Replaying a store's records therefore
+//! reconstructs the whole prefix graph, and both index backends speak
+//! it: the flat [`super::super::prefix::PrefixIndex`] resolves records
+//! by exact chain key, while the radix
+//! [`super::super::radix::RadixIndex`] re-inserts promoted runs as
+//! tree nodes and derives the same `(parent, key)` pair from a parked
+//! page's tree path when spilling (`RadixIndex::page_run`) — so a
+//! store written under `prefix_index = flat` rehydrates under `radix`
+//! and vice versa, with no format change.
 
 use std::io::Read;
 

@@ -2,8 +2,12 @@
 //! prefix pages durable.
 //!
 //! The cache manager's zero-ref parking path feeds this thread through
-//! [`super::PageStore::spill`]; each job owns a copy of the page bytes,
-//! so the RAM copy can be evicted the moment the job is queued.  The
+//! [`super::PageStore::spill`] — under either index backend: the flat
+//! index passes its entry's chain link verbatim, the radix index
+//! derives the identical `(key, parent, tokens)` edge from the parked
+//! page's tree path, so the worker (and the on-disk format) is
+//! index-agnostic.  Each job owns a copy of the page bytes, so the RAM
+//! copy can be evicted the moment the job is queued.  The
 //! worker appends records to the active segment, rotates at
 //! `segment_bytes`, and enforces the byte budget by retiring whole
 //! oldest segments (never the active one).  A failed append poisons the

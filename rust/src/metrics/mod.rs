@@ -86,6 +86,14 @@ pub struct ShareStats {
     pub cow_copies: u64,
     /// page bytes served from shared pages instead of fresh allocations
     pub bytes_deduped: u64,
+    /// radix index only: prompt token slots copied out of indexed pages
+    /// instead of re-encoded (sub-page slot-range reuse — two prompts
+    /// sharing 15 of 16 tail tokens share those 15 slots' encode work)
+    pub slots_copied: u64,
+    /// radix index only: partial-page adoptions assembled by slot-range
+    /// copy (each saved re-encoding `slots_copied / tail_copies` slots
+    /// on average)
+    pub tail_copies: u64,
     /// sealed prompt pages published to the index
     pub pages_published: u64,
     /// zero-ref index entries evicted under pool pressure (with a
@@ -105,12 +113,14 @@ pub struct ShareStats {
 impl ShareStats {
     pub fn summary(&self) -> String {
         format!(
-            "prefix: hits={}p/{}t cow={} dedup={:.1}MB published={} evicted={} \
-             spill={} rehydrated={} promote={}",
+            "prefix: hits={}p/{}t cow={} dedup={:.1}MB slotcopy={}s/{} published={} \
+             evicted={} spill={} rehydrated={} promote={}",
             self.prefix_hit_pages,
             self.prefix_hit_tokens,
             self.cow_copies,
             self.bytes_deduped as f64 / 1e6,
+            self.slots_copied,
+            self.tail_copies,
             self.pages_published,
             self.pages_evicted,
             self.pages_spilled,

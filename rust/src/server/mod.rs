@@ -84,7 +84,7 @@ pub fn serve(engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<()> {
 pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
     listener.set_nonblocking(true)?;
     eprintln!(
-        "isoquant: serving on {} (variant={}, bits={}, prefix_sharing={})",
+        "isoquant: serving on {} (variant={}, bits={}, prefix_sharing={}, prefix_index={})",
         listener
             .local_addr()
             .map(|a| a.to_string())
@@ -92,6 +92,7 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
         engine.cfg.variant.name(),
         engine.cfg.bits,
         if engine.cfg.prefix_sharing { "on" } else { "off" },
+        engine.cfg.prefix_index.name(),
     );
 
     let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -160,6 +161,11 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
     // fuller admission waves and stable-sorts each drained batch by
     // prompt — so same-prefix requests reach the engine adjacently and
     // adopt each other's pages before pool pressure can evict them.
+    // The window is a *lanes-full* trade: while free lanes exist,
+    // waiting buys nothing (the engine admits continuously), so the
+    // idle-lane fast path below drains immediately and a lone request
+    // on an idle server no longer eats the full window (~2 ms) of
+    // time-to-first-token for nothing.
     let mut batcher = Batcher::new(
         std::time::Duration::from_micros(engine.cfg.batch_window_us),
         engine.cfg.max_batch.max(1),
@@ -169,6 +175,15 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
     while !stop.load(Ordering::SeqCst) {
         while let Ok(r) = req_rx.try_recv() {
             batcher.submit(r);
+        }
+        // idle-lane fast path: lanes nothing is using can start
+        // immediately; requests beyond the free-lane count keep
+        // queueing so the window can still group them into one wave
+        let idle = engine.free_lanes().saturating_sub(engine.pending());
+        if idle > 0 && batcher.pending() > 0 {
+            for r in batcher.take_up_to(idle) {
+                engine.submit(r);
+            }
         }
         if let Some(batch) = batcher.poll(std::time::Instant::now()) {
             for r in batch {

@@ -319,16 +319,29 @@ fn stale_config_fingerprint_reads_as_miss() {
     m.drop_seq(1);
     m.flush_store();
     drop(m);
-    // …and each config rehydrates exactly its own
+    // …and each config rehydrates exactly its own.  Opens are
+    // sequential: the single-writer lockfile forbids two live stores
+    // on one directory, whatever their fingerprints
     let m2 = mk_cache(64, 2, true);
     let m3 = mk_cache(64, 3, true);
-    let store2 = PageStore::open(StoreConfig::for_cache(
-        dir.clone(),
-        m2.fingerprint(),
-        m2.page_cfg().page_bytes(),
-        0,
-    ))
-    .unwrap();
+    {
+        let store2 = PageStore::open(StoreConfig::for_cache(
+            dir.clone(),
+            m2.fingerprint(),
+            m2.page_cfg().page_bytes(),
+            0,
+        ))
+        .unwrap();
+        assert_eq!(store2.stats().rehydrated, 3);
+        // while store2 lives, a second store on the dir is refused
+        assert!(PageStore::open(StoreConfig::for_cache(
+            dir.clone(),
+            m3.fingerprint(),
+            m3.page_cfg().page_bytes(),
+            0,
+        ))
+        .is_err());
+    }
     let store3 = PageStore::open(StoreConfig::for_cache(
         dir.clone(),
         m3.fingerprint(),
@@ -336,7 +349,6 @@ fn stale_config_fingerprint_reads_as_miss() {
         0,
     ))
     .unwrap();
-    assert_eq!(store2.stats().rehydrated, 3);
     assert_eq!(store3.stats().rehydrated, 3);
     let _ = fs::remove_dir_all(&dir);
 }

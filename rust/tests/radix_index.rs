@@ -1,0 +1,571 @@
+//! Radix prefix-index property tests: any interleaving of
+//! {admit-with-shared-prefix, CoW/decode append, drop} on random
+//! geometries must keep the radix cache byte-identical to both the
+//! flat-index cache and an unshared reference, never use *more* pages
+//! than the flat index, return every page ownership to zero, and — with
+//! a persistent store attached — survive restarts in either index
+//! direction (flat-written stores rehydrate under radix and vice
+//! versa, since both serialize the same edge-aware records).
+//!
+//! The "model" is a deterministic map from a token-id prefix to K/V
+//! vectors (same prefix ⇒ same vectors), which is exactly the property
+//! that makes prompt prefixes shareable — and what makes a slot-range
+//! copy byte-identical to a re-encode.
+
+use isoquant::kvcache::{
+    chain_key, CacheManager, GatherWorkspace, PageConfig, PageStore, PrefixIndexKind,
+    StoreConfig,
+};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::util::prng::Rng;
+use isoquant::util::proplite::{check, Gen};
+
+struct Geometry {
+    cfg: PageConfig,
+    bits: u8,
+}
+
+fn geometry(g: &mut Gen) -> Geometry {
+    let dh = 4 * g.usize_in(4, 12); // 16..48, multiple of 4
+    let bits = g.usize_in(2, 4) as u8;
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, bits));
+    Geometry {
+        cfg: PageConfig {
+            tokens_per_page: g.usize_in(2, 5),
+            n_layers: g.usize_in(1, 2),
+            n_heads: g.usize_in(1, 2),
+            d_head: dh,
+            encoded_len: stage1.encoded_len(),
+        },
+        bits,
+    }
+}
+
+fn mk_cache(geo: &Geometry, max_pages: usize, sharing: bool, kind: PrefixIndexKind) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, geo.cfg.d_head, geo.bits));
+    let mut m = CacheManager::new(stage1, geo.cfg, max_pages);
+    m.prefix_sharing = sharing;
+    m.index_kind = kind;
+    m
+}
+
+/// Deterministic K/V for the token at position `t` of `stream`: seeded
+/// by the chained hash of `stream[..=t]`, so equal prefixes produce
+/// equal vectors.
+fn kv_at(stream: &[i32], t: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let seed = chain_key(None, &stream[..=t], 0xBEEF).0;
+    let mut rng = Rng::new(seed);
+    let n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+    (rng.gaussian_vec_f32(n), rng.gaussian_vec_f32(n))
+}
+
+/// Flatten tokens `from..to` of `stream` into one token-major run.
+fn kv_run(stream: &[i32], from: usize, to: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for t in from..to {
+        let (tk, tv) = kv_at(stream, t, cfg);
+        k.extend_from_slice(&tk);
+        v.extend_from_slice(&tv);
+    }
+    (k, v)
+}
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Gather `seq` from all three caches through both the batched path and
+/// the per-vector oracle, demanding bit-identical results everywhere.
+fn verify_seq(
+    radix: &CacheManager,
+    flat: &CacheManager,
+    unshared: &CacheManager,
+    seq: u64,
+    len: usize,
+    cfg: &PageConfig,
+    ws: &mut GatherWorkspace,
+) -> Result<(), String> {
+    let t_max = len.max(1) + 2;
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut kr, mut vr) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    let (mut ko, mut vo) = (vec![1.0f32; sz], vec![1.0f32; sz]);
+    let (mut kf, mut vf) = (vec![2.0f32; sz], vec![2.0f32; sz]);
+    let (mut ku, mut vu) = (vec![3.0f32; sz], vec![3.0f32; sz]);
+    let n1 = radix
+        .gather_ws(seq, t_max, &mut kr, &mut vr, ws)
+        .map_err(|e| e.to_string())?;
+    let n2 = radix
+        .gather_reference(seq, t_max, &mut ko, &mut vo)
+        .map_err(|e| e.to_string())?;
+    let n3 = flat
+        .gather_reference(seq, t_max, &mut kf, &mut vf)
+        .map_err(|e| e.to_string())?;
+    let n4 = unshared
+        .gather_reference(seq, t_max, &mut ku, &mut vu)
+        .map_err(|e| e.to_string())?;
+    if n1 != len || n2 != len || n3 != len || n4 != len {
+        return Err(format!("seq {seq}: lengths {n1}/{n2}/{n3}/{n4} != {len}"));
+    }
+    if bits_of(&kr) != bits_of(&ko) || bits_of(&vr) != bits_of(&vo) {
+        return Err(format!("seq {seq}: radix batched gather != reference"));
+    }
+    if bits_of(&kr) != bits_of(&ku) || bits_of(&vr) != bits_of(&vu) {
+        return Err(format!("seq {seq}: radix cache != unshared cache"));
+    }
+    if bits_of(&kf) != bits_of(&ku) || bits_of(&vf) != bits_of(&vu) {
+        return Err(format!("seq {seq}: flat cache != unshared cache"));
+    }
+    Ok(())
+}
+
+/// The core property: random prompt mixes with shared stems, mid-prompt
+/// divergence, decode appends, and drops under pool pressure — the
+/// radix cache must stay byte-identical to the flat and unshared
+/// caches, never exceed the flat cache's page count, and leak nothing.
+#[test]
+fn prop_radix_bit_identical_to_flat_and_unshared_never_more_pages() {
+    check(20, 0x4AD1, |g| {
+        let geo = geometry(g);
+        let cfg = geo.cfg;
+        // identical constrained pools for both shared caches; the
+        // unshared reference never shares and never evicts
+        let pool = g.usize_in(24, 96);
+        let mut radix = mk_cache(&geo, pool, true, PrefixIndexKind::Radix);
+        let mut flat = mk_cache(&geo, pool, true, PrefixIndexKind::Flat);
+        let mut unshared = mk_cache(&geo, 4096, false, PrefixIndexKind::Flat);
+        let mut ws = GatherWorkspace::new();
+
+        // base prompts the ops draw shared prefixes from
+        let bases: Vec<Vec<i32>> = (0..3)
+            .map(|b| {
+                let n = g.usize_in(2 * cfg.tokens_per_page, 6 * cfg.tokens_per_page);
+                (0..n).map(|i| (b * 1000 + i) as i32).collect()
+            })
+            .collect();
+
+        // live sequences: (seq, full token stream so far)
+        let mut live: Vec<(u64, Vec<i32>)> = Vec::new();
+        let mut next_seq = 0u64;
+        let mut next_tok = 50_000i32;
+
+        for _ in 0..30 {
+            match g.usize_in(0, 3) {
+                // admit a prompt that is a (sometimes twisted) prefix
+                // of a base prompt — mid-prompt and last-token twists
+                // exercise sub-page divergence on the radix side
+                0 => {
+                    let base = g.choose(&bases).clone();
+                    let plen = g.usize_in(1, base.len());
+                    let mut prompt = base[..plen].to_vec();
+                    if g.bool() && g.bool() {
+                        let i = g.usize_in(0, plen - 1);
+                        prompt[i] = next_tok;
+                        next_tok += 1;
+                    }
+                    // admit only when *both* shared caches accept, so
+                    // the page-count comparison tracks identical loads
+                    if !radix.can_admit_prompt(&prompt, prompt.len())
+                        || !flat.can_admit_prompt(&prompt, prompt.len())
+                    {
+                        continue;
+                    }
+                    next_seq += 1;
+                    for m in [&mut radix, &mut flat] {
+                        let reuse = m
+                            .start_seq_with_prompt(next_seq, &prompt)
+                            .map_err(|e| e.to_string())?;
+                        if reuse.tokens > prompt.len() {
+                            return Err(format!(
+                                "reuse {} > prompt {}",
+                                reuse.tokens,
+                                prompt.len()
+                            ));
+                        }
+                        let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+                        m.append_run(next_seq, &k, &v, prompt.len() - reuse.tokens)
+                            .map_err(|e| format!("admitted but append failed: {e}"))?;
+                    }
+                    unshared.start_seq(next_seq).map_err(|e| e.to_string())?;
+                    let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+                    unshared
+                        .append_run(next_seq, &k, &v, prompt.len())
+                        .map_err(|e| e.to_string())?;
+                    live.push((next_seq, prompt));
+                }
+                // decode append (CoW when the tail is a shared sealed
+                // page; in-place when it is an open radix copy)
+                1 if !live.is_empty() => {
+                    let i = g.rng.below(live.len());
+                    let (seq, stream) = &mut live[i];
+                    stream.push(next_tok);
+                    next_tok += 1;
+                    let t = stream.len() - 1;
+                    let (k, v) = kv_at(stream, t, &cfg);
+                    match flat.append_token(*seq, &k, &v) {
+                        Ok(()) => {
+                            // the radix cache never holds more pages
+                            // than flat, so the same append must fit
+                            radix.append_token(*seq, &k, &v).map_err(|e| {
+                                format!("radix append failed where flat succeeded: {e}")
+                            })?;
+                            unshared
+                                .append_token(*seq, &k, &v)
+                                .map_err(|e| e.to_string())?;
+                        }
+                        Err(_) => {
+                            stream.pop(); // pool exhausted: keep streams aligned
+                        }
+                    }
+                }
+                // drop
+                2 if !live.is_empty() => {
+                    let i = g.rng.below(live.len());
+                    let (seq, _) = live.swap_remove(i);
+                    radix.drop_seq(seq);
+                    flat.drop_seq(seq);
+                    unshared.drop_seq(seq);
+                }
+                // verify a random live sequence through every path
+                _ if !live.is_empty() => {
+                    let i = g.rng.below(live.len());
+                    let (seq, stream) = &live[i];
+                    verify_seq(&radix, &flat, &unshared, *seq, stream.len(), &cfg, &mut ws)?;
+                }
+                _ => {}
+            }
+            // the sub-page index must never cost pages: identical op
+            // sequence, identical pool — radix stays at or below flat
+            if radix.pages_in_use() > flat.pages_in_use() {
+                return Err(format!(
+                    "radix uses {} pages where flat uses {}",
+                    radix.pages_in_use(),
+                    flat.pages_in_use()
+                ));
+            }
+        }
+
+        // final sweep: every live sequence still byte-identical
+        for (seq, stream) in &live {
+            verify_seq(&radix, &flat, &unshared, *seq, stream.len(), &cfg, &mut ws)?;
+        }
+
+        // teardown: all ownerships return to zero on both shared caches
+        for (seq, _) in live.drain(..) {
+            radix.drop_seq(seq);
+            flat.drop_seq(seq);
+            unshared.drop_seq(seq);
+        }
+        for (name, m) in [("radix", &radix), ("flat", &flat)] {
+            if m.live_refs() != 0 {
+                return Err(format!("{name}: {} refs leaked", m.live_refs()));
+            }
+            if m.live_pages() != 0 {
+                return Err(format!("{name}: {} live pages leaked", m.live_pages()));
+            }
+        }
+        if unshared.pages_in_use() != 0 {
+            return Err("unshared cache leaked pages".into());
+        }
+        Ok(())
+    });
+}
+
+/// High fan-out acceptance scenario: many clients share a long stem and
+/// diverge only in the last token of the prompt.  The radix index must
+/// admit at least as many lanes as flat under the same constrained
+/// pool, allocate strictly fewer pages, and re-encode only the
+/// divergent suffix (slot copies do the rest).
+#[test]
+fn high_fanout_divergent_tails_radix_beats_flat() {
+    let geo = Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 32, 3)).encoded_len(),
+        },
+        bits: 3,
+    };
+    let cfg = geo.cfg;
+    let clients = 12u64;
+    let stem: Vec<i32> = (0..10).collect(); // 2.5 pages: mid-page stem end
+    let run = |m: &mut CacheManager, un: &mut CacheManager| -> (usize, Vec<u64>) {
+        let mut admitted = Vec::new();
+        for c in 0..clients {
+            let seq = c + 1;
+            let mut prompt = stem.clone();
+            prompt.push(7000 + c as i32); // 1-token divergent tail
+            // generous budget: prompt + 2 decode tokens
+            if !m.can_admit_prompt(&prompt, prompt.len() + 2) {
+                continue;
+            }
+            let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+            let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+            m.append_run(seq, &k, &v, prompt.len() - reuse.tokens).unwrap();
+            un.start_seq(seq).unwrap();
+            let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+            un.append_run(seq, &k, &v, prompt.len()).unwrap();
+            // two decode tokens: triggers the tail CoW wherever the
+            // tail sealed, and stays in place on an open radix copy
+            let mut stream = prompt.clone();
+            for d in 0..2 {
+                stream.push(90_000 + (c as i32) * 10 + d);
+                let (tk, tv) = kv_at(&stream, stream.len() - 1, &cfg);
+                m.append_token(seq, &tk, &tv).unwrap();
+                un.append_token(seq, &tk, &tv).unwrap();
+            }
+            admitted.push(seq);
+        }
+        (m.pages_in_use(), admitted)
+    };
+
+    // ample pool first: page economics with everyone admitted
+    let mut radix = mk_cache(&geo, 4096, true, PrefixIndexKind::Radix);
+    let mut flat = mk_cache(&geo, 4096, true, PrefixIndexKind::Flat);
+    let mut un_r = mk_cache(&geo, 4096, false, PrefixIndexKind::Flat);
+    let mut un_f = mk_cache(&geo, 4096, false, PrefixIndexKind::Flat);
+    let (radix_pages, radix_adm) = run(&mut radix, &mut un_r);
+    let (flat_pages, flat_adm) = run(&mut flat, &mut un_f);
+    assert_eq!(radix_adm.len(), clients as usize);
+    assert_eq!(flat_adm.len(), clients as usize);
+    assert!(
+        radix_pages < flat_pages,
+        "radix must allocate strictly fewer pages at high fan-out: {radix_pages} vs {flat_pages}"
+    );
+    // followers copied the 2 shared tail slots instead of re-encoding
+    assert_eq!(radix.share.slots_copied, 2 * (clients - 1));
+    assert_eq!(radix.share.tail_copies, clients - 1);
+    // only the cold client's sealed tail ever CoWs under radix
+    assert_eq!(radix.share.cow_copies, 1);
+    assert_eq!(flat.share.cow_copies, clients);
+    // every gather byte-identical to the unshared reference
+    let mut ws = GatherWorkspace::new();
+    for &seq in &radix_adm {
+        let len = stem.len() + 1 + 2;
+        verify_seq(&radix, &flat, &un_r, seq, len, &cfg, &mut ws).unwrap();
+    }
+    for &seq in &radix_adm {
+        radix.drop_seq(seq);
+        flat.drop_seq(seq);
+    }
+    assert_eq!(radix.live_refs(), 0);
+    assert_eq!(flat.live_refs(), 0);
+
+    // constrained pool: the pages radix saves become admitted lanes
+    let mut radix = mk_cache(&geo, 24, true, PrefixIndexKind::Radix);
+    let mut flat = mk_cache(&geo, 24, true, PrefixIndexKind::Flat);
+    let mut un_r = mk_cache(&geo, 4096, false, PrefixIndexKind::Flat);
+    let mut un_f = mk_cache(&geo, 4096, false, PrefixIndexKind::Flat);
+    let (_, radix_adm) = run(&mut radix, &mut un_r);
+    let (_, flat_adm) = run(&mut flat, &mut un_f);
+    assert!(
+        radix_adm.len() >= flat_adm.len(),
+        "radix admitted {} < flat {}",
+        radix_adm.len(),
+        flat_adm.len()
+    );
+    for &seq in &radix_adm {
+        let len = stem.len() + 1 + 2;
+        let t_max = len + 2;
+        let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+        let (mut kr, mut vr) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        let (mut ku, mut vu) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        radix.gather(seq, t_max, &mut kr, &mut vr).unwrap();
+        un_r.gather(seq, t_max, &mut ku, &mut vu).unwrap();
+        assert_eq!(bits_of(&kr), bits_of(&ku), "seq {seq} under pressure");
+        assert_eq!(bits_of(&vr), bits_of(&vu), "seq {seq} under pressure");
+    }
+}
+
+/// Admission parity with flat on an adopted sealed tail: the counted
+/// tail slot is what pays for the decode-time CoW, so a same-prompt
+/// follower needs exactly ONE page under either index backend — the
+/// radix math must not double-charge the adopted tail with a CoW
+/// surcharge (which would deny admissions flat accepts at exact pool
+/// boundaries).
+#[test]
+fn adopted_tail_admission_matches_flat_at_pool_boundary() {
+    let geo = Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 32, 3)).encoded_len(),
+        },
+        bits: 3,
+    };
+    let cfg = geo.cfg;
+    let prompt: Vec<i32> = (0..9).collect(); // 2 full pages + 1-token tail
+    for kind in [PrefixIndexKind::Flat, PrefixIndexKind::Radix] {
+        // pool of 4: the first client's 3 pages leave exactly 1 free
+        let mut m = mk_cache(&geo, 4, true, kind);
+        m.start_seq_with_prompt(1, &prompt).unwrap();
+        let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+        m.append_run(1, &k, &v, prompt.len()).unwrap();
+        assert_eq!(m.pages_in_use(), 3);
+        // total 11 = prompt 9 + 2 decode: a follower adopts all three
+        // pages and needs only the CoW replacement the tail slot counts
+        assert!(
+            m.can_admit_prompt(&prompt, 11),
+            "{kind:?}: follower must fit in the single remaining page"
+        );
+        let reuse = m.start_seq_with_prompt(2, &prompt).unwrap();
+        assert_eq!(reuse.tokens, prompt.len(), "{kind:?}");
+        assert_eq!(reuse.pages, 3, "{kind:?}");
+        // and the decode really completes inside that page budget
+        let mut stream = prompt.clone();
+        for d in 0..2 {
+            stream.push(40_000 + d);
+            let (tk, tv) = kv_at(&stream, stream.len() - 1, &cfg);
+            m.append_token(2, &tk, &tv).unwrap();
+        }
+        assert_eq!(m.pages_in_use(), 4, "{kind:?}: one CoW page, nothing more");
+        assert_eq!(m.share.cow_copies, 1, "{kind:?}");
+        m.drop_seq(1);
+        m.drop_seq(2);
+        assert_eq!(m.live_refs(), 0, "{kind:?}");
+    }
+}
+
+/// A page whose span is fully resident but split across two source
+/// pages (the shared head on the first publisher's page, the divergent
+/// suffix on a follower's) must be *assembled* by slot copies and must
+/// not truncate the plan: positions after it stay adoptable.
+#[test]
+fn fully_covered_multi_source_page_assembles_and_keeps_adopting() {
+    let geo = Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 32, 4)).encoded_len(),
+        },
+        bits: 4,
+    };
+    let cfg = geo.cfg;
+    let mut m = mk_cache(&geo, 64, true, PrefixIndexKind::Radix);
+    let mut un = mk_cache(&geo, 64, false, PrefixIndexKind::Flat);
+    // A: 12 tokens (3 full pages); B: diverges at token 5 (mid-page 1)
+    let prompt_a: Vec<i32> = (0..12).collect();
+    let mut prompt_b = prompt_a.clone();
+    prompt_b[5] = 777;
+    for (seq, prompt) in [(1u64, &prompt_a), (2, &prompt_b)] {
+        let reuse = m.start_seq_with_prompt(seq, prompt).unwrap();
+        let (k, v) = kv_run(prompt, reuse.tokens, prompt.len(), &cfg);
+        m.append_run(seq, &k, &v, prompt.len() - reuse.tokens).unwrap();
+    }
+    // B published its divergent suffix of page 1 (split of A's node)
+    // and its own page 2; C = B's exact prompt: page 0 adopts, page 1
+    // assembles from A's slot 0 + B's slots 1..4, page 2 ADOPTS B's —
+    // the whole prompt is served without re-encoding a single token
+    let before = m.pages_in_use();
+    let reuse = m.start_seq_with_prompt(3, &prompt_b).unwrap();
+    assert_eq!(reuse.tokens, 12, "assembly must not truncate the walk");
+    assert_eq!(reuse.pages, 2, "pages 0 and 2 adopt whole");
+    assert_eq!(m.pages_in_use(), before + 1, "only the assembled page allocates");
+    assert_eq!(m.share.slots_copied, 1 + 4, "B copied 1 slot, C copied a full span");
+    // byte-identity vs a fresh unshared encode of B's prompt
+    un.start_seq(3).unwrap();
+    let (k, v) = kv_run(&prompt_b, 0, prompt_b.len(), &cfg);
+    un.append_run(3, &k, &v, prompt_b.len()).unwrap();
+    let t_max = 12;
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut km, mut vm) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    let (mut ku, mut vu) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    m.gather(3, t_max, &mut km, &mut vm).unwrap();
+    un.gather(3, t_max, &mut ku, &mut vu).unwrap();
+    assert_eq!(bits_of(&km), bits_of(&ku));
+    assert_eq!(bits_of(&vm), bits_of(&vu));
+    for seq in 1..=3 {
+        m.drop_seq(seq);
+    }
+    assert_eq!(m.live_refs(), 0);
+    assert_eq!(m.live_pages(), 0);
+}
+
+/// Persist → restart in both index directions: a store written by a
+/// flat boot rehydrates fully under a radix boot and vice versa —
+/// the radix spill derives the same edge-aware record keys (parent
+/// chain + covered run) the flat index uses.
+#[test]
+fn radix_store_roundtrip_and_cross_index_compat() {
+    let geo = Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 32, 4)).encoded_len(),
+        },
+        bits: 4,
+    };
+    let cfg = geo.cfg;
+    let prompt: Vec<i32> = (0..10).map(|i| 300 + i).collect(); // 2 full + tail of 2
+    let attach = |m: &mut CacheManager, dir: &std::path::Path| {
+        let store = PageStore::open(StoreConfig::for_cache(
+            dir.to_path_buf(),
+            m.fingerprint(),
+            m.page_cfg().page_bytes(),
+            0,
+        ))
+        .unwrap();
+        m.attach_store(store);
+    };
+    let populate = |kind: PrefixIndexKind, dir: &std::path::Path| {
+        let mut m = mk_cache(&geo, 64, true, kind);
+        attach(&mut m, dir);
+        m.start_seq_with_prompt(1, &prompt).unwrap();
+        let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+        m.append_run(1, &k, &v, prompt.len()).unwrap();
+        m.drop_seq(1); // parks + spills all three prompt pages
+        m.flush_store();
+        assert_eq!(m.share.pages_spilled, 3, "{kind:?} boot must spill the chain");
+    };
+    let warm_boot = |kind: PrefixIndexKind, dir: &std::path::Path| {
+        let mut m = mk_cache(&geo, 64, true, kind);
+        attach(&mut m, dir);
+        assert!(m.can_admit_prompt(&prompt, prompt.len()));
+        let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+        assert_eq!(
+            reuse.tokens,
+            prompt.len(),
+            "{kind:?} warm boot must cover the whole prompt from disk"
+        );
+        assert_eq!(m.share.pages_promoted, 3);
+        // byte-identical to a never-persisted unshared cache
+        let mut un = mk_cache(&geo, 64, false, PrefixIndexKind::Flat);
+        un.start_seq(1).unwrap();
+        let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+        un.append_run(1, &k, &v, prompt.len()).unwrap();
+        let t_max = prompt.len();
+        let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+        let (mut km, mut vm) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        let (mut ku, mut vu) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        m.gather(1, t_max, &mut km, &mut vm).unwrap();
+        un.gather(1, t_max, &mut ku, &mut vu).unwrap();
+        assert_eq!(bits_of(&km), bits_of(&ku), "{kind:?} K after promotion");
+        assert_eq!(bits_of(&vm), bits_of(&vu), "{kind:?} V after promotion");
+        m.drop_seq(1);
+        assert_eq!(m.live_refs(), 0);
+    };
+    for (writer, reader) in [
+        (PrefixIndexKind::Flat, PrefixIndexKind::Radix),
+        (PrefixIndexKind::Radix, PrefixIndexKind::Flat),
+        (PrefixIndexKind::Radix, PrefixIndexKind::Radix),
+    ] {
+        let dir = std::env::temp_dir().join(format!(
+            "isoquant-radix-store-{}-{}-{}",
+            std::process::id(),
+            writer.name(),
+            reader.name(),
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        populate(writer, &dir);
+        warm_boot(reader, &dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
