@@ -20,8 +20,8 @@
 //! Run: `cargo bench --bench gather_throughput` (`-- --quick` for the
 //! CI smoke subset).
 
-use isoquant::kvcache::{CacheManager, GatherWorkspace, PageConfig};
-use isoquant::quant::kernels::KernelBackend;
+use isoquant::kvcache::{CacheManager, GatherWorkspace, PageConfig, SeqId};
+use isoquant::quant::kernels::{KernelBackend, Resolved};
 use isoquant::quant::{Stage1, Stage1Config, Variant};
 use isoquant::util::bench::{black_box, Bencher, Table};
 use isoquant::util::json::Json;
@@ -34,6 +34,8 @@ const N_LAYERS: usize = 2;
 const N_HEADS: usize = 4;
 const TOKENS: usize = 128;
 const TOKENS_PER_PAGE: usize = 16;
+/// decode lanes in the cross-lane shared-prefix scenario
+const LANES: usize = 4;
 
 fn build_cache(d: usize, bits: u8, backend: KernelBackend) -> CacheManager {
     let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, d, bits).with_backend(backend));
@@ -52,6 +54,39 @@ fn build_cache(d: usize, bits: u8, backend: KernelBackend) -> CacheManager {
         let k = rng.gaussian_vec_f32(tok_n);
         let v = rng.gaussian_vec_f32(tok_n);
         m.append_token(1, &k, &v).unwrap();
+    }
+    m
+}
+
+/// `LANES` sequences all caching the same `TOKENS`-token prompt: lane 1
+/// encodes it, the rest adopt the published pages, so every full page is
+/// shared by all lanes — the decode-batch shape the cross-lane gather
+/// dedup targets.
+fn build_shared_cache(d: usize, bits: u8, backend: KernelBackend) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, d, bits).with_backend(backend));
+    let cfg = PageConfig {
+        tokens_per_page: TOKENS_PER_PAGE,
+        n_layers: N_LAYERS,
+        n_heads: N_HEADS,
+        d_head: d,
+        encoded_len: stage1.encoded_len(),
+    };
+    let mut m = CacheManager::new(stage1, cfg, TOKENS.div_ceil(TOKENS_PER_PAGE) * LANES + LANES);
+    m.prefix_sharing = true;
+    let prompt: Vec<i32> = (0..TOKENS as i32).collect();
+    let mut rng = Rng::new(0x5A + d as u64 + bits as u64);
+    let tok_n = N_LAYERS * N_HEADS * d;
+    for lane in 0..LANES {
+        let seq = lane as u64 + 1;
+        let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+        let fresh = prompt.len() - reuse.tokens;
+        let mut k = Vec::with_capacity(fresh * tok_n);
+        let mut v = Vec::with_capacity(fresh * tok_n);
+        for _ in 0..fresh {
+            k.extend_from_slice(&rng.gaussian_vec_f32(tok_n));
+            v.extend_from_slice(&rng.gaussian_vec_f32(tok_n));
+        }
+        m.append_run(seq, &k, &v, fresh).unwrap();
     }
     m
 }
@@ -176,6 +211,128 @@ fn main() {
          strips.",
         N_LAYERS * N_HEADS
     );
+    // ---- cross-lane shared-prefix drain: dedup × dtype × backend ----
+    println!(
+        "\n== cross-lane batched gather: {LANES} lanes sharing one {TOKENS}-token prompt ==\n"
+    );
+    let mut xlane_backends: Vec<(KernelBackend, String)> = vec![
+        (KernelBackend::Scalar, "scalar".to_string()),
+        (KernelBackend::Auto, simd_name.clone()),
+    ];
+    if KernelBackend::Avx512.resolve() == Resolved::Avx512
+        && KernelBackend::Auto.resolve() != Resolved::Avx512
+    {
+        xlane_backends.push((KernelBackend::Avx512, "avx512".to_string()));
+    }
+    let mut xtable = Table::new(&[
+        "d",
+        "bits",
+        "backend",
+        "dedup-off tok/s",
+        "dedup-on tok/s",
+        "f16-on tok/s",
+        "dedup x",
+        "on MB/s",
+    ]);
+    for &d in dims {
+        for &bits in bits_sweep {
+            for (backend, bname) in &xlane_backends {
+                let mut cache = build_shared_cache(d, bits, *backend);
+                cache.parallel = ParallelPolicy::Auto;
+                let pairs: Vec<(SeqId, usize)> =
+                    (0..LANES).map(|lane| (lane as u64 + 1, lane)).collect();
+                let sz = N_LAYERS * LANES * N_HEADS * TOKENS * d;
+                let mut k_out = vec![0.0f32; sz];
+                let mut v_out = vec![0.0f32; sz];
+                let mut kh_out = vec![0u16; sz];
+                let mut vh_out = vec![0u16; sz];
+                let mut ws = GatherWorkspace::new();
+                let lane_tokens = (LANES * TOKENS) as f64;
+                let tps = |median_s: f64| lane_tokens / median_s;
+                let mbs = |median_s: f64, elem: usize| {
+                    (N_LAYERS * N_HEADS * 2 * d * elem) as f64 * lane_tokens / median_s / 1e6
+                };
+
+                cache.gather_dedup = false;
+                let r_off = bench.run("xlane-dedup-off", || {
+                    black_box(
+                        cache
+                            .gather_lanes_into_batch_ws(
+                                &pairs, LANES, TOKENS, &mut k_out, &mut v_out, &mut ws,
+                            )
+                            .unwrap(),
+                    );
+                });
+                cache.gather_dedup = true;
+                let r_on = bench.run("xlane-dedup-on", || {
+                    black_box(
+                        cache
+                            .gather_lanes_into_batch_ws(
+                                &pairs, LANES, TOKENS, &mut k_out, &mut v_out, &mut ws,
+                            )
+                            .unwrap(),
+                    );
+                });
+                let r_f16 = bench.run("xlane-dedup-on-f16", || {
+                    black_box(
+                        cache
+                            .gather_lanes_into_batch_f16_ws(
+                                &pairs, LANES, TOKENS, &mut kh_out, &mut vh_out, &mut ws,
+                            )
+                            .unwrap(),
+                    );
+                });
+
+                let (t_off, t_on, t_f16) = (
+                    r_off.median.as_secs_f64(),
+                    r_on.median.as_secs_f64(),
+                    r_f16.median.as_secs_f64(),
+                );
+                xtable.row(vec![
+                    d.to_string(),
+                    bits.to_string(),
+                    bname.clone(),
+                    format!("{:.0}", tps(t_off)),
+                    format!("{:.0}", tps(t_on)),
+                    format!("{:.0}", tps(t_f16)),
+                    format!("{:.2}", t_off / t_on),
+                    format!("{:.0}", mbs(t_on, 4)),
+                ]);
+                for (dedup, dtype, secs, elem) in [
+                    (false, "f32", t_off, 4usize),
+                    (true, "f32", t_on, 4),
+                    (true, "f16", t_f16, 2),
+                ] {
+                    entries.push(Json::obj(vec![
+                        ("d", Json::num(d as f64)),
+                        ("bits", Json::num(bits as f64)),
+                        ("mode", Json::str("xlane-batched")),
+                        ("backend", Json::str(bname.as_str())),
+                        ("lanes", Json::num(LANES as f64)),
+                        ("dedup", Json::Bool(dedup)),
+                        ("dtype", Json::str(dtype)),
+                        ("tokens_per_sec", Json::num(tps(secs))),
+                        ("mb_per_sec", Json::num(mbs(secs, elem))),
+                    ]));
+                }
+                entries.push(Json::obj(vec![
+                    ("d", Json::num(d as f64)),
+                    ("bits", Json::num(bits as f64)),
+                    ("mode", Json::str("xlane-speedup")),
+                    ("backend", Json::str(bname.as_str())),
+                    ("dedup_on_over_off", Json::num(t_off / t_on)),
+                    ("f16_over_f32_dedup", Json::num(t_on / t_f16)),
+                ]));
+            }
+        }
+    }
+    xtable.print();
+    println!(
+        "\ncross-lane rows drain all {LANES} lanes in one gather_lanes_into_batch call \
+         (ParallelPolicy::Auto);\ndedup-on decodes each shared page once and memcpys it \
+         into the other lanes."
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::str("gather_throughput")),
         ("simd_backend", Json::str(simd_name.as_str())),

@@ -31,7 +31,7 @@ fn parse_kernel(a: &crate::util::cli::Args) -> Result<Option<KernelBackend>> {
         None | Some("") => Ok(None),
         Some(s) => {
             let b = KernelBackend::parse(s)
-                .with_context(|| format!("unknown kernel backend {s:?} (scalar|auto|avx2|neon)"))?;
+                .with_context(|| format!("unknown kernel backend {s:?} (scalar|auto|avx2|neon|avx512)"))?;
             if let Err(e) = b.validate() {
                 bail!("{e}");
             }
@@ -48,7 +48,7 @@ pub fn compress(args: &[String]) -> Result<()> {
         .opt("bits", "4", "bit width (2-4)")
         .opt("batch", "8192", "number of vectors")
         .opt("seed", "0", "data seed")
-        .opt("kernel", "", "kernel backend: scalar | auto | avx2 | neon")
+        .opt("kernel", "", "kernel backend: scalar | auto | avx2 | neon | avx512")
         .flag("uniform", "use the uniform quantizer instead of Lloyd-Max");
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
@@ -145,7 +145,7 @@ pub fn sweep(args: &[String]) -> Result<()> {
         .opt("dim", "128", "vector dimension")
         .opt("bits", "4", "bit width")
         .opt("batch", "8192", "batch size")
-        .opt("kernel", "", "kernel backend: scalar | auto | avx2 | neon");
+        .opt("kernel", "", "kernel backend: scalar | auto | avx2 | neon | avx512");
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
     };
@@ -311,7 +311,7 @@ pub fn serve(args: &[String]) -> Result<()> {
         .opt("bind", "", "bind address (overrides config)")
         .opt("variant", "", "stage-1 variant (overrides config)")
         .opt("bits", "", "bit width (overrides config)")
-        .opt("kernel", "", "kernel backend (overrides config): scalar | auto | avx2 | neon")
+        .opt("kernel", "", "kernel backend (overrides config): scalar | auto | avx2 | neon | avx512")
         .opt(
             "prefix-sharing",
             "",

@@ -169,11 +169,16 @@ pub struct EngineConfig {
     /// threading of the batched KV gather: `off`, `auto`, or a thread
     /// count (`[engine] gather_parallel`)
     pub gather_parallel: ParallelPolicy,
-    /// stage-1 kernel implementation: `scalar`, `auto`, `avx2`, or
-    /// `neon` (`[engine] kernel_backend`); all backends are bit-exact,
-    /// `scalar` is the reference.  Rejected at load time when the host
-    /// cannot run an explicitly requested SIMD backend.
+    /// stage-1 kernel implementation: `scalar`, `auto`, `avx2`, `neon`,
+    /// or `avx512` (`[engine] kernel_backend`); all backends are
+    /// bit-exact, `scalar` is the reference.  Rejected at load time when
+    /// the host cannot run an explicitly requested SIMD backend.
     pub kernel_backend: KernelBackend,
+    /// decode each distinct (page, slot-range) strip once per gather and
+    /// fan duplicate rows out by memcpy (`[engine] gather_dedup =
+    /// off|on`); only observable through `ShareStats` — gather output is
+    /// byte-identical either way
+    pub gather_dedup: bool,
     /// share sealed prompt pages between same-prefix sequences
     /// (`[cache] prefix_sharing = off|on`); off reproduces the
     /// exclusive-ownership cache
@@ -193,6 +198,11 @@ pub struct EngineConfig {
     /// (`[cache] persist_budget_mb`); 0 = unlimited.  Enforced by
     /// retiring the oldest log segments
     pub persist_budget_mb: usize,
+    /// serve cold reads from mmap'd store segments instead of buffered
+    /// file reads (`[cache] persist_mmap = off|on`); records are still
+    /// CRC- and fingerprint-verified on every read, and unsupported
+    /// hosts fall back to buffered reads
+    pub persist_mmap: bool,
     pub seed: u64,
 }
 
@@ -214,10 +224,12 @@ impl Default for EngineConfig {
             // honor the ISOQUANT_KERNEL process override (the CI matrix
             // forces the backend through it), falling back to auto
             kernel_backend: KernelBackend::from_env_default(),
+            gather_dedup: true,
             prefix_sharing: false,
             prefix_index: PrefixIndexKind::Flat,
             persist_dir: String::new(),
             persist_budget_mb: 256,
+            persist_mmap: true,
             seed: 0x150_0541,
         }
     }
@@ -282,9 +294,13 @@ impl EngineConfig {
                         }
                         b
                     }
-                    None => bail!("kernel_backend must be scalar/auto/avx2/neon, got {s:?}"),
+                    None => bail!("kernel_backend must be scalar/auto/avx2/neon/avx512, got {s:?}"),
                 },
-                Some(v) => bail!("kernel_backend must be scalar/auto/avx2/neon, got {v:?}"),
+                Some(v) => bail!("kernel_backend must be scalar/auto/avx2/neon/avx512, got {v:?}"),
+            },
+            gather_dedup: match raw.get("engine", "gather_dedup") {
+                None => d.gather_dedup,
+                Some(v) => parse_switch(v, "[engine] gather_dedup")?,
             },
             prefix_sharing: match raw.get("cache", "prefix_sharing") {
                 None => d.prefix_sharing,
@@ -304,6 +320,10 @@ impl EngineConfig {
                 Some(v) => bail!("[cache] persist_dir must be a string path, got {v:?}"),
             },
             persist_budget_mb: raw.usize_or("cache", "persist_budget_mb", d.persist_budget_mb)?,
+            persist_mmap: match raw.get("cache", "persist_mmap") {
+                None => d.persist_mmap,
+                Some(v) => parse_switch(v, "[cache] persist_mmap")?,
+            },
             seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
         })
     }
@@ -417,6 +437,56 @@ bind = "0.0.0.0:9000"
             &RawConfig::parse("[engine]\nkernel_backend = \"neon\"").unwrap(),
         );
         assert_eq!(neon.is_ok(), KernelBackend::Neon.validate().is_ok());
+        let avx512 = EngineConfig::from_raw(
+            &RawConfig::parse("[engine]\nkernel_backend = \"avx512\"").unwrap(),
+        );
+        assert_eq!(avx512.is_ok(), KernelBackend::Avx512.validate().is_ok());
+    }
+
+    #[test]
+    fn gather_dedup_knob() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert!(cfg.gather_dedup, "defaults on");
+        for (text, want) in [
+            ("[engine]\ngather_dedup = \"off\"", false),
+            ("[engine]\ngather_dedup = off", false),
+            ("[engine]\ngather_dedup = false", false),
+            ("[engine]\ngather_dedup = \"on\"", true),
+            ("[engine]\ngather_dedup = on", true),
+            ("[engine]\ngather_dedup = true", true),
+        ] {
+            let cfg = EngineConfig::from_raw(&RawConfig::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.gather_dedup, want, "{text}");
+        }
+        for text in [
+            "[engine]\ngather_dedup = 1",
+            "[engine]\ngather_dedup = \"always\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn persist_mmap_knob() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert!(cfg.persist_mmap, "defaults on");
+        for (text, want) in [
+            ("[cache]\npersist_mmap = \"off\"", false),
+            ("[cache]\npersist_mmap = off", false),
+            ("[cache]\npersist_mmap = \"on\"", true),
+            ("[cache]\npersist_mmap = true", true),
+        ] {
+            let cfg = EngineConfig::from_raw(&RawConfig::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.persist_mmap, want, "{text}");
+        }
+        for text in [
+            "[cache]\npersist_mmap = 0",
+            "[cache]\npersist_mmap = \"sometimes\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
     }
 
     #[test]

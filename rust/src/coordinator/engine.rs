@@ -119,6 +119,7 @@ impl Engine {
         let mut cache = CacheManager::new(stage1, page_cfg, max_pages);
         cache.parallel = cfg.gather_parallel;
         cache.prefix_sharing = cfg.prefix_sharing;
+        cache.gather_dedup = cfg.gather_dedup;
         cache.index_kind = cfg.prefix_index;
         if !cfg.persist_dir.is_empty() {
             // persistence rides on the content-addressed index: without
@@ -128,12 +129,15 @@ impl Engine {
             if !cfg.prefix_sharing {
                 bail!("[cache] persist_dir requires prefix_sharing = on");
             }
-            let store = PageStore::open(StoreConfig::for_cache(
-                std::path::PathBuf::from(&cfg.persist_dir),
-                cache.fingerprint(),
-                page_cfg.page_bytes(),
-                (cfg.persist_budget_mb as u64) << 20,
-            ))?;
+            let store = PageStore::open(
+                StoreConfig::for_cache(
+                    std::path::PathBuf::from(&cfg.persist_dir),
+                    cache.fingerprint(),
+                    page_cfg.page_bytes(),
+                    (cfg.persist_budget_mb as u64) << 20,
+                )
+                .with_mmap(cfg.persist_mmap),
+            )?;
             eprintln!(
                 "isoquant: page store at {} — {} cold pages rehydrated ({:.1} MB on disk)",
                 cfg.persist_dir,

@@ -241,6 +241,11 @@ pub struct CacheManager {
     /// share sealed prompt pages between sequences (`[cache]
     /// prefix_sharing`); off reproduces the exclusive-ownership cache
     pub prefix_sharing: bool,
+    /// decode each distinct (page, slot-range) strip once per cross-lane
+    /// gather and fan duplicate rows out by copy (`[engine]
+    /// gather_dedup`); output is byte-identical either way, only the
+    /// `ShareStats` gather-dedup counters observe the difference
+    pub gather_dedup: bool,
     /// prefix-sharing accounting (hits, CoW copies, bytes deduplicated)
     pub share: ShareStats,
     /// optional persistent page store: zero-ref parks spill to it
@@ -272,6 +277,7 @@ impl CacheManager {
             parallel: ParallelPolicy::Off,
             keep_shadow: false,
             prefix_sharing: false,
+            gather_dedup: true,
             share: ShareStats::default(),
             store: None,
         }
@@ -568,10 +574,27 @@ impl CacheManager {
                     self.alloc.retain(p);
                 }
             }
-            // adopt in chain order; a cold hit promotes from the store
-            // (fresh page + full re-verification).  The first failure
-            // truncates reuse there — later pinned pages are released
-            // back to the warm tier
+            // read ahead every cold hit of the chain in one store call:
+            // a full-chain cold hit becomes a single sequential segment
+            // scan instead of one seek per page (the mmap path resolves
+            // per record either way).  Results come back in request
+            // order; each is fully re-verified or `None`
+            let mut cold_bytes = match &self.store {
+                Some(store) => {
+                    let requests: Vec<(PrefixKey, Option<PrefixKey>, &[i32])> = probe
+                        .hits
+                        .iter()
+                        .filter(|h| h.page.is_none())
+                        .map(|h| (h.key, h.parent, &prompt[h.start..h.end]))
+                        .collect();
+                    store.read_pages(&requests).into_iter()
+                }
+                None => Vec::new().into_iter(),
+            };
+            // adopt in chain order; a cold hit promotes its pre-read
+            // bytes into a fresh page.  The first failure truncates
+            // reuse there — later pinned pages are released back to the
+            // warm tier
             let mut pages: Vec<PageId> = Vec::with_capacity(probe.hits.len());
             let mut tokens = 0usize;
             let mut warm_full_adopted = 0usize;
@@ -594,7 +617,8 @@ impl CacheManager {
                     }
                     None => {
                         let run = &prompt[hit.start..hit.end];
-                        match self.promote_from_store(hit.key, hit.parent, run, hit.depth) {
+                        let bytes = cold_bytes.next().flatten();
+                        match self.promote_page(hit.key, hit.parent, run, hit.depth, bytes) {
                             Some(p) => {
                                 pages.push(p);
                                 tokens = hit.end;
@@ -761,20 +785,22 @@ impl CacheManager {
         })
     }
 
-    /// Promote one cold page: read + fully re-verify the record from
-    /// the store, allocate a fresh page (evicting warm pages if the
-    /// pool demands it), install the bytes sealed under `key`, and
-    /// publish it back to the resident index.  Any failure — disk,
-    /// verification, pool exhaustion — returns `None`: a miss, so the
-    /// caller re-encodes instead of ever adopting wrong bytes.
-    fn promote_from_store(
+    /// Promote one cold page from its pre-read (and already fully
+    /// re-verified) store bytes: allocate a fresh page (evicting warm
+    /// pages if the pool demands it), install the bytes sealed under
+    /// `key`, and publish it back to the resident index.  Any failure —
+    /// a `None` read, size mismatch, pool exhaustion — returns `None`:
+    /// a miss, so the caller re-encodes instead of ever adopting wrong
+    /// bytes.
+    fn promote_page(
         &mut self,
         key: PrefixKey,
         parent: Option<PrefixKey>,
         run: &[i32],
         depth: u32,
+        bytes: Option<Vec<u8>>,
     ) -> Option<PageId> {
-        let bytes = self.store.as_ref()?.read_page(key, parent, run)?;
+        let bytes = bytes?;
         if bytes.len() != self.alloc.cfg().page_bytes() {
             return None;
         }
@@ -1358,6 +1384,28 @@ impl CacheManager {
         Ok(n)
     }
 
+    /// [`CacheManager::gather_ws`] with IEEE binary16 output: each
+    /// element is `f32_to_f16_bits` of what the f32 gather writes.
+    pub fn gather_ws_f16(
+        &self,
+        seq: SeqId,
+        t_max: usize,
+        k_out: &mut [u16],
+        v_out: &mut [u16],
+        ws: &mut GatherWorkspace,
+    ) -> Result<usize> {
+        let cfg = *self.alloc.cfg();
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        if k_out.len() != l * h * t_max * dh || v_out.len() != l * h * t_max * dh {
+            bail!("gather: output buffer shape mismatch");
+        }
+        let s = self.seqs.get(&seq).context("unknown sequence")?;
+        let n = self.gather_strips(s, t_max, k_out, v_out, ws, |layer, head| {
+            (layer * h + head) * t_max * dh
+        });
+        Ok(n)
+    }
+
     /// [`CacheManager::gather_ws`] with a throwaway workspace (tests and
     /// one-off callers; the engine holds a persistent workspace).
     pub fn gather(
@@ -1437,6 +1485,33 @@ impl CacheManager {
         v_out: &mut [f32],
         ws: &mut GatherWorkspace,
     ) -> Result<Vec<usize>> {
+        self.gather_lanes_core(lanes, batch, t_max, k_out, v_out, ws)
+    }
+
+    /// [`CacheManager::gather_lanes_into_batch_ws`] with IEEE binary16
+    /// output: each element is `f32_to_f16_bits` of the f32 gather's —
+    /// half the write bandwidth for artifacts that consume FP16 KV.
+    pub fn gather_lanes_into_batch_f16_ws(
+        &self,
+        lanes: &[(SeqId, usize)],
+        batch: usize,
+        t_max: usize,
+        k_out: &mut [u16],
+        v_out: &mut [u16],
+        ws: &mut GatherWorkspace,
+    ) -> Result<Vec<usize>> {
+        self.gather_lanes_core(lanes, batch, t_max, k_out, v_out, ws)
+    }
+
+    fn gather_lanes_core<T: GatherElem>(
+        &self,
+        lanes: &[(SeqId, usize)],
+        batch: usize,
+        t_max: usize,
+        k_out: &mut [T],
+        v_out: &mut [T],
+        ws: &mut GatherWorkspace,
+    ) -> Result<Vec<usize>> {
         let cfg = *self.alloc.cfg();
         let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
         let expect = l * batch * h * t_max * dh;
@@ -1473,12 +1548,12 @@ impl CacheManager {
     /// The single-sequence strip gather: build this sequence's
     /// `n_layers × n_heads` strip jobs located by `strip_base` and run
     /// them through the shared drain.
-    fn gather_strips(
+    fn gather_strips<T: GatherElem>(
         &self,
         s: &SeqCache,
         t_max: usize,
-        k_out: &mut [f32],
-        v_out: &mut [f32],
+        k_out: &mut [T],
+        v_out: &mut [T],
         ws: &mut GatherWorkspace,
         strip_base: impl Fn(usize, usize) -> usize,
     ) -> usize {
@@ -1499,13 +1574,15 @@ impl CacheManager {
     /// zero each strip, then decode it page-run by page-run with
     /// strided batch decodes — in parallel across all jobs when the
     /// policy allows.  Jobs may reference different sequences (the
-    /// cross-lane drain).
-    fn gather_strips_multi(
+    /// cross-lane drain); when they do and [`CacheManager::gather_dedup`]
+    /// is on, identical `(layer, head, page, slot-run)` strips across
+    /// lanes decode once and fan out by copy.
+    fn gather_strips_multi<T: GatherElem>(
         &self,
         jobs: Vec<(&SeqCache, usize, usize, usize)>,
         t_max: usize,
-        k_out: &mut [f32],
-        v_out: &mut [f32],
+        k_out: &mut [T],
+        v_out: &mut [T],
         ws: &mut GatherWorkspace,
     ) {
         let cfg = *self.alloc.cfg();
@@ -1517,16 +1594,67 @@ impl CacheManager {
         ws.bases.clear();
         ws.bases.extend(jobs.iter().map(|&(_, _, _, base)| base));
 
+        // Cross-lane dedup plan, built single-threaded before the drain:
+        // lanes sharing prefix pages gather the same page runs into the
+        // same strip offsets, so the first job touching a given
+        // `(layer, head, page, t, run)` becomes the leader and every
+        // later one skips the decode and copies the leader's rows
+        // afterwards.  The decoded bytes are identical by construction
+        // (same encoded column, same kernel), so the fan-out is
+        // invisible to callers except through the dedup counters.
+        let mut skips: Vec<Vec<usize>> = vec![Vec::new(); jobs.len()];
+        let mut copies: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let distinct_seqs = {
+            let mut ptrs: Vec<*const SeqCache> =
+                jobs.iter().map(|&(s, _, _, _)| s as *const SeqCache).collect();
+            ptrs.sort_unstable();
+            ptrs.dedup();
+            ptrs.len()
+        };
+        if self.gather_dedup && distinct_seqs > 1 {
+            use std::collections::hash_map::Entry;
+            use std::sync::atomic::Ordering;
+            let mut leaders: HashMap<(usize, usize, PageId, usize, usize), usize> =
+                HashMap::new();
+            for (j, &(s, layer, head, _)) in jobs.iter().enumerate() {
+                let n = s.len.min(t_max);
+                let mut t = 0usize;
+                while t < n {
+                    let run = tp.min(n - t);
+                    match leaders.entry((layer, head, s.pages[t / tp], t, run)) {
+                        Entry::Occupied(e) => {
+                            skips[j].push(t);
+                            copies.push((*e.get(), j, t, run));
+                            self.share.strips_deduped.fetch_add(1, Ordering::Relaxed);
+                            self.share.bytes_saved.fetch_add(
+                                (2 * run * dh * std::mem::size_of::<T>()) as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        Entry::Vacant(e) => {
+                            e.insert(j);
+                        }
+                    }
+                    t += run;
+                }
+            }
+        }
+
         let total_vecs: usize =
             jobs.iter().map(|&(s, _, _, _)| s.len.min(t_max)).sum::<usize>() * 2;
         let k_strips = carve_strips(k_out, &ws.bases, strip_len);
         let v_strips = carve_strips(v_out, &ws.bases, strip_len);
-        let units: Vec<(&SeqCache, usize, usize, &mut [f32], &mut [f32], &mut BatchScratch)> =
-            jobs.into_iter()
-                .zip(k_strips.into_iter().zip(v_strips))
-                .zip(ws.scratch.iter_mut())
-                .map(|(((s, layer, head, _), (ks, vs)), sc)| (s, layer, head, ks, vs, sc))
-                .collect();
+        type Unit<'u, T> =
+            (&'u SeqCache, usize, usize, &'u mut [T], &'u mut [T], &'u mut BatchScratch, &'u [usize]);
+        let units: Vec<Unit<'_, T>> = jobs
+            .into_iter()
+            .zip(k_strips.into_iter().zip(v_strips))
+            .zip(ws.scratch.iter_mut())
+            .zip(skips.iter())
+            .map(|((((s, layer, head, _), (ks, vs)), sc), skip)| {
+                (s, layer, head, ks, vs, sc, skip.as_slice())
+            })
+            .collect();
 
         // scoped threads rather than the long-lived ThreadPool: the units
         // borrow the caller's output buffers, which `ThreadPool`'s
@@ -1536,25 +1664,34 @@ impl CacheManager {
         } else {
             self.parallel.threads(units.len())
         };
-        scope_units(units, threads, |(s, layer, head, k_strip, v_strip, scratch)| {
+        scope_units(units, threads, |(s, layer, head, k_strip, v_strip, scratch, skip)| {
             let n = s.len.min(t_max);
-            k_strip.fill(0.0);
-            v_strip.fill(0.0);
+            k_strip.fill(T::ZERO);
+            v_strip.fill(T::ZERO);
+            let mut skip_at = 0usize;
             let mut t = 0usize;
             while t < n {
                 let run = tp.min(n - t);
+                if skip_at < skip.len() && skip[skip_at] == t {
+                    // a leader strip decodes this run; copied in below
+                    skip_at += 1;
+                    t += run;
+                    continue;
+                }
                 let page = self.alloc.page(s.pages[t / tp]);
                 let (k_col, stride) = page.column(&cfg, layer, head, false);
                 let (v_col, _) = page.column(&cfg, layer, head, true);
                 debug_assert_eq!(stride, slot_bytes);
-                self.stage1.decode_batch_strided(
+                T::decode_batch_strided(
+                    &self.stage1,
                     k_col,
                     slot_bytes,
                     run,
                     &mut k_strip[t * dh..(t + run) * dh],
                     scratch,
                 );
-                self.stage1.decode_batch_strided(
+                T::decode_batch_strided(
+                    &self.stage1,
                     v_col,
                     slot_bytes,
                     run,
@@ -1564,6 +1701,16 @@ impl CacheManager {
                 t += run;
             }
         });
+
+        // fan the skipped runs out of their decoded leaders; bases are
+        // absolute offsets into the shared batch buffer, so this is a
+        // plain in-buffer copy
+        for &(src, dst, t, run) in &copies {
+            let sb = ws.bases[src] + t * dh;
+            let db = ws.bases[dst] + t * dh;
+            k_out.copy_within(sb..sb + run * dh, db);
+            v_out.copy_within(sb..sb + run * dh, db);
+        }
     }
 
     /// The pre-batch per-vector gather (one `Stage1::decode` call per
@@ -1643,15 +1790,59 @@ impl CacheManager {
     }
 }
 
+/// Element type the batched gather decodes into: `f32` (the reference
+/// output) or IEEE binary16 bits in `u16` (`f32_to_f16_bits` of the f32
+/// output, element for element — see
+/// [`Stage1::decode_batch_strided_f16`]).
+pub trait GatherElem: Copy + Send + Sync + 'static {
+    const ZERO: Self;
+    fn decode_batch_strided(
+        stage1: &Stage1,
+        data: &[u8],
+        stride: usize,
+        n_vecs: usize,
+        out: &mut [Self],
+        scratch: &mut BatchScratch,
+    );
+}
+
+impl GatherElem for f32 {
+    const ZERO: f32 = 0.0;
+    fn decode_batch_strided(
+        stage1: &Stage1,
+        data: &[u8],
+        stride: usize,
+        n_vecs: usize,
+        out: &mut [f32],
+        scratch: &mut BatchScratch,
+    ) {
+        stage1.decode_batch_strided(data, stride, n_vecs, out, scratch);
+    }
+}
+
+impl GatherElem for u16 {
+    const ZERO: u16 = 0;
+    fn decode_batch_strided(
+        stage1: &Stage1,
+        data: &[u8],
+        stride: usize,
+        n_vecs: usize,
+        out: &mut [u16],
+        scratch: &mut BatchScratch,
+    ) {
+        stage1.decode_batch_strided_f16(data, stride, n_vecs, out, scratch);
+    }
+}
+
 /// Split `buf` into disjoint `strip_len`-sized mutable windows starting
 /// at the (strictly ascending, non-overlapping) `bases`, skipping the
 /// gaps between them.  Lets the strip-parallel gather hand each worker
 /// an owned `&mut` window of a shared output buffer safely.
-fn carve_strips<'a>(
-    mut buf: &'a mut [f32],
+fn carve_strips<'a, T>(
+    mut buf: &'a mut [T],
     bases: &[usize],
     strip_len: usize,
-) -> Vec<&'a mut [f32]> {
+) -> Vec<&'a mut [T]> {
     let mut out = Vec::with_capacity(bases.len());
     let mut cursor = 0usize;
     for &base in bases {
@@ -2245,6 +2436,124 @@ mod tests {
         assert_eq!(
             va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn gather_dedup_bit_exact_and_counts_shared_strips() {
+        use std::sync::atomic::Ordering;
+        // three lanes adopting the same 2-page prompt: with dedup on the
+        // cross-lane drain must produce byte-identical output to dedup
+        // off, decode each shared strip once, and say so in the counters
+        for policy in [ParallelPolicy::Off, ParallelPolicy::Auto] {
+            let mut m = mk(64, 4);
+            m.prefix_sharing = true;
+            m.parallel = policy;
+            let cfg = m.page_cfg();
+            let prompt: Vec<i32> = (0..8).collect();
+            let pv = token_stream(81, 8, &cfg);
+            let (pk, pvv) = flat_run(&pv);
+            m.start_seq_with_prompt(1, &prompt).unwrap();
+            m.append_run(1, &pk, &pvv, 8).unwrap();
+            for seq in [2u64, 3] {
+                let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+                assert_eq!(reuse.pages, 2);
+            }
+            // divergent decode tails of different lengths
+            for (seq, n) in [(1u64, 3usize), (2, 1), (3, 2)] {
+                for (k, v) in &token_stream(90 + seq, n, &cfg) {
+                    m.append_token(seq, k, v).unwrap();
+                }
+            }
+            let (t_max, batch) = (11usize, 3usize);
+            let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+            let wide = l * batch * h * t_max * dh;
+            let (mut ka, mut va) = (vec![5.0f32; wide], vec![5.0f32; wide]);
+            let (mut kb, mut vb) = (vec![5.0f32; wide], vec![5.0f32; wide]);
+            let mut ws = GatherWorkspace::new();
+            let pairs: Vec<(SeqId, usize)> = vec![(1, 0), (2, 1), (3, 2)];
+            m.gather_dedup = false;
+            m.gather_lanes_into_batch_ws(&pairs, batch, t_max, &mut ka, &mut va, &mut ws)
+                .unwrap();
+            assert_eq!(m.share.strips_deduped.load(Ordering::Relaxed), 0);
+            m.gather_dedup = true;
+            m.gather_lanes_into_batch_ws(&pairs, batch, t_max, &mut kb, &mut vb, &mut ws)
+                .unwrap();
+            assert_eq!(
+                ka.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                kb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{policy:?} K"
+            );
+            assert_eq!(
+                va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{policy:?} V"
+            );
+            // both shared pages repeat on 2 follower lanes × 2 layers ×
+            // 2 heads = 8 skipped runs per page, 16 total
+            assert_eq!(m.share.strips_deduped.load(Ordering::Relaxed), 16);
+            let tp = cfg.tokens_per_page;
+            assert_eq!(
+                m.share.bytes_saved.load(Ordering::Relaxed),
+                (16 * 2 * tp * dh * std::mem::size_of::<f32>()) as u64
+            );
+        }
+    }
+
+    #[test]
+    fn gather_f16_is_converted_f32_gather() {
+        // every f16 gather element must be exactly f32_to_f16_bits of
+        // the f32 gather's, on both the single-sequence and the
+        // cross-lane (dedup'd) paths
+        use crate::util::f16::f32_to_f16_bits;
+        let mut m = mk(64, 4);
+        m.prefix_sharing = true;
+        let cfg = m.page_cfg();
+        let prompt: Vec<i32> = (0..6).collect();
+        let pv = token_stream(83, 6, &cfg);
+        let (pk, pvv) = flat_run(&pv);
+        m.start_seq_with_prompt(1, &prompt).unwrap();
+        m.append_run(1, &pk, &pvv, 6).unwrap();
+        m.start_seq_with_prompt(2, &prompt).unwrap();
+        for (seq, seed) in [(1u64, 84u64), (2, 85)] {
+            for (k, v) in &token_stream(seed, 2, &cfg) {
+                m.append_token(seq, k, v).unwrap();
+            }
+        }
+        let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+        let t_max = 8usize;
+        let narrow = l * h * t_max * dh;
+        let mut ws = GatherWorkspace::new();
+        let (mut kf, mut vf) = (vec![0.0f32; narrow], vec![0.0f32; narrow]);
+        let (mut kh, mut vh) = (vec![9u16; narrow], vec![9u16; narrow]);
+        m.gather_ws(1, t_max, &mut kf, &mut vf, &mut ws).unwrap();
+        m.gather_ws_f16(1, t_max, &mut kh, &mut vh, &mut ws).unwrap();
+        assert_eq!(
+            kh,
+            kf.iter().map(|&x| f32_to_f16_bits(x)).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            vh,
+            vf.iter().map(|&x| f32_to_f16_bits(x)).collect::<Vec<_>>()
+        );
+        let batch = 2usize;
+        let wide = narrow * batch;
+        let (mut kf, mut vf) = (vec![0.0f32; wide], vec![0.0f32; wide]);
+        let (mut kh, mut vh) = (vec![9u16; wide], vec![9u16; wide]);
+        let pairs: Vec<(SeqId, usize)> = vec![(1, 0), (2, 1)];
+        m.gather_lanes_into_batch_ws(&pairs, batch, t_max, &mut kf, &mut vf, &mut ws)
+            .unwrap();
+        let ns = m
+            .gather_lanes_into_batch_f16_ws(&pairs, batch, t_max, &mut kh, &mut vh, &mut ws)
+            .unwrap();
+        assert_eq!(ns, vec![8, 8]);
+        assert_eq!(
+            kh,
+            kf.iter().map(|&x| f32_to_f16_bits(x)).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            vh,
+            vf.iter().map(|&x| f32_to_f16_bits(x)).collect::<Vec<_>>()
         );
     }
 

@@ -90,7 +90,7 @@ pub mod radix;
 pub mod store;
 
 pub use allocator::{PageAllocator, PageId};
-pub use manager::{CacheManager, GatherWorkspace, PrefixReuse, SeqId};
+pub use manager::{CacheManager, GatherElem, GatherWorkspace, PrefixReuse, SeqId};
 pub use page::{chain_key, Page, PageConfig, PrefixKey};
 pub use prefix::{PrefixIndex, PrefixIndexKind};
 pub use radix::RadixIndex;

@@ -96,6 +96,107 @@ fn try_exclusive_lock(_file: &File) -> std::io::Result<bool> {
     Ok(true)
 }
 
+/// A read-only private mapping of (a prefix of) one segment file.
+/// Because the log is append-only and never rewritten in place, every
+/// byte inside the mapped length was durably written before the map was
+/// created — a private mapping can never observe a torn record.  The
+/// kernel keeps an unlinked (retired) segment's pages alive until the
+/// last map drops, so retirement needs no coordination with in-flight
+/// reads.
+#[cfg(unix)]
+struct SegmentMap {
+    ptr: *mut std::os::raw::c_void,
+    len: usize,
+}
+
+// the mapping is immutable shared memory: plain `&[u8]` access from any
+// thread is sound, and munmap runs once from whichever thread drops last
+#[cfg(unix)]
+unsafe impl Send for SegmentMap {}
+#[cfg(unix)]
+unsafe impl Sync for SegmentMap {}
+
+#[cfg(unix)]
+impl SegmentMap {
+    /// Map the first `len` bytes of `path` read-only.  `None` on any
+    /// failure — including `len == 0`, which `mmap` rejects — and the
+    /// caller falls back to buffered reads.
+    fn map(path: &std::path::Path, len: usize) -> Option<SegmentMap> {
+        use std::os::unix::io::AsRawFd;
+        // same idiom as `try_exclusive_lock`: the symbols live in the
+        // platform libc std already links
+        extern "C" {
+            fn mmap(
+                addr: *mut std::os::raw::c_void,
+                len: usize,
+                prot: std::os::raw::c_int,
+                flags: std::os::raw::c_int,
+                fd: std::os::raw::c_int,
+                offset: std::os::raw::c_long,
+            ) -> *mut std::os::raw::c_void;
+        }
+        const PROT_READ: std::os::raw::c_int = 1;
+        const MAP_PRIVATE: std::os::raw::c_int = 2;
+        if len == 0 {
+            return None;
+        }
+        let file = File::open(path).ok()?;
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is -1, not null
+        if ptr as isize == -1 {
+            return None;
+        }
+        Some(SegmentMap { ptr, len })
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for SegmentMap {
+    fn drop(&mut self) {
+        extern "C" {
+            fn munmap(addr: *mut std::os::raw::c_void, len: usize) -> std::os::raw::c_int;
+        }
+        unsafe { munmap(self.ptr, self.len) };
+    }
+}
+
+/// Non-unix fallback: mapping never succeeds, so every read takes the
+/// buffered path regardless of `StoreConfig::mmap`.
+#[cfg(not(unix))]
+struct SegmentMap;
+
+#[cfg(not(unix))]
+impl SegmentMap {
+    fn map(_path: &std::path::Path, _len: usize) -> Option<SegmentMap> {
+        None
+    }
+
+    fn len(&self) -> usize {
+        0
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        &[]
+    }
+}
+
 /// Identity + placement of a page store.
 #[derive(Clone, Debug)]
 pub struct StoreConfig {
@@ -110,6 +211,12 @@ pub struct StoreConfig {
     pub budget_bytes: u64,
     /// segment rotation threshold
     pub segment_bytes: u64,
+    /// serve cold reads from mmap'd segment views instead of buffered
+    /// seek+read (`[cache] persist_mmap`).  Purely a transport choice:
+    /// every record still goes through full CRC/fingerprint/token
+    /// verification, and any mapping failure (or a non-unix host)
+    /// silently falls back to the buffered path
+    pub mmap: bool,
 }
 
 impl StoreConfig {
@@ -129,7 +236,14 @@ impl StoreConfig {
             page_bytes,
             budget_bytes,
             segment_bytes,
+            mmap: true,
         }
+    }
+
+    /// Toggle mmap'd cold reads (`[cache] persist_mmap`).
+    pub fn with_mmap(mut self, mmap: bool) -> StoreConfig {
+        self.mmap = mmap;
+        self
     }
 }
 
@@ -211,6 +325,13 @@ pub struct PageStore {
     shared: Arc<Mutex<Shared>>,
     tx: Option<mpsc::Sender<spill::Job>>,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// lazily created read-only segment mappings (`StoreConfig::mmap`),
+    /// one per segment, shared across concurrent readers.  The active
+    /// segment grows under the spill worker, so a cached map that is
+    /// too short for a requested record is remapped at the file's
+    /// current length; maps of retired segments are pruned on the next
+    /// mapping miss
+    maps: Mutex<HashMap<u64, Arc<SegmentMap>>>,
     /// flock'd single-writer owner marker: held (the fd stays open) for
     /// the store's whole lifetime, released when the store drops
     _lock: File,
@@ -319,6 +440,7 @@ impl PageStore {
             shared,
             tx: Some(tx),
             worker: Some(worker),
+            maps: Mutex::new(HashMap::new()),
             _lock: lock,
         })
     }
@@ -377,7 +499,7 @@ impl PageStore {
         parent: Option<PrefixKey>,
         tokens: &[i32],
     ) -> Option<Vec<u8>> {
-        let (segment, offset, len) = {
+        let loc = {
             let s = self.lock();
             let e = s.dir.get(&key)?;
             if e.parent != parent || e.tokens != tokens {
@@ -385,26 +507,178 @@ impl PageStore {
             }
             (e.segment, e.offset, e.len)
         };
-        let page = (|| -> Option<Vec<u8>> {
-            let mut f = File::open(segment_path(&self.cfg.dir, segment)).ok()?;
-            f.seek(SeekFrom::Start(offset)).ok()?;
-            let mut buf = vec![0u8; len as usize];
-            f.read_exact(&mut buf).ok()?;
-            match record::read_record(&mut &buf[..], self.cfg.fingerprint, self.cfg.page_bytes) {
-                record::ReadOutcome::Ok(rec)
-                    if rec.key == key && rec.parent == parent && rec.tokens == tokens =>
-                {
-                    Some(rec.page)
-                }
-                _ => None,
-            }
-        })();
+        let page = self.fetch_verified((key, parent, tokens), loc);
         if page.is_none() {
             let mut s = self.lock();
             s.dir.remove(&key);
             s.stats.read_errors += 1;
         }
         page
+    }
+
+    /// Batch read-ahead over many chain links: resolve everything under
+    /// one directory lock, then fetch per segment — straight out of the
+    /// segment map when mmap is on, otherwise grouping records by
+    /// offset and merging strictly contiguous ones into one sequential
+    /// read each (a full-chain cold hit scans its segment once instead
+    /// of seeking per page).  Results come back in request order; each
+    /// record is independently re-verified, and a failed slot is `None`
+    /// with its directory entry dropped, exactly as
+    /// [`PageStore::read_page`] would.
+    pub fn read_pages(
+        &self,
+        requests: &[(PrefixKey, Option<PrefixKey>, &[i32])],
+    ) -> Vec<Option<Vec<u8>>> {
+        let locs: Vec<Option<(u64, u64, u64)>> = {
+            let s = self.lock();
+            requests
+                .iter()
+                .map(|&(key, parent, tokens)| {
+                    s.dir.get(&key).and_then(|e| {
+                        (e.parent == parent && e.tokens == tokens)
+                            .then(|| (e.segment, e.offset, e.len))
+                    })
+                })
+                .collect()
+        };
+        let mut out: Vec<Option<Vec<u8>>> = vec![None; requests.len()];
+        let mut by_seg: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        for (i, loc) in locs.iter().enumerate() {
+            if let Some((seg, _, _)) = loc {
+                by_seg.entry(*seg).or_default().push(i);
+            }
+        }
+        for (seg, mut idxs) in by_seg {
+            idxs.sort_by_key(|&i| locs[i].unwrap().1);
+            if self.cfg.mmap {
+                let need = idxs
+                    .iter()
+                    .map(|&i| {
+                        let (_, offset, len) = locs[i].unwrap();
+                        offset + len
+                    })
+                    .max()
+                    .unwrap_or(0);
+                if let Some(map) = self.segment_map(seg, need) {
+                    for &i in &idxs {
+                        let (_, offset, len) = locs[i].unwrap();
+                        let (a, b) = (offset as usize, (offset + len) as usize);
+                        if b <= map.len() {
+                            out[i] = self.verify_record(requests[i], &map.as_slice()[a..b]);
+                        }
+                    }
+                    continue;
+                }
+                // mapping unavailable: buffered fallback below
+            }
+            let Ok(mut f) = File::open(segment_path(&self.cfg.dir, seg)) else {
+                continue;
+            };
+            let mut e0 = 0usize;
+            while e0 < idxs.len() {
+                let (_, start, mut ext) = locs[idxs[e0]].unwrap();
+                let mut e1 = e0 + 1;
+                while e1 < idxs.len() {
+                    let (_, offset, len) = locs[idxs[e1]].unwrap();
+                    if offset != start + ext {
+                        break;
+                    }
+                    ext += len;
+                    e1 += 1;
+                }
+                if f.seek(SeekFrom::Start(start)).is_ok() {
+                    let mut buf = vec![0u8; ext as usize];
+                    if f.read_exact(&mut buf).is_ok() {
+                        for &i in &idxs[e0..e1] {
+                            let (_, offset, len) = locs[i].unwrap();
+                            let a = (offset - start) as usize;
+                            out[i] = self.verify_record(requests[i], &buf[a..a + len as usize]);
+                        }
+                    }
+                }
+                e0 = e1;
+            }
+        }
+        // a resolved-but-failed slot loses its directory entry, same as
+        // the single-read path
+        let mut s = self.lock();
+        for (i, loc) in locs.iter().enumerate() {
+            if loc.is_some() && out[i].is_none() {
+                s.dir.remove(&requests[i].0);
+                s.stats.read_errors += 1;
+            }
+        }
+        out
+    }
+
+    /// One verified fetch: through the shared segment map when mmap is
+    /// on and a mapping is available, buffered seek+read otherwise.
+    fn fetch_verified(
+        &self,
+        req: (PrefixKey, Option<PrefixKey>, &[i32]),
+        (segment, offset, len): (u64, u64, u64),
+    ) -> Option<Vec<u8>> {
+        if self.cfg.mmap {
+            if let Some(map) = self.segment_map(segment, offset + len) {
+                let (a, b) = (offset as usize, (offset + len) as usize);
+                if b <= map.len() {
+                    return self.verify_record(req, &map.as_slice()[a..b]);
+                }
+            }
+        }
+        let mut f = File::open(segment_path(&self.cfg.dir, segment)).ok()?;
+        f.seek(SeekFrom::Start(offset)).ok()?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).ok()?;
+        self.verify_record(req, &buf)
+    }
+
+    /// Full CRC/fingerprint/token verification of one raw record
+    /// against the chain link that looked it up — shared by every read
+    /// transport, so mmap'd reads are exactly as paranoid as buffered
+    /// ones.
+    fn verify_record(
+        &self,
+        (key, parent, tokens): (PrefixKey, Option<PrefixKey>, &[i32]),
+        bytes: &[u8],
+    ) -> Option<Vec<u8>> {
+        match record::read_record(&mut &*bytes, self.cfg.fingerprint, self.cfg.page_bytes) {
+            record::ReadOutcome::Ok(rec)
+                if rec.key == key && rec.parent == parent && rec.tokens == tokens =>
+            {
+                Some(rec.page)
+            }
+            _ => None,
+        }
+    }
+
+    /// Get, create, or grow the shared mapping of `segment` so it
+    /// covers at least `need` bytes.  The active segment grows as the
+    /// spill worker appends, so a cached map that is too short is
+    /// replaced by a fresh map of the file's current length; mapping
+    /// misses also prune maps of retired segments (dropping a map is
+    /// what finally releases an unlinked segment's pages).  `None` =
+    /// mapping unavailable — callers fall back to buffered reads.
+    fn segment_map(&self, segment: u64, need: u64) -> Option<Arc<SegmentMap>> {
+        let mut maps = self.maps.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(m) = maps.get(&segment) {
+            if m.len() as u64 >= need {
+                return Some(m.clone());
+            }
+            maps.remove(&segment);
+        }
+        {
+            let s = self.lock();
+            maps.retain(|id, _| s.segments.contains_key(id));
+        }
+        let path = segment_path(&self.cfg.dir, segment);
+        let len = fs::metadata(&path).ok()?.len();
+        if len < need {
+            return None;
+        }
+        let map = Arc::new(SegmentMap::map(&path, len as usize)?);
+        maps.insert(segment, map.clone());
+        Some(map)
     }
 
     /// Enqueue a page for write-behind persistence.  Returns `true`
@@ -539,6 +813,7 @@ mod tests {
             page_bytes: 64,
             budget_bytes: 0,
             segment_bytes: 4096,
+            mmap: false,
         }
     }
 
@@ -741,5 +1016,115 @@ mod tests {
         // the broken entry is dropped, not retried forever
         assert_eq!(store.len(), 0);
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mmap_reads_match_buffered_and_see_appends() {
+        // the mmap transport must serve byte-identical pages, including
+        // records appended after the first map was created (the active
+        // segment grows → remap)
+        let dir = tmpdir("mmap");
+        let store = PageStore::open(cfg(&dir, 7).with_mmap(true)).unwrap();
+        store.spill(key(1), None, &[1], &vec![0x11u8; 64]);
+        store.flush();
+        assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0x11u8; 64]));
+        // grow the active segment after the map exists
+        store.spill(key(2), Some(key(1)), &[2], &vec![0x22u8; 64]);
+        store.flush();
+        assert_eq!(
+            store.read_page(key(2), Some(key(1)), &[2]),
+            Some(vec![0x22u8; 64])
+        );
+        // identity mismatches stay misses without touching the entries
+        assert!(store.read_page(key(1), None, &[9]).is_none());
+        assert_eq!(store.len(), 2);
+        drop(store);
+        // a buffered reopen sees the same bytes
+        let store = PageStore::open(cfg(&dir, 7)).unwrap();
+        assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0x11u8; 64]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mmap_bit_flip_reads_as_miss() {
+        // a record damaged on disk after rehydration must read as a
+        // miss through the map, exactly like the buffered path
+        let dir = tmpdir("mmapflip");
+        {
+            let store = PageStore::open(cfg(&dir, 7)).unwrap();
+            for i in 0..2u64 {
+                store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+            }
+            store.flush();
+        }
+        let seg = segment_path(&dir, 0);
+        let mut bytes = fs::read(&seg).unwrap();
+        let rec_len = record::record_len(1, 64);
+        bytes[rec_len + record::HEADER_LEN + 4 + 7] ^= 0x10;
+        fs::write(&seg, &bytes).unwrap();
+        let store = PageStore::open(cfg(&dir, 7).with_mmap(true)).unwrap();
+        assert_eq!(store.read_page(key(0), None, &[0]), Some(vec![0u8; 64]));
+        assert!(store.read_page(key(1), None, &[1]).is_none());
+        assert_eq!(store.stats().read_errors, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mmap_vanished_segment_falls_back_and_misses() {
+        let dir = tmpdir("mmapvanish");
+        let store = PageStore::open(cfg(&dir, 7).with_mmap(true)).unwrap();
+        store.spill(key(1), None, &[1], &vec![1u8; 64]);
+        store.flush();
+        fs::remove_file(segment_path(&dir, 0)).unwrap();
+        assert!(store.read_page(key(1), None, &[1]).is_none());
+        assert_eq!(store.stats().read_errors, 1);
+        assert_eq!(store.len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_pages_batches_in_request_order() {
+        // read_pages == read_page per slot, in request order, on both
+        // transports — including unknown keys (None without an error)
+        // and records spread across several segments
+        for mmap in [false, true] {
+            let dir = tmpdir(if mmap { "batch-mmap" } else { "batch-buf" });
+            let one_record = record::record_len(1, 64) as u64;
+            let mut c = cfg(&dir, 7).with_mmap(mmap);
+            c.segment_bytes = 2 * one_record; // force several segments
+            let store = PageStore::open(c).unwrap();
+            for i in 0..5u64 {
+                store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+            }
+            store.flush();
+            let t: Vec<[i32; 1]> = (0..5).map(|i| [i as i32]).collect();
+            let missing = [99i32];
+            // out of order, with a miss in the middle
+            let requests: Vec<(PrefixKey, Option<PrefixKey>, &[i32])> = vec![
+                (key(3), None, &t[3]),
+                (key(99), None, &missing),
+                (key(0), None, &t[0]),
+                (key(4), None, &t[4]),
+                (key(1), None, &t[1]),
+                (key(2), Some(key(0)), &t[2]), // wrong parent → miss
+            ];
+            let got = store.read_pages(&requests);
+            assert_eq!(
+                got,
+                vec![
+                    Some(vec![3u8; 64]),
+                    None,
+                    Some(vec![0u8; 64]),
+                    Some(vec![4u8; 64]),
+                    Some(vec![1u8; 64]),
+                    None,
+                ],
+                "mmap={mmap}"
+            );
+            // unresolved keys are not read errors; entries survive
+            assert_eq!(store.stats().read_errors, 0, "mmap={mmap}");
+            assert_eq!(store.len(), 5, "mmap={mmap}");
+            let _ = fs::remove_dir_all(&dir);
+        }
     }
 }

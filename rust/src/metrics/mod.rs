@@ -75,8 +75,10 @@ pub struct Counters {
 
 /// Prefix-sharing accounting kept by the cache manager (single-writer,
 /// so plain integers): index hits, copy-on-write activity, and the bytes
-/// sharing kept off the allocator.
-#[derive(Default, Debug, Clone, PartialEq, Eq)]
+/// sharing kept off the allocator.  The two gather-dedup counters are
+/// atomics because gathers take `&self` and run on the worker pool; all
+/// admission-path counters stay plain integers.
+#[derive(Default, Debug)]
 pub struct ShareStats {
     /// sealed pages adopted from the prefix index at admission
     pub prefix_hit_pages: u64,
@@ -108,13 +110,62 @@ pub struct ShareStats {
     /// cold pages promoted from disk into fresh resident pages on a
     /// prefix-index miss (re-encode avoided)
     pub pages_promoted: u64,
+    /// cross-lane gather dedup: duplicate (page, slot-range) runs served
+    /// by memcpy from an already-decoded leader instead of re-decoded
+    pub strips_deduped: AtomicU64,
+    /// decode output bytes those skipped runs would have produced
+    /// (K and V both counted)
+    pub bytes_saved: AtomicU64,
 }
+
+impl Clone for ShareStats {
+    fn clone(&self) -> Self {
+        ShareStats {
+            prefix_hit_pages: self.prefix_hit_pages,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            cow_copies: self.cow_copies,
+            bytes_deduped: self.bytes_deduped,
+            slots_copied: self.slots_copied,
+            tail_copies: self.tail_copies,
+            pages_published: self.pages_published,
+            pages_evicted: self.pages_evicted,
+            pages_spilled: self.pages_spilled,
+            pages_rehydrated: self.pages_rehydrated,
+            pages_promoted: self.pages_promoted,
+            strips_deduped: AtomicU64::new(self.strips_deduped.load(Ordering::Relaxed)),
+            bytes_saved: AtomicU64::new(self.bytes_saved.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl PartialEq for ShareStats {
+    fn eq(&self, other: &Self) -> bool {
+        self.prefix_hit_pages == other.prefix_hit_pages
+            && self.prefix_hit_tokens == other.prefix_hit_tokens
+            && self.cow_copies == other.cow_copies
+            && self.bytes_deduped == other.bytes_deduped
+            && self.slots_copied == other.slots_copied
+            && self.tail_copies == other.tail_copies
+            && self.pages_published == other.pages_published
+            && self.pages_evicted == other.pages_evicted
+            && self.pages_spilled == other.pages_spilled
+            && self.pages_rehydrated == other.pages_rehydrated
+            && self.pages_promoted == other.pages_promoted
+            && self.strips_deduped.load(Ordering::Relaxed)
+                == other.strips_deduped.load(Ordering::Relaxed)
+            && self.bytes_saved.load(Ordering::Relaxed)
+                == other.bytes_saved.load(Ordering::Relaxed)
+    }
+}
+
+impl Eq for ShareStats {}
 
 impl ShareStats {
     pub fn summary(&self) -> String {
         format!(
             "prefix: hits={}p/{}t cow={} dedup={:.1}MB slotcopy={}s/{} published={} \
-             evicted={} spill={} rehydrated={} promote={}",
+             evicted={} spill={} rehydrated={} promote={} \
+             gather-dedup={}r/{:.1}MB",
             self.prefix_hit_pages,
             self.prefix_hit_tokens,
             self.cow_copies,
@@ -126,6 +177,8 @@ impl ShareStats {
             self.pages_spilled,
             self.pages_rehydrated,
             self.pages_promoted,
+            self.strips_deduped.load(Ordering::Relaxed),
+            self.bytes_saved.load(Ordering::Relaxed) as f64 / 1e6,
         )
     }
 }

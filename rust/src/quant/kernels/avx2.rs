@@ -489,6 +489,78 @@ pub(crate) unsafe fn decode_tile_iso(
     full * 4
 }
 
+/// [`decode_tile_iso`] with an in-register f16 store: identical math
+/// (same registers, same op order) until the store transpose, where
+/// each vector's reconstructed 4-float block converts via `vcvtps2ph`
+/// with round-to-nearest-even — bit-identical to
+/// `util::f16::f32_to_f16_bits` (including NaN quieting and
+/// overflow-to-inf) — and stores as 8 bytes.
+#[target_feature(enable = "avx2,f16c")]
+pub(crate) unsafe fn decode_tile_iso_f16(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes_tile: &[u8],
+    n_codes: usize,
+    posts: &[f32],
+    out: &mut [u16],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(posts.len(), 8);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 8 * n_codes);
+    assert!(out.len() >= 7 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let levels = q.levels_padded();
+    let lo = _mm256_loadu_ps(levels.as_ptr());
+    let hi = _mm256_loadu_ps(levels.as_ptr().add(8));
+    let postv = _mm256_loadu_ps(posts.as_ptr());
+    let nc = n_codes as i32;
+    let rows = _mm256_setr_epi32(0, nc, 2 * nc, 3 * nc, 4 * nc, 5 * nc, 6 * nc, 7 * nc);
+    let base = codes_tile.as_ptr() as *const i32;
+    let outp = out.as_mut_ptr();
+    for b in 0..full {
+        let vidx = _mm256_add_epi32(rows, _mm256_set1_epi32((4 * b) as i32));
+        let dw = _mm256_i32gather_epi32::<1>(base, vidx);
+        let (iw, ix, iy, iz) = unpack_code_dwords(dw);
+        let yq = Q8 {
+            w: lookup16(lo, hi, iw),
+            x: lookup16(lo, hi, ix),
+            y: lookup16(lo, hi, iy),
+            z: lookup16(lo, hi, iz),
+        };
+        let lc = splat_quat(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b, true);
+        let mut r = hamilton8(lc, yq);
+        if use_right {
+            let rp = splat_quat(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b, false);
+            r = hamilton8(r, rp);
+        }
+        let o = Q8 {
+            w: mul(r.w, postv),
+            x: mul(r.x, postv),
+            y: mul(r.y, postv),
+            z: mul(r.z, postv),
+        };
+        // p_i holds vector i's block (low 128) and vector i+4's (high);
+        // one cvtps2ph converts both, the halves store separately
+        let (p0, p1, p2, p3) = soa_to_quads(o);
+        let col = 4 * b;
+        for (i, p) in [p0, p1, p2, p3].into_iter().enumerate() {
+            let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(p);
+            _mm_storel_epi64(outp.add(i * d + col) as *mut __m128i, h);
+            _mm_storel_epi64(
+                outp.add((i + 4) * d + col) as *mut __m128i,
+                _mm_srli_si128::<8>(h),
+            );
+        }
+    }
+    full * 4
+}
+
 /// Tile encode: 8 vectors' rows at `x[v * d ..]` with per-vector `pre`
 /// factors; code rows written to `codes_tile[v * n_codes ..]`.
 #[target_feature(enable = "avx2")]
@@ -621,4 +693,150 @@ pub(super) unsafe fn unpack2_prefix(data: &[u8], n: usize, out: &mut [u8]) -> us
         }
     }
     chunks * 64
+}
+
+// ---------------------------------------------------------------------
+// Rotor3D baseline kernels (OddIntermediate only): 8 3-blocks per
+// iteration in SoA lanes — the "3 blocks in 4 lanes" padding problem
+// becomes a clean 3-register SoA shape once blocks go one-per-lane.
+// ---------------------------------------------------------------------
+
+/// Vertical `Rotor::apply` with the exact left-to-right association of
+/// the scalar odd-intermediate sandwich (`math::rotor3::Rotor::apply`).
+/// For `apply_inv`, pass the bivector components negated (`reverse()`
+/// is an exact sign flip).
+#[inline(always)]
+unsafe fn rotor_apply8(
+    s: __m256,
+    b12: __m256,
+    b13: __m256,
+    b23: __m256,
+    v1: __m256,
+    v2: __m256,
+    v3: __m256,
+) -> (__m256, __m256, __m256) {
+    let o1 = add(add(mul(s, v1), mul(b12, v2)), mul(b13, v3));
+    let o2 = add(sub(mul(s, v2), mul(b12, v1)), mul(b23, v3));
+    let o3 = sub(sub(mul(s, v3), mul(b13, v1)), mul(b23, v2));
+    let o123 = add(sub(mul(b23, v1), mul(b13, v2)), mul(b12, v3));
+    let r1 = add(add(add(mul(o1, s), mul(o2, b12)), mul(o3, b13)), mul(o123, b23));
+    let r2 = add(sub(sub(mul(o2, s), mul(o1, b12)), mul(o123, b13)), mul(o3, b23));
+    let r3 = sub(sub(add(mul(o3, s), mul(o123, b12)), mul(o1, b13)), mul(o2, b23));
+    (r1, r2, r3)
+}
+
+/// Rotor3D rotate→quantize of the leading `8⌊(d/3)/8⌋` 3-blocks of one
+/// vector; returns codes written.  The `d % 3` tail is always scalar
+/// (it uses the separate k=2 tail quantizer).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn encode_rotor(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pre: f32,
+    codes: &mut [u8],
+) -> usize {
+    let nfull = d / 3;
+    let nsimd = nfull - nfull % 8;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(x.len() >= nsimd * 3);
+    assert!(codes.len() >= nsimd * 3);
+    assert!(soa.rs.len() >= nsimd);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = _mm256_set1_ps(pre);
+    for b0 in (0..nsimd).step_by(8) {
+        // stack-buffer deinterleave of 8 consecutive 3-blocks
+        let mut v1b = [0.0f32; 8];
+        let mut v2b = [0.0f32; 8];
+        let mut v3b = [0.0f32; 8];
+        for k in 0..8 {
+            let p = (b0 + k) * 3;
+            v1b[k] = x[p];
+            v2b[k] = x[p + 1];
+            v3b[k] = x[p + 2];
+        }
+        let v1 = mul(_mm256_loadu_ps(v1b.as_ptr()), prev);
+        let v2 = mul(_mm256_loadu_ps(v2b.as_ptr()), prev);
+        let v3 = mul(_mm256_loadu_ps(v3b.as_ptr()), prev);
+        let s = _mm256_loadu_ps(soa.rs.as_ptr().add(b0));
+        let b12 = _mm256_loadu_ps(soa.r12.as_ptr().add(b0));
+        let b13 = _mm256_loadu_ps(soa.r13.as_ptr().add(b0));
+        let b23 = _mm256_loadu_ps(soa.r23.as_ptr().add(b0));
+        let (r1, r2, r3) = rotor_apply8(s, b12, b13, b23, v1, v2, v3);
+        let mut c1 = [0i32; 8];
+        let mut c2 = [0i32; 8];
+        let mut c3 = [0i32; 8];
+        _mm256_storeu_si256(c1.as_mut_ptr() as *mut __m256i, encode_cmp(r1, bounds, nb));
+        _mm256_storeu_si256(c2.as_mut_ptr() as *mut __m256i, encode_cmp(r2, bounds, nb));
+        _mm256_storeu_si256(c3.as_mut_ptr() as *mut __m256i, encode_cmp(r3, bounds, nb));
+        for k in 0..8 {
+            let p = (b0 + k) * 3;
+            codes[p] = c1[k] as u8;
+            codes[p + 1] = c2[k] as u8;
+            codes[p + 2] = c3[k] as u8;
+        }
+    }
+    nsimd * 3
+}
+
+/// Rotor3D dequantize→unrotate of the leading `8⌊(d/3)/8⌋` 3-blocks;
+/// returns codes consumed.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_rotor(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes: &[u8],
+    post: f32,
+    out: &mut [f32],
+) -> usize {
+    let nfull = d / 3;
+    let nsimd = nfull - nfull % 8;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(codes.len() >= nsimd * 3);
+    assert!(out.len() >= nsimd * 3);
+    assert!(soa.rs.len() >= nsimd);
+    let levels = q.levels_padded();
+    let lo = _mm256_loadu_ps(levels.as_ptr());
+    let hi = _mm256_loadu_ps(levels.as_ptr().add(8));
+    let postv = _mm256_set1_ps(post);
+    for b0 in (0..nsimd).step_by(8) {
+        let mut i1 = [0i32; 8];
+        let mut i2 = [0i32; 8];
+        let mut i3 = [0i32; 8];
+        for k in 0..8 {
+            let p = (b0 + k) * 3;
+            i1[k] = codes[p] as i32;
+            i2[k] = codes[p + 1] as i32;
+            i3[k] = codes[p + 2] as i32;
+        }
+        let y1 = lookup16(lo, hi, _mm256_loadu_si256(i1.as_ptr() as *const __m256i));
+        let y2 = lookup16(lo, hi, _mm256_loadu_si256(i2.as_ptr() as *const __m256i));
+        let y3 = lookup16(lo, hi, _mm256_loadu_si256(i3.as_ptr() as *const __m256i));
+        // apply_inv = reverse().apply(): exact sign flip of the bivector
+        let s = _mm256_loadu_ps(soa.rs.as_ptr().add(b0));
+        let b12 = neg(_mm256_loadu_ps(soa.r12.as_ptr().add(b0)));
+        let b13 = neg(_mm256_loadu_ps(soa.r13.as_ptr().add(b0)));
+        let b23 = neg(_mm256_loadu_ps(soa.r23.as_ptr().add(b0)));
+        let (r1, r2, r3) = rotor_apply8(s, b12, b13, b23, y1, y2, y3);
+        let mut o1 = [0.0f32; 8];
+        let mut o2 = [0.0f32; 8];
+        let mut o3 = [0.0f32; 8];
+        _mm256_storeu_ps(o1.as_mut_ptr(), mul(r1, postv));
+        _mm256_storeu_ps(o2.as_mut_ptr(), mul(r2, postv));
+        _mm256_storeu_ps(o3.as_mut_ptr(), mul(r3, postv));
+        for k in 0..8 {
+            let p = (b0 + k) * 3;
+            out[p] = o1[k];
+            out[p + 1] = o2[k];
+            out[p + 2] = o3[k];
+        }
+    }
+    nsimd * 3
 }

@@ -1,0 +1,307 @@
+//! AVX-512 stage-1 kernels (x86_64) — the 16-lane generalization of the
+//! AVX2 block-major tile kernels.
+//!
+//! Only the decode tile is implemented natively at 512-bit width: it is
+//! the KV-gather hot loop, and 16 vectors per tile halves the number of
+//! per-block iterations while the ≤16-entry level table now fits a
+//! *single* `vpermps`-class register (`_mm512_permutexvar_ps` replaces
+//! AVX2's two-register permute + blend).  Everything else — the
+//! single-vector kernels, planar pairs, packed-code expansion, and the
+//! encode tile (two 8-wide halves) — delegates to the AVX2 kernels:
+//! [`super::KernelBackend::Avx512`] only resolves when *both* `avx512f`
+//! and `avx2` were runtime-detected, so the delegation is always sound.
+//!
+//! The bit-exactness contract from the `kernels` module docs applies
+//! unchanged: exact mul/add/sub (no FMA), the scalar operation order in
+//! `hamilton16`, rank-count encode (delegated), table-select decode.
+//! The f16 store variant converts in-register with `vcvtps2ph`
+//! round-to-nearest-even, which is bit-identical to the software
+//! `util::f16::f32_to_f16_bits` conversion (including NaN quieting and
+//! overflow-to-inf), so the f16 gather output equals converting the f32
+//! gather output elementwise.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::arch::x86_64::*;
+
+use super::{avx2, SoaBank};
+use crate::quant::scalar::ScalarQuantizer;
+
+#[inline(always)]
+unsafe fn mul(a: __m512, b: __m512) -> __m512 {
+    _mm512_mul_ps(a, b)
+}
+
+#[inline(always)]
+unsafe fn add(a: __m512, b: __m512) -> __m512 {
+    _mm512_add_ps(a, b)
+}
+
+#[inline(always)]
+unsafe fn sub(a: __m512, b: __m512) -> __m512 {
+    _mm512_sub_ps(a, b)
+}
+
+/// 16 independent quaternions, one per lane, in SoA registers.
+#[derive(Clone, Copy)]
+struct Q16 {
+    w: __m512,
+    x: __m512,
+    y: __m512,
+    z: __m512,
+}
+
+/// Vertical Hamilton product with the *exact* left-to-right operation
+/// order of `math::quaternion::hamilton` (bit-exactness contract).
+#[inline(always)]
+unsafe fn hamilton16(a: Q16, b: Q16) -> Q16 {
+    Q16 {
+        w: sub(sub(sub(mul(a.w, b.w), mul(a.x, b.x)), mul(a.y, b.y)), mul(a.z, b.z)),
+        x: sub(add(add(mul(a.w, b.x), mul(a.x, b.w)), mul(a.y, b.z)), mul(a.z, b.y)),
+        y: add(add(sub(mul(a.w, b.y), mul(a.x, b.z)), mul(a.y, b.w)), mul(a.z, b.x)),
+        z: add(sub(add(mul(a.w, b.z), mul(a.x, b.y)), mul(a.y, b.x)), mul(a.z, b.w)),
+    }
+}
+
+/// `decode1` as a full-table in-register select: the 16-entry padded
+/// level table lives in one `__m512`, and `vpermps` (zmm) indexes it
+/// directly — no lo/hi split, no blend (codes are < 16).
+#[inline(always)]
+unsafe fn lookup16_full(table: __m512, idx: __m512i) -> __m512 {
+    _mm512_permutexvar_ps(idx, table)
+}
+
+/// Split packed code dwords (one vector per lane, four packed code
+/// bytes per dword) into four index registers.
+#[inline(always)]
+unsafe fn unpack_code_dwords16(dw: __m512i) -> (__m512i, __m512i, __m512i, __m512i) {
+    let m = _mm512_set1_epi32(0xFF);
+    (
+        _mm512_and_si512(dw, m),
+        _mm512_and_si512(_mm512_srli_epi32::<8>(dw), m),
+        _mm512_and_si512(_mm512_srli_epi32::<16>(dw), m),
+        _mm512_srli_epi32::<24>(dw),
+    )
+}
+
+/// Broadcast quaternion `b`, conjugated when `conj`.
+#[inline(always)]
+unsafe fn splat_quat16(w: &[f32], x: &[f32], y: &[f32], z: &[f32], b: usize, conj: bool) -> Q16 {
+    let s = if conj { -1.0f32 } else { 1.0 };
+    Q16 {
+        w: _mm512_set1_ps(w[b]),
+        x: _mm512_set1_ps(s * x[b]),
+        y: _mm512_set1_ps(s * y[b]),
+        z: _mm512_set1_ps(s * z[b]),
+    }
+}
+
+/// SoA -> four registers where 128-bit lane `j` of register `i` holds
+/// vector `4j + i`'s contiguous (w,x,y,z) block — the 16-wide analogue
+/// of the AVX2 `soa_to_quads` (unpack + shuffle act lane-wise on zmm,
+/// so the 256-bit derivation applies per 128-bit lane).
+#[inline(always)]
+unsafe fn soa_to_quads16(v: Q16) -> (__m512, __m512, __m512, __m512) {
+    let t0 = _mm512_unpacklo_ps(v.w, v.x); // lane j: [w4j x4j w4j+1 x4j+1]
+    let t1 = _mm512_unpackhi_ps(v.w, v.x); // lane j: [w4j+2 x4j+2 w4j+3 x4j+3]
+    let t2 = _mm512_unpacklo_ps(v.y, v.z);
+    let t3 = _mm512_unpackhi_ps(v.y, v.z);
+    (
+        _mm512_shuffle_ps::<0b01_00_01_00>(t0, t2), // lane j: vector 4j
+        _mm512_shuffle_ps::<0b11_10_11_10>(t0, t2), // lane j: vector 4j+1
+        _mm512_shuffle_ps::<0b01_00_01_00>(t1, t3), // lane j: vector 4j+2
+        _mm512_shuffle_ps::<0b11_10_11_10>(t1, t3), // lane j: vector 4j+3
+    )
+}
+
+/// Tile decode: 16 vectors' unpacked code rows (row `v` at
+/// `codes_tile[v * n_codes ..]`), per-vector `post` factors, output
+/// rows at `out[v * d ..]`.  Covers all `d/4` full blocks; returns the
+/// codes consumed per vector.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn decode_tile_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes_tile: &[u8],
+    n_codes: usize,
+    posts: &[f32],
+    out: &mut [f32],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(posts.len(), 16);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 16 * n_codes);
+    assert!(out.len() >= 15 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let table = _mm512_loadu_ps(q.levels_padded().as_ptr());
+    let postv = _mm512_loadu_ps(posts.as_ptr());
+    let outp = out.as_mut_ptr();
+    for b in 0..full {
+        let col = 4 * b;
+        let o = decode_block16(soa, table, postv, codes_tile, n_codes, col, use_right, b);
+        let (q0, q1, q2, q3) = soa_to_quads16(o);
+        // 128-bit lane j of q_i is vector (4j + i)'s reconstructed block
+        _mm_storeu_ps(outp.add(col), _mm512_extractf32x4_ps::<0>(q0));
+        _mm_storeu_ps(outp.add(d + col), _mm512_extractf32x4_ps::<0>(q1));
+        _mm_storeu_ps(outp.add(2 * d + col), _mm512_extractf32x4_ps::<0>(q2));
+        _mm_storeu_ps(outp.add(3 * d + col), _mm512_extractf32x4_ps::<0>(q3));
+        _mm_storeu_ps(outp.add(4 * d + col), _mm512_extractf32x4_ps::<1>(q0));
+        _mm_storeu_ps(outp.add(5 * d + col), _mm512_extractf32x4_ps::<1>(q1));
+        _mm_storeu_ps(outp.add(6 * d + col), _mm512_extractf32x4_ps::<1>(q2));
+        _mm_storeu_ps(outp.add(7 * d + col), _mm512_extractf32x4_ps::<1>(q3));
+        _mm_storeu_ps(outp.add(8 * d + col), _mm512_extractf32x4_ps::<2>(q0));
+        _mm_storeu_ps(outp.add(9 * d + col), _mm512_extractf32x4_ps::<2>(q1));
+        _mm_storeu_ps(outp.add(10 * d + col), _mm512_extractf32x4_ps::<2>(q2));
+        _mm_storeu_ps(outp.add(11 * d + col), _mm512_extractf32x4_ps::<2>(q3));
+        _mm_storeu_ps(outp.add(12 * d + col), _mm512_extractf32x4_ps::<3>(q0));
+        _mm_storeu_ps(outp.add(13 * d + col), _mm512_extractf32x4_ps::<3>(q1));
+        _mm_storeu_ps(outp.add(14 * d + col), _mm512_extractf32x4_ps::<3>(q2));
+        _mm_storeu_ps(outp.add(15 * d + col), _mm512_extractf32x4_ps::<3>(q3));
+    }
+    full * 4
+}
+
+/// [`decode_tile_iso`] with an in-register f16 store: each vector's
+/// reconstructed 4-float block converts via `vcvtps2ph` (RNE — bit
+/// identical to `util::f16::f32_to_f16_bits`) and stores as 8 bytes.
+#[target_feature(enable = "avx512f,f16c")]
+pub(super) unsafe fn decode_tile_iso_f16(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes_tile: &[u8],
+    n_codes: usize,
+    posts: &[f32],
+    out: &mut [u16],
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(posts.len(), 16);
+    assert!(n_codes >= full * 4);
+    assert!(codes_tile.len() >= 16 * n_codes);
+    assert!(out.len() >= 15 * d + full * 4);
+    assert!(soa.lw.len() >= full);
+    let table = _mm512_loadu_ps(q.levels_padded().as_ptr());
+    let postv = _mm512_loadu_ps(posts.as_ptr());
+    let outp = out.as_mut_ptr();
+    for b in 0..full {
+        let col = 4 * b;
+        let o = decode_block16(soa, table, postv, codes_tile, n_codes, col, use_right, b);
+        let (q0, q1, q2, q3) = soa_to_quads16(o);
+        // convert each 128-bit lane (one vector's block) to 4×f16 and
+        // store the low 64 bits of the conversion
+        macro_rules! store_f16 {
+            ($qi:expr, $lane:literal, $row:expr) => {
+                _mm_storel_epi64(
+                    outp.add($row * d + col) as *mut __m128i,
+                    _mm_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(_mm512_extractf32x4_ps::<$lane>(
+                        $qi,
+                    )),
+                );
+            };
+        }
+        store_f16!(q0, 0, 0);
+        store_f16!(q1, 0, 1);
+        store_f16!(q2, 0, 2);
+        store_f16!(q3, 0, 3);
+        store_f16!(q0, 1, 4);
+        store_f16!(q1, 1, 5);
+        store_f16!(q2, 1, 6);
+        store_f16!(q3, 1, 7);
+        store_f16!(q0, 2, 8);
+        store_f16!(q1, 2, 9);
+        store_f16!(q2, 2, 10);
+        store_f16!(q3, 2, 11);
+        store_f16!(q0, 3, 12);
+        store_f16!(q1, 3, 13);
+        store_f16!(q2, 3, 14);
+        store_f16!(q3, 3, 15);
+    }
+    full * 4
+}
+
+/// Shared decode body of one block across 16 vectors: gather the code
+/// dwords, table-select the levels, run the inverse sandwich, and scale
+/// by the per-vector post factors.
+#[inline(always)]
+unsafe fn decode_block16(
+    soa: &SoaBank,
+    table: __m512,
+    postv: __m512,
+    codes_tile: &[u8],
+    n_codes: usize,
+    col: usize,
+    use_right: bool,
+    b: usize,
+) -> Q16 {
+    // lane v = vector v's four packed code bytes for block b (scalar
+    // stack-buffer gather: the rows are short and stride n_codes)
+    let mut rows = [0i32; 16];
+    for (v, r) in rows.iter_mut().enumerate() {
+        let off = v * n_codes + col;
+        *r = i32::from_le_bytes([
+            codes_tile[off],
+            codes_tile[off + 1],
+            codes_tile[off + 2],
+            codes_tile[off + 3],
+        ]);
+    }
+    let dw = _mm512_loadu_epi32(rows.as_ptr());
+    let (iw, ix, iy, iz) = unpack_code_dwords16(dw);
+    let yq = Q16 {
+        w: lookup16_full(table, iw),
+        x: lookup16_full(table, ix),
+        y: lookup16_full(table, iy),
+        z: lookup16_full(table, iz),
+    };
+    let lc = splat_quat16(&soa.lw, &soa.lx, &soa.ly, &soa.lz, b, true);
+    let mut r = hamilton16(lc, yq);
+    if use_right {
+        let rp = splat_quat16(&soa.rw, &soa.rx, &soa.ry, &soa.rz, b, false);
+        r = hamilton16(r, rp);
+    }
+    Q16 {
+        w: mul(r.w, postv),
+        x: mul(r.x, postv),
+        y: mul(r.y, postv),
+        z: mul(r.z, postv),
+    }
+}
+
+/// Tile encode at width 16: two 8-wide AVX2 tile encodes over the split
+/// halves (encode is off the gather hot path; the 16-lane tile's win is
+/// decode-side).  Sound because `Resolved::Avx512` implies the `avx2`
+/// runtime probe also succeeded.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn encode_tile_iso(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pres: &[f32],
+    codes_tile: &mut [u8],
+    n_codes: usize,
+    use_right: bool,
+) -> usize {
+    let full = d / 4;
+    if full == 0 {
+        return 0;
+    }
+    assert_eq!(pres.len(), 16);
+    assert!(codes_tile.len() >= 16 * n_codes);
+    assert!(x.len() >= 15 * d + full * 4);
+    let (xa, xb) = x.split_at(8 * d);
+    let (ca, cb) = codes_tile.split_at_mut(8 * n_codes);
+    let a = avx2::encode_tile_iso(soa, q, d, xa, &pres[..8], ca, n_codes, use_right);
+    let b = avx2::encode_tile_iso(soa, q, d, xb, &pres[8..], cb, n_codes, use_right);
+    debug_assert_eq!(a, b);
+    a
+}

@@ -59,15 +59,28 @@
 //! the `unsafe` surface is exactly "the CPU executes this instruction
 //! set", never memory safety.
 //!
-//! Variants with non-power-of-two blocks (`Rotor3D`, `Dense`,
-//! `Grouped8D`) always take the scalar reference path regardless of the
-//! configured backend.
+//! Variants with non-power-of-two blocks (`Dense`, `Grouped8D`) always
+//! take the scalar reference path regardless of the configured backend.
+//! `Rotor3D` runs scalar under the default `RotorImpl::Multivector`
+//! (which deliberately models the baseline's 8-component expansion
+//! cost) but has a 3-blocks-per-iteration SIMD path under
+//! `RotorImpl::OddIntermediate`, so Table-2 speedup comparisons stay
+//! honest as the iso paths get faster.
+//!
+//! `Avx512` adds a 16-vector block-major tile (`quant::kernels::avx512`)
+//! whose level-table lookup is a single full-width register permute; its
+//! single-vector kernels and encode tile delegate to the AVX2
+//! implementations, which is sound because `Avx512` only resolves when
+//! both `avx512f` and `avx2` pass the runtime probe.
 
 use crate::quant::params::{ParamBank, Variant};
+use crate::quant::pipeline::RotorImpl;
 use crate::quant::scalar::ScalarQuantizer;
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 
@@ -95,6 +108,8 @@ pub enum KernelBackend {
     Auto,
     /// AVX2 (x86_64, runtime-detected)
     Avx2,
+    /// AVX-512 (x86_64, runtime-detected; requires `avx512f` + `avx2`)
+    Avx512,
     /// NEON (aarch64, architecturally guaranteed)
     Neon,
 }
@@ -104,6 +119,7 @@ pub enum KernelBackend {
 pub enum Resolved {
     Scalar,
     Avx2,
+    Avx512,
     Neon,
 }
 
@@ -112,6 +128,7 @@ impl Resolved {
         match self {
             Resolved::Scalar => "scalar",
             Resolved::Avx2 => "avx2",
+            Resolved::Avx512 => "avx512",
             Resolved::Neon => "neon",
         }
     }
@@ -123,6 +140,7 @@ impl KernelBackend {
             KernelBackend::Scalar => "scalar",
             KernelBackend::Auto => "auto",
             KernelBackend::Avx2 => "avx2",
+            KernelBackend::Avx512 => "avx512",
             KernelBackend::Neon => "neon",
         }
     }
@@ -132,6 +150,7 @@ impl KernelBackend {
             "scalar" => Some(KernelBackend::Scalar),
             "auto" => Some(KernelBackend::Auto),
             "avx2" => Some(KernelBackend::Avx2),
+            "avx512" => Some(KernelBackend::Avx512),
             "neon" => Some(KernelBackend::Neon),
             _ => None,
         }
@@ -151,7 +170,7 @@ impl KernelBackend {
                 None => {
                     eprintln!(
                         "isoquant: ignoring invalid ISOQUANT_KERNEL={s:?} \
-                         (expected scalar|auto|avx2|neon); using auto"
+                         (expected scalar|auto|avx2|neon|avx512); using auto"
                     );
                     KernelBackend::Auto
                 }
@@ -174,6 +193,17 @@ impl KernelBackend {
                 }
                 Resolved::Scalar
             }
+            KernelBackend::Avx512 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!("avx2")
+                    {
+                        return Resolved::Avx512;
+                    }
+                }
+                Resolved::Scalar
+            }
             KernelBackend::Neon => {
                 #[cfg(target_arch = "aarch64")]
                 {
@@ -190,6 +220,9 @@ impl KernelBackend {
         match self {
             KernelBackend::Avx2 if self.resolve() != Resolved::Avx2 => Err(
                 "kernel_backend = \"avx2\" requested but this host has no AVX2".to_string(),
+            ),
+            KernelBackend::Avx512 if self.resolve() != Resolved::Avx512 => Err(
+                "kernel_backend = \"avx512\" requested but this host has no AVX-512".to_string(),
             ),
             KernelBackend::Neon if self.resolve() != Resolved::Neon => Err(
                 "kernel_backend = \"neon\" requested but this host is not aarch64".to_string(),
@@ -210,6 +243,11 @@ impl std::fmt::Display for KernelBackend {
 fn host_best() -> Resolved {
     #[cfg(target_arch = "x86_64")]
     {
+        if std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx2")
+        {
+            return Resolved::Avx512;
+        }
         if std::arch::is_x86_feature_detected!("avx2") {
             return Resolved::Avx2;
         }
@@ -240,10 +278,15 @@ pub struct SoaBank {
     /// planar cos/sin per pair (Planar2D)
     pub cs: Vec<f32>,
     pub sn: Vec<f32>,
+    /// rotor components per 3D block (Rotor3D under OddIntermediate)
+    pub rs: Vec<f32>,
+    pub r12: Vec<f32>,
+    pub r13: Vec<f32>,
+    pub r23: Vec<f32>,
 }
 
 impl SoaBank {
-    fn build(bank: &ParamBank, variant: Variant) -> SoaBank {
+    fn build(bank: &ParamBank, variant: Variant, rotor_odd: bool) -> SoaBank {
         let mut soa = SoaBank::default();
         match variant {
             Variant::IsoFull => {
@@ -256,6 +299,17 @@ impl SoaBank {
             Variant::Planar2D => {
                 soa.cs = bank.cos_sin.iter().map(|&(c, _)| c).collect();
                 soa.sn = bank.cos_sin.iter().map(|&(_, s)| s).collect();
+            }
+            Variant::Rotor3D if rotor_odd => {
+                // same derivation as Stage1's precomputed rotors, so the
+                // SIMD path sees bit-identical components
+                for &q in &bank.q_l {
+                    let r = crate::math::rotor3::Rotor::from_quaternion(q);
+                    soa.rs.push(r.s);
+                    soa.r12.push(r.b12);
+                    soa.r13.push(r.b13);
+                    soa.r23.push(r.b23);
+                }
             }
             _ => {}
         }
@@ -278,17 +332,38 @@ fn deinterleave(qs: &[[f32; 4]], w: &mut Vec<f32>, x: &mut Vec<f32>, y: &mut Vec
 pub struct KernelState {
     pub resolved: Resolved,
     soa: SoaBank,
+    /// F16C available (x86_64) — gates the in-register f16 store tiles
+    pub has_f16c: bool,
+    /// Rotor3D is running the OddIntermediate rotor implementation, the
+    /// only rotor form with a SIMD path (Multivector stays scalar by
+    /// design — it models the baseline's 8-component expansion cost)
+    pub rotor_odd: bool,
 }
 
 impl KernelState {
-    pub fn build(requested: KernelBackend, bank: &ParamBank, variant: Variant) -> KernelState {
+    pub fn build(
+        requested: KernelBackend,
+        bank: &ParamBank,
+        variant: Variant,
+        rotor_impl: RotorImpl,
+    ) -> KernelState {
         let resolved = requested.resolve();
+        let rotor_odd = variant == Variant::Rotor3D && rotor_impl == RotorImpl::OddIntermediate;
         let soa = if resolved == Resolved::Scalar {
             SoaBank::default()
         } else {
-            SoaBank::build(bank, variant)
+            SoaBank::build(bank, variant, rotor_odd)
         };
-        KernelState { resolved, soa }
+        #[cfg(target_arch = "x86_64")]
+        let has_f16c = std::arch::is_x86_feature_detected!("f16c");
+        #[cfg(not(target_arch = "x86_64"))]
+        let has_f16c = false;
+        KernelState {
+            resolved,
+            soa,
+            has_f16c,
+            rotor_odd,
+        }
     }
 }
 
@@ -317,12 +392,17 @@ pub(crate) fn encode_prefix(
     match ks.resolved {
         Resolved::Scalar => 0,
         #[cfg(target_arch = "x86_64")]
-        Resolved::Avx2 => match variant {
-            // SAFETY: Resolved::Avx2 implies is_x86_feature_detected!("avx2")
-            // succeeded (see module docs); bounds are asserted inside.
+        Resolved::Avx2 | Resolved::Avx512 => match variant {
+            // SAFETY: Resolved::Avx2/Avx512 implies
+            // is_x86_feature_detected!("avx2") succeeded (see module
+            // docs); bounds are asserted inside.  The single-vector
+            // kernels are AVX2-width under both backends.
             Variant::IsoFull => unsafe { avx2::encode_iso(&ks.soa, q, d, x, pre, codes, true) },
             Variant::IsoFast => unsafe { avx2::encode_iso(&ks.soa, q, d, x, pre, codes, false) },
             Variant::Planar2D => unsafe { avx2::encode_planar(&ks.soa, q, d, x, pre, codes) },
+            Variant::Rotor3D if ks.rotor_odd => unsafe {
+                avx2::encode_rotor(&ks.soa, q, d, x, pre, codes)
+            },
             _ => 0,
         },
         #[cfg(target_arch = "aarch64")]
@@ -331,6 +411,9 @@ pub(crate) fn encode_prefix(
             Variant::IsoFull => unsafe { neon::encode_iso(&ks.soa, q, d, x, pre, codes, true) },
             Variant::IsoFast => unsafe { neon::encode_iso(&ks.soa, q, d, x, pre, codes, false) },
             Variant::Planar2D => unsafe { neon::encode_planar(&ks.soa, q, d, x, pre, codes) },
+            Variant::Rotor3D if ks.rotor_odd => unsafe {
+                neon::encode_rotor(&ks.soa, q, d, x, pre, codes)
+            },
             _ => 0,
         },
         #[allow(unreachable_patterns)]
@@ -352,11 +435,14 @@ pub(crate) fn decode_prefix(
     match ks.resolved {
         Resolved::Scalar => 0,
         #[cfg(target_arch = "x86_64")]
-        Resolved::Avx2 => match variant {
+        Resolved::Avx2 | Resolved::Avx512 => match variant {
             // SAFETY: see `encode_prefix`.
             Variant::IsoFull => unsafe { avx2::decode_iso(&ks.soa, q, d, codes, post, out, true) },
             Variant::IsoFast => unsafe { avx2::decode_iso(&ks.soa, q, d, codes, post, out, false) },
             Variant::Planar2D => unsafe { avx2::decode_planar(&ks.soa, q, d, codes, post, out) },
+            Variant::Rotor3D if ks.rotor_odd => unsafe {
+                avx2::decode_rotor(&ks.soa, q, d, codes, post, out)
+            },
             _ => 0,
         },
         #[cfg(target_arch = "aarch64")]
@@ -365,6 +451,9 @@ pub(crate) fn decode_prefix(
             Variant::IsoFull => unsafe { neon::decode_iso(&ks.soa, q, d, codes, post, out, true) },
             Variant::IsoFast => unsafe { neon::decode_iso(&ks.soa, q, d, codes, post, out, false) },
             Variant::Planar2D => unsafe { neon::decode_planar(&ks.soa, q, d, codes, post, out) },
+            Variant::Rotor3D if ks.rotor_odd => unsafe {
+                neon::decode_rotor(&ks.soa, q, d, codes, post, out)
+            },
             _ => 0,
         },
         #[allow(unreachable_patterns)]
@@ -382,6 +471,7 @@ pub(crate) fn tile_width(ks: &KernelState, variant: Variant, d: usize) -> usize 
     match ks.resolved {
         Resolved::Scalar => 0,
         Resolved::Avx2 => 8,
+        Resolved::Avx512 => 16,
         Resolved::Neon => 4,
     }
 }
@@ -414,6 +504,18 @@ pub(crate) fn decode_tile_prefix(
             },
             _ => 0,
         },
+        #[cfg(target_arch = "x86_64")]
+        Resolved::Avx512 => match variant {
+            // SAFETY: Resolved::Avx512 implies the avx512f probe
+            // succeeded (see module docs); bounds asserted inside.
+            Variant::IsoFull => unsafe {
+                avx512::decode_tile_iso(&ks.soa, q, d, codes_tile, n_codes, posts, out, true)
+            },
+            Variant::IsoFast => unsafe {
+                avx512::decode_tile_iso(&ks.soa, q, d, codes_tile, n_codes, posts, out, false)
+            },
+            _ => 0,
+        },
         #[cfg(target_arch = "aarch64")]
         Resolved::Neon => match variant {
             // SAFETY: see `encode_prefix`.
@@ -425,6 +527,54 @@ pub(crate) fn decode_tile_prefix(
             },
             _ => 0,
         },
+        #[allow(unreachable_patterns)]
+        _ => 0,
+    }
+}
+
+/// [`decode_tile_prefix`] with f16 output: each reconstructed value is
+/// converted in-register (round-to-nearest-even, bit-identical to
+/// `util::f16::f32_to_f16_bits`) before the store transpose.  Returns 0
+/// when this (backend, variant) has no f16 tile — the caller then
+/// decodes f32 and converts scalar-wise, which produces the same bits.
+#[allow(unused_variables)]
+pub(crate) fn decode_tile_prefix_f16(
+    ks: &KernelState,
+    variant: Variant,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes_tile: &[u8],
+    n_codes: usize,
+    posts: &[f32],
+    out: &mut [u16],
+) -> usize {
+    match ks.resolved {
+        Resolved::Scalar => 0,
+        #[cfg(target_arch = "x86_64")]
+        Resolved::Avx2 if ks.has_f16c => match variant {
+            // SAFETY: see `encode_prefix`; the f16c probe gates this arm.
+            Variant::IsoFull => unsafe {
+                avx2::decode_tile_iso_f16(&ks.soa, q, d, codes_tile, n_codes, posts, out, true)
+            },
+            Variant::IsoFast => unsafe {
+                avx2::decode_tile_iso_f16(&ks.soa, q, d, codes_tile, n_codes, posts, out, false)
+            },
+            _ => 0,
+        },
+        #[cfg(target_arch = "x86_64")]
+        Resolved::Avx512 if ks.has_f16c => match variant {
+            // SAFETY: avx512f + f16c probes both succeeded.
+            Variant::IsoFull => unsafe {
+                avx512::decode_tile_iso_f16(&ks.soa, q, d, codes_tile, n_codes, posts, out, true)
+            },
+            Variant::IsoFast => unsafe {
+                avx512::decode_tile_iso_f16(&ks.soa, q, d, codes_tile, n_codes, posts, out, false)
+            },
+            _ => 0,
+        },
+        // NEON fp16 conversion intrinsics are not yet stable, so
+        // aarch64 (and any x86 without F16C) takes the f32-then-convert
+        // fallback in the caller.
         #[allow(unreachable_patterns)]
         _ => 0,
     }
@@ -448,9 +598,9 @@ pub(crate) fn unpack_codes(ks: &KernelState, data: &[u8], bits: u8, n: usize, ou
     match ks.resolved {
         Resolved::Scalar => {}
         #[cfg(target_arch = "x86_64")]
-        Resolved::Avx2 => match bits {
-            // SAFETY: Resolved::Avx2 implies the runtime probe
-            // succeeded (see module docs); bounds asserted inside.
+        Resolved::Avx2 | Resolved::Avx512 => match bits {
+            // SAFETY: Resolved::Avx2/Avx512 implies the avx2 runtime
+            // probe succeeded (see module docs); bounds asserted inside.
             4 => done = unsafe { avx2::unpack4_prefix(data, n, out) },
             2 => done = unsafe { avx2::unpack2_prefix(data, n, out) },
             _ => {}
@@ -504,6 +654,18 @@ pub(crate) fn encode_tile_prefix(
             },
             _ => 0,
         },
+        #[cfg(target_arch = "x86_64")]
+        Resolved::Avx512 => match variant {
+            // SAFETY: see `encode_prefix` (the 16-wide encode tile runs
+            // as two AVX2 halves, so only the avx2 probe matters here).
+            Variant::IsoFull => unsafe {
+                avx512::encode_tile_iso(&ks.soa, q, d, x, pres, codes_tile, n_codes, true)
+            },
+            Variant::IsoFast => unsafe {
+                avx512::encode_tile_iso(&ks.soa, q, d, x, pres, codes_tile, n_codes, false)
+            },
+            _ => 0,
+        },
         #[cfg(target_arch = "aarch64")]
         Resolved::Neon => match variant {
             // SAFETY: see `encode_prefix`.
@@ -530,6 +692,7 @@ mod tests {
             KernelBackend::Scalar,
             KernelBackend::Auto,
             KernelBackend::Avx2,
+            KernelBackend::Avx512,
             KernelBackend::Neon,
         ] {
             assert_eq!(KernelBackend::parse(b.name()), Some(b));
@@ -562,7 +725,7 @@ mod tests {
         let bank = ParamBank::random(Variant::IsoFull, 64, 1);
         let mut rng = Rng::new(0x0DDC);
         for backend in [KernelBackend::Scalar, KernelBackend::Auto] {
-            let ks = KernelState::build(backend, &bank, Variant::IsoFull);
+            let ks = KernelState::build(backend, &bank, Variant::IsoFull, RotorImpl::Multivector);
             for bits in [2u8, 3, 4] {
                 for n in [0usize, 1, 7, 31, 32, 33, 63, 64, 65, 128, 257, 1000] {
                     let codes: Vec<u8> =
@@ -584,7 +747,7 @@ mod tests {
     #[test]
     fn soa_bank_shapes() {
         let bank = ParamBank::random(Variant::IsoFull, 128, 1);
-        let soa = SoaBank::build(&bank, Variant::IsoFull);
+        let soa = SoaBank::build(&bank, Variant::IsoFull, false);
         assert_eq!(soa.lw.len(), 32);
         assert_eq!(soa.rz.len(), 32);
         for (b, q) in bank.q_l.iter().enumerate() {
@@ -594,7 +757,7 @@ mod tests {
             assert_eq!(soa.lz[b], q[3]);
         }
         let p = ParamBank::random(Variant::Planar2D, 64, 2);
-        let soa = SoaBank::build(&p, Variant::Planar2D);
+        let soa = SoaBank::build(&p, Variant::Planar2D, false);
         assert_eq!(soa.cs.len(), 32);
         assert_eq!(soa.cs[3], p.cos_sin[3].0);
         assert_eq!(soa.sn[3], p.cos_sin[3].1);

@@ -544,3 +544,160 @@ pub(super) unsafe fn unpack2_prefix(data: &[u8], n: usize, out: &mut [u8]) -> us
     }
     chunks * 64
 }
+
+// ---------------------------------------------------------------------
+// Rotor3D baseline kernels (OddIntermediate only): 4 3-blocks per
+// iteration — `vld3q_f32`/`vst3q_f32` do the 3-wide SoA (de)interleave
+// in hardware, so the "3 blocks in 4 lanes" padding problem disappears.
+// ---------------------------------------------------------------------
+
+/// Vertical `Rotor::apply` with the exact left-to-right association of
+/// the scalar odd-intermediate sandwich (`math::rotor3::Rotor::apply`).
+/// For `apply_inv`, pass the bivector components negated (`reverse()`
+/// is an exact sign flip).
+#[inline(always)]
+unsafe fn rotor_apply4(
+    s: float32x4_t,
+    b12: float32x4_t,
+    b13: float32x4_t,
+    b23: float32x4_t,
+    v1: float32x4_t,
+    v2: float32x4_t,
+    v3: float32x4_t,
+) -> (float32x4_t, float32x4_t, float32x4_t) {
+    let o1 = vaddq_f32(
+        vaddq_f32(vmulq_f32(s, v1), vmulq_f32(b12, v2)),
+        vmulq_f32(b13, v3),
+    );
+    let o2 = vaddq_f32(
+        vsubq_f32(vmulq_f32(s, v2), vmulq_f32(b12, v1)),
+        vmulq_f32(b23, v3),
+    );
+    let o3 = vsubq_f32(
+        vsubq_f32(vmulq_f32(s, v3), vmulq_f32(b13, v1)),
+        vmulq_f32(b23, v2),
+    );
+    let o123 = vaddq_f32(
+        vsubq_f32(vmulq_f32(b23, v1), vmulq_f32(b13, v2)),
+        vmulq_f32(b12, v3),
+    );
+    let r1 = vaddq_f32(
+        vaddq_f32(
+            vaddq_f32(vmulq_f32(o1, s), vmulq_f32(o2, b12)),
+            vmulq_f32(o3, b13),
+        ),
+        vmulq_f32(o123, b23),
+    );
+    let r2 = vaddq_f32(
+        vsubq_f32(
+            vsubq_f32(vmulq_f32(o2, s), vmulq_f32(o1, b12)),
+            vmulq_f32(o123, b13),
+        ),
+        vmulq_f32(o3, b23),
+    );
+    let r3 = vsubq_f32(
+        vsubq_f32(
+            vaddq_f32(vmulq_f32(o3, s), vmulq_f32(o123, b12)),
+            vmulq_f32(o1, b13),
+        ),
+        vmulq_f32(o2, b23),
+    );
+    (r1, r2, r3)
+}
+
+/// Rotor3D rotate→quantize of the leading `4⌊(d/3)/4⌋` 3-blocks of one
+/// vector; returns codes written.  The `d % 3` tail is always scalar
+/// (it uses the separate k=2 tail quantizer).
+pub(crate) unsafe fn encode_rotor(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    x: &[f32],
+    pre: f32,
+    codes: &mut [u8],
+) -> usize {
+    let nfull = d / 3;
+    let nsimd = nfull - nfull % 4;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(x.len() >= nsimd * 3);
+    assert!(codes.len() >= nsimd * 3);
+    assert!(soa.rs.len() >= nsimd);
+    let bounds = q.bounds_padded();
+    let nb = q.n_levels() - 1;
+    let prev = vdupq_n_f32(pre);
+    for b0 in (0..nsimd).step_by(4) {
+        let raw = vld3q_f32(x.as_ptr().add(b0 * 3)); // hw 3-wide deinterleave
+        let v1 = vmulq_f32(raw.0, prev);
+        let v2 = vmulq_f32(raw.1, prev);
+        let v3 = vmulq_f32(raw.2, prev);
+        let s = vld1q_f32(soa.rs.as_ptr().add(b0));
+        let b12 = vld1q_f32(soa.r12.as_ptr().add(b0));
+        let b13 = vld1q_f32(soa.r13.as_ptr().add(b0));
+        let b23 = vld1q_f32(soa.r23.as_ptr().add(b0));
+        let (r1, r2, r3) = rotor_apply4(s, b12, b13, b23, v1, v2, v3);
+        let mut c1 = [0u32; 4];
+        let mut c2 = [0u32; 4];
+        let mut c3 = [0u32; 4];
+        vst1q_u32(c1.as_mut_ptr(), encode_cmp4(r1, bounds, nb));
+        vst1q_u32(c2.as_mut_ptr(), encode_cmp4(r2, bounds, nb));
+        vst1q_u32(c3.as_mut_ptr(), encode_cmp4(r3, bounds, nb));
+        for k in 0..4 {
+            let p = (b0 + k) * 3;
+            codes[p] = c1[k] as u8;
+            codes[p + 1] = c2[k] as u8;
+            codes[p + 2] = c3[k] as u8;
+        }
+    }
+    nsimd * 3
+}
+
+/// Rotor3D dequantize→unrotate of the leading `4⌊(d/3)/4⌋` 3-blocks;
+/// returns codes consumed.
+pub(crate) unsafe fn decode_rotor(
+    soa: &SoaBank,
+    q: &ScalarQuantizer,
+    d: usize,
+    codes: &[u8],
+    post: f32,
+    out: &mut [f32],
+) -> usize {
+    let nfull = d / 3;
+    let nsimd = nfull - nfull % 4;
+    if nsimd == 0 {
+        return 0;
+    }
+    assert!(codes.len() >= nsimd * 3);
+    assert!(out.len() >= nsimd * 3);
+    assert!(soa.rs.len() >= nsimd);
+    let table = level_table(q.levels_padded());
+    let postv = vdupq_n_f32(post);
+    for b0 in (0..nsimd).step_by(4) {
+        let mut i1 = [0u32; 4];
+        let mut i2 = [0u32; 4];
+        let mut i3 = [0u32; 4];
+        for k in 0..4 {
+            let p = (b0 + k) * 3;
+            i1[k] = codes[p] as u32;
+            i2[k] = codes[p + 1] as u32;
+            i3[k] = codes[p + 2] as u32;
+        }
+        let y1 = lookup16_4(table, vld1q_u32(i1.as_ptr()));
+        let y2 = lookup16_4(table, vld1q_u32(i2.as_ptr()));
+        let y3 = lookup16_4(table, vld1q_u32(i3.as_ptr()));
+        // apply_inv = reverse().apply(): exact sign flip of the bivector
+        let s = vld1q_f32(soa.rs.as_ptr().add(b0));
+        let b12 = vnegq_f32(vld1q_f32(soa.r12.as_ptr().add(b0)));
+        let b13 = vnegq_f32(vld1q_f32(soa.r13.as_ptr().add(b0)));
+        let b23 = vnegq_f32(vld1q_f32(soa.r23.as_ptr().add(b0)));
+        let (r1, r2, r3) = rotor_apply4(s, b12, b13, b23, y1, y2, y3);
+        let o = float32x4x3_t(
+            vmulq_f32(r1, postv),
+            vmulq_f32(r2, postv),
+            vmulq_f32(r3, postv),
+        );
+        vst3q_f32(out.as_mut_ptr().add(b0 * 3), o); // hw 3-wide reinterleave
+    }
+    nsimd * 3
+}

@@ -142,6 +142,10 @@ pub struct BatchScratch {
     tile_codes: Vec<u8>,
     /// per-tile-vector post-factors (SIMD path)
     posts: Vec<f32>,
+    /// f32 staging tile for the f16-output generic fallback
+    fstage: Vec<f32>,
+    /// f32 staging row for f16-output ragged tails / remainder rows
+    frow: Vec<f32>,
 }
 
 impl BatchScratch {
@@ -249,7 +253,7 @@ impl Stage1 {
         let q_block = ScalarQuantizer::for_kind(cfg.quant, cfg.variant.block_k(), cfg.bits);
         let q_tail = ScalarQuantizer::for_kind(cfg.quant, 2, cfg.bits);
         let rotors = bank.q_l.iter().map(|&q| Rotor::from_quaternion(q)).collect();
-        let kern = KernelState::build(cfg.backend, &bank, cfg.variant);
+        let kern = KernelState::build(cfg.backend, &bank, cfg.variant, cfg.rotor_impl);
         Stage1 {
             scale: (cfg.d as f32).sqrt(),
             q_block,
@@ -537,6 +541,116 @@ impl Stage1 {
             let post = rho / self.scale;
             packing::unpack(&rec[4..], bits, nc, &mut scratch.codes);
             self.dequantize_unrotate(&scratch.codes, post, &mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// [`Stage1::decode_batch_strided`] with binary16 output: every
+    /// element of `out` equals `f16::f32_to_f16_bits` of the f32 the
+    /// strided decode would produce (round-to-nearest-even at the store
+    /// boundary — the paper's FP16 row target at half the gather write
+    /// bandwidth).  Backends with an F16C tile convert in-register; all
+    /// other paths decode f32 into scratch and convert scalar-wise,
+    /// which produces the same bits by the conversion contract.
+    pub fn decode_batch_strided_f16(
+        &self,
+        data: &[u8],
+        stride: usize,
+        n_vecs: usize,
+        out: &mut [u16],
+        scratch: &mut BatchScratch,
+    ) {
+        let d = self.cfg.d;
+        let enc = self.encoded_len();
+        let nc = self.n_codes();
+        let bits = self.cfg.bits;
+        assert!(stride >= enc, "decode_batch_strided_f16: stride {stride} < encoded_len {enc}");
+        assert_eq!(out.len(), n_vecs * d, "decode_batch_strided_f16: out must be n_vecs × d");
+        if n_vecs == 0 {
+            return;
+        }
+        assert!(
+            data.len() >= (n_vecs - 1) * stride + enc,
+            "decode_batch_strided_f16: data too short for {n_vecs} records"
+        );
+        let mut i = 0usize;
+        let tile = kernels::tile_width(&self.kern, self.cfg.variant, d);
+        if tile > 1 {
+            scratch.tile_codes.resize(tile * nc, 0);
+            scratch.posts.resize(tile, 0.0);
+            scratch.frow.resize(d, 0.0);
+            while i + tile <= n_vecs {
+                for v in 0..tile {
+                    let rec = &data[(i + v) * stride..(i + v) * stride + enc];
+                    let rho = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+                    scratch.posts[v] = rho / self.scale;
+                    kernels::unpack_codes(
+                        &self.kern,
+                        &rec[4..],
+                        bits,
+                        nc,
+                        &mut scratch.tile_codes[v * nc..(v + 1) * nc],
+                    );
+                }
+                let mut covered = kernels::decode_tile_prefix_f16(
+                    &self.kern,
+                    self.cfg.variant,
+                    &self.q_block,
+                    d,
+                    &scratch.tile_codes,
+                    nc,
+                    &scratch.posts,
+                    &mut out[i * d..(i + tile) * d],
+                );
+                if covered == 0 {
+                    // no native f16 tile on this backend: decode the f32
+                    // tile into staging and convert (same bits — the
+                    // conversion contract in util::f16)
+                    scratch.fstage.resize(tile * d, 0.0);
+                    covered = kernels::decode_tile_prefix(
+                        &self.kern,
+                        self.cfg.variant,
+                        &self.q_block,
+                        d,
+                        &scratch.tile_codes,
+                        nc,
+                        &scratch.posts,
+                        &mut scratch.fstage,
+                    );
+                    for v in 0..tile {
+                        for j in 0..covered {
+                            out[(i + v) * d + j] =
+                                f16::f32_to_f16_bits(scratch.fstage[v * d + j]);
+                        }
+                    }
+                }
+                if covered < d {
+                    // scalar reference finishes each row's ragged tail
+                    // in f32, converted at the store boundary
+                    for v in 0..tile {
+                        self.dequantize_unrotate_from(
+                            &scratch.tile_codes[v * nc..(v + 1) * nc],
+                            scratch.posts[v],
+                            &mut scratch.frow,
+                            covered,
+                        );
+                        for j in covered..d {
+                            out[(i + v) * d + j] = f16::f32_to_f16_bits(scratch.frow[j]);
+                        }
+                    }
+                }
+                i += tile;
+            }
+        }
+        for i in i..n_vecs {
+            let rec = &data[i * stride..i * stride + enc];
+            let rho = f32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+            let post = rho / self.scale;
+            packing::unpack(&rec[4..], bits, nc, &mut scratch.codes);
+            scratch.frow.resize(d, 0.0);
+            self.dequantize_unrotate(&scratch.codes, post, &mut scratch.frow);
+            for j in 0..d {
+                out[i * d + j] = f16::f32_to_f16_bits(scratch.frow[j]);
+            }
         }
     }
 
@@ -838,9 +952,9 @@ impl Stage1 {
                 }
             }
             Variant::Rotor3D => {
-                debug_assert_eq!(start, 0, "Rotor3D has no SIMD prefix");
+                debug_assert_eq!(start % 3, 0, "Rotor3D SIMD prefix covers whole blocks");
                 let nfull = d / 3;
-                for b in 0..nfull {
+                for b in start / 3..nfull {
                     let i = b * 3;
                     let y = self.rotor_fwd(b, [x[i] * pre, x[i + 1] * pre, x[i + 2] * pre]);
                     for (j, yy) in y.into_iter().enumerate() {
@@ -962,9 +1076,9 @@ impl Stage1 {
                 }
             }
             Variant::Rotor3D => {
-                debug_assert_eq!(start, 0, "Rotor3D has no SIMD prefix");
+                debug_assert_eq!(start % 3, 0, "Rotor3D SIMD prefix covers whole blocks");
                 let nfull = d / 3;
-                for b in 0..nfull {
+                for b in start / 3..nfull {
                     let i = b * 3;
                     let yq = [
                         self.q_block.decode1(codes[i]),

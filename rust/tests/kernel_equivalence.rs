@@ -27,6 +27,11 @@ fn host_backends() -> Vec<KernelBackend> {
     if KernelBackend::Auto.resolve() != Resolved::Scalar {
         v.push(KernelBackend::Auto);
     }
+    // Auto stops at AVX2, so the wider backend needs its own entry when
+    // the host can actually run it.
+    if KernelBackend::Avx512.resolve() == Resolved::Avx512 {
+        v.push(KernelBackend::Avx512);
+    }
     v
 }
 
@@ -116,7 +121,7 @@ fn kernel_bitexact_full_table2_sweep() {
                 for bits in [2u8, 3, 4] {
                     let reference = stage(variant, d, bits, KernelBackend::Scalar, &bank);
                     let simd = stage(variant, d, bits, backend, &bank);
-                    let n = 11; // 8-tile + 3 remainder on AVX2
+                    let n = 19; // 16-tile + 3 remainder on AVX-512, 2×8 + 3 on AVX2
                     let x = rng.gaussian_vec_f32(n * d);
                     assert_backend_bitexact(&reference, &simd, &x, n, 7).unwrap_or_else(|e| {
                         panic!("{variant:?} d={d} bits={bits} backend={backend}: {e}")
@@ -211,6 +216,79 @@ fn kernel_f16_roundtrip_bitexact() {
             let mut out32 = vec![0.0f32; n * d];
             simd.roundtrip_batch(&x, &mut out32, n);
             assert!(mse(&out32, &out16f) < 1e-4, "{variant:?} f16 drift");
+        }
+    }
+}
+
+#[test]
+fn f16_gather_output_is_converted_f32_decode() {
+    // the f16 gather-output path must equal the f32 decode followed by
+    // software f32→f16 conversion, elementwise, on every backend: F16C /
+    // NEON hardware conversion rounds to nearest-even exactly like the
+    // software reference, so the contract is bit-equality, not tolerance
+    let mut rng = Rng::new(0xF16F);
+    for backend in host_backends() {
+        for (variant, d) in [
+            (Variant::IsoFull, 128usize),
+            (Variant::IsoFast, 126),  // ragged SO(4) tail
+            (Variant::Planar2D, 64),
+            (Variant::Rotor3D, 96),   // no native f16 tile → staged fallback
+        ] {
+            let bank = ParamBank::random(variant, d, 21);
+            let s = stage(variant, d, 4, backend, &bank);
+            let n = 19; // tile rows + scalar remainder rows
+            let x = rng.gaussian_vec_f32(n * d);
+            let mut sink = PackedSink::new();
+            s.encode_batch(&x, n, &mut sink);
+            let enc = s.encoded_len();
+            let stride = enc + 5;
+            let mut page = vec![0xEEu8; n * stride];
+            for i in 0..n {
+                page[i * stride..i * stride + enc].copy_from_slice(sink.encoded(i));
+            }
+            let mut scratch = BatchScratch::new();
+            let mut out32 = vec![0.0f32; n * d];
+            let mut out16 = vec![0u16; n * d];
+            s.decode_batch_strided(&page, stride, n, &mut out32, &mut scratch);
+            s.decode_batch_strided_f16(&page, stride, n, &mut out16, &mut scratch);
+            for j in 0..n * d {
+                assert_eq!(
+                    out16[j],
+                    f16::f32_to_f16_bits(out32[j]),
+                    "{variant:?} d={d} backend={backend} at {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rotor3d_odd_intermediate_backend_bitexact() {
+    // the OddIntermediate rotor kernel has SIMD arms of its own (unlike
+    // the Multivector reference, which always runs scalar); like the
+    // SO(4) kernels they must be bit-identical to the scalar path
+    use isoquant::quant::pipeline::RotorImpl;
+    let mut rng = Rng::new(0x30D);
+    for backend in host_backends() {
+        for d in [96usize, 100, 255] {
+            let bank = ParamBank::random(Variant::Rotor3D, d, 0xB0B ^ d as u64);
+            for bits in [2u8, 3, 4] {
+                let mk = |b: KernelBackend| {
+                    Stage1::with_bank(
+                        Stage1Config::new(Variant::Rotor3D, d, bits)
+                            .with_backend(b)
+                            .with_rotor_impl(RotorImpl::OddIntermediate),
+                        bank.clone(),
+                    )
+                };
+                let reference = mk(KernelBackend::Scalar);
+                let simd = mk(backend);
+                let n = 19;
+                let x = rng.gaussian_vec_f32(n * d);
+                assert_backend_bitexact(&reference, &simd, &x, n, 3).unwrap_or_else(|e| {
+                    panic!("Rotor3D/OddIntermediate d={d} bits={bits} backend={backend}: {e}")
+                });
+            }
         }
     }
 }

@@ -339,6 +339,110 @@ fn prop_persist_restart_gathers_byte_identical() {
     });
 }
 
+/// Cross-lane gather dedup is a pure bandwidth optimization: over any
+/// mix of lanes whose prompts share prefix pages (plus divergent decode
+/// tails), a batched multi-lane gather with `gather_dedup` on must be
+/// byte-identical — f32 and f16 output alike — to the same gather with
+/// it off, and the dedup counters must move only when the knob is on.
+#[test]
+fn prop_gather_dedup_byte_identical_across_lanes() {
+    use std::sync::atomic::Ordering;
+    check(12, 0xDED0, |g| {
+        let geo = geometry(g);
+        let cfg = geo.cfg;
+        let mut cache = mk_cache(&geo, 4096, true);
+        cache.parallel = *g.choose(&[ParallelPolicy::Off, ParallelPolicy::Auto]);
+
+        let base: Vec<i32> = (0..6 * cfg.tokens_per_page as i32).collect();
+        let n_lanes = g.usize_in(2, 5);
+        let mut streams: Vec<Vec<i32>> = Vec::new();
+        for lane in 0..n_lanes {
+            // the first two lanes always cover at least one full base
+            // page so the dedup plan is guaranteed to find shared work;
+            // the rest draw arbitrary (possibly sub-page) prefixes
+            let plen = if lane < 2 {
+                g.usize_in(cfg.tokens_per_page, base.len())
+            } else {
+                g.usize_in(1, base.len())
+            };
+            let prompt = base[..plen].to_vec();
+            let seq = lane as u64 + 1;
+            let reuse = cache
+                .start_seq_with_prompt(seq, &prompt)
+                .map_err(|e| e.to_string())?;
+            let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+            cache
+                .append_run(seq, &k, &v, prompt.len() - reuse.tokens)
+                .map_err(|e| e.to_string())?;
+            // divergent decode tail
+            let mut stream = prompt;
+            for d in 0..g.usize_in(0, 3) {
+                stream.push(70_000 + (lane * 100 + d) as i32);
+                let (tk, tv) = kv_at(&stream, stream.len() - 1, &cfg);
+                cache
+                    .append_token(seq, &tk, &tv)
+                    .map_err(|e| e.to_string())?;
+            }
+            streams.push(stream);
+        }
+
+        let pairs: Vec<(u64, usize)> =
+            (0..n_lanes).map(|lane| (lane as u64 + 1, lane)).collect();
+        let t_max = streams.iter().map(|s| s.len()).max().unwrap() + g.usize_in(0, 2);
+        let sz = cfg.n_layers * n_lanes * cfg.n_heads * t_max * cfg.d_head;
+        let mut ws = GatherWorkspace::new();
+
+        cache.gather_dedup = false;
+        let (mut ka, mut va) = (vec![3.0f32; sz], vec![3.0f32; sz]);
+        let na = cache
+            .gather_lanes_into_batch_ws(&pairs, n_lanes, t_max, &mut ka, &mut va, &mut ws)
+            .map_err(|e| e.to_string())?;
+        let (mut kha, mut vha) = (vec![7u16; sz], vec![7u16; sz]);
+        cache
+            .gather_lanes_into_batch_f16_ws(&pairs, n_lanes, t_max, &mut kha, &mut vha, &mut ws)
+            .map_err(|e| e.to_string())?;
+        if cache.share.strips_deduped.load(Ordering::Relaxed) != 0 {
+            return Err("dedup counters moved with the knob off".into());
+        }
+
+        cache.gather_dedup = true;
+        let (mut kb, mut vb) = (vec![4.0f32; sz], vec![4.0f32; sz]);
+        let nb = cache
+            .gather_lanes_into_batch_ws(&pairs, n_lanes, t_max, &mut kb, &mut vb, &mut ws)
+            .map_err(|e| e.to_string())?;
+        let (mut khb, mut vhb) = (vec![8u16; sz], vec![8u16; sz]);
+        cache
+            .gather_lanes_into_batch_f16_ws(&pairs, n_lanes, t_max, &mut khb, &mut vhb, &mut ws)
+            .map_err(|e| e.to_string())?;
+
+        if na != nb {
+            return Err(format!("lane lengths changed under dedup: {na:?} vs {nb:?}"));
+        }
+        if bits_of(&ka) != bits_of(&kb) || bits_of(&va) != bits_of(&vb) {
+            return Err("f32 gather differs with dedup on".into());
+        }
+        if kha != khb || vha != vhb {
+            return Err("f16 gather differs with dedup on".into());
+        }
+        // lanes 0 and 1 both own base page 0, so both the f32 and f16
+        // dedup'd drains found at least one follower strip each
+        if cache.share.strips_deduped.load(Ordering::Relaxed) == 0 {
+            return Err("no strips deduped despite a guaranteed shared page".into());
+        }
+        if cache.share.bytes_saved.load(Ordering::Relaxed) == 0 {
+            return Err("strips deduped but no bytes accounted".into());
+        }
+
+        for lane in 0..n_lanes {
+            cache.drop_seq(lane as u64 + 1);
+        }
+        if cache.live_refs() != 0 {
+            return Err("refs leaked".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn burst_of_same_prompt_sequences_allocates_shared_prefix_once() {
     // the manager-level acceptance check: 64 same-prompt sequences on a
