@@ -109,11 +109,7 @@ fn main() -> Result<()> {
         let plen = 8 + rng.below(48);
         let prompt = synth_prompt(&mut rng, meta.vocab, plen);
         prompts.push(prompt.clone());
-        engine.submit(Request {
-            id: i as u64,
-            prompt,
-            max_new_tokens: max_new,
-        });
+        engine.submit(Request::new(i as u64, prompt, max_new));
     }
 
     let t0 = std::time::Instant::now();

@@ -395,5 +395,7 @@ pub fn serve(args: &[String]) -> Result<()> {
     let model = ServingModel::load(Path::new(&cfg.artifacts_dir))?;
     let engine = Engine::new(model, cfg.clone())?;
     let stop = Arc::new(AtomicBool::new(false));
-    crate::server::serve(engine, &cfg.bind, stop)
+    // ctrl-C → graceful drain: lanes finish, queue is shed, store flushes
+    crate::server::install_sigint_handler();
+    crate::server::serve(engine, &cfg.bind, stop).map(|_| ())
 }

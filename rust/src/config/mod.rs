@@ -164,6 +164,32 @@ pub struct EngineConfig {
     pub max_new_tokens_default: usize,
     /// TCP bind address for `isoquant serve`
     pub bind: String,
+    /// default per-request deadline in milliseconds
+    /// (`[server] request_timeout_ms`); 0 (the default) disables
+    /// deadlines.  A request's own `deadline_ms` field overrides this.
+    /// Expired requests finish with `finish: "timeout"` carrying
+    /// whatever tokens were generated
+    pub request_timeout_ms: u64,
+    /// bound on requests waiting for admission (`[server] max_queue`);
+    /// 0 (the default) keeps the queue unbounded.  Overflow is shed
+    /// immediately with `{"error":"overloaded","retry_after_ms":…}`
+    pub max_queue: usize,
+    /// how long a graceful shutdown lets in-flight lanes finish before
+    /// dropping them (`[server] drain_timeout_ms`); queued-but-unadmitted
+    /// requests are shed at drain start either way
+    pub drain_timeout_ms: u64,
+    /// write attempts per spilled page before the spill worker counts a
+    /// failure (`[cache] persist_retries`), retried with capped
+    /// exponential backoff
+    pub persist_retries: u32,
+    /// initial backoff between spill retries in milliseconds
+    /// (`[cache] persist_retry_backoff_ms`), doubling per attempt and
+    /// capped at 1s
+    pub persist_retry_backoff_ms: u64,
+    /// consecutive spill-job failures before the store degrades to
+    /// disabled (`[cache] persist_degrade_after`): serving continues,
+    /// persistence stops, the stats line carries a STORE-DEGRADED marker
+    pub persist_degrade_after: u32,
     /// stage-2 residual correction (0 = off, else projection dim)
     pub residual_m: usize,
     /// threading of the batched KV gather: `off`, `auto`, or a thread
@@ -219,6 +245,12 @@ impl Default for EngineConfig {
             max_seq_len: 256,
             max_new_tokens_default: 32,
             bind: "127.0.0.1:7439".to_string(),
+            request_timeout_ms: 0,
+            max_queue: 0,
+            drain_timeout_ms: 5_000,
+            persist_retries: 3,
+            persist_retry_backoff_ms: 50,
+            persist_degrade_after: 5,
             residual_m: 0,
             gather_parallel: ParallelPolicy::Auto,
             // honor the ISOQUANT_KERNEL process override (the CI matrix
@@ -274,6 +306,35 @@ impl EngineConfig {
                 d.max_new_tokens_default,
             )?,
             bind: raw.str_or("server", "bind", &d.bind),
+            request_timeout_ms: raw.usize_or(
+                "server",
+                "request_timeout_ms",
+                d.request_timeout_ms as usize,
+            )? as u64,
+            max_queue: raw.usize_or("server", "max_queue", d.max_queue)?,
+            drain_timeout_ms: raw.usize_or(
+                "server",
+                "drain_timeout_ms",
+                d.drain_timeout_ms as usize,
+            )? as u64,
+            persist_retries: raw.usize_or("cache", "persist_retries", d.persist_retries as usize)?
+                as u32,
+            persist_retry_backoff_ms: raw.usize_or(
+                "cache",
+                "persist_retry_backoff_ms",
+                d.persist_retry_backoff_ms as usize,
+            )? as u64,
+            persist_degrade_after: {
+                let n = raw.usize_or(
+                    "cache",
+                    "persist_degrade_after",
+                    d.persist_degrade_after as usize,
+                )?;
+                if n == 0 {
+                    bail!("[cache] persist_degrade_after must be >= 1");
+                }
+                n as u32
+            },
             residual_m: raw.usize_or("engine", "residual_m", d.residual_m)?,
             gather_parallel: match raw.get("engine", "gather_parallel") {
                 None => d.gather_parallel,
@@ -561,6 +622,58 @@ bind = "0.0.0.0:9000"
             "[cache]\npersist_dir = 5",
             "[cache]\npersist_dir = true",
             "[cache]\npersist_budget_mb = \"lots\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn lifecycle_knobs() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.request_timeout_ms, 0, "deadlines default off");
+        assert_eq!(cfg.max_queue, 0, "queue defaults unbounded");
+        assert_eq!(cfg.drain_timeout_ms, 5_000);
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse(
+                "[server]\nrequest_timeout_ms = 250\nmax_queue = 32\ndrain_timeout_ms = 100",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.request_timeout_ms, 250);
+        assert_eq!(cfg.max_queue, 32);
+        assert_eq!(cfg.drain_timeout_ms, 100);
+        for text in [
+            "[server]\nrequest_timeout_ms = \"fast\"",
+            "[server]\nmax_queue = true",
+            "[server]\ndrain_timeout_ms = \"long\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn persist_fault_knobs() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.persist_retries, 3);
+        assert_eq!(cfg.persist_retry_backoff_ms, 50);
+        assert_eq!(cfg.persist_degrade_after, 5);
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse(
+                "[cache]\npersist_retries = 0\npersist_retry_backoff_ms = 1\n\
+                 persist_degrade_after = 2",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.persist_retries, 0, "retries can be disabled");
+        assert_eq!(cfg.persist_retry_backoff_ms, 1);
+        assert_eq!(cfg.persist_degrade_after, 2);
+        for text in [
+            "[cache]\npersist_degrade_after = 0",
+            "[cache]\npersist_retries = \"many\"",
         ] {
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");

@@ -61,6 +61,14 @@ impl Batcher {
         }
     }
 
+    /// Drop a still-queued request (client disconnected before
+    /// admission).  Returns true if the request was found and removed.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|(r, _)| r.id != id);
+        self.queue.len() != before
+    }
+
     /// Pull up to `n` requests immediately (used when lanes free up
     /// mid-flight — continuous batching does not wait for the window),
     /// grouped by shared prefix like [`Batcher::poll`].
@@ -84,11 +92,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request {
-            id,
-            prompt: vec![1, 2, 3],
-            max_new_tokens: 4,
-        }
+        Request::new(id, vec![1, 2, 3], 4)
     }
 
     #[test]
@@ -127,14 +131,25 @@ mod tests {
     }
 
     #[test]
+    fn cancel_drops_queued_request_only() {
+        let mut b = Batcher::new(Duration::from_millis(0), 4);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.submit_at(req(i), t0);
+        }
+        assert!(b.cancel(1), "queued request is cancellable");
+        assert!(!b.cancel(1), "second cancel is a no-op");
+        assert!(!b.cancel(99), "unknown id is a no-op");
+        assert_eq!(b.pending(), 2);
+        let ids: Vec<u64> = b.poll(t0).unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2], "survivors keep FIFO order");
+    }
+
+    #[test]
     fn shared_prefix_requests_grouped_in_batch() {
         let mut b = Batcher::new(Duration::from_millis(0), 8);
         let t0 = Instant::now();
-        let mk = |id, prompt: &[i32]| Request {
-            id,
-            prompt: prompt.to_vec(),
-            max_new_tokens: 1,
-        };
+        let mk = |id, prompt: &[i32]| Request::new(id, prompt.to_vec(), 1);
         // interleaved prefix groups; ids record submit order
         b.submit_at(mk(0, &[9, 9, 1]), t0);
         b.submit_at(mk(1, &[2, 2]), t0);

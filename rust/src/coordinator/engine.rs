@@ -46,6 +46,10 @@ struct ActiveSeq {
     last_token: i32,
     /// pages adopted from the prefix index at admission
     prefix_hit_pages: usize,
+    /// absolute deadline (per-request `deadline_ms` or the
+    /// `[server] request_timeout_ms` default, from submission);
+    /// `None` = run to completion
+    deadline: Option<Instant>,
 }
 
 enum Lane {
@@ -136,7 +140,12 @@ impl Engine {
                     page_cfg.page_bytes(),
                     (cfg.persist_budget_mb as u64) << 20,
                 )
-                .with_mmap(cfg.persist_mmap),
+                .with_mmap(cfg.persist_mmap)
+                .with_fault_policy(
+                    cfg.persist_retries,
+                    cfg.persist_retry_backoff_ms,
+                    cfg.persist_degrade_after,
+                ),
             )?;
             eprintln!(
                 "isoquant: page store at {} — {} cold pages rehydrated ({:.1} MB on disk)",
@@ -203,6 +212,8 @@ impl Engine {
 
     /// One scheduler iteration.  Returns false when fully idle.
     pub fn step(&mut self) -> Result<bool> {
+        self.expire_deadlines();
+        self.cache.note_store_health();
         self.admit()?;
         let any_prefill = self.lanes.iter().any(
             |l| matches!(l, Lane::Active(a) if matches!(a.phase, Phase::Prefill { .. })),
@@ -224,6 +235,96 @@ impl Engine {
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
         while self.step()? {}
         Ok(self.take_completions())
+    }
+
+    /// Drop a request whose client is gone: removed from the waiting
+    /// queue, or — mid-prefill/mid-decode — its lane is freed and every
+    /// cache page released (refcounts to zero, CoW tails back to the
+    /// pool) in the same call.  No completion is pushed: the socket
+    /// that would carry it is dead.  Returns false for unknown ids
+    /// (already finished, or never submitted) — a harmless no-op.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.waiting.iter().position(|(r, _)| r.id == id) {
+            let _ = self.waiting.remove(i);
+            self.cache.share.requests_cancelled += 1;
+            return true;
+        }
+        for lane in 0..self.lanes.len() {
+            if matches!(&self.lanes[lane], Lane::Active(a) if a.req.id == id) {
+                let lane_state = std::mem::replace(&mut self.lanes[lane], Lane::Free);
+                if let Lane::Active(a) = lane_state {
+                    self.cache.drop_seq(a.seq);
+                }
+                self.cache.share.requests_cancelled += 1;
+                // pages went back to the pool: a memoized admission
+                // denial may now be stale
+                self.admit_denied = None;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Shed every request still waiting for admission (graceful drain:
+    /// the listener is closed, these will never run).  Each gets a
+    /// `finish: "rejected"` completion so connected clients hear a
+    /// definitive answer before the socket closes.
+    pub fn shed_waiting(&mut self) -> usize {
+        let shed = self.waiting.len();
+        while let Some((req, mut timing)) = self.waiting.pop_front() {
+            timing.finished = Some(Instant::now());
+            self.completions.push(Completion {
+                id: req.id,
+                tokens: Vec::new(),
+                prompt_len: req.prompt.len(),
+                prefix_hit_pages: 0,
+                timing,
+                finish: FinishReason::Rejected,
+            });
+            self.cache.share.requests_shed += 1;
+        }
+        shed
+    }
+
+    /// Finish lanes and expire queued requests whose deadline passed.
+    /// With deadlines unconfigured (the default) every `deadline` is
+    /// `None` and this never touches a lane.
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        for lane in 0..self.lanes.len() {
+            let expired = matches!(
+                &self.lanes[lane],
+                Lane::Active(a) if a.deadline.is_some_and(|d| d <= now)
+            );
+            if expired {
+                self.finish_lane(lane, FinishReason::Timeout);
+            }
+        }
+        // queued requests can expire before ever reaching a lane
+        // (admission backpressure under overload)
+        let default_ms = self.cfg.request_timeout_ms;
+        let mut i = 0;
+        while i < self.waiting.len() {
+            let (req, timing) = &self.waiting[i];
+            let expired = req
+                .deadline_from(timing.submitted, default_ms)
+                .is_some_and(|d| d <= now);
+            if !expired {
+                i += 1;
+                continue;
+            }
+            let (req, mut timing) = self.waiting.remove(i).unwrap();
+            timing.finished = Some(Instant::now());
+            self.completions.push(Completion {
+                id: req.id,
+                tokens: Vec::new(),
+                prompt_len: req.prompt.len(),
+                prefix_hit_pages: 0,
+                timing,
+                finish: FinishReason::Timeout,
+            });
+            self.cache.share.requests_timed_out += 1;
+        }
     }
 
     // ------------------------------------------------------------------
@@ -281,6 +382,7 @@ impl Engine {
             // prompt token is recomputed (its cache slot is masked by
             // pos0) and its append is skipped.
             let consumed = reuse.tokens.min(req.prompt.len() - 1);
+            let deadline = req.deadline_from(timing.submitted, self.cfg.request_timeout_ms);
             self.lanes[free_lane] = Lane::Active(Box::new(ActiveSeq {
                 last_token: *req.prompt.first().unwrap(),
                 req,
@@ -290,6 +392,7 @@ impl Engine {
                 generated: Vec::new(),
                 phase: Phase::Prefill { consumed },
                 prefix_hit_pages: reuse.pages,
+                deadline,
             }));
         }
         Ok(())
@@ -561,22 +664,32 @@ impl Engine {
             }
         };
         if let Some(reason) = finish {
-            let lane_state = std::mem::replace(&mut self.lanes[lane], Lane::Free);
-            let mut a = match lane_state {
-                Lane::Active(a) => a,
-                _ => unreachable!(),
-            };
-            a.timing.finished = Some(Instant::now());
-            self.cache.drop_seq(a.seq);
-            self.completions.push(Completion {
-                id: a.req.id,
-                tokens: a.generated,
-                prompt_len: a.req.prompt.len(),
-                prefix_hit_pages: a.prefix_hit_pages,
-                timing: a.timing,
-                finish: reason,
-            });
+            self.finish_lane(lane, reason);
         }
+    }
+
+    /// Retire an active lane with `reason`: pages released, lane freed,
+    /// completion pushed (with whatever tokens were generated — a
+    /// timeout returns the partial output).
+    fn finish_lane(&mut self, lane: usize, reason: FinishReason) {
+        let lane_state = std::mem::replace(&mut self.lanes[lane], Lane::Free);
+        let mut a = match lane_state {
+            Lane::Active(a) => a,
+            _ => return,
+        };
+        a.timing.finished = Some(Instant::now());
+        self.cache.drop_seq(a.seq);
+        if reason == FinishReason::Timeout {
+            self.cache.share.requests_timed_out += 1;
+        }
+        self.completions.push(Completion {
+            id: a.req.id,
+            tokens: a.generated,
+            prompt_len: a.req.prompt.len(),
+            prefix_hit_pages: a.prefix_hit_pages,
+            timing: a.timing,
+            finish: reason,
+        });
     }
 
     /// One-line serving snapshot for the periodic server stats log:

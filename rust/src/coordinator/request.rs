@@ -12,6 +12,35 @@ pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// per-request deadline in milliseconds from submission (`None` =
+    /// use the server default, `[server] request_timeout_ms`; both
+    /// unset/0 = no deadline).  Expiry finishes the request with
+    /// [`FinishReason::Timeout`], returning whatever tokens were
+    /// generated so far
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            deadline_ms: None,
+        }
+    }
+
+    /// Absolute deadline for a request submitted at `submitted`:
+    /// the per-request `deadline_ms` wins over the server default
+    /// (`default_ms`); 0 in either place means "no deadline from that
+    /// source".
+    pub fn deadline_from(&self, submitted: Instant, default_ms: u64) -> Option<Instant> {
+        let ms = match self.deadline_ms {
+            Some(0) | None => default_ms,
+            Some(ms) => ms,
+        };
+        (ms > 0).then(|| submitted + std::time::Duration::from_millis(ms))
+    }
 }
 
 /// Lifecycle timestamps for latency accounting.
@@ -72,11 +101,34 @@ pub enum FinishReason {
     ContextFull,
     /// rejected at admission (pool exhausted / prompt too long)
     Rejected,
+    /// client disconnected or explicitly cancelled; lane and pages are
+    /// freed immediately (no completion is written — the socket is gone)
+    Cancelled,
+    /// deadline expired (per-request `deadline_ms` or the
+    /// `[server] request_timeout_ms` default); partial tokens returned
+    Timeout,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn deadline_resolution() {
+        let now = Instant::now();
+        let mut r = Request::new(1, vec![1], 4);
+        // no per-request deadline, no server default -> none
+        assert!(r.deadline_from(now, 0).is_none());
+        // server default applies
+        assert!(r.deadline_from(now, 100).is_some());
+        // explicit 0 means "use default", not "deadline at submission"
+        r.deadline_ms = Some(0);
+        assert!(r.deadline_from(now, 0).is_none());
+        // per-request value wins over the default
+        r.deadline_ms = Some(50);
+        let d = r.deadline_from(now, 10_000).unwrap();
+        assert!(d - now <= std::time::Duration::from_millis(50));
+    }
 
     #[test]
     fn timing_fields() {

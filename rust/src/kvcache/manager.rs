@@ -324,9 +324,19 @@ impl CacheManager {
 
     /// Block until every spill enqueued so far is durable (shutdown /
     /// test barrier; a no-op without a store).
-    pub fn flush_store(&self) {
+    pub fn flush_store(&mut self) {
         if let Some(s) = &self.store {
             s.flush();
+        }
+        self.note_store_health();
+    }
+
+    /// Mirror the store's degraded flag into [`ShareStats`] so the
+    /// serving stats line (and tests) see persistence failures without
+    /// reaching into the store.  Cheap; called after spill/flush.
+    pub fn note_store_health(&mut self) {
+        if self.store.as_ref().is_some_and(|s| s.degraded()) {
+            self.share.store_degraded = 1;
         }
     }
 
@@ -1074,6 +1084,7 @@ impl CacheManager {
         if enqueued {
             self.share.pages_spilled += 1;
         }
+        self.note_store_health();
     }
 
     /// Drop one ownership of `p`.  At zero refs an indexed page is
@@ -1122,6 +1133,7 @@ impl CacheManager {
         if enqueued {
             self.share.pages_spilled += 1;
         }
+        self.note_store_health();
     }
 
     /// Allocate a page, demoting zero-ref prefix-cache entries (lowest

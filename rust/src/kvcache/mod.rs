@@ -94,4 +94,4 @@ pub use manager::{CacheManager, GatherElem, GatherWorkspace, PrefixReuse, SeqId}
 pub use page::{chain_key, Page, PageConfig, PrefixKey};
 pub use prefix::{PrefixIndex, PrefixIndexKind};
 pub use radix::RadixIndex;
-pub use store::{PageStore, StoreConfig, StoreStats};
+pub use store::{FaultPlan, FaultyIo, PageStore, SegmentIo, StoreConfig, StoreStats};

@@ -1,0 +1,167 @@
+//! I/O shim for the persistent store: every byte the spill worker
+//! writes and every cold byte the read paths fetch goes through a
+//! [`SegmentIo`], so tests can stand in a deterministic fault injector
+//! where production uses the passthrough [`RealIo`].
+//!
+//! The injector ([`FaultyIo`]) is driven by a [`FaultPlan`]: per
+//! operation kind (segment create, record write, read open, record
+//! read), a set of op indices at which that operation fails.  Indices
+//! count per kind from store open, so a plan like "3rd write returns
+//! `ENOSPC`, 1st promotion read returns `EIO`" replays identically on
+//! every run — the store's degrade/miss behavior under failing disks
+//! becomes a regression test instead of an outage postmortem.  Short
+//! writes land half the record before failing, exercising the
+//! torn-tail abandonment path the boot scan must survive.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The store's view of segment I/O.  Production is a passthrough to
+/// `std::fs`; tests inject failures.  Only the *buffered* transports
+/// route through here — the mmap read path is a plain memory view and
+/// fault tests run with `StoreConfig::mmap` off (a vanished or short
+/// mapping already falls back to the buffered path, which is shimmed).
+pub trait SegmentIo: Send + Sync {
+    /// Create a fresh segment file (the worker never reopens one).
+    fn create_new(&self, path: &Path) -> io::Result<File>;
+    /// Open a segment for reading.
+    fn open_read(&self, path: &Path) -> io::Result<File>;
+    /// Append one encoded record to the active segment.
+    fn write_all(&self, file: &mut File, buf: &[u8]) -> io::Result<()>;
+    /// fsync the active segment.
+    fn sync(&self, file: &File) -> io::Result<()>;
+    /// Read exactly `buf.len()` bytes at `offset`.
+    fn read_exact_at(&self, file: &mut File, offset: u64, buf: &mut [u8]) -> io::Result<()>;
+}
+
+/// Production passthrough: plain `std::fs` calls, no bookkeeping.
+#[derive(Debug, Default)]
+pub struct RealIo;
+
+impl SegmentIo for RealIo {
+    fn create_new(&self, path: &Path) -> io::Result<File> {
+        OpenOptions::new().create_new(true).write(true).open(path)
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        File::open(path)
+    }
+
+    fn write_all(&self, file: &mut File, buf: &[u8]) -> io::Result<()> {
+        file.write_all(buf)
+    }
+
+    fn sync(&self, file: &File) -> io::Result<()> {
+        file.sync_all()
+    }
+
+    fn read_exact_at(&self, file: &mut File, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        file.seek(SeekFrom::Start(offset))?;
+        file.read_exact(buf)
+    }
+}
+
+/// Deterministic fault schedule: per operation kind, the op indices
+/// (counted from store open, per kind) that fail.  Empty plan = no
+/// faults (behaves exactly like [`RealIo`]).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// `create_new` indices that fail (segment creation — `ENOSPC`)
+    pub fail_creates: Vec<u64>,
+    /// `write_all` indices that fail cleanly, landing zero bytes
+    pub fail_writes: Vec<u64>,
+    /// `write_all` indices that land *half* the record, then fail —
+    /// leaves a torn tail on the active segment
+    pub short_writes: Vec<u64>,
+    /// `open_read` indices that fail (`EIO`)
+    pub fail_opens: Vec<u64>,
+    /// `read_exact_at` indices that fail (`EIO`)
+    pub fail_reads: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// Every spill write fails — the fastest route to degraded mode.
+    pub fn all_writes_fail() -> FaultPlan {
+        FaultPlan {
+            // u64::MAX as an open-ended sentinel would need range
+            // support; a long explicit prefix is plenty for tests
+            fail_writes: (0..10_000).collect(),
+            ..FaultPlan::default()
+        }
+    }
+}
+
+/// Test injector: counts operations per kind and fails the ones the
+/// plan names; everything else passes straight through to `std::fs`.
+/// Counters are atomics so the spill worker thread and reader threads
+/// can share one injector.
+#[derive(Debug)]
+pub struct FaultyIo {
+    plan: FaultPlan,
+    creates: AtomicU64,
+    writes: AtomicU64,
+    opens: AtomicU64,
+    reads: AtomicU64,
+}
+
+impl FaultyIo {
+    pub fn new(plan: FaultPlan) -> Arc<FaultyIo> {
+        Arc::new(FaultyIo {
+            plan,
+            creates: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            opens: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+        })
+    }
+
+    fn err(kind: io::ErrorKind, what: &str) -> io::Error {
+        io::Error::new(kind, format!("injected fault: {what}"))
+    }
+}
+
+impl SegmentIo for FaultyIo {
+    fn create_new(&self, path: &Path) -> io::Result<File> {
+        let n = self.creates.fetch_add(1, Ordering::Relaxed);
+        if self.plan.fail_creates.contains(&n) {
+            return Err(Self::err(io::ErrorKind::Other, "create ENOSPC"));
+        }
+        RealIo.create_new(path)
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        let n = self.opens.fetch_add(1, Ordering::Relaxed);
+        if self.plan.fail_opens.contains(&n) {
+            return Err(Self::err(io::ErrorKind::Other, "open EIO"));
+        }
+        RealIo.open_read(path)
+    }
+
+    fn write_all(&self, file: &mut File, buf: &[u8]) -> io::Result<()> {
+        let n = self.writes.fetch_add(1, Ordering::Relaxed);
+        if self.plan.fail_writes.contains(&n) {
+            return Err(Self::err(io::ErrorKind::Other, "write ENOSPC"));
+        }
+        if self.plan.short_writes.contains(&n) {
+            // land a torn half-record, then report the disk full
+            let _ = file.write_all(&buf[..buf.len() / 2]);
+            return Err(Self::err(io::ErrorKind::Other, "short write + ENOSPC"));
+        }
+        file.write_all(buf)
+    }
+
+    fn sync(&self, file: &File) -> io::Result<()> {
+        file.sync_all()
+    }
+
+    fn read_exact_at(&self, file: &mut File, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let n = self.reads.fetch_add(1, Ordering::Relaxed);
+        if self.plan.fail_reads.contains(&n) {
+            return Err(Self::err(io::ErrorKind::Other, "read EIO"));
+        }
+        RealIo.read_exact_at(file, offset, buf)
+    }
+}

@@ -45,14 +45,16 @@
 //! worker always appends to a *fresh* segment so a damaged tail is
 //! never extended.
 
+pub mod fault;
 pub mod record;
 mod spill;
 
+pub use fault::{FaultPlan, FaultyIo, RealIo, SegmentIo};
 pub use record::{record_len, Crc32, Record, HEADER_LEN};
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fs::{self, File};
-use std::io::{BufReader, Read, Seek, SeekFrom, Write};
+use std::io::{BufReader, Write};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 
@@ -217,6 +219,18 @@ pub struct StoreConfig {
     /// verification, and any mapping failure (or a non-unix host)
     /// silently falls back to the buffered path
     pub mmap: bool,
+    /// write attempts per spill job beyond the first
+    /// (`[cache] persist_retries`); each retry abandons the torn
+    /// segment and starts a fresh one
+    pub retries: u32,
+    /// initial backoff between spill retries in milliseconds
+    /// (`[cache] persist_retry_backoff_ms`), doubled per attempt and
+    /// capped at 1s
+    pub retry_backoff_ms: u64,
+    /// consecutive spill-job failures (all retries exhausted) before
+    /// the store degrades to disabled — persistence stops, serving
+    /// continues (`[cache] persist_degrade_after`; must be ≥ 1)
+    pub degrade_after: u32,
 }
 
 impl StoreConfig {
@@ -237,12 +251,31 @@ impl StoreConfig {
             budget_bytes,
             segment_bytes,
             mmap: true,
+            retries: 3,
+            retry_backoff_ms: 50,
+            degrade_after: 5,
         }
     }
 
     /// Toggle mmap'd cold reads (`[cache] persist_mmap`).
     pub fn with_mmap(mut self, mmap: bool) -> StoreConfig {
         self.mmap = mmap;
+        self
+    }
+
+    /// Tune the spill worker's failure handling (`[cache]
+    /// persist_retries` / `persist_retry_backoff_ms` /
+    /// `persist_degrade_after`).
+    pub fn with_fault_policy(
+        mut self,
+        retries: u32,
+        retry_backoff_ms: u64,
+        degrade_after: u32,
+    ) -> StoreConfig {
+        assert!(degrade_after >= 1, "degrade_after must be >= 1");
+        self.retries = retries;
+        self.retry_backoff_ms = retry_backoff_ms;
+        self.degrade_after = degrade_after;
         self
     }
 }
@@ -260,8 +293,11 @@ pub struct StoreStats {
     pub corrupt_tails: u64,
     /// records durably appended by the spill worker
     pub spilled: u64,
-    /// spill append failures (record dropped, fresh segment next time)
+    /// spill append failures after all retries (record dropped, fresh
+    /// segment next time)
     pub spill_errors: u64,
+    /// spill write attempts beyond the first (retry with backoff)
+    pub spill_retries: u64,
     /// whole segments retired to stay inside the byte budget
     pub retired_segments: u64,
     /// read-time verification failures (entry dropped, served as miss)
@@ -287,6 +323,14 @@ pub(crate) struct Shared {
     /// keys enqueued for spill but not yet durable (write dedup)
     pending: HashSet<PrefixKey>,
     stats: StoreStats,
+    /// spill jobs that failed with every retry exhausted, with no
+    /// durable append in between; reaching `StoreConfig::degrade_after`
+    /// trips `degraded`
+    consecutive_failures: u32,
+    /// once true the store stops persisting (spill becomes a no-op and
+    /// queued jobs are dropped); reads stay enabled — what is already
+    /// durable keeps serving.  Only a reopen clears it
+    degraded: bool,
 }
 
 impl Shared {
@@ -323,6 +367,9 @@ impl Shared {
 pub struct PageStore {
     cfg: StoreConfig,
     shared: Arc<Mutex<Shared>>,
+    /// segment I/O transport: [`RealIo`] in production, a fault
+    /// injector in tests.  Shared with the spill worker
+    io: Arc<dyn SegmentIo>,
     tx: Option<mpsc::Sender<spill::Job>>,
     worker: Option<std::thread::JoinHandle<()>>,
     /// lazily created read-only segment mappings (`StoreConfig::mmap`),
@@ -368,6 +415,13 @@ impl PageStore {
     /// process dies — flock is kernel-held, so a crashed server never
     /// leaves a stale lock behind).
     pub fn open(cfg: StoreConfig) -> Result<PageStore> {
+        PageStore::open_with_io(cfg, Arc::new(RealIo))
+    }
+
+    /// [`PageStore::open`] with an explicit segment-I/O transport.
+    /// Production uses [`RealIo`]; fault-injection tests pass a
+    /// [`FaultyIo`] so failing disks replay deterministically.
+    pub fn open_with_io(cfg: StoreConfig, io: Arc<dyn SegmentIo>) -> Result<PageStore> {
         fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("create persist dir {}", cfg.dir.display()))?;
         let mut lock = fs::OpenOptions::new()
@@ -400,6 +454,8 @@ impl PageStore {
             segments: BTreeMap::new(),
             pending: HashSet::new(),
             stats: StoreStats::default(),
+            consecutive_failures: 0,
+            degraded: false,
         };
         let mut ids: Vec<u64> = Vec::new();
         for entry in fs::read_dir(&cfg.dir)
@@ -434,10 +490,11 @@ impl PageStore {
         let next_segment = ids.last().map(|&i| i + 1).unwrap_or(0);
         let shared = Arc::new(Mutex::new(shared));
         let (tx, rx) = mpsc::channel();
-        let worker = spill::spawn(cfg.clone(), shared.clone(), rx, next_segment)?;
+        let worker = spill::spawn(cfg.clone(), shared.clone(), io.clone(), rx, next_segment)?;
         Ok(PageStore {
             cfg,
             shared,
+            io,
             tx: Some(tx),
             worker: Some(worker),
             maps: Mutex::new(HashMap::new()),
@@ -473,6 +530,13 @@ impl PageStore {
 
     pub fn stats(&self) -> StoreStats {
         self.lock().stats
+    }
+
+    /// Has the store tripped into degraded mode (persistence disabled
+    /// after `StoreConfig::degrade_after` consecutive spill failures)?
+    /// Reads stay enabled; only a reopen re-arms writes.
+    pub fn degraded(&self) -> bool {
+        self.lock().degraded
     }
 
     /// Verified membership probe (no I/O): does the store hold a record
@@ -571,7 +635,7 @@ impl PageStore {
                 }
                 // mapping unavailable: buffered fallback below
             }
-            let Ok(mut f) = File::open(segment_path(&self.cfg.dir, seg)) else {
+            let Ok(mut f) = self.io.open_read(&segment_path(&self.cfg.dir, seg)) else {
                 continue;
             };
             let mut e0 = 0usize;
@@ -586,14 +650,12 @@ impl PageStore {
                     ext += len;
                     e1 += 1;
                 }
-                if f.seek(SeekFrom::Start(start)).is_ok() {
-                    let mut buf = vec![0u8; ext as usize];
-                    if f.read_exact(&mut buf).is_ok() {
-                        for &i in &idxs[e0..e1] {
-                            let (_, offset, len) = locs[i].unwrap();
-                            let a = (offset - start) as usize;
-                            out[i] = self.verify_record(requests[i], &buf[a..a + len as usize]);
-                        }
+                let mut buf = vec![0u8; ext as usize];
+                if self.io.read_exact_at(&mut f, start, &mut buf).is_ok() {
+                    for &i in &idxs[e0..e1] {
+                        let (_, offset, len) = locs[i].unwrap();
+                        let a = (offset - start) as usize;
+                        out[i] = self.verify_record(requests[i], &buf[a..a + len as usize]);
                     }
                 }
                 e0 = e1;
@@ -626,10 +688,12 @@ impl PageStore {
                 }
             }
         }
-        let mut f = File::open(segment_path(&self.cfg.dir, segment)).ok()?;
-        f.seek(SeekFrom::Start(offset)).ok()?;
+        let mut f = self
+            .io
+            .open_read(&segment_path(&self.cfg.dir, segment))
+            .ok()?;
         let mut buf = vec![0u8; len as usize];
-        f.read_exact(&mut buf).ok()?;
+        self.io.read_exact_at(&mut f, offset, &mut buf).ok()?;
         self.verify_record(req, &buf)
     }
 
@@ -696,7 +760,8 @@ impl PageStore {
         debug_assert_eq!(page.len(), self.cfg.page_bytes);
         {
             let mut s = self.lock();
-            if s.dir.contains_key(&key) || !s.pending.insert(key) {
+            // degraded: persistence is disabled, drop the job at the door
+            if s.degraded || s.dir.contains_key(&key) || !s.pending.insert(key) {
                 return false;
             }
         }
@@ -814,6 +879,12 @@ mod tests {
             budget_bytes: 0,
             segment_bytes: 4096,
             mmap: false,
+            // no retries / effectively no degradation: these tests
+            // exercise the happy path and explicit corruption, not the
+            // fault-injection policy (see tests/request_lifecycle.rs)
+            retries: 0,
+            retry_backoff_ms: 0,
+            degrade_after: 1_000_000,
         }
     }
 

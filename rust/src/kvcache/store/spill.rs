@@ -11,9 +11,25 @@
 //! worker appends records to the active segment, rotates at
 //! `segment_bytes`, and enforces the byte budget by retiring whole
 //! oldest segments (never the active one).  A failed append poisons the
-//! active segment (the next job starts a fresh one) so a half-written
-//! record is never extended — on the next boot the damaged tail reads
-//! as a clean end-of-segment.
+//! active segment (the next attempt starts a fresh one) so a
+//! half-written record is never extended — on the next boot the damaged
+//! tail reads as a clean end-of-segment.
+//!
+//! # Failure handling
+//!
+//! All segment I/O goes through the store's [`SegmentIo`] shim, so a
+//! failing disk is a deterministic test case, not a production
+//! surprise.  A failed append (create or write) is retried up to
+//! `StoreConfig::retries` times with capped exponential backoff, each
+//! attempt on a *fresh* segment.  When a job exhausts its retries it is
+//! dropped (`spill_errors`) and counted against
+//! `StoreConfig::degrade_after`; once that many jobs fail back-to-back
+//! with no durable append in between, the store **degrades to
+//! disabled**: `Shared::degraded` flips, queued jobs drain as no-ops,
+//! new spills are refused at the door, and the serving stats line
+//! carries a STORE-DEGRADED marker.  Reads are untouched — everything
+//! already durable keeps serving, and the cache runs exactly as it
+//! would with persistence off.
 //!
 //! Durability: segment data is flushed on every append (plain
 //! `write_all` on an unbuffered `File`) and fsync'd on [`Job::Flush`]
@@ -21,14 +37,14 @@
 //! store is a cache of recomputable artifacts — losing the last few
 //! records to a crash costs a re-encode, not correctness).
 
-use std::fs::{File, OpenOptions};
-use std::io::Write;
+use std::fs::File;
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::super::page::PrefixKey;
-use super::{record, segment_path, Shared, StoreConfig};
+use super::{record, segment_path, SegmentIo, Shared, StoreConfig};
 
 pub(crate) enum Job {
     Spill {
@@ -44,12 +60,13 @@ pub(crate) enum Job {
 pub(crate) fn spawn(
     cfg: StoreConfig,
     shared: Arc<Mutex<Shared>>,
+    io: Arc<dyn SegmentIo>,
     rx: mpsc::Receiver<Job>,
     next_segment: u64,
 ) -> Result<std::thread::JoinHandle<()>> {
     Ok(std::thread::Builder::new()
         .name("isoquant-spill".into())
-        .spawn(move || worker(cfg, shared, rx, next_segment))?)
+        .spawn(move || worker(cfg, shared, io, rx, next_segment))?)
 }
 
 struct ActiveSegment {
@@ -58,7 +75,13 @@ struct ActiveSegment {
     bytes: u64,
 }
 
-fn worker(cfg: StoreConfig, shared: Arc<Mutex<Shared>>, rx: mpsc::Receiver<Job>, mut next_id: u64) {
+fn worker(
+    cfg: StoreConfig,
+    shared: Arc<Mutex<Shared>>,
+    io: Arc<dyn SegmentIo>,
+    rx: mpsc::Receiver<Job>,
+    mut next_id: u64,
+) {
     let mut active: Option<ActiveSegment> = None;
     let mut buf: Vec<u8> = Vec::new();
     // recv drains every queued job before reporting disconnect, so
@@ -68,7 +91,7 @@ fn worker(cfg: StoreConfig, shared: Arc<Mutex<Shared>>, rx: mpsc::Receiver<Job>,
         match job {
             Job::Flush(ack) => {
                 if let Some(a) = active.as_ref() {
-                    let _ = a.file.sync_all();
+                    let _ = io.sync(&a.file);
                 }
                 let _ = ack.send(());
             }
@@ -78,19 +101,27 @@ fn worker(cfg: StoreConfig, shared: Arc<Mutex<Shared>>, rx: mpsc::Receiver<Job>,
                 tokens,
                 page,
             } => {
-                append_one(&cfg, &shared, &mut active, &mut next_id, &mut buf, key, parent, &tokens, &page);
+                append_one(
+                    &cfg, &shared, &io, &mut active, &mut next_id, &mut buf, key, parent, &tokens,
+                    &page,
+                );
             }
         }
     }
     if let Some(a) = active.as_ref() {
-        let _ = a.file.sync_all();
+        let _ = io.sync(&a.file);
     }
 }
 
+/// Append one record, retrying failed attempts on fresh segments with
+/// capped exponential backoff.  Success resets the degrade counter; a
+/// job that exhausts its retries is dropped and counted toward
+/// degradation.
 #[allow(clippy::too_many_arguments)]
 fn append_one(
     cfg: &StoreConfig,
     shared: &Arc<Mutex<Shared>>,
+    io: &Arc<dyn SegmentIo>,
     active: &mut Option<ActiveSegment>,
     next_id: &mut u64,
     buf: &mut Vec<u8>,
@@ -99,40 +130,91 @@ fn append_one(
     tokens: &[i32],
     page: &[u8],
 ) {
+    // degraded: the channel may still hold queued jobs — drain them
+    // without touching the disk again
+    if shared.lock().unwrap_or_else(|e| e.into_inner()).degraded {
+        let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+        s.pending.remove(&key);
+        return;
+    }
+    for attempt in 0..=cfg.retries {
+        if attempt > 0 {
+            // capped exponential backoff: backoff * 2^(attempt-1), ≤ 1s
+            let ms = cfg
+                .retry_backoff_ms
+                .saturating_mul(1u64 << (attempt - 1).min(20))
+                .min(1_000);
+            if ms > 0 {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+            s.stats.spill_retries += 1;
+        }
+        match try_append(cfg, shared, io, active, next_id, buf, key, parent, tokens, page) {
+            Ok(()) => {
+                let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+                s.consecutive_failures = 0;
+                return;
+            }
+            Err(()) => {}
+        }
+    }
+    // all attempts failed: drop the job and count toward degradation
+    let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+    s.pending.remove(&key);
+    s.stats.spill_errors += 1;
+    s.consecutive_failures += 1;
+    if s.consecutive_failures >= cfg.degrade_after {
+        s.degraded = true;
+        drop(s);
+        eprintln!(
+            "[isoquant-store] {} consecutive spill failures — persistence \
+             DEGRADED to disabled (serving continues; reads of already-durable \
+             records stay enabled; restart to re-arm writes)",
+            cfg.degrade_after
+        );
+    }
+}
+
+/// One append attempt.  On failure the active segment is abandoned
+/// (its real on-disk size is accounted so a torn tail still counts
+/// against the budget) and `Err` is returned — the caller decides
+/// whether to retry on a fresh segment.
+#[allow(clippy::too_many_arguments)]
+fn try_append(
+    cfg: &StoreConfig,
+    shared: &Arc<Mutex<Shared>>,
+    io: &Arc<dyn SegmentIo>,
+    active: &mut Option<ActiveSegment>,
+    next_id: &mut u64,
+    buf: &mut Vec<u8>,
+    key: PrefixKey,
+    parent: Option<PrefixKey>,
+    tokens: &[i32],
+    page: &[u8],
+) -> Result<(), ()> {
     // rotate once the active segment crossed the threshold
     if active.as_ref().is_some_and(|a| a.bytes >= cfg.segment_bytes) {
         if let Some(a) = active.take() {
-            let _ = a.file.sync_all();
+            let _ = io.sync(&a.file);
         }
     }
     if active.is_none() {
         let id = *next_id;
-        match OpenOptions::new()
-            .create_new(true)
-            .write(true)
-            .open(segment_path(&cfg.dir, id))
-        {
-            Ok(file) => {
-                *next_id += 1;
-                *active = Some(ActiveSegment { id, file, bytes: 0 });
-            }
-            Err(_) => {
-                // move past the failed id either way: a create_new
-                // collision (e.g. another writer took this id) must
-                // not wedge every future spill on the same name
-                *next_id += 1;
-                let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
-                s.pending.remove(&key);
-                s.stats.spill_errors += 1;
-                return;
-            }
+        // move past the attempted id either way: a create_new collision
+        // (e.g. another writer took this id) must not wedge every
+        // future spill on the same name
+        *next_id += 1;
+        match io.create_new(&segment_path(&cfg.dir, id)) {
+            Ok(file) => *active = Some(ActiveSegment { id, file, bytes: 0 }),
+            Err(_) => return Err(()),
         }
     }
     let a = active.as_mut().unwrap();
     buf.clear();
     record::encode_record(buf, key, parent, cfg.fingerprint, tokens, page);
     let offset = a.bytes;
-    if a.file.write_all(buf).is_err() {
+    if io.write_all(&mut a.file, buf).is_err() {
         // the segment may now hold a torn record: abandon it so the
         // tail is never extended (it scans as a clean partial segment).
         // Account the file's *real* size — the torn bytes occupy disk
@@ -144,11 +226,14 @@ fn append_one(
             .map(|m| m.len())
             .unwrap_or(a.bytes + buf.len() as u64);
         *active = None;
-        let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
-        s.segments.insert(id, bytes);
-        s.pending.remove(&key);
-        s.stats.spill_errors += 1;
-        return;
+        if bytes == 0 {
+            // nothing landed: no torn tail to protect, drop the file
+            let _ = std::fs::remove_file(segment_path(&cfg.dir, id));
+        } else {
+            let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+            s.segments.insert(id, bytes);
+        }
+        return Err(());
     }
     a.bytes += buf.len() as u64;
     let (id, seg_bytes) = (a.id, a.bytes);
@@ -174,4 +259,5 @@ fn append_one(
     for old in retired {
         let _ = std::fs::remove_file(segment_path(&cfg.dir, old));
     }
+    Ok(())
 }

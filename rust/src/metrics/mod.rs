@@ -116,6 +116,19 @@ pub struct ShareStats {
     /// decode output bytes those skipped runs would have produced
     /// (K and V both counted)
     pub bytes_saved: AtomicU64,
+    /// requests dropped mid-flight because the client disconnected or
+    /// explicitly cancelled (lane + pages freed the same engine step)
+    pub requests_cancelled: u64,
+    /// requests finished with `finish: "timeout"` (per-request
+    /// `deadline_ms` or the `[server] request_timeout_ms` default)
+    pub requests_timed_out: u64,
+    /// requests shed at admission because the bounded queue
+    /// (`[server] max_queue`) was full
+    pub requests_shed: u64,
+    /// 1 once the persistent store has tripped into degraded mode
+    /// (persistence disabled after repeated I/O failures; serving
+    /// continues without it)
+    pub store_degraded: u64,
 }
 
 impl Clone for ShareStats {
@@ -134,6 +147,10 @@ impl Clone for ShareStats {
             pages_promoted: self.pages_promoted,
             strips_deduped: AtomicU64::new(self.strips_deduped.load(Ordering::Relaxed)),
             bytes_saved: AtomicU64::new(self.bytes_saved.load(Ordering::Relaxed)),
+            requests_cancelled: self.requests_cancelled,
+            requests_timed_out: self.requests_timed_out,
+            requests_shed: self.requests_shed,
+            store_degraded: self.store_degraded,
         }
     }
 }
@@ -155,6 +172,10 @@ impl PartialEq for ShareStats {
                 == other.strips_deduped.load(Ordering::Relaxed)
             && self.bytes_saved.load(Ordering::Relaxed)
                 == other.bytes_saved.load(Ordering::Relaxed)
+            && self.requests_cancelled == other.requests_cancelled
+            && self.requests_timed_out == other.requests_timed_out
+            && self.requests_shed == other.requests_shed
+            && self.store_degraded == other.store_degraded
     }
 }
 
@@ -162,7 +183,7 @@ impl Eq for ShareStats {}
 
 impl ShareStats {
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "prefix: hits={}p/{}t cow={} dedup={:.1}MB slotcopy={}s/{} published={} \
              evicted={} spill={} rehydrated={} promote={} \
              gather-dedup={}r/{:.1}MB",
@@ -179,7 +200,18 @@ impl ShareStats {
             self.pages_promoted,
             self.strips_deduped.load(Ordering::Relaxed),
             self.bytes_saved.load(Ordering::Relaxed) as f64 / 1e6,
-        )
+        );
+        // lifecycle counters only clutter the line once they fire
+        if self.requests_cancelled + self.requests_timed_out + self.requests_shed > 0 {
+            s.push_str(&format!(
+                " lifecycle: cancelled={} timeout={} shed={}",
+                self.requests_cancelled, self.requests_timed_out, self.requests_shed,
+            ));
+        }
+        if self.store_degraded > 0 {
+            s.push_str(" STORE-DEGRADED");
+        }
+        s
     }
 }
 

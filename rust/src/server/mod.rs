@@ -1,6 +1,7 @@
 //! TCP serving front-end: JSON-lines protocol over `std::net`.
 //!
 //! Request:  `{"id": 1, "prompt": [3, 17, 5], "max_new_tokens": 16}`
+//!           (optional `"deadline_ms": 250` per-request deadline)
 //! Response: `{"id": 1, "tokens": [...], "prompt_len": 3,
 //!             "ttft_us": 1234.5, "total_us": 5678.9, "finish": "max_tokens"}`
 //!
@@ -9,6 +10,21 @@
 //! to the matching connection.  One in-flight request per connection
 //! line keeps the protocol trivial while still exercising batched
 //! multi-client serving (clients connect concurrently).
+//!
+//! # Request lifecycle
+//!
+//! Each connection's reader detects EOF/disconnect and routes
+//! [`ServerMsg::Cancel`] for every request it submitted — a dead socket
+//! frees its lane and pages within one engine step instead of decoding
+//! to `max_new_tokens` for nobody.  With `[server] max_queue` set, the
+//! admission queue is bounded and overflow is shed immediately with
+//! `{"error":"overloaded","retry_after_ms":…}`.  With
+//! `[server] request_timeout_ms` (or per-request `deadline_ms`) set,
+//! expired requests finish with `finish: "timeout"`.  On stop/SIGINT
+//! the listener closes, queued requests are shed, in-flight lanes
+//! finish up to `[server] drain_timeout_ms`, and the page store is
+//! flushed before the loop returns.  All knobs default off: the
+//! default-config serve path behaves exactly as it did without them.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -16,34 +32,80 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Batcher, Completion, Engine, FinishReason, Request};
+use crate::metrics::ShareStats;
 use crate::util::json::Json;
 
-/// Parse one request line.
-pub fn parse_request(line: &str, fallback_id: u64, default_max_new: usize) -> Result<Request> {
+/// Control messages from connection readers to the engine loop.
+pub enum ServerMsg {
+    Submit(Request),
+    /// the connection that submitted this request id is gone — free
+    /// its queue slot / lane / pages; no response will be written
+    Cancel(u64),
+}
+
+/// Extract a non-negative integer field (JSON numbers are f64: a
+/// fractional or negative value is a malformed request, not something
+/// to silently truncate).
+fn json_u64(v: &Json, what: &str) -> Result<u64> {
+    let f = v.as_f64().with_context(|| format!("{what} must be a number"))?;
+    if !f.is_finite() || f.fract() != 0.0 || f < 0.0 || f > (1u64 << 53) as f64 {
+        bail!("{what} must be a non-negative integer, got {f}");
+    }
+    Ok(f as u64)
+}
+
+/// Parse one request line.  `max_new_cap` bounds `max_new_tokens`
+/// (requests asking for more than the engine could ever produce are
+/// rejected here with a structured error instead of tying up a lane).
+pub fn parse_request(
+    line: &str,
+    fallback_id: u64,
+    default_max_new: usize,
+    max_new_cap: usize,
+) -> Result<Request> {
     let v = Json::parse(line).context("request is not valid JSON")?;
-    let id = v
-        .get("id")
-        .and_then(|x| x.as_f64())
-        .map(|f| f as u64)
-        .unwrap_or(fallback_id);
+    let id = match v.get("id") {
+        None => fallback_id,
+        Some(x) => json_u64(x, "'id'")?,
+    };
     let prompt = v
         .get("prompt")
         .and_then(|x| x.as_arr())
         .context("request missing 'prompt' array")?
         .iter()
-        .map(|t| t.as_f64().map(|f| f as i32).context("bad token"))
+        .map(|t| {
+            let t = json_u64(t, "prompt token")?;
+            if t > i32::MAX as u64 {
+                bail!("prompt token {t} out of range");
+            }
+            Ok(t as i32)
+        })
         .collect::<Result<Vec<i32>>>()?;
-    let max_new_tokens = v
-        .get("max_new_tokens")
-        .and_then(|x| x.as_usize())
-        .unwrap_or(default_max_new);
+    let max_new_tokens = match v.get("max_new_tokens") {
+        None => default_max_new,
+        Some(x) => {
+            let n = json_u64(x, "'max_new_tokens'")? as usize;
+            if n == 0 {
+                bail!("'max_new_tokens' must be >= 1");
+            }
+            if max_new_cap > 0 && n > max_new_cap {
+                bail!("'max_new_tokens' {n} exceeds the server cap {max_new_cap}");
+            }
+            n
+        }
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => Some(json_u64(x, "'deadline_ms'")?),
+    };
     Ok(Request {
         id,
         prompt,
         max_new_tokens,
+        deadline_ms,
     })
 }
 
@@ -53,6 +115,8 @@ pub fn render_completion(c: &Completion) -> String {
         FinishReason::MaxTokens => "max_tokens",
         FinishReason::ContextFull => "context_full",
         FinishReason::Rejected => "rejected",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Timeout => "timeout",
     };
     Json::obj(vec![
         ("id", Json::num(c.id as f64)),
@@ -69,19 +133,94 @@ pub fn render_completion(c: &Completion) -> String {
     .to_string()
 }
 
-/// Run the server until `stop` is set.
+/// The structured overload-shed response (`[server] max_queue`).
+fn render_overloaded(retry_after_ms: u64) -> String {
+    Json::obj(vec![
+        ("error", Json::str("overloaded")),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------
+// SIGINT → graceful drain
+// ---------------------------------------------------------------------
+
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_sig: std::os::raw::c_int) {
+    // async-signal-safe: a single atomic store
+    SIGINT_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT (ctrl-C) into the serve loop's stop path so an
+/// interactive shutdown drains gracefully (lanes finish, store
+/// flushes) instead of killing the process mid-write.  No-op off unix.
+pub fn install_sigint_handler() {
+    #[cfg(unix)]
+    {
+        // the symbol lives in the platform libc std already links —
+        // same idiom as the store's flock/mmap externs
+        extern "C" {
+            fn signal(signum: std::os::raw::c_int, handler: usize) -> usize;
+        }
+        const SIGINT: std::os::raw::c_int = 2;
+        unsafe {
+            signal(SIGINT, on_sigint as usize);
+        }
+    }
+}
+
+/// Has a SIGINT arrived since [`install_sigint_handler`]?
+pub fn sigint_requested() -> bool {
+    SIGINT_FLAG.load(Ordering::SeqCst)
+}
+
+/// Send-able end-of-serve snapshot (the engine itself is `!Send`):
+/// lifecycle/sharing counters for smoke tests and benches to assert on.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub share: ShareStats,
+    /// total requests submitted to the engine
+    pub requests: u64,
+    /// lanes still active when the drain window closed (0 on a clean
+    /// drain)
+    pub undrained_lanes: usize,
+}
+
+/// Run the server until `stop` is set (or SIGINT, when the handler is
+/// installed).
 ///
 /// The PJRT client is `!Send`, so the *engine loop runs on the calling
 /// thread*; the TCP acceptor and per-connection readers run on spawned
 /// threads and feed requests through a channel.
-pub fn serve(engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<()> {
+pub fn serve(engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<ServeReport> {
     let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
     serve_on(engine, listener, stop)
 }
 
+type Sinks = Arc<Mutex<HashMap<u64, TcpStream>>>;
+
+/// Write `line` to the sink registered for `id` (if any) and drop the
+/// sink entry — each request gets exactly one response line.
+fn respond(sinks: &Sinks, id: u64, line: &str) {
+    let sink = sinks
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .remove(&id);
+    if let Some(mut s) = sink {
+        let _ = writeln!(s, "{line}");
+    }
+}
+
 /// [`serve`] on an already-bound listener (lets tests bind port 0 and
 /// read the assigned address before starting the engine loop).
-pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
+pub fn serve_on(
+    mut engine: Engine,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> Result<ServeReport> {
     listener.set_nonblocking(true)?;
     eprintln!(
         "isoquant: serving on {} (variant={}, bits={}, prefix_sharing={}, prefix_index={})",
@@ -95,10 +234,12 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
         engine.cfg.prefix_index.name(),
     );
 
-    let (req_tx, req_rx) = mpsc::channel::<Request>();
-    type Sinks = Arc<Mutex<HashMap<u64, TcpStream>>>;
+    let (req_tx, req_rx) = mpsc::channel::<ServerMsg>();
     let sinks: Sinks = Arc::new(Mutex::new(HashMap::new()));
     let default_max_new = engine.cfg.max_new_tokens_default;
+    // a request can never produce more than max_seq tokens; asking for
+    // more is a malformed request, answered at parse time
+    let max_new_cap = engine.model.meta.max_seq;
 
     // acceptor thread (TcpListener is Send; the engine is not)
     let stop_a = stop.clone();
@@ -107,45 +248,28 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
         .name("isoquant-acceptor".into())
         .spawn(move || {
             let next_id = Arc::new(AtomicU64::new(1));
-            while !stop_a.load(Ordering::SeqCst) {
+            while !stop_a.load(Ordering::SeqCst) && !sigint_requested() {
                 match listener.accept() {
                     Ok((stream, _addr)) => {
                         let req_tx = req_tx.clone();
                         let sinks = sinks_a.clone();
                         let next_id = next_id.clone();
+                        // one bad socket must not take the acceptor
+                        // down: a failed clone drops this connection
+                        // and moves on
+                        let Ok(read_half) = stream.try_clone() else {
+                            continue;
+                        };
                         std::thread::spawn(move || {
-                            let reader =
-                                BufReader::new(stream.try_clone().expect("clone stream"));
-                            for line in reader.lines() {
-                                let Ok(line) = line else { break };
-                                if line.trim().is_empty() {
-                                    continue;
-                                }
-                                let fallback =
-                                    next_id.fetch_add(1, Ordering::SeqCst) | (1 << 62);
-                                match parse_request(&line, fallback, default_max_new) {
-                                    Ok(req) => {
-                                        sinks
-                                            .lock()
-                                            .unwrap()
-                                            .insert(req.id, stream.try_clone().expect("clone"));
-                                        if req_tx.send(req).is_err() {
-                                            break;
-                                        }
-                                    }
-                                    Err(e) => {
-                                        let mut s = stream.try_clone().expect("clone");
-                                        let _ = writeln!(
-                                            s,
-                                            "{}",
-                                            Json::obj(vec![(
-                                                "error",
-                                                Json::str(format!("{e:#}"))
-                                            )])
-                                        );
-                                    }
-                                }
-                            }
+                            connection_reader(
+                                stream,
+                                read_half,
+                                req_tx,
+                                sinks,
+                                next_id,
+                                default_max_new,
+                                max_new_cap,
+                            );
                         });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -154,6 +278,8 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
                     Err(_) => break,
                 }
             }
+            // dropping the listener here closes the accept socket —
+            // the first step of a graceful drain
         })?;
 
     // engine loop on this thread.  Incoming requests pass through the
@@ -170,11 +296,43 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
         std::time::Duration::from_micros(engine.cfg.batch_window_us),
         engine.cfg.max_batch.max(1),
     );
+    let max_queue = engine.cfg.max_queue;
     let mut last_stats = std::time::Instant::now();
     let mut last_finished: u64 = 0;
-    while !stop.load(Ordering::SeqCst) {
-        while let Ok(r) = req_rx.try_recv() {
-            batcher.submit(r);
+    while !stop.load(Ordering::SeqCst) && !sigint_requested() {
+        while let Ok(msg) = req_rx.try_recv() {
+            match msg {
+                ServerMsg::Submit(r) => {
+                    // bounded admission queue: overflow is shed with a
+                    // structured error instead of growing without bound.
+                    // Free lanes count as headroom — a burst on an idle
+                    // server lands on lanes, not on the bound
+                    let queued = batcher.pending() + engine.pending();
+                    if max_queue > 0 && queued >= max_queue + engine.free_lanes() {
+                        // a rough time-to-free-slot: one batching
+                        // window per queued wave, floor 25ms
+                        let retry = (engine.cfg.batch_window_us / 1_000).max(25);
+                        respond(&sinks, r.id, &render_overloaded(retry));
+                        engine.cache.share.requests_shed += 1;
+                    } else {
+                        batcher.submit(r);
+                    }
+                }
+                ServerMsg::Cancel(id) => {
+                    // still queued → drop; mid-flight → free the lane
+                    // and its pages.  Unknown (already finished) → no-op
+                    let dropped = batcher.cancel(id);
+                    if dropped {
+                        engine.cache.share.requests_cancelled += 1;
+                    } else {
+                        engine.cancel(id);
+                    }
+                    sinks
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .remove(&id);
+                }
+            }
         }
         // idle-lane fast path: lanes nothing is using can start
         // immediately; requests beyond the free-lane count keep
@@ -193,10 +351,7 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
         let worked = engine.step()?;
         for c in engine.take_completions() {
             last_finished += 1;
-            let line = render_completion(&c);
-            if let Some(mut s) = sinks.lock().unwrap().remove(&c.id) {
-                let _ = writeln!(s, "{line}");
-            }
+            respond(&sinks, c.id, &render_completion(&c));
         }
         // periodic serve stats line (page residency, prefix sharing,
         // throughput) — only when something completed since last print
@@ -211,8 +366,112 @@ pub fn serve_on(mut engine: Engine, listener: TcpListener, stop: Arc<AtomicBool>
             std::thread::sleep(std::time::Duration::from_micros(200));
         }
     }
-    acceptor.join().expect("acceptor thread");
-    Ok(())
+
+    // ------------------------------------------------------------------
+    // graceful drain: listener closed (acceptor exits on the stop
+    // flag), queued requests shed, in-flight lanes finish up to
+    // drain_timeout_ms, spill queue flushed — then return
+    // ------------------------------------------------------------------
+    let drain_deadline = std::time::Instant::now()
+        + std::time::Duration::from_millis(engine.cfg.drain_timeout_ms);
+    // shed everything not yet on a lane: these will never run
+    for r in batcher.take_up_to(usize::MAX) {
+        engine.submit(r);
+    }
+    while let Ok(msg) = req_rx.try_recv() {
+        if let ServerMsg::Submit(r) = msg {
+            engine.submit(r);
+        }
+    }
+    // move just-arrived requests into the engine queue, then shed the
+    // whole queue with definitive rejections (clients get an answer,
+    // not a hang)
+    let shed = engine.shed_waiting();
+    let mut drained = true;
+    while engine.active() > 0 {
+        if std::time::Instant::now() >= drain_deadline {
+            drained = false;
+            break;
+        }
+        engine.step()?;
+        for c in engine.take_completions() {
+            respond(&sinks, c.id, &render_completion(&c));
+        }
+    }
+    for c in engine.take_completions() {
+        respond(&sinks, c.id, &render_completion(&c));
+    }
+    // everything spilled so far becomes durable before the process can
+    // exit; a degraded store makes this a no-op
+    engine.cache.flush_store();
+    let undrained_lanes = engine.active();
+    eprintln!(
+        "isoquant: drained (shed={shed} undrained_lanes={undrained_lanes}) — {}",
+        engine.stats_line()
+    );
+    acceptor.join().map_err(|_| {
+        anyhow::anyhow!("acceptor thread panicked")
+    })?;
+    Ok(ServeReport {
+        share: engine.cache.share.clone(),
+        requests: crate::metrics::Counters::get(&engine.stats.counters.requests),
+        undrained_lanes: if drained { 0 } else { undrained_lanes },
+    })
+}
+
+/// Per-connection reader: parse request lines into the engine queue,
+/// and on EOF/disconnect route a [`ServerMsg::Cancel`] for every id
+/// this connection submitted — whatever is still queued or mid-decode
+/// is freed, and no sink entry outlives its socket.
+#[allow(clippy::too_many_arguments)]
+fn connection_reader(
+    stream: TcpStream,
+    read_half: TcpStream,
+    req_tx: mpsc::Sender<ServerMsg>,
+    sinks: Sinks,
+    next_id: Arc<AtomicU64>,
+    default_max_new: usize,
+    max_new_cap: usize,
+) {
+    let reader = BufReader::new(read_half);
+    let mut submitted: Vec<u64> = Vec::new();
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fallback = next_id.fetch_add(1, Ordering::SeqCst) | (1 << 62);
+        match parse_request(&line, fallback, default_max_new, max_new_cap) {
+            Ok(req) => {
+                let Ok(sink) = stream.try_clone() else { break };
+                sinks
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(req.id, sink);
+                let id = req.id;
+                if req_tx.send(ServerMsg::Submit(req)).is_err() {
+                    break;
+                }
+                submitted.push(id);
+            }
+            Err(e) => {
+                let Ok(mut s) = stream.try_clone() else { break };
+                let _ = writeln!(
+                    s,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))])
+                );
+            }
+        }
+    }
+    // EOF / read error: the client is gone.  Cancel everything this
+    // connection submitted (finished ids are no-ops) so no lane decodes
+    // for a dead socket and no sink-map entry leaks
+    for id in submitted {
+        if req_tx.send(ServerMsg::Cancel(id)).is_err() {
+            break;
+        }
+    }
 }
 
 /// Minimal blocking client for tests, examples, and the CLI.
@@ -230,15 +489,36 @@ impl Client {
 
     /// Send one request and block for its completion line.
     pub fn generate(&mut self, id: u64, prompt: &[i32], max_new: usize) -> Result<Json> {
-        let req = Json::obj(vec![
+        self.send(id, prompt, max_new, None)?;
+        self.recv()
+    }
+
+    /// Fire a request without waiting for the response (disconnect /
+    /// overload tests pipeline these).
+    pub fn send(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        max_new: usize,
+        deadline_ms: Option<u64>,
+    ) -> Result<()> {
+        let mut fields = vec![
             ("id", Json::num(id as f64)),
             (
                 "prompt",
                 Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
             ),
             ("max_new_tokens", Json::num(max_new as f64)),
-        ]);
-        writeln!(self.stream, "{}", req.to_string())?;
+        ];
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        writeln!(self.stream, "{}", Json::obj(fields).to_string())?;
+        Ok(())
+    }
+
+    /// Block for the next response line.
+    pub fn recv(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(line.trim()).context("parse completion")
@@ -252,24 +532,63 @@ mod tests {
 
     #[test]
     fn parse_request_full() {
-        let r = parse_request(r#"{"id": 7, "prompt": [1,2,3], "max_new_tokens": 5}"#, 0, 32)
-            .unwrap();
+        let r = parse_request(
+            r#"{"id": 7, "prompt": [1,2,3], "max_new_tokens": 5}"#,
+            0,
+            32,
+            256,
+        )
+        .unwrap();
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt, vec![1, 2, 3]);
         assert_eq!(r.max_new_tokens, 5);
+        assert_eq!(r.deadline_ms, None);
     }
 
     #[test]
     fn parse_request_defaults() {
-        let r = parse_request(r#"{"prompt": [4]}"#, 99, 32).unwrap();
+        let r = parse_request(r#"{"prompt": [4]}"#, 99, 32, 256).unwrap();
         assert_eq!(r.id, 99);
         assert_eq!(r.max_new_tokens, 32);
     }
 
     #[test]
+    fn parse_request_deadline() {
+        let r = parse_request(r#"{"prompt": [4], "deadline_ms": 250}"#, 1, 32, 256).unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        assert!(parse_request(r#"{"prompt": [4], "deadline_ms": -5}"#, 1, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": [4], "deadline_ms": 0.5}"#, 1, 32, 256).is_err());
+    }
+
+    #[test]
     fn parse_request_rejects_bad() {
-        assert!(parse_request("not json", 0, 32).is_err());
-        assert!(parse_request(r#"{"id": 1}"#, 0, 32).is_err());
+        assert!(parse_request("not json", 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"id": 1}"#, 0, 32, 256).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_tokens() {
+        // negative, fractional, and out-of-range token ids are
+        // malformed requests, not values to silently cast
+        assert!(parse_request(r#"{"prompt": [1, -2, 3]}"#, 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": [1.5]}"#, 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": [3000000000]}"#, 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": ["a"]}"#, 0, 32, 256).is_err());
+        // negative / fractional ids too
+        assert!(parse_request(r#"{"id": -1, "prompt": [1]}"#, 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"id": 1.5, "prompt": [1]}"#, 0, 32, 256).is_err());
+    }
+
+    #[test]
+    fn parse_request_caps_max_new_tokens() {
+        assert!(parse_request(r#"{"prompt": [1], "max_new_tokens": 0}"#, 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new_tokens": 257}"#, 0, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new_tokens": -4}"#, 0, 32, 256).is_err());
+        let r = parse_request(r#"{"prompt": [1], "max_new_tokens": 256}"#, 0, 32, 256).unwrap();
+        assert_eq!(r.max_new_tokens, 256);
+        // cap 0 = uncapped
+        let r = parse_request(r#"{"prompt": [1], "max_new_tokens": 9999}"#, 0, 32, 0).unwrap();
+        assert_eq!(r.max_new_tokens, 9999);
     }
 
     #[test]
@@ -288,5 +607,23 @@ mod tests {
         assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(v.get("prefix_hit_pages").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
+    }
+
+    #[test]
+    fn timeout_and_cancelled_render() {
+        let mut c = Completion {
+            id: 1,
+            tokens: vec![],
+            prompt_len: 1,
+            prefix_hit_pages: 0,
+            timing: Timing::new(),
+            finish: FinishReason::Timeout,
+        };
+        assert!(render_completion(&c).contains(r#""finish": "timeout""#));
+        c.finish = FinishReason::Cancelled;
+        assert!(render_completion(&c).contains(r#""finish": "cancelled""#));
+        let v = Json::parse(&render_overloaded(25)).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("retry_after_ms").unwrap().as_usize(), Some(25));
     }
 }

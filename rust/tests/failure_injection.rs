@@ -105,7 +105,7 @@ fn server_request_parser_survives_fuzz() {
         let mut bytes = vec![0u8; len];
         rng.fill_bytes(&mut bytes);
         let s = String::from_utf8_lossy(&bytes).to_string();
-        let _ = parse_request(&s, 1, 16);
+        let _ = parse_request(&s, 1, 16, 256);
     }
     // structured fuzz around the real schema
     check(200, 0xF022, |g| {
@@ -115,9 +115,9 @@ fn server_request_parser_survives_fuzz() {
         let line = format!(
             r#"{{"id": {id}, "prompt": [{}], "max_new_tokens": {}}}"#,
             toks.join(","),
-            g.usize_in(0, 64)
+            g.usize_in(1, 64)
         );
-        let req = parse_request(&line, 7, 16).map_err(|e| e.to_string())?;
+        let req = parse_request(&line, 7, 16, 256).map_err(|e| e.to_string())?;
         if req.prompt.len() != n {
             return Err("token count mismatch".into());
         }

@@ -156,11 +156,11 @@ fn engine_serves_requests_end_to_end() {
     let n_req = 6;
     for i in 0..n_req {
         let plen = 3 + rng.below(40);
-        engine.submit(Request {
-            id: i,
-            prompt: (0..plen).map(|_| rng.below(vocab) as i32).collect(),
-            max_new_tokens: 8,
-        });
+        engine.submit(Request::new(
+            i,
+            (0..plen).map(|_| rng.below(vocab) as i32).collect(),
+            8,
+        ));
     }
     let completions = engine.run_to_completion().unwrap();
     assert_eq!(completions.len(), n_req as usize);
@@ -183,16 +183,8 @@ fn engine_rejects_oversized_and_continues() {
     let max_seq = model.meta.max_seq;
     let vocab = model.meta.vocab;
     let mut engine = Engine::new(model, EngineConfig::default()).unwrap();
-    engine.submit(Request {
-        id: 1,
-        prompt: vec![1; max_seq + 10],
-        max_new_tokens: 4,
-    });
-    engine.submit(Request {
-        id: 2,
-        prompt: vec![2; 4],
-        max_new_tokens: 4,
-    });
+    engine.submit(Request::new(1, vec![1; max_seq + 10], 4));
+    engine.submit(Request::new(2, vec![2; 4], 4));
     let completions = engine.run_to_completion().unwrap();
     assert_eq!(completions.len(), 2);
     let rejected = completions.iter().find(|c| c.id == 1).unwrap();
@@ -210,11 +202,7 @@ fn engine_deterministic_across_runs() {
     let run = || {
         let model = ServingModel::load(&dir).unwrap();
         let mut engine = Engine::new(model, EngineConfig::default()).unwrap();
-        engine.submit(Request {
-            id: 0,
-            prompt: vec![3, 1, 4, 1, 5],
-            max_new_tokens: 6,
-        });
+        engine.submit(Request::new(0, vec![3, 1, 4, 1, 5], 6));
         engine.run_to_completion().unwrap()[0].tokens.clone()
     };
     assert_eq!(run(), run(), "greedy decode must be reproducible");
@@ -233,11 +221,7 @@ fn compressed_decode_tracks_exact_decode() {
     cfg.bits = 4;
     let mut engine = Engine::new(model, cfg).unwrap();
     let prompt: Vec<i32> = (0..12).map(|i| ((i * 37) % vocab) as i32).collect();
-    engine.submit(Request {
-        id: 0,
-        prompt: prompt.clone(),
-        max_new_tokens: 8,
-    });
+    engine.submit(Request::new(0, prompt.clone(), 8));
     let comp = engine.run_to_completion().unwrap();
     let compressed_tokens = &comp[0].tokens;
 

@@ -473,11 +473,7 @@ fn prop_batcher_never_loses_or_duplicates() {
         let n = g.usize_in(0, 50);
         for i in 0..n {
             b.submit_at(
-                Request {
-                    id: i as u64,
-                    prompt: vec![1],
-                    max_new_tokens: 1,
-                },
+                Request::new(i as u64, vec![1], 1),
                 t0,
             );
         }

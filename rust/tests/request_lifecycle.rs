@@ -1,0 +1,549 @@
+//! Request-lifecycle hardening tests: cancellation, deadlines,
+//! backpressure shedding, graceful drain, and the store fault-injection
+//! sweep.
+//!
+//! Two tiers:
+//! * store/manager-level tests run everywhere (no artifacts needed) —
+//!   the fault-injection contract is **degrade, never crash; miss,
+//!   never wrong bytes**;
+//! * engine/server-level tests need `make artifacts` and SKIP (pass
+//!   trivially, with a note) when artifacts are absent, exactly like
+//!   the other integration suites.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use isoquant::config::EngineConfig;
+use isoquant::coordinator::{Engine, FinishReason, Request};
+use isoquant::kvcache::store::segment_path;
+use isoquant::kvcache::{
+    chain_key, CacheManager, FaultPlan, FaultyIo, PageConfig, PageStore, PrefixKey, StoreConfig,
+};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::runtime::ServingModel;
+use isoquant::server::{serve_on, Client};
+use isoquant::util::prng::Rng;
+
+// ---------------------------------------------------------------------
+// store-level fault injection (no artifacts needed)
+// ---------------------------------------------------------------------
+
+fn tmpdir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "isoquant-lifecycle-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Store config for fault tests: buffered reads (the injector shims the
+/// buffered transport; mmap'd views are plain memory), zero backoff so
+/// retries replay instantly.
+fn fault_cfg(dir: &Path, retries: u32, degrade_after: u32) -> StoreConfig {
+    let mut c = StoreConfig::for_cache(dir.to_path_buf(), 7, 64, 0)
+        .with_mmap(false)
+        .with_fault_policy(retries, 0, degrade_after);
+    c.segment_bytes = 1 << 20;
+    c
+}
+
+fn key(i: u64) -> PrefixKey {
+    chain_key(None, &[i as i32], 0xF00D)
+}
+
+#[test]
+fn write_failure_retries_on_fresh_segment_and_succeeds() {
+    let dir = tmpdir("retry-write");
+    let io = FaultyIo::new(FaultPlan {
+        fail_writes: vec![0], // first record write fails, retry must land
+        ..FaultPlan::default()
+    });
+    let store = PageStore::open_with_io(fault_cfg(&dir, 2, 100), io).unwrap();
+    assert!(store.spill(key(1), None, &[1], &vec![0xA5u8; 64]));
+    store.flush();
+    let stats = store.stats();
+    assert_eq!(stats.spilled, 1, "the retry must succeed");
+    assert!(stats.spill_retries >= 1, "a retry must be counted");
+    assert_eq!(stats.spill_errors, 0);
+    assert!(!store.degraded());
+    assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0xA5u8; 64]));
+    // the torn first attempt landed nothing: its abandoned segment must
+    // not linger as an empty file
+    assert!(!segment_path(&dir, 0).exists(), "empty failed segment must be unlinked");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn create_failure_retries_with_a_fresh_segment_id() {
+    let dir = tmpdir("retry-create");
+    let io = FaultyIo::new(FaultPlan {
+        fail_creates: vec![0], // ENOSPC creating the first segment
+        ..FaultPlan::default()
+    });
+    let store = PageStore::open_with_io(fault_cfg(&dir, 1, 100), io).unwrap();
+    assert!(store.spill(key(1), None, &[1], &vec![0x11u8; 64]));
+    store.flush();
+    assert_eq!(store.stats().spilled, 1);
+    assert!(!store.degraded());
+    assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0x11u8; 64]));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn consecutive_failures_degrade_to_disabled_without_crashing() {
+    let dir = tmpdir("degrade");
+    let store =
+        PageStore::open_with_io(fault_cfg(&dir, 0, 2), FaultyIo::new(FaultPlan::all_writes_fail()))
+            .unwrap();
+    for i in 0..3u64 {
+        store.spill(key(i), None, &[i as i32], &vec![i as u8; 64]);
+    }
+    store.flush();
+    assert!(store.degraded(), "2 consecutive failures must trip degrade");
+    assert_eq!(store.len(), 0, "nothing became durable");
+    assert!(store.stats().spill_errors >= 2);
+    // degraded: new spills are refused at the door, loudly countable
+    assert!(!store.spill(key(9), None, &[9], &vec![9u8; 64]));
+    store.flush(); // still answers — the worker drains, it doesn't wedge
+    drop(store); // clean shutdown, no panic
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn degraded_store_keeps_serving_already_durable_reads() {
+    let dir = tmpdir("degrade-reads");
+    let io = FaultyIo::new(FaultPlan {
+        fail_writes: (1..50).collect(), // first write lands, the rest fail
+        ..FaultPlan::default()
+    });
+    let store = PageStore::open_with_io(fault_cfg(&dir, 0, 1), io).unwrap();
+    assert!(store.spill(key(1), None, &[1], &vec![0xEEu8; 64]));
+    store.flush();
+    assert!(!store.degraded());
+    store.spill(key(2), None, &[2], &vec![0x22u8; 64]);
+    store.flush();
+    assert!(store.degraded(), "one exhausted job with degrade_after=1");
+    // what was durable before the disk died keeps serving
+    assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0xEEu8; 64]));
+    assert_eq!(store.len(), 1);
+    assert!(!store.spill(key(3), None, &[3], &vec![3u8; 64]));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn short_write_leaves_a_torn_tail_that_scans_clean_on_reopen() {
+    let dir = tmpdir("torn");
+    let io = FaultyIo::new(FaultPlan {
+        short_writes: vec![1], // second record lands half, then ENOSPC
+        ..FaultPlan::default()
+    });
+    {
+        let store = PageStore::open_with_io(fault_cfg(&dir, 0, 100), io).unwrap();
+        assert!(store.spill(key(1), None, &[1], &vec![0x11u8; 64]));
+        store.flush();
+        store.spill(key(2), None, &[2], &vec![0x22u8; 64]); // torn
+        store.flush();
+        assert_eq!(store.stats().spill_errors, 1);
+        // the worker abandoned the torn segment; the next spill goes to
+        // a fresh one and must succeed
+        assert!(store.spill(key(3), None, &[3], &vec![0x33u8; 64]));
+        store.flush();
+        assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0x11u8; 64]));
+        assert!(store.read_page(key(2), None, &[2]).is_none(), "torn record is a miss");
+        assert_eq!(store.read_page(key(3), None, &[3]), Some(vec![0x33u8; 64]));
+    }
+    // reopen with a healthy disk: the torn tail terminates one
+    // segment's scan; every intact record survives
+    let store = PageStore::open(fault_cfg(&dir, 0, 100)).unwrap();
+    assert_eq!(store.len(), 2, "k1 + k3 rehydrate, torn k2 does not");
+    assert_eq!(store.stats().corrupt_tails, 1);
+    assert_eq!(store.read_page(key(1), None, &[1]), Some(vec![0x11u8; 64]));
+    assert_eq!(store.read_page(key(3), None, &[3]), Some(vec![0x33u8; 64]));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_read_errors_read_as_miss_never_wrong_bytes() {
+    // open-failure and read-failure injection: the damaged read is a
+    // dropped-entry miss; the next key still serves its exact bytes
+    for (plan, tag) in [
+        (FaultPlan { fail_opens: vec![0], ..FaultPlan::default() }, "open"),
+        (FaultPlan { fail_reads: vec![0], ..FaultPlan::default() }, "read"),
+    ] {
+        let dir = tmpdir(&format!("read-miss-{tag}"));
+        let store = PageStore::open_with_io(fault_cfg(&dir, 0, 100), FaultyIo::new(plan)).unwrap();
+        assert!(store.spill(key(1), None, &[1], &vec![0x44u8; 64]));
+        assert!(store.spill(key(2), None, &[2], &vec![0x55u8; 64]));
+        store.flush();
+        assert!(
+            store.read_page(key(1), None, &[1]).is_none(),
+            "{tag}: injected failure must be a miss"
+        );
+        assert_eq!(store.stats().read_errors, 1, "{tag}");
+        assert_eq!(store.len(), 1, "{tag}: failed entry dropped, not retried forever");
+        assert_eq!(
+            store.read_page(key(2), None, &[2]),
+            Some(vec![0x55u8; 64]),
+            "{tag}: healthy reads keep serving exact bytes"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------
+// manager-level cancellation (no artifacts needed)
+// ---------------------------------------------------------------------
+
+const TP: usize = 4;
+const D_HEAD: usize = 32;
+
+fn mk_cache(max_pages: usize) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, D_HEAD, 3));
+    let cfg = PageConfig {
+        tokens_per_page: TP,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: D_HEAD,
+        encoded_len: stage1.encoded_len(),
+    };
+    let mut m = CacheManager::new(stage1, cfg, max_pages);
+    m.prefix_sharing = true;
+    m
+}
+
+fn kv_at(stream: &[i32], t: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let seed = chain_key(None, &stream[..=t], 0xBEEF).0;
+    let mut rng = Rng::new(seed);
+    let n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+    (rng.gaussian_vec_f32(n), rng.gaussian_vec_f32(n))
+}
+
+fn append_stream(m: &mut CacheManager, seq: u64, stream: &[i32], from: usize) {
+    let cfg = m.page_cfg();
+    for t in from..stream.len() {
+        let (k, v) = kv_at(stream, t, &cfg);
+        m.append_token(seq, &k, &v).unwrap();
+    }
+}
+
+fn gather_bits(m: &CacheManager, seq: u64, t_max: usize) -> Vec<u32> {
+    let cfg = m.page_cfg();
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut k, mut v) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    m.gather(seq, t_max, &mut k, &mut v).unwrap();
+    k.iter().chain(v.iter()).map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn cancelling_one_shared_prefix_lane_leaves_the_survivor_byte_identical() {
+    // two lanes share a prompt; the engine's cancel path is
+    // `drop_seq(seq)` — dropping one mid-decode must free its pages
+    // (refcounts to zero) without disturbing the survivor's bytes
+    let mut m = mk_cache(64);
+    let prompt: Vec<i32> = (0..10).collect();
+    m.start_seq_with_prompt(1, &prompt).unwrap();
+    append_stream(&mut m, 1, &prompt, 0);
+    let reuse = m.start_seq_with_prompt(2, &prompt).unwrap();
+    assert!(reuse.pages > 0, "second lane must adopt the shared prefix");
+    // both lanes decode divergently
+    let mut s1 = prompt.clone();
+    let mut s2 = prompt.clone();
+    for d in 0..6 {
+        s1.push(1_000 + d);
+        s2.push(2_000 + d);
+    }
+    append_stream(&mut m, 1, &s1, prompt.len());
+    append_stream(&mut m, 2, &s2, prompt.len());
+    let survivor_before = gather_bits(&m, 2, s2.len());
+    let pages_before = m.live_pages();
+
+    m.drop_seq(1); // the cancel
+    assert!(m.live_pages() < pages_before, "cancel must return pages");
+    assert_eq!(
+        gather_bits(&m, 2, s2.len()),
+        survivor_before,
+        "cancelling a sibling must not change the survivor's bytes"
+    );
+    m.drop_seq(2);
+    assert_eq!(m.live_refs(), 0, "all refcounts return to zero");
+}
+
+// ---------------------------------------------------------------------
+// engine/server-level lifecycle (needs artifacts; skips cleanly)
+// ---------------------------------------------------------------------
+
+/// The XLA CPU runtime does not tolerate concurrent PJRT client
+/// creation in one process; serialize everything that touches PJRT.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_guard() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = isoquant::runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts not built; skipping lifecycle integration test");
+        None
+    }
+}
+
+fn mk_engine(dir: &Path, cfg: EngineConfig) -> Engine {
+    let model = ServingModel::load(dir).expect("load model");
+    Engine::new(model, cfg).expect("boot engine")
+}
+
+#[test]
+fn cancel_mid_decode_frees_lane_and_pages_within_one_step() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = mk_engine(&dir, EngineConfig::default());
+    engine.submit(Request::new(1, vec![3, 1, 4, 1, 5], 64));
+    // admit + prefill + at least one decode step
+    for _ in 0..4 {
+        engine.step().unwrap();
+    }
+    assert_eq!(engine.active(), 1, "request must be mid-flight");
+    assert!(engine.take_completions().is_empty());
+
+    assert!(engine.cancel(1), "known in-flight id");
+    assert_eq!(engine.active(), 0, "lane freed immediately");
+    assert_eq!(engine.cache.live_refs(), 0, "pages returned within one step");
+    assert!(engine.take_completions().is_empty(), "no completion for a dead socket");
+    assert_eq!(engine.cache.share.requests_cancelled, 1);
+    assert!(!engine.cancel(1), "second cancel of the same id is a no-op");
+
+    // the pool is fully usable afterwards
+    engine.submit(Request::new(2, vec![2, 7, 1, 8], 4));
+    let comps = engine.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].finish, FinishReason::MaxTokens);
+}
+
+#[test]
+fn cancel_while_queued_drops_the_request_silently() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = mk_engine(&dir, EngineConfig::default());
+    engine.submit(Request::new(1, vec![1, 2, 3], 4));
+    assert_eq!(engine.pending(), 1);
+    assert!(engine.cancel(1));
+    assert_eq!(engine.pending(), 0);
+    assert!(engine.run_to_completion().unwrap().is_empty());
+    assert_eq!(engine.cache.share.requests_cancelled, 1);
+}
+
+#[test]
+fn deadline_expires_before_first_token_and_mid_decode() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    // (a) queued/prefill expiry: a 1 ms deadline dies before any token
+    let mut cfg = EngineConfig::default();
+    cfg.request_timeout_ms = 1;
+    let mut engine = mk_engine(&dir, cfg);
+    engine.submit(Request::new(1, vec![1; 32], 8));
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    let comps = engine.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].finish, FinishReason::Timeout);
+    assert!(comps[0].tokens.is_empty(), "expired before generating anything");
+    assert_eq!(engine.cache.share.requests_timed_out, 1);
+
+    // (b) mid-decode expiry: a generous deadline lets decode start,
+    // then expires long before 200 tokens could complete — the partial
+    // output comes back with finish=timeout
+    let mut engine = mk_engine(&dir, EngineConfig::default());
+    let mut req = Request::new(2, vec![2, 7, 1, 8], 200);
+    req.deadline_ms = Some(40); // per-request deadline, no server default
+    engine.submit(req);
+    let comps = engine.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].finish, FinishReason::Timeout);
+    assert!(
+        comps[0].tokens.len() < 200,
+        "deadline must interrupt decode, got all {} tokens",
+        comps[0].tokens.len()
+    );
+    assert_eq!(engine.cache.share.requests_timed_out, 1);
+    assert_eq!(engine.cache.live_refs(), 0, "timeout frees the lane's pages");
+}
+
+#[test]
+fn shed_waiting_rejects_every_queued_request() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = mk_engine(&dir, EngineConfig::default());
+    engine.submit(Request::new(1, vec![1, 2], 4));
+    engine.submit(Request::new(2, vec![3, 4], 4));
+    assert_eq!(engine.shed_waiting(), 2);
+    let comps = engine.take_completions();
+    assert_eq!(comps.len(), 2);
+    assert!(comps.iter().all(|c| c.finish == FinishReason::Rejected));
+    assert_eq!(engine.cache.share.requests_shed, 2);
+}
+
+// -------------------------- TCP server ------------------------------
+
+struct ServeHandle {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<isoquant::server::ServeReport>,
+}
+
+fn boot_server(dir: &Path, mut mutate: impl FnMut(&mut EngineConfig)) -> ServeHandle {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let dir = dir.to_path_buf();
+    let mut cfg = EngineConfig::default();
+    mutate(&mut cfg);
+    let thread = std::thread::spawn(move || {
+        let model = ServingModel::load(&dir).expect("load model");
+        let engine = Engine::new(model, cfg).expect("boot engine");
+        serve_on(engine, listener, stop_srv).expect("serve")
+    });
+    ServeHandle { addr, stop, thread }
+}
+
+impl ServeHandle {
+    fn shutdown(self) -> isoquant::server::ServeReport {
+        self.stop.store(true, Ordering::SeqCst);
+        self.thread.join().unwrap()
+    }
+}
+
+#[test]
+fn server_disconnect_mid_decode_cancels_and_frees_the_lane() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    {
+        // fire a long decode, then vanish without reading the response
+        let mut c = Client::connect(&srv.addr).expect("connect");
+        c.send(1, &[5, 3, 1], 200, None).expect("send");
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    } // drop = socket close = EOF at the reader
+    // give the reader + serve loop time to route the cancel
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let report = srv.shutdown();
+    assert_eq!(report.share.requests_cancelled, 1, "disconnect must cancel");
+    assert_eq!(report.undrained_lanes, 0, "cancelled lane must not need draining");
+    assert_eq!(report.share.requests_timed_out, 0);
+}
+
+#[test]
+fn server_sheds_overload_with_a_structured_error() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let lanes = isoquant::runtime::Manifest::load(&dir)
+        .expect("manifest")
+        .model
+        .serve_batch;
+    let srv = boot_server(&dir, |cfg| cfg.max_queue = 1);
+    let n_clients = lanes + 4;
+    let results: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let addr = srv.addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                c.send(i as u64 + 1, &[7, 2, 9], 32, None).expect("send");
+                let v = c.recv().expect("recv");
+                match v.get("error").and_then(|e| e.as_str()) {
+                    Some(e) => {
+                        assert_eq!(e, "overloaded");
+                        assert!(v.get("retry_after_ms").and_then(|r| r.as_usize()).is_some());
+                        true // shed
+                    }
+                    None => {
+                        assert!(v.get("tokens").is_some(), "non-shed requests complete: {v:?}");
+                        false
+                    }
+                }
+            })
+        })
+        .collect();
+    let shed = results
+        .into_iter()
+        .map(|j| j.join().unwrap())
+        .filter(|&s| s)
+        .count();
+    let report = srv.shutdown();
+    assert!(
+        shed >= 1,
+        "{n_clients} bursty clients against max_queue=1 must shed at least one"
+    );
+    assert_eq!(report.share.requests_shed as usize, shed, "counter matches responses");
+    assert_eq!(report.share.requests_cancelled, 0);
+}
+
+#[test]
+fn server_request_deadline_times_out_over_tcp() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    let mut c = Client::connect(&srv.addr).expect("connect");
+    c.send(1, &[4, 4, 4], 200, Some(40)).expect("send");
+    let v = c.recv().expect("recv");
+    assert_eq!(v.get("finish").and_then(|f| f.as_str()), Some("timeout"));
+    let n_tokens = v.get("tokens").unwrap().as_arr().unwrap().len();
+    assert!(n_tokens < 200, "partial output, not a full decode");
+    drop(c);
+    let report = srv.shutdown();
+    assert_eq!(report.share.requests_timed_out, 1);
+}
+
+#[test]
+fn malformed_requests_get_structured_errors_not_a_dead_connection() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        // negative token: rejected with an error line, connection stays up
+        writeln!(s, r#"{{"id": 1, "prompt": [1, -2]}}"#).unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "got: {line}");
+        // the same connection can then serve a valid request
+        writeln!(s, r#"{{"id": 2, "prompt": [1, 2], "max_new_tokens": 4}}"#).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains(r#""finish": "max_tokens""#), "got: {line}");
+    }
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let report = srv.shutdown();
+    assert_eq!(report.requests, 1, "only the valid request reached the engine");
+    assert_eq!(report.share.requests_cancelled, 0, "finished ids cancel as no-ops");
+}
+
+/// Graceful drain under load: stop the server while a decode is still
+/// running — the in-flight request must finish (not be dropped), its
+/// completion delivered, and the drain must leave no lane behind.
+#[test]
+fn graceful_drain_finishes_in_flight_requests() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |cfg| cfg.drain_timeout_ms = 30_000);
+    let mut c = Client::connect(&srv.addr).expect("connect");
+    c.send(1, &[6, 1, 6], 48, None).expect("send");
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // stop while (very likely) mid-decode; the drain must still deliver
+    srv.stop.store(true, Ordering::SeqCst);
+    let v = c.recv().expect("drain must deliver the completion");
+    assert_eq!(v.get("finish").and_then(|f| f.as_str()), Some("max_tokens"));
+    assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 48);
+    let report = srv.thread.join().unwrap();
+    assert_eq!(report.undrained_lanes, 0, "drain must complete");
+    assert_eq!(report.share.requests_cancelled, 0);
+}

@@ -60,7 +60,7 @@ fn run_serve(
             cfg.persist_dir = p;
         }
         let engine = Engine::new(model, cfg).expect("boot engine");
-        serve_on(engine, listener, stop_srv).expect("serve");
+        serve_on(engine, listener, stop_srv).expect("serve")
     });
 
     let clients: Vec<_> = prompts
@@ -93,7 +93,15 @@ fn run_serve(
     let results: Vec<(Vec<i32>, usize)> =
         clients.into_iter().map(|j| j.join().unwrap()).collect();
     stop.store(true, Ordering::SeqCst);
-    server.join().unwrap();
+    let report = server.join().unwrap();
+    // a healthy run with patient clients exercises none of the
+    // lifecycle escape hatches — and the drain must leave no lane behind
+    assert_eq!(report.share.requests_cancelled, 0, "spurious cancellations");
+    assert_eq!(report.share.requests_timed_out, 0, "spurious timeouts");
+    assert_eq!(report.share.requests_shed, 0, "spurious shedding");
+    assert_eq!(report.share.store_degraded, 0, "store degraded during smoke");
+    assert_eq!(report.undrained_lanes, 0, "drain left lanes active");
+    assert_eq!(report.requests as usize, prompts.len(), "request count");
     results.into_iter().unzip()
 }
 
