@@ -1,29 +1,73 @@
 //! End-to-end serving benchmark: tokens/s and step-latency breakdown of
 //! the full stack (PJRT decode + compressed KV cache + scheduler) across
-//! stage-1 variants and bit widths — the deployment-level counterpart of
-//! Table 2 (what the kernel speedups buy in a real decode loop).
+//! stage-1 variants and bit widths, plus a trace-driven TCP load harness
+//! against the reactor front end — four trace mixes (multi-turn chat,
+//! RAG, agent-loop bursts, adversarial cache-busting) and a
+//! connection-churn sweep at hundreds-to-thousands of concurrent
+//! connections, measuring client-side TTFT and inter-token latency as
+//! p50/p95/p99 distributions (not throughput scalars) into
+//! `BENCH_serve.json`.
 //!
-//! Requires `make artifacts`.  Skips (exit 0) when artifacts are absent
-//! so `cargo bench` stays green in a fresh checkout.
+//! Requires `make artifacts`.  Skips (writing a stub JSON) when
+//! artifacts are absent so `cargo bench` stays green in a fresh
+//! checkout.
 //!
-//! Run: `cargo bench --bench e2e_serving`
+//! Run: `cargo bench --bench e2e_serving`           (full sweep)
+//!      `cargo bench --bench e2e_serving -- --quick` (CI leg: ≥128
+//!       concurrent connections, all four trace mixes)
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use isoquant::config::EngineConfig;
 use isoquant::coordinator::{Engine, FinishReason, Request};
-use isoquant::metrics::Counters;
+use isoquant::metrics::{Counters, LatencyRecorder};
 use isoquant::quant::Variant;
 use isoquant::runtime::ServingModel;
+use isoquant::server::{serve_on, ServeReport};
 use isoquant::util::bench::Table;
 use isoquant::util::json::Json;
 use isoquant::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
     let dir = isoquant::runtime::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("e2e_serving: artifacts not built (run `make artifacts`) — skipping");
+        let stub = Json::obj(vec![
+            ("bench", Json::str("e2e_serving")),
+            ("skipped", Json::Bool(true)),
+        ]);
+        let _ = std::fs::write("BENCH_serve.json", stub.to_string());
         return Ok(());
     }
+    raise_nofile_limit();
 
+    let mut doc: Vec<(&str, Json)> = vec![
+        ("bench", Json::str("e2e_serving")),
+        ("quick", Json::Bool(quick)),
+    ];
+    if !quick {
+        variant_table(&dir)?;
+    }
+    let churn = churn_scenario(&dir)?;
+    doc.push(("churn_engine", churn));
+    let traces = serve_traces(&dir, quick)?;
+    doc.push(("serve", traces));
+
+    match std::fs::write("BENCH_serve.json", Json::obj(doc).to_string()) {
+        Ok(()) => println!("\nwrote BENCH_serve.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
+    }
+    Ok(())
+}
+
+fn variant_table(dir: &Path) -> anyhow::Result<()> {
     println!("== end-to-end serving: variant x bits (8 requests, 16 new tokens) ==\n");
     let mut t = Table::new(&[
         "variant",
@@ -36,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     ]);
     for variant in [Variant::Rotor3D, Variant::IsoFull, Variant::IsoFast, Variant::Planar2D] {
         for bits in [2u8, 4] {
-            let model = ServingModel::load(&dir)?;
+            let model = ServingModel::load(dir)?;
             let vocab = model.meta.vocab;
             let mut cfg = EngineConfig::default();
             cfg.variant = variant;
@@ -73,8 +117,6 @@ fn main() -> anyhow::Result<()> {
          kernel-level speedups act on.  On an accelerator the model step shrinks and the\n\
          gather fraction (and hence the IsoQuant advantage) grows."
     );
-
-    churn_scenario(&dir)?;
     Ok(())
 }
 
@@ -82,9 +124,9 @@ fn main() -> anyhow::Result<()> {
 /// mid-decode (cancel), run with tight deadlines (timeout), and arrive
 /// in bursts beyond the admission bound (shed) — measuring that the
 /// lifecycle machinery holds sustained throughput for the survivors
-/// and accounting the shed/cancel/timeout rates.  Emits
-/// `BENCH_serve.json`.
-fn churn_scenario(dir: &std::path::Path) -> anyhow::Result<()> {
+/// and accounting the shed/cancel/timeout rates.  Engine-level (no
+/// sockets); the TCP counterpart is [`serve_traces`].
+fn churn_scenario(dir: &Path) -> anyhow::Result<Json> {
     println!("\n== request churn: cancels + deadlines + shed bursts ==\n");
     let model = ServingModel::load(dir)?;
     let vocab = model.meta.vocab;
@@ -165,8 +207,7 @@ fn churn_scenario(dir: &std::path::Path) -> anyhow::Result<()> {
          a lane — survivor throughput is the number to watch."
     );
 
-    let doc = Json::obj(vec![
-        ("bench", Json::str("e2e_serving_churn")),
+    Ok(Json::obj(vec![
         ("submitted", Json::num(submitted as f64)),
         ("completed_ok", Json::num(ok as f64)),
         ("cancelled", Json::num(cancelled as f64)),
@@ -177,10 +218,562 @@ fn churn_scenario(dir: &std::path::Path) -> anyhow::Result<()> {
         ("shed_rate", Json::num(shed as f64 / submitted as f64)),
         ("gen_tok_per_s", Json::num(decoded as f64 / wall)),
         ("steps", Json::num(steps as f64)),
-    ]);
-    match std::fs::write("BENCH_serve.json", doc.to_string()) {
-        Ok(()) => println!("\nwrote BENCH_serve.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
+    ]))
+}
+
+// ---------------------------------------------------------------------
+// trace-driven TCP load harness
+// ---------------------------------------------------------------------
+
+/// Per-request outcome measured at the client.
+#[derive(Default)]
+struct MixStats {
+    ttft_us: Vec<f64>,
+    itl_us: Vec<f64>,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    conns: u64,
+}
+
+impl MixStats {
+    fn merge(&mut self, other: MixStats) {
+        self.ttft_us.extend(other.ttft_us);
+        self.itl_us.extend(other.itl_us);
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.conns += other.conns;
     }
-    Ok(())
+
+    fn requests(&self) -> u64 {
+        self.ok + self.shed + self.errors
+    }
+}
+
+fn pcts(samples: &[f64]) -> (f64, f64, f64) {
+    let mut r = LatencyRecorder::new();
+    for &s in samples {
+        r.record_us(s);
+    }
+    let p = r.percentiles(&[50.0, 95.0, 99.0]);
+    (p[0], p[1], p[2])
+}
+
+fn pct_json(samples: &[f64]) -> Json {
+    let (p50, p95, p99) = pcts(samples);
+    let f = |v: f64| Json::num(if v.is_nan() { -1.0 } else { v });
+    Json::obj(vec![
+        ("n", Json::num(samples.len() as f64)),
+        ("p50_us", f(p50)),
+        ("p95_us", f(p95)),
+        ("p99_us", f(p99)),
+    ])
+}
+
+/// Connect with retries: a thousand simultaneous connects can outrun
+/// the accept backlog; brief refusals are part of the scenario, not a
+/// failure.
+fn connect_retry(addr: &str) -> Option<TcpStream> {
+    for attempt in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                // a hung server must fail the worker, not wedge the bench
+                let _ = s.set_read_timeout(Some(Duration::from_secs(300)));
+                return Some(s);
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5 + 5 * attempt)),
+        }
+    }
+    None
+}
+
+fn req_line(id: u64, prompt: &[i32], max_new: usize, stream: bool) -> String {
+    let mut fields = vec![
+        ("id", Json::num(id as f64)),
+        (
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("max_new_tokens", Json::num(max_new as f64)),
+    ];
+    if stream {
+        fields.push(("stream", Json::Bool(true)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// One streaming request over an existing connection: returns per-token
+/// timings.  A terminal `finish` line is `ok`; an `error` line counts
+/// as shed; EOF/garbage is an error.
+fn stream_request(
+    s: &mut TcpStream,
+    r: &mut BufReader<TcpStream>,
+    id: u64,
+    prompt: &[i32],
+    max_new: usize,
+    out: &mut MixStats,
+) {
+    if writeln!(s, "{}", req_line(id, prompt, max_new, true)).is_err() {
+        out.errors += 1;
+        return;
+    }
+    let t0 = Instant::now();
+    let mut first: Option<Instant> = None;
+    let mut last: Option<Instant> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) | Err(_) => {
+                out.errors += 1;
+                return;
+            }
+            Ok(_) => {}
+        }
+        let Ok(v) = Json::parse(line.trim()) else {
+            out.errors += 1;
+            return;
+        };
+        if v.get("error").is_some() {
+            out.shed += 1;
+            return;
+        }
+        if v.get("finish").is_some() {
+            // non-streamed terminal line only (e.g. rejected before any
+            // token): TTFT falls back to total latency
+            if first.is_none() {
+                out.ttft_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            out.ok += 1;
+            return;
+        }
+        // token line
+        let now = Instant::now();
+        match first {
+            None => {
+                first = Some(now);
+                out.ttft_us.push((now - t0).as_secs_f64() * 1e6);
+            }
+            Some(_) => {
+                if let Some(prev) = last {
+                    out.itl_us.push((now - prev).as_secs_f64() * 1e6);
+                }
+            }
+        }
+        last = Some(now);
+    }
+}
+
+fn spawn_workers<F>(n: usize, f: F) -> MixStats
+where
+    F: Fn(usize, &mut MixStats) + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(n);
+    for w in 0..n {
+        let f = f.clone();
+        let h = std::thread::Builder::new()
+            .stack_size(128 * 1024)
+            .spawn(move || {
+                let mut stats = MixStats::default();
+                f(w, &mut stats);
+                stats
+            })
+            .expect("spawn worker");
+        handles.push(h);
+    }
+    let mut total = MixStats::default();
+    for h in handles {
+        total.merge(h.join().expect("worker panicked"));
+    }
+    total
+}
+
+/// Multi-turn chat: every conversation shares a system prompt, and each
+/// turn's prompt is the full growing history — the prefix index should
+/// absorb the re-prefill.
+fn mix_chat(addr: &str, conversations: usize, turns: usize, vocab: usize) -> MixStats {
+    let addr = addr.to_string();
+    spawn_workers(conversations, move |w, out| {
+        let Some(mut s) = connect_retry(&addr) else {
+            out.errors += 1;
+            return;
+        };
+        out.conns += 1;
+        let mut r = BufReader::new(s.try_clone().expect("clone"));
+        // shared system prompt (identical across conversations)
+        let mut history: Vec<i32> = (0..24).map(|t| (t * 7 + 3) % vocab as i32).collect();
+        let mut rng = Rng::new(0xCAA7 + w as u64);
+        for turn in 0..turns {
+            let user: Vec<i32> = (0..6).map(|_| rng.below(vocab) as i32).collect();
+            history.extend_from_slice(&user);
+            let id = (w * 100 + turn) as u64 + 1;
+            let before_ok = out.ok;
+            stream_request(&mut s, &mut r, id, &history, 8, out);
+            if out.ok == before_ok {
+                return; // connection is unusable past a failure
+            }
+            // fold the (deterministic-enough) reply into the history so
+            // the next turn extends the prefix
+            history.extend((0..8).map(|t| ((t + turn * 13) % vocab) as i32));
+        }
+    })
+}
+
+/// RAG: one large shared document prefix plus a tiny unique tail per
+/// request — the page-sharing sweet spot.
+fn mix_rag(addr: &str, conns: usize, per_conn: usize, vocab: usize) -> MixStats {
+    let addr = addr.to_string();
+    let doc: Arc<Vec<i32>> = Arc::new((0..64).map(|t| (t * 11 + 5) % vocab as i32).collect());
+    spawn_workers(conns, move |w, out| {
+        let Some(mut s) = connect_retry(&addr) else {
+            out.errors += 1;
+            return;
+        };
+        out.conns += 1;
+        let mut r = BufReader::new(s.try_clone().expect("clone"));
+        let mut rng = Rng::new(0x4A6 + w as u64);
+        for k in 0..per_conn {
+            let mut prompt = doc.as_ref().clone();
+            prompt.extend((0..4).map(|_| rng.below(vocab) as i32));
+            let id = (10_000 + w * 100 + k) as u64;
+            stream_request(&mut s, &mut r, id, &prompt, 8, out);
+        }
+    })
+}
+
+/// Agent loop: each agent fires a pipelined burst of requests on one
+/// connection, waits for all of them, then repeats — responses
+/// interleave by line and are routed back by id at the client.
+fn mix_agent(addr: &str, agents: usize, burst: usize, rounds: usize, vocab: usize) -> MixStats {
+    let addr = addr.to_string();
+    spawn_workers(agents, move |w, out| {
+        let Some(mut s) = connect_retry(&addr) else {
+            out.errors += 1;
+            return;
+        };
+        out.conns += 1;
+        let mut r = BufReader::new(s.try_clone().expect("clone"));
+        let mut rng = Rng::new(0xA9E7 + w as u64);
+        // tool-call scaffold shared across the agent's own burst
+        let scaffold: Vec<i32> = (0..16).map(|t| ((t * 3 + w) % vocab) as i32).collect();
+        for round in 0..rounds {
+            let t0 = Instant::now();
+            let mut open: HashMap<u64, (Option<Instant>, Option<Instant>)> = HashMap::new();
+            for b in 0..burst {
+                let id = (20_000 + w * 1_000 + round * 100 + b) as u64;
+                let mut prompt = scaffold.clone();
+                prompt.extend((0..4).map(|_| rng.below(vocab) as i32));
+                if writeln!(s, "{}", req_line(id, &prompt, 8, true)).is_err() {
+                    out.errors += 1;
+                    return;
+                }
+                open.insert(id, (None, None));
+            }
+            let mut line = String::new();
+            while !open.is_empty() {
+                line.clear();
+                match r.read_line(&mut line) {
+                    Ok(0) | Err(_) => {
+                        out.errors += open.len() as u64;
+                        return;
+                    }
+                    Ok(_) => {}
+                }
+                let Ok(v) = Json::parse(line.trim()) else {
+                    out.errors += open.len() as u64;
+                    return;
+                };
+                let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(-1.0) as u64;
+                if v.get("error").is_some() {
+                    if open.remove(&id).is_some() {
+                        out.shed += 1;
+                    }
+                    continue;
+                }
+                if v.get("finish").is_some() {
+                    if let Some((first, _)) = open.remove(&id) {
+                        if first.is_none() {
+                            out.ttft_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                        }
+                        out.ok += 1;
+                    }
+                    continue;
+                }
+                let now = Instant::now();
+                if let Some(track) = open.get_mut(&id) {
+                    if track.0.is_none() {
+                        track.0 = Some(now);
+                        out.ttft_us.push((now - t0).as_secs_f64() * 1e6);
+                    } else if let Some(prev) = track.1 {
+                        out.itl_us.push((now - prev).as_secs_f64() * 1e6);
+                    }
+                    track.1 = Some(now);
+                }
+            }
+        }
+    })
+}
+
+/// Adversarial cache-busting: every prompt is unique random noise — no
+/// prefix ever repeats, so the index and page pool see worst-case
+/// pressure.
+fn mix_adversarial(addr: &str, conns: usize, per_conn: usize, vocab: usize) -> MixStats {
+    let addr = addr.to_string();
+    spawn_workers(conns, move |w, out| {
+        let Some(mut s) = connect_retry(&addr) else {
+            out.errors += 1;
+            return;
+        };
+        out.conns += 1;
+        let mut r = BufReader::new(s.try_clone().expect("clone"));
+        let mut rng = Rng::new(0xBAD_5EED ^ (w as u64).wrapping_mul(0x9E37_79B9));
+        for k in 0..per_conn {
+            let plen = 12 + rng.below(20);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            let id = (40_000 + w * 100 + k) as u64;
+            stream_request(&mut s, &mut r, id, &prompt, 8, out);
+        }
+    })
+}
+
+/// Connection churn: a fresh connection per request, all workers open
+/// simultaneously — the accept path, buffer pool, and route table under
+/// maximum turnover.  Non-streaming (byte-compat path).
+fn mix_churn(addr: &str, workers: usize, per_worker: usize, vocab: usize) -> MixStats {
+    let addr = addr.to_string();
+    spawn_workers(workers, move |w, out| {
+        let mut rng = Rng::new(0xC4 + w as u64);
+        for k in 0..per_worker {
+            let Some(mut s) = connect_retry(&addr) else {
+                out.errors += 1;
+                continue;
+            };
+            out.conns += 1;
+            let mut r = BufReader::new(s.try_clone().expect("clone"));
+            let prompt: Vec<i32> = (0..8).map(|_| rng.below(vocab) as i32).collect();
+            let id = (60_000 + w * 100 + k) as u64;
+            let t0 = Instant::now();
+            if writeln!(s, "{}", req_line(id, &prompt, 2, false)).is_err() {
+                out.errors += 1;
+                continue;
+            }
+            let mut line = String::new();
+            match r.read_line(&mut line) {
+                Ok(n) if n > 0 => match Json::parse(line.trim()) {
+                    Ok(v) if v.get("finish").is_some() => {
+                        out.ttft_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                        out.ok += 1;
+                    }
+                    Ok(v) if v.get("error").is_some() => out.shed += 1,
+                    _ => out.errors += 1,
+                },
+                _ => out.errors += 1,
+            }
+        }
+    })
+}
+
+/// Sample this process's CPU time (utime+stime, in seconds) from
+/// /proc/self/stat; NaN off Linux.
+fn proc_cpu_seconds() -> f64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(stat) = std::fs::read_to_string("/proc/self/stat") {
+            // fields after the parenthesised comm; utime/stime are
+            // fields 14/15 (1-based), i.e. 11/12 after the comm
+            if let Some(close) = stat.rfind(')') {
+                let f: Vec<&str> = stat[close + 1..].split_whitespace().collect();
+                if f.len() > 12 {
+                    let utime: f64 = f[11].parse().unwrap_or(0.0);
+                    let stime: f64 = f[12].parse().unwrap_or(0.0);
+                    return (utime + stime) / 100.0; // USER_HZ = 100
+                }
+            }
+        }
+        f64::NAN
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        f64::NAN
+    }
+}
+
+/// Raise the fd soft limit to the hard limit (the 1024-connection churn
+/// mix holds >2k fds in this one process).  Best-effort; the worker
+/// pool degrades gracefully if connects still fail.
+fn raise_nofile_limit() {
+    #[cfg(target_os = "linux")]
+    {
+        #[repr(C)]
+        struct RLimit {
+            cur: u64,
+            max: u64,
+        }
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+            fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+        }
+        const RLIMIT_NOFILE: i32 = 7;
+        unsafe {
+            let mut r = RLimit { cur: 0, max: 0 };
+            if getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur < r.max {
+                let want = RLimit { cur: r.max, max: r.max };
+                let _ = setrlimit(RLIMIT_NOFILE, &want);
+            }
+        }
+    }
+}
+
+fn serve_traces(dir: &Path, quick: bool) -> anyhow::Result<Json> {
+    println!("\n== trace-driven load harness (reactor front end) ==\n");
+    // prefix sharing + radix index on: chat/RAG mixes are exactly the
+    // workloads the cache-aware path exists for
+    let mut cfg = EngineConfig::default();
+    cfg.prefix_sharing = true;
+    cfg.prefix_index = isoquant::kvcache::PrefixIndexKind::Radix;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let dir = dir.to_path_buf();
+    // the PJRT client is not Send: the engine must be built on the
+    // thread that will run it; vocab comes back over a channel
+    let (meta_tx, meta_rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let model = ServingModel::load(&dir).expect("load model");
+        let _ = meta_tx.send(model.meta.vocab);
+        let engine = Engine::new(model, cfg).expect("boot engine");
+        serve_on(engine, listener, stop_srv)
+    });
+    let vocab = meta_rx.recv().expect("server failed to boot");
+
+    // idle-CPU check first, while no connection exists: the reactor
+    // blocks in epoll and the engine loop blocks on its channel, so a
+    // fully idle server should burn ~no CPU (the old loop's 200 µs poll
+    // did not)
+    let idle_window = Duration::from_millis(if quick { 500 } else { 1500 });
+    let cpu0 = proc_cpu_seconds();
+    std::thread::sleep(idle_window);
+    let idle_cpu_frac = (proc_cpu_seconds() - cpu0) / idle_window.as_secs_f64();
+    println!("idle CPU fraction (no connections): {idle_cpu_frac:.4}\n");
+
+    let churn_workers = if quick { 128 } else { 1024 };
+    let mixes: Vec<(&str, MixStats)> = vec![
+        (
+            "chat",
+            if quick {
+                mix_chat(&addr, 4, 3, vocab)
+            } else {
+                mix_chat(&addr, 16, 4, vocab)
+            },
+        ),
+        (
+            "rag",
+            if quick {
+                mix_rag(&addr, 8, 2, vocab)
+            } else {
+                mix_rag(&addr, 64, 2, vocab)
+            },
+        ),
+        (
+            "agent",
+            if quick {
+                mix_agent(&addr, 4, 4, 1, vocab)
+            } else {
+                mix_agent(&addr, 16, 4, 2, vocab)
+            },
+        ),
+        (
+            "adversarial",
+            if quick {
+                mix_adversarial(&addr, 8, 2, vocab)
+            } else {
+                mix_adversarial(&addr, 64, 2, vocab)
+            },
+        ),
+        ("churn", mix_churn(&addr, churn_workers, 1, vocab)),
+    ];
+
+    let mut t = Table::new(&[
+        "mix",
+        "conns",
+        "reqs",
+        "ok",
+        "shed",
+        "err",
+        "ttft p50/p95/p99 ms",
+        "itl p50/p95/p99 ms",
+    ]);
+    let mut mix_json: Vec<(&str, Json)> = Vec::new();
+    for (name, m) in &mixes {
+        let (t50, t95, t99) = pcts(&m.ttft_us);
+        let (i50, i95, i99) = pcts(&m.itl_us);
+        t.row(vec![
+            name.to_string(),
+            m.conns.to_string(),
+            m.requests().to_string(),
+            m.ok.to_string(),
+            m.shed.to_string(),
+            m.errors.to_string(),
+            format!("{:.1}/{:.1}/{:.1}", t50 / 1e3, t95 / 1e3, t99 / 1e3),
+            format!("{:.1}/{:.1}/{:.1}", i50 / 1e3, i95 / 1e3, i99 / 1e3),
+        ]);
+        mix_json.push((
+            *name,
+            Json::obj(vec![
+                ("connections", Json::num(m.conns as f64)),
+                ("requests", Json::num(m.requests() as f64)),
+                ("ok", Json::num(m.ok as f64)),
+                ("shed", Json::num(m.shed as f64)),
+                ("errors", Json::num(m.errors as f64)),
+                ("ttft_us", pct_json(&m.ttft_us)),
+                ("inter_token_us", pct_json(&m.itl_us)),
+            ]),
+        ));
+    }
+    t.print();
+    println!(
+        "\nreading: TTFT under the churn mix is the reactor's accept-to-lane path; the\n\
+         chat/RAG curves show what the prefix index buys once the document is resident.\n\
+         Latency is reported as a distribution so scheduling PRs diff against the tail,\n\
+         not an average."
+    );
+
+    // exercise the stats endpoint and capture the server-side view
+    let server_stats = {
+        let mut c = isoquant::server::Client::connect(&addr)?;
+        c.send_line(r#"{"stats": true}"#)?;
+        c.recv()?
+    };
+
+    stop.store(true, Ordering::SeqCst);
+    let report: ServeReport = server.join().expect("server thread panicked")?;
+    println!(
+        "server report: requests={} cancelled={} shed={} overflow_disconnects={}",
+        report.requests,
+        report.share.requests_cancelled,
+        report.share.requests_shed,
+        report.conn_overflow_disconnects,
+    );
+    let definitive: u64 = mixes.iter().map(|(_, m)| m.ok + m.shed).sum();
+    let errors: u64 = mixes.iter().map(|(_, m)| m.errors).sum();
+    if errors > 0 {
+        println!("NOTE: {errors} request(s) ended without a definitive line (see errors column)");
+    }
+
+    Ok(Json::obj(vec![
+        ("idle_cpu_frac", Json::num(idle_cpu_frac)),
+        ("churn_connections", Json::num(churn_workers as f64)),
+        ("definitive_outcomes", Json::num(definitive as f64)),
+        ("client_errors", Json::num(errors as f64)),
+        ("server_requests", Json::num(report.requests as f64)),
+        (
+            "conn_overflow_disconnects",
+            Json::num(report.conn_overflow_disconnects as f64),
+        ),
+        ("mixes", Json::obj(mix_json)),
+        ("server_stats", server_stats),
+    ]))
 }

@@ -178,6 +178,12 @@ pub struct EngineConfig {
     /// dropping them (`[server] drain_timeout_ms`); queued-but-unadmitted
     /// requests are shed at drain start either way
     pub drain_timeout_ms: u64,
+    /// per-connection buffer cap in KiB (`[server] max_conn_buffer_kb`),
+    /// applied to both an unterminated request line and the queued
+    /// output backlog of a slow reader; a connection exceeding it is
+    /// disconnected (counted in `conn_overflow_disconnects`).  0 =
+    /// unlimited
+    pub max_conn_buffer_kb: usize,
     /// write attempts per spilled page before the spill worker counts a
     /// failure (`[cache] persist_retries`), retried with capped
     /// exponential backoff
@@ -248,6 +254,7 @@ impl Default for EngineConfig {
             request_timeout_ms: 0,
             max_queue: 0,
             drain_timeout_ms: 5_000,
+            max_conn_buffer_kb: 1024,
             persist_retries: 3,
             persist_retry_backoff_ms: 50,
             persist_degrade_after: 5,
@@ -317,6 +324,11 @@ impl EngineConfig {
                 "drain_timeout_ms",
                 d.drain_timeout_ms as usize,
             )? as u64,
+            max_conn_buffer_kb: raw.usize_or(
+                "server",
+                "max_conn_buffer_kb",
+                d.max_conn_buffer_kb,
+            )?,
             persist_retries: raw.usize_or("cache", "persist_retries", d.persist_retries as usize)?
                 as u32,
             persist_retry_backoff_ms: raw.usize_or(
@@ -652,6 +664,24 @@ bind = "0.0.0.0:9000"
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
         }
+    }
+
+    #[test]
+    fn conn_buffer_knob() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.max_conn_buffer_kb, 1024, "defaults to 1 MiB");
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse("[server]\nmax_conn_buffer_kb = 64").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.max_conn_buffer_kb, 64);
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse("[server]\nmax_conn_buffer_kb = 0").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.max_conn_buffer_kb, 0, "0 disables the cap");
+        let raw = RawConfig::parse("[server]\nmax_conn_buffer_kb = \"big\"").unwrap();
+        assert!(EngineConfig::from_raw(&raw).is_err());
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod engine;
 pub mod request;
 
 pub use batcher::Batcher;
-pub use engine::{Engine, EngineStats};
+pub use engine::{Engine, EngineStats, TokenEvent};
 pub use request::{Completion, FinishReason, Request, RequestId, Timing};

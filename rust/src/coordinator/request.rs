@@ -18,6 +18,11 @@ pub struct Request {
     /// [`FinishReason::Timeout`], returning whatever tokens were
     /// generated so far
     pub deadline_ms: Option<u64>,
+    /// opt-in token-by-token streaming over the wire (`"stream": true`):
+    /// the engine queues a [`super::TokenEvent`] per generated token
+    /// ahead of the terminal completion.  Off by default — the
+    /// non-streaming wire protocol is untouched
+    pub stream: bool,
 }
 
 impl Request {
@@ -27,6 +32,7 @@ impl Request {
             prompt,
             max_new_tokens,
             deadline_ms: None,
+            stream: false,
         }
     }
 

@@ -42,6 +42,21 @@ impl LatencyRecorder {
         s[idx]
     }
 
+    /// Batch percentile lookup with a single sort (the per-call sort in
+    /// [`LatencyRecorder::percentile`] is fine for one-shot summaries,
+    /// not for a stats endpoint asking for p50/p95/p99 of the same
+    /// recorder).  NaN per entry when empty, like `percentile`.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.samples_us.is_empty() {
+            return vec![f64::NAN; ps.len()];
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter()
+            .map(|&p| s[((s.len() - 1) as f64 * p / 100.0).round() as usize])
+            .collect()
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples_us.is_empty() {
             return f64::NAN;
@@ -320,6 +335,19 @@ mod tests {
         let r = LatencyRecorder::new();
         assert!(r.percentile(50.0).is_nan());
         assert!(r.mean().is_nan());
+        assert!(r.percentiles(&[50.0, 99.0]).iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn batch_percentiles_match_single() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record_us(i as f64);
+        }
+        let batch = r.percentiles(&[50.0, 95.0, 99.0]);
+        assert_eq!(batch[0], r.percentile(50.0));
+        assert_eq!(batch[1], r.percentile(95.0));
+        assert_eq!(batch[2], r.percentile(99.0));
     }
 
     #[test]

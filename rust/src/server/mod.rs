@@ -1,49 +1,72 @@
-//! TCP serving front-end: JSON-lines protocol over `std::net`.
+//! TCP serving front-end: JSON-lines protocol over `std::net`, served
+//! by a readiness-driven reactor (epoll on Linux, `poll(2)` elsewhere
+//! on unix — see [`poller`]).
 //!
 //! Request:  `{"id": 1, "prompt": [3, 17, 5], "max_new_tokens": 16}`
-//!           (optional `"deadline_ms": 250` per-request deadline)
+//!           (optional `"deadline_ms": 250` per-request deadline,
+//!           optional `"stream": true` for token-by-token responses)
 //! Response: `{"id": 1, "tokens": [...], "prompt_len": 3,
 //!             "ttft_us": 1234.5, "total_us": 5678.9, "finish": "max_tokens"}`
 //!
-//! The listener thread parses requests into the engine's queue; the
-//! engine thread runs `step()` continuously and pushes completions back
-//! to the matching connection.  One in-flight request per connection
-//! line keeps the protocol trivial while still exercising batched
-//! multi-client serving (clients connect concurrently).
+//! With `"stream": true` the terminal line above is preceded by one
+//! line per generated token: `{"id": 1, "index": 0, "token": 42}`.
+//! A `{"stats": true}` line is answered with the counter / latency
+//! snapshot ([`render_stats`]) without touching a lane.  Non-streaming
+//! clients see byte-identical behavior to the pre-reactor server.
+//!
+//! One reactor thread owns the listener and all client sockets
+//! (non-blocking, one event loop — no thread per connection, no accept
+//! or idle sleeps); the engine loop runs on the calling thread (the
+//! PJRT client is `!Send`) and blocks on its request channel when
+//! fully idle.  The two meet over mpsc channels plus a
+//! [`poller::Waker`] that interrupts the reactor's wait when responses
+//! are ready.
 //!
 //! # Request lifecycle
 //!
-//! Each connection's reader detects EOF/disconnect and routes
-//! [`ServerMsg::Cancel`] for every request it submitted — a dead socket
-//! frees its lane and pages within one engine step instead of decoding
-//! to `max_new_tokens` for nobody.  With `[server] max_queue` set, the
-//! admission queue is bounded and overflow is shed immediately with
-//! `{"error":"overloaded","retry_after_ms":…}`.  With
+//! EOF/disconnect on a connection routes [`ServerMsg::Cancel`] for
+//! every request it submitted — a dead socket frees its lane and pages
+//! within one engine step instead of decoding to `max_new_tokens` for
+//! nobody (mid-stream disconnects included).  With `[server]
+//! max_queue` set, the admission queue is bounded and overflow is shed
+//! immediately with `{"error":"overloaded","retry_after_ms":…}`.  With
 //! `[server] request_timeout_ms` (or per-request `deadline_ms`) set,
-//! expired requests finish with `finish: "timeout"`.  On stop/SIGINT
-//! the listener closes, queued requests are shed, in-flight lanes
-//! finish up to `[server] drain_timeout_ms`, and the page store is
-//! flushed before the loop returns.  All knobs default off: the
+//! expired requests finish with `finish: "timeout"` — mid-stream, the
+//! partial token lines precede it.  `[server] max_conn_buffer_kb`
+//! bounds per-connection buffering; slow readers are disconnected
+//! rather than buffered without limit.  On stop/SIGINT the listener
+//! closes, queued requests are shed, in-flight lanes finish up to
+//! `[server] drain_timeout_ms`, and the page store is flushed before
+//! the loop returns.  All knobs default off or safe: the
 //! default-config serve path behaves exactly as it did without them.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{Batcher, Completion, Engine, FinishReason, Request};
-use crate::metrics::ShareStats;
+use crate::coordinator::{
+    Batcher, Completion, Engine, FinishReason, Request, Timing, TokenEvent,
+};
+use crate::metrics::{LatencyRecorder, ShareStats};
 use crate::util::json::Json;
 
-/// Control messages from connection readers to the engine loop.
+pub mod poller;
+mod reactor;
+
+use reactor::{Outbound, Reactor, ReactorOpts};
+
+/// Control messages from the reactor to the engine loop.
 pub enum ServerMsg {
     Submit(Request),
     /// the connection that submitted this request id is gone — free
     /// its queue slot / lane / pages; no response will be written
     Cancel(u64),
+    /// a `{"stats": true}` request: answer `id` with [`render_stats`]
+    Stats(u64),
 }
 
 /// Extract a non-negative integer field (JSON numbers are f64: a
@@ -101,11 +124,16 @@ pub fn parse_request(
         None => None,
         Some(x) => Some(json_u64(x, "'deadline_ms'")?),
     };
+    let stream = match v.get("stream") {
+        None => false,
+        Some(x) => x.as_bool().context("'stream' must be a boolean")?,
+    };
     Ok(Request {
         id,
         prompt,
         max_new_tokens,
         deadline_ms,
+        stream,
     })
 }
 
@@ -133,11 +161,116 @@ pub fn render_completion(c: &Completion) -> String {
     .to_string()
 }
 
+/// Render one streamed-token line (`"stream": true` requests get one
+/// of these per generated token, ahead of the terminal
+/// [`render_completion`] line).
+pub fn render_token(t: &TokenEvent) -> String {
+    Json::obj(vec![
+        ("id", Json::num(t.id as f64)),
+        ("index", Json::num(t.index as f64)),
+        ("token", Json::num(t.token as f64)),
+    ])
+    .to_string()
+}
+
 /// The structured overload-shed response (`[server] max_queue`).
 fn render_overloaded(retry_after_ms: u64) -> String {
     Json::obj(vec![
         ("error", Json::str("overloaded")),
         ("retry_after_ms", Json::num(retry_after_ms as f64)),
+    ])
+    .to_string()
+}
+
+fn latency_json(r: &LatencyRecorder) -> Json {
+    // percentile() is NaN on an empty recorder; -1 is the protocol's
+    // "not measured" marker (same convention as ttft_us)
+    fn pct(r: &LatencyRecorder, p: f64) -> Json {
+        let v = r.percentile(p);
+        Json::num(if v.is_nan() { -1.0 } else { v })
+    }
+    Json::obj(vec![
+        ("n", Json::num(r.len() as f64)),
+        ("p50_us", pct(r, 50.0)),
+        ("p95_us", pct(r, 95.0)),
+        ("p99_us", pct(r, 99.0)),
+    ])
+}
+
+/// The `{"stats": true}` response: the full [`ShareStats`] counter
+/// set, engine throughput counters, page residency, and the per-request
+/// TTFT / inter-token latency distributions the engine records.
+pub fn render_stats(engine: &Engine, conn_overflow_disconnects: u64) -> String {
+    let s = &engine.cache.share;
+    let c = &engine.stats.counters;
+    let g = crate::metrics::Counters::get;
+    Json::obj(vec![
+        ("stats", Json::Bool(true)),
+        (
+            "share",
+            Json::obj(vec![
+                ("prefix_hit_pages", Json::num(s.prefix_hit_pages as f64)),
+                ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
+                ("cow_copies", Json::num(s.cow_copies as f64)),
+                ("bytes_deduped", Json::num(s.bytes_deduped as f64)),
+                ("slots_copied", Json::num(s.slots_copied as f64)),
+                ("tail_copies", Json::num(s.tail_copies as f64)),
+                ("pages_published", Json::num(s.pages_published as f64)),
+                ("pages_evicted", Json::num(s.pages_evicted as f64)),
+                ("pages_spilled", Json::num(s.pages_spilled as f64)),
+                ("pages_rehydrated", Json::num(s.pages_rehydrated as f64)),
+                ("pages_promoted", Json::num(s.pages_promoted as f64)),
+                (
+                    "strips_deduped",
+                    Json::num(s.strips_deduped.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "bytes_saved",
+                    Json::num(s.bytes_saved.load(Ordering::Relaxed) as f64),
+                ),
+                ("requests_cancelled", Json::num(s.requests_cancelled as f64)),
+                ("requests_timed_out", Json::num(s.requests_timed_out as f64)),
+                ("requests_shed", Json::num(s.requests_shed as f64)),
+                ("store_degraded", Json::num(s.store_degraded as f64)),
+            ]),
+        ),
+        (
+            "counters",
+            Json::obj(vec![
+                ("requests", Json::num(g(&c.requests) as f64)),
+                ("tokens_prefilled", Json::num(g(&c.tokens_prefilled) as f64)),
+                ("tokens_decoded", Json::num(g(&c.tokens_decoded) as f64)),
+                ("pages_allocated", Json::num(g(&c.pages_allocated) as f64)),
+                ("pages_freed", Json::num(g(&c.pages_freed) as f64)),
+                ("bytes_compressed", Json::num(g(&c.bytes_compressed) as f64)),
+                (
+                    "bytes_uncompressed",
+                    Json::num(g(&c.bytes_uncompressed) as f64),
+                ),
+            ]),
+        ),
+        (
+            "pages",
+            Json::obj(vec![
+                ("live", Json::num(engine.cache.live_pages() as f64)),
+                ("cached", Json::num(engine.cache.cached_pages() as f64)),
+                ("capacity", Json::num(engine.cache.page_capacity() as f64)),
+            ]),
+        ),
+        (
+            "latency",
+            Json::obj(vec![
+                ("ttft_us", latency_json(&engine.stats.ttft)),
+                ("inter_token_us", latency_json(&engine.stats.inter_token)),
+            ]),
+        ),
+        (
+            "server",
+            Json::obj(vec![(
+                "conn_overflow_disconnects",
+                Json::num(conn_overflow_disconnects as f64),
+            )]),
+        ),
     ])
     .to_string()
 }
@@ -187,30 +320,75 @@ pub struct ServeReport {
     /// lanes still active when the drain window closed (0 on a clean
     /// drain)
     pub undrained_lanes: usize,
+    /// connections dropped by the `[server] max_conn_buffer_kb` policy
+    /// (slow readers with an over-cap output backlog, or oversized
+    /// unterminated request lines)
+    pub conn_overflow_disconnects: u64,
 }
 
 /// Run the server until `stop` is set (or SIGINT, when the handler is
 /// installed).
 ///
 /// The PJRT client is `!Send`, so the *engine loop runs on the calling
-/// thread*; the TCP acceptor and per-connection readers run on spawned
-/// threads and feed requests through a channel.
+/// thread*; the reactor (listener + all client sockets, one event
+/// loop) runs on a spawned thread and exchanges requests/responses
+/// through channels.
 pub fn serve(engine: Engine, bind: &str, stop: Arc<AtomicBool>) -> Result<ServeReport> {
     let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
     serve_on(engine, listener, stop)
 }
 
-type Sinks = Arc<Mutex<HashMap<u64, TcpStream>>>;
-
-/// Write `line` to the sink registered for `id` (if any) and drop the
-/// sink entry — each request gets exactly one response line.
-fn respond(sinks: &Sinks, id: u64, line: &str) {
-    let sink = sinks
-        .lock()
-        .unwrap_or_else(|e| e.into_inner())
-        .remove(&id);
-    if let Some(mut s) = sink {
-        let _ = writeln!(s, "{line}");
+/// One engine-loop pass over a control message.  Shed/stats replies go
+/// straight to the reactor (with a wake) — they never touch a lane.
+fn handle_msg(
+    msg: ServerMsg,
+    engine: &mut Engine,
+    batcher: &mut Batcher,
+    out_tx: &mpsc::Sender<Outbound>,
+    wake: &poller::WakeHandle,
+    max_queue: usize,
+    overflow: &AtomicU64,
+) {
+    match msg {
+        ServerMsg::Submit(r) => {
+            // bounded admission queue: overflow is shed with a
+            // structured error instead of growing without bound.
+            // Free lanes count as headroom — a burst on an idle
+            // server lands on lanes, not on the bound
+            let queued = batcher.pending() + engine.pending();
+            if max_queue > 0 && queued >= max_queue + engine.free_lanes() {
+                // a rough time-to-free-slot: one batching
+                // window per queued wave, floor 25ms
+                let retry = (engine.cfg.batch_window_us / 1_000).max(25);
+                let _ = out_tx.send(Outbound::Line {
+                    id: r.id,
+                    text: render_overloaded(retry),
+                    last: true,
+                });
+                wake.wake();
+                engine.cache.share.requests_shed += 1;
+            } else {
+                batcher.submit(r);
+            }
+        }
+        ServerMsg::Cancel(id) => {
+            // still queued → drop; mid-flight → free the lane
+            // and its pages.  Unknown (already finished) → no-op
+            let dropped = batcher.cancel(id);
+            if dropped {
+                engine.cache.share.requests_cancelled += 1;
+            } else {
+                engine.cancel(id);
+            }
+        }
+        ServerMsg::Stats(id) => {
+            let _ = out_tx.send(Outbound::Line {
+                id,
+                text: render_stats(engine, overflow.load(Ordering::Relaxed)),
+                last: true,
+            });
+            wake.wake();
+        }
     }
 }
 
@@ -221,7 +399,6 @@ pub fn serve_on(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
 ) -> Result<ServeReport> {
-    listener.set_nonblocking(true)?;
     eprintln!(
         "isoquant: serving on {} (variant={}, bits={}, prefix_sharing={}, prefix_index={})",
         listener
@@ -235,52 +412,20 @@ pub fn serve_on(
     );
 
     let (req_tx, req_rx) = mpsc::channel::<ServerMsg>();
-    let sinks: Sinks = Arc::new(Mutex::new(HashMap::new()));
-    let default_max_new = engine.cfg.max_new_tokens_default;
-    // a request can never produce more than max_seq tokens; asking for
-    // more is a malformed request, answered at parse time
-    let max_new_cap = engine.model.meta.max_seq;
-
-    // acceptor thread (TcpListener is Send; the engine is not)
-    let stop_a = stop.clone();
-    let sinks_a = sinks.clone();
-    let acceptor = std::thread::Builder::new()
-        .name("isoquant-acceptor".into())
-        .spawn(move || {
-            let next_id = Arc::new(AtomicU64::new(1));
-            while !stop_a.load(Ordering::SeqCst) && !sigint_requested() {
-                match listener.accept() {
-                    Ok((stream, _addr)) => {
-                        let req_tx = req_tx.clone();
-                        let sinks = sinks_a.clone();
-                        let next_id = next_id.clone();
-                        // one bad socket must not take the acceptor
-                        // down: a failed clone drops this connection
-                        // and moves on
-                        let Ok(read_half) = stream.try_clone() else {
-                            continue;
-                        };
-                        std::thread::spawn(move || {
-                            connection_reader(
-                                stream,
-                                read_half,
-                                req_tx,
-                                sinks,
-                                next_id,
-                                default_max_new,
-                                max_new_cap,
-                            );
-                        });
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
-            // dropping the listener here closes the accept socket —
-            // the first step of a graceful drain
-        })?;
+    let (out_tx, out_rx) = mpsc::channel::<Outbound>();
+    let overflow = Arc::new(AtomicU64::new(0));
+    let opts = ReactorOpts {
+        default_max_new: engine.cfg.max_new_tokens_default,
+        // a request can never produce more than max_seq tokens; asking
+        // for more is a malformed request, answered at parse time
+        max_new_cap: engine.model.meta.max_seq,
+        max_conn_buffer: engine.cfg.max_conn_buffer_kb.saturating_mul(1024),
+    };
+    let (reactor, wake) =
+        Reactor::new(listener, req_tx, out_rx, stop.clone(), opts, overflow.clone())?;
+    let reactor_thread = std::thread::Builder::new()
+        .name("isoquant-reactor".into())
+        .spawn(move || reactor.run())?;
 
     // engine loop on this thread.  Incoming requests pass through the
     // dynamic batcher, which holds them up to `batch_window_us` to form
@@ -293,46 +438,43 @@ pub fn serve_on(
     // on an idle server no longer eats the full window (~2 ms) of
     // time-to-first-token for nothing.
     let mut batcher = Batcher::new(
-        std::time::Duration::from_micros(engine.cfg.batch_window_us),
+        Duration::from_micros(engine.cfg.batch_window_us),
         engine.cfg.max_batch.max(1),
     );
     let max_queue = engine.cfg.max_queue;
-    let mut last_stats = std::time::Instant::now();
+    let mut last_stats = Instant::now();
     let mut last_finished: u64 = 0;
+    // set after any step that left nothing active, waiting, or batched:
+    // the next pass may block on the channel instead of spinning
+    let mut quiescent = true;
     while !stop.load(Ordering::SeqCst) && !sigint_requested() {
-        while let Ok(msg) = req_rx.try_recv() {
-            match msg {
-                ServerMsg::Submit(r) => {
-                    // bounded admission queue: overflow is shed with a
-                    // structured error instead of growing without bound.
-                    // Free lanes count as headroom — a burst on an idle
-                    // server lands on lanes, not on the bound
-                    let queued = batcher.pending() + engine.pending();
-                    if max_queue > 0 && queued >= max_queue + engine.free_lanes() {
-                        // a rough time-to-free-slot: one batching
-                        // window per queued wave, floor 25ms
-                        let retry = (engine.cfg.batch_window_us / 1_000).max(25);
-                        respond(&sinks, r.id, &render_overloaded(retry));
-                        engine.cache.share.requests_shed += 1;
-                    } else {
-                        batcher.submit(r);
-                    }
-                }
-                ServerMsg::Cancel(id) => {
-                    // still queued → drop; mid-flight → free the lane
-                    // and its pages.  Unknown (already finished) → no-op
-                    let dropped = batcher.cancel(id);
-                    if dropped {
-                        engine.cache.share.requests_cancelled += 1;
-                    } else {
-                        engine.cancel(id);
-                    }
-                    sinks
-                        .lock()
-                        .unwrap_or_else(|e| e.into_inner())
-                        .remove(&id);
-                }
+        // event-driven idle: a fully idle engine blocks here (bounded,
+        // to re-check the stop flag) instead of the old 200 µs poll
+        if quiescent {
+            match req_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(msg) => handle_msg(
+                    msg,
+                    &mut engine,
+                    &mut batcher,
+                    &out_tx,
+                    &wake,
+                    max_queue,
+                    &overflow,
+                ),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break, // reactor died
             }
+        }
+        while let Ok(msg) = req_rx.try_recv() {
+            handle_msg(
+                msg,
+                &mut engine,
+                &mut batcher,
+                &out_tx,
+                &wake,
+                max_queue,
+                &overflow,
+            );
         }
         // idle-lane fast path: lanes nothing is using can start
         // immediately; requests beyond the free-lane count keep
@@ -343,44 +485,73 @@ pub fn serve_on(
                 engine.submit(r);
             }
         }
-        if let Some(batch) = batcher.poll(std::time::Instant::now()) {
+        if let Some(batch) = batcher.poll(Instant::now()) {
             for r in batch {
                 engine.submit(r);
             }
         }
         let worked = engine.step()?;
+        let mut emitted = false;
+        // token lines first, so a stream's terminal completion is
+        // always its connection's last line for that id
+        for t in engine.take_token_events() {
+            let _ = out_tx.send(Outbound::Line {
+                id: t.id,
+                text: render_token(&t),
+                last: false,
+            });
+            emitted = true;
+        }
         for c in engine.take_completions() {
             last_finished += 1;
-            respond(&sinks, c.id, &render_completion(&c));
+            let _ = out_tx.send(Outbound::Line {
+                id: c.id,
+                text: render_completion(&c),
+                last: true,
+            });
+            emitted = true;
+        }
+        if emitted {
+            wake.wake();
         }
         // periodic serve stats line (page residency, prefix sharing,
         // throughput) — only when something completed since last print
-        if last_stats.elapsed() >= std::time::Duration::from_secs(5) {
+        if last_stats.elapsed() >= Duration::from_secs(5) {
             if last_finished > 0 {
                 eprintln!("isoquant: {}", engine.stats_line());
                 last_finished = 0;
             }
-            last_stats = std::time::Instant::now();
+            last_stats = Instant::now();
         }
-        if !worked {
-            std::thread::sleep(std::time::Duration::from_micros(200));
-        }
+        quiescent = !worked && batcher.pending() == 0;
     }
 
     // ------------------------------------------------------------------
-    // graceful drain: listener closed (acceptor exits on the stop
-    // flag), queued requests shed, in-flight lanes finish up to
-    // drain_timeout_ms, spill queue flushed — then return
+    // graceful drain: the reactor closes the listener on the stop flag,
+    // queued requests are shed, in-flight lanes finish up to
+    // drain_timeout_ms (event-driven: the loop below *steps the
+    // engine*, it never sleeps), spill queue flushed — then return
     // ------------------------------------------------------------------
-    let drain_deadline = std::time::Instant::now()
-        + std::time::Duration::from_millis(engine.cfg.drain_timeout_ms);
+    wake.wake(); // nudge the reactor to notice the stop flag promptly
+    let drain_deadline =
+        Instant::now() + Duration::from_millis(engine.cfg.drain_timeout_ms);
     // shed everything not yet on a lane: these will never run
     for r in batcher.take_up_to(usize::MAX) {
         engine.submit(r);
     }
     while let Ok(msg) = req_rx.try_recv() {
-        if let ServerMsg::Submit(r) = msg {
-            engine.submit(r);
+        match msg {
+            ServerMsg::Submit(r) => engine.submit(r),
+            ServerMsg::Cancel(id) => {
+                engine.cancel(id);
+            }
+            ServerMsg::Stats(id) => {
+                let _ = out_tx.send(Outbound::Line {
+                    id,
+                    text: render_stats(&engine, overflow.load(Ordering::Relaxed)),
+                    last: true,
+                });
+            }
         }
     }
     // move just-arrived requests into the engine queue, then shed the
@@ -389,17 +560,80 @@ pub fn serve_on(
     let shed = engine.shed_waiting();
     let mut drained = true;
     while engine.active() > 0 {
-        if std::time::Instant::now() >= drain_deadline {
+        if Instant::now() >= drain_deadline {
             drained = false;
             break;
         }
         engine.step()?;
+        // late traffic still gets definitive answers mid-drain: the
+        // listener is closed, so a submit that raced it is rejected
+        // immediately instead of left hanging; cancels free lanes
+        while let Ok(msg) = req_rx.try_recv() {
+            match msg {
+                ServerMsg::Submit(r) => {
+                    let mut timing = Timing::new();
+                    timing.finished = Some(Instant::now());
+                    let c = Completion {
+                        id: r.id,
+                        tokens: Vec::new(),
+                        prompt_len: r.prompt.len(),
+                        prefix_hit_pages: 0,
+                        timing,
+                        finish: FinishReason::Rejected,
+                    };
+                    let _ = out_tx.send(Outbound::Line {
+                        id: c.id,
+                        text: render_completion(&c),
+                        last: true,
+                    });
+                    engine.cache.share.requests_shed += 1;
+                }
+                ServerMsg::Cancel(id) => {
+                    engine.cancel(id);
+                }
+                ServerMsg::Stats(id) => {
+                    let _ = out_tx.send(Outbound::Line {
+                        id,
+                        text: render_stats(&engine, overflow.load(Ordering::Relaxed)),
+                        last: true,
+                    });
+                }
+            }
+        }
+        let mut emitted = false;
+        for t in engine.take_token_events() {
+            let _ = out_tx.send(Outbound::Line {
+                id: t.id,
+                text: render_token(&t),
+                last: false,
+            });
+            emitted = true;
+        }
         for c in engine.take_completions() {
-            respond(&sinks, c.id, &render_completion(&c));
+            let _ = out_tx.send(Outbound::Line {
+                id: c.id,
+                text: render_completion(&c),
+                last: true,
+            });
+            emitted = true;
+        }
+        if emitted {
+            wake.wake();
         }
     }
+    for t in engine.take_token_events() {
+        let _ = out_tx.send(Outbound::Line {
+            id: t.id,
+            text: render_token(&t),
+            last: false,
+        });
+    }
     for c in engine.take_completions() {
-        respond(&sinks, c.id, &render_completion(&c));
+        let _ = out_tx.send(Outbound::Line {
+            id: c.id,
+            text: render_completion(&c),
+            last: true,
+        });
     }
     // everything spilled so far becomes durable before the process can
     // exit; a degraded store makes this a no-op
@@ -409,69 +643,17 @@ pub fn serve_on(
         "isoquant: drained (shed={shed} undrained_lanes={undrained_lanes}) — {}",
         engine.stats_line()
     );
-    acceptor.join().map_err(|_| {
-        anyhow::anyhow!("acceptor thread panicked")
-    })?;
+    let _ = out_tx.send(Outbound::Shutdown);
+    wake.wake();
+    reactor_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("reactor thread panicked"))?;
     Ok(ServeReport {
         share: engine.cache.share.clone(),
         requests: crate::metrics::Counters::get(&engine.stats.counters.requests),
         undrained_lanes: if drained { 0 } else { undrained_lanes },
+        conn_overflow_disconnects: overflow.load(Ordering::Relaxed),
     })
-}
-
-/// Per-connection reader: parse request lines into the engine queue,
-/// and on EOF/disconnect route a [`ServerMsg::Cancel`] for every id
-/// this connection submitted — whatever is still queued or mid-decode
-/// is freed, and no sink entry outlives its socket.
-#[allow(clippy::too_many_arguments)]
-fn connection_reader(
-    stream: TcpStream,
-    read_half: TcpStream,
-    req_tx: mpsc::Sender<ServerMsg>,
-    sinks: Sinks,
-    next_id: Arc<AtomicU64>,
-    default_max_new: usize,
-    max_new_cap: usize,
-) {
-    let reader = BufReader::new(read_half);
-    let mut submitted: Vec<u64> = Vec::new();
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let fallback = next_id.fetch_add(1, Ordering::SeqCst) | (1 << 62);
-        match parse_request(&line, fallback, default_max_new, max_new_cap) {
-            Ok(req) => {
-                let Ok(sink) = stream.try_clone() else { break };
-                sinks
-                    .lock()
-                    .unwrap_or_else(|e| e.into_inner())
-                    .insert(req.id, sink);
-                let id = req.id;
-                if req_tx.send(ServerMsg::Submit(req)).is_err() {
-                    break;
-                }
-                submitted.push(id);
-            }
-            Err(e) => {
-                let Ok(mut s) = stream.try_clone() else { break };
-                let _ = writeln!(
-                    s,
-                    "{}",
-                    Json::obj(vec![("error", Json::str(format!("{e:#}")))])
-                );
-            }
-        }
-    }
-    // EOF / read error: the client is gone.  Cancel everything this
-    // connection submitted (finished ids are no-ops) so no lane decodes
-    // for a dead socket and no sink-map entry leaks
-    for id in submitted {
-        if req_tx.send(ServerMsg::Cancel(id)).is_err() {
-            break;
-        }
-    }
 }
 
 /// Minimal blocking client for tests, examples, and the CLI.
@@ -517,6 +699,13 @@ impl Client {
         Ok(())
     }
 
+    /// Send a raw request line as-is (streaming / stats tests build
+    /// their own JSON).
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.stream, "{line}")?;
+        Ok(())
+    }
+
     /// Block for the next response line.
     pub fn recv(&mut self) -> Result<Json> {
         let mut line = String::new();
@@ -543,6 +732,7 @@ mod tests {
         assert_eq!(r.prompt, vec![1, 2, 3]);
         assert_eq!(r.max_new_tokens, 5);
         assert_eq!(r.deadline_ms, None);
+        assert!(!r.stream);
     }
 
     #[test]
@@ -558,6 +748,17 @@ mod tests {
         assert_eq!(r.deadline_ms, Some(250));
         assert!(parse_request(r#"{"prompt": [4], "deadline_ms": -5}"#, 1, 32, 256).is_err());
         assert!(parse_request(r#"{"prompt": [4], "deadline_ms": 0.5}"#, 1, 32, 256).is_err());
+    }
+
+    #[test]
+    fn parse_request_stream_flag() {
+        let r = parse_request(r#"{"prompt": [4], "stream": true}"#, 1, 32, 256).unwrap();
+        assert!(r.stream);
+        let r = parse_request(r#"{"prompt": [4], "stream": false}"#, 1, 32, 256).unwrap();
+        assert!(!r.stream);
+        // strict: only a boolean is a streaming opt-in
+        assert!(parse_request(r#"{"prompt": [4], "stream": 1}"#, 1, 32, 256).is_err());
+        assert!(parse_request(r#"{"prompt": [4], "stream": "yes"}"#, 1, 32, 256).is_err());
     }
 
     #[test]
@@ -625,5 +826,22 @@ mod tests {
         let v = Json::parse(&render_overloaded(25)).unwrap();
         assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
         assert_eq!(v.get("retry_after_ms").unwrap().as_usize(), Some(25));
+    }
+
+    #[test]
+    fn token_line_roundtrips() {
+        let line = render_token(&TokenEvent {
+            id: 12,
+            index: 3,
+            token: 1234,
+        });
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(12));
+        assert_eq!(v.get("index").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("token").unwrap().as_usize(), Some(1234));
+        // exactly the three streaming fields: no finish marker, so a
+        // client tells token lines from the terminal line by shape
+        assert!(v.get("finish").is_none());
+        assert!(v.get("tokens").is_none());
     }
 }

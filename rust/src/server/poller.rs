@@ -1,0 +1,588 @@
+//! Readiness polling for the serve reactor: epoll on Linux, `poll(2)`
+//! on other unix, a no-socket stub elsewhere — raw externs into the
+//! platform libc std already links, the same no-new-deps idiom as the
+//! store's `flock`/`mmap` and the server's `signal(2)`.
+//!
+//! The surface is deliberately tiny: register/modify/remove an fd under
+//! a caller-chosen `usize` token, then [`Poller::wait`] for readiness
+//! events with an optional timeout.  Level-triggered everywhere (the
+//! `poll(2)` fallback cannot do edge-triggered, so the Linux path does
+//! not either — one behavior on every host).  A [`Waker`] built on a
+//! `UnixStream` pair lets another thread interrupt a blocked `wait`
+//! (the engine thread wakes the reactor when completions are ready).
+
+use std::io;
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// the token the fd was registered under
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// error or hangup: the connection is dead either way — read until
+    /// EOF and close
+    pub hangup: bool,
+}
+
+/// What to watch an fd for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const READ_WRITE: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+// ---------------------------------------------------------------------
+// Linux: epoll
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::raw::c_int;
+
+    // x86_64 is the one ABI where the kernel struct is packed; other
+    // architectures use natural alignment
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0x80000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    pub struct Poller {
+        epfd: c_int,
+        buf: Vec<EpollEvent>,
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 1024],
+            })
+        }
+
+        fn ctl(&self, op: c_int, fd: i32, ev: Option<EpollEvent>) -> io::Result<()> {
+            let mut ev = ev.unwrap_or(EpollEvent { events: 0, data: 0 });
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&mut self, fd: i32, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(
+                EPOLL_CTL_ADD,
+                fd,
+                Some(EpollEvent {
+                    events: mask(interest),
+                    data: token as u64,
+                }),
+            )
+        }
+
+        pub fn modify(&mut self, fd: i32, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(
+                EPOLL_CTL_MOD,
+                fd,
+                Some(EpollEvent {
+                    events: mask(interest),
+                    data: token as u64,
+                }),
+            )
+        }
+
+        pub fn remove(&mut self, fd: i32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, None)
+        }
+
+        pub fn wait(
+            &mut self,
+            timeout_ms: Option<u64>,
+            out: &mut Vec<Event>,
+        ) -> io::Result<()> {
+            let timeout = match timeout_ms {
+                None => -1,
+                Some(ms) => ms.min(c_int::MAX as u64) as c_int,
+            };
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as c_int,
+                    timeout,
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(()); // EINTR: treat as a timeout tick
+                }
+                return Err(e);
+            }
+            for i in 0..n as usize {
+                let ev = self.buf[i];
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data as usize,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// other unix: poll(2)
+// ---------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    const POLLIN: c_short = 0x1;
+    const POLLOUT: c_short = 0x4;
+    const POLLERR: c_short = 0x8;
+    const POLLHUP: c_short = 0x10;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    /// `poll(2)`-backed poller: the interest set lives in userspace and
+    /// is rebuilt into a `pollfd` array per wait.  O(n) per call, which
+    /// is fine for the fallback host (CI smoke, macOS dev) — Linux
+    /// serving uses the epoll implementation above.
+    pub struct Poller {
+        entries: Vec<(i32, usize, Interest)>,
+        fds: Vec<PollFd>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                entries: Vec::new(),
+                fds: Vec::new(),
+            })
+        }
+
+        pub fn add(&mut self, fd: i32, token: usize, interest: Interest) -> io::Result<()> {
+            if self.entries.iter().any(|&(f, _, _)| f == fd) {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    "fd already registered",
+                ));
+            }
+            self.entries.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: i32, token: usize, interest: Interest) -> io::Result<()> {
+            for e in &mut self.entries {
+                if e.0 == fd {
+                    e.1 = token;
+                    e.2 = interest;
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub fn remove(&mut self, fd: i32) -> io::Result<()> {
+            let before = self.entries.len();
+            self.entries.retain(|&(f, _, _)| f != fd);
+            if self.entries.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        pub fn wait(
+            &mut self,
+            timeout_ms: Option<u64>,
+            out: &mut Vec<Event>,
+        ) -> io::Result<()> {
+            self.fds.clear();
+            for &(fd, _, interest) in &self.entries {
+                let mut events = 0;
+                if interest.readable {
+                    events |= POLLIN;
+                }
+                if interest.writable {
+                    events |= POLLOUT;
+                }
+                self.fds.push(PollFd {
+                    fd,
+                    events,
+                    revents: 0,
+                });
+            }
+            let timeout = match timeout_ms {
+                None => -1,
+                Some(ms) => ms.min(c_int::MAX as u64) as c_int,
+            };
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as c_uint, timeout) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (i, pfd) in self.fds.iter().enumerate() {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token: self.entries[i].1,
+                    readable: r & (POLLIN | POLLHUP) != 0,
+                    writable: r & POLLOUT != 0,
+                    hangup: r & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// non-unix stub: no readiness API; wait() just sleeps out its timeout.
+// The reactor never runs here (TcpStream fds are unix-only), but the
+// crate still compiles.
+// ---------------------------------------------------------------------
+
+#[cfg(not(unix))]
+mod sys {
+    use super::{Event, Interest};
+    use std::io;
+
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller)
+        }
+
+        pub fn add(&mut self, _fd: i32, _token: usize, _interest: Interest) -> io::Result<()> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "poller requires unix",
+            ))
+        }
+
+        pub fn modify(&mut self, _fd: i32, _token: usize, _interest: Interest) -> io::Result<()> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "poller requires unix",
+            ))
+        }
+
+        pub fn remove(&mut self, _fd: i32) -> io::Result<()> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "poller requires unix",
+            ))
+        }
+
+        pub fn wait(
+            &mut self,
+            timeout_ms: Option<u64>,
+            _out: &mut Vec<Event>,
+        ) -> io::Result<()> {
+            if let Some(ms) = timeout_ms {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Readiness poller: epoll (Linux), `poll(2)` (other unix), or a stub
+/// (elsewhere).  Register fds under caller tokens, then [`wait`].
+///
+/// [`wait`]: Poller::wait
+pub struct Poller {
+    inner: sys::Poller,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            inner: sys::Poller::new()?,
+        })
+    }
+
+    /// Start watching `fd` with `interest`; events carry `token`.
+    pub fn add(&mut self, fd: i32, token: usize, interest: Interest) -> io::Result<()> {
+        self.inner.add(fd, token, interest)
+    }
+
+    /// Change the interest (and token) of an already-registered fd.
+    pub fn modify(&mut self, fd: i32, token: usize, interest: Interest) -> io::Result<()> {
+        self.inner.modify(fd, token, interest)
+    }
+
+    /// Stop watching `fd`.  Must be called before the fd is closed.
+    pub fn remove(&mut self, fd: i32) -> io::Result<()> {
+        self.inner.remove(fd)
+    }
+
+    /// Block until at least one event or the timeout (`None` = forever),
+    /// appending events to `out` (which is *not* cleared here).  A
+    /// timeout or EINTR returns `Ok` with nothing appended.
+    pub fn wait(&mut self, timeout_ms: Option<u64>, out: &mut Vec<Event>) -> io::Result<()> {
+        self.inner.wait(timeout_ms, out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// waker
+// ---------------------------------------------------------------------
+
+/// Cross-thread wakeup for a blocked [`Poller::wait`]: a nonblocking
+/// `UnixStream` pair — the engine thread writes a byte, the reactor
+/// (which registered the read end) wakes and drains it.  On non-unix
+/// hosts this degrades to a flag the stubbed poller never observes
+/// mid-sleep (the reactor does not run there).
+pub struct Waker {
+    #[cfg(unix)]
+    tx: std::os::unix::net::UnixStream,
+    #[cfg(unix)]
+    rx: std::os::unix::net::UnixStream,
+    #[cfg(not(unix))]
+    flag: std::sync::atomic::AtomicBool,
+}
+
+/// The sending half of a [`Waker`], cloneable across threads.
+#[derive(Clone)]
+pub struct WakeHandle {
+    #[cfg(unix)]
+    tx: std::sync::Arc<std::os::unix::net::UnixStream>,
+    #[cfg(not(unix))]
+    _unused: (),
+}
+
+impl WakeHandle {
+    /// Wake the poller this handle's [`Waker`] is registered with.
+    /// Best-effort: a full pipe already guarantees a pending wakeup.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            let _ = (&*self.tx).write(&[1u8]);
+        }
+    }
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        #[cfg(unix)]
+        {
+            let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+            tx.set_nonblocking(true)?;
+            rx.set_nonblocking(true)?;
+            Ok(Waker { tx, rx })
+        }
+        #[cfg(not(unix))]
+        {
+            Ok(Waker {
+                flag: std::sync::atomic::AtomicBool::new(false),
+            })
+        }
+    }
+
+    /// The fd to register with the poller (readable on wake).
+    #[cfg(unix)]
+    pub fn fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.rx.as_raw_fd()
+    }
+
+    #[cfg(not(unix))]
+    pub fn fd(&self) -> i32 {
+        -1
+    }
+
+    /// A cloneable sending half for other threads.
+    pub fn handle(&self) -> io::Result<WakeHandle> {
+        #[cfg(unix)]
+        {
+            Ok(WakeHandle {
+                tx: std::sync::Arc::new(self.tx.try_clone()?),
+            })
+        }
+        #[cfg(not(unix))]
+        {
+            Ok(WakeHandle { _unused: () })
+        }
+    }
+
+    /// Drain pending wakeup bytes after an event on [`Waker::fd`].
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Read;
+            let mut buf = [0u8; 64];
+            while let Ok(n) = (&self.rx).read(&mut buf) {
+                if n == 0 {
+                    break;
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            self.flag.store(false, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn poller_sees_readable() {
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.add(b.as_raw_fd(), 7, Interest::READ).unwrap();
+        let mut evs = Vec::new();
+        // nothing to read yet: a zero timeout returns empty
+        p.wait(Some(0), &mut evs).unwrap();
+        assert!(evs.iter().all(|e| !e.readable));
+        a.write_all(b"x").unwrap();
+        evs.clear();
+        p.wait(Some(1000), &mut evs).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.readable));
+        p.remove(b.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn poller_sees_writable_and_modify() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.add(a.as_raw_fd(), 3, Interest::READ).unwrap();
+        let mut evs = Vec::new();
+        p.wait(Some(0), &mut evs).unwrap();
+        assert!(evs.iter().all(|e| !e.writable), "not watching for write");
+        p.modify(a.as_raw_fd(), 3, Interest::READ_WRITE).unwrap();
+        evs.clear();
+        p.wait(Some(1000), &mut evs).unwrap();
+        assert!(evs.iter().any(|e| e.token == 3 && e.writable));
+    }
+
+    #[test]
+    fn poller_sees_hangup() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut p = Poller::new().unwrap();
+        p.add(b.as_raw_fd(), 1, Interest::READ).unwrap();
+        drop(a);
+        let mut evs = Vec::new();
+        p.wait(Some(1000), &mut evs).unwrap();
+        let ev = evs.iter().find(|e| e.token == 1).expect("event");
+        assert!(ev.hangup || ev.readable, "peer close surfaces");
+        // and the read end now reads EOF
+        let mut buf = [0u8; 8];
+        b.set_nonblocking(true).unwrap();
+        assert_eq!((&b).read(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let waker = Waker::new().unwrap();
+        let mut p = Poller::new().unwrap();
+        p.add(waker.fd(), 0, Interest::READ).unwrap();
+        let handle = waker.handle().unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            handle.wake();
+        });
+        let mut evs = Vec::new();
+        p.wait(Some(5_000), &mut evs).unwrap();
+        assert!(evs.iter().any(|e| e.token == 0 && e.readable));
+        waker.drain();
+        // drained: an immediate wait sees nothing
+        evs.clear();
+        p.wait(Some(0), &mut evs).unwrap();
+        assert!(evs.iter().all(|e| e.token != 0 || !e.readable));
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,566 @@
+//! The serve reactor: one event loop owns the listener and every
+//! client socket in non-blocking mode, parses request lines
+//! incrementally out of per-connection read buffers, routes
+//! submits/cancels into the engine loop's channel, and drains response
+//! lines through write-readiness-driven per-connection output queues.
+//!
+//! This replaces the thread-per-connection front end: no reader-thread
+//! spawn per accept, no fixed accept-retry sleep, no idle poll — the
+//! reactor blocks in `epoll_wait`/`poll` until a socket or the engine
+//! ([`Waker`]) has something for it.
+//!
+//! # Ownership and routing
+//!
+//! The reactor thread exclusively owns all sockets and the route table
+//! (`request id → connection slot`); the engine loop never touches a
+//! socket.  Traffic crosses two mpsc channels: [`ServerMsg`]
+//! (reactor → engine: submit/cancel/stats) and [`Outbound`]
+//! (engine → reactor: response lines), with a [`Waker`] byte to
+//! interrupt a blocked wait when responses are ready.  Connection slots
+//! are recycled through a generation counter, so a response routed to a
+//! request whose connection died (and whose slot was reused) is
+//! dropped instead of written to a stranger.
+//!
+//! # Backpressure
+//!
+//! `[server] max_conn_buffer_kb` caps both sides of a connection's
+//! buffering: an unterminated request line longer than the cap, or a
+//! queued-output backlog beyond it (a slow or stalled reader under
+//! streaming), disconnects the connection and cancels its in-flight
+//! requests — one stalled client cannot hold completion memory
+//! unboundedly.  Read/write buffers are pooled across connection churn.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::poller::{Interest, Poller, WakeHandle, Waker};
+use super::{parse_request, sigint_requested, ServerMsg};
+
+/// Engine-loop → reactor traffic.
+pub enum Outbound {
+    /// One response line for request `id`.  `last` marks the terminal
+    /// line of the request (the route is dropped after writing it);
+    /// streamed token lines ride ahead of it with `last: false`.
+    Line { id: u64, text: String, last: bool },
+    /// The drain is complete: flush queued output (bounded by a grace
+    /// period) and exit the reactor loop.
+    Shutdown,
+}
+
+/// Synthetic id namespace for reactor-generated stats requests: client
+/// ids are validated to ≤ 2^53 and fallback ids use bit 62 alone, so
+/// bits 62|61 together can never collide with either.
+const STATS_ID_BITS: u64 = (1 << 62) | (1 << 61);
+
+/// How long the reactor keeps flushing queued output after `Shutdown`.
+const FLUSH_GRACE: Duration = Duration::from_secs(5);
+
+/// Pooled-buffer bounds: a buffer over this capacity is shrunk before
+/// pooling, and at most this many buffers are retained.
+const POOL_BUF_CAP: usize = 256 * 1024;
+const POOL_MAX: usize = 256;
+
+const TOKEN_WAKER: usize = 0;
+const TOKEN_LISTENER: usize = 1;
+const TOKEN_BASE: usize = 2;
+
+#[cfg(unix)]
+fn fd_of<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn fd_of<T>(_t: &T) -> i32 {
+    -1
+}
+
+/// Reactor knobs threaded down from the engine config.
+pub(crate) struct ReactorOpts {
+    pub default_max_new: usize,
+    pub max_new_cap: usize,
+    /// per-connection buffer cap in **bytes** (applied independently to
+    /// the unterminated read line and the queued output backlog);
+    /// 0 = unlimited
+    pub max_conn_buffer: usize,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// slot-reuse guard: routes carry (slot, gen) and are dropped when
+    /// the generation moved on
+    gen: u64,
+    rbuf: Vec<u8>,
+    /// `rbuf[..scan]` is known newline-free (resume point for framing)
+    scan: usize,
+    obuf: Vec<u8>,
+    /// bytes of `obuf` already written to the socket
+    osent: usize,
+    /// request ids submitted by this connection and not yet terminally
+    /// answered — cancelled on EOF/teardown
+    submitted: Vec<u64>,
+    /// whether the poller registration currently includes writability
+    want_write: bool,
+}
+
+pub(crate) struct Reactor {
+    listener: Option<TcpListener>,
+    poller: Poller,
+    waker: Waker,
+    stop: Arc<AtomicBool>,
+    req_tx: mpsc::Sender<ServerMsg>,
+    out_rx: mpsc::Receiver<Outbound>,
+    conns: Vec<Option<Conn>>,
+    free_slots: Vec<usize>,
+    /// request id → (slot, gen) of the connection awaiting the response
+    routes: HashMap<u64, (usize, u64)>,
+    /// recycled read/write buffers (connection churn allocates nothing
+    /// in steady state)
+    pool: Vec<Vec<u8>>,
+    /// shared read chunk and line scratch
+    chunk: Vec<u8>,
+    line_buf: String,
+    next_gen: u64,
+    next_fallback: u64,
+    next_stats: u64,
+    opts: ReactorOpts,
+    /// connections dropped by the `max_conn_buffer_kb` policy (slow
+    /// readers / oversized lines), shared into the `ServeReport`
+    overflow_drops: Arc<AtomicU64>,
+}
+
+impl Reactor {
+    /// Build the reactor and register the listener + waker.  Returns
+    /// the waker handle the engine loop signals completions with.
+    pub(crate) fn new(
+        listener: TcpListener,
+        req_tx: mpsc::Sender<ServerMsg>,
+        out_rx: mpsc::Receiver<Outbound>,
+        stop: Arc<AtomicBool>,
+        opts: ReactorOpts,
+        overflow_drops: Arc<AtomicU64>,
+    ) -> std::io::Result<(Reactor, WakeHandle)> {
+        listener.set_nonblocking(true)?;
+        let mut poller = Poller::new()?;
+        let waker = Waker::new()?;
+        let handle = waker.handle()?;
+        poller.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
+        poller.add(fd_of(&listener), TOKEN_LISTENER, Interest::READ)?;
+        Ok((
+            Reactor {
+                listener: Some(listener),
+                poller,
+                waker,
+                stop,
+                req_tx,
+                out_rx,
+                conns: Vec::new(),
+                free_slots: Vec::new(),
+                routes: HashMap::new(),
+                pool: Vec::new(),
+                chunk: vec![0u8; 16 * 1024],
+                line_buf: String::new(),
+                next_gen: 1,
+                next_fallback: 1,
+                next_stats: 1,
+                opts,
+                overflow_drops,
+            },
+            handle,
+        ))
+    }
+
+    /// The event loop.  Runs until `Shutdown` arrives (and queued
+    /// output is flushed or the grace period expires).
+    pub(crate) fn run(mut self) {
+        let mut events = Vec::with_capacity(1024);
+        let mut shutdown = false;
+        let mut flush_deadline = Instant::now(); // set when shutdown flips
+        loop {
+            // a stop/SIGINT closes the accept socket immediately (the
+            // first step of a graceful drain); existing connections
+            // keep flowing until the engine finishes draining
+            if self.listener.is_some()
+                && (self.stop.load(Ordering::SeqCst) || sigint_requested())
+            {
+                if let Some(l) = self.listener.take() {
+                    let _ = self.poller.remove(fd_of(&l));
+                }
+            }
+            if self.pump_outbound() && !shutdown {
+                shutdown = true;
+                flush_deadline = Instant::now() + FLUSH_GRACE;
+            }
+            if shutdown {
+                let pending = self
+                    .conns
+                    .iter()
+                    .flatten()
+                    .any(|c| c.osent < c.obuf.len());
+                if !pending || Instant::now() >= flush_deadline {
+                    break;
+                }
+            }
+            // heartbeat timeouts, not sleeps: the wait returns the
+            // instant a socket or the waker is ready; the bound only
+            // re-checks the stop flag when nothing at all happens
+            let timeout = if shutdown { 25 } else { 250 };
+            events.clear();
+            if self.poller.wait(Some(timeout), &mut events).is_err() {
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_WAKER => self.waker.drain(),
+                    TOKEN_LISTENER => self.accept_ready(),
+                    t => {
+                        let slot = t - TOKEN_BASE;
+                        if self.conns.get(slot).map_or(true, |c| c.is_none()) {
+                            continue; // closed earlier in this batch
+                        }
+                        if ev.readable {
+                            self.read_conn(slot);
+                        } else if ev.hangup {
+                            self.close_conn(slot, true);
+                            continue;
+                        }
+                        if ev.writable
+                            && self.conns.get(slot).map_or(false, |c| c.is_some())
+                        {
+                            self.flush_conn(slot);
+                        }
+                    }
+                }
+            }
+        }
+        // loop exit closes every socket (Drop); queued-but-unflushed
+        // bytes at grace expiry are abandoned exactly like the old
+        // blocking writer abandoned a dead sink
+    }
+
+    // -- engine → connections ------------------------------------------
+
+    /// Drain the outbound channel into connection output queues.
+    /// Returns true once `Shutdown` has been seen.
+    fn pump_outbound(&mut self) -> bool {
+        let mut shutdown = false;
+        while let Ok(msg) = self.out_rx.try_recv() {
+            match msg {
+                Outbound::Line { id, text, last } => self.deliver(id, &text, last),
+                Outbound::Shutdown => shutdown = true,
+            }
+        }
+        shutdown
+    }
+
+    fn deliver(&mut self, id: u64, text: &str, last: bool) {
+        let Some(&(slot, gen)) = self.routes.get(&id) else {
+            return; // connection died first; drop the line
+        };
+        let stale = self.conns[slot].as_ref().map_or(true, |c| c.gen != gen);
+        if stale {
+            self.routes.remove(&id);
+            return;
+        }
+        if last {
+            self.routes.remove(&id);
+            let c = self.conns[slot].as_mut().unwrap();
+            if let Some(i) = c.submitted.iter().position(|&x| x == id) {
+                c.submitted.swap_remove(i);
+            }
+        }
+        self.enqueue(slot, text);
+    }
+
+    /// Append one line to a connection's output queue, write as much as
+    /// the socket takes right now, and arm write-readiness for the rest.
+    fn enqueue(&mut self, slot: usize, text: &str) {
+        {
+            let c = self.conns[slot].as_mut().unwrap();
+            c.obuf.extend_from_slice(text.as_bytes());
+            c.obuf.push(b'\n');
+        }
+        self.flush_conn(slot);
+        // slow-reader policy: a backlog beyond the cap disconnects
+        let cap = self.opts.max_conn_buffer;
+        if cap > 0 {
+            let over = self.conns[slot]
+                .as_ref()
+                .map_or(false, |c| c.obuf.len() - c.osent > cap);
+            if over {
+                self.overflow_drops.fetch_add(1, Ordering::Relaxed);
+                self.close_conn(slot, true);
+            }
+        }
+    }
+
+    fn flush_conn(&mut self, slot: usize) {
+        let mut dead = false;
+        {
+            let c = self.conns[slot].as_mut().unwrap();
+            loop {
+                if c.osent == c.obuf.len() {
+                    c.obuf.clear();
+                    c.osent = 0;
+                    break;
+                }
+                match c.stream.write(&c.obuf[c.osent..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => c.osent += n,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dead {
+            self.close_conn(slot, true);
+            return;
+        }
+        let (want, have, fd, token) = {
+            let c = self.conns[slot].as_ref().unwrap();
+            (
+                c.osent < c.obuf.len(),
+                c.want_write,
+                fd_of(&c.stream),
+                slot + TOKEN_BASE,
+            )
+        };
+        if want != have {
+            let interest = if want {
+                Interest::READ_WRITE
+            } else {
+                Interest::READ
+            };
+            if self.poller.modify(fd, token, interest).is_ok() {
+                self.conns[slot].as_mut().unwrap().want_write = want;
+            }
+        }
+    }
+
+    // -- connections → engine ------------------------------------------
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = self.listener.as_ref() else { return };
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // one bad socket must not stall accepts
+                    }
+                    // small per-token lines: don't let Nagle sit on them
+                    let _ = stream.set_nodelay(true);
+                    self.open_conn(stream);
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // transient accept failures (EMFILE, aborted handshake):
+                // drop this round, keep the listener
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn open_conn(&mut self, stream: TcpStream) {
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let rbuf = self.pool.pop().unwrap_or_default();
+        let obuf = self.pool.pop().unwrap_or_default();
+        let conn = Conn {
+            stream,
+            gen,
+            rbuf,
+            scan: 0,
+            obuf,
+            osent: 0,
+            submitted: Vec::new(),
+            want_write: false,
+        };
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.conns[s] = Some(conn);
+                s
+            }
+            None => {
+                self.conns.push(Some(conn));
+                self.conns.len() - 1
+            }
+        };
+        let fd = fd_of(&self.conns[slot].as_ref().unwrap().stream);
+        if self.poller.add(fd, slot + TOKEN_BASE, Interest::READ).is_err() {
+            self.close_conn(slot, false);
+        }
+    }
+
+    fn read_conn(&mut self, slot: usize) {
+        let mut eof = false;
+        {
+            let c = self.conns[slot].as_mut().unwrap();
+            loop {
+                match c.stream.read(&mut self.chunk) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => c.rbuf.extend_from_slice(&self.chunk[..n]),
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    // reset/abort reads like EOF: cancel and close
+                    Err(_) => {
+                        eof = true;
+                        break;
+                    }
+                }
+            }
+        }
+        // frame complete lines out of the buffer
+        loop {
+            let mut bad_utf8 = false;
+            let got_line = {
+                let Some(c) = self.conns[slot].as_mut() else { return };
+                match c.rbuf[c.scan..].iter().position(|&b| b == b'\n') {
+                    None => {
+                        c.scan = c.rbuf.len();
+                        false
+                    }
+                    Some(rel) => {
+                        let end = c.scan + rel; // exclusive of '\n'
+                        let line = &c.rbuf[..end];
+                        let line = match line.last() {
+                            Some(b'\r') => &line[..end - 1],
+                            _ => line,
+                        };
+                        match std::str::from_utf8(line) {
+                            Ok(s) => {
+                                self.line_buf.clear();
+                                self.line_buf.push_str(s);
+                            }
+                            // same contract as the old BufReader path:
+                            // a non-UTF-8 line closes the connection
+                            Err(_) => bad_utf8 = true,
+                        }
+                        c.rbuf.drain(..=end);
+                        c.scan = 0;
+                        true
+                    }
+                }
+            };
+            if bad_utf8 {
+                self.close_conn(slot, true);
+                return;
+            }
+            if !got_line {
+                break;
+            }
+            self.handle_line(slot);
+        }
+        // an unterminated line beyond the cap is an abusive or broken
+        // client: cut it off instead of buffering without bound
+        let cap = self.opts.max_conn_buffer;
+        if cap > 0 {
+            let over = self.conns[slot]
+                .as_ref()
+                .map_or(false, |c| c.rbuf.len() > cap);
+            if over {
+                self.overflow_drops.fetch_add(1, Ordering::Relaxed);
+                self.close_conn(slot, true);
+                return;
+            }
+        }
+        if eof {
+            self.close_conn(slot, true);
+        }
+    }
+
+    /// One complete request line (in `self.line_buf`) from `slot`.
+    fn handle_line(&mut self, slot: usize) {
+        let line = std::mem::take(&mut self.line_buf);
+        self.dispatch_line(slot, &line);
+        self.line_buf = line; // keep the allocation
+    }
+
+    fn dispatch_line(&mut self, slot: usize, line: &str) {
+        if line.trim().is_empty() {
+            return;
+        }
+        // `{"stats": true}` is answered by the engine loop with the
+        // counter/latency snapshot; it never touches a lane
+        if let Ok(v) = Json::parse(line) {
+            if v.get("stats").and_then(|x| x.as_bool()) == Some(true) {
+                let id = STATS_ID_BITS | self.next_stats;
+                self.next_stats += 1;
+                self.register(slot, id);
+                let _ = self.req_tx.send(ServerMsg::Stats(id));
+                return;
+            }
+        }
+        let fallback = self.next_fallback | (1 << 62);
+        self.next_fallback += 1;
+        match parse_request(
+            line,
+            fallback,
+            self.opts.default_max_new,
+            self.opts.max_new_cap,
+        ) {
+            Ok(req) => {
+                let id = req.id;
+                self.register(slot, id);
+                let _ = self.req_tx.send(ServerMsg::Submit(req));
+            }
+            Err(e) => {
+                let reply =
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+                self.enqueue(slot, &reply);
+            }
+        }
+    }
+
+    /// Route `id`'s responses to `slot` and track it for EOF cancel.
+    fn register(&mut self, slot: usize, id: u64) {
+        let gen = self.conns[slot].as_ref().unwrap().gen;
+        self.routes.insert(id, (slot, gen));
+        self.conns[slot].as_mut().unwrap().submitted.push(id);
+    }
+
+    // -- teardown -------------------------------------------------------
+
+    /// Drop a connection: deregister, cancel whatever it still has in
+    /// flight (when `cancel`), and recycle its buffers.
+    fn close_conn(&mut self, slot: usize, cancel: bool) {
+        let Some(mut c) = self.conns[slot].take() else { return };
+        let _ = self.poller.remove(fd_of(&c.stream));
+        for &id in &c.submitted {
+            if let Some(&(s, g)) = self.routes.get(&id) {
+                if s == slot && g == c.gen {
+                    self.routes.remove(&id);
+                }
+            }
+            if cancel {
+                let _ = self.req_tx.send(ServerMsg::Cancel(id));
+            }
+        }
+        for mut buf in [std::mem::take(&mut c.rbuf), std::mem::take(&mut c.obuf)] {
+            if self.pool.len() >= POOL_MAX {
+                break;
+            }
+            buf.clear();
+            buf.shrink_to(POOL_BUF_CAP);
+            self.pool.push(buf);
+        }
+        self.free_slots.push(slot);
+        // `c.stream` drops here, closing the socket
+    }
+}

@@ -24,6 +24,7 @@ use isoquant::kvcache::{
 use isoquant::quant::{Stage1, Stage1Config, Variant};
 use isoquant::runtime::ServingModel;
 use isoquant::server::{serve_on, Client};
+use isoquant::util::json::Json;
 use isoquant::util::prng::Rng;
 
 // ---------------------------------------------------------------------
@@ -546,4 +547,321 @@ fn graceful_drain_finishes_in_flight_requests() {
     let report = srv.thread.join().unwrap();
     assert_eq!(report.undrained_lanes, 0, "drain must complete");
     assert_eq!(report.share.requests_cancelled, 0);
+}
+
+// ---------------- streaming + reactor front end ---------------------
+
+fn send_raw(s: &mut std::net::TcpStream, line: &str) {
+    use std::io::Write;
+    writeln!(s, "{line}").expect("send");
+}
+
+fn stream_req(id: u64, prompt: &[i32], max_new: usize, deadline_ms: Option<u64>) -> String {
+    let mut line = format!(
+        r#"{{"id": {id}, "prompt": {prompt:?}, "max_new_tokens": {max_new}, "stream": true"#
+    );
+    if let Some(ms) = deadline_ms {
+        line.push_str(&format!(r#", "deadline_ms": {ms}"#));
+    }
+    line.push('}');
+    line
+}
+
+/// Read response lines until the terminal one (a completion or an
+/// error); returns the token lines seen on the way plus the terminal.
+fn read_stream(r: &mut impl std::io::BufRead) -> (Vec<Json>, Json) {
+    let mut toks = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = r.read_line(&mut line).expect("read");
+        assert!(n > 0, "connection closed before a terminal line");
+        let v = Json::parse(line.trim()).expect("valid JSON line");
+        if v.get("finish").is_some() || v.get("error").is_some() {
+            return (toks, v);
+        }
+        toks.push(v);
+    }
+}
+
+#[test]
+fn streaming_delivers_every_token_then_the_terminal_line() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    {
+        let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+        let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+        send_raw(&mut s, &stream_req(7, &[3, 1, 4], 6, None));
+        let (toks, term) = read_stream(&mut r);
+        assert_eq!(term.get("finish").and_then(|f| f.as_str()), Some("max_tokens"));
+        let final_tokens: Vec<i64> = term
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i64)
+            .collect();
+        assert_eq!(final_tokens.len(), 6);
+        assert_eq!(toks.len(), 6, "one streamed line per generated token");
+        for (i, t) in toks.iter().enumerate() {
+            assert_eq!(t.get("id").and_then(|x| x.as_usize()), Some(7));
+            assert_eq!(t.get("index").and_then(|x| x.as_usize()), Some(i), "ascending index");
+            assert_eq!(
+                t.get("token").and_then(|x| x.as_f64()).map(|x| x as i64),
+                Some(final_tokens[i]),
+                "streamed token matches the terminal transcript"
+            );
+        }
+    } // clean close after a delivered terminal: nothing left to cancel
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let report = srv.shutdown();
+    assert_eq!(report.requests, 1);
+    assert_eq!(report.share.requests_cancelled, 0, "finished ids cancel as no-ops");
+}
+
+#[test]
+fn streaming_disconnect_mid_stream_cancels() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    {
+        let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+        let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+        send_raw(&mut s, &stream_req(1, &[5, 3, 1], 200, None));
+        // wait for proof the stream is live, then vanish mid-decode
+        let mut line = String::new();
+        use std::io::BufRead;
+        r.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert!(v.get("token").is_some(), "expected a token line, got: {line}");
+    } // drop = socket close mid-stream
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let report = srv.shutdown();
+    assert_eq!(report.share.requests_cancelled, 1, "mid-stream disconnect must cancel");
+    assert_eq!(report.undrained_lanes, 0, "cancelled lane must not need draining");
+}
+
+#[test]
+fn streaming_deadline_returns_partial_tokens_then_timeout() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    {
+        let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+        let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+        send_raw(&mut s, &stream_req(9, &[4, 4, 4], 200, Some(40)));
+        let (toks, term) = read_stream(&mut r);
+        assert_eq!(term.get("finish").and_then(|f| f.as_str()), Some("timeout"));
+        let n = term.get("tokens").unwrap().as_arr().unwrap().len();
+        assert!(n < 200, "deadline must interrupt decode, got all {n} tokens");
+        assert_eq!(toks.len(), n, "every generated token streamed before the timeout line");
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let report = srv.shutdown();
+    assert_eq!(report.share.requests_timed_out, 1);
+    assert_eq!(report.share.requests_cancelled, 0);
+}
+
+#[test]
+fn streaming_malformed_then_valid_on_one_connection() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    {
+        let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+        let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+        // non-boolean stream flag: structured error, connection stays up
+        send_raw(&mut s, r#"{"id": 1, "prompt": [1, 2], "stream": "yes"}"#);
+        let (toks, err) = read_stream(&mut r);
+        assert!(toks.is_empty());
+        let msg = err.get("error").and_then(|e| e.as_str()).expect("error line");
+        assert!(msg.contains("stream"), "got: {msg}");
+        // the same connection then streams a valid request
+        send_raw(&mut s, &stream_req(2, &[1, 2], 4, None));
+        let (toks, term) = read_stream(&mut r);
+        assert_eq!(term.get("finish").and_then(|f| f.as_str()), Some("max_tokens"));
+        assert_eq!(toks.len(), 4);
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let report = srv.shutdown();
+    assert_eq!(report.requests, 1, "only the valid request reached the engine");
+}
+
+/// Graceful drain with a stream in flight: every remaining token line
+/// and the terminal completion must still be delivered.
+#[test]
+fn graceful_drain_mid_stream_delivers_every_token() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |cfg| cfg.drain_timeout_ms = 30_000);
+    let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+    let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+    send_raw(&mut s, &stream_req(3, &[6, 1, 6], 48, None));
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // stop while (very likely) mid-stream; the drain must still deliver
+    srv.stop.store(true, Ordering::SeqCst);
+    let (toks, term) = read_stream(&mut r);
+    assert_eq!(term.get("finish").and_then(|f| f.as_str()), Some("max_tokens"));
+    assert_eq!(term.get("tokens").unwrap().as_arr().unwrap().len(), 48);
+    assert_eq!(toks.len(), 48, "no token line lost across the drain");
+    let report = srv.thread.join().unwrap();
+    assert_eq!(report.undrained_lanes, 0, "drain must complete");
+    assert_eq!(report.share.requests_cancelled, 0);
+}
+
+#[test]
+fn stats_request_reports_share_counters_and_latency() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |_| {});
+    let mut c = Client::connect(&srv.addr).expect("connect");
+    c.send(1, &[2, 2], 4, None).expect("send");
+    let done = c.recv().expect("completion");
+    assert!(done.get("finish").is_some());
+    c.send_line(r#"{"stats": true}"#).expect("stats request");
+    let v = c.recv().expect("stats reply");
+    assert_eq!(v.get("stats").and_then(|s| s.as_bool()), Some(true));
+    assert!(v.get("share").is_some(), "share section: {v:?}");
+    assert!(v.get("pages").is_some(), "pages section: {v:?}");
+    let counters = v.get("counters").expect("counters section");
+    assert_eq!(counters.get("requests").and_then(|r| r.as_usize()), Some(1));
+    let ttft = v.get("latency").expect("latency section").get("ttft_us").expect("ttft");
+    assert_eq!(ttft.get("n").and_then(|n| n.as_usize()), Some(1));
+    assert!(ttft.get("p50_us").and_then(|p| p.as_f64()).unwrap() > 0.0);
+    drop(c);
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let report = srv.shutdown();
+    assert_eq!(report.requests, 1, "the stats request never reaches the engine's request path");
+}
+
+#[test]
+fn oversized_request_line_disconnects_and_counts_overflow() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = boot_server(&dir, |cfg| cfg.max_conn_buffer_kb = 1);
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&srv.addr).unwrap();
+        // 4 KiB with no terminating newline: the reactor must cut the
+        // connection at the 1 KiB cap instead of buffering forever
+        s.write_all(&[b'x'; 4096]).unwrap();
+        let mut buf = [0u8; 16];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "server must close the connection, not reply");
+    }
+    let report = srv.shutdown();
+    assert_eq!(report.conn_overflow_disconnects, 1);
+    assert_eq!(report.share.requests_cancelled, 0, "nothing was submitted to cancel");
+}
+
+#[cfg(target_os = "linux")]
+fn raise_fd_limit() {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur < r.max {
+            let want = RLimit { cur: r.max, max: r.max };
+            let _ = setrlimit(RLIMIT_NOFILE, &want);
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn raise_fd_limit() {}
+
+/// Connections this one process can afford: each costs two fds (client
+/// end + server end), with slack for PJRT, the store, and the harness.
+fn fd_budget_conns() -> usize {
+    #[cfg(target_os = "linux")]
+    {
+        #[repr(C)]
+        struct RLimit {
+            cur: u64,
+            max: u64,
+        }
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        }
+        unsafe {
+            let mut r = RLimit { cur: 0, max: 0 };
+            if getrlimit(7, &mut r) == 0 {
+                return ((r.cur.saturating_sub(128) / 2) as usize).max(64);
+            }
+        }
+        512
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        512
+    }
+}
+
+/// Concurrency smoke: hundreds of simultaneous connections through one
+/// reactor, every client getting a definitive outcome (completion or
+/// structured shed) and the lifecycle counters summing to the request
+/// count.
+#[test]
+fn many_concurrent_connections_get_definitive_outcomes() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    raise_fd_limit();
+    let n = 512usize.min(fd_budget_conns());
+    let srv = boot_server(&dir, |_| {});
+    let ok = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let addr = srv.addr.clone();
+        let ok = ok.clone();
+        let shed = shed.clone();
+        let h = std::thread::Builder::new()
+            .stack_size(128 * 1024)
+            .spawn(move || {
+                // a thundering herd can outrun the accept backlog:
+                // retry briefly instead of failing the connect
+                let mut c = None;
+                for _ in 0..100 {
+                    match Client::connect(&addr) {
+                        Ok(x) => {
+                            c = Some(x);
+                            break;
+                        }
+                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                    }
+                }
+                let mut c = c.expect("connect after retries");
+                c.send(i as u64 + 1, &[9, 9], 2, None).expect("send");
+                let v = c.recv().expect("recv");
+                if v.get("finish").is_some() {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                } else if v.get("error").is_some() {
+                    shed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    panic!("non-definitive response line: {v:?}");
+                }
+            })
+            .expect("spawn client");
+        handles.push(h);
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let (ok, shed) = (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed));
+    assert_eq!(ok + shed, n as u64, "every connection got a definitive outcome");
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let report = srv.shutdown();
+    assert_eq!(report.requests, ok, "engine saw exactly the admitted requests");
+    assert_eq!(report.share.requests_shed, shed, "shed counter matches shed responses");
+    assert_eq!(report.share.requests_cancelled, 0, "no client vanished: nothing to cancel");
+    assert_eq!(report.undrained_lanes, 0);
 }
