@@ -337,6 +337,21 @@ pub fn serve(args: &[String]) -> Result<()> {
         .flag(
             "no-persist",
             "disable the persistent page store even when the config enables it",
+        )
+        .opt(
+            "metrics-addr",
+            "",
+            "dedicated Prometheus scrape listener (overrides config; \
+             GET /metrics also works on the main port)",
+        )
+        .opt(
+            "log-level",
+            "",
+            "log verbosity (overrides config): error | warn | info | debug",
+        )
+        .flag(
+            "profile",
+            "per-phase engine-step profiling (histograms in /metrics and stats)",
         );
     let Some(a) = parse_or_usage(&p, args)? else {
         return Ok(());
@@ -392,6 +407,21 @@ pub fn serve(args: &[String]) -> Result<()> {
     if a.has_flag("no-persist") {
         cfg.persist_dir.clear();
     }
+    if let Some(addr) = a.get("metrics-addr") {
+        if !addr.is_empty() {
+            cfg.metrics_addr = addr.to_string();
+        }
+    }
+    if let Some(l) = a.get("log-level") {
+        if !l.is_empty() {
+            cfg.log_level = l.to_string();
+        }
+    }
+    if a.has_flag("profile") {
+        cfg.profile = true;
+    }
+    crate::util::log::configure(&cfg.log_level, cfg.log_json)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let model = ServingModel::load(Path::new(&cfg.artifacts_dir))?;
     let engine = Engine::new(model, cfg.clone())?;
     let stop = Arc::new(AtomicBool::new(false));

@@ -184,6 +184,21 @@ pub struct EngineConfig {
     /// disconnected (counted in `conn_overflow_disconnects`).  0 =
     /// unlimited
     pub max_conn_buffer_kb: usize,
+    /// optional dedicated Prometheus scrape listener
+    /// (`[server] metrics_addr`); empty (the default) binds no second
+    /// socket — `GET /metrics` still works on the main port via
+    /// byte-sniffing
+    pub metrics_addr: String,
+    /// log verbosity (`[server] log_level = error|warn|info|debug`)
+    pub log_level: String,
+    /// emit log lines as JSON objects instead of text
+    /// (`[server] log_json = off|on`)
+    pub log_json: bool,
+    /// per-phase `Engine::step` profiling (`[engine] profile = off|on`):
+    /// expire/admit/gather/forward/append/emit histograms, exported via
+    /// `/metrics` and the stats line.  Off by default — the phase clocks
+    /// cost a few `Instant::now()` calls per step
+    pub profile: bool,
     /// write attempts per spilled page before the spill worker counts a
     /// failure (`[cache] persist_retries`), retried with capped
     /// exponential backoff
@@ -255,6 +270,10 @@ impl Default for EngineConfig {
             max_queue: 0,
             drain_timeout_ms: 5_000,
             max_conn_buffer_kb: 1024,
+            metrics_addr: String::new(),
+            log_level: "info".to_string(),
+            log_json: false,
+            profile: false,
             persist_retries: 3,
             persist_retry_backoff_ms: 50,
             persist_degrade_after: 5,
@@ -329,6 +348,29 @@ impl EngineConfig {
                 "max_conn_buffer_kb",
                 d.max_conn_buffer_kb,
             )?,
+            metrics_addr: match raw.get("server", "metrics_addr") {
+                None => d.metrics_addr,
+                Some(Value::Str(s)) => s.clone(),
+                Some(v) => bail!("[server] metrics_addr must be a string address, got {v:?}"),
+            },
+            log_level: match raw.get("server", "log_level") {
+                None => d.log_level,
+                Some(Value::Str(s)) => {
+                    if crate::util::log::Level::parse(s).is_none() {
+                        bail!("[server] log_level must be error|warn|info|debug, got {s:?}");
+                    }
+                    s.clone()
+                }
+                Some(v) => bail!("[server] log_level must be error|warn|info|debug, got {v:?}"),
+            },
+            log_json: match raw.get("server", "log_json") {
+                None => d.log_json,
+                Some(v) => parse_switch(v, "[server] log_json")?,
+            },
+            profile: match raw.get("engine", "profile") {
+                None => d.profile,
+                Some(v) => parse_switch(v, "[engine] profile")?,
+            },
             persist_retries: raw.usize_or("cache", "persist_retries", d.persist_retries as usize)?
                 as u32,
             persist_retry_backoff_ms: raw.usize_or(
@@ -704,6 +746,37 @@ bind = "0.0.0.0:9000"
         for text in [
             "[cache]\npersist_degrade_after = 0",
             "[cache]\npersist_retries = \"many\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn observability_knobs() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.metrics_addr, "", "no dedicated scrape port by default");
+        assert_eq!(cfg.log_level, "info");
+        assert!(!cfg.log_json);
+        assert!(!cfg.profile, "profiler defaults off");
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse(
+                "[server]\nmetrics_addr = \"127.0.0.1:9100\"\nlog_level = \"debug\"\n\
+                 log_json = on\n[engine]\nprofile = on",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.metrics_addr, "127.0.0.1:9100");
+        assert_eq!(cfg.log_level, "debug");
+        assert!(cfg.log_json);
+        assert!(cfg.profile);
+        for text in [
+            "[server]\nmetrics_addr = 9100",
+            "[server]\nlog_level = \"chatty\"",
+            "[server]\nlog_level = 2",
+            "[server]\nlog_json = 1",
+            "[engine]\nprofile = \"sometimes\"",
         ] {
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");

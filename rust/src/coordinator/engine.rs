@@ -20,12 +20,17 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::request::{Completion, FinishReason, Request, Timing};
+use super::request::{Completion, FinishReason, FlightRecorder, Request, Timing, TraceRecord};
 use crate::config::EngineConfig;
 use crate::kvcache::{CacheManager, GatherWorkspace, PageConfig, PageStore, SeqId, StoreConfig};
-use crate::metrics::{argmax, Counters, LatencyRecorder};
+use crate::log_info;
+use crate::metrics::prometheus::{MetricsSnapshot, PageGauges};
+use crate::metrics::{argmax, Counters, Histogram};
 use crate::quant::{Stage1, Stage1Config};
 use crate::runtime::ServingModel;
+
+/// Last-N-requests kept by the engine's flight recorder.
+const FLIGHT_RECORDER_CAP: usize = 256;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
@@ -60,19 +65,67 @@ enum Lane {
     Active(Box<ActiveSeq>),
 }
 
-/// Step-level latency breakdown.
+/// Step-level latency breakdown.  All recorders are bounded
+/// log-bucketed [`Histogram`]s (O(buckets) memory regardless of how
+/// long the server runs, O(buckets) percentile queries) — the
+/// keep-every-sample `LatencyRecorder` stays available for one-shot
+/// benches that want exact percentiles over a bounded run.
 #[derive(Default)]
 pub struct EngineStats {
-    pub decode_step: LatencyRecorder,
-    pub prefill_step: LatencyRecorder,
-    pub gather: LatencyRecorder,
-    pub append: LatencyRecorder,
+    pub decode_step: Histogram,
+    pub prefill_step: Histogram,
+    pub gather: Histogram,
+    pub append: Histogram,
     /// per-request submit → first-token latency
-    pub ttft: LatencyRecorder,
+    pub ttft: Histogram,
     /// per-token gap between consecutive generated tokens of a request
-    pub inter_token: LatencyRecorder,
+    pub inter_token: Histogram,
+    /// per-request submit → admission (lane assigned) latency
+    pub queue_wait: Histogram,
+    /// per-request submit → finished latency (all outcomes)
+    pub request_total: Histogram,
     pub counters: Counters,
     pub steps: u64,
+    /// per-phase `Engine::step` timings; `Some` only with
+    /// `[engine] profile = on` (the off path costs nothing)
+    pub profile: Option<Box<PhaseHists>>,
+}
+
+/// Per-phase histograms for the `[engine] profile = on` step profiler.
+/// Phases are wall-clock sections of [`Engine::step`]; `emit` (the
+/// post-forward bookkeeping loop) contains the `append` sections, so
+/// the phases are attributable individually but do not sum to the step
+/// total.
+#[derive(Default, Debug)]
+pub struct PhaseHists {
+    /// deadline expiry sweep + store health note
+    pub expire: Histogram,
+    /// admission pass (prefix probe, lane assignment, prefix walk)
+    pub admit: Histogram,
+    /// cross-lane cache gather into the batch buffers
+    pub gather: Histogram,
+    /// the model call (prefill chunk or decode step)
+    pub forward: Histogram,
+    /// cache appends (encode + page writes), inside `emit`
+    pub append: Histogram,
+    /// post-forward bookkeeping: append staging, sampling, token
+    /// events, completion handling
+    pub emit: Histogram,
+}
+
+impl PhaseHists {
+    /// The phases in display order — the one list `/metrics` and the
+    /// stats JSON render from.
+    pub fn named(&self) -> Vec<(&'static str, &Histogram)> {
+        vec![
+            ("expire", &self.expire),
+            ("admit", &self.admit),
+            ("gather", &self.gather),
+            ("forward", &self.forward),
+            ("append", &self.append),
+            ("emit", &self.emit),
+        ]
+    }
 }
 
 /// One generated token of a `"stream": true` request, queued for the
@@ -118,6 +171,9 @@ pub struct Engine {
     /// tokens generated by `"stream": true` requests since the last
     /// [`Engine::take_token_events`] drain
     token_events: Vec<TokenEvent>,
+    /// ring buffer of the last N finished/cancelled/expired/shed
+    /// request timelines, served by `{"stats": true, "traces": K}`
+    flight: FlightRecorder,
     pub stats: EngineStats,
 }
 
@@ -167,8 +223,8 @@ impl Engine {
                     cfg.persist_degrade_after,
                 ),
             )?;
-            eprintln!(
-                "isoquant: page store at {} — {} cold pages rehydrated ({:.1} MB on disk)",
+            log_info!(
+                "page store at {} — {} cold pages rehydrated ({:.1} MB on disk)",
                 cfg.persist_dir,
                 store.len(),
                 store.disk_bytes() as f64 / 1e6,
@@ -178,6 +234,7 @@ impl Engine {
         let lanes = (0..m.serve_batch).map(|_| Lane::Free).collect();
         let cache_numel = model.cache_numel();
         let tok_numel = m.n_layers * m.n_heads * m.d_head;
+        let profile = cfg.profile;
         Ok(Engine {
             model,
             cache,
@@ -197,14 +254,26 @@ impl Engine {
             lane_jobs: Vec::with_capacity(m.serve_batch),
             admit_denied: None,
             token_events: Vec::new(),
-            stats: EngineStats::default(),
+            flight: FlightRecorder::new(FLIGHT_RECORDER_CAP),
+            stats: {
+                let mut s = EngineStats::default();
+                if profile {
+                    s.profile = Some(Box::default());
+                }
+                s
+            },
         })
     }
 
     /// Queue a request.  Length validation happens at admission.
     pub fn submit(&mut self, req: Request) {
         Counters::bump(&self.stats.counters.requests, 1);
-        self.waiting.push_back((req, Timing::new()));
+        let mut timing = Timing::new();
+        // carry the reactor-side stamps (absent for engine-injected
+        // requests) onto the engine-owned timeline
+        timing.received = req.received_at;
+        timing.parsed = req.parsed_at;
+        self.waiting.push_back((req, timing));
     }
 
     pub fn pending(&self) -> usize {
@@ -241,9 +310,17 @@ impl Engine {
 
     /// One scheduler iteration.  Returns false when fully idle.
     pub fn step(&mut self) -> Result<bool> {
+        let t0 = Instant::now();
         self.expire_deadlines();
         self.cache.note_store_health();
+        if let Some(p) = &self.stats.profile {
+            p.expire.record(t0.elapsed());
+        }
+        let t0 = Instant::now();
         self.admit()?;
+        if let Some(p) = &self.stats.profile {
+            p.admit.record(t0.elapsed());
+        }
         let any_prefill = self.lanes.iter().any(
             |l| matches!(l, Lane::Active(a) if matches!(a.phase, Phase::Prefill { .. })),
         );
@@ -274,15 +351,39 @@ impl Engine {
     /// (already finished, or never submitted) — a harmless no-op.
     pub fn cancel(&mut self, id: u64) -> bool {
         if let Some(i) = self.waiting.iter().position(|(r, _)| r.id == id) {
-            let _ = self.waiting.remove(i);
+            if let Some((req, mut timing)) = self.waiting.remove(i) {
+                timing.finished = Some(Instant::now());
+                self.flight.push(TraceRecord {
+                    id: req.id,
+                    outcome: "cancelled",
+                    timing,
+                    prompt_len: req.prompt.len(),
+                    tokens_generated: 0,
+                    pages_reused: 0,
+                    pages_allocated: 0,
+                });
+            }
             self.cache.share.requests_cancelled += 1;
             return true;
         }
         for lane in 0..self.lanes.len() {
             if matches!(&self.lanes[lane], Lane::Active(a) if a.req.id == id) {
                 let lane_state = std::mem::replace(&mut self.lanes[lane], Lane::Free);
-                if let Lane::Active(a) = lane_state {
+                if let Lane::Active(mut a) = lane_state {
                     self.cache.drop_seq(a.seq);
+                    a.timing.finished = Some(Instant::now());
+                    if let Some(us) = a.timing.total_us() {
+                        self.stats.request_total.record_us(us);
+                    }
+                    self.flight.push(TraceRecord {
+                        id: a.req.id,
+                        outcome: "cancelled",
+                        prompt_len: a.req.prompt.len(),
+                        tokens_generated: a.generated.len(),
+                        pages_reused: a.prefix_hit_pages,
+                        pages_allocated: self.pages_allocated_for(a.pos, a.prefix_hit_pages),
+                        timing: a.timing,
+                    });
                 }
                 self.cache.share.requests_cancelled += 1;
                 // pages went back to the pool: a memoized admission
@@ -294,6 +395,39 @@ impl Engine {
         false
     }
 
+    /// Fresh pages a sequence at `pos` cached tokens allocated beyond
+    /// its adopted prefix (an estimate: CoW tail copies count as
+    /// allocations, which they are).
+    fn pages_allocated_for(&self, pos: usize, prefix_hit_pages: usize) -> usize {
+        pos.div_ceil(self.cfg.page_tokens)
+            .saturating_sub(prefix_hit_pages)
+    }
+
+    /// Flight-record a request the *server* shed before submission
+    /// (bounded queue full): the engine never queued it, so the server
+    /// hands it over for the record only.  Counter bumps stay at the
+    /// call site.
+    pub fn record_shed(&mut self, req: &Request) {
+        let mut timing = Timing::new();
+        timing.received = req.received_at;
+        timing.parsed = req.parsed_at;
+        timing.finished = Some(Instant::now());
+        self.flight.push(TraceRecord {
+            id: req.id,
+            outcome: "shed",
+            timing,
+            prompt_len: req.prompt.len(),
+            tokens_generated: 0,
+            pages_reused: 0,
+            pages_allocated: 0,
+        });
+    }
+
+    /// The most recent `k` flight-recorder timelines, newest first.
+    pub fn recent_traces(&self, k: usize) -> Vec<TraceRecord> {
+        self.flight.recent(k)
+    }
+
     /// Shed every request still waiting for admission (graceful drain:
     /// the listener is closed, these will never run).  Each gets a
     /// `finish: "rejected"` completion so connected clients hear a
@@ -302,13 +436,27 @@ impl Engine {
         let shed = self.waiting.len();
         while let Some((req, mut timing)) = self.waiting.pop_front() {
             timing.finished = Some(Instant::now());
+            if let Some(us) = timing.total_us() {
+                self.stats.request_total.record_us(us);
+            }
+            self.flight.push(TraceRecord {
+                id: req.id,
+                outcome: "shed",
+                timing: timing.clone(),
+                prompt_len: req.prompt.len(),
+                tokens_generated: 0,
+                pages_reused: 0,
+                pages_allocated: 0,
+            });
             self.completions.push(Completion {
                 id: req.id,
                 tokens: Vec::new(),
                 prompt_len: req.prompt.len(),
                 prefix_hit_pages: 0,
+                pages_allocated: 0,
                 timing,
                 finish: FinishReason::Rejected,
+                trace: req.trace,
             });
             self.cache.share.requests_shed += 1;
         }
@@ -344,13 +492,27 @@ impl Engine {
             }
             let (req, mut timing) = self.waiting.remove(i).unwrap();
             timing.finished = Some(Instant::now());
+            if let Some(us) = timing.total_us() {
+                self.stats.request_total.record_us(us);
+            }
+            self.flight.push(TraceRecord {
+                id: req.id,
+                outcome: "timeout",
+                timing: timing.clone(),
+                prompt_len: req.prompt.len(),
+                tokens_generated: 0,
+                pages_reused: 0,
+                pages_allocated: 0,
+            });
             self.completions.push(Completion {
                 id: req.id,
                 tokens: Vec::new(),
                 prompt_len: req.prompt.len(),
                 prefix_hit_pages: 0,
+                pages_allocated: 0,
                 timing,
                 finish: FinishReason::Timeout,
+                trace: req.trace,
             });
             self.cache.share.requests_timed_out += 1;
         }
@@ -372,13 +534,25 @@ impl Engine {
             };
             let total = req.prompt.len() + req.max_new_tokens;
             if req.prompt.is_empty() || total > max_seq {
+                timing.finished = Some(Instant::now());
+                self.flight.push(TraceRecord {
+                    id: req.id,
+                    outcome: "rejected",
+                    timing: timing.clone(),
+                    prompt_len: req.prompt.len(),
+                    tokens_generated: 0,
+                    pages_reused: 0,
+                    pages_allocated: 0,
+                });
                 self.completions.push(Completion {
                     id: req.id,
                     tokens: Vec::new(),
                     prompt_len: req.prompt.len(),
                     prefix_hit_pages: 0,
+                    pages_allocated: 0,
                     timing,
                     finish: FinishReason::Rejected,
+                    trace: req.trace,
                 });
                 continue;
             }
@@ -396,11 +570,15 @@ impl Engine {
             }
             let seq = self.next_seq;
             self.next_seq += 1;
+            timing.admitted = Some(Instant::now());
+            if let Some(us) = timing.queue_wait_us() {
+                self.stats.queue_wait.record_us(us);
+            }
             // prefix-hit accounting lives in cache.share (single source
             // of truth); the per-request count rides on the completion
             let reuse = self.cache.start_seq_with_prompt(seq, &req.prompt)?;
             self.admit_denied = None;
-            timing.admitted = Some(Instant::now());
+            timing.prefix_walk = Some(Instant::now());
             // adopted tokens are already cached; prefill resumes after
             // them — at a *token*, not a page, boundary: with the radix
             // index a slot-range copy can cover a mid-page run (e.g.
@@ -469,7 +647,11 @@ impl Engine {
                 &mut self.gather_ws,
             )?;
         }
-        self.stats.gather.record(t0.elapsed());
+        let el = t0.elapsed();
+        self.stats.gather.record(el);
+        if let Some(p) = &self.stats.profile {
+            p.gather.record(el);
+        }
         Ok(())
     }
 
@@ -516,7 +698,11 @@ impl Engine {
             &self.chunk_v[..n * l * h * dh],
             n,
         )?;
-        self.stats.append.record(t0.elapsed());
+        let el = t0.elapsed();
+        self.stats.append.record(el);
+        if let Some(prof) = &self.stats.profile {
+            prof.append.record(el);
+        }
         let (cb, ub) = self.cache.slot_bytes();
         Counters::bump(&self.stats.counters.bytes_compressed, (cb * n) as u64);
         Counters::bump(&self.stats.counters.bytes_uncompressed, (ub * n) as u64);
@@ -551,7 +737,11 @@ impl Engine {
         }
         let t0 = Instant::now();
         self.cache.append_token(seq, &self.tok_k, &self.tok_v)?;
-        self.stats.append.record(t0.elapsed());
+        let el = t0.elapsed();
+        self.stats.append.record(el);
+        if let Some(prof) = &self.stats.profile {
+            prof.append.record(el);
+        }
         let (c, u) = self.cache.slot_bytes();
         Counters::bump(&self.stats.counters.bytes_compressed, c as u64);
         Counters::bump(&self.stats.counters.bytes_uncompressed, u as u64);
@@ -586,8 +776,13 @@ impl Engine {
         let out = self
             .model
             .prefill_chunk(&toks, &pos0, &self.k_buf, &self.v_buf)?;
-        self.stats.prefill_step.record(t0.elapsed());
+        let el = t0.elapsed();
+        self.stats.prefill_step.record(el);
+        if let Some(p) = &self.stats.profile {
+            p.forward.record(el);
+        }
 
+        let t_emit = Instant::now();
         for lane in 0..b {
             let c = chunk_len[lane];
             if c == 0 {
@@ -619,6 +814,7 @@ impl Engine {
                 let row = &out.logits[(lane * p + (c - 1)) * vocab..][..vocab];
                 let tok = argmax(row) as i32;
                 let now = Instant::now();
+                a.timing.prefill_done = Some(now);
                 a.timing.first_token = Some(now);
                 a.last_token_at = Some(now);
                 self.stats.ttft.record(now - a.timing.submitted);
@@ -640,6 +836,9 @@ impl Engine {
                 };
             }
         }
+        if let Some(p) = &self.stats.profile {
+            p.emit.record(t_emit.elapsed());
+        }
         Ok(())
     }
 
@@ -659,8 +858,13 @@ impl Engine {
         }
         let t0 = Instant::now();
         let out = self.model.decode_step(&toks, &pos, &self.k_buf, &self.v_buf)?;
-        self.stats.decode_step.record(t0.elapsed());
+        let el = t0.elapsed();
+        self.stats.decode_step.record(el);
+        if let Some(p) = &self.stats.profile {
+            p.forward.record(el);
+        }
 
+        let t_emit = Instant::now();
         for lane in 0..b {
             if !active[lane] {
                 continue;
@@ -698,6 +902,9 @@ impl Engine {
             Counters::bump(&self.stats.counters.tokens_decoded, 1);
             self.maybe_finish(lane);
         }
+        if let Some(p) = &self.stats.profile {
+            p.emit.record(t_emit.elapsed());
+        }
         Ok(())
     }
 
@@ -734,13 +941,28 @@ impl Engine {
         if reason == FinishReason::Timeout {
             self.cache.share.requests_timed_out += 1;
         }
+        if let Some(us) = a.timing.total_us() {
+            self.stats.request_total.record_us(us);
+        }
+        let pages_allocated = self.pages_allocated_for(a.pos, a.prefix_hit_pages);
+        self.flight.push(TraceRecord {
+            id: a.req.id,
+            outcome: reason.as_str(),
+            timing: a.timing.clone(),
+            prompt_len: a.req.prompt.len(),
+            tokens_generated: a.generated.len(),
+            pages_reused: a.prefix_hit_pages,
+            pages_allocated,
+        });
         self.completions.push(Completion {
             id: a.req.id,
             tokens: a.generated,
             prompt_len: a.req.prompt.len(),
             prefix_hit_pages: a.prefix_hit_pages,
+            pages_allocated,
             timing: a.timing,
             finish: reason,
+            trace: a.req.trace,
         });
     }
 
@@ -767,5 +989,43 @@ impl Engine {
             Counters::get(&c.tokens_decoded),
             c.compression_ratio(),
         )
+    }
+
+    /// Detach everything `/metrics` needs into a plain-data snapshot.
+    /// The serve loop calls this about once a second and renders the
+    /// exposition into a shared string; scrapes are served from that
+    /// string, never from the engine.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot {
+            share: self.cache.share.clone(),
+            counters: self.stats.counters.fields(),
+            compression_ratio: self.stats.counters.compression_ratio(),
+            ..MetricsSnapshot::default()
+        };
+        s.pages = PageGauges {
+            live: self.cache.live_pages() as u64,
+            cached: self.cache.cached_pages() as u64,
+            capacity: self.cache.page_capacity() as u64,
+            high_water: self.cache.high_water_pages() as u64,
+            shared: self.cache.shared_pages() as u64,
+            exclusive: self.cache.exclusive_pages() as u64,
+            cold: self.cache.store().map_or(0, |st| st.len() as u64),
+            store_disk_bytes: self.cache.store().map_or(0, |st| st.disk_bytes() as u64),
+            store_attached: self.cache.store().is_some() as u64,
+        };
+        s.hists = vec![
+            ("isoquant_ttft_seconds", self.stats.ttft.snapshot()),
+            ("isoquant_inter_token_seconds", self.stats.inter_token.snapshot()),
+            ("isoquant_queue_wait_seconds", self.stats.queue_wait.snapshot()),
+            ("isoquant_request_total_seconds", self.stats.request_total.snapshot()),
+            ("isoquant_decode_step_seconds", self.stats.decode_step.snapshot()),
+            ("isoquant_prefill_step_seconds", self.stats.prefill_step.snapshot()),
+            ("isoquant_gather_seconds", self.stats.gather.snapshot()),
+            ("isoquant_append_seconds", self.stats.append.snapshot()),
+        ];
+        if let Some(p) = &self.stats.profile {
+            s.phases = p.named().iter().map(|(n, h)| (*n, h.snapshot())).collect();
+        }
+        s
     }
 }

@@ -7,5 +7,7 @@ pub mod engine;
 pub mod request;
 
 pub use batcher::Batcher;
-pub use engine::{Engine, EngineStats, TokenEvent};
-pub use request::{Completion, FinishReason, Request, RequestId, Timing};
+pub use engine::{Engine, EngineStats, PhaseHists, TokenEvent};
+pub use request::{
+    Completion, FinishReason, FlightRecorder, Request, RequestId, Timing, TraceRecord,
+};

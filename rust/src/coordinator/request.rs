@@ -23,6 +23,14 @@ pub struct Request {
     /// ahead of the terminal completion.  Off by default — the
     /// non-streaming wire protocol is untouched
     pub stream: bool,
+    /// opt-in per-request trace (`"trace": true`): the completion line
+    /// carries the full lifecycle timeline.  Off by default — the wire
+    /// protocol without the knob is byte-identical
+    pub trace: bool,
+    /// reactor-side stamp: first byte of this request's line observed
+    pub received_at: Option<Instant>,
+    /// reactor-side stamp: JSON parse finished
+    pub parsed_at: Option<Instant>,
 }
 
 impl Request {
@@ -33,6 +41,9 @@ impl Request {
             max_new_tokens,
             deadline_ms: None,
             stream: false,
+            trace: false,
+            received_at: None,
+            parsed_at: None,
         }
     }
 
@@ -49,11 +60,24 @@ impl Request {
     }
 }
 
-/// Lifecycle timestamps for latency accounting.
+/// Lifecycle timestamps for latency accounting and per-request traces.
+/// Stamps before `submitted` come from the reactor thread (absent when
+/// a request is injected directly into the engine, e.g. by tests or
+/// benches); everything from `submitted` on is stamped by the engine.
 #[derive(Clone, Debug)]
 pub struct Timing {
+    /// wire: first byte of the request line observed by the reactor
+    pub received: Option<Instant>,
+    /// wire: JSON parse finished
+    pub parsed: Option<Instant>,
+    /// entered the engine queue
     pub submitted: Instant,
+    /// left the queue, lane assigned
     pub admitted: Option<Instant>,
+    /// prefix-index walk finished (pages adopted, tail copied)
+    pub prefix_walk: Option<Instant>,
+    /// prefill finished (prompt fully encoded into the cache)
+    pub prefill_done: Option<Instant>,
     pub first_token: Option<Instant>,
     pub finished: Option<Instant>,
 }
@@ -61,8 +85,12 @@ pub struct Timing {
 impl Timing {
     pub fn new() -> Timing {
         Timing {
+            received: None,
+            parsed: None,
             submitted: Instant::now(),
             admitted: None,
+            prefix_walk: None,
+            prefill_done: None,
             first_token: None,
             finished: None,
         }
@@ -77,6 +105,51 @@ impl Timing {
     pub fn total_us(&self) -> Option<f64> {
         self.finished
             .map(|t| (t - self.submitted).as_secs_f64() * 1e6)
+    }
+
+    /// time spent queued before a lane was assigned, in microseconds
+    pub fn queue_wait_us(&self) -> Option<f64> {
+        self.admitted
+            .map(|t| (t - self.submitted).as_secs_f64() * 1e6)
+    }
+
+    /// Trace origin: the earliest stamp we have.  Offsets in a rendered
+    /// timeline are relative to this instant.
+    pub fn origin(&self) -> Instant {
+        self.received.unwrap_or(self.submitted)
+    }
+
+    /// The timeline as `(stamp name, offset in µs from origin)` pairs,
+    /// in lifecycle order, skipping absent stamps.  This is the one
+    /// list both the wire trace object and the flight-recorder dump
+    /// render from.
+    pub fn stamps_us(&self) -> Vec<(&'static str, f64)> {
+        let o = self.origin();
+        let off = |t: Instant| (t - o).as_secs_f64() * 1e6;
+        let mut v = Vec::with_capacity(8);
+        if let Some(t) = self.received {
+            v.push(("received", off(t)));
+        }
+        if let Some(t) = self.parsed {
+            v.push(("parsed", off(t)));
+        }
+        v.push(("queued", off(self.submitted)));
+        if let Some(t) = self.admitted {
+            v.push(("admitted", off(t)));
+        }
+        if let Some(t) = self.prefix_walk {
+            v.push(("prefix_walk", off(t)));
+        }
+        if let Some(t) = self.prefill_done {
+            v.push(("prefill_done", off(t)));
+        }
+        if let Some(t) = self.first_token {
+            v.push(("first_token", off(t)));
+        }
+        if let Some(t) = self.finished {
+            v.push(("finished", off(t)));
+        }
+        v
     }
 }
 
@@ -95,9 +168,14 @@ pub struct Completion {
     /// whole KV pages adopted from the prefix index at admission (0
     /// with prefix sharing off or on a cold prefix)
     pub prefix_hit_pages: usize,
+    /// fresh pages this request allocated (pages beyond the adopted
+    /// prefix hit)
+    pub pages_allocated: usize,
     pub timing: Timing,
     /// why generation stopped
     pub finish: FinishReason,
+    /// the request asked for its timeline on the completion line
+    pub trace: bool,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -113,6 +191,88 @@ pub enum FinishReason {
     /// deadline expired (per-request `deadline_ms` or the
     /// `[server] request_timeout_ms` default); partial tokens returned
     Timeout,
+}
+
+impl FinishReason {
+    /// The wire spelling used by the completion line's `finish` field
+    /// and the flight recorder's `outcome`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Rejected => "rejected",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Timeout => "timeout",
+        }
+    }
+}
+
+/// One finished request's timeline, as kept by the [`FlightRecorder`].
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    pub id: RequestId,
+    /// terminal outcome: "max_tokens" / "context_full" / "rejected" /
+    /// "cancelled" / "timeout" / "shed"
+    pub outcome: &'static str,
+    pub timing: Timing,
+    pub prompt_len: usize,
+    pub tokens_generated: usize,
+    /// whole pages adopted from the prefix index
+    pub pages_reused: usize,
+    /// fresh pages allocated beyond the reused prefix
+    pub pages_allocated: usize,
+}
+
+/// Fixed-size ring buffer of the last N request timelines — the flight
+/// recorder behind `{"stats": true, "traces": K}`.  Push is O(1) and
+/// allocation-free after the ring fills.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: Vec<TraceRecord>,
+    cap: usize,
+    /// next write position (ring[next] is the oldest entry once full)
+    next: usize,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            ring: Vec::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            next: 0,
+        }
+    }
+
+    pub fn push(&mut self, rec: TraceRecord) {
+        if self.ring.len() < self.cap {
+            self.ring.push(rec);
+        } else {
+            self.ring[self.next] = rec;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The most recent `k` records, newest first.
+    pub fn recent(&self, k: usize) -> Vec<TraceRecord> {
+        let n = self.ring.len().min(k);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // newest is the slot just before `next`, wrapping
+            let idx = (self.next + self.cap - 1 - i) % self.cap;
+            if idx < self.ring.len() {
+                out.push(self.ring[idx].clone());
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -144,5 +304,68 @@ mod tests {
         t.finished = Some(Instant::now());
         assert!(t.ttft_us().unwrap() >= 0.0);
         assert!(t.total_us().unwrap() >= t.ttft_us().unwrap() * 0.5);
+    }
+
+    #[test]
+    fn stamps_are_ordered_and_relative_to_origin() {
+        let mut t = Timing::new();
+        let base = t.submitted;
+        t.received = Some(base - std::time::Duration::from_micros(50));
+        t.parsed = Some(base - std::time::Duration::from_micros(10));
+        t.admitted = Some(base + std::time::Duration::from_micros(100));
+        t.prefix_walk = Some(base + std::time::Duration::from_micros(150));
+        t.prefill_done = Some(base + std::time::Duration::from_micros(900));
+        t.first_token = Some(base + std::time::Duration::from_micros(1000));
+        t.finished = Some(base + std::time::Duration::from_micros(5000));
+        let stamps = t.stamps_us();
+        let names: Vec<&str> = stamps.iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            [
+                "received",
+                "parsed",
+                "queued",
+                "admitted",
+                "prefix_walk",
+                "prefill_done",
+                "first_token",
+                "finished"
+            ]
+        );
+        // offsets are relative to `received` and monotone non-decreasing
+        assert_eq!(stamps[0].1, 0.0);
+        for w in stamps.windows(2) {
+            assert!(w[1].1 >= w[0].1, "{:?} before {:?}", w[1], w[0]);
+        }
+        assert!((t.queue_wait_us().unwrap() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn stamps_skip_absent() {
+        let t = Timing::new(); // engine-injected: no wire stamps
+        let names: Vec<&str> = t.stamps_us().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["queued"]);
+    }
+
+    #[test]
+    fn flight_recorder_ring() {
+        let mut fr = FlightRecorder::new(4);
+        assert!(fr.is_empty());
+        for id in 0..6u64 {
+            fr.push(TraceRecord {
+                id,
+                outcome: "max_tokens",
+                timing: Timing::new(),
+                prompt_len: 3,
+                tokens_generated: 2,
+                pages_reused: 0,
+                pages_allocated: 1,
+            });
+        }
+        assert_eq!(fr.len(), 4, "ring capped");
+        let recent = fr.recent(10);
+        let ids: Vec<u64> = recent.iter().map(|r| r.id).collect();
+        assert_eq!(ids, [5, 4, 3, 2], "newest first, oldest evicted");
+        assert_eq!(fr.recent(2).len(), 2);
     }
 }

@@ -167,8 +167,8 @@ fn append_one(
     if s.consecutive_failures >= cfg.degrade_after {
         s.degraded = true;
         drop(s);
-        eprintln!(
-            "[isoquant-store] {} consecutive spill failures — persistence \
+        crate::log_warn!(
+            "store: {} consecutive spill failures — persistence \
              DEGRADED to disabled (serving continues; reads of already-durable \
              records stay enabled; restart to re-arm writes)",
             cfg.degrade_after

@@ -1,0 +1,259 @@
+//! Bounded log-bucketed latency histograms for the serve path.
+//!
+//! [`super::LatencyRecorder`] keeps every sample, which is the right
+//! trade for a one-shot bench (exact percentiles, bounded run) and the
+//! wrong one for a server: memory grows with request count and every
+//! `{"stats": true}` percentile query clones and sorts the whole
+//! vector.  [`Histogram`] fixes both — a fixed array of 64
+//! geometrically spaced buckets (ratio √2, covering 1 µs to ~35 min),
+//! lock-free `AtomicU64` counts so recorders can be shared across
+//! threads, O(buckets) percentile estimation, and O(buckets) merge.
+//! A percentile estimate is off by at most one bucket width (~41%
+//! relative), which is what a latency dashboard needs; exact-sample
+//! analysis stays on `LatencyRecorder`.
+//!
+//! Bucket `i < 63` counts samples with `value_us <= 2^(i/2)`; bucket 63
+//! is the +Inf overflow.  The bounds double every two buckets, so the
+//! exposition's `le` labels line up with the powers of two a human can
+//! read off a scrape.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Total bucket count, including the +Inf overflow bucket.
+pub const BUCKETS: usize = 64;
+
+/// Finite upper bounds in microseconds: `bound[i] = 2^(i/2)`.  The last
+/// bucket (index `BUCKETS - 1`) has no finite bound.
+pub fn bucket_bounds_us() -> &'static [f64; BUCKETS - 1] {
+    static BOUNDS: OnceLock<[f64; BUCKETS - 1]> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut b = [0.0; BUCKETS - 1];
+        for (i, slot) in b.iter_mut().enumerate() {
+            *slot = 2f64.powf(i as f64 / 2.0);
+        }
+        b
+    })
+}
+
+/// Lock-free bounded histogram of microsecond latencies.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    /// sum of recorded values, rounded to whole microseconds
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [(); BUCKETS].map(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for a value in microseconds (sub-µs values land in
+    /// bucket 0, values beyond the last finite bound in the overflow).
+    pub fn bucket_of(us: f64) -> usize {
+        bucket_bounds_us().partition_point(|&b| b < us)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        let us = if us.is_finite() { us.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us.round() as u64, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram's counts into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.counts.iter().zip(&other.counts) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy (plain integers) for rendering off-thread.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(&self.counts) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// O(buckets) percentile estimate: the upper bound of the bucket
+    /// holding the rank, so the estimate is never below the true value
+    /// by more than one bucket width.  NaN when empty (the same
+    /// convention as [`super::LatencyRecorder::percentile`]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.snapshot().percentile(p)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.snapshot().mean()
+    }
+}
+
+/// Plain-integer copy of a [`Histogram`], cheap to clone and hand to a
+/// renderer on another thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub sum_us: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        // same rank convention as LatencyRecorder: round((n-1) * p/100)
+        let rank = ((total - 1) as f64 * p / 100.0).round() as u64;
+        let bounds = bucket_bounds_us();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                // overflow bucket: report the last finite bound — the
+                // estimate saturates rather than inventing a value
+                return bounds.get(i).copied().unwrap_or(bounds[BUCKETS - 2]);
+            }
+        }
+        bounds[BUCKETS - 2]
+    }
+
+    pub fn mean(&self) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        self.sum_us as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_increasing_sqrt2() {
+        let b = bucket_bounds_us();
+        assert_eq!(b[0], 1.0);
+        assert_eq!(b[2], 2.0);
+        assert_eq!(b[4], 4.0);
+        for w in b.windows(2) {
+            assert!(w[1] > w[0]);
+            assert!((w[1] / w[0] - 2f64.sqrt()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bucket_of_edges() {
+        // values at a bound land in the bucket whose `le` is that bound
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(1.0), 0);
+        assert_eq!(Histogram::bucket_of(1.0001), 1);
+        assert_eq!(Histogram::bucket_of(2.0), 2);
+        assert_eq!(Histogram::bucket_of(f64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_of_exact() {
+        let h = Histogram::new();
+        let mut r = crate::metrics::LatencyRecorder::new();
+        // deterministic spread across several octaves
+        for i in 0..10_000u64 {
+            let v = 1.0 + (i as f64 * 37.0) % 90_000.0;
+            h.record_us(v);
+            r.record_us(v);
+        }
+        let bounds = bucket_bounds_us();
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let exact = r.percentile(p);
+            let est = h.percentile(p);
+            let b = Histogram::bucket_of(exact);
+            let lo = if b == 0 { 0.0 } else { bounds[b - 1] };
+            let hi = bounds.get(b).copied().unwrap_or(f64::INFINITY);
+            assert!(
+                est >= lo && est <= hi,
+                "p{p}: estimate {est} outside exact value's bucket [{lo}, {hi}] (exact {exact})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let h = Histogram::new();
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_us(10.0);
+        b.record_us(10.0);
+        b.record_us(1e6);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        let snap = a.snapshot();
+        assert_eq!(snap.sum_us, 1_000_020);
+    }
+
+    #[test]
+    fn memory_is_fixed_regardless_of_samples() {
+        // the whole point: no per-sample storage anywhere
+        let h = Histogram::new();
+        for i in 0..100_000 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(
+            std::mem::size_of::<Histogram>(),
+            std::mem::size_of::<AtomicU64>() * (BUCKETS + 1)
+        );
+    }
+
+    #[test]
+    fn overflow_bucket_counts_and_saturates() {
+        let h = Histogram::new();
+        h.record_us(1e18); // way past the last finite bound
+        assert_eq!(h.count(), 1);
+        let last_finite = bucket_bounds_us()[BUCKETS - 2];
+        assert_eq!(h.percentile(99.0), last_finite);
+        let snap = h.snapshot();
+        assert_eq!(snap.counts[BUCKETS - 1], 1);
+    }
+}

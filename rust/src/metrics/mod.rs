@@ -1,8 +1,19 @@
 //! Serving metrics: latency percentiles, throughput counters, and the
 //! reconstruction-quality measures reported by the experiments.
+//!
+//! Counter structs here are *field-tabled*: the macro invocations below
+//! generate `Clone`/`PartialEq`/[`ShareStats::fields`] from one list,
+//! so stats JSON, the `/metrics` exposition, and the summary line all
+//! iterate the same table — a newly added counter cannot be silently
+//! dropped from any surface (and a test asserts exactly that).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+pub mod histogram;
+pub mod prometheus;
+
+pub use histogram::{Histogram, HistogramSnapshot};
 
 /// Reservoir-free latency recorder: keeps every sample (serving runs here
 /// are bounded) and reports percentiles.
@@ -88,6 +99,44 @@ pub struct Counters {
     pub bytes_uncompressed: AtomicU64,
 }
 
+/// The single field table for [`Counters`].  Adding a field to the
+/// struct without adding it here fails to compile (`counters_fields`
+/// would not read it, but the completeness test in
+/// `tests/observability.rs` compares against `std::mem::size_of`), and
+/// every rendering surface iterates [`Counters::fields`] — so a new
+/// counter automatically reaches stats JSON and `/metrics`.
+macro_rules! for_each_counter {
+    ($m:ident) => {
+        $m! {
+            requests,
+            tokens_prefilled,
+            tokens_decoded,
+            pages_allocated,
+            pages_freed,
+            bytes_compressed,
+            bytes_uncompressed,
+        }
+    };
+}
+
+macro_rules! counters_fields {
+    ($($f:ident,)*) => {
+        impl Counters {
+            /// How many fields the table carries (compared against the
+            /// struct size in tests, so the table cannot fall behind).
+            pub const FIELD_COUNT: usize = [$(stringify!($f),)*].len();
+
+            /// Every counter as a `(name, value)` pair — the one list
+            /// stats JSON and the `/metrics` exposition render from.
+            pub fn fields(&self) -> Vec<(&'static str, u64)> {
+                vec![$((stringify!($f), self.$f.load(Ordering::Relaxed)),)*]
+            }
+        }
+    };
+}
+
+for_each_counter!(counters_fields);
+
 /// Prefix-sharing accounting kept by the cache manager (single-writer,
 /// so plain integers): index hits, copy-on-write activity, and the bytes
 /// sharing kept off the allocator.  The two gather-dedup counters are
@@ -146,85 +195,111 @@ pub struct ShareStats {
     pub store_degraded: u64,
 }
 
-impl Clone for ShareStats {
-    fn clone(&self) -> Self {
-        ShareStats {
-            prefix_hit_pages: self.prefix_hit_pages,
-            prefix_hit_tokens: self.prefix_hit_tokens,
-            cow_copies: self.cow_copies,
-            bytes_deduped: self.bytes_deduped,
-            slots_copied: self.slots_copied,
-            tail_copies: self.tail_copies,
-            pages_published: self.pages_published,
-            pages_evicted: self.pages_evicted,
-            pages_spilled: self.pages_spilled,
-            pages_rehydrated: self.pages_rehydrated,
-            pages_promoted: self.pages_promoted,
-            strips_deduped: AtomicU64::new(self.strips_deduped.load(Ordering::Relaxed)),
-            bytes_saved: AtomicU64::new(self.bytes_saved.load(Ordering::Relaxed)),
-            requests_cancelled: self.requests_cancelled,
-            requests_timed_out: self.requests_timed_out,
-            requests_shed: self.requests_shed,
-            store_degraded: self.store_degraded,
+/// The single field table for [`ShareStats`]: `plain` fields are
+/// single-writer `u64`, `atomic` fields are the gather-path
+/// `AtomicU64`s.  `Clone`, `PartialEq`, [`ShareStats::fields`], and
+/// (through `fields`) the summary line, stats JSON, and `/metrics`
+/// exposition all expand from this one list — add a field to the struct
+/// without adding it here and `clone()` fails to compile.
+macro_rules! for_each_share_stat {
+    ($m:ident) => {
+        $m! {
+            plain prefix_hit_pages,
+            plain prefix_hit_tokens,
+            plain cow_copies,
+            plain bytes_deduped,
+            plain slots_copied,
+            plain tail_copies,
+            plain pages_published,
+            plain pages_evicted,
+            plain pages_spilled,
+            plain pages_rehydrated,
+            plain pages_promoted,
+            atomic strips_deduped,
+            atomic bytes_saved,
+            plain requests_cancelled,
+            plain requests_timed_out,
+            plain requests_shed,
+            plain store_degraded,
         }
-    }
+    };
 }
 
-impl PartialEq for ShareStats {
-    fn eq(&self, other: &Self) -> bool {
-        self.prefix_hit_pages == other.prefix_hit_pages
-            && self.prefix_hit_tokens == other.prefix_hit_tokens
-            && self.cow_copies == other.cow_copies
-            && self.bytes_deduped == other.bytes_deduped
-            && self.slots_copied == other.slots_copied
-            && self.tail_copies == other.tail_copies
-            && self.pages_published == other.pages_published
-            && self.pages_evicted == other.pages_evicted
-            && self.pages_spilled == other.pages_spilled
-            && self.pages_rehydrated == other.pages_rehydrated
-            && self.pages_promoted == other.pages_promoted
-            && self.strips_deduped.load(Ordering::Relaxed)
-                == other.strips_deduped.load(Ordering::Relaxed)
-            && self.bytes_saved.load(Ordering::Relaxed)
-                == other.bytes_saved.load(Ordering::Relaxed)
-            && self.requests_cancelled == other.requests_cancelled
-            && self.requests_timed_out == other.requests_timed_out
-            && self.requests_shed == other.requests_shed
-            && self.store_degraded == other.store_degraded
-    }
+macro_rules! share_read {
+    (plain $self:ident $f:ident) => {
+        $self.$f
+    };
+    (atomic $self:ident $f:ident) => {
+        $self.$f.load(Ordering::Relaxed)
+    };
 }
+
+macro_rules! share_clone_field {
+    (plain $self:ident $f:ident) => {
+        $self.$f
+    };
+    (atomic $self:ident $f:ident) => {
+        AtomicU64::new($self.$f.load(Ordering::Relaxed))
+    };
+}
+
+macro_rules! share_impls {
+    ($($kind:ident $f:ident,)*) => {
+        impl ShareStats {
+            /// How many fields the table carries.
+            pub const FIELD_COUNT: usize = [$(stringify!($f),)*].len();
+
+            /// Every counter as a `(name, value)` pair, in declaration
+            /// order — the one list every rendering surface iterates.
+            pub fn fields(&self) -> Vec<(&'static str, u64)> {
+                vec![$((stringify!($f), share_read!($kind self $f)),)*]
+            }
+        }
+
+        impl Clone for ShareStats {
+            fn clone(&self) -> Self {
+                ShareStats { $($f: share_clone_field!($kind self $f),)* }
+            }
+        }
+
+        impl PartialEq for ShareStats {
+            fn eq(&self, other: &Self) -> bool {
+                $(share_read!($kind self $f) == share_read!($kind other $f))&&*
+            }
+        }
+    };
+}
+
+for_each_share_stat!(share_impls);
 
 impl Eq for ShareStats {}
 
 impl ShareStats {
+    /// One-line human summary, driven by the field table so a new
+    /// counter shows up here without a second edit.  Byte counters
+    /// render in MB; lifecycle counters are omitted while zero (the
+    /// steady-state line stays short); a degraded store is shouted.
     pub fn summary(&self) -> String {
-        let mut s = format!(
-            "prefix: hits={}p/{}t cow={} dedup={:.1}MB slotcopy={}s/{} published={} \
-             evicted={} spill={} rehydrated={} promote={} \
-             gather-dedup={}r/{:.1}MB",
-            self.prefix_hit_pages,
-            self.prefix_hit_tokens,
-            self.cow_copies,
-            self.bytes_deduped as f64 / 1e6,
-            self.slots_copied,
-            self.tail_copies,
-            self.pages_published,
-            self.pages_evicted,
-            self.pages_spilled,
-            self.pages_rehydrated,
-            self.pages_promoted,
-            self.strips_deduped.load(Ordering::Relaxed),
-            self.bytes_saved.load(Ordering::Relaxed) as f64 / 1e6,
-        );
-        // lifecycle counters only clutter the line once they fire
-        if self.requests_cancelled + self.requests_timed_out + self.requests_shed > 0 {
-            s.push_str(&format!(
-                " lifecycle: cancelled={} timeout={} shed={}",
-                self.requests_cancelled, self.requests_timed_out, self.requests_shed,
-            ));
-        }
-        if self.store_degraded > 0 {
-            s.push_str(" STORE-DEGRADED");
+        let mut s = String::new();
+        for (name, v) in self.fields() {
+            match name {
+                "store_degraded" => {
+                    if v > 0 {
+                        s.push_str(" STORE-DEGRADED");
+                    }
+                }
+                "requests_cancelled" | "requests_timed_out" | "requests_shed" if v == 0 => {}
+                _ => {
+                    if !s.is_empty() {
+                        s.push(' ');
+                    }
+                    if name.starts_with("bytes_") {
+                        s.push_str(&format!("{name}={:.1}MB", v as f64 / 1e6));
+                    } else {
+                        s.push_str(&format!("{name}={v}"));
+                    }
+                }
+            }
         }
         s
     }
@@ -378,5 +453,45 @@ mod tests {
         Counters::bump(&c.bytes_compressed, 100);
         Counters::bump(&c.bytes_uncompressed, 1600);
         assert!((c.compression_ratio() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn field_tables_cover_every_struct_field() {
+        // every field is 8 bytes (u64 / AtomicU64): a field added to
+        // either struct without a matching table entry changes the
+        // struct size but not FIELD_COUNT, and this assert fires
+        assert_eq!(std::mem::size_of::<ShareStats>(), 8 * ShareStats::FIELD_COUNT);
+        assert_eq!(std::mem::size_of::<Counters>(), 8 * Counters::FIELD_COUNT);
+        let s = ShareStats::default();
+        assert_eq!(s.fields().len(), ShareStats::FIELD_COUNT);
+        assert_eq!(Counters::default().fields().len(), Counters::FIELD_COUNT);
+    }
+
+    #[test]
+    fn share_stats_clone_eq_via_table() {
+        let mut s = ShareStats::default();
+        s.prefix_hit_pages = 3;
+        s.strips_deduped.store(7, Ordering::Relaxed);
+        let c = s.clone();
+        assert_eq!(s, c);
+        assert_eq!(c.strips_deduped.load(Ordering::Relaxed), 7);
+        let mut d = s.clone();
+        d.requests_shed = 1;
+        assert_ne!(s, d);
+    }
+
+    #[test]
+    fn share_summary_covers_table_and_gates_lifecycle() {
+        let mut s = ShareStats::default();
+        let line = s.summary();
+        assert!(line.contains("prefix_hit_pages=0"));
+        assert!(line.contains("bytes_deduped=0.0MB"), "{line}");
+        assert!(!line.contains("requests_shed"), "zero lifecycle hidden");
+        assert!(!line.contains("STORE-DEGRADED"));
+        s.requests_shed = 2;
+        s.store_degraded = 1;
+        let line = s.summary();
+        assert!(line.contains("requests_shed=2"));
+        assert!(line.contains("STORE-DEGRADED"));
     }
 }

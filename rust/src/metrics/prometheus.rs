@@ -1,0 +1,520 @@
+//! Prometheus text-exposition 0.0.4 rendering and linting — hand-rolled
+//! in the repo's no-new-deps idiom.
+//!
+//! The engine loop assembles a [`MetricsSnapshot`] (cloned counters,
+//! plain-integer gauges, [`HistogramSnapshot`]s) roughly once a second
+//! and renders it with [`render_prometheus`] into a shared string; the
+//! reactor serves scrapes from that string, so a `GET /metrics` never
+//! touches the engine queue.  [`lint_exposition`] is the validity
+//! checker both `tests/observability.rs` and the CI scrape leg run
+//! against real output: HELP/TYPE present for every family, sample
+//! lines parse, histogram buckets are cumulative-monotone, the `+Inf`
+//! bucket equals `_count`, and `_sum` exists.
+//!
+//! Naming scheme (all under the `isoquant_` prefix):
+//!
+//! | metric | source |
+//! |---|---|
+//! | `isoquant_share_<field>_total` | every [`ShareStats`] counter |
+//! | `isoquant_store_degraded` | the one ShareStats gauge |
+//! | `isoquant_<field>_total` | every [`super::Counters`] counter |
+//! | `isoquant_compression_ratio` | append-path bytes ratio |
+//! | `isoquant_pages_*` | page-pool occupancy gauges |
+//! | `isoquant_store_*` | persistent-store health |
+//! | `isoquant_*_seconds` | latency histograms (TTFT, inter-token, …) |
+//! | `isoquant_engine_phase_seconds{phase=...}` | step profiler |
+
+use std::collections::BTreeMap;
+
+use super::histogram::{bucket_bounds_us, HistogramSnapshot, BUCKETS};
+use super::ShareStats;
+
+/// Page-pool and store occupancy gauges, read off the cache manager at
+/// snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct PageGauges {
+    /// pages owned by live (in-flight) sequences
+    pub live: u64,
+    /// zero-ref sealed pages parked in the prefix index (warm)
+    pub cached: u64,
+    /// pool capacity in pages
+    pub capacity: u64,
+    /// high-water mark of resident pages
+    pub high_water: u64,
+    /// resident pages referenced by more than one sequence
+    pub shared: u64,
+    /// resident pages referenced by exactly one sequence
+    pub exclusive: u64,
+    /// cold directory entries resolvable from the persistent store
+    pub cold: u64,
+    /// bytes the persistent store holds on disk
+    pub store_disk_bytes: u64,
+    /// 1 when a persistent store is attached
+    pub store_attached: u64,
+}
+
+/// Everything a `/metrics` render needs, detached from the engine so
+/// the render (and the scrape serving it) can happen on another thread.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub share: ShareStats,
+    /// `Counters::fields()` at snapshot time
+    pub counters: Vec<(&'static str, u64)>,
+    /// `Counters::compression_ratio()` (NaN until data flows; rendered 0)
+    pub compression_ratio: f64,
+    pub pages: PageGauges,
+    /// reactor-side disconnects due to per-connection buffer overflow
+    pub conn_overflow_disconnects: u64,
+    /// latency histograms: (full metric name, snapshot); values are
+    /// recorded in µs and rendered in seconds
+    pub hists: Vec<(&'static str, HistogramSnapshot)>,
+    /// step-profiler phases: (phase label, snapshot); empty unless
+    /// `[engine] profile = on`
+    pub phases: Vec<(&'static str, HistogramSnapshot)>,
+}
+
+impl Default for MetricsSnapshot {
+    fn default() -> Self {
+        MetricsSnapshot {
+            share: ShareStats::default(),
+            counters: super::Counters::default().fields(),
+            compression_ratio: f64::NAN,
+            pages: PageGauges::default(),
+            conn_overflow_disconnects: 0,
+            hists: Vec::new(),
+            phases: Vec::new(),
+        }
+    }
+}
+
+fn push_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+    ));
+}
+
+fn push_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+    ));
+}
+
+/// One histogram series body: cumulative `_bucket` lines (le in
+/// seconds), `_sum`, `_count`.  `label` adds a fixed label pair (the
+/// profiler's `phase="..."`) ahead of `le`.
+fn push_hist_series(
+    out: &mut String,
+    name: &str,
+    label: Option<(&str, &str)>,
+    h: &HistogramSnapshot,
+) {
+    let bounds = bucket_bounds_us();
+    let mut cum = 0u64;
+    for (i, &c) in h.counts.iter().enumerate() {
+        cum += c;
+        let le = if i < BUCKETS - 1 {
+            format!("{}", bounds[i] / 1e6)
+        } else {
+            "+Inf".to_string()
+        };
+        match label {
+            Some((k, v)) => {
+                out.push_str(&format!("{name}_bucket{{{k}=\"{v}\",le=\"{le}\"}} {cum}\n"))
+            }
+            None => out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n")),
+        }
+    }
+    let plain = match label {
+        Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
+        None => String::new(),
+    };
+    out.push_str(&format!("{name}_sum{plain} {}\n", h.sum_us as f64 / 1e6));
+    out.push_str(&format!("{name}_count{plain} {cum}\n"));
+}
+
+fn push_hist(out: &mut String, name: &str, help: &str, h: &HistogramSnapshot) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} histogram\n"
+    ));
+    push_hist_series(out, name, None, h);
+}
+
+/// Render a snapshot as Prometheus text exposition 0.0.4.
+pub fn render_prometheus(s: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    for (name, v) in s.share.fields() {
+        if name == "store_degraded" {
+            push_gauge(
+                &mut out,
+                "isoquant_store_degraded",
+                "1 once the persistent store tripped into degraded mode",
+                v as f64,
+            );
+        } else {
+            push_counter(
+                &mut out,
+                &format!("isoquant_share_{name}_total"),
+                &format!("prefix-sharing counter {name}"),
+                v,
+            );
+        }
+    }
+
+    for (name, v) in &s.counters {
+        push_counter(
+            &mut out,
+            &format!("isoquant_{name}_total"),
+            &format!("engine counter {name}"),
+            *v,
+        );
+    }
+
+    let ratio = if s.compression_ratio.is_finite() {
+        s.compression_ratio
+    } else {
+        0.0
+    };
+    push_gauge(
+        &mut out,
+        "isoquant_compression_ratio",
+        "uncompressed/compressed byte ratio on the append path (0 until data flows)",
+        ratio,
+    );
+
+    let p = &s.pages;
+    push_gauge(&mut out, "isoquant_pages_live", "pages owned by in-flight sequences", p.live as f64);
+    push_gauge(&mut out, "isoquant_pages_cached", "zero-ref sealed pages parked in the prefix index", p.cached as f64);
+    push_gauge(&mut out, "isoquant_pages_capacity", "page-pool capacity", p.capacity as f64);
+    push_gauge(&mut out, "isoquant_pages_high_water", "high-water mark of resident pages", p.high_water as f64);
+    push_gauge(&mut out, "isoquant_pages_shared", "resident pages referenced by more than one sequence", p.shared as f64);
+    push_gauge(&mut out, "isoquant_pages_exclusive", "resident pages referenced by exactly one sequence", p.exclusive as f64);
+    push_gauge(&mut out, "isoquant_pages_cold", "cold directory entries resolvable from the persistent store", p.cold as f64);
+    push_gauge(&mut out, "isoquant_store_disk_bytes", "bytes the persistent store holds on disk", p.store_disk_bytes as f64);
+    push_gauge(&mut out, "isoquant_store_attached", "1 when a persistent store is attached", p.store_attached as f64);
+
+    push_counter(
+        &mut out,
+        "isoquant_conn_overflow_disconnects_total",
+        "connections dropped for exceeding the per-connection buffer cap",
+        s.conn_overflow_disconnects,
+    );
+
+    for (name, h) in &s.hists {
+        push_hist(&mut out, name, "latency histogram (seconds)", h);
+    }
+
+    if !s.phases.is_empty() {
+        out.push_str(
+            "# HELP isoquant_engine_phase_seconds per-phase Engine::step timings (seconds)\n\
+             # TYPE isoquant_engine_phase_seconds histogram\n",
+        );
+        for (phase, h) in &s.phases {
+            push_hist_series(&mut out, "isoquant_engine_phase_seconds", Some(("phase", phase)), h);
+        }
+    }
+
+    out
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Split a sample line into (name, labels-without-le, le, value).
+fn parse_sample(line: &str) -> Result<(String, String, Option<f64>, f64), String> {
+    let (name_labels, value) = match line.find('}') {
+        Some(close) => {
+            let v = line[close + 1..].trim();
+            (&line[..close + 1], v)
+        }
+        None => {
+            let sp = line
+                .find(' ')
+                .ok_or_else(|| format!("no value separator in {line:?}"))?;
+            (&line[..sp], line[sp + 1..].trim())
+        }
+    };
+    let value: f64 = value
+        .parse()
+        .map_err(|_| format!("unparseable value {value:?} in {line:?}"))?;
+    let (name, labels) = match name_labels.find('{') {
+        Some(open) => {
+            if !name_labels.ends_with('}') {
+                return Err(format!("unterminated label set in {line:?}"));
+            }
+            (
+                &name_labels[..open],
+                &name_labels[open + 1..name_labels.len() - 1],
+            )
+        }
+        None => (name_labels, ""),
+    };
+    if !valid_metric_name(name) {
+        return Err(format!("invalid metric name {name:?}"));
+    }
+    // our exposition never puts ',' or '=' inside label values, so a
+    // flat split is enough for the lint's purposes
+    let mut le = None;
+    let mut rest = Vec::new();
+    for pair in labels.split(',').filter(|p| !p.is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("malformed label {pair:?} in {line:?}"))?;
+        let v = v
+            .strip_prefix('"')
+            .and_then(|v| v.strip_suffix('"'))
+            .ok_or_else(|| format!("unquoted label value {pair:?} in {line:?}"))?;
+        if k == "le" {
+            le = Some(if v == "+Inf" {
+                f64::INFINITY
+            } else {
+                v.parse()
+                    .map_err(|_| format!("unparseable le {v:?} in {line:?}"))?
+            });
+        } else {
+            rest.push(pair.to_string());
+        }
+    }
+    Ok((name.to_string(), rest.join(","), le, value))
+}
+
+/// Validate Prometheus text exposition: every sample's family carries
+/// HELP and TYPE, sample lines parse, histogram bucket series are
+/// cumulative-monotone with a `+Inf` bucket equal to `_count`, and
+/// `_sum` is present.  Returns the first violation found.
+pub fn lint_exposition(text: &str) -> Result<(), String> {
+    #[derive(Default)]
+    struct Series {
+        buckets: Vec<(f64, f64)>,
+        count: Option<f64>,
+        sum: Option<f64>,
+    }
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut helps: Vec<String> = Vec::new();
+    let mut hist: BTreeMap<(String, String), Series> = BTreeMap::new();
+
+    if text.is_empty() {
+        return Err("empty exposition".into());
+    }
+
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(format!("line {ln}: HELP for invalid name {name:?}"));
+            }
+            helps.push(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: unknown TYPE {kind:?} for {name}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {ln}: duplicate TYPE for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+
+        let (name, labels, le, value) =
+            parse_sample(line).map_err(|e| format!("line {ln}: {e}"))?;
+
+        // resolve the family: histogram children hang off the base name
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                name.strip_suffix(suf)
+                    .filter(|base| types.get(*base).map(String::as_str) == Some("histogram"))
+                    .map(str::to_string)
+            })
+            .unwrap_or_else(|| name.clone());
+        let kind = types
+            .get(&family)
+            .ok_or_else(|| format!("line {ln}: sample {name} has no TYPE"))?;
+        if !helps.iter().any(|h| h == &family) {
+            return Err(format!("line {ln}: sample {name} has no HELP"));
+        }
+        if kind == "counter" && value < 0.0 {
+            return Err(format!("line {ln}: counter {name} is negative"));
+        }
+
+        if kind == "histogram" {
+            let series = hist.entry((family.clone(), labels)).or_default();
+            if name.ends_with("_bucket") {
+                let le =
+                    le.ok_or_else(|| format!("line {ln}: bucket without le label"))?;
+                series.buckets.push((le, value));
+            } else if name.ends_with("_count") {
+                series.count = Some(value);
+            } else if name.ends_with("_sum") {
+                series.sum = Some(value);
+            } else {
+                return Err(format!(
+                    "line {ln}: bare sample {name} for histogram family {family}"
+                ));
+            }
+        }
+    }
+
+    for ((family, labels), s) in &hist {
+        let what = if labels.is_empty() {
+            family.clone()
+        } else {
+            format!("{family}{{{labels}}}")
+        };
+        if s.buckets.is_empty() {
+            return Err(format!("{what}: histogram with no buckets"));
+        }
+        for w in s.buckets.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err(format!("{what}: le values not increasing"));
+            }
+            if w[1].1 < w[0].1 {
+                return Err(format!(
+                    "{what}: cumulative bucket counts decrease at le={}",
+                    w[1].0
+                ));
+            }
+        }
+        let last = s.buckets.last().unwrap();
+        if !last.0.is_infinite() {
+            return Err(format!("{what}: missing +Inf bucket"));
+        }
+        let count = s
+            .count
+            .ok_or_else(|| format!("{what}: missing _count"))?;
+        if (last.1 - count).abs() > 1e-9 {
+            return Err(format!(
+                "{what}: +Inf bucket {} != _count {count}",
+                last.1
+            ));
+        }
+        if s.sum.is_none() {
+            return Err(format!("{what}: missing _sum"));
+        }
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Counters, Histogram};
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let h = Histogram::new();
+        h.record_us(120.0);
+        h.record_us(4_000.0);
+        h.record_us(90_000.0);
+        let mut s = MetricsSnapshot::default();
+        s.share.prefix_hit_pages = 5;
+        s.share.requests_shed = 1;
+        s.compression_ratio = 16.0;
+        s.pages.live = 7;
+        s.pages.capacity = 64;
+        s.hists = vec![
+            ("isoquant_ttft_seconds", h.snapshot()),
+            ("isoquant_inter_token_seconds", h.snapshot()),
+            ("isoquant_queue_wait_seconds", h.snapshot()),
+            ("isoquant_request_total_seconds", h.snapshot()),
+        ];
+        s.phases = vec![("forward", h.snapshot()), ("gather", h.snapshot())];
+        s
+    }
+
+    #[test]
+    fn render_passes_lint_and_covers_field_tables() {
+        let snap = sample_snapshot();
+        let text = render_prometheus(&snap);
+        lint_exposition(&text).expect("own exposition lints clean");
+        // every field-table counter appears by name
+        for (name, _) in snap.share.fields() {
+            assert!(text.contains(name), "share counter {name} missing");
+        }
+        for (name, _) in Counters::default().fields() {
+            assert!(
+                text.contains(&format!("isoquant_{name}_total")),
+                "counter {name} missing"
+            );
+        }
+        for required in [
+            "isoquant_compression_ratio",
+            "isoquant_pages_live",
+            "isoquant_pages_high_water",
+            "isoquant_pages_cold",
+            "isoquant_store_degraded",
+            "isoquant_store_attached",
+            "isoquant_conn_overflow_disconnects_total",
+            "isoquant_ttft_seconds_bucket",
+            "isoquant_engine_phase_seconds_bucket{phase=\"forward\"",
+        ] {
+            assert!(text.contains(required), "{required} missing:\n{text}");
+        }
+    }
+
+    #[test]
+    fn empty_histograms_still_lint() {
+        let mut snap = MetricsSnapshot::default();
+        snap.hists = vec![("isoquant_ttft_seconds", Histogram::new().snapshot())];
+        let text = render_prometheus(&snap);
+        lint_exposition(&text).expect("zero-count histograms are valid");
+        assert!(text.contains("isoquant_ttft_seconds_count 0"));
+    }
+
+    #[test]
+    fn lint_rejects_missing_type() {
+        assert!(lint_exposition("foo 1\n").is_err());
+        let ok = "# HELP foo x\n# TYPE foo counter\nfoo 1\n";
+        assert!(lint_exposition(ok).is_ok());
+        let no_help = "# TYPE foo counter\nfoo 1\n";
+        assert!(lint_exposition(no_help).is_err());
+    }
+
+    #[test]
+    fn lint_rejects_broken_histograms() {
+        let head = "# HELP h x\n# TYPE h histogram\n";
+        // cumulative counts decrease
+        let bad = format!(
+            "{head}h_bucket{{le=\"1\"}} 5\nh_bucket{{le=\"2\"}} 3\nh_bucket{{le=\"+Inf\"}} 5\nh_sum 9\nh_count 5\n"
+        );
+        assert!(lint_exposition(&bad).is_err());
+        // +Inf != count
+        let bad = format!(
+            "{head}h_bucket{{le=\"1\"}} 2\nh_bucket{{le=\"+Inf\"}} 5\nh_sum 9\nh_count 4\n"
+        );
+        assert!(lint_exposition(&bad).is_err());
+        // missing +Inf
+        let bad = format!("{head}h_bucket{{le=\"1\"}} 2\nh_sum 9\nh_count 2\n");
+        assert!(lint_exposition(&bad).is_err());
+        // the well-formed version passes
+        let ok = format!(
+            "{head}h_bucket{{le=\"1\"}} 2\nh_bucket{{le=\"+Inf\"}} 5\nh_sum 9\nh_count 5\n"
+        );
+        assert!(lint_exposition(&ok).is_ok());
+    }
+
+    #[test]
+    fn lint_rejects_garbage_samples() {
+        let head = "# HELP foo x\n# TYPE foo counter\n";
+        assert!(lint_exposition(&format!("{head}foo bar\n")).is_err());
+        assert!(lint_exposition(&format!("{head}1foo 2\n")).is_err());
+        assert!(lint_exposition(&format!("{head}foo -1\n")).is_err(), "negative counter");
+    }
+}

@@ -4,15 +4,30 @@
 //!
 //! Request:  `{"id": 1, "prompt": [3, 17, 5], "max_new_tokens": 16}`
 //!           (optional `"deadline_ms": 250` per-request deadline,
-//!           optional `"stream": true` for token-by-token responses)
+//!           optional `"stream": true` for token-by-token responses,
+//!           optional `"trace": true` for a lifecycle timeline on the
+//!           completion line)
 //! Response: `{"id": 1, "tokens": [...], "prompt_len": 3,
 //!             "ttft_us": 1234.5, "total_us": 5678.9, "finish": "max_tokens"}`
 //!
 //! With `"stream": true` the terminal line above is preceded by one
 //! line per generated token: `{"id": 1, "index": 0, "token": 42}`.
 //! A `{"stats": true}` line is answered with the counter / latency
-//! snapshot ([`render_stats`]) without touching a lane.  Non-streaming
-//! clients see byte-identical behavior to the pre-reactor server.
+//! snapshot ([`render_stats`]) without touching a lane; add
+//! `"traces": K` to include the flight recorder's last K request
+//! timelines.  Non-streaming clients see byte-identical behavior to
+//! the pre-reactor server.
+//!
+//! # Observability
+//!
+//! The same listener also answers HTTP: a line starting with `"GET "`
+//! flips the connection into HTTP mode and `GET /metrics` returns
+//! Prometheus text exposition rendered from the engine's last metrics
+//! snapshot (refreshed about once a second by the engine loop) — a
+//! scrape never touches the engine queue.  `[server] metrics_addr`
+//! optionally opens a second, metrics-only listener on the same
+//! reactor.  `[server] log_level` / `log_json` control the leveled
+//! logger ([`crate::util::log`]) that all server output goes through.
 //!
 //! One reactor thread owns the listener and all client sockets
 //! (non-blocking, one event loop — no thread per connection, no accept
@@ -43,15 +58,17 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{
-    Batcher, Completion, Engine, FinishReason, Request, Timing, TokenEvent,
+    Batcher, Completion, Engine, FinishReason, Request, Timing, TokenEvent, TraceRecord,
 };
-use crate::metrics::{LatencyRecorder, ShareStats};
+use crate::log_info;
+use crate::metrics::prometheus::render_prometheus;
+use crate::metrics::{Histogram, ShareStats};
 use crate::util::json::Json;
 
 pub mod poller;
@@ -65,8 +82,9 @@ pub enum ServerMsg {
     /// the connection that submitted this request id is gone — free
     /// its queue slot / lane / pages; no response will be written
     Cancel(u64),
-    /// a `{"stats": true}` request: answer `id` with [`render_stats`]
-    Stats(u64),
+    /// a `{"stats": true}` request: answer `id` with [`render_stats`];
+    /// `traces` > 0 appends the flight recorder's last K timelines
+    Stats { id: u64, traces: usize },
 }
 
 /// Extract a non-negative integer field (JSON numbers are f64: a
@@ -128,25 +146,57 @@ pub fn parse_request(
         None => false,
         Some(x) => x.as_bool().context("'stream' must be a boolean")?,
     };
+    let trace = match v.get("trace") {
+        None => false,
+        Some(x) => x.as_bool().context("'trace' must be a boolean")?,
+    };
     Ok(Request {
         id,
         prompt,
         max_new_tokens,
         deadline_ms,
         stream,
+        trace,
+        received_at: None,
+        parsed_at: None,
     })
 }
 
-/// Render one completion line.
-pub fn render_completion(c: &Completion) -> String {
-    let finish = match c.finish {
-        FinishReason::MaxTokens => "max_tokens",
-        FinishReason::ContextFull => "context_full",
-        FinishReason::Rejected => "rejected",
-        FinishReason::Cancelled => "cancelled",
-        FinishReason::Timeout => "timeout",
+/// The per-request timeline as a JSON object: every lifecycle stamp as
+/// a µs offset from the trace origin (`received` when the reactor
+/// stamped it, else `queued`), `-1` for stamps the request never
+/// reached, plus the outcome and page accounting.  Shared by the
+/// completion line's `"trace"` field and the stats `"traces"` dump.
+fn trace_json(
+    timing: &Timing,
+    outcome: &str,
+    pages_reused: usize,
+    pages_allocated: usize,
+) -> Json {
+    let origin = timing.origin();
+    let stamp = |t: Option<Instant>| {
+        Json::num(t.map_or(-1.0, |t| (t - origin).as_secs_f64() * 1e6))
     };
     Json::obj(vec![
+        ("received", stamp(timing.received)),
+        ("parsed", stamp(timing.parsed)),
+        ("queued", stamp(Some(timing.submitted))),
+        ("admitted", stamp(timing.admitted)),
+        ("prefix_walk", stamp(timing.prefix_walk)),
+        ("prefill_done", stamp(timing.prefill_done)),
+        ("first_token", stamp(timing.first_token)),
+        ("finished", stamp(timing.finished)),
+        ("outcome", Json::str(outcome)),
+        ("pages_reused", Json::num(pages_reused as f64)),
+        ("pages_allocated", Json::num(pages_allocated as f64)),
+    ])
+}
+
+/// Render one completion line.  The `"trace"` field appears only when
+/// the request opted in — without it the line is byte-identical to the
+/// pre-observability protocol.
+pub fn render_completion(c: &Completion) -> String {
+    let mut fields = vec![
         ("id", Json::num(c.id as f64)),
         (
             "tokens",
@@ -156,9 +206,20 @@ pub fn render_completion(c: &Completion) -> String {
         ("prefix_hit_pages", Json::num(c.prefix_hit_pages as f64)),
         ("ttft_us", Json::num(c.timing.ttft_us().unwrap_or(-1.0))),
         ("total_us", Json::num(c.timing.total_us().unwrap_or(-1.0))),
-        ("finish", Json::str(finish)),
-    ])
-    .to_string()
+        ("finish", Json::str(c.finish.as_str())),
+    ];
+    if c.trace {
+        fields.push((
+            "trace",
+            trace_json(
+                &c.timing,
+                c.finish.as_str(),
+                c.prefix_hit_pages,
+                c.pages_allocated,
+            ),
+        ));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// Render one streamed-token line (`"stream": true` requests get one
@@ -182,88 +243,82 @@ fn render_overloaded(retry_after_ms: u64) -> String {
     .to_string()
 }
 
-fn latency_json(r: &LatencyRecorder) -> Json {
-    // percentile() is NaN on an empty recorder; -1 is the protocol's
-    // "not measured" marker (same convention as ttft_us)
-    fn pct(r: &LatencyRecorder, p: f64) -> Json {
-        let v = r.percentile(p);
+fn latency_json(h: &Histogram) -> Json {
+    // percentile() is NaN on an empty histogram; -1 is the protocol's
+    // "not measured" marker (same convention as ttft_us).  One snapshot
+    // serves all three percentile walks — the query is O(buckets), not
+    // O(samples), no matter how long the server has been up.
+    let s = h.snapshot();
+    let pct = |p: f64| {
+        let v = s.percentile(p);
         Json::num(if v.is_nan() { -1.0 } else { v })
-    }
+    };
     Json::obj(vec![
-        ("n", Json::num(r.len() as f64)),
-        ("p50_us", pct(r, 50.0)),
-        ("p95_us", pct(r, 95.0)),
-        ("p99_us", pct(r, 99.0)),
+        ("n", Json::num(s.count() as f64)),
+        ("p50_us", pct(50.0)),
+        ("p95_us", pct(95.0)),
+        ("p99_us", pct(99.0)),
     ])
 }
 
-/// The `{"stats": true}` response: the full [`ShareStats`] counter
-/// set, engine throughput counters, page residency, and the per-request
-/// TTFT / inter-token latency distributions the engine records.
-pub fn render_stats(engine: &Engine, conn_overflow_disconnects: u64) -> String {
-    let s = &engine.cache.share;
-    let c = &engine.stats.counters;
-    let g = crate::metrics::Counters::get;
-    Json::obj(vec![
+/// The `{"stats": true}` response: the full [`ShareStats`] counter set
+/// and engine throughput counters (both iterated from their field
+/// tables, so a newly added counter appears here without a second
+/// edit), page residency, the per-request latency distributions, the
+/// step profiler (when `[engine] profile = on`), and — with
+/// `"traces": K` — the flight recorder's last K request timelines.
+pub fn render_stats(engine: &Engine, conn_overflow_disconnects: u64, traces: usize) -> String {
+    let share_obj = Json::obj(
+        engine
+            .cache
+            .share
+            .fields()
+            .into_iter()
+            .map(|(n, v)| (n, Json::num(v as f64)))
+            .collect(),
+    );
+    let counters_obj = Json::obj(
+        engine
+            .stats
+            .counters
+            .fields()
+            .into_iter()
+            .map(|(n, v)| (n, Json::num(v as f64)))
+            .collect(),
+    );
+    let mut latency = vec![
+        ("ttft_us", latency_json(&engine.stats.ttft)),
+        ("inter_token_us", latency_json(&engine.stats.inter_token)),
+        ("queue_wait_us", latency_json(&engine.stats.queue_wait)),
+        ("request_total_us", latency_json(&engine.stats.request_total)),
+    ];
+    if let Some(p) = &engine.stats.profile {
+        latency.push((
+            "engine_phases_us",
+            Json::obj(
+                p.named()
+                    .into_iter()
+                    .map(|(n, h)| (n, latency_json(h)))
+                    .collect(),
+            ),
+        ));
+    }
+    let mut fields = vec![
         ("stats", Json::Bool(true)),
-        (
-            "share",
-            Json::obj(vec![
-                ("prefix_hit_pages", Json::num(s.prefix_hit_pages as f64)),
-                ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
-                ("cow_copies", Json::num(s.cow_copies as f64)),
-                ("bytes_deduped", Json::num(s.bytes_deduped as f64)),
-                ("slots_copied", Json::num(s.slots_copied as f64)),
-                ("tail_copies", Json::num(s.tail_copies as f64)),
-                ("pages_published", Json::num(s.pages_published as f64)),
-                ("pages_evicted", Json::num(s.pages_evicted as f64)),
-                ("pages_spilled", Json::num(s.pages_spilled as f64)),
-                ("pages_rehydrated", Json::num(s.pages_rehydrated as f64)),
-                ("pages_promoted", Json::num(s.pages_promoted as f64)),
-                (
-                    "strips_deduped",
-                    Json::num(s.strips_deduped.load(Ordering::Relaxed) as f64),
-                ),
-                (
-                    "bytes_saved",
-                    Json::num(s.bytes_saved.load(Ordering::Relaxed) as f64),
-                ),
-                ("requests_cancelled", Json::num(s.requests_cancelled as f64)),
-                ("requests_timed_out", Json::num(s.requests_timed_out as f64)),
-                ("requests_shed", Json::num(s.requests_shed as f64)),
-                ("store_degraded", Json::num(s.store_degraded as f64)),
-            ]),
-        ),
-        (
-            "counters",
-            Json::obj(vec![
-                ("requests", Json::num(g(&c.requests) as f64)),
-                ("tokens_prefilled", Json::num(g(&c.tokens_prefilled) as f64)),
-                ("tokens_decoded", Json::num(g(&c.tokens_decoded) as f64)),
-                ("pages_allocated", Json::num(g(&c.pages_allocated) as f64)),
-                ("pages_freed", Json::num(g(&c.pages_freed) as f64)),
-                ("bytes_compressed", Json::num(g(&c.bytes_compressed) as f64)),
-                (
-                    "bytes_uncompressed",
-                    Json::num(g(&c.bytes_uncompressed) as f64),
-                ),
-            ]),
-        ),
+        ("share", share_obj),
+        ("counters", counters_obj),
         (
             "pages",
             Json::obj(vec![
                 ("live", Json::num(engine.cache.live_pages() as f64)),
                 ("cached", Json::num(engine.cache.cached_pages() as f64)),
                 ("capacity", Json::num(engine.cache.page_capacity() as f64)),
+                ("high_water", Json::num(engine.cache.high_water_pages() as f64)),
+                ("shared", Json::num(engine.cache.shared_pages() as f64)),
+                ("exclusive", Json::num(engine.cache.exclusive_pages() as f64)),
             ]),
         ),
-        (
-            "latency",
-            Json::obj(vec![
-                ("ttft_us", latency_json(&engine.stats.ttft)),
-                ("inter_token_us", latency_json(&engine.stats.inter_token)),
-            ]),
-        ),
+        ("latency", Json::obj(latency)),
         (
             "server",
             Json::obj(vec![(
@@ -271,8 +326,31 @@ pub fn render_stats(engine: &Engine, conn_overflow_disconnects: u64) -> String {
                 Json::num(conn_overflow_disconnects as f64),
             )]),
         ),
-    ])
-    .to_string()
+    ];
+    if traces > 0 {
+        fields.push((
+            "traces",
+            Json::Arr(
+                engine
+                    .recent_traces(traces)
+                    .iter()
+                    .map(|t: &TraceRecord| {
+                        let mut o = trace_json(&t.timing, t.outcome, t.pages_reused, t.pages_allocated);
+                        if let Json::Obj(m) = &mut o {
+                            m.insert("id".into(), Json::num(t.id as f64));
+                            m.insert("prompt_len".into(), Json::num(t.prompt_len as f64));
+                            m.insert(
+                                "tokens_generated".into(),
+                                Json::num(t.tokens_generated as f64),
+                            );
+                        }
+                        o
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(fields).to_string()
 }
 
 // ---------------------------------------------------------------------
@@ -366,6 +444,7 @@ fn handle_msg(
                     last: true,
                 });
                 wake.wake();
+                engine.record_shed(&r);
                 engine.cache.share.requests_shed += 1;
             } else {
                 batcher.submit(r);
@@ -381,10 +460,10 @@ fn handle_msg(
                 engine.cancel(id);
             }
         }
-        ServerMsg::Stats(id) => {
+        ServerMsg::Stats { id, traces } => {
             let _ = out_tx.send(Outbound::Line {
                 id,
-                text: render_stats(engine, overflow.load(Ordering::Relaxed)),
+                text: render_stats(engine, overflow.load(Ordering::Relaxed), traces),
                 last: true,
             });
             wake.wake();
@@ -399,8 +478,8 @@ pub fn serve_on(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
 ) -> Result<ServeReport> {
-    eprintln!(
-        "isoquant: serving on {} (variant={}, bits={}, prefix_sharing={}, prefix_index={})",
+    log_info!(
+        "serving on {} (variant={}, bits={}, prefix_sharing={}, prefix_index={})",
         listener
             .local_addr()
             .map(|a| a.to_string())
@@ -414,12 +493,33 @@ pub fn serve_on(
     let (req_tx, req_rx) = mpsc::channel::<ServerMsg>();
     let (out_tx, out_rx) = mpsc::channel::<Outbound>();
     let overflow = Arc::new(AtomicU64::new(0));
+    // `/metrics` text, rendered by this loop, served by the reactor —
+    // populated before the reactor can accept its first scrape
+    let render_metrics = |engine: &Engine, overflow: &AtomicU64| {
+        let mut snap = engine.metrics_snapshot();
+        snap.conn_overflow_disconnects = overflow.load(Ordering::Relaxed);
+        render_prometheus(&snap)
+    };
+    let metrics_text = Arc::new(Mutex::new(render_metrics(&engine, &overflow)));
+    let metrics_listener = if engine.cfg.metrics_addr.is_empty() {
+        None
+    } else {
+        let l = TcpListener::bind(&engine.cfg.metrics_addr)
+            .with_context(|| format!("bind metrics_addr {}", engine.cfg.metrics_addr))?;
+        log_info!(
+            "metrics on http://{}/metrics",
+            l.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into())
+        );
+        Some(l)
+    };
     let opts = ReactorOpts {
         default_max_new: engine.cfg.max_new_tokens_default,
         // a request can never produce more than max_seq tokens; asking
         // for more is a malformed request, answered at parse time
         max_new_cap: engine.model.meta.max_seq,
         max_conn_buffer: engine.cfg.max_conn_buffer_kb.saturating_mul(1024),
+        metrics: metrics_text.clone(),
+        metrics_listener,
     };
     let (reactor, wake) =
         Reactor::new(listener, req_tx, out_rx, stop.clone(), opts, overflow.clone())?;
@@ -443,6 +543,7 @@ pub fn serve_on(
     );
     let max_queue = engine.cfg.max_queue;
     let mut last_stats = Instant::now();
+    let mut last_metrics = Instant::now();
     let mut last_finished: u64 = 0;
     // set after any step that left nothing active, waiting, or batched:
     // the next pass may block on the channel instead of spinning
@@ -518,10 +619,18 @@ pub fn serve_on(
         // throughput) — only when something completed since last print
         if last_stats.elapsed() >= Duration::from_secs(5) {
             if last_finished > 0 {
-                eprintln!("isoquant: {}", engine.stats_line());
+                log_info!("{}", engine.stats_line());
                 last_finished = 0;
             }
             last_stats = Instant::now();
+        }
+        // refresh the `/metrics` text about once a second: scrapes are
+        // served from this string by the reactor, so a slow or hostile
+        // scraper can never stall the engine
+        if last_metrics.elapsed() >= Duration::from_secs(1) {
+            let text = render_metrics(&engine, &overflow);
+            *metrics_text.lock().unwrap() = text;
+            last_metrics = Instant::now();
         }
         quiescent = !worked && batcher.pending() == 0;
     }
@@ -545,10 +654,10 @@ pub fn serve_on(
             ServerMsg::Cancel(id) => {
                 engine.cancel(id);
             }
-            ServerMsg::Stats(id) => {
+            ServerMsg::Stats { id, traces } => {
                 let _ = out_tx.send(Outbound::Line {
                     id,
-                    text: render_stats(&engine, overflow.load(Ordering::Relaxed)),
+                    text: render_stats(&engine, overflow.load(Ordering::Relaxed), traces),
                     last: true,
                 });
             }
@@ -572,14 +681,19 @@ pub fn serve_on(
             match msg {
                 ServerMsg::Submit(r) => {
                     let mut timing = Timing::new();
+                    timing.received = r.received_at;
+                    timing.parsed = r.parsed_at;
                     timing.finished = Some(Instant::now());
+                    engine.record_shed(&r);
                     let c = Completion {
                         id: r.id,
                         tokens: Vec::new(),
                         prompt_len: r.prompt.len(),
                         prefix_hit_pages: 0,
+                        pages_allocated: 0,
                         timing,
                         finish: FinishReason::Rejected,
+                        trace: r.trace,
                     };
                     let _ = out_tx.send(Outbound::Line {
                         id: c.id,
@@ -591,10 +705,10 @@ pub fn serve_on(
                 ServerMsg::Cancel(id) => {
                     engine.cancel(id);
                 }
-                ServerMsg::Stats(id) => {
+                ServerMsg::Stats { id, traces } => {
                     let _ = out_tx.send(Outbound::Line {
                         id,
-                        text: render_stats(&engine, overflow.load(Ordering::Relaxed)),
+                        text: render_stats(&engine, overflow.load(Ordering::Relaxed), traces),
                         last: true,
                     });
                 }
@@ -639,8 +753,8 @@ pub fn serve_on(
     // exit; a degraded store makes this a no-op
     engine.cache.flush_store();
     let undrained_lanes = engine.active();
-    eprintln!(
-        "isoquant: drained (shed={shed} undrained_lanes={undrained_lanes}) — {}",
+    log_info!(
+        "drained (shed={shed} undrained_lanes={undrained_lanes}) — {}",
         engine.stats_line()
     );
     let _ = out_tx.send(Outbound::Shutdown);
@@ -762,6 +876,16 @@ mod tests {
     }
 
     #[test]
+    fn parse_request_trace_flag() {
+        let r = parse_request(r#"{"prompt": [4], "trace": true}"#, 1, 32, 256).unwrap();
+        assert!(r.trace);
+        let r = parse_request(r#"{"prompt": [4]}"#, 1, 32, 256).unwrap();
+        assert!(!r.trace);
+        // strict: only a boolean opts in, same as "stream"
+        assert!(parse_request(r#"{"prompt": [4], "trace": 1}"#, 1, 32, 256).is_err());
+    }
+
+    #[test]
     fn parse_request_rejects_bad() {
         assert!(parse_request("not json", 0, 32, 256).is_err());
         assert!(parse_request(r#"{"id": 1}"#, 0, 32, 256).is_err());
@@ -799,8 +923,10 @@ mod tests {
             tokens: vec![9, 8],
             prompt_len: 2,
             prefix_hit_pages: 5,
+            pages_allocated: 2,
             timing: Timing::new(),
             finish: FinishReason::MaxTokens,
+            trace: false,
         };
         let line = render_completion(&c);
         let v = Json::parse(&line).unwrap();
@@ -808,6 +934,78 @@ mod tests {
         assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(v.get("prefix_hit_pages").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
+        // no trace opt-in → no trace field, and no other new keys
+        assert!(v.get("trace").is_none());
+        assert!(v.get("pages_allocated").is_none());
+    }
+
+    #[test]
+    fn completion_trace_field_renders_timeline() {
+        let mut timing = Timing::new();
+        let base = timing.submitted;
+        timing.received = Some(base - Duration::from_micros(40));
+        timing.parsed = Some(base - Duration::from_micros(20));
+        timing.admitted = Some(base + Duration::from_micros(100));
+        timing.prefix_walk = Some(base + Duration::from_micros(130));
+        timing.prefill_done = Some(base + Duration::from_micros(800));
+        timing.first_token = Some(base + Duration::from_micros(800));
+        timing.finished = Some(base + Duration::from_micros(2000));
+        let c = Completion {
+            id: 9,
+            tokens: vec![1],
+            prompt_len: 4,
+            prefix_hit_pages: 1,
+            pages_allocated: 2,
+            timing,
+            finish: FinishReason::MaxTokens,
+            trace: true,
+        };
+        let v = Json::parse(&render_completion(&c)).unwrap();
+        let tr = v.get("trace").expect("trace object present");
+        // every lifecycle stamp is present; offsets are relative to
+        // `received` and monotone through the pipeline
+        let mut prev = -1.0;
+        for key in [
+            "received",
+            "parsed",
+            "queued",
+            "admitted",
+            "prefix_walk",
+            "prefill_done",
+            "first_token",
+            "finished",
+        ] {
+            let us = tr.get(key).unwrap_or_else(|| panic!("{key} missing")).as_f64().unwrap();
+            assert!(us >= prev, "{key} offset {us} < previous {prev}");
+            prev = us;
+        }
+        assert_eq!(tr.get("outcome").unwrap().as_str(), Some("max_tokens"));
+        assert_eq!(tr.get("pages_reused").unwrap().as_usize(), Some(1));
+        assert_eq!(tr.get("pages_allocated").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn trace_marks_unreached_stamps() {
+        // a shed request never got admitted: those stamps render -1
+        let mut timing = Timing::new();
+        timing.finished = Some(timing.submitted + Duration::from_micros(10));
+        let c = Completion {
+            id: 2,
+            tokens: vec![],
+            prompt_len: 1,
+            prefix_hit_pages: 0,
+            pages_allocated: 0,
+            timing,
+            finish: FinishReason::Rejected,
+            trace: true,
+        };
+        let v = Json::parse(&render_completion(&c)).unwrap();
+        let tr = v.get("trace").unwrap();
+        assert_eq!(tr.get("received").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(tr.get("admitted").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(tr.get("first_token").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(tr.get("queued").unwrap().as_f64(), Some(0.0));
+        assert!(tr.get("finished").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]
@@ -817,8 +1015,10 @@ mod tests {
             tokens: vec![],
             prompt_len: 1,
             prefix_hit_pages: 0,
+            pages_allocated: 0,
             timing: Timing::new(),
             finish: FinishReason::Timeout,
+            trace: false,
         };
         assert!(render_completion(&c).contains(r#""finish": "timeout""#));
         c.finish = FinishReason::Cancelled;

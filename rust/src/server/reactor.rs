@@ -29,12 +29,22 @@
 //! streaming), disconnects the connection and cancels its in-flight
 //! requests — one stalled client cannot hold completion memory
 //! unboundedly.  Read/write buffers are pooled across connection churn.
+//!
+//! # Metrics scrapes
+//!
+//! The reactor byte-sniffs each framed line: one starting with `GET `
+//! flips the connection into HTTP mode and is answered with the
+//! engine's last rendered Prometheus snapshot (`/metrics`; anything
+//! else 404s), `Connection: close`.  A scrape therefore reads a
+//! pre-rendered string under a mutex and never touches the engine
+//! queue.  `[server] metrics_addr` optionally binds a second,
+//! scrape-only listener onto the same poller.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
@@ -68,7 +78,8 @@ const POOL_MAX: usize = 256;
 
 const TOKEN_WAKER: usize = 0;
 const TOKEN_LISTENER: usize = 1;
-const TOKEN_BASE: usize = 2;
+const TOKEN_METRICS: usize = 2;
+const TOKEN_BASE: usize = 3;
 
 #[cfg(unix)]
 fn fd_of<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
@@ -89,6 +100,11 @@ pub(crate) struct ReactorOpts {
     /// the unterminated read line and the queued output backlog);
     /// 0 = unlimited
     pub max_conn_buffer: usize,
+    /// latest rendered `/metrics` exposition, refreshed ~1/s by the
+    /// engine loop and cloned into HTTP responses by the reactor
+    pub metrics: Arc<Mutex<String>>,
+    /// optional dedicated scrape listener (`[server] metrics_addr`)
+    pub metrics_listener: Option<TcpListener>,
 }
 
 struct Conn {
@@ -107,10 +123,18 @@ struct Conn {
     submitted: Vec<u64>,
     /// whether the poller registration currently includes writability
     want_write: bool,
+    /// the connection sent an HTTP request line; subsequent lines
+    /// (headers) are ignored rather than parsed as JSON
+    http: bool,
+    /// close the connection once the output queue fully drains (set by
+    /// the HTTP path: every scrape response is `Connection: close`)
+    close_after_flush: bool,
 }
 
 pub(crate) struct Reactor {
     listener: Option<TcpListener>,
+    /// dedicated scrape listener, when `[server] metrics_addr` is set
+    metrics_listener: Option<TcpListener>,
     poller: Poller,
     waker: Waker,
     stop: Arc<AtomicBool>,
@@ -143,7 +167,7 @@ impl Reactor {
         req_tx: mpsc::Sender<ServerMsg>,
         out_rx: mpsc::Receiver<Outbound>,
         stop: Arc<AtomicBool>,
-        opts: ReactorOpts,
+        mut opts: ReactorOpts,
         overflow_drops: Arc<AtomicU64>,
     ) -> std::io::Result<(Reactor, WakeHandle)> {
         listener.set_nonblocking(true)?;
@@ -152,9 +176,15 @@ impl Reactor {
         let handle = waker.handle()?;
         poller.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
         poller.add(fd_of(&listener), TOKEN_LISTENER, Interest::READ)?;
+        let metrics_listener = opts.metrics_listener.take();
+        if let Some(ml) = metrics_listener.as_ref() {
+            ml.set_nonblocking(true)?;
+            poller.add(fd_of(ml), TOKEN_METRICS, Interest::READ)?;
+        }
         Ok((
             Reactor {
                 listener: Some(listener),
+                metrics_listener,
                 poller,
                 waker,
                 stop,
@@ -186,10 +216,13 @@ impl Reactor {
             // a stop/SIGINT closes the accept socket immediately (the
             // first step of a graceful drain); existing connections
             // keep flowing until the engine finishes draining
-            if self.listener.is_some()
+            if (self.listener.is_some() || self.metrics_listener.is_some())
                 && (self.stop.load(Ordering::SeqCst) || sigint_requested())
             {
                 if let Some(l) = self.listener.take() {
+                    let _ = self.poller.remove(fd_of(&l));
+                }
+                if let Some(l) = self.metrics_listener.take() {
                     let _ = self.poller.remove(fd_of(&l));
                 }
             }
@@ -219,7 +252,8 @@ impl Reactor {
                 let ev = events[i];
                 match ev.token {
                     TOKEN_WAKER => self.waker.drain(),
-                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_LISTENER => self.accept_ready(false),
+                    TOKEN_METRICS => self.accept_ready(true),
                     t => {
                         let slot = t - TOKEN_BASE;
                         if self.conns.get(slot).map_or(true, |c| c.is_none()) {
@@ -287,6 +321,20 @@ impl Reactor {
             c.obuf.extend_from_slice(text.as_bytes());
             c.obuf.push(b'\n');
         }
+        self.after_enqueue(slot);
+    }
+
+    /// Like [`enqueue`] but byte-exact: no `'\n'` is appended.  Used by
+    /// the HTTP path, whose framing is `Content-Length`, not newlines.
+    fn enqueue_raw(&mut self, slot: usize, bytes: &[u8]) {
+        {
+            let c = self.conns[slot].as_mut().unwrap();
+            c.obuf.extend_from_slice(bytes);
+        }
+        self.after_enqueue(slot);
+    }
+
+    fn after_enqueue(&mut self, slot: usize) {
         self.flush_conn(slot);
         // slow-reader policy: a backlog beyond the cap disconnects
         let cap = self.opts.max_conn_buffer;
@@ -349,13 +397,26 @@ impl Reactor {
                 self.conns[slot].as_mut().unwrap().want_write = want;
             }
         }
+        // HTTP responses are `Connection: close`: drop the connection
+        // once the last response byte has hit the socket
+        let done = self.conns[slot]
+            .as_ref()
+            .map_or(false, |c| c.close_after_flush && c.obuf.is_empty());
+        if done {
+            self.close_conn(slot, true);
+        }
     }
 
     // -- connections → engine ------------------------------------------
 
-    fn accept_ready(&mut self) {
+    fn accept_ready(&mut self, metrics: bool) {
         loop {
-            let Some(listener) = self.listener.as_ref() else { return };
+            let listener = if metrics {
+                self.metrics_listener.as_ref()
+            } else {
+                self.listener.as_ref()
+            };
+            let Some(listener) = listener else { return };
             match listener.accept() {
                 Ok((stream, _addr)) => {
                     if stream.set_nonblocking(true).is_err() {
@@ -388,6 +449,8 @@ impl Reactor {
             osent: 0,
             submitted: Vec::new(),
             want_write: false,
+            http: false,
+            close_after_flush: false,
         };
         let slot = match self.free_slots.pop() {
             Some(s) => {
@@ -493,17 +556,30 @@ impl Reactor {
     }
 
     fn dispatch_line(&mut self, slot: usize, line: &str) {
+        let received = Instant::now();
+        if self.conns[slot].as_ref().map_or(false, |c| c.http) {
+            return; // HTTP header lines after the request line: ignored
+        }
+        // byte-sniff: an HTTP request line on the JSON-lines port (or
+        // the dedicated metrics port) is a scrape, not a request
+        if line.starts_with("GET ") {
+            self.handle_http(slot, line);
+            return;
+        }
         if line.trim().is_empty() {
             return;
         }
         // `{"stats": true}` is answered by the engine loop with the
-        // counter/latency snapshot; it never touches a lane
+        // counter/latency snapshot; it never touches a lane.  An
+        // optional `"traces": K` appends the flight recorder's last K
+        // request timelines to the reply.
         if let Ok(v) = Json::parse(line) {
             if v.get("stats").and_then(|x| x.as_bool()) == Some(true) {
+                let traces = v.get("traces").and_then(|x| x.as_usize()).unwrap_or(0);
                 let id = STATS_ID_BITS | self.next_stats;
                 self.next_stats += 1;
                 self.register(slot, id);
-                let _ = self.req_tx.send(ServerMsg::Stats(id));
+                let _ = self.req_tx.send(ServerMsg::Stats { id, traces });
                 return;
             }
         }
@@ -515,7 +591,9 @@ impl Reactor {
             self.opts.default_max_new,
             self.opts.max_new_cap,
         ) {
-            Ok(req) => {
+            Ok(mut req) => {
+                req.received_at = Some(received);
+                req.parsed_at = Some(Instant::now());
                 let id = req.id;
                 self.register(slot, id);
                 let _ = self.req_tx.send(ServerMsg::Submit(req));
@@ -526,6 +604,36 @@ impl Reactor {
                 self.enqueue(slot, &reply);
             }
         }
+    }
+
+    /// Answer an HTTP request line: `/metrics` serves the last rendered
+    /// Prometheus exposition, anything else 404s.  The response is
+    /// queued byte-exact and the connection closes once it drains —
+    /// one request per connection, no keep-alive, no header parsing.
+    fn handle_http(&mut self, slot: usize, line: &str) {
+        let path = line.split_whitespace().nth(1).unwrap_or("");
+        let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
+            let body = match self.opts.metrics.lock() {
+                Ok(g) => g.clone(),
+                Err(p) => p.into_inner().clone(),
+            };
+            ("200 OK", body)
+        } else {
+            ("404 Not Found", "not found\n".to_string())
+        };
+        let resp = format!(
+            "HTTP/1.1 {status}\r\n\
+             Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        );
+        {
+            let c = self.conns[slot].as_mut().unwrap();
+            c.http = true;
+            c.close_after_flush = true;
+        }
+        self.enqueue_raw(slot, resp.as_bytes());
     }
 
     /// Route `id`'s responses to `slot` and track it for EOF cancel.

@@ -1,0 +1,192 @@
+//! Minimal leveled logging for the serving stack — the no-new-deps
+//! replacement for the scattered `eprintln!` call sites.
+//!
+//! Four levels (error > warn > info > debug), a process-global level
+//! set from `[server] log_level`, and an optional JSON-lines mode
+//! (`[server] log_json = on`) that emits one machine-parseable object
+//! per event instead of the human text line.  The default (`info`,
+//! text) reproduces the exact lines the server printed before this
+//! module existed; tests and benches silence the periodic stats line
+//! with `set_level(Level::Error)`.
+//!
+//! Use through the crate-level macros:
+//!
+//! ```ignore
+//! log_info!("serving on {addr}");
+//! log_warn!("store degraded after {n} failures");
+//! ```
+//!
+//! Every emitted line goes to stderr, same as before — stdout stays
+//! reserved for command output.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON: AtomicBool = AtomicBool::new(false);
+
+/// Set the process-wide log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide log level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Switch between human text lines (off, the default) and JSON-lines.
+pub fn set_json(on: bool) {
+    JSON.store(on, Ordering::Relaxed);
+}
+
+/// Would a message at `l` be emitted right now?  The macros check this
+/// before formatting, so a silenced `log_debug!` costs one atomic load.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one already-formatted message at `l`.  Prefer the macros.
+pub fn emit(l: Level, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    if JSON.load(Ordering::Relaxed) {
+        let ts_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        // hand-rolled object, same idiom as util::json serialization
+        let mut esc = String::with_capacity(msg.len());
+        for c in msg.chars() {
+            match c {
+                '"' => esc.push_str("\\\""),
+                '\\' => esc.push_str("\\\\"),
+                '\n' => esc.push_str("\\n"),
+                '\t' => esc.push_str("\\t"),
+                c if (c as u32) < 0x20 => esc.push_str(&format!("\\u{:04x}", c as u32)),
+                c => esc.push(c),
+            }
+        }
+        eprintln!(
+            "{{\"ts_ms\": {ts_ms}, \"level\": \"{}\", \"msg\": \"{esc}\"}}",
+            l.name()
+        );
+    } else {
+        // the historical prefix, so existing log-scraping keeps working
+        match l {
+            Level::Info => eprintln!("isoquant: {msg}"),
+            _ => eprintln!("isoquant[{}]: {msg}", l.name()),
+        }
+    }
+}
+
+/// Apply the `[server] log_level` / `log_json` knobs.
+pub fn configure(level_name: &str, json: bool) -> Result<(), String> {
+    let l = Level::parse(level_name)
+        .ok_or_else(|| format!("log_level must be error|warn|info|debug, got {level_name:?}"))?;
+    set_level(l);
+    set_json(json);
+    Ok(())
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            $crate::util::log::emit($crate::util::log::Level::Error, &format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            $crate::util::log::emit($crate::util::log::Level::Warn, &format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::emit($crate::util::log::Level::Info, &format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::emit($crate::util::log::Level::Debug, &format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_parse() {
+        assert!(Level::Error < Level::Debug);
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARN"), None, "levels are lowercase");
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn configure_validates() {
+        assert!(configure("shouty", false).is_err());
+        // leave the process default in place for other tests
+        assert!(configure("info", false).is_ok());
+    }
+
+    #[test]
+    fn enabled_respects_level() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(prev);
+    }
+}

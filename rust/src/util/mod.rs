@@ -5,6 +5,7 @@ pub mod bench;
 pub mod cli;
 pub mod f16;
 pub mod json;
+pub mod log;
 pub mod pool;
 pub mod prng;
 pub mod proplite;

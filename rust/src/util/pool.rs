@@ -114,7 +114,7 @@ fn worker_loop(sh: Arc<Shared>) {
         }
         if result.is_err() {
             // job panicked: the panic is reported, the pool survives
-            eprintln!("isoquant-pool: job panicked (pool continues)");
+            crate::log_error!("pool: job panicked (pool continues)");
         }
     }
 }

@@ -1,0 +1,540 @@
+//! Observability integration: the `/metrics` exposition lints clean
+//! (including under concurrent streaming load, scraped over a raw
+//! socket exactly like Prometheus would), per-request trace timelines
+//! are monotone and complete for every outcome, the flight recorder
+//! dump works over the wire, and serve-path latency memory stays
+//! O(buckets) no matter how many samples flow.
+//!
+//! The in-process tests always run; the TCP tests need `make artifacts`
+//! and SKIP (pass trivially, with a note) when artifacts are absent so
+//! `cargo test` works in a fresh checkout.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use isoquant::config::EngineConfig;
+use isoquant::coordinator::Engine;
+use isoquant::metrics::prometheus::{lint_exposition, render_prometheus, MetricsSnapshot};
+use isoquant::metrics::{Counters, Histogram, LatencyRecorder, ShareStats};
+use isoquant::runtime::ServingModel;
+use isoquant::server::{serve_on, Client, ServeReport};
+use isoquant::util::json::Json;
+
+/// The XLA CPU runtime does not tolerate concurrent PJRT client
+/// creation in one process; serialize everything that touches PJRT.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_guard() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = isoquant::runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts not built; skipping observability TCP tests");
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// always-run: exposition shape, field-table completeness, bounded memory
+// ---------------------------------------------------------------------
+
+/// A populated snapshot rendered through the public API must lint clean
+/// and carry every counter both field tables know about — the
+/// completeness check that keeps a newly added counter from silently
+/// missing the exposition.
+#[test]
+fn exposition_lints_and_covers_field_tables() {
+    let h = Histogram::new();
+    for v in [90.0, 1_500.0, 42_000.0, 2e6] {
+        h.record_us(v);
+    }
+    let mut snap = MetricsSnapshot::default();
+    snap.share.prefix_hit_pages = 12;
+    snap.share.requests_shed = 2;
+    snap.share.store_degraded = 1;
+    snap.counters = Counters::default().fields();
+    snap.compression_ratio = 7.5;
+    snap.pages.live = 9;
+    snap.pages.capacity = 64;
+    snap.conn_overflow_disconnects = 3;
+    snap.hists = vec![
+        ("isoquant_ttft_seconds", h.snapshot()),
+        ("isoquant_decode_step_seconds", h.snapshot()),
+    ];
+    snap.phases = vec![("forward", h.snapshot()), ("emit", Histogram::new().snapshot())];
+
+    let text = render_prometheus(&snap);
+    lint_exposition(&text).expect("rendered exposition lints clean");
+    for (name, _) in ShareStats::default().fields() {
+        assert!(
+            text.contains(name),
+            "share field {name} missing from exposition"
+        );
+    }
+    for (name, _) in Counters::default().fields() {
+        assert!(
+            text.contains(&format!("isoquant_{name}_total")),
+            "counter {name} missing from exposition"
+        );
+    }
+    for required in [
+        "isoquant_compression_ratio 7.5",
+        "isoquant_store_degraded 1",
+        "isoquant_conn_overflow_disconnects_total 3",
+        "isoquant_pages_live 9",
+        "isoquant_ttft_seconds_bucket",
+        "isoquant_ttft_seconds_sum",
+        "isoquant_ttft_seconds_count 4",
+        "isoquant_engine_phase_seconds_bucket{phase=\"forward\"",
+        "isoquant_engine_phase_seconds_count{phase=\"emit\"} 0",
+    ] {
+        assert!(text.contains(required), "{required} missing:\n{text}");
+    }
+}
+
+/// The serve-path latency stores are bounded: recording a million
+/// samples allocates nothing per sample, and a percentile query walks
+/// buckets, not samples.  (The old keep-every-sample recorder cloned
+/// and sorted all samples per query — the regression this pins down.)
+#[test]
+fn latency_memory_and_queries_are_o_buckets() {
+    let h = Histogram::new();
+    for i in 0..1_000_000u64 {
+        h.record_us(1.0 + (i % 100_000) as f64);
+    }
+    // fixed-size type: 64 buckets + the sum, no sample storage anywhere
+    assert_eq!(
+        std::mem::size_of::<Histogram>(),
+        std::mem::size_of::<u64>() * (isoquant::metrics::histogram::BUCKETS + 1)
+    );
+    assert_eq!(h.count(), 1_000_000);
+    // 10k queries over a million-sample histogram: O(buckets) each.
+    // The bound is deliberately generous (no flaky timing), but an
+    // accidental clone-and-sort-per-query regression (~minutes) trips it.
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for i in 0..10_000 {
+        acc += h.percentile(50.0 + (i % 50) as f64);
+    }
+    assert!(acc > 0.0);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "percentile queries look O(samples), not O(buckets): {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Histogram percentiles must agree with the exact keep-every-sample
+/// recorder to within one bucket width (ratio √2) — the accuracy
+/// contract the serve path traded sample storage for.
+#[test]
+fn histogram_agrees_with_latency_recorder_within_one_bucket() {
+    let h = Histogram::new();
+    let mut r = LatencyRecorder::new();
+    for i in 0..50_000u64 {
+        // deterministic spread over ~5 orders of magnitude
+        let v = 2.0 + ((i as f64 * 131.0) % 250_000.0);
+        h.record_us(v);
+        r.record_us(v);
+    }
+    for p in [50.0, 90.0, 95.0, 99.0, 99.9] {
+        let exact = r.percentile(p);
+        let est = h.percentile(p);
+        assert!(
+            est >= exact / 2f64.sqrt() - 1e-9 && est <= exact * 2f64.sqrt() + 1e-9,
+            "p{p}: histogram {est} vs exact {exact} differ by more than one bucket"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP tests (artifacts-gated)
+// ---------------------------------------------------------------------
+
+struct TestServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<ServeReport>>,
+}
+
+impl TestServer {
+    /// Boot a server on an ephemeral port; `tweak` adjusts the config
+    /// before the engine is built (the PJRT client is !Send, so the
+    /// engine lives on the server thread).
+    fn boot(dir: &PathBuf, tweak: impl FnOnce(&mut EngineConfig) + Send + 'static) -> TestServer {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_srv = stop.clone();
+        let dir_srv = dir.clone();
+        let thread = std::thread::spawn(move || {
+            let model = ServingModel::load(&dir_srv).expect("load model");
+            let mut cfg = EngineConfig::default();
+            tweak(&mut cfg);
+            let engine = Engine::new(model, cfg).expect("boot engine");
+            serve_on(engine, listener, stop_srv).expect("serve")
+        });
+        TestServer { addr, stop, thread: Some(thread) }
+    }
+
+    fn shutdown(mut self) -> ServeReport {
+        self.stop.store(true, Ordering::SeqCst);
+        self.thread.take().unwrap().join().unwrap()
+    }
+}
+
+/// Scrape `/metrics` over a raw socket, exactly like Prometheus: one
+/// HTTP GET, read to EOF (the server closes after the response).
+/// Returns (status line, body).
+fn raw_scrape(addr: &str, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect for scrape");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nAccept: */*\r\n\r\n").unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut resp = Vec::new();
+    s.read_to_end(&mut resp).expect("read scrape response");
+    let resp = String::from_utf8(resp).expect("scrape response is UTF-8");
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .expect("HTTP header/body separator");
+    let status = head.lines().next().unwrap_or("").to_string();
+    // Content-Length must frame the body exactly
+    let clen: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Length: "))
+        .expect("Content-Length header")
+        .trim()
+        .parse()
+        .expect("numeric Content-Length");
+    assert_eq!(clen, body.len(), "Content-Length does not frame the body");
+    (status, body.to_string())
+}
+
+/// The non-negative stamps of a trace object, in lifecycle order, must
+/// be monotone non-decreasing; `-1` marks a stage the request never
+/// reached.
+fn assert_trace_monotone(tr: &Json, ctx: &str) {
+    let mut prev = 0.0f64;
+    for key in [
+        "received",
+        "parsed",
+        "queued",
+        "admitted",
+        "prefix_walk",
+        "prefill_done",
+        "first_token",
+        "finished",
+    ] {
+        let us = tr
+            .get(key)
+            .unwrap_or_else(|| panic!("{ctx}: trace missing {key}"))
+            .as_f64()
+            .unwrap_or_else(|| panic!("{ctx}: trace {key} not a number"));
+        if us >= 0.0 {
+            assert!(
+                us >= prev,
+                "{ctx}: {key} offset {us} precedes previous stamp {prev}"
+            );
+            prev = us;
+        }
+    }
+    assert!(
+        tr.get("finished").unwrap().as_f64().unwrap() >= 0.0,
+        "{ctx}: every terminal trace carries a finished stamp"
+    );
+}
+
+/// The headline integration: 8 concurrent streaming clients, raw-socket
+/// scrapes racing them, a wire trace for a finished request, a timeout
+/// trace, a cancelled request surfacing in the flight-recorder dump,
+/// and the step profiler showing up in both surfaces.
+#[test]
+fn scrape_and_traces_during_streaming_load() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = TestServer::boot(&dir, |cfg| {
+        cfg.profile = true;
+    });
+
+    // -- streaming load + concurrent scrapes ---------------------------
+    let n_clients = 8usize;
+    let clients: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let addr = srv.addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let prompt: Vec<i32> = (0..16).map(|t| (t * 3) % 40 + 1).collect();
+                let req = format!(
+                    "{{\"id\": {}, \"prompt\": {:?}, \"max_new_tokens\": 8, \"stream\": true}}",
+                    i + 1,
+                    prompt
+                );
+                c.send_line(&req).expect("send");
+                let mut tokens = 0usize;
+                loop {
+                    let v = c.recv().expect("stream line");
+                    if v.get("finish").is_some() {
+                        assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
+                        break;
+                    }
+                    assert!(v.get("token").is_some(), "line is token or terminal");
+                    tokens += 1;
+                }
+                tokens
+            })
+        })
+        .collect();
+    // scrape while the load is in flight — a scrape must neither block
+    // on the engine nor return something malformed mid-step
+    let mut scrapes = 0usize;
+    while scrapes < 5 {
+        let (status, body) = raw_scrape(&srv.addr, "/metrics");
+        assert!(status.contains("200"), "scrape failed: {status}");
+        lint_exposition(&body).unwrap_or_else(|e| panic!("mid-load scrape lint: {e}"));
+        scrapes += 1;
+    }
+    for (i, c) in clients.into_iter().enumerate() {
+        let tokens = c.join().unwrap();
+        assert_eq!(tokens, 8, "client {i} lost streamed tokens to the scrapes");
+    }
+
+    // -- the post-load scrape carries the load's counters --------------
+    // (the exposition refreshes ~1/s; poll briefly for the new snapshot)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let body = loop {
+        let (_, body) = raw_scrape(&srv.addr, "/metrics");
+        let reqs = body
+            .lines()
+            .find_map(|l| l.strip_prefix("isoquant_requests_total "))
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .unwrap_or(0.0);
+        if reqs >= n_clients as f64 || Instant::now() > deadline {
+            break body;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    lint_exposition(&body).expect("post-load scrape lints");
+    for required in [
+        "isoquant_requests_total",
+        "isoquant_tokens_decoded_total",
+        "isoquant_share_prefix_hit_pages_total",
+        "isoquant_compression_ratio",
+        "isoquant_pages_live",
+        "isoquant_pages_capacity",
+        "isoquant_store_attached 0",
+        "isoquant_conn_overflow_disconnects_total",
+        "isoquant_ttft_seconds_bucket",
+        "isoquant_decode_step_seconds_count",
+        "isoquant_queue_wait_seconds_bucket",
+        "isoquant_request_total_seconds_bucket",
+        // profile = on: the phase histograms are exported
+        "isoquant_engine_phase_seconds_bucket{phase=\"forward\"",
+        "isoquant_engine_phase_seconds_bucket{phase=\"gather\"",
+    ] {
+        assert!(body.contains(required), "{required} missing from scrape");
+    }
+    let reqs = body
+        .lines()
+        .find_map(|l| l.strip_prefix("isoquant_requests_total "))
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .unwrap_or(0.0);
+    assert!(
+        reqs >= n_clients as f64,
+        "scrape never caught up with the load: requests_total = {reqs}"
+    );
+    // unknown paths 404 without disturbing the connection protocol
+    let (status, _) = raw_scrape(&srv.addr, "/nope");
+    assert!(status.contains("404"), "unknown path must 404: {status}");
+
+    // -- wire trace: finished request ----------------------------------
+    let mut c = Client::connect(&srv.addr).expect("connect");
+    c.send_line(r#"{"id": 900, "prompt": [5, 6, 7, 8], "max_new_tokens": 4, "trace": true}"#)
+        .unwrap();
+    let v = c.recv().expect("traced completion");
+    assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
+    let tr = v.get("trace").expect("trace field on opted-in completion");
+    assert_trace_monotone(tr, "finished");
+    // wire-submitted: the reactor stamped the front of the pipeline
+    assert_eq!(tr.get("received").unwrap().as_f64(), Some(0.0));
+    assert!(tr.get("parsed").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(tr.get("admitted").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(tr.get("first_token").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(tr.get("outcome").unwrap().as_str(), Some("max_tokens"));
+    // an untraced request on the same connection stays byte-compatible
+    c.send_line(r#"{"id": 901, "prompt": [5, 6, 7, 8], "max_new_tokens": 2}"#)
+        .unwrap();
+    let v = c.recv().unwrap();
+    assert!(v.get("trace").is_none(), "trace must be strictly opt-in");
+
+    // -- wire trace: timeout -------------------------------------------
+    c.send_line(
+        r#"{"id": 902, "prompt": [9, 10, 11, 12], "max_new_tokens": 64, "deadline_ms": 1, "trace": true}"#,
+    )
+    .unwrap();
+    let v = c.recv().expect("timeout completion");
+    assert_eq!(v.get("finish").unwrap().as_str(), Some("timeout"));
+    let tr = v.get("trace").expect("trace on timeout");
+    assert_trace_monotone(tr, "timeout");
+    assert_eq!(tr.get("outcome").unwrap().as_str(), Some("timeout"));
+
+    // -- cancelled requests reach the flight recorder ------------------
+    {
+        let mut doomed = Client::connect(&srv.addr).expect("connect doomed");
+        doomed
+            .send_line(r#"{"id": 903, "prompt": [1, 2, 3], "max_new_tokens": 64}"#)
+            .unwrap();
+        // dropping the connection cancels the in-flight request
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let cancelled = loop {
+        c.send_line(r#"{"stats": true, "traces": 64}"#).unwrap();
+        let stats = c.recv().expect("stats");
+        let traces = stats
+            .get("traces")
+            .expect("traces array when requested")
+            .as_arr()
+            .expect("traces is an array")
+            .to_vec();
+        let hit = traces.iter().find(|t| {
+            t.get("outcome").and_then(|o| o.as_str()) == Some("cancelled")
+        });
+        if let Some(t) = hit {
+            break t.clone();
+        }
+        assert!(
+            Instant::now() < deadline,
+            "cancelled request never reached the flight recorder"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_trace_monotone(&cancelled, "cancelled");
+    assert_eq!(cancelled.get("id").unwrap().as_usize(), Some(903));
+
+    // -- stats carries the profiler and histogram latencies ------------
+    c.send_line(r#"{"stats": true}"#).unwrap();
+    let stats = c.recv().unwrap();
+    assert!(stats.get("traces").is_none(), "traces only when asked");
+    let latency = stats.get("latency").expect("latency section");
+    for key in ["ttft_us", "inter_token_us", "queue_wait_us", "request_total_us"] {
+        let l = latency.get(key).unwrap_or_else(|| panic!("{key} missing"));
+        assert!(l.get("n").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    let phases = latency
+        .get("engine_phases_us")
+        .expect("engine_phases_us with profile = on");
+    for phase in ["expire", "admit", "gather", "forward", "append", "emit"] {
+        assert!(phases.get(phase).is_some(), "phase {phase} missing");
+    }
+
+    let report = srv.shutdown();
+    assert_eq!(report.undrained_lanes, 0, "drain left lanes active");
+    assert!(report.share.requests_cancelled >= 1, "cancel was recorded");
+    assert!(report.share.requests_timed_out >= 1, "timeout was recorded");
+}
+
+/// Overload shedding leaves a complete timeline behind: a pipelined
+/// burst against a 1-slot queue sheds most of it, every line is
+/// answered, and shed requests appear in the flight recorder with a
+/// finished stamp but no admission.
+#[test]
+fn shed_requests_leave_traces() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = TestServer::boot(&dir, |cfg| {
+        cfg.max_queue = 1;
+    });
+
+    let mut c = Client::connect(&srv.addr).expect("connect");
+    let burst = 16usize;
+    let mut lines = String::new();
+    for i in 0..burst {
+        lines.push_str(&format!(
+            "{{\"id\": {}, \"prompt\": [2, 4, 6], \"max_new_tokens\": 8, \"trace\": true}}\n",
+            i + 1
+        ));
+    }
+    c.send_line(lines.trim_end()).expect("pipelined burst");
+    let (mut completed, mut shed) = (0usize, 0usize);
+    for _ in 0..burst {
+        let v = c.recv().expect("every burst line gets an answer");
+        if v.get("error").is_some() {
+            assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+            assert!(v.get("retry_after_ms").unwrap().as_f64().unwrap() > 0.0);
+            shed += 1;
+        } else {
+            assert!(v.get("finish").is_some());
+            completed += 1;
+        }
+    }
+    assert_eq!(completed + shed, burst);
+    assert!(
+        shed >= 1,
+        "a {burst}-deep burst against max_queue=1 must shed (completed={completed})"
+    );
+
+    // the flight recorder kept the shed requests' timelines
+    c.send_line(r#"{"stats": true, "traces": 64}"#).unwrap();
+    let stats = c.recv().unwrap();
+    let traces = stats.get("traces").unwrap().as_arr().unwrap().to_vec();
+    let shed_traces: Vec<_> = traces
+        .iter()
+        .filter(|t| t.get("outcome").and_then(|o| o.as_str()) == Some("shed"))
+        .collect();
+    assert!(
+        !shed_traces.is_empty(),
+        "shed requests missing from the flight recorder"
+    );
+    for t in &shed_traces {
+        assert_trace_monotone(t, "shed");
+        // shed at admission control: never admitted, but terminally stamped
+        assert_eq!(t.get("admitted").unwrap().as_f64(), Some(-1.0));
+        assert!(t.get("finished").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    let report = srv.shutdown();
+    assert_eq!(report.share.requests_shed as usize, shed, "shed accounting");
+}
+
+/// The dedicated `[server] metrics_addr` listener serves scrapes on its
+/// own port while the main port keeps talking JSON lines.
+#[test]
+fn dedicated_metrics_listener_serves_scrapes() {
+    let _g = pjrt_guard();
+    let Some(dir) = artifacts_dir() else { return };
+    // grab a free port for the metrics listener (bind, read, release)
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let maddr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let maddr_cfg = maddr.clone();
+    let srv = TestServer::boot(&dir, move |cfg| {
+        cfg.metrics_addr = maddr_cfg;
+    });
+    // the reactor may need a beat to register the second listener
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let body = loop {
+        match TcpStream::connect(&maddr) {
+            Ok(_) => break raw_scrape(&maddr, "/metrics").1,
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50))
+            }
+            Err(e) => panic!("metrics listener never came up: {e}"),
+        }
+    };
+    lint_exposition(&body).expect("dedicated-port scrape lints");
+    assert!(body.contains("isoquant_pages_capacity"));
+
+    // the main port still serves generation
+    let mut c = Client::connect(&srv.addr).expect("connect main");
+    let v = c.generate(1, &[3, 5, 7], 2).expect("generate");
+    assert_eq!(v.get("finish").unwrap().as_str(), Some("max_tokens"));
+
+    let report = srv.shutdown();
+    assert_eq!(report.undrained_lanes, 0);
+}
