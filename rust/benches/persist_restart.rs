@@ -11,6 +11,12 @@
 //! reboots once more with the store already hot in the page cache to
 //! show the steady-state restart cost.
 //!
+//! A second scenario puts the store under a tight byte budget and
+//! compares segment compaction on vs off: with it on, the spill worker
+//! rescues high-retention-score records out of retiring segments, so a
+//! reboot still warm-covers the hot prefix that FIFO retirement would
+//! have thrown away (`[cache] compact_threshold`).
+//!
 //! No PJRT artifacts needed: the bench drives `CacheManager` admission
 //! and appends directly (the serving path minus the model step).
 //!
@@ -25,7 +31,9 @@
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use isoquant::kvcache::{CacheManager, PageConfig, PageStore, StoreConfig};
+use isoquant::kvcache::prefix::SCORE_SCALE;
+use isoquant::kvcache::store::record_len;
+use isoquant::kvcache::{CacheManager, PageConfig, PageStore, PrefixIndexKind, StoreConfig};
 use isoquant::metrics::LatencyRecorder;
 use isoquant::quant::{Stage1, Stage1Config, Variant};
 use isoquant::util::bench::Table;
@@ -109,6 +117,118 @@ fn run_boot(dir: &Path, clients: usize, phase: &'static str) -> BootPoint {
     }
 }
 
+const HOT_LEN: usize = 64; // 4 pages
+
+struct CompactPoint {
+    compact: bool,
+    records_compacted: u64,
+    segments_compacted: u64,
+    warm_reused_tokens: usize,
+    warm_promoted: u64,
+    gather_identical: bool,
+}
+
+/// Tight-budget retirement: a hot 4-page prompt (adopted by 4 clients,
+/// so its root pages carry retention scores ≥ 2.0) spills first, then
+/// distinct cold prompts churn the store past its byte budget with
+/// one-record segments.  With compaction off, FIFO retirement throws
+/// the hot records out with their (oldest) segments; with it on, the
+/// spill worker rescues records scoring ≥ 2.0 into the active segment
+/// before each retirement.  Measures what a warm boot still covers of
+/// the hot prompt, and that rescued bytes decode bit-identically to a
+/// fresh encode.
+fn run_compaction(dir: &Path, compact: bool) -> CompactPoint {
+    let tok_n = N_LAYERS * N_HEADS * D_HEAD;
+    let hot: Vec<i32> = (0..HOT_LEN as i32).collect();
+    let mut hot_rng = Rng::new(0xC0_FFEE);
+    let hot_k = hot_rng.gaussian_vec_f32(HOT_LEN * tok_n);
+    let hot_v = hot_rng.gaussian_vec_f32(HOT_LEN * tok_n);
+    let attach = |m: &mut CacheManager, budget_records: u64| {
+        let page_bytes = m.page_cfg().page_bytes();
+        let rec = record_len(TOKENS_PER_PAGE, page_bytes) as u64;
+        let mut sc = StoreConfig::for_cache(
+            dir.to_path_buf(),
+            m.fingerprint(),
+            page_bytes,
+            budget_records * rec,
+        );
+        sc.segment_bytes = rec; // one record per segment: per-page retirement
+        if compact {
+            sc = sc.with_compaction(2 * SCORE_SCALE as u32, 1 << 20);
+        }
+        m.attach_store(PageStore::open(sc).expect("open page store"));
+    };
+
+    // writer lifetime: the hot prompt shared by 4 clients, then churn
+    let mut m = mk_cache();
+    m.index_kind = PrefixIndexKind::Radix;
+    attach(&mut m, 6);
+    for seq in 1..=4u64 {
+        assert!(m.can_admit_prompt(&hot, HOT_LEN));
+        let reuse = m.start_seq_with_prompt(seq, &hot).unwrap();
+        let left = HOT_LEN - reuse.tokens;
+        if left > 0 {
+            m.append_run(seq, &hot_k[reuse.tokens * tok_n..], &hot_v[reuse.tokens * tok_n..], left)
+                .unwrap();
+        }
+    }
+    for seq in 1..=4u64 {
+        m.drop_seq(seq); // the last drop parks + spills the hot pages
+    }
+    m.flush_store(); // hot records land in the oldest segments
+    for c in 0..4u64 {
+        let prompt: Vec<i32> = (0..HOT_LEN as i32)
+            .map(|i| 50_000 + c as i32 * 1_000 + i)
+            .collect();
+        let mut rng = Rng::new(0xC01D + c);
+        let k = rng.gaussian_vec_f32(HOT_LEN * tok_n);
+        let v = rng.gaussian_vec_f32(HOT_LEN * tok_n);
+        let seq = 100 + c;
+        assert!(m.can_admit_prompt(&prompt, HOT_LEN));
+        m.start_seq_with_prompt(seq, &prompt).unwrap();
+        m.append_run(seq, &k, &v, HOT_LEN).unwrap();
+        m.drop_seq(seq);
+        m.flush_store();
+    }
+    m.note_store_health();
+    let records_compacted = m.share.records_compacted;
+    let segments_compacted = m.share.segments_compacted;
+    drop(m);
+
+    // warm boot with a generous budget: what survived of the hot
+    // prefix, and does it decode exactly like a fresh encode?
+    let mut w = mk_cache();
+    w.index_kind = PrefixIndexKind::Radix;
+    attach(&mut w, 10_000);
+    let reuse = w.start_seq_with_prompt(1, &hot).unwrap();
+    let warm_reused_tokens = reuse.tokens;
+    let warm_promoted = w.share.pages_promoted;
+    let left = HOT_LEN - reuse.tokens;
+    if left > 0 {
+        w.append_run(1, &hot_k[reuse.tokens * tok_n..], &hot_v[reuse.tokens * tok_n..], left)
+            .unwrap();
+    }
+    let mut fresh = mk_cache();
+    fresh.start_seq_with_prompt(1, &hot).unwrap();
+    fresh.append_run(1, &hot_k, &hot_v, HOT_LEN).unwrap();
+    let n = N_LAYERS * N_HEADS * HOT_LEN * D_HEAD;
+    let (mut ka, mut va) = (vec![0f32; n], vec![0f32; n]);
+    let (mut kb, mut vb) = (vec![0f32; n], vec![0f32; n]);
+    w.gather_reference(1, HOT_LEN, &mut ka, &mut va).unwrap();
+    fresh.gather_reference(1, HOT_LEN, &mut kb, &mut vb).unwrap();
+    let gather_identical = ka == kb && va == vb;
+    w.drop_seq(1);
+    fresh.drop_seq(1);
+    CompactPoint {
+        compact,
+        records_compacted,
+        segments_compacted,
+        warm_reused_tokens,
+        warm_promoted,
+        gather_identical,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let clients = if quick { 8 } else { 32 };
@@ -166,6 +286,50 @@ fn main() {
         "\nwarm-boot TTFT speedup vs cold: {speedup:.2}x (cold = stage-1 encode of every \
          prompt page; warm = CRC-verified read + memcpy from the persisted store)"
     );
+
+    // tight-budget compaction point: hot 4-page prompt vs cold churn
+    // under a 6-record budget with one-record segments
+    println!(
+        "\n== segment compaction under a tight budget: {HOT_LEN}-token hot prompt \
+         (4 adopters) + 4 cold prompts churning a 6-record budget ==\n"
+    );
+    let mut comp_table = Table::new(&[
+        "compaction",
+        "rescued recs",
+        "rescued segs",
+        "warm hit tok",
+        "promoted",
+        "gather",
+    ]);
+    let mut comp_rows: Vec<Json> = Vec::new();
+    for compact in [false, true] {
+        let cdir = dir.join(if compact { "compact-on" } else { "compact-off" });
+        std::fs::create_dir_all(&cdir).expect("create compaction bench dir");
+        let p = run_compaction(&cdir, compact);
+        comp_table.row(vec![
+            if p.compact { "on" } else { "off" }.to_string(),
+            p.records_compacted.to_string(),
+            p.segments_compacted.to_string(),
+            p.warm_reused_tokens.to_string(),
+            p.warm_promoted.to_string(),
+            if p.gather_identical { "identical" } else { "DIVERGED" }.to_string(),
+        ]);
+        comp_rows.push(Json::obj(vec![
+            ("compaction", Json::Bool(p.compact)),
+            ("records_compacted", Json::num(p.records_compacted as f64)),
+            ("segments_compacted", Json::num(p.segments_compacted as f64)),
+            ("warm_reused_tokens", Json::num(p.warm_reused_tokens as f64)),
+            ("pages_promoted", Json::num(p.warm_promoted as f64)),
+            ("gather_identical", Json::Bool(p.gather_identical)),
+        ]));
+    }
+    comp_table.print();
+    println!(
+        "\ncompaction rescues the high-score root records ((reuse+1)/(depth+1) >= 2.0)\n\
+         out of retiring segments, so the reboot still covers the hot prefix that plain\n\
+         FIFO retirement throws away; rescued bytes decode bit-identically."
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::str("persist_restart")),
         ("prompt_len", Json::num(PROMPT_LEN as f64)),
@@ -174,6 +338,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("warm_speedup_p50", Json::num(speedup)),
         ("boots", Json::Arr(rows)),
+        ("compaction_points", Json::Arr(comp_rows)),
     ]);
     match std::fs::write("BENCH_persist.json", doc.to_string()) {
         Ok(()) => println!("\nwrote BENCH_persist.json"),

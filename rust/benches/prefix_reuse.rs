@@ -8,7 +8,7 @@
 //! and appends directly (the serving path minus the model step), with a
 //! deterministic prompt→K/V map standing in for the model.
 //!
-//! Two scenarios:
+//! Three scenarios:
 //!
 //! 1. **shared-fraction sweep** — page-aligned shared prefixes, sharing
 //!    off vs on (the PR 3 economics, unchanged);
@@ -17,7 +17,12 @@
 //!    flat vs radix index (`[cache] prefix_index`), where the radix
 //!    tree's sub-page slot-range reuse turns the shared tail slots
 //!    into copies instead of re-encodes and keeps divergent tails
-//!    open (no per-client seal→CoW page).
+//!    open (no per-client seal→CoW page);
+//! 3. **walk-depth × fan-out tree shape** — the v1 one-node-per-page
+//!    shape (`set_radix_max_run_pages(1)`) vs v2 cross-page runs:
+//!    node counts (a multi-page stem collapses into one v2 node), the
+//!    read-only `cached_lcp` walk cost, and how an exact repeat of a
+//!    fully-sealed prompt lands (whole-page adopts vs slot copies).
 //!
 //! Besides the tables, emits machine-readable `BENCH_prefix.json` (one
 //! row per sweep point × mode) so future PRs can track the trajectory.
@@ -213,6 +218,97 @@ fn run_fanout(clients: usize, index: PrefixIndexKind) -> FanoutPoint {
     }
 }
 
+struct WalkPoint {
+    shape: &'static str,
+    depth: usize,
+    fanout: usize,
+    nodes_stem: usize,
+    nodes_total: usize,
+    walk_ns: f64,
+    repeat_hit: String,
+    repeat_hit_tokens: u64,
+}
+
+/// Walk-depth × fan-out scenario: one head client encodes a
+/// `depth`-token prompt (the shared stem is all but the final 8
+/// tokens, so it ends mid-page), `fanout − 1` followers diverge in
+/// those final 8 tokens, then the head prompt is submitted once more
+/// verbatim.  Run under both radix tree shapes — v1 one-node-per-page
+/// (`set_radix_max_run_pages(1)`) vs v2 cross-page runs — comparing
+/// node counts, the read-only `cached_lcp` walk the batcher probes
+/// under pool pressure, and whether the exact repeat lands as
+/// whole-page adopts or per-slot copies.
+fn run_walk(depth: usize, fanout: usize, v1_shape: bool, iters: usize) -> WalkPoint {
+    let stem_len = depth - 8;
+    let tok_n = N_LAYERS * N_HEADS * D_HEAD;
+    let mut m = mk_cache(POOL_PAGES, true, PrefixIndexKind::Radix);
+    if v1_shape {
+        m.set_radix_max_run_pages(1);
+    }
+    let mut rng = Rng::new(0x3A1C + depth as u64);
+    let stem_toks: Vec<i32> = (0..stem_len as i32).collect();
+    let stem_k = rng.gaussian_vec_f32(stem_len * tok_n);
+    let stem_v = rng.gaussian_vec_f32(stem_len * tok_n);
+    let mut head_prompt: Vec<i32> = Vec::new();
+    let mut nodes_stem = 0usize;
+    for c in 0..fanout {
+        let mut prompt = stem_toks.clone();
+        prompt.extend((0..8).map(|i| 30_000 + (c * 100 + i) as i32));
+        let tail_k = rng.gaussian_vec_f32(8 * tok_n);
+        let tail_v = rng.gaussian_vec_f32(8 * tok_n);
+        let seq = c as u64 + 1;
+        assert!(m.can_admit_prompt(&prompt, depth));
+        let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+        let n_stem_left = stem_len.saturating_sub(reuse.tokens);
+        if n_stem_left > 0 {
+            m.append_run(
+                seq,
+                &stem_k[reuse.tokens * tok_n..],
+                &stem_v[reuse.tokens * tok_n..],
+                n_stem_left,
+            )
+            .unwrap();
+        }
+        let covered = reuse.tokens.max(stem_len);
+        let off = (covered - stem_len) * tok_n;
+        m.append_run(seq, &tail_k[off..], &tail_v[off..], depth - covered)
+            .unwrap();
+        if c == 0 {
+            head_prompt = prompt;
+            nodes_stem = m.radix_node_count();
+        }
+    }
+    // exact repeat of the head prompt: every page of it is sealed (the
+    // final 8 tokens fill its last page), so the repeat should cost
+    // zero slot copies — pure whole-page refcount hits
+    let before_copies = m.share.slots_copied;
+    let before_hits = m.share.prefix_hit_tokens;
+    let reuse = m.start_seq_with_prompt(fanout as u64 + 1, &head_prompt).unwrap();
+    assert_eq!(reuse.tokens, depth, "exact repeat must be fully covered");
+    let d_copies = m.share.slots_copied - before_copies;
+    let repeat_hit = if d_copies == 0 {
+        "adopt".to_string()
+    } else {
+        format!("copy({d_copies})")
+    };
+    let repeat_hit_tokens = m.share.prefix_hit_tokens - before_hits;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(m.cached_lcp(std::hint::black_box(&head_prompt)));
+    }
+    let walk_ns = t0.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+    WalkPoint {
+        shape: if v1_shape { "v1" } else { "v2" },
+        depth,
+        fanout,
+        nodes_stem,
+        nodes_total: m.radix_node_count(),
+        walk_ns,
+        repeat_hit,
+        repeat_hit_tokens,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let clients = if quick { 16 } else { 64 };
@@ -325,6 +421,61 @@ fn main() {
          seal->CoW page the flat lifecycle pays on the first decode token."
     );
 
+    // scenario 3: walk-depth × fan-out — radix tree shape, v1
+    // one-node-per-page vs v2 cross-page runs
+    let depths: &[usize] = if quick { &[64] } else { &[64, 128] };
+    let fanouts: &[usize] = if quick { &[4] } else { &[4, 16] };
+    let iters = if quick { 2_000 } else { 20_000 };
+    println!(
+        "\n== radix walk: depth × fan-out, v1 one-node-per-page vs v2 cross-page runs \
+         (tails diverge in the final 8 tokens) ==\n"
+    );
+    let mut walk_table = Table::new(&[
+        "shape",
+        "depth",
+        "fanout",
+        "stem nodes",
+        "nodes",
+        "walk ns",
+        "repeat hit",
+        "repeat tok",
+    ]);
+    let mut walk_rows: Vec<Json> = Vec::new();
+    for &depth in depths {
+        for &fanout in fanouts {
+            for v1_shape in [true, false] {
+                let p = run_walk(depth, fanout, v1_shape, iters);
+                walk_table.row(vec![
+                    p.shape.to_string(),
+                    p.depth.to_string(),
+                    p.fanout.to_string(),
+                    p.nodes_stem.to_string(),
+                    p.nodes_total.to_string(),
+                    format!("{:.0}", p.walk_ns),
+                    p.repeat_hit.clone(),
+                    p.repeat_hit_tokens.to_string(),
+                ]);
+                walk_rows.push(Json::obj(vec![
+                    ("shape", Json::str(p.shape)),
+                    ("depth", Json::num(p.depth as f64)),
+                    ("fanout", Json::num(p.fanout as f64)),
+                    ("stem_nodes", Json::num(p.nodes_stem as f64)),
+                    ("nodes_total", Json::num(p.nodes_total as f64)),
+                    ("walk_ns", Json::num(p.walk_ns)),
+                    ("repeat_hit", Json::str(p.repeat_hit.clone())),
+                    ("repeat_hit_tokens", Json::num(p.repeat_hit_tokens as f64)),
+                ]));
+            }
+        }
+    }
+    walk_table.print();
+    println!(
+        "\nstem nodes = tree size after the head client alone: a multi-page stem is ONE\n\
+         v2 cross-page run vs one node per page under the v1 shape.  walk ns = the\n\
+         read-only cached_lcp probe the batcher uses to drain deepest-LCP-first under\n\
+         pool pressure; repeat hit = how an exact repeat of the head prompt lands."
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::str("prefix_reuse")),
         ("prompt_len", Json::num(PROMPT_LEN as f64)),
@@ -334,6 +485,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("points", Json::Arr(rows)),
         ("fanout_points", Json::Arr(fan_rows)),
+        ("walk_points", Json::Arr(walk_rows)),
     ]);
     match std::fs::write("BENCH_prefix.json", doc.to_string()) {
         Ok(()) => println!("\nwrote BENCH_prefix.json"),

@@ -250,6 +250,16 @@ pub struct EngineConfig {
     /// CRC- and fingerprint-verified on every read, and unsupported
     /// hosts fall back to buffered reads
     pub persist_mmap: bool,
+    /// minimum `(reuse+1)/(depth+1)` retention score a store record
+    /// must carry for the segment compactor to rescue it before its
+    /// segment retires (`[cache] compact_threshold`, fractional; 0.0 —
+    /// the default — disables compaction, keeping plain whole-segment
+    /// FIFO retirement)
+    pub compact_threshold: f64,
+    /// upper bound on bytes the compactor may rewrite per spill-side
+    /// pass (`[cache] compact_max_bytes_per_pass`); bounds an append's
+    /// tail latency when a large segment retires
+    pub compact_max_bytes_per_pass: usize,
     pub seed: u64,
 }
 
@@ -288,6 +298,8 @@ impl Default for EngineConfig {
             persist_dir: String::new(),
             persist_budget_mb: 256,
             persist_mmap: true,
+            compact_threshold: 0.0,
+            compact_max_bytes_per_pass: 4 << 20,
             seed: 0x150_0541,
         }
     }
@@ -439,6 +451,18 @@ impl EngineConfig {
                 None => d.persist_mmap,
                 Some(v) => parse_switch(v, "[cache] persist_mmap")?,
             },
+            compact_threshold: {
+                let t = raw.f64_or("cache", "compact_threshold", d.compact_threshold)?;
+                if !(0.0..=65_536.0).contains(&t) {
+                    bail!("[cache] compact_threshold must be in [0, 65536], got {t}");
+                }
+                t
+            },
+            compact_max_bytes_per_pass: raw.usize_or(
+                "cache",
+                "compact_max_bytes_per_pass",
+                d.compact_max_bytes_per_pass,
+            )?,
             seed: raw.f64_or("engine", "seed", d.seed as f64)? as u64,
         })
     }
@@ -746,6 +770,32 @@ bind = "0.0.0.0:9000"
         for text in [
             "[cache]\npersist_degrade_after = 0",
             "[cache]\npersist_retries = \"many\"",
+        ] {
+            let raw = RawConfig::parse(text).unwrap();
+            assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn compaction_knobs() {
+        let cfg = EngineConfig::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.compact_threshold, 0.0, "compaction defaults off");
+        assert_eq!(cfg.compact_max_bytes_per_pass, 4 << 20);
+        let cfg = EngineConfig::from_raw(
+            &RawConfig::parse(
+                "[cache]\ncompact_threshold = 0.5\n\
+                 compact_max_bytes_per_pass = 1048576",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.compact_threshold, 0.5);
+        assert_eq!(cfg.compact_max_bytes_per_pass, 1 << 20);
+        for text in [
+            "[cache]\ncompact_threshold = -0.25",
+            "[cache]\ncompact_threshold = 70000",
+            "[cache]\ncompact_threshold = \"hot\"",
+            "[cache]\ncompact_max_bytes_per_pass = \"lots\"",
         ] {
             let raw = RawConfig::parse(text).unwrap();
             assert!(EngineConfig::from_raw(&raw).is_err(), "{text}");

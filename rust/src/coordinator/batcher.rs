@@ -78,6 +78,39 @@ impl Batcher {
         group_by_prefix(&mut batch);
         batch
     }
+
+    /// Pull up to `n` requests, preferring the deepest cached prefix
+    /// first.  `lcp` is a read-only probe of the cache index (longest
+    /// cached prefix, in tokens, for a prompt).  Used instead of
+    /// [`Batcher::take_up_to`] when the page pool is under pressure:
+    /// admitting the requests that re-use the most cached tokens costs
+    /// the fewest fresh pages per admission, which keeps the pool from
+    /// evicting exactly the prefixes the rest of the queue is about to
+    /// ask for.  FIFO order breaks depth ties, and requests left behind
+    /// re-queue in their original submit order with their original
+    /// arrival times (their window clocks keep running).
+    pub fn take_up_to_by_lcp(&mut self, n: usize, lcp: impl Fn(&[i32]) -> usize) -> Vec<Request> {
+        let n = n.min(self.queue.len());
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut ranked: Vec<(usize, usize, Request, Instant)> = self
+            .queue
+            .drain(..)
+            .enumerate()
+            .map(|(pos, (r, t))| (lcp(&r.prompt), pos, r, t))
+            .collect();
+        // deepest cached prefix first; submit position breaks ties
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut rest = ranked.split_off(n);
+        let mut batch: Vec<Request> = ranked.into_iter().map(|(_, _, r, _)| r).collect();
+        group_by_prefix(&mut batch);
+        rest.sort_by_key(|e| e.1);
+        for (_, _, r, t) in rest {
+            self.queue.push_back((r, t));
+        }
+        batch
+    }
 }
 
 /// Stable-sort a drained batch so shared-prefix prompts sit adjacent
@@ -165,6 +198,42 @@ mod tests {
         b.submit_at(mk(6, &[3]), t0);
         let ids: Vec<u64> = b.take_up_to(2).iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![6, 5]);
+    }
+
+    #[test]
+    fn lcp_take_prefers_deepest_cached_prefix() {
+        let mut b = Batcher::new(Duration::from_millis(0), 8);
+        let t0 = Instant::now();
+        let mk = |id, prompt: &[i32]| Request::new(id, prompt.to_vec(), 1);
+        b.submit_at(mk(0, &[1]), t0); // lcp 0
+        b.submit_at(mk(1, &[5, 5, 5, 5]), t0); // lcp 4
+        b.submit_at(mk(2, &[5, 5]), t0); // lcp 2
+        b.submit_at(mk(3, &[5, 5, 9]), t0); // lcp 2 (FIFO after id 2)
+        let lcp = |p: &[i32]| p.iter().take_while(|&&t| t == 5).count();
+        let ids: Vec<u64> = b.take_up_to_by_lcp(3, lcp).iter().map(|r| r.id).collect();
+        // deepest first wins selection; the drained batch itself is
+        // still prefix-grouped (lexicographic), so [5,5] < [5,5,5,5]
+        assert_eq!(ids, vec![2, 1, 3]);
+        // the shallow request stays queued, untouched
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.take_up_to(1)[0].id, 0);
+    }
+
+    #[test]
+    fn lcp_take_requeues_remainder_in_submit_order() {
+        let mut b = Batcher::new(Duration::from_millis(0), 8);
+        let t0 = Instant::now();
+        let mk = |id, prompt: &[i32]| Request::new(id, prompt.to_vec(), 1);
+        b.submit_at(mk(0, &[3]), t0);
+        b.submit_at(mk(1, &[5, 5]), t0);
+        b.submit_at(mk(2, &[4]), t0);
+        b.submit_at(mk(3, &[6]), t0);
+        let lcp = |p: &[i32]| p.iter().take_while(|&&t| t == 5).count();
+        let ids: Vec<u64> = b.take_up_to_by_lcp(1, lcp).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1], "deepest cached prefix admitted first");
+        // survivors keep FIFO order for later plain draining
+        let ids: Vec<u64> = b.take_up_to(3).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3]);
     }
 
     #[test]

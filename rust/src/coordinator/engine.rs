@@ -221,6 +221,12 @@ impl Engine {
                     cfg.persist_retries,
                     cfg.persist_retry_backoff_ms,
                     cfg.persist_degrade_after,
+                )
+                .with_compaction(
+                    // the knob is a fractional (reuse+1)/(depth+1) score;
+                    // records carry it in SCORE_SCALE fixed point
+                    (cfg.compact_threshold * crate::kvcache::prefix::SCORE_SCALE as f64) as u32,
+                    cfg.compact_max_bytes_per_pass as u64,
                 ),
             )?;
             log_info!(
@@ -294,6 +300,23 @@ impl Engine {
     /// a floor on time-to-first-token).
     pub fn free_lanes(&self) -> usize {
         self.lanes.iter().filter(|l| matches!(l, Lane::Free)).count()
+    }
+
+    /// True when the KV page pool is running hot: less than a quarter
+    /// of capacity is still drawable (free pool + evictable cached
+    /// pages).  The serve loop switches queue draining from FIFO to
+    /// deepest-cached-prefix-first under pressure, so each admission
+    /// costs the fewest fresh pages and the shared stems the rest of
+    /// the queue needs are not evicted to make room.
+    pub fn cache_pressure(&self) -> bool {
+        let cap = self.cache.page_capacity();
+        cap > 0 && self.cache.available_pages() * 4 < cap
+    }
+
+    /// Read-only longest-cached-prefix probe (tokens), for LCP-aware
+    /// queue ordering.  No refcounts are taken.
+    pub fn cached_lcp(&self, prompt: &[i32]) -> usize {
+        self.cache.cached_lcp(prompt)
     }
 
     pub fn take_completions(&mut self) -> Vec<Completion> {

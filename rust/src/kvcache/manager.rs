@@ -331,12 +331,18 @@ impl CacheManager {
         self.note_store_health();
     }
 
-    /// Mirror the store's degraded flag into [`ShareStats`] so the
-    /// serving stats line (and tests) see persistence failures without
-    /// reaching into the store.  Cheap; called after spill/flush.
+    /// Mirror the store's degraded flag and compaction counters into
+    /// [`ShareStats`] so the serving stats line (and tests) see
+    /// persistence health without reaching into the store.  Cheap;
+    /// called after spill/flush.
     pub fn note_store_health(&mut self) {
-        if self.store.as_ref().is_some_and(|s| s.degraded()) {
-            self.share.store_degraded = 1;
+        if let Some(s) = self.store.as_ref() {
+            let st = s.stats();
+            self.share.records_compacted = st.records_compacted;
+            self.share.segments_compacted = st.segments_compacted;
+            if s.degraded() {
+                self.share.store_degraded = 1;
+            }
         }
     }
 
@@ -383,6 +389,42 @@ impl CacheManager {
     /// Hard pool capacity in pages.
     pub fn page_capacity(&self) -> usize {
         self.alloc.capacity()
+    }
+
+    /// Cap the radix index's run-length nodes at `n` pages per node
+    /// (0 = unlimited, 1 = the v1 one-node-per-page shape).  Benches
+    /// and the state-machine suite use this to compare tree shapes;
+    /// only affects nodes inserted from here on.
+    pub fn set_radix_max_run_pages(&mut self, n: usize) {
+        self.radix.set_max_run_pages(n);
+    }
+
+    /// Number of nodes in the radix tree (0 under the flat index).
+    /// The shape metric for cross-page runs: a P-page stem is one node
+    /// under v2 runs, P nodes under the v1 one-page-per-node shape.
+    pub fn radix_node_count(&self) -> usize {
+        self.radix.node_count()
+    }
+
+    /// Read-only longest-cached-prefix probe: how many leading tokens
+    /// of `prompt` the resident cache already covers.  Under the radix
+    /// index this is one tree walk (token-granular); under the flat
+    /// index it is the chain-key walk (page-granular, including cold
+    /// store hits).  The batcher uses it to drain deepest-LCP-first
+    /// under pool pressure.
+    pub fn cached_lcp(&self, prompt: &[i32]) -> usize {
+        if !self.prefix_sharing || prompt.is_empty() {
+            return 0;
+        }
+        match self.index_kind {
+            PrefixIndexKind::Radix => self.radix.match_prefix(prompt).1,
+            PrefixIndexKind::Flat => self
+                .probe_prefix(prompt)
+                .hits
+                .last()
+                .map(|h| h.end)
+                .unwrap_or(0),
+        }
     }
 
     /// Pages shared by 2+ sequences.
@@ -1003,16 +1045,31 @@ impl CacheManager {
                         }
                         out.pages.push(dst);
                         out.tokens = *end;
-                        // the copy page stays open; only when it is the
-                        // prompt's final page does it suppress the
-                        // seal-and-publish (and therefore the CoW) the
-                        // flat tail lifecycle would impose.  Interior
-                        // assembled pages (full spans split across
-                        // source pages) stay open too, harmlessly —
-                        // they are complete, never written again, and
-                        // never published
+                        // a *partial* copy page stays open; only when
+                        // it is the prompt's final page does it
+                        // suppress the seal-and-publish (and therefore
+                        // the CoW) the flat tail lifecycle would impose
                         if start / tp == (prompt.len() - 1) / tp {
                             out.tail_copied = true;
+                        }
+                        if end - start == tp {
+                            // assembled-page reuse: the copy covers its
+                            // whole span, byte-complete — seal it and
+                            // re-point the tree's fragmented coverage
+                            // of the span at it, so the next exact
+                            // repeat adopts one page by refcount
+                            // instead of re-running copy_slots.  Source
+                            // pages left with no sub-refs come back
+                            // stranded (they were parked, zero-ref) and
+                            // recycle to the free pool
+                            self.alloc
+                                .page_mut(dst)
+                                .seal(keys.get(start / tp).copied());
+                            for p in self.radix.repoint_span(&prompt[..*end], *start, dst)
+                            {
+                                self.alloc.free(p);
+                                self.share.pages_evicted += 1;
+                            }
                         }
                         self.share.tail_copies += 1;
                     }
@@ -1041,7 +1098,11 @@ impl CacheManager {
         end: usize,
     ) -> Option<PageId> {
         let run = &prompt[start..end];
-        let bytes = self.store.as_ref()?.read_page(key, parent, run)?;
+        let (bytes, start_slot) = {
+            let store = self.store.as_ref()?;
+            let slot = store.lookup_start_slot(key, parent, run).unwrap_or(0);
+            (store.read_page(key, parent, run)?, slot)
+        };
         if bytes.len() != self.alloc.cfg().page_bytes() {
             return None;
         }
@@ -1052,6 +1113,12 @@ impl CacheManager {
         // leaves this page as a private resident copy of the sequence
         let _ = self.radix.insert(&prompt[..end], start, p);
         self.share.pages_promoted += 1;
+        // a record whose original node run began mid-page (a persisted
+        // split point, padded to the page boundary at spill time)
+        // recovered coverage the v1 spill path used to throw away
+        if start_slot > 0 {
+            self.share.subrun_promotions += 1;
+        }
         Some(p)
     }
 
@@ -1060,9 +1127,18 @@ impl CacheManager {
     /// derived from the page's tree path, so it is addressable by
     /// exactly the chain keys [`CacheManager::plan_radix`]'s store
     /// fallback computes — flat- and radix-written stores are
-    /// interchangeable.  A page whose covered run does not start at
-    /// slot 0 (a promoted divergent suffix) is already durable under
-    /// its original whole-run record and is skipped.
+    /// interchangeable.
+    ///
+    /// A run that begins mid-page (a node published at a radix split
+    /// point) lives on a *physically complete* page: its leading slots
+    /// were slot-copied from verified source pages before the divergent
+    /// suffix was appended, so the record pads the run leftward to the
+    /// page boundary with the tree path's trailing prefix tokens.  The
+    /// padded record stays addressable by the standard page-aligned
+    /// chain keys — a warm boot recovers coverage the v1 spill path
+    /// threw away — and the original split slot rides the v2 record
+    /// extension as provenance (`ShareStats::subrun_promotions` counts
+    /// its adoptions).
     fn spill_page_radix(&mut self, page: PageId) {
         let tp = self.alloc.cfg().tokens_per_page;
         let enqueued = {
@@ -1070,16 +1146,25 @@ impl CacheManager {
             let Some((start, run, prefix)) = self.radix.page_run(page) else {
                 return;
             };
-            if start % tp != 0 {
-                return;
-            }
             debug_assert_eq!(prefix.len(), start);
+            let start_slot = (start % tp) as u32;
+            let page_start = start - start % tp;
+            let mut full_run = prefix[page_start..].to_vec();
+            full_run.extend_from_slice(&run);
             let mut parent = None;
-            for chunk in prefix.chunks(tp) {
+            for chunk in prefix[..page_start].chunks(tp) {
                 parent = Some(chain_key(parent, chunk, self.fingerprint));
             }
-            let key = chain_key(parent, &run, self.fingerprint);
-            store.spill(key, parent, &run, &self.alloc.page(page).data)
+            let key = chain_key(parent, &full_run, self.fingerprint);
+            let score = self.radix.page_score(page).min(u32::MAX as u64) as u32;
+            store.spill(
+                key,
+                parent,
+                &full_run,
+                &self.alloc.page(page).data,
+                start_slot,
+                score,
+            )
         };
         if enqueued {
             self.share.pages_spilled += 1;
@@ -1128,7 +1213,14 @@ impl CacheManager {
             let Some((_, parent, tokens, _)) = self.prefix.entry_meta(key) else {
                 return;
             };
-            store.spill(key, parent, tokens, &self.alloc.page(page).data)
+            // flat runs are always page-aligned; the retention score
+            // rides along so the compactor can rank this record
+            let score = self
+                .prefix
+                .score_of(key)
+                .map(|s| s.min(u32::MAX as u64) as u32)
+                .unwrap_or(0);
+            store.spill(key, parent, tokens, &self.alloc.page(page).data, 0, score)
         };
         if enqueued {
             self.share.pages_spilled += 1;

@@ -80,8 +80,11 @@ impl PrefixIndexKind {
 }
 
 /// Fixed-point scale of the retention score (keeps the reuse/depth
-/// ratio meaningful in integer math).
-const SCORE_SCALE: u64 = 1 << 16;
+/// ratio meaningful in integer math).  Shared by both index backends
+/// and by the store's segment compactor, whose
+/// `[cache] compact_threshold` knob is expressed in the same
+/// `(reuse + 1) / (depth + 1)` units.
+pub const SCORE_SCALE: u64 = 1 << 16;
 
 /// One published prefix page: the page plus the exact chain link it
 /// claims to encode (verified on every lookup).
@@ -165,6 +168,14 @@ impl PrefixIndex {
         self.map
             .get(&key)
             .map(|e| (e.page, e.parent, e.tokens.as_slice(), e.depth))
+    }
+
+    /// The current retention score of the entry under `key`, in
+    /// [`SCORE_SCALE`] fixed point.  Spilled with the record so the
+    /// store's segment compactor can rank live records by the same
+    /// `(reuse + 1) / (depth + 1)` weight the in-RAM eviction uses.
+    pub fn score_of(&self, key: PrefixKey) -> Option<u64> {
+        self.map.get(&key).map(|e| e.score())
     }
 
     /// Publish a sealed page under its content key, recording the token

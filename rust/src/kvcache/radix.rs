@@ -8,37 +8,48 @@
 //!
 //! ```text
 //!             root
-//!              │ "the quick brown fox "      node run → (page 4, slots 0..16)
+//!              │ "the quick brown fox jumped over the lazy dog and "
+//!              │                  one run-length node → pages [4, 5, 6]
 //!              ├──────────────┐
-//!   "jumps over"       "walks under"         split at the divergence token:
-//!   (page 7, 0..10)    (page 9, 0..11)       two prompts share the parent run
+//!   "kept running"       "fell asleep"       split at the divergence token:
+//!   (page 7, 0..12)      (page 9, 0..11)     two prompts share the parent run
 //! ```
 //!
-//! * Each **node** owns a run of token ids that never crosses a page
-//!   boundary, plus the page (and slot range inside it) holding that
-//!   run's stage-1 encoded K/V.  Token position `t` of the prompt always
-//!   lives at slot `t % tokens_per_page` of its page, so slot ranges of
-//!   different prompts line up and can be copied between pages verbatim.
+//! * Each **node** owns a run of token ids that may span several pages:
+//!   the run carries one page sub-reference per page position it
+//!   touches (`pages[i]` backs page position `start/tp + i`).  Token
+//!   position `t` of the prompt always lives at slot `t % tokens_per_page`
+//!   of its page, so slot ranges of different prompts line up and can
+//!   be copied between pages verbatim.  Publishing consecutive pages of
+//!   one prompt extends the node in place, collapsing a P-page stem
+//!   into a single node and shrinking the LCP walk constant from P
+//!   child hops to one token comparison loop.
 //! * **Lookup** ([`RadixIndex::match_prefix`]) walks the
 //!   longest-common-prefix of a prompt and returns the covered
-//!   `(page, slot range)` segments — a match can end in the middle of a
-//!   page (the flat index can only answer per whole page) and in the
-//!   middle of a node (no mutation on lookup).
+//!   `(page, slot range)` segments — one per page piece, so the
+//!   manager's adoption planner sees the same shape regardless of how
+//!   runs are batched into nodes.  A match can end in the middle of a
+//!   page and in the middle of a node (no mutation on lookup).
 //! * **Insertion** ([`RadixIndex::insert`]) splits a node at the
 //!   divergence token, so two prompts sharing 15 of 16 tail tokens end
-//!   up as a shared 15-token parent with two 1-token children.  The
-//!   cache manager turns such a partial match into a *slot-range
-//!   copy-on-write*: it copies the 15 shared slots out of the indexed
-//!   page and re-encodes only the divergent suffix
+//!   up as a shared 15-token parent with two 1-token children.  When
+//!   the split lands mid-page the two halves *share* the boundary page
+//!   (distinct slot ranges of one page).  The cache manager turns such
+//!   a partial match into a *slot-range copy-on-write*
 //!   (`CacheManager::start_seq_with_prompt`).
+//! * **Re-pointing** ([`RadixIndex::repoint_span`]) swaps every sub-ref
+//!   covering one whole page span to a freshly assembled page: after a
+//!   CoW copy gathered the span's pieces into one page, exact repeats
+//!   should adopt that page outright instead of re-copying the pieces.
 //! * **Eviction** ([`RadixIndex::evict_victim`]) is hierarchical: the
 //!   parked page with the lowest retention score
 //!   `(reuse + 1) / (depth + 1)` goes first (ties: least recently
-//!   parked), which makes leaves evict before the interior runs every
-//!   descendant depends on.  Evicting a page drops every node that
-//!   references it *and their subtrees* — a child whose ancestor run is
-//!   gone can never be matched again, so any parked pages stranded by
-//!   the cascade are freed in the same call.
+//!   parked), where `depth` is the page position of the *sub-ref*, so
+//!   the tail pages of a long run still evict before its head.  Losing
+//!   a node's leading page drops the node and its subtree; losing a
+//!   trailing page merely truncates the run at the lost page (the head
+//!   keeps matching).  Parked pages stranded by either cascade are
+//!   freed in the same call.
 //!
 //! Like the flat index, this structure holds **no page refcounts** and
 //! serves only verified data: a node stores the exact token ids it
@@ -51,38 +62,27 @@
 use std::collections::{BTreeMap, HashMap};
 
 use super::allocator::PageId;
-
-/// Fixed-point scale of the retention score (keeps the reuse/depth
-/// ratio meaningful in integer math); matches the flat index.
-const SCORE_SCALE: u64 = 1 << 16;
+use super::prefix::SCORE_SCALE;
 
 pub type NodeId = u32;
 
-/// One radix node: a token run backed by a slot range of one page.
+/// One radix node: a token run backed by one page sub-reference per
+/// page position the run touches.
 #[derive(Debug)]
 struct Node {
-    /// the token ids this node covers (never crosses a page boundary)
+    /// the token ids this node covers (may span page boundaries)
     tokens: Vec<i32>,
-    /// absolute prompt position of `tokens[0]`; the run occupies slots
-    /// `start % tokens_per_page ..` of `page`
+    /// absolute prompt position of `tokens[0]`
     start: usize,
-    /// page holding this run's encoded K/V
-    page: PageId,
+    /// `pages[i]` holds the run's K/V for page position `start/tp + i`;
+    /// the first and last entries may cover partial pages
+    pages: Vec<PageId>,
     parent: Option<NodeId>,
     /// children keyed by the first token of their run
     children: HashMap<i32, NodeId>,
-    /// adoptions credited to this node's page since publish (the
+    /// adoptions credited to this node's pages since publish (the
     /// dominant retention-score term)
     reuse: u32,
-}
-
-impl Node {
-    /// Retention weight: bigger = keep longer.  `depth` is the page
-    /// position (`start / tokens_per_page`) so scores are comparable
-    /// with the flat index's.
-    fn score(&self, tp: usize) -> u64 {
-        (self.reuse as u64 + 1) * SCORE_SCALE / ((self.start / tp) as u64 + 1)
-    }
 }
 
 /// One contiguous match segment returned by [`RadixIndex::match_prefix`]:
@@ -114,6 +114,10 @@ pub struct RadixIndex {
     queue: BTreeMap<(u64, u64), PageId>,
     /// monotonic stamp source for the park-time tiebreak
     clock: u64,
+    /// cap on `pages.len()` per node; 0 = unlimited.  `1` reproduces the
+    /// v1 one-node-per-page shape (state-machine suite and benches
+    /// compare the two shapes through this knob).
+    max_run_pages: usize,
 }
 
 impl RadixIndex {
@@ -122,6 +126,13 @@ impl RadixIndex {
             tp: tokens_per_page.max(1),
             ..RadixIndex::default()
         }
+    }
+
+    /// Cap node runs at `n` pages (0 = unlimited).  `1` reproduces the
+    /// v1 one-node-per-page tree shape; only future inserts and merges
+    /// are affected.
+    pub fn set_max_run_pages(&mut self, n: usize) {
+        self.max_run_pages = n;
     }
 
     /// Number of indexed pages (pages referenced by at least one node).
@@ -172,8 +183,10 @@ impl RadixIndex {
 
     /// Walk the longest common prefix of `prompt` through the tree.
     /// Returns the contiguous covered segments (token positions
-    /// `[0, matched)`) and `matched` itself.  A match may end mid-node;
-    /// nothing is mutated (splits happen only on insert).
+    /// `[0, matched)`) and `matched` itself.  A run-length node emits
+    /// one segment per page piece, so callers see the same shape as a
+    /// one-node-per-page tree.  A match may end mid-node; nothing is
+    /// mutated (splits happen only on insert).
     pub fn match_prefix(&self, prompt: &[i32]) -> (Vec<Seg>, usize) {
         let mut segs: Vec<Seg> = Vec::new();
         let mut pos = 0usize;
@@ -187,15 +200,18 @@ impl RadixIndex {
                 .zip(&prompt[pos..])
                 .take_while(|(a, b)| a == b)
                 .count();
-            if k > 0 {
+            let mut at = pos;
+            while at < pos + k {
+                let piece_end = (pos + k).min((at / self.tp + 1) * self.tp);
                 segs.push(Seg {
-                    page: n.page,
-                    slot0: n.start % self.tp,
-                    len: k,
-                    start: pos,
+                    page: n.pages[at / self.tp - n.start / self.tp],
+                    slot0: at % self.tp,
+                    len: piece_end - at,
+                    start: at,
                 });
-                pos += k;
+                at = piece_end;
             }
+            pos += k;
             if k < n.tokens.len() || pos >= prompt.len() {
                 break;
             }
@@ -210,8 +226,11 @@ impl RadixIndex {
     /// the tree; if the whole run is already covered the existing nodes
     /// win (first-publisher-wins, like the flat index) and `false` is
     /// returned.  Splits the node at the divergence token when the run
-    /// forks off mid-node.  Returns `true` iff a new node now
-    /// references `page`.
+    /// forks off mid-node.  A page-aligned run attaching to the end of
+    /// a childless node *extends that node in place* (subject to
+    /// [`RadixIndex::set_max_run_pages`]) instead of allocating a
+    /// child, so sequentially published stems collapse into run-length
+    /// nodes.  Returns `true` iff a node now references `page`.
     pub fn insert(&mut self, prefix: &[i32], start: usize, page: PageId) -> bool {
         let end = prefix.len();
         if start >= end {
@@ -259,10 +278,27 @@ impl RadixIndex {
             return false; // ancestors of the run are missing
         }
         debug_assert!(cur.is_none());
+        if pos == start && start % self.tp == 0 {
+            if let Some(p) = parent {
+                let can_extend = {
+                    let n = self.node(p);
+                    n.children.is_empty()
+                        && n.start + n.tokens.len() == pos
+                        && (self.max_run_pages == 0 || n.pages.len() < self.max_run_pages)
+                };
+                if can_extend {
+                    let n = self.node_mut(p);
+                    n.tokens.extend_from_slice(&prefix[pos..end]);
+                    n.pages.push(page);
+                    self.by_page.entry(page).or_default().push(p);
+                    return true;
+                }
+            }
+        }
         let nid = self.alloc_node(Node {
             tokens: prefix[pos..end].to_vec(),
             start: pos,
-            page,
+            pages: vec![page],
             parent,
             children: HashMap::new(),
             reuse: 0,
@@ -280,28 +316,38 @@ impl RadixIndex {
     }
 
     /// Split node `id` after its first `k` tokens: the node keeps the
-    /// head run, a new child (same page, shifted slot range) takes the
-    /// tail and inherits the children.  Reuse is inherited by both
-    /// halves — the split is a representation change, not an adoption.
+    /// head run, a new child takes the tail and inherits the children.
+    /// Sub-refs past the cut move to the child; when the cut lands
+    /// mid-page both halves share the boundary page (distinct slot
+    /// ranges).  Reuse is inherited by both halves — the split is a
+    /// representation change, not an adoption.
     fn split(&mut self, id: NodeId, k: usize) {
         debug_assert!(k >= 1);
-        let (rest, start, page, reuse, children) = {
+        let (rest, start, tail_pages, reuse, children, shared_boundary) = {
+            let tp = self.tp;
             let n = self.node_mut(id);
             debug_assert!(k < n.tokens.len());
             let rest = n.tokens.split_off(k);
+            let fpp = n.start / tp;
+            let head_last = (n.start + k - 1) / tp - fpp;
+            let tail_first = (n.start + k) / tp - fpp;
+            let tail_pages: Vec<PageId> = n.pages[tail_first..].to_vec();
+            let shared_boundary = tail_first == head_last;
+            n.pages.truncate(head_last + 1);
             (
                 rest,
                 n.start + k,
-                n.page,
+                tail_pages,
                 n.reuse,
                 std::mem::take(&mut n.children),
+                shared_boundary,
             )
         };
         let first = rest[0];
         let child = self.alloc_node(Node {
             tokens: rest,
             start,
-            page,
+            pages: tail_pages,
             parent: Some(id),
             children,
             reuse,
@@ -311,7 +357,15 @@ impl RadixIndex {
             self.node_mut(g).parent = Some(child);
         }
         self.node_mut(id).children.insert(first, child);
-        self.by_page.entry(page).or_default().push(child);
+        let cpages: Vec<PageId> = self.node(child).pages.clone();
+        for (i, pg) in cpages.iter().enumerate() {
+            let list = self.by_page.entry(*pg).or_default();
+            if !(i == 0 && shared_boundary) {
+                // a page wholly in the tail changes owner: head → child
+                list.retain(|&x| x != id);
+            }
+            list.push(child);
+        }
     }
 
     /// Credit one adoption to every node referencing `page` (their
@@ -349,26 +403,36 @@ impl RadixIndex {
         self.queue.insert(slot, page);
     }
 
-    /// A page's retention score: the best score over its nodes (a page
+    /// A page's retention score `(reuse + 1) / (depth + 1)` in
+    /// [`SCORE_SCALE`] fixed point: the best score over the sub-refs
+    /// holding it, where depth is the sub-ref's page position (a page
     /// serving a hot interior run must outlive its coldest leaf split).
-    fn page_score(&self, page: PageId) -> u64 {
+    /// The store's segment compactor uses the same number to decide
+    /// which spilled records are worth rescuing from a dying segment.
+    pub fn page_score(&self, page: PageId) -> u64 {
         self.by_page
             .get(&page)
             .map(|ids| {
                 ids.iter()
-                    .map(|&id| self.node(id).score(self.tp))
+                    .map(|&id| {
+                        let n = self.node(id);
+                        let fpp = n.start / self.tp;
+                        let pi = n.pages.iter().position(|&p| p == page).unwrap_or(0);
+                        (n.reuse as u64 + 1) * SCORE_SCALE / ((fpp + pi) as u64 + 1)
+                    })
                     .max()
                     .unwrap_or(0)
             })
             .unwrap_or(0)
     }
 
-    /// Evict the lowest-scored parked page and drop every node that
-    /// references it, cascading through their subtrees (descendants of
-    /// a dropped run can never be matched again).  Parked pages
-    /// stranded by the cascade are freed too.  Returns every page the
-    /// caller should recycle (victim first); empty when nothing is
-    /// parked.
+    /// Evict the lowest-scored parked page.  A node holding the victim
+    /// as its *leading* page is dropped with its whole subtree
+    /// (descendants of a dropped run can never be matched again); a
+    /// node holding it as a *trailing* page is truncated at the victim
+    /// so its head keeps matching.  Parked pages stranded by either
+    /// cascade are freed too.  Returns every page the caller should
+    /// recycle (victim first); empty when nothing is parked.
     pub fn evict_victim(&mut self) -> Vec<PageId> {
         let Some((_, page)) = self.queue.pop_first() else {
             return Vec::new();
@@ -377,10 +441,50 @@ impl RadixIndex {
         let mut freed = vec![page];
         if let Some(ids) = self.by_page.remove(&page) {
             for id in ids {
-                self.remove_subtree(id, &mut freed);
+                if self.nodes[id as usize].is_none() {
+                    continue; // already removed through an earlier cascade
+                }
+                match self.node(id).pages.iter().position(|&p| p == page) {
+                    Some(0) | None => self.remove_subtree(id, &mut freed),
+                    Some(pi) => self.truncate_node(id, pi, &mut freed),
+                }
             }
         }
         freed
+    }
+
+    /// Drop the tail of `id`'s run from sub-ref `pi` on (its backing
+    /// page is gone): the retained head keeps matching, while the
+    /// trailing sub-refs and every child become unreachable.  Stranded
+    /// parked pages go onto `freed`.
+    fn truncate_node(&mut self, id: NodeId, pi: usize, freed: &mut Vec<PageId>) {
+        debug_assert!(pi >= 1);
+        let (dropped, children) = {
+            let tp = self.tp;
+            let n = self.node_mut(id);
+            let keep = (n.start / tp + pi) * tp - n.start;
+            debug_assert!(keep >= 1);
+            n.tokens.truncate(keep);
+            let dropped = n.pages.split_off(pi);
+            (dropped, std::mem::take(&mut n.children))
+        };
+        // dropped[0] is the victim itself — the caller already removed
+        // its by_page entry and pushed it onto the freed list
+        for pg in dropped.into_iter().skip(1) {
+            if let Some(list) = self.by_page.get_mut(&pg) {
+                list.retain(|&x| x != id);
+                if list.is_empty() {
+                    self.by_page.remove(&pg);
+                    if let Some(slot) = self.parked.remove(&pg) {
+                        self.queue.remove(&slot);
+                        freed.push(pg);
+                    }
+                }
+            }
+        }
+        for c in children.into_values() {
+            self.remove_subtree(c, freed);
+        }
     }
 
     /// Remove `id` and its whole subtree, releasing page references.
@@ -411,56 +515,81 @@ impl RadixIndex {
             };
             self.free_ids.push(i);
             stack.extend(n.children.values().copied());
-            if let Some(list) = self.by_page.get_mut(&n.page) {
-                list.retain(|&x| x != i);
-                if list.is_empty() {
-                    self.by_page.remove(&n.page);
-                    if let Some(slot) = self.parked.remove(&n.page) {
-                        self.queue.remove(&slot);
-                        freed.push(n.page);
+            for pg in &n.pages {
+                if let Some(list) = self.by_page.get_mut(pg) {
+                    list.retain(|&x| x != i);
+                    if list.is_empty() {
+                        self.by_page.remove(pg);
+                        if let Some(slot) = self.parked.remove(pg) {
+                            self.queue.remove(&slot);
+                            freed.push(*pg);
+                        }
                     }
                 }
             }
         }
-        // a parent left with a lone same-page child collapses back into
+        // a parent left with a lone contiguous child collapses back into
         // one node (undo of a split whose other branch is gone)
         if let Some(p) = parent {
             self.try_merge(p);
         }
     }
 
-    /// Merge `id` with its only child when both halves live on the same
-    /// page and cover contiguous tokens — the inverse of
-    /// [`RadixIndex::split`].
+    /// Merge `id` with its only child when the two runs are contiguous —
+    /// the inverse of [`RadixIndex::split`].  A mid-page join requires
+    /// both halves to sit on the same boundary page; a page-aligned
+    /// join concatenates the sub-ref lists (respecting
+    /// [`RadixIndex::set_max_run_pages`]).
     fn try_merge(&mut self, id: NodeId) {
         if self.nodes[id as usize].is_none() {
             return;
         }
-        let child_id = {
+        let (child_id, shared_boundary) = {
             let n = self.node(id);
             if n.children.len() != 1 {
                 return;
             }
             let &c = n.children.values().next().unwrap();
             let cn = self.node(c);
-            if cn.page != n.page || cn.start != n.start + n.tokens.len() {
+            let end = n.start + n.tokens.len();
+            if cn.start != end {
                 return;
             }
-            c
+            if end % self.tp != 0 {
+                // mid-page join: only the undo of a split qualifies
+                if cn.pages[0] != *n.pages.last().expect("non-empty run") {
+                    return;
+                }
+                (c, true)
+            } else {
+                if self.max_run_pages != 0
+                    && n.pages.len() + cn.pages.len() > self.max_run_pages
+                {
+                    return;
+                }
+                (c, false)
+            }
         };
-        let (page, ctokens, cchildren, creuse) = {
+        let (cpages, ctokens, cchildren, creuse) = {
             let c = self.nodes[child_id as usize].take().expect("live child");
             self.free_ids.push(child_id);
-            (c.page, c.tokens, c.children, c.reuse)
+            (c.pages, c.tokens, c.children, c.reuse)
         };
-        if let Some(list) = self.by_page.get_mut(&page) {
-            list.retain(|&x| x != child_id);
+        for (i, pg) in cpages.iter().enumerate() {
+            if let Some(list) = self.by_page.get_mut(pg) {
+                list.retain(|&x| x != child_id);
+                if !(i == 0 && shared_boundary) {
+                    list.push(id);
+                }
+            }
         }
         {
             let n = self.node_mut(id);
             n.tokens.extend(ctokens);
             n.reuse = n.reuse.max(creuse);
             n.children = cchildren;
+            let skip = if shared_boundary { 1 } else { 0 };
+            n.pages.extend_from_slice(&cpages[skip..]);
         }
         let grand: Vec<NodeId> = self.node(id).children.values().copied().collect();
         for g in grand {
@@ -468,31 +597,116 @@ impl RadixIndex {
         }
     }
 
+    /// Re-point every sub-ref covering the whole page span
+    /// `[start, start + tp)` of `prompt` at `page`.  The manager calls
+    /// this after a slot-range CoW assembled a byte-identical copy of
+    /// the span into `page`, so exact repeats of the prompt adopt the
+    /// assembled page outright (a whole-page refcount hit) instead of
+    /// re-running the same `copy_slots` fan-in.  No-op (empty return,
+    /// no mutation) unless the tree's resident pieces cover the span
+    /// exactly.  Returns the pages stranded by the switch — last
+    /// reference gone while parked — which the caller must recycle.
+    pub fn repoint_span(&mut self, prompt: &[i32], start: usize, page: PageId) -> Vec<PageId> {
+        debug_assert_eq!(start % self.tp, 0, "repoint targets one whole page span");
+        let span_end = start + self.tp;
+        if prompt.len() < span_end {
+            return Vec::new();
+        }
+        // walk the prompt collecting (node, sub-ref) pairs whose piece
+        // lies inside the span; bail unless the span is fully covered
+        let mut targets: Vec<(NodeId, usize)> = Vec::new();
+        let mut covered = 0usize;
+        let mut pos = 0usize;
+        let mut cur = prompt.first().and_then(|t| self.roots.get(t).copied());
+        while let Some(id) = cur {
+            let n = self.node(id);
+            let k = n
+                .tokens
+                .iter()
+                .zip(&prompt[pos..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            let lo = pos.max(start);
+            let hi = (pos + k).min(span_end);
+            if lo < hi {
+                targets.push((id, lo / self.tp - n.start / self.tp));
+                covered += hi - lo;
+            }
+            pos += k;
+            if k < n.tokens.len() || pos >= span_end {
+                break;
+            }
+            cur = n.children.get(&prompt[pos]).copied();
+        }
+        if covered < self.tp {
+            return Vec::new();
+        }
+        let mut stranded = Vec::new();
+        for (id, pi) in targets {
+            let old = self.node(id).pages[pi];
+            if old == page {
+                continue;
+            }
+            self.node_mut(id).pages[pi] = page;
+            let list = self.by_page.entry(page).or_default();
+            if !list.contains(&id) {
+                list.push(id);
+            }
+            if let Some(list) = self.by_page.get_mut(&old) {
+                list.retain(|&x| x != id);
+                if list.is_empty() {
+                    self.by_page.remove(&old);
+                    if let Some(slot) = self.parked.remove(&old) {
+                        self.queue.remove(&slot);
+                        stranded.push(old);
+                    }
+                }
+            }
+        }
+        stranded
+    }
+
     /// The contiguous token run `page` holds and the full prompt prefix
     /// in front of it: `(start, run, prefix_tokens)` where the page
     /// covers prompt positions `[start, start + run.len())` and
     /// `prefix_tokens` are positions `[0, start)` collected from the
-    /// ancestor chain.  This is what the persistence layer needs to
-    /// serialize a parked page as an edge-aware store record
-    /// (`parent key` over the prefix + the covered run) without
-    /// re-deriving the chain.  `None` when the page is unindexed or its
+    /// holding nodes' head slices and ancestor chain.  This is what the
+    /// persistence layer needs to serialize a parked page as an
+    /// edge-aware store record (`parent key` over the prefix + the
+    /// covered run) without re-deriving the chain.  With run-length
+    /// nodes a page usually covers a *sub-run* of its node; the run may
+    /// also start mid-page (a split point), which the store records as
+    /// a sub-run extension.  `None` when the page is unindexed or its
     /// references are not one contiguous run.
     pub fn page_run(&self, page: PageId) -> Option<(usize, Vec<i32>, Vec<i32>)> {
         let ids = self.by_page.get(&page)?;
-        let mut nodes: Vec<&Node> = ids.iter().map(|&i| self.node(i)).collect();
-        nodes.sort_by_key(|n| n.start);
-        let start = nodes[0].start;
+        // each holding node contributes the sub-span its sub-ref backs
+        let mut pieces: Vec<(usize, usize, NodeId)> = Vec::new();
+        for &i in ids {
+            let n = self.node(i);
+            let pi = n.pages.iter().position(|&p| p == page)?;
+            let pp = n.start / self.tp + pi;
+            let lo = n.start.max(pp * self.tp);
+            let hi = (n.start + n.tokens.len()).min((pp + 1) * self.tp);
+            pieces.push((lo, hi, i));
+        }
+        pieces.sort_by_key(|&(lo, _, _)| lo);
+        let start = pieces[0].0;
         let mut run = Vec::new();
         let mut pos = start;
-        for n in &nodes {
-            if n.start != pos {
+        for &(lo, hi, i) in &pieces {
+            if lo != pos {
                 return None; // non-contiguous references
             }
-            run.extend_from_slice(&n.tokens);
-            pos += n.tokens.len();
+            let n = self.node(i);
+            run.extend_from_slice(&n.tokens[lo - n.start..hi - n.start]);
+            pos = hi;
         }
-        let mut parts: Vec<&[i32]> = Vec::new();
-        let mut cur = nodes[0].parent;
+        // the prefix: the first holding node's own head slice plus its
+        // ancestor chain
+        let n0 = self.node(pieces[0].2);
+        let mut parts: Vec<&[i32]> = vec![&n0.tokens[..start - n0.start]];
+        let mut cur = n0.parent;
         while let Some(p) = cur {
             let n = self.node(p);
             parts.push(&n.tokens);
@@ -518,6 +732,13 @@ mod tests {
         RadixIndex::new(4)
     }
 
+    /// the v1 tree shape: one node per page
+    fn idx_v1() -> RadixIndex {
+        let mut r = RadixIndex::new(4);
+        r.set_max_run_pages(1);
+        r
+    }
+
     #[test]
     fn insert_and_match_whole_pages() {
         let mut r = idx();
@@ -525,7 +746,7 @@ mod tests {
         assert!(r.insert(&prompt[..4], 0, 10));
         assert!(r.insert(&prompt[..8], 4, 11));
         assert_eq!(r.len(), 2);
-        assert_eq!(r.node_count(), 2);
+        assert_eq!(r.node_count(), 1, "a sequentially published stem is one node");
         let (segs, matched) = r.match_prefix(&prompt);
         assert_eq!(matched, 8);
         assert_eq!(
@@ -539,11 +760,42 @@ mod tests {
         let (segs, matched) = r.match_prefix(&prompt[..6]);
         assert_eq!(matched, 6);
         assert_eq!(segs[1], Seg { page: 11, slot0: 0, len: 2, start: 4 });
-        assert_eq!(r.node_count(), 2, "lookup must not split");
+        assert_eq!(r.node_count(), 1, "lookup must not split");
         // re-publishing covered content loses (first publisher wins)
         assert!(!r.insert(&prompt[..8], 4, 99));
         let (segs, _) = r.match_prefix(&prompt);
         assert_eq!(segs[1].page, 11);
+    }
+
+    #[test]
+    fn v1_shape_keeps_one_node_per_page() {
+        let mut r = idx_v1();
+        let prompt: Vec<i32> = (0..8).collect();
+        assert!(r.insert(&prompt[..4], 0, 10));
+        assert!(r.insert(&prompt[..8], 4, 11));
+        assert_eq!(r.node_count(), 2, "max_run_pages = 1 disables extension");
+        let (segs, matched) = r.match_prefix(&prompt);
+        assert_eq!(matched, 8);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].page, 10);
+        assert_eq!(segs[1].page, 11);
+    }
+
+    #[test]
+    fn a_sixteen_page_stem_is_one_node() {
+        let mut r = idx();
+        let prompt: Vec<i32> = (0..64).collect();
+        for p in 0..16 {
+            assert!(r.insert(&prompt[..(p + 1) * 4], p * 4, 100 + p as PageId));
+        }
+        assert_eq!(r.node_count(), 1);
+        assert_eq!(r.len(), 16);
+        let (segs, matched) = r.match_prefix(&prompt);
+        assert_eq!(matched, 64);
+        assert_eq!(segs.len(), 16, "one segment per page piece");
+        for (i, s) in segs.iter().enumerate() {
+            assert_eq!(*s, Seg { page: 100 + i as PageId, slot0: 0, len: 4, start: i * 4 });
+        }
     }
 
     #[test]
@@ -583,6 +835,39 @@ mod tests {
     }
 
     #[test]
+    fn splitting_a_run_length_node_moves_the_tail_pages() {
+        let mut r = idx();
+        let a: Vec<i32> = (0..12).collect();
+        r.insert(&a[..4], 0, 10);
+        r.insert(&a[..8], 4, 11);
+        r.insert(&a[..12], 8, 12);
+        assert_eq!(r.node_count(), 1);
+        // fork at token 6 (mid page 1): head [0..6) keeps pages 10+11,
+        // tail [6..12) starts on the shared boundary page 11
+        let mut b = a.clone();
+        b[6] = 99;
+        r.insert(&b[..8], 4, 20);
+        assert_eq!(r.node_count(), 3);
+        let (segs, matched) = r.match_prefix(&a);
+        assert_eq!(matched, 12);
+        assert_eq!(
+            segs,
+            vec![
+                Seg { page: 10, slot0: 0, len: 4, start: 0 },
+                Seg { page: 11, slot0: 0, len: 2, start: 4 },
+                Seg { page: 11, slot0: 2, len: 2, start: 6 },
+                Seg { page: 12, slot0: 0, len: 4, start: 8 },
+            ]
+        );
+        let (segs, matched) = r.match_prefix(&b);
+        assert_eq!(matched, 8);
+        assert_eq!(segs.last().unwrap(), &Seg { page: 20, slot0: 2, len: 2, start: 6 });
+        // page 11 is now shared by the head and the tail halves
+        assert!(r.is_referenced(11));
+        assert_eq!(r.page_run(11), Some((4, a[4..8].to_vec(), a[..4].to_vec())));
+    }
+
+    #[test]
     fn insert_requires_covered_ancestors() {
         let mut r = idx();
         let prompt: Vec<i32> = (0..8).collect();
@@ -603,14 +888,18 @@ mod tests {
         r.insert(&prompt[..4], 0, 10);
         r.insert(&prompt[..8], 4, 11);
         r.insert(&prompt[..12], 8, 12);
-        // park root-first: depth weighting must still evict the leaf
+        assert_eq!(r.node_count(), 1);
+        // park root-first: depth weighting must still evict the tail of
+        // the run first, truncating rather than dropping the node
         r.park(10);
         r.park(11);
         r.park(12);
         assert_eq!(r.cached_len(), 3);
-        assert_eq!(r.evict_victim(), vec![12], "leaf goes first");
+        assert_eq!(r.evict_victim(), vec![12], "deepest sub-ref goes first");
+        assert_eq!(r.node_count(), 1, "losing a trailing page truncates");
+        assert_eq!(r.match_prefix(&prompt).1, 8, "the head keeps matching");
         assert_eq!(r.evict_victim(), vec![11]);
-        assert_eq!(r.evict_victim(), vec![10], "root goes last");
+        assert_eq!(r.evict_victim(), vec![10], "head page goes last");
         assert!(r.evict_victim().is_empty());
         assert_eq!(r.len(), 0);
         assert_eq!(r.node_count(), 0);
@@ -618,7 +907,7 @@ mod tests {
 
     #[test]
     fn evicting_an_interior_page_frees_its_stranded_subtree() {
-        let mut r = idx();
+        let mut r = idx_v1();
         let prompt: Vec<i32> = (0..8).collect();
         r.insert(&prompt[..4], 0, 10);
         r.insert(&prompt[..8], 4, 11);
@@ -640,10 +929,34 @@ mod tests {
     }
 
     #[test]
-    fn reuse_outweighs_depth() {
+    fn losing_the_leading_page_of_a_run_drops_the_whole_node() {
         let mut r = idx();
-        // two independent roots at different depths... same depth here,
-        // so build one shallow cold page and one deep hot page
+        let prompt: Vec<i32> = (0..8).collect();
+        r.insert(&prompt[..4], 0, 10);
+        r.insert(&prompt[..8], 4, 11);
+        assert_eq!(r.node_count(), 1);
+        r.credit_page(11);
+        r.credit_page(11);
+        r.credit_page(11);
+        r.credit_page(11);
+        r.park(10);
+        r.park(11);
+        // page 10 backs the run's head: its sub-ref scores at depth 0
+        // with the node-wide reuse, so park order decides via the
+        // snapshot scores — page 10 parked at (5/1), page 11 at (5/2),
+        // so the *tail* evicts first here; evicting the head page then
+        // drops the node and strands nothing
+        assert_eq!(r.evict_victim(), vec![11]);
+        assert_eq!(r.node_count(), 1);
+        assert_eq!(r.evict_victim(), vec![10]);
+        assert_eq!(r.node_count(), 0);
+        assert_eq!(r.len(), 0);
+    }
+
+    #[test]
+    fn reuse_outweighs_depth() {
+        let mut r = idx_v1();
+        // one shallow cold page and one deep hot page
         let a: Vec<i32> = (0..4).collect();
         let b: Vec<i32> = (100..112).collect();
         r.insert(&a, 0, 10); // depth 0, cold
@@ -677,6 +990,26 @@ mod tests {
     }
 
     #[test]
+    fn sibling_eviction_merges_across_pages() {
+        let mut r = idx();
+        let a: Vec<i32> = (0..8).collect();
+        let mut b = a.clone();
+        b[4] = 99;
+        r.insert(&a[..4], 0, 10);
+        r.insert(&a[..8], 4, 11); // extends: one node, pages [10, 11]
+        r.insert(&b[..8], 4, 20); // page-aligned fork: child under the run
+        assert_eq!(r.node_count(), 3, "fork splits the run at the page boundary");
+        r.park(20);
+        assert_eq!(r.evict_victim(), vec![20]);
+        // the page-aligned halves merge back into one run-length node
+        assert_eq!(r.node_count(), 1);
+        let (segs, matched) = r.match_prefix(&a);
+        assert_eq!(matched, 8);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(r.page_run(11), Some((4, a[4..8].to_vec(), a[..4].to_vec())));
+    }
+
+    #[test]
     fn unpark_protects_and_park_rescores() {
         let mut r = idx();
         let a: Vec<i32> = (0..4).collect();
@@ -698,7 +1031,8 @@ mod tests {
         let prompt: Vec<i32> = (0..10).collect();
         r.insert(&prompt[..4], 0, 10);
         r.insert(&prompt[..8], 4, 11);
-        r.insert(&prompt[..10], 8, 12); // partial tail run
+        r.insert(&prompt[..10], 8, 12); // partial tail run, same node
+        assert_eq!(r.node_count(), 1);
         assert_eq!(r.page_run(10), Some((0, prompt[..4].to_vec(), vec![])));
         assert_eq!(
             r.page_run(11),
@@ -717,6 +1051,21 @@ mod tests {
     }
 
     #[test]
+    fn page_run_reports_a_mid_page_split_point() {
+        // a run starting mid-page (slot 3) must round-trip through
+        // page_run so the store can persist it as a sub-run record
+        let mut r = idx();
+        let a: Vec<i32> = vec![1, 2, 3, 4, 10, 11, 12, 13];
+        let mut b = a.clone();
+        b[7] = 99;
+        r.insert(&a[..4], 0, 50);
+        r.insert(&a[..8], 4, 51);
+        r.insert(&b[..8], 7, 60); // CoW tail for the divergent prompt
+        // page 60 covers positions [7, 8) — a sub-run starting at slot 3
+        assert_eq!(r.page_run(60), Some((7, b[7..8].to_vec(), b[..7].to_vec())));
+    }
+
+    #[test]
     fn mid_page_divergence_segments_share_the_page() {
         // the 15-of-16 case from the module docs, at tp = 4: prompts
         // sharing 3 of 4 tail tokens must come back as one shared
@@ -731,5 +1080,60 @@ mod tests {
         assert_eq!(matched, 7, "LCP ends at the divergence token");
         assert_eq!(segs.len(), 2);
         assert_eq!(segs[1], Seg { page: 51, slot0: 0, len: 3, start: 4 });
+    }
+
+    #[test]
+    fn repoint_span_switches_fragmented_coverage_to_one_page() {
+        let mut r = idx();
+        let a: Vec<i32> = vec![1, 2, 3, 4, 10, 11, 12, 13];
+        let mut b = a.clone();
+        b[7] = 99;
+        r.insert(&a[..4], 0, 50);
+        r.insert(&a[..8], 4, 51);
+        r.insert(&b[..8], 7, 60); // b's page 1 is split across 51 + 60
+        let (segs, _) = r.match_prefix(&b);
+        assert_eq!(segs.len(), 3, "fragmented span before repoint");
+        // the manager assembled page 70 = slots 0..3 of 51 + slot 3 of 60
+        let stranded = r.repoint_span(&b, 4, 70);
+        assert!(stranded.is_empty(), "51 and 60 keep other references");
+        let (segs, matched) = r.match_prefix(&b);
+        assert_eq!(matched, 8);
+        assert_eq!(
+            &segs[1..],
+            &[Seg { page: 70, slot0: 0, len: 3, start: 4 }, Seg { page: 70, slot0: 3, len: 1, start: 7 }],
+            "the whole span now sits on the assembled page"
+        );
+        // a's walk is also served by 70 for the shared [4,7) piece —
+        // byte-identical by construction — while its tail stays on 51
+        let (segs, matched) = r.match_prefix(&a);
+        assert_eq!(matched, 8);
+        assert_eq!(segs[1].page, 70);
+        assert_eq!(segs[2], Seg { page: 51, slot0: 3, len: 1, start: 7 });
+        assert!(r.is_referenced(51), "51 still backs a's tail slot");
+        // repointing a's span too drops 51's last reference; it was
+        // never parked, so nothing is stranded
+        let stranded = r.repoint_span(&a, 4, 71);
+        assert_eq!(stranded, Vec::<PageId>::new());
+        assert!(!r.is_referenced(51));
+    }
+
+    #[test]
+    fn repoint_span_refuses_partial_coverage_and_frees_stranded_pages() {
+        let mut r = idx();
+        let a: Vec<i32> = (0..8).collect();
+        r.insert(&a[..4], 0, 10);
+        r.insert(&a[..6], 4, 11);
+        // span [4, 8) is only covered up to 6 → refuse
+        assert!(r.repoint_span(&a, 4, 70).is_empty());
+        let (segs, _) = r.match_prefix(&a[..6]);
+        assert_eq!(segs[1].page, 11, "no mutation on refusal");
+        // cover the span fully, park 11, then repoint: 11 is stranded
+        assert!(r.insert(&a[..8], 6, 12));
+        r.park(11);
+        let stranded = r.repoint_span(&a, 4, 70);
+        assert_eq!(stranded, vec![11], "parked page with no refs left is freed");
+        assert!(!r.is_referenced(11));
+        assert!(r.is_referenced(70));
+        assert_eq!(r.cached_len(), 0);
     }
 }

@@ -6,17 +6,29 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  b"IQPG"
-//!      4     2  version (= 1, little-endian)
-//!      6     2  flags   (bit 0: parent key present)
+//!      4     2  version (= 2, little-endian; 1 still readable)
+//!      6     2  flags   (bit 0: parent key present, bit 1: sub-run ext)
 //!      8     8  key         (PrefixKey)
 //!     16     8  parent      (0 when flags bit 0 is clear)
 //!     24     8  fingerprint (Stage1Config fingerprint ⊕ page geometry)
 //!     32     4  n_tokens    (token ids covered by this page)
 //!     36     4  page_len    (bytes of page payload)
-//!     40     4  crc32       (IEEE, over bytes [4..40) ++ tokens ++ page)
-//!     44     …  tokens      (n_tokens × i32, little-endian)
+//!     40     4  crc32       (IEEE, over bytes [4..40) ++ ext ++ tokens ++ page)
+//!     44     8  ext: start_slot u32, score u32   (only when flags bit 1)
+//!      …     …  tokens      (n_tokens × i32, little-endian)
 //!      …     …  page bytes  (page_len)
 //! ```
+//!
+//! The version-2 **sub-run extension** records where inside the page
+//! the covered run begins (`start_slot` — a run published at a radix
+//! split point starts mid-page, so a warm boot would otherwise lose
+//! that partial-page coverage) and the `(reuse + 1) / (depth + 1)`
+//! retention score the page held when it was spilled, in
+//! `SCORE_SCALE` fixed point (the segment compactor ranks live records
+//! by it).  Version-1 records parse as `start_slot = 0, score = 0` —
+//! page-aligned, compacted only above a zero threshold — so stores
+//! written before the extension stay readable; a version this reader
+//! does not know is corruption, never a guess.
 //!
 //! The trust model mirrors the in-RAM [`super::super::prefix::PrefixIndex`]:
 //! a key alone is never believed.  A record is only served when the
@@ -47,9 +59,15 @@ use std::io::Read;
 use super::super::page::PrefixKey;
 
 pub const MAGIC: [u8; 4] = *b"IQPG";
-pub const VERSION: u16 = 1;
+/// Newest format this writer emits (and the newest this reader knows).
+pub const VERSION: u16 = 2;
+/// The pre-sub-run format; still fully readable.
+pub const VERSION_V1: u16 = 1;
 pub const HEADER_LEN: usize = 44;
+/// Bytes of the version-2 sub-run extension (`start_slot` + `score`).
+pub const EXT_LEN: usize = 8;
 const FLAG_HAS_PARENT: u16 = 1;
+const FLAG_HAS_EXT: u16 = 2;
 
 /// Upper bounds used only to reject absurd length fields before any
 /// allocation happens (a corrupt header must not OOM the scan).
@@ -64,21 +82,80 @@ pub struct Record {
     pub fingerprint: u64,
     pub tokens: Vec<i32>,
     pub page: Vec<u8>,
+    /// slot inside the page where the covered run begins (version-2
+    /// sub-run extension; 0 for version-1 records)
+    pub start_slot: u32,
+    /// retention score at spill time, `SCORE_SCALE` fixed point
+    /// (version-2 sub-run extension; 0 for version-1 records)
+    pub score: u32,
+    /// whether the serialized form carried the sub-run extension
+    /// (length accounting for mixed-version segment scans)
+    pub has_ext: bool,
 }
 
 impl Record {
     /// Total serialized size of this record.
     pub fn encoded_len(&self) -> usize {
-        record_len(self.tokens.len(), self.page.len())
+        let ext = if self.has_ext { EXT_LEN } else { 0 };
+        HEADER_LEN + ext + self.tokens.len() * 4 + self.page.len()
     }
 }
 
+/// Serialized size of a freshly written (version-2, extension-bearing)
+/// record.
 pub fn record_len(n_tokens: usize, page_len: usize) -> usize {
-    HEADER_LEN + n_tokens * 4 + page_len
+    HEADER_LEN + EXT_LEN + n_tokens * 4 + page_len
 }
 
-/// Serialize a record, appending to `out`.
+/// Serialize a record, appending to `out`.  Always writes the newest
+/// format (version 2 with the sub-run extension).
+#[allow(clippy::too_many_arguments)]
 pub fn encode_record(
+    out: &mut Vec<u8>,
+    key: PrefixKey,
+    parent: Option<PrefixKey>,
+    fingerprint: u64,
+    tokens: &[i32],
+    page: &[u8],
+    start_slot: u32,
+    score: u32,
+) {
+    let mut flags: u16 = FLAG_HAS_EXT;
+    if parent.is_some() {
+        flags |= FLAG_HAS_PARENT;
+    }
+    out.reserve(record_len(tokens.len(), page.len()));
+    out.extend_from_slice(&MAGIC);
+    let body_start = out.len();
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&key.0.to_le_bytes());
+    out.extend_from_slice(&parent.map(|k| k.0).unwrap_or(0).to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(page.len() as u32).to_le_bytes());
+    let mut ext = [0u8; EXT_LEN];
+    ext[0..4].copy_from_slice(&start_slot.to_le_bytes());
+    ext[4..8].copy_from_slice(&score.to_le_bytes());
+    let mut crc = Crc32::new();
+    crc.update(&out[body_start..]);
+    crc.update(&ext);
+    for &t in tokens {
+        crc.update(&(t as u32).to_le_bytes());
+    }
+    crc.update(page);
+    out.extend_from_slice(&crc.finish().to_le_bytes());
+    out.extend_from_slice(&ext);
+    for &t in tokens {
+        out.extend_from_slice(&(t as u32).to_le_bytes());
+    }
+    out.extend_from_slice(page);
+}
+
+/// Serialize a version-1 record (no sub-run extension).  Production
+/// code always writes version 2; this exists so compatibility tests can
+/// build byte-exact old-format stores.
+pub fn encode_record_v1(
     out: &mut Vec<u8>,
     key: PrefixKey,
     parent: Option<PrefixKey>,
@@ -87,10 +164,10 @@ pub fn encode_record(
     page: &[u8],
 ) {
     let flags: u16 = if parent.is_some() { FLAG_HAS_PARENT } else { 0 };
-    out.reserve(record_len(tokens.len(), page.len()));
+    out.reserve(HEADER_LEN + tokens.len() * 4 + page.len());
     out.extend_from_slice(&MAGIC);
     let body_start = out.len();
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&VERSION_V1.to_le_bytes());
     out.extend_from_slice(&flags.to_le_bytes());
     out.extend_from_slice(&key.0.to_le_bytes());
     out.extend_from_slice(&parent.map(|k| k.0).unwrap_or(0).to_le_bytes());
@@ -145,7 +222,8 @@ pub fn read_record(
     if header[0..4] != MAGIC {
         return ReadOutcome::Corrupt("bad magic");
     }
-    if u16::from_le_bytes([header[4], header[5]]) != VERSION {
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION && version != VERSION_V1 {
         return ReadOutcome::Corrupt("unknown version");
     }
     let flags = u16::from_le_bytes([header[6], header[7]]);
@@ -158,6 +236,16 @@ pub fn read_record(
     if n_tokens > MAX_TOKENS || page_len > MAX_PAGE_LEN {
         return ReadOutcome::Corrupt("absurd length field");
     }
+    // the sub-run extension exists only in version 2; a version-1
+    // record claiming it is malformed
+    let has_ext = flags & FLAG_HAS_EXT != 0;
+    if has_ext && version == VERSION_V1 {
+        return ReadOutcome::Corrupt("v1 record with v2 extension flag");
+    }
+    let mut ext = [0u8; EXT_LEN];
+    if has_ext && !matches!(read_exact_or_eof(r, &mut ext), Fill::Full) {
+        return ReadOutcome::Corrupt("truncated extension");
+    }
     let mut tok_bytes = vec![0u8; n_tokens as usize * 4];
     if !matches!(read_exact_or_eof(r, &mut tok_bytes), Fill::Full) {
         return ReadOutcome::Corrupt("truncated token run");
@@ -168,6 +256,9 @@ pub fn read_record(
     }
     let mut crc = Crc32::new();
     crc.update(&header[4..40]);
+    if has_ext {
+        crc.update(&ext);
+    }
     crc.update(&tok_bytes);
     crc.update(&page);
     if crc.finish() != crc_stored {
@@ -178,12 +269,17 @@ pub fn read_record(
         .chunks_exact(4)
         .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as i32)
         .collect();
+    let start_slot = u32::from_le_bytes(ext[0..4].try_into().unwrap());
+    let score = u32::from_le_bytes(ext[4..8].try_into().unwrap());
     let rec = Record {
         key,
         parent,
         fingerprint,
         tokens,
         page,
+        start_slot,
+        score,
+        has_ext,
     };
     if fingerprint != expect_fingerprint || page_len as usize != expect_page_len {
         ReadOutcome::Stale(rec)
@@ -282,6 +378,21 @@ mod tests {
             77,
             &[5, -2, 900_000],
             &[9u8; 64],
+            3,
+            0x0002_8000,
+        );
+        buf
+    }
+
+    fn sample_v1(parent: bool) -> Vec<u8> {
+        let mut buf = Vec::new();
+        encode_record_v1(
+            &mut buf,
+            PrefixKey(0xABCD),
+            parent.then_some(PrefixKey(0x1234)),
+            77,
+            &[5, -2, 900_000],
+            &[9u8; 64],
         );
         buf
     }
@@ -311,12 +422,77 @@ mod tests {
                     assert_eq!(rec.parent, parent.then_some(PrefixKey(0x1234)));
                     assert_eq!(rec.tokens, vec![5, -2, 900_000]);
                     assert_eq!(rec.page, vec![9u8; 64]);
+                    assert_eq!(rec.start_slot, 3);
+                    assert_eq!(rec.score, 0x0002_8000);
+                    assert!(rec.has_ext);
+                    assert_eq!(rec.encoded_len(), buf.len());
                 }
                 other => panic!("expected Ok, got {other:?}"),
             }
             // the stream is fully consumed: next read is a clean EOF
             assert!(matches!(read_record(&mut r, 77, 64), ReadOutcome::Eof));
         }
+    }
+
+    #[test]
+    fn version1_records_stay_readable() {
+        for parent in [false, true] {
+            let buf = sample_v1(parent);
+            assert_eq!(buf.len(), record_len(3, 64) - EXT_LEN);
+            let mut r = &buf[..];
+            match read_record(&mut r, 77, 64) {
+                ReadOutcome::Ok(rec) => {
+                    assert_eq!(rec.key, PrefixKey(0xABCD));
+                    assert_eq!(rec.parent, parent.then_some(PrefixKey(0x1234)));
+                    assert_eq!(rec.tokens, vec![5, -2, 900_000]);
+                    assert_eq!(rec.page, vec![9u8; 64]);
+                    assert_eq!(rec.start_slot, 0, "v1 records are page-aligned");
+                    assert_eq!(rec.score, 0);
+                    assert!(!rec.has_ext);
+                    assert_eq!(rec.encoded_len(), buf.len());
+                }
+                other => panic!("expected Ok, got {other:?}"),
+            }
+            assert!(matches!(read_record(&mut r, 77, 64), ReadOutcome::Eof));
+        }
+    }
+
+    #[test]
+    fn mixed_version_stream_parses_record_by_record() {
+        let mut buf = sample_v1(true);
+        buf.extend_from_slice(&sample(true));
+        let mut r = &buf[..];
+        let first = read_record(&mut r, 77, 64);
+        let second = read_record(&mut r, 77, 64);
+        assert!(matches!(first, ReadOutcome::Ok(ref rec) if !rec.has_ext));
+        assert!(matches!(second, ReadOutcome::Ok(ref rec) if rec.has_ext));
+        assert!(matches!(read_record(&mut r, 77, 64), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn v1_with_ext_flag_is_corrupt() {
+        let mut buf = sample_v1(false);
+        // force the ext flag on and fix the CRC so only the version/flag
+        // contract itself rejects the record
+        buf[6] |= FLAG_HAS_EXT as u8;
+        let mut crc = Crc32::new();
+        crc.update(&buf[4..40]);
+        crc.update(&buf[44..]);
+        buf[40..44].copy_from_slice(&crc.finish().to_le_bytes());
+        assert!(matches!(
+            read_record(&mut &buf[..], 77, 64),
+            ReadOutcome::Corrupt("v1 record with v2 extension flag")
+        ));
+    }
+
+    #[test]
+    fn future_version_is_corrupt() {
+        let mut buf = sample(false);
+        buf[4..6].copy_from_slice(&3u16.to_le_bytes());
+        assert!(matches!(
+            read_record(&mut &buf[..], 77, 64),
+            ReadOutcome::Corrupt("unknown version")
+        ));
     }
 
     #[test]

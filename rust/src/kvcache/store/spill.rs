@@ -37,6 +37,7 @@
 //! store is a cache of recomputable artifacts — losing the last few
 //! records to a crash costs a re-encode, not correctness).
 
+use std::collections::HashSet;
 use std::fs::File;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
@@ -52,6 +53,12 @@ pub(crate) enum Job {
         parent: Option<PrefixKey>,
         tokens: Vec<i32>,
         page: Vec<u8>,
+        /// page slot the record's original node run began at (0 for
+        /// page-aligned runs) — rides the v2 record extension
+        start_slot: u32,
+        /// retention score at spill time (`SCORE_SCALE` fixed point),
+        /// the compactor's rescue criterion
+        score: u32,
     },
     /// fsync the active segment, then ack
     Flush(mpsc::Sender<()>),
@@ -100,10 +107,12 @@ fn worker(
                 parent,
                 tokens,
                 page,
+                start_slot,
+                score,
             } => {
                 append_one(
                     &cfg, &shared, &io, &mut active, &mut next_id, &mut buf, key, parent, &tokens,
-                    &page,
+                    &page, start_slot, score,
                 );
             }
         }
@@ -129,6 +138,8 @@ fn append_one(
     parent: Option<PrefixKey>,
     tokens: &[i32],
     page: &[u8],
+    start_slot: u32,
+    score: u32,
 ) {
     // degraded: the channel may still hold queued jobs — drain them
     // without touching the disk again
@@ -150,7 +161,9 @@ fn append_one(
             let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
             s.stats.spill_retries += 1;
         }
-        match try_append(cfg, shared, io, active, next_id, buf, key, parent, tokens, page) {
+        match try_append(
+            cfg, shared, io, active, next_id, buf, key, parent, tokens, page, start_slot, score,
+        ) {
             Ok(()) => {
                 let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
                 s.consecutive_failures = 0;
@@ -192,6 +205,8 @@ fn try_append(
     parent: Option<PrefixKey>,
     tokens: &[i32],
     page: &[u8],
+    start_slot: u32,
+    score: u32,
 ) -> Result<(), ()> {
     // rotate once the active segment crossed the threshold
     if active.as_ref().is_some_and(|a| a.bytes >= cfg.segment_bytes) {
@@ -212,7 +227,16 @@ fn try_append(
     }
     let a = active.as_mut().unwrap();
     buf.clear();
-    record::encode_record(buf, key, parent, cfg.fingerprint, tokens, page);
+    record::encode_record(
+        buf,
+        key,
+        parent,
+        cfg.fingerprint,
+        tokens,
+        page,
+        start_slot,
+        score,
+    );
     let offset = a.bytes;
     if io.write_all(&mut a.file, buf).is_err() {
         // the segment may now hold a torn record: abandon it so the
@@ -248,16 +272,126 @@ fn try_append(
             len: buf.len() as u64,
             parent,
             tokens: tokens.to_vec(),
+            start_slot,
+            score,
         },
     );
     s.stats.spilled += 1;
+    drop(s);
+    // compaction: before whole segments retire below, rewrite their
+    // directory-live high-score records into the active segment so a
+    // tight budget ages out garbage instead of hot roots
+    if cfg.compact_score_threshold > 0 {
+        compact_pass(cfg, shared, io, active);
+    }
+    let protect = active.as_ref().map(|a| a.id);
+    let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
     // budget: retire whole oldest segments (never the active one);
     // their directory entries age out with them.  Files are unlinked
     // after the lock drops — lookups racing the unlink read as misses
-    let (retired, _) = s.retire_over_budget(cfg.budget_bytes, Some(id));
+    let (retired, _) = s.retire_over_budget(cfg.budget_bytes, protect);
     drop(s);
     for old in retired {
         let _ = std::fs::remove_file(segment_path(&cfg.dir, old));
     }
     Ok(())
+}
+
+/// One compaction pass, run on the spill thread right before budget
+/// retirement.  Previews which whole segments
+/// [`Shared::retire_over_budget`] is about to drop, and rewrites their
+/// directory-live records whose retention score clears
+/// `StoreConfig::compact_score_threshold` into the active segment —
+/// highest score first, verbatim bytes (the embedded CRC and identity
+/// ride along, so a rescued record is exactly as verified as a fresh
+/// one), at most `compact_max_bytes_per_pass` bytes per pass.  All I/O
+/// goes through the [`SegmentIo`] transport, so fault injection covers
+/// the rescue reads and writes too: a failed read skips that record
+/// (it ages out as if compaction were off), a failed write abandons
+/// the active segment exactly like a failed spill append (the torn
+/// tail is never extended).
+fn compact_pass(
+    cfg: &StoreConfig,
+    shared: &Arc<Mutex<Shared>>,
+    io: &Arc<dyn SegmentIo>,
+    active: &mut Option<ActiveSegment>,
+) {
+    // under the lock: preview the doomed segments and collect their
+    // rescue-worthy records; all I/O happens after the lock drops
+    let mut victims: Vec<(PrefixKey, u64, u64, u64, u32)> = {
+        let s = shared.lock().unwrap_or_else(|e| e.into_inner());
+        let doomed: HashSet<u64> = s
+            .would_retire(cfg.budget_bytes, active.as_ref().map(|a| a.id))
+            .into_iter()
+            .collect();
+        if doomed.is_empty() {
+            return;
+        }
+        s.dir
+            .iter()
+            .filter(|(_, e)| {
+                doomed.contains(&e.segment) && e.score >= cfg.compact_score_threshold
+            })
+            .map(|(k, e)| (*k, e.segment, e.offset, e.len, e.score))
+            .collect()
+    };
+    if victims.is_empty() {
+        return;
+    }
+    // hottest first, so the per-pass byte budget saves the records the
+    // retention policy values most; segment order breaks ties to keep
+    // source reads clustered
+    victims.sort_by(|x, y| y.4.cmp(&x.4).then(x.1.cmp(&y.1)));
+    let mut budget = cfg.compact_max_bytes_per_pass;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut src: Option<(u64, File)> = None;
+    let mut rescued_from: HashSet<u64> = HashSet::new();
+    for (key, seg, offset, len, _score) in victims {
+        if len > budget {
+            continue;
+        }
+        let Some(a) = active.as_mut() else { return };
+        if src.as_ref().map(|(id, _)| *id) != Some(seg) {
+            src = match io.open_read(&segment_path(&cfg.dir, seg)) {
+                Ok(f) => Some((seg, f)),
+                Err(_) => None,
+            };
+        }
+        let Some((_, f)) = src.as_mut() else { continue };
+        buf.clear();
+        buf.resize(len as usize, 0);
+        if io.read_exact_at(f, offset, &mut buf).is_err() {
+            continue;
+        }
+        let new_offset = a.bytes;
+        if io.write_all(&mut a.file, &buf).is_err() {
+            // same poisoning discipline as a failed spill append: the
+            // active segment may hold a torn record now, so abandon it
+            // at its real on-disk size and let the next append start a
+            // fresh one
+            let id = a.id;
+            let bytes = a.file.metadata().map(|m| m.len()).unwrap_or(a.bytes);
+            *active = None;
+            let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+            s.segments.insert(id, bytes);
+            return;
+        }
+        a.bytes += len;
+        budget -= len;
+        let (aid, abytes) = (a.id, a.bytes);
+        let mut s = shared.lock().unwrap_or_else(|e| e.into_inner());
+        s.segments.insert(aid, abytes);
+        // re-point the directory only if it still references the copy
+        // we just rescued (a racing failed read may have dropped it)
+        if let Some(e) = s.dir.get_mut(&key) {
+            if e.segment == seg && e.offset == offset {
+                e.segment = aid;
+                e.offset = new_offset;
+                s.stats.records_compacted += 1;
+                if rescued_from.insert(seg) {
+                    s.stats.segments_compacted += 1;
+                }
+            }
+        }
+    }
 }

@@ -193,6 +193,16 @@ pub struct ShareStats {
     /// (persistence disabled after repeated I/O failures; serving
     /// continues without it)
     pub store_degraded: u64,
+    /// store records the segment compactor rewrote into the active
+    /// segment before their old segment retired (mirrored from
+    /// `StoreStats::records_compacted`)
+    pub records_compacted: u64,
+    /// segments that had at least one live record rescued before
+    /// retirement (mirrored from `StoreStats::segments_compacted`)
+    pub segments_compacted: u64,
+    /// promoted store records whose original node run began mid-page
+    /// (a persisted radix split point) — coverage a v1 warm boot lost
+    pub subrun_promotions: u64,
 }
 
 /// The single field table for [`ShareStats`]: `plain` fields are
@@ -221,6 +231,9 @@ macro_rules! for_each_share_stat {
             plain requests_timed_out,
             plain requests_shed,
             plain store_degraded,
+            plain records_compacted,
+            plain segments_compacted,
+            plain subrun_promotions,
         }
     };
 }
@@ -288,7 +301,9 @@ impl ShareStats {
                         s.push_str(" STORE-DEGRADED");
                     }
                 }
-                "requests_cancelled" | "requests_timed_out" | "requests_shed" if v == 0 => {}
+                "requests_cancelled" | "requests_timed_out" | "requests_shed"
+                | "records_compacted" | "segments_compacted" | "subrun_promotions"
+                    if v == 0 => {}
                 _ => {
                     if !s.is_empty() {
                         s.push(' ');

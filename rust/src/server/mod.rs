@@ -582,7 +582,16 @@ pub fn serve_on(
         // queueing so the window can still group them into one wave
         let idle = engine.free_lanes().saturating_sub(engine.pending());
         if idle > 0 && batcher.pending() > 0 {
-            for r in batcher.take_up_to(idle) {
+            // under pool pressure, admit the requests that re-use the
+            // deepest cached prefixes first — they cost the fewest
+            // fresh pages and keep hot stems from being evicted for
+            // cold prompts; otherwise plain FIFO
+            let batch = if engine.cache_pressure() {
+                batcher.take_up_to_by_lcp(idle, |p| engine.cached_lcp(p))
+            } else {
+                batcher.take_up_to(idle)
+            };
+            for r in batch {
                 engine.submit(r);
             }
         }

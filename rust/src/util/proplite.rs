@@ -1,5 +1,6 @@
-//! proptest-lite: a tiny property-based testing harness (proptest is not
-//! vendorable offline).
+//! proptest-lite: a tiny property-based testing harness with
+//! Hypothesis-style *integrated shrinking* (proptest is not vendorable
+//! offline).
 //!
 //! Usage:
 //! ```ignore
@@ -10,61 +11,294 @@
 //!     Ok(())
 //! });
 //! ```
-//! On failure the case index and seed are printed so the exact draw can
-//! be replayed deterministically.
+//!
+//! Every tracked draw (`usize_in`, `bool`, `f32_in`, `vec_f32`,
+//! `choose`) is recorded on a *tape* of reduced values, where 0 is the
+//! minimal draw (range low, `false`, first element, 0.0).  On the first
+//! counterexample the harness greedily minimizes the tape — deleting
+//! chunks of draws, zeroing chunks, and binary-searching individual
+//! scalars toward 0 — re-running the property after each mutation and
+//! keeping any strictly simpler tape that still fails.  The panic then
+//! reports the *minimal* failure: the replay seed plus a short forced
+//! tape instead of case 173 of a 200-case run.
+//!
+//! Forcing never desynchronizes untracked draws: tracked draws advance
+//! the underlying RNG exactly as if unforced and only override the
+//! result, so code reaching into `g.rng` directly sees the same stream
+//! under replay (those draws just aren't shrinkable).
 
 use crate::util::prng::Rng;
+
+/// Shrink-attempt budget per counterexample.  Bounds worst-case shrink
+/// time; the greedy passes normally converge far earlier.
+const SHRINK_ATTEMPTS: usize = 2000;
+
+/// Fixed-point scale for `f32_in` fractions on the tape.
+const FRAC_SCALE: f64 = u32::MAX as f64;
 
 /// Generator handed to each property case.
 pub struct Gen {
     pub rng: Rng,
     pub case: usize,
+    /// reduced values recorded for every tracked draw this run
+    tape: Vec<u64>,
+    /// tape prefix to force instead of the natural draws (shrinking /
+    /// replay); draws past its end fall back to the natural values
+    forced: Vec<u64>,
+    cursor: usize,
 }
 
 impl Gen {
+    fn new(case_seed: u64, case: usize, forced: Vec<u64>) -> Gen {
+        Gen {
+            rng: Rng::new(case_seed),
+            case,
+            tape: Vec::new(),
+            forced,
+            cursor: 0,
+        }
+    }
+
+    /// Record one tracked draw: take the forced value if the tape
+    /// prefix still covers this position (clamped into `0..=max` so
+    /// cross-draw remapping after a chunk deletion stays in range),
+    /// else the natural one.
+    fn draw(&mut self, natural: u64, max: u64) -> u64 {
+        let v = match self.forced.get(self.cursor) {
+            Some(&f) => f.min(max),
+            None => natural,
+        };
+        self.cursor += 1;
+        self.tape.push(v);
+        v
+    }
+
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         debug_assert!(lo <= hi);
-        lo + self.rng.below(hi - lo + 1)
+        let natural = self.rng.below(hi - lo + 1) as u64;
+        lo + self.draw(natural, (hi - lo) as u64) as usize
     }
 
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
-        self.rng.uniform_range(lo as f64, hi as f64) as f32
+        let x = self.rng.uniform_range(lo as f64, hi as f64);
+        let span = (hi - lo) as f64;
+        let frac = if span > 0.0 {
+            ((x - lo as f64) / span).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        let v = self.draw((frac * FRAC_SCALE) as u64, u32::MAX as u64);
+        (lo as f64 + (v as f64 / FRAC_SCALE) * span) as f32
     }
 
     pub fn bool(&mut self) -> bool {
-        self.rng.next_u64() & 1 == 1
+        let natural = self.rng.next_u64() & 1;
+        self.draw(natural, 1) == 1
     }
 
-    /// Gaussian vector with the given scale.
+    /// Gaussian vector with the given scale.  Each element rides the
+    /// tape as its f32 bit pattern, so zeroed chunks shrink to 0.0.
     pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
-        (0..n).map(|_| self.rng.gaussian() as f32 * scale).collect()
+        (0..n)
+            .map(|_| {
+                let natural = (self.rng.gaussian() as f32 * scale).to_bits() as u64;
+                f32::from_bits(self.draw(natural, u32::MAX as u64) as u32)
+            })
+            .collect()
     }
 
-    /// Pick one element from a slice.
+    /// Pick one element from a slice (shrinks toward the first).
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
-        &items[self.rng.below(items.len())]
+        let natural = self.rng.below(items.len()) as u64;
+        &items[self.draw(natural, (items.len() - 1) as u64) as usize]
     }
 }
 
+/// A shrunk counterexample: the per-case replay seed plus the minimal
+/// forced tape that still fails, ready for [`replay`].
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    /// index of the originally failing case
+    pub case: usize,
+    /// that case's derived seed (feed to [`replay`])
+    pub case_seed: u64,
+    /// minimal forced draw tape
+    pub tape: Vec<u64>,
+    /// failure message of the minimal run
+    pub message: String,
+}
+
 /// Run `cases` random cases of `prop`.  Panics (failing the enclosing
-/// `#[test]`) on the first counterexample, printing the replay seed.
-pub fn check<F>(cases: usize, seed: u64, mut prop: F)
+/// `#[test]`) on the first counterexample — after shrinking it —
+/// printing the replay seed and the minimal forced tape.
+pub fn check<F>(cases: usize, seed: u64, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Some(cx) = find_counterexample(cases, seed, prop) {
+        panic!(
+            "property failed at case {case}/{cases} (replay seed {seed:#x}): {msg}\n\
+             minimal repro: proplite::replay({seed:#x}, {case}, &{tape:?}, prop)",
+            case = cx.case,
+            msg = cx.message,
+            seed = cx.case_seed,
+            tape = cx.tape,
+        );
+    }
+}
+
+/// Like [`check`] but returns the shrunk counterexample instead of
+/// panicking — `None` when every case passes.  Lets tests assert *on*
+/// the shrinker (e.g. that a seeded violation minimizes to a handful
+/// of ops) and lets CI harnesses persist the repro as an artifact.
+pub fn find_counterexample<F>(cases: usize, seed: u64, mut prop: F) -> Option<Counterexample>
 where
     F: FnMut(&mut Gen) -> Result<(), String>,
 {
     for case in 0..cases {
         // derive a per-case seed so cases are independent and replayable
         let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        let mut g = Gen {
-            rng: Rng::new(case_seed),
-            case,
-        };
+        let mut g = Gen::new(case_seed, case, Vec::new());
         if let Err(msg) = prop(&mut g) {
-            panic!(
-                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
-            );
+            let tape = std::mem::take(&mut g.tape);
+            let (tape, message) = shrink(case_seed, case, tape, msg, &mut prop);
+            return Some(Counterexample {
+                case,
+                case_seed,
+                tape,
+                message,
+            });
         }
     }
+    None
+}
+
+/// Re-run a property against a recorded tape (from a [`check`] panic or
+/// a [`Counterexample`]).  Returns the property's verdict so a repro
+/// can be asserted in a normal `#[test]`.
+pub fn replay<F>(case_seed: u64, case: usize, tape: &[u64], mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    prop(&mut Gen::new(case_seed, case, tape.to_vec()))
+}
+
+/// Greedy tape minimization: chunk deletion (halving chunk sizes),
+/// chunk zeroing, then per-scalar binary search toward 0, iterated to a
+/// fixpoint under the [`SHRINK_ATTEMPTS`] budget.  Each accepted
+/// mutation adopts the *recorded* tape of the failing re-run (the
+/// canonical form — forcing may have clamped or run short), and
+/// acceptance demands a strictly smaller `(len, lexicographic)` order,
+/// which is well-founded, so the loop terminates even without the
+/// budget.
+fn shrink<F>(
+    case_seed: u64,
+    case: usize,
+    tape: Vec<u64>,
+    message: String,
+    prop: &mut F,
+) -> (Vec<u64>, String)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut best = tape;
+    let mut best_msg = message;
+    let mut attempts = 0usize;
+    // run a candidate tape; Some(recorded tape, msg) iff it still fails
+    let mut run = |cand: &[u64]| -> Option<(Vec<u64>, String)> {
+        if attempts >= SHRINK_ATTEMPTS {
+            return None;
+        }
+        attempts += 1;
+        let mut g = Gen::new(case_seed, case, cand.to_vec());
+        match prop(&mut g) {
+            Err(m) => Some((std::mem::take(&mut g.tape), m)),
+            Ok(()) => None,
+        }
+    };
+    let simpler =
+        |t: &[u64], b: &[u64]| t.len() < b.len() || (t.len() == b.len() && t < b);
+
+    for _round in 0..8 {
+        let mut improved = false;
+
+        // pass 1: delete chunks of draws, large chunks first
+        let mut k = best.len().max(1);
+        while k >= 1 {
+            let mut i = 0;
+            while i + k <= best.len() {
+                let mut cand = best[..i].to_vec();
+                cand.extend_from_slice(&best[i + k..]);
+                match run(&cand) {
+                    Some((t, m)) if simpler(&t, &best) => {
+                        best = t;
+                        best_msg = m;
+                        improved = true;
+                        // re-try the same window against the new best
+                    }
+                    _ => i += k,
+                }
+            }
+            k /= 2;
+        }
+
+        // pass 2: zero chunks (ops become their minimal form without
+        // changing the sequence length)
+        let mut k = best.len().max(1);
+        while k >= 1 {
+            let mut i = 0;
+            while i + k <= best.len() {
+                if best[i..i + k].iter().all(|&v| v == 0) {
+                    i += k;
+                    continue;
+                }
+                let mut cand = best.clone();
+                cand[i..i + k].iter_mut().for_each(|v| *v = 0);
+                match run(&cand) {
+                    Some((t, m)) if simpler(&t, &best) => {
+                        best = t;
+                        best_msg = m;
+                        improved = true;
+                    }
+                    _ => i += k,
+                }
+            }
+            k /= 2;
+        }
+
+        // pass 3: binary-search each scalar toward 0
+        let mut j = 0;
+        while j < best.len() {
+            let (mut lo, mut hi) = (0u64, best[j]);
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                let mut cand = best.clone();
+                cand[j] = mid;
+                match run(&cand) {
+                    Some((t, m)) => {
+                        // the re-run may have recorded a clamped value;
+                        // track the search window on what actually stuck
+                        hi = t.get(j).copied().unwrap_or(mid).min(mid);
+                        if simpler(&t, &best) {
+                            best = t;
+                            best_msg = m;
+                            improved = true;
+                        }
+                        if j >= best.len() {
+                            break;
+                        }
+                    }
+                    None => lo = mid + 1,
+                }
+            }
+            j += 1;
+        }
+
+        if !improved {
+            break;
+        }
+    }
+    (best, best_msg)
 }
 
 /// Assert two slices are elementwise close.
@@ -127,6 +361,78 @@ mod tests {
             Ok(())
         });
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn scalar_shrinks_to_threshold() {
+        // fails iff n >= 90; the minimal counterexample is exactly 90
+        let cx = find_counterexample(100, 2, |g| {
+            let n = g.usize_in(0, 1000);
+            if n < 90 {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        })
+        .expect("property must fail somewhere in 100 cases");
+        assert_eq!(cx.tape, vec![90], "binary search finds the boundary");
+        assert_eq!(cx.message, "n=90");
+    }
+
+    #[test]
+    fn op_sequence_shrinks_to_single_bad_op() {
+        // a random op program fails iff it ever executes op 3; the
+        // shrunk tape should be one op long: [1, 3] = "1 op, op 3"
+        let cx = find_counterexample(100, 7, |g| {
+            let n_ops = g.usize_in(1, 20);
+            for _ in 0..n_ops {
+                let op = g.usize_in(0, 5);
+                if op == 3 {
+                    return Err("op 3 executed".into());
+                }
+            }
+            Ok(())
+        })
+        .expect("op 3 must appear in 100 random programs");
+        assert_eq!(cx.tape, vec![0, 3], "one op (usize_in lo=1 ⇒ reduced 0), op id 3");
+    }
+
+    #[test]
+    fn shrunk_tape_replays_to_the_same_failure() {
+        let prop = |g: &mut Gen| {
+            let a = g.usize_in(0, 50);
+            let b = g.usize_in(0, 50);
+            if a + b >= 60 {
+                Err(format!("{a}+{b}"))
+            } else {
+                Ok(())
+            }
+        };
+        let cx = find_counterexample(200, 11, prop).expect("must fail");
+        let replayed = replay(cx.case_seed, cx.case, &cx.tape, prop);
+        assert_eq!(replayed, Err(cx.message.clone()), "tape is a faithful repro");
+        // and the minimum really is minimal: a+b == 60 with a as small
+        // as the greedy order allows
+        assert_eq!(cx.tape.iter().sum::<u64>(), 60);
+    }
+
+    #[test]
+    fn untracked_rng_draws_survive_forcing() {
+        // direct g.rng access bypasses the tape; forcing tracked draws
+        // must not shift the raw stream
+        let mut raw_unforced = 0u64;
+        let _ = find_counterexample(1, 5, |g| {
+            let _ = g.usize_in(0, 9);
+            raw_unforced = g.rng.next_u64();
+            Ok(())
+        });
+        let mut raw_forced = 0u64;
+        let _ = replay(5, 0, &[7], |g| {
+            let _ = g.usize_in(0, 9);
+            raw_forced = g.rng.next_u64();
+            Ok(())
+        });
+        assert_eq!(raw_unforced, raw_forced);
     }
 
     #[test]

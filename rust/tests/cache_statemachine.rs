@@ -1,0 +1,922 @@
+//! State-machine property suite for the KV cache: random
+//! admit/append/cancel/drop/evict-churn/spill/promote/compact
+//! interleavings drive the flat index, the radix index pinned to its
+//! v1 one-node-per-page shape, and the radix v2 cross-page-run shape
+//! in lockstep against an unshared reference cache.  After every op:
+//!
+//!   * gathers are byte-identical across all four caches,
+//!   * neither radix shape ever holds more pages than the flat index,
+//!   * and on teardown every page ownership returns to zero.
+//!
+//! Cases optionally attach a persistent store per cache (tight budget
+//! plus segment compaction on half of those) and end with a
+//! persist → kill → reboot transition: the managers are dropped with
+//! sequences still live (a crash, not a drain), fresh managers warm
+//! boot from the same directories, and re-admissions must stay
+//! byte-identical whatever coverage survived.
+//!
+//! The proplite harness shrinks any failure to a minimal forced tape;
+//! `seeded_violation_shrinks_to_tiny_repro` pins that machinery by
+//! planting a wrong invariant and asserting the repro collapses to a
+//! handful of ops.  CI elevates case counts via `ISOQUANT_SM_CASES`.
+
+use std::path::{Path, PathBuf};
+
+use isoquant::kvcache::prefix::SCORE_SCALE;
+use isoquant::kvcache::store::record::encode_record;
+use isoquant::kvcache::store::record_len;
+use isoquant::kvcache::{
+    chain_key, CacheManager, GatherWorkspace, PageConfig, PageStore, PrefixIndexKind, StoreConfig,
+};
+use isoquant::quant::{Stage1, Stage1Config, Variant};
+use isoquant::util::prng::Rng;
+use isoquant::util::proplite::{check, find_counterexample, replay, Gen};
+
+/// CI raises this via the `ISOQUANT_SM_CASES` env var (the
+/// cache-statemachine leg runs 500+); local runs stay quick.
+fn case_count(default: usize) -> usize {
+    std::env::var("ISOQUANT_SM_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[derive(Clone, Copy)]
+struct Geometry {
+    cfg: PageConfig,
+    bits: u8,
+}
+
+fn geometry(g: &mut Gen) -> Geometry {
+    let dh = 4 * g.usize_in(4, 8); // 16..32, multiple of 4
+    let bits = g.usize_in(2, 4) as u8;
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, dh, bits));
+    Geometry {
+        cfg: PageConfig {
+            tokens_per_page: g.usize_in(2, 5),
+            n_layers: g.usize_in(1, 2),
+            n_heads: 1,
+            d_head: dh,
+            encoded_len: stage1.encoded_len(),
+        },
+        bits,
+    }
+}
+
+fn mk_cache(geo: &Geometry, max_pages: usize, sharing: bool, kind: PrefixIndexKind) -> CacheManager {
+    let stage1 = Stage1::new(Stage1Config::new(Variant::IsoFull, geo.cfg.d_head, geo.bits));
+    let mut m = CacheManager::new(stage1, geo.cfg, max_pages);
+    m.prefix_sharing = sharing;
+    m.index_kind = kind;
+    m
+}
+
+/// Deterministic K/V for the token at position `t` of `stream`: seeded
+/// by the chained hash of `stream[..=t]`, so equal prefixes produce
+/// equal vectors — the property that makes prefixes shareable and a
+/// slot copy byte-identical to a re-encode.
+fn kv_at(stream: &[i32], t: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let seed = chain_key(None, &stream[..=t], 0xBEEF).0;
+    let mut rng = Rng::new(seed);
+    let n = cfg.n_layers * cfg.n_heads * cfg.d_head;
+    (rng.gaussian_vec_f32(n), rng.gaussian_vec_f32(n))
+}
+
+fn kv_run(stream: &[i32], from: usize, to: usize, cfg: &PageConfig) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for t in from..to {
+        let (tk, tv) = kv_at(stream, t, cfg);
+        k.extend_from_slice(&tk);
+        v.extend_from_slice(&tv);
+    }
+    (k, v)
+}
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Gather `seq` from all four caches (batched path on radix-v2, the
+/// per-vector oracle everywhere) and demand bit-identical results.
+fn verify_seq(
+    flat: &CacheManager,
+    v1: &CacheManager,
+    v2: &CacheManager,
+    unshared: &CacheManager,
+    seq: u64,
+    len: usize,
+    cfg: &PageConfig,
+    ws: &mut GatherWorkspace,
+) -> Result<(), String> {
+    let t_max = len.max(1) + 2;
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut kb, mut vb) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    let (mut ku, mut vu) = (vec![9.0f32; sz], vec![9.0f32; sz]);
+    let nb = v2
+        .gather_ws(seq, t_max, &mut kb, &mut vb, ws)
+        .map_err(|e| e.to_string())?;
+    let nu = unshared
+        .gather_reference(seq, t_max, &mut ku, &mut vu)
+        .map_err(|e| e.to_string())?;
+    if nb != len || nu != len {
+        return Err(format!("seq {seq}: gather lengths {nb}/{nu} != {len}"));
+    }
+    let (ku, vu) = (bits_of(&ku), bits_of(&vu));
+    if bits_of(&kb) != ku || bits_of(&vb) != vu {
+        return Err(format!("seq {seq}: v2 batched gather != unshared reference"));
+    }
+    for (name, m) in [("v2", v2), ("v1", v1), ("flat", flat)] {
+        let (mut k, mut v) = (vec![1.0f32; sz], vec![1.0f32; sz]);
+        let n = m
+            .gather_reference(seq, t_max, &mut k, &mut v)
+            .map_err(|e| e.to_string())?;
+        if n != len {
+            return Err(format!("seq {seq}: {name} gathered {n} != {len}"));
+        }
+        if bits_of(&k) != ku || bits_of(&v) != vu {
+            return Err(format!("seq {seq}: {name} gather != unshared reference"));
+        }
+    }
+    Ok(())
+}
+
+fn store_dir(tag: &str, case: usize, which: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "isoquant-sm-{}-{tag}-{case}-{which}",
+        std::process::id()
+    ))
+}
+
+fn attach(m: &mut CacheManager, dir: &Path, budget: u64, compact: bool, seg_bytes: u64) {
+    let mut sc = StoreConfig::for_cache(
+        dir.to_path_buf(),
+        m.fingerprint(),
+        m.page_cfg().page_bytes(),
+        budget,
+    );
+    if compact {
+        // fractional score 2.0: rescue records whose prefixes were
+        // adopted at least once, age out one-shot cold prompts
+        sc = sc.with_compaction(2 * SCORE_SCALE as u32, 1 << 20);
+        sc.segment_bytes = seg_bytes;
+    }
+    m.attach_store(PageStore::open(sc).unwrap());
+}
+
+/// The four caches driven in lockstep plus the shared op state.
+struct Fleet {
+    geo: Geometry,
+    pool: usize,
+    flat: CacheManager,
+    v1: CacheManager,
+    v2: CacheManager,
+    unshared: CacheManager,
+    live: Vec<(u64, Vec<i32>)>,
+    bases: Vec<Vec<i32>>,
+    next_seq: u64,
+    next_tok: i32,
+    dirs: Option<[PathBuf; 3]>,
+    budget: u64,
+    compact: bool,
+    ws: GatherWorkspace,
+}
+
+impl Fleet {
+    fn new(
+        geo: Geometry,
+        pool: usize,
+        persist: bool,
+        compact: bool,
+        tag: &str,
+        case: usize,
+        bases: Vec<Vec<i32>>,
+    ) -> Fleet {
+        let flat = mk_cache(&geo, pool, true, PrefixIndexKind::Flat);
+        let mut v1 = mk_cache(&geo, pool, true, PrefixIndexKind::Radix);
+        v1.set_radix_max_run_pages(1);
+        let v2 = mk_cache(&geo, pool, true, PrefixIndexKind::Radix);
+        let unshared = mk_cache(&geo, 16_384, false, PrefixIndexKind::Flat);
+        let rec = record_len(geo.cfg.tokens_per_page, geo.cfg.page_bytes()) as u64;
+        let mut fleet = Fleet {
+            geo,
+            pool,
+            flat,
+            v1,
+            v2,
+            unshared,
+            live: Vec::new(),
+            bases,
+            next_seq: 0,
+            next_tok: 500_000,
+            dirs: None,
+            // compaction cases keep the budget tight enough that
+            // segments really retire mid-run
+            budget: if compact { 6 * rec } else { 0 },
+            compact,
+            ws: GatherWorkspace::new(),
+        };
+        if persist {
+            let budget = fleet.budget;
+            let dirs = [
+                store_dir(tag, case, "flat"),
+                store_dir(tag, case, "v1"),
+                store_dir(tag, case, "v2"),
+            ];
+            for (m, d) in [&mut fleet.flat, &mut fleet.v1, &mut fleet.v2]
+                .into_iter()
+                .zip(&dirs)
+            {
+                let _ = std::fs::remove_dir_all(d);
+                attach(m, d, budget, compact, 2 * rec);
+            }
+            fleet.dirs = Some(dirs);
+        }
+        fleet
+    }
+
+    fn shared(&mut self) -> [&mut CacheManager; 3] {
+        [&mut self.flat, &mut self.v1, &mut self.v2]
+    }
+
+    /// Admit a (sometimes twisted) prefix of a base prompt into every
+    /// cache; a no-op unless all three shared caches accept, so the
+    /// page comparison always tracks identical loads.
+    fn admit(&mut self, g: &mut Gen) -> Result<(), String> {
+        let base = g.choose(&self.bases).clone();
+        let plen = g.usize_in(1, base.len());
+        let mut prompt = base[..plen].to_vec();
+        if g.bool() && g.bool() {
+            let i = g.usize_in(0, plen - 1);
+            prompt[i] = self.next_tok;
+            self.next_tok += 1;
+        }
+        self.admit_stream(prompt)
+    }
+
+    fn admit_stream(&mut self, prompt: Vec<i32>) -> Result<(), String> {
+        if self
+            .shared()
+            .iter()
+            .any(|m| !m.can_admit_prompt(&prompt, prompt.len()))
+        {
+            return Ok(());
+        }
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        let cfg = self.geo.cfg;
+        for m in self.shared() {
+            let reuse = m
+                .start_seq_with_prompt(seq, &prompt)
+                .map_err(|e| e.to_string())?;
+            if reuse.tokens > prompt.len() {
+                return Err(format!("reuse {} > prompt {}", reuse.tokens, prompt.len()));
+            }
+            let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+            m.append_run(seq, &k, &v, prompt.len() - reuse.tokens)
+                .map_err(|e| format!("admitted but append failed: {e}"))?;
+        }
+        self.unshared.start_seq(seq).map_err(|e| e.to_string())?;
+        let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+        self.unshared
+            .append_run(seq, &k, &v, prompt.len())
+            .map_err(|e| e.to_string())?;
+        self.live.push((seq, prompt));
+        Ok(())
+    }
+
+    /// One decode token on a random live sequence.  Gated on the flat
+    /// cache: radix never holds more pages, so whatever flat fits, the
+    /// radix shapes must fit too.
+    fn append(&mut self, g: &mut Gen) -> Result<(), String> {
+        if self.live.is_empty() {
+            return Ok(());
+        }
+        let i = g.usize_in(0, self.live.len() - 1);
+        let tok = self.next_tok;
+        self.next_tok += 1;
+        let cfg = self.geo.cfg;
+        let (seq, stream) = &mut self.live[i];
+        let seq = *seq;
+        stream.push(tok);
+        let (k, v) = kv_at(stream, stream.len() - 1, &cfg);
+        if self.flat.append_token(seq, &k, &v).is_err() {
+            self.live[i].1.pop(); // pool exhausted: keep streams aligned
+            return Ok(());
+        }
+        for (name, m) in [("v1", &mut self.v1), ("v2", &mut self.v2)] {
+            m.append_token(seq, &k, &v)
+                .map_err(|e| format!("{name} append failed where flat succeeded: {e}"))?;
+        }
+        self.unshared
+            .append_token(seq, &k, &v)
+            .map_err(|e| e.to_string())
+    }
+
+    fn drop_one(&mut self, g: &mut Gen) {
+        if self.live.is_empty() {
+            return;
+        }
+        let i = g.usize_in(0, self.live.len() - 1);
+        let (seq, _) = self.live.swap_remove(i);
+        for m in self.shared() {
+            m.drop_seq(seq);
+        }
+        self.unshared.drop_seq(seq);
+    }
+
+    /// Client cancellation mid-prompt: admit, encode only half of the
+    /// uncovered remainder, then tear down immediately — half-built
+    /// CoW tails must release cleanly everywhere.
+    fn cancel(&mut self, g: &mut Gen) -> Result<(), String> {
+        let base = g.choose(&self.bases).clone();
+        let plen = g.usize_in(1, base.len());
+        let prompt = base[..plen].to_vec();
+        if self
+            .shared()
+            .iter()
+            .any(|m| !m.can_admit_prompt(&prompt, prompt.len()))
+        {
+            return Ok(());
+        }
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        let cfg = self.geo.cfg;
+        for m in self.shared() {
+            let reuse = m
+                .start_seq_with_prompt(seq, &prompt)
+                .map_err(|e| e.to_string())?;
+            let half = reuse.tokens + (prompt.len() - reuse.tokens) / 2;
+            let (k, v) = kv_run(&prompt, reuse.tokens, half, &cfg);
+            m.append_run(seq, &k, &v, half - reuse.tokens)
+                .map_err(|e| e.to_string())?;
+            m.drop_seq(seq);
+        }
+        Ok(())
+    }
+
+    /// Spill barrier: every park enqueued so far becomes durable (and,
+    /// with compaction configured, the compactor has run).
+    fn flush(&mut self) {
+        for m in self.shared() {
+            m.flush_store();
+        }
+    }
+
+    /// Park → spill → promote cycle: drop a sequence, drain the spill
+    /// queue, then re-admit the same stream as a new sequence — the
+    /// warm path must reassemble it from resident or cold pages.
+    fn promote_cycle(&mut self, g: &mut Gen) -> Result<(), String> {
+        if self.live.is_empty() {
+            return Ok(());
+        }
+        let i = g.usize_in(0, self.live.len() - 1);
+        let (seq, stream) = self.live.swap_remove(i);
+        for m in self.shared() {
+            m.drop_seq(seq);
+        }
+        self.unshared.drop_seq(seq);
+        self.flush();
+        self.admit_stream(stream)
+    }
+
+    /// Eviction churn: a cold one-page prompt admitted and dropped in
+    /// one op — pressure that forces parked pages out of the pool.
+    fn churn(&mut self) -> Result<(), String> {
+        let tp = self.geo.cfg.tokens_per_page;
+        let prompt: Vec<i32> = (0..tp as i32).map(|i| self.next_tok + i).collect();
+        self.next_tok += tp as i32;
+        if self
+            .shared()
+            .iter()
+            .any(|m| !m.can_admit_prompt(&prompt, prompt.len()))
+        {
+            return Ok(());
+        }
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        let cfg = self.geo.cfg;
+        for m in self.shared() {
+            let reuse = m
+                .start_seq_with_prompt(seq, &prompt)
+                .map_err(|e| e.to_string())?;
+            let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+            m.append_run(seq, &k, &v, prompt.len() - reuse.tokens)
+                .map_err(|e| e.to_string())?;
+            m.drop_seq(seq);
+        }
+        Ok(())
+    }
+
+    /// The sub-page index must never cost pages: identical op sequence,
+    /// identical pool — both radix shapes stay at or below flat.
+    fn check_pages(&self) -> Result<(), String> {
+        for (name, m) in [("radix-v1", &self.v1), ("radix-v2", &self.v2)] {
+            if m.pages_in_use() > self.flat.pages_in_use() {
+                return Err(format!(
+                    "{name} uses {} pages where flat uses {}",
+                    m.pages_in_use(),
+                    self.flat.pages_in_use()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn verify_one(&mut self, g: &mut Gen) -> Result<(), String> {
+        if self.live.is_empty() {
+            return Ok(());
+        }
+        let i = g.usize_in(0, self.live.len() - 1);
+        let (seq, stream) = (self.live[i].0, self.live[i].1.len());
+        let cfg = self.geo.cfg;
+        verify_seq(
+            &self.flat,
+            &self.v1,
+            &self.v2,
+            &self.unshared,
+            seq,
+            stream,
+            &cfg,
+            &mut self.ws,
+        )
+    }
+
+    fn verify_sweep(&mut self) -> Result<(), String> {
+        let cfg = self.geo.cfg;
+        for i in 0..self.live.len() {
+            let (seq, len) = (self.live[i].0, self.live[i].1.len());
+            verify_seq(
+                &self.flat,
+                &self.v1,
+                &self.v2,
+                &self.unshared,
+                seq,
+                len,
+                &cfg,
+                &mut self.ws,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Crash and warm boot: drop every manager with sequences still
+    /// live (no graceful drain — only previously parked pages are on
+    /// disk), rebuild the fleet on the same store directories, and
+    /// re-admit the old streams.  Whatever coverage survived, the
+    /// gathers must stay byte-identical.
+    fn reboot(mut self) -> Result<Fleet, String> {
+        let dirs = match self.dirs.clone() {
+            Some(d) => d,
+            None => return Ok(self),
+        };
+        self.flush();
+        let mut streams: Vec<Vec<i32>> = self.live.drain(..).map(|(_, s)| s).collect();
+        streams.truncate(4);
+        let (geo, pool, budget, compact) = (self.geo, self.pool, self.budget, self.compact);
+        let next_seq = self.next_seq;
+        drop(self); // the crash: managers (and store flocks) die here
+        let rec = record_len(geo.cfg.tokens_per_page, geo.cfg.page_bytes()) as u64;
+        let mut fleet = Fleet {
+            flat: mk_cache(&geo, pool, true, PrefixIndexKind::Flat),
+            v1: {
+                let mut m = mk_cache(&geo, pool, true, PrefixIndexKind::Radix);
+                m.set_radix_max_run_pages(1);
+                m
+            },
+            v2: mk_cache(&geo, pool, true, PrefixIndexKind::Radix),
+            unshared: mk_cache(&geo, 16_384, false, PrefixIndexKind::Flat),
+            live: Vec::new(),
+            bases: Vec::new(),
+            next_seq,
+            next_tok: 900_000,
+            dirs: Some(dirs.clone()),
+            budget,
+            compact,
+            geo,
+            pool,
+            ws: GatherWorkspace::new(),
+        };
+        for (m, d) in [&mut fleet.flat, &mut fleet.v1, &mut fleet.v2]
+            .into_iter()
+            .zip(&dirs)
+        {
+            attach(m, d, budget, compact, 2 * rec);
+        }
+        for stream in streams {
+            fleet.admit_stream(stream)?;
+        }
+        fleet.check_pages()?;
+        fleet.verify_sweep()?;
+        Ok(fleet)
+    }
+
+    /// Drop everything and demand zero leaked ownerships and zero
+    /// leaked live pages in every cache.
+    fn teardown(mut self) -> Result<(), String> {
+        for (seq, _) in std::mem::take(&mut self.live) {
+            for m in self.shared() {
+                m.drop_seq(seq);
+            }
+            self.unshared.drop_seq(seq);
+        }
+        for (name, m) in [("flat", &self.flat), ("radix-v1", &self.v1), ("radix-v2", &self.v2)] {
+            if m.live_refs() != 0 {
+                return Err(format!("{name}: {} refs leaked", m.live_refs()));
+            }
+            if m.live_pages() != 0 {
+                return Err(format!("{name}: {} live pages leaked", m.live_pages()));
+            }
+        }
+        if self.unshared.pages_in_use() != 0 {
+            return Err("unshared cache leaked pages".into());
+        }
+        let dirs = self.dirs.take();
+        drop(self); // release store flocks before deleting the dirs
+        for d in dirs.into_iter().flatten() {
+            let _ = std::fs::remove_dir_all(&d);
+        }
+        Ok(())
+    }
+}
+
+fn base_prompts(g: &mut Gen, cfg: &PageConfig) -> Vec<Vec<i32>> {
+    (0..3)
+        .map(|b| {
+            let n = g.usize_in(2 * cfg.tokens_per_page, 6 * cfg.tokens_per_page);
+            (0..n).map(|i| (b * 1000 + i) as i32).collect()
+        })
+        .collect()
+}
+
+/// The core lockstep property (see module docs).
+#[test]
+fn prop_statemachine_lockstep_flat_v1_v2() {
+    check(case_count(10), 0x57A7E3, |g| {
+        let geo = geometry(g);
+        let pool = g.usize_in(24, 96);
+        let persist = g.bool();
+        let compact = persist && g.bool();
+        let bases = base_prompts(g, &geo.cfg);
+        let mut fleet = Fleet::new(geo, pool, persist, compact, "lockstep", g.case, bases);
+        let n_ops = g.usize_in(8, 28);
+        for _ in 0..n_ops {
+            match g.usize_in(0, 7) {
+                0 | 1 => fleet.admit(g)?,
+                2 => fleet.append(g)?,
+                3 => fleet.drop_one(g),
+                4 => fleet.cancel(g)?,
+                5 => fleet.flush(),
+                6 => fleet.promote_cycle(g)?,
+                _ => fleet.churn()?,
+            }
+            fleet.check_pages()?;
+            fleet.verify_one(g)?;
+        }
+        fleet.verify_sweep()?;
+        if persist {
+            fleet = fleet.reboot()?;
+        }
+        fleet.teardown()
+    });
+}
+
+/// The shrinker itself, pinned on the real state machine: plant a
+/// deliberately wrong invariant ("never more than 2 live sequences")
+/// and require the minimal repro to collapse to at most 5 ops — three
+/// admits are all it really takes.
+#[test]
+fn seeded_violation_shrinks_to_tiny_repro() {
+    let geo = Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 16,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 16, 2)).encoded_len(),
+        },
+        bits: 2,
+    };
+    let cfg = geo.cfg;
+    let drive = |g: &mut Gen, executed: &mut usize| -> Result<(), String> {
+        let mut m = mk_cache(&geo, 4096, true, PrefixIndexKind::Radix);
+        let mut live: Vec<(u64, Vec<i32>)> = Vec::new();
+        let mut next_seq = 0u64;
+        let n_ops = g.usize_in(1, 24);
+        for _ in 0..n_ops {
+            *executed += 1;
+            match g.usize_in(0, 3) {
+                0 | 1 => {
+                    let b = g.usize_in(0, 2) as i32;
+                    let prompt: Vec<i32> = (0..6).map(|i| b * 100 + i).collect();
+                    next_seq += 1;
+                    let reuse = m
+                        .start_seq_with_prompt(next_seq, &prompt)
+                        .map_err(|e| e.to_string())?;
+                    let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+                    m.append_run(next_seq, &k, &v, prompt.len() - reuse.tokens)
+                        .map_err(|e| e.to_string())?;
+                    live.push((next_seq, prompt));
+                }
+                2 if !live.is_empty() => {
+                    let i = g.usize_in(0, live.len() - 1);
+                    let (seq, stream) = &mut live[i];
+                    stream.push(70_000 + *seq as i32);
+                    let (k, v) = kv_at(stream, stream.len() - 1, &cfg);
+                    m.append_token(*seq, &k, &v).map_err(|e| e.to_string())?;
+                }
+                3 if !live.is_empty() => {
+                    let i = g.usize_in(0, live.len() - 1);
+                    let (seq, _) = live.swap_remove(i);
+                    m.drop_seq(seq);
+                }
+                _ => {}
+            }
+            // the seeded bug: this invariant is simply wrong
+            if live.len() > 2 {
+                return Err(format!("{} live sequences", live.len()));
+            }
+        }
+        Ok(())
+    };
+
+    let cx = find_counterexample(40, 0x5EED, |g| {
+        let mut n = 0;
+        drive(g, &mut n)
+    })
+    .expect("the seeded violation must be found within 40 cases");
+    let mut ops = 0usize;
+    let verdict = replay(cx.case_seed, cx.case, &cx.tape, |g| drive(g, &mut ops));
+    assert!(verdict.is_err(), "the shrunk tape must still reproduce the failure");
+    assert!(
+        ops <= 5,
+        "shrunk repro executes {ops} ops (tape {:?}), want ≤ 5",
+        cx.tape
+    );
+}
+
+fn compat_geo() -> Geometry {
+    Geometry {
+        cfg: PageConfig {
+            tokens_per_page: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            encoded_len: Stage1::new(Stage1Config::new(Variant::IsoFull, 32, 4)).encoded_len(),
+        },
+        bits: 4,
+    }
+}
+
+fn plain_attach(m: &mut CacheManager, dir: &Path) {
+    let sc = StoreConfig::for_cache(
+        dir.to_path_buf(),
+        m.fingerprint(),
+        m.page_cfg().page_bytes(),
+        0,
+    );
+    m.attach_store(PageStore::open(sc).unwrap());
+}
+
+fn verify_against_fresh(m: &mut CacheManager, geo: &Geometry, seq: u64, stream: &[i32]) {
+    let cfg = geo.cfg;
+    let mut un = mk_cache(geo, 4096, false, PrefixIndexKind::Flat);
+    un.start_seq(seq).unwrap();
+    let (k, v) = kv_run(stream, 0, stream.len(), &cfg);
+    un.append_run(seq, &k, &v, stream.len()).unwrap();
+    let t_max = stream.len();
+    let sz = cfg.n_layers * cfg.n_heads * t_max * cfg.d_head;
+    let (mut km, mut vm) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+    let (mut ku, mut vu) = (vec![1.0f32; sz], vec![1.0f32; sz]);
+    m.gather(seq, t_max, &mut km, &mut vm).unwrap();
+    un.gather(seq, t_max, &mut ku, &mut vu).unwrap();
+    assert_eq!(bits_of(&km), bits_of(&ku), "K diverged from fresh encode");
+    assert_eq!(bits_of(&vm), bits_of(&vu), "V diverged from fresh encode");
+}
+
+/// Sub-run records cross the index boundary: a radix-v2 writer parks a
+/// page whose node run starts mid-page (a divergent suffix assembled
+/// over a shared head slot).  The spilled record is padded to the page
+/// boundary, so (a) a flat warm boot finds it under the standard
+/// page-aligned chain key and rehydrates FULL coverage, and (b) a
+/// radix-v2 warm boot promotes it and counts the sub-run provenance.
+#[test]
+fn subrun_records_warm_boot_under_both_indexes() {
+    let geo = compat_geo();
+    let cfg = geo.cfg;
+    let dir = store_dir("subrun-compat", 0, "v2");
+    let _ = std::fs::remove_dir_all(&dir);
+    let prompt_a: Vec<i32> = (0..12).collect();
+    let mut prompt_b = prompt_a.clone();
+    prompt_b[5] = 777; // diverges mid-page 1: B's page-1 run starts at slot 1
+    {
+        let mut m = mk_cache(&geo, 64, true, PrefixIndexKind::Radix);
+        plain_attach(&mut m, &dir);
+        for (seq, prompt) in [(1u64, &prompt_a), (2, &prompt_b)] {
+            let reuse = m.start_seq_with_prompt(seq, prompt).unwrap();
+            let (k, v) = kv_run(prompt, reuse.tokens, prompt.len(), &cfg);
+            m.append_run(seq, &k, &v, prompt.len() - reuse.tokens).unwrap();
+        }
+        m.drop_seq(1);
+        m.drop_seq(2);
+        m.flush_store();
+        // A's three pages, B's CoW page 1 (the mid-page run) and page 2
+        assert_eq!(m.share.pages_spilled, 5, "mid-page runs must spill too");
+        assert!(
+            m.store().unwrap().stats().spilled >= 5,
+            "store must have accepted every record"
+        );
+    }
+    // radix-v2 reader first (a reader's own re-spills rewrite records
+    // with start_slot 0, so the provenance assertion must come first)
+    {
+        let mut m = mk_cache(&geo, 64, true, PrefixIndexKind::Radix);
+        plain_attach(&mut m, &dir);
+        let reuse = m.start_seq_with_prompt(3, &prompt_b).unwrap();
+        assert_eq!(reuse.tokens, 12, "v2 warm boot must cover the whole prompt");
+        assert!(
+            m.share.subrun_promotions >= 1,
+            "page 1 promoted from a padded sub-run record"
+        );
+        verify_against_fresh(&mut m, &geo, 3, &prompt_b);
+        m.drop_seq(3);
+        assert_eq!(m.live_refs(), 0);
+        m.flush_store();
+    }
+    // flat reader: the padded record answers the standard page-aligned
+    // chain key, so the "other" index gets full coverage too
+    {
+        let mut m = mk_cache(&geo, 64, true, PrefixIndexKind::Flat);
+        plain_attach(&mut m, &dir);
+        for (seq, prompt) in [(4u64, &prompt_b), (5, &prompt_a)] {
+            let reuse = m.start_seq_with_prompt(seq, prompt).unwrap();
+            assert_eq!(
+                reuse.tokens,
+                prompt.len(),
+                "flat warm boot must cover the whole prompt"
+            );
+            verify_against_fresh(&mut m, &geo, seq, prompt);
+            m.drop_seq(seq);
+        }
+        assert_eq!(m.live_refs(), 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Stale and corrupt sub-run records must read as plain misses: the
+/// boot re-encodes from scratch and stays byte-identical — never a
+/// crash, never a wrong gather.
+#[test]
+fn stale_or_corrupt_subrun_records_are_misses() {
+    let geo = compat_geo();
+    let cfg = geo.cfg;
+    let prompt: Vec<i32> = (0..8).map(|i| 40 + i).collect();
+    let probe = mk_cache(&geo, 64, true, PrefixIndexKind::Radix);
+    let fingerprint = probe.fingerprint();
+    let page_bytes = cfg.page_bytes();
+    let key0 = chain_key(None, &prompt[..4], fingerprint);
+
+    // (a) stale: a well-formed v2 record under the right chain key but
+    // carrying the WRONG token run (content drifted) — the identity
+    // check must reject it and the walk must fall back to re-encoding.
+    // The directory is rebuilt per reader: a reader's own teardown
+    // spills real records, which would hand the next reader a warm hit
+    let mut buf = Vec::new();
+    let wrong_run: Vec<i32> = prompt[..4].iter().rev().copied().collect();
+    let zero_page = vec![0u8; page_bytes];
+    encode_record(
+        &mut buf,
+        key0,
+        None,
+        fingerprint,
+        &wrong_run,
+        &zero_page,
+        2,
+        7 * SCORE_SCALE as u32,
+    );
+    for kind in [PrefixIndexKind::Radix, PrefixIndexKind::Flat] {
+        let stale_dir = store_dir("subrun-stale", 0, kind.name());
+        let _ = std::fs::remove_dir_all(&stale_dir);
+        std::fs::create_dir_all(&stale_dir).unwrap();
+        std::fs::write(stale_dir.join("seg-00000000.iqs"), &buf).unwrap();
+        let mut m = mk_cache(&geo, 64, true, kind);
+        plain_attach(&mut m, &stale_dir);
+        assert_eq!(m.cold_pages(), 1, "{kind:?}: the stale record scans fine");
+        let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+        assert_eq!(reuse.tokens, 0, "{kind:?}: stale sub-run record must miss");
+        let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+        m.append_run(1, &k, &v, prompt.len()).unwrap();
+        verify_against_fresh(&mut m, &geo, 1, &prompt);
+        m.drop_seq(1);
+        drop(m);
+        let _ = std::fs::remove_dir_all(&stale_dir);
+    }
+
+    // (b) corrupt: same record with one bit flipped inside the v2
+    // extension — the CRC covers the extension, so the scan drops the
+    // record and the boot starts cold
+    let corrupt_dir = store_dir("subrun-corrupt", 0, "v2");
+    let _ = std::fs::remove_dir_all(&corrupt_dir);
+    std::fs::create_dir_all(&corrupt_dir).unwrap();
+    let mut bad = buf.clone();
+    bad[44] ^= 0x01; // first byte of the start_slot extension
+    std::fs::write(corrupt_dir.join("seg-00000000.iqs"), &bad).unwrap();
+    let mut m = mk_cache(&geo, 64, true, PrefixIndexKind::Radix);
+    plain_attach(&mut m, &corrupt_dir);
+    assert_eq!(m.cold_pages(), 0, "corrupt extension must not survive the scan");
+    let reuse = m.start_seq_with_prompt(1, &prompt).unwrap();
+    assert_eq!(reuse.tokens, 0);
+    let (k, v) = kv_run(&prompt, 0, prompt.len(), &cfg);
+    m.append_run(1, &k, &v, prompt.len()).unwrap();
+    verify_against_fresh(&mut m, &geo, 1, &prompt);
+    m.drop_seq(1);
+    let _ = std::fs::remove_dir_all(&corrupt_dir);
+}
+
+/// Pre/post-compaction cross-index compatibility: a radix-v2 writer
+/// under a tight budget churns cold prompts until its oldest segments
+/// retire; the compactor must rescue the much-reused hot root, and
+/// both a flat and a radix warm boot must still rehydrate it
+/// byte-identically.  Compaction-off on the same schedule loses it.
+#[test]
+fn compaction_preserves_hot_roots_across_index_boundaries() {
+    let geo = compat_geo();
+    let cfg = geo.cfg;
+    let tp = cfg.tokens_per_page;
+    let hot: Vec<i32> = (0..tp as i32).collect();
+    let rec = record_len(tp, cfg.page_bytes()) as u64;
+    for compact in [true, false] {
+        let dir = store_dir("compact-compat", usize::from(compact), "v2");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut m = mk_cache(&geo, 64, true, PrefixIndexKind::Radix);
+            let mut sc = StoreConfig::for_cache(
+                dir.to_path_buf(),
+                m.fingerprint(),
+                cfg.page_bytes(),
+                3 * rec,
+            );
+            sc.segment_bytes = rec; // one record per segment
+            if compact {
+                // fractional score 2.0: the hot root (3 adoptions →
+                // score 4.0) clears it, one-shot cold prompts (1.0) age
+                sc = sc.with_compaction(2 * SCORE_SCALE as u32, 1 << 20);
+            }
+            m.attach_store(PageStore::open(sc).unwrap());
+            // the hot root: adopted by three followers before parking
+            for seq in 1..=4u64 {
+                let reuse = m.start_seq_with_prompt(seq, &hot).unwrap();
+                let (k, v) = kv_run(&hot, reuse.tokens, hot.len(), &cfg);
+                m.append_run(seq, &k, &v, hot.len() - reuse.tokens).unwrap();
+            }
+            for seq in 1..=4u64 {
+                m.drop_seq(seq);
+            }
+            m.flush_store();
+            // cold churn: each unique prompt spills one record, and the
+            // tight budget retires the oldest segment every time
+            for c in 0..5u64 {
+                let seq = 100 + c;
+                let prompt: Vec<i32> = (0..tp as i32).map(|i| 9_000 + c as i32 * 100 + i).collect();
+                let reuse = m.start_seq_with_prompt(seq, &prompt).unwrap();
+                let (k, v) = kv_run(&prompt, reuse.tokens, prompt.len(), &cfg);
+                m.append_run(seq, &k, &v, prompt.len() - reuse.tokens).unwrap();
+                m.drop_seq(seq);
+                m.flush_store();
+            }
+            let st = m.store().unwrap().stats();
+            if compact {
+                assert!(st.records_compacted >= 1, "the hot root must be rescued");
+                assert!(st.segments_compacted >= 1);
+                m.note_store_health();
+                assert!(m.share.records_compacted >= 1, "stats mirrored into the share line");
+            } else {
+                assert_eq!(st.records_compacted, 0);
+            }
+        }
+        // warm boot under BOTH indexes with a generous budget
+        for kind in [PrefixIndexKind::Flat, PrefixIndexKind::Radix] {
+            let mut m = mk_cache(&geo, 64, true, kind);
+            plain_attach(&mut m, &dir);
+            let reuse = m.start_seq_with_prompt(1, &hot).unwrap();
+            if compact {
+                assert_eq!(
+                    reuse.tokens,
+                    hot.len(),
+                    "{kind:?}: the rescued hot root must warm boot fully"
+                );
+            } else {
+                assert_eq!(
+                    reuse.tokens, 0,
+                    "{kind:?}: without compaction FIFO retirement lost the root"
+                );
+            }
+            let (k, v) = kv_run(&hot, reuse.tokens, hot.len(), &cfg);
+            m.append_run(1, &k, &v, hot.len() - reuse.tokens).unwrap();
+            verify_against_fresh(&mut m, &geo, 1, &hot);
+            m.drop_seq(1);
+            assert_eq!(m.live_refs(), 0, "{kind:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
